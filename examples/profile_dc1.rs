@@ -1,0 +1,23 @@
+//! Profiling harness for the perf pass: runs one Table-1 layer's HUGE²
+//! engine in a tight loop so `perf record -g` gets clean samples.
+//!
+//! Usage: `perf record -g ./target/release/examples/profile_dc1 dcgan_dc1 30`
+//! (found §Perf iteration 3: 61 % of cycles in the scalar micro-kernel
+//! before `target-cpu=native`).
+
+use huge2::config::layer_by_name;
+use huge2::deconv::huge2 as engine;
+use huge2::rng::Rng;
+use huge2::tensor::Tensor;
+fn main() {
+    let layer = layer_by_name(&std::env::args().nth(1).unwrap_or("dcgan_dc1".into())).unwrap();
+    let mut rng = Rng::new(42);
+    let x = Tensor::randn(&[1, layer.h, layer.h, layer.c_in], &mut rng);
+    let k = Tensor::randn(&[layer.k, layer.k, layer.c_in, layer.c_out], &mut rng);
+    let p = layer.deconv_params();
+    let patterns = engine::decompose(&k, &p);
+    let iters: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(30);
+    for _ in 0..iters {
+        std::hint::black_box(engine::conv2d_transpose_with(&x, &patterns, layer.k, layer.k, &p));
+    }
+}

@@ -1,0 +1,71 @@
+//! Quickstart: one Table-1 deconvolution layer through the three engines.
+//!
+//! Shows the core HUGE² identity: the naive zero-insertion baseline, the
+//! pure-Rust decomposed+untangled engine, and (if `make artifacts` has
+//! run) the AOT-compiled JAX/Pallas kernel all produce the same output —
+//! the fast ones just skip the zeros.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use huge2::bench_util::{fmt_dur, measure, Table};
+use huge2::config::layer_by_name;
+use huge2::deconv::{baseline, huge2 as engine};
+use huge2::rng::Rng;
+use huge2::runtime::RuntimeHandle;
+use huge2::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    // DCGAN DC3: 16x16x256 -> 32x32x128, 5x5 kernel, stride 2
+    let layer = layer_by_name("dcgan_dc3").unwrap();
+    println!("layer {}: {}x{}x{} -> {}x{}x{}", layer.name, layer.h,
+             layer.h, layer.c_in, layer.h_out(), layer.h_out(),
+             layer.c_out);
+
+    let mut rng = Rng::new(2024);
+    let x = Tensor::randn(&[1, layer.h, layer.h, layer.c_in], &mut rng);
+    let k = Tensor::randn(&[layer.k, layer.k, layer.c_in, layer.c_out],
+                          &mut rng).scale(0.02);
+    let p = layer.deconv_params();
+
+    // 1. naive baseline: inflate with zeros, im2col, one big GEMM
+    let t_base = measure(1, 5,
+                         || { baseline::conv2d_transpose(&x, &k, &p); });
+    let y_base = baseline::conv2d_transpose(&x, &k, &p);
+
+    // 2. HUGE2: decompose (once, at "model load") + untangled tap GEMMs
+    let patterns = engine::decompose(&k, &p);
+    let t_fast = measure(1, 5, || {
+        engine::conv2d_transpose_with(&x, &patterns, layer.k, layer.k, &p);
+    });
+    let y_fast = engine::conv2d_transpose_with(&x, &patterns, layer.k,
+                                              layer.k, &p);
+
+    let mut t = Table::new(&["engine", "median", "speedup", "max |Δ|"]);
+    t.row(&["baseline (zero-insert + im2col)".into(),
+            fmt_dur(t_base.median), "1.00x".into(), "-".into()]);
+    t.row(&["huge2 (decompose + untangle)".into(), fmt_dur(t_fast.median),
+            format!("{:.2}x", t_base.median_s() / t_fast.median_s()),
+            format!("{:.2e}", y_fast.max_abs_diff(&y_base))]);
+
+    // 3. the AOT JAX/Pallas kernel through PJRT, if artifacts exist
+    let dir = std::path::PathBuf::from("artifacts");
+    if dir.join("manifest.txt").exists() {
+        let rt = RuntimeHandle::spawn(dir)?;
+        rt.warm("dcgan_dc3_huge2")?;
+        let y = rt.run("dcgan_dc3_huge2", vec![x.clone(), k.clone()])?;
+        let t_pjrt = measure(1, 3, || {
+            rt.run("dcgan_dc3_huge2", vec![x.clone(), k.clone()]).unwrap();
+        });
+        t.row(&["pallas kernel via PJRT (interpret)".into(),
+                fmt_dur(t_pjrt.median), "-".into(),
+                format!("{:.2e}", y[0].max_abs_diff(&y_base))]);
+    } else {
+        eprintln!("(run `make artifacts` to include the PJRT/Pallas row)");
+    }
+    t.print();
+
+    assert!(y_fast.allclose(&y_base, 1e-4));
+    println!("\nchecksum(huge2 output) = {:#x}", y_fast.checksum());
+    println!("OK: all engines agree.");
+    Ok(())
+}

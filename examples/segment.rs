@@ -1,0 +1,72 @@
+//! Semantic-segmentation-style workload (the paper's second motivating
+//! domain, §1/§2.1.2): an atrous spatial pyramid — parallel dilated
+//! convolutions at dilations 1/2/4/8 — over a feature map, comparing the
+//! naive zero-dilated-kernel engine with HUGE² untangling, and (if
+//! artifacts exist) the AOT JAX/Pallas pyramid through PJRT.
+//!
+//! Run: `cargo run --release --example segment`
+
+use huge2::bench_util::{fmt_dur, measure, Table};
+use huge2::deconv::{baseline, dilated, DilatedParams};
+use huge2::rng::Rng;
+use huge2::runtime::RuntimeHandle;
+use huge2::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let (h, c, n) = (33, 32, 32);
+    let mut rng = Rng::new(11);
+    let x = Tensor::randn(&[1, h, h, c], &mut rng);
+    let ks: Vec<Tensor> = (0..4)
+        .map(|_| Tensor::randn(&[3, 3, c, n], &mut rng).scale(0.05))
+        .collect();
+    let dils = [1usize, 2, 4, 8];
+
+    println!("atrous pyramid over {h}x{h}x{c}, dilations {dils:?} \
+              ('same' padding)\n");
+    let mut t = Table::new(&["dilation", "baseline", "huge2", "speedup",
+                             "max |Δ|"]);
+    let mut pyr_base: Option<Tensor> = None;
+    let mut pyr_fast: Option<Tensor> = None;
+    for (k, &d) in ks.iter().zip(&dils) {
+        let p = DilatedParams::new(d, 1, d);
+        let tb = measure(1, 5, || { baseline::conv2d_dilated(&x, k, &p); });
+        let tf = measure(1, 5, || { dilated::conv2d_dilated(&x, k, &p); });
+        let yb = baseline::conv2d_dilated(&x, k, &p);
+        let yf = dilated::conv2d_dilated(&x, k, &p);
+        t.row(&[
+            format!("d={d}"),
+            fmt_dur(tb.median),
+            fmt_dur(tf.median),
+            format!("{:.2}x", tb.median_s() / tf.median_s()),
+            format!("{:.2e}", yf.max_abs_diff(&yb)),
+        ]);
+        pyr_base = Some(match pyr_base {
+            None => yb,
+            Some(acc) => acc.add(&yb),
+        });
+        pyr_fast = Some(match pyr_fast {
+            None => yf,
+            Some(acc) => acc.add(&yf),
+        });
+    }
+    t.print();
+    let (pb, pf) = (pyr_base.unwrap(), pyr_fast.unwrap());
+    assert!(pf.allclose(&pb, 1e-3));
+    println!("\npyramid sum agrees across engines \
+              (max |Δ| = {:.2e})", pf.max_abs_diff(&pb));
+
+    // the AOT pallas pyramid, if compiled
+    let dir = std::path::PathBuf::from("artifacts");
+    if dir.join("manifest.txt").exists() {
+        let rt = RuntimeHandle::spawn(dir)?;
+        let mut inputs = vec![x.clone()];
+        inputs.extend(ks.iter().cloned());
+        let y = rt.run("atrous_pyramid", inputs)?;
+        // the artifact's pyramid uses dilations (1,2,4,8) too
+        println!("PJRT pallas pyramid agrees: max |Δ| = {:.2e}",
+                 y[0].max_abs_diff(&pb));
+        assert!(y[0].allclose(&pb, 1e-3));
+    }
+    println!("OK");
+    Ok(())
+}

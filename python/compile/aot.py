@@ -1,0 +1,217 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* artifacts.
+
+This is the only place python runs; `make artifacts` invokes it once and
+the rust engine is self-contained afterwards.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate binds) rejects (`proto.id() <=
+INT_MAX`).  The text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Outputs:
+    artifacts/<name>.hlo.txt    one per entry point
+    artifacts/manifest.txt      name, file, input/output shapes+dtypes
+                                (hand-parsed by rust/src/runtime/artifact.rs)
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True, so the
+    rust side always unwraps a tuple — uniform for 1..N outputs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+class Emitter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest: list[str] = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name: str, fn, arg_specs):
+        """Lower fn(*arg_specs) and record it in the manifest."""
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_specs = lowered.out_info
+        flat_out, _ = jax.tree_util.tree_flatten(out_specs)
+        lines = [f"artifact {name} {fname}"]
+        for i, a in enumerate(arg_specs):
+            dims = ",".join(str(d) for d in a.shape) or "scalar"
+            lines.append(f"input {i} {a.dtype} {dims}")
+        for i, o in enumerate(flat_out):
+            dims = ",".join(str(d) for d in o.shape) or "scalar"
+            lines.append(f"output {i} {o.dtype} {dims}")
+        lines.append("end")
+        self.manifest.extend(lines)
+        print(f"  wrote {fname} ({len(text)} chars, "
+              f"{len(arg_specs)} in / {len(flat_out)} out)", flush=True)
+
+    def finish(self):
+        path = os.path.join(self.out_dir, "manifest.txt")
+        with open(path, "w") as f:
+            f.write("\n".join(self.manifest) + "\n")
+        print(f"  wrote manifest.txt ({len(self.manifest)} lines)")
+
+
+def emit_layer_artifacts(em: Emitter):
+    """Per-Table-1-layer deconvs, both engines, batch 1 — the quickstart /
+    layer-serving units and the rust<->python numeric cross-check points."""
+    for layer in model.ALL_LAYERS:
+        x = spec(1, layer.h, layer.h, layer.c_in)
+        k = spec(layer.k, layer.k, layer.c_in, layer.c_out)
+        for engine in ("huge2", "baseline"):
+            em.emit(
+                f"{layer.name}_{engine}",
+                lambda xx, kk, layer=layer, engine=engine:
+                    (model.deconv(xx, kk, layer, engine),),
+                (x, k),
+            )
+
+
+def emit_generator_artifacts(em: Emitter, batches=(1, 4, 8)):
+    """Full DCGAN / cGAN generator forwards (weights are runtime inputs so
+    the rust engine seeds/owns them).  One artifact per batch bucket — the
+    dynamic batcher routes to the best bucket."""
+    dc_first = model.DCGAN_LAYERS[0]
+    nk = len(model.DCGAN_LAYERS)
+    for b in batches:
+        args = [spec(b, model.Z_DIM),
+                spec(model.Z_DIM, dc_first.h * dc_first.h * dc_first.c_in)]
+        for layer in model.DCGAN_LAYERS:
+            args.append(spec(layer.k, layer.k, layer.c_in, layer.c_out))
+
+        def gen(z, proj_w, *ks):
+            params = {"proj_w": proj_w}
+            params.update({f"k{i}": k for i, k in enumerate(ks)})
+            return (model.dcgan_generator(params, z, engine="huge2"),)
+
+        em.emit(f"dcgan_gen_b{b}", gen, args)
+
+    cg_first = model.CGAN_LAYERS[0]
+    for b in batches[:2]:
+        args = [spec(b, model.Z_DIM), spec(b, model.N_CLASSES),
+                spec(model.Z_DIM + model.N_CLASSES,
+                     cg_first.h * cg_first.h * cg_first.c_in)]
+        for layer in model.CGAN_LAYERS:
+            args.append(spec(layer.k, layer.k, layer.c_in, layer.c_out))
+
+        def cgen(z, y, proj_w, *ks):
+            params = {"proj_w": proj_w}
+            params.update({f"k{i}": k for i, k in enumerate(ks)})
+            return (model.cgan_generator(params, z, y, engine="huge2"),)
+
+        em.emit(f"cgan_gen_b{b}", cgen, args)
+
+
+GEN_KEYS = None  # filled at emit time; deterministic param flattening order
+DISC_KEYS = None
+
+
+def emit_train_artifact(em: Emitter, batch: int = 16):
+    """Tiny-DCGAN alternating-SGD train step as one HLO module."""
+    global GEN_KEYS, DISC_KEYS
+    gen, disc = model.init_tiny_gan(jax.random.PRNGKey(0))
+    GEN_KEYS = sorted(gen.keys())
+    DISC_KEYS = sorted(disc.keys())
+
+    def step(*flat):
+        ng = len(GEN_KEYS)
+        nd = len(DISC_KEYS)
+        g = dict(zip(GEN_KEYS, flat[:ng]))
+        d = dict(zip(DISC_KEYS, flat[ng:ng + nd]))
+        z, real = flat[ng + nd], flat[ng + nd + 1]
+        new_g, new_d, lg, ld = model.gan_train_step(g, d, z, real)
+        return tuple(new_g[k] for k in GEN_KEYS) + \
+            tuple(new_d[k] for k in DISC_KEYS) + (lg, ld)
+
+    args = [spec(*gen[k].shape) for k in GEN_KEYS]
+    args += [spec(*disc[k].shape) for k in DISC_KEYS]
+    args += [spec(batch, model.TINY_Z), spec(batch, 32, 32, 3)]
+    em.emit("tiny_gan_step", step, args)
+
+    # init-params artifact: produces the seeded initial weights so rust
+    # starts from the exact same point as python would.
+    def init_fn():
+        g, d = model.init_tiny_gan(jax.random.PRNGKey(0))
+        return tuple(g[k] for k in GEN_KEYS) + \
+            tuple(d[k] for k in DISC_KEYS)
+
+    em.emit("tiny_gan_init", init_fn, ())
+
+
+def emit_segment_artifact(em: Emitter):
+    """Atrous-pyramid segmentation head (dilated-conv workload, §2.1.2)."""
+    c, n, h = 32, 32, 33
+    x = spec(1, h, h, c)
+    ks = [spec(3, 3, c, n) for _ in range(4)]
+
+    def pyr(xx, *kk):
+        return (model.atrous_pyramid(xx, list(kk), engine="huge2"),)
+
+    em.emit("atrous_pyramid", pyr, (x, *ks))
+
+    # single dilated layers, both engines, for numeric cross-checks
+    for d in (2, 4):
+        for engine in ("huge2", "baseline"):
+            def one(xx, kk, d=d, engine=engine):
+                if engine == "huge2":
+                    from .kernels.dilated import conv2d_dilated_huge2
+                    return (conv2d_dilated_huge2(xx, kk, dilation=d,
+                                                 stride=1, pad=d),)
+                return (ref.conv2d_dilated_zerofill(xx, kk, dilation=d,
+                                                    stride=1, pad=d),)
+            em.emit(f"dilated_d{d}_{engine}", one, (x, ks[0]))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated group filter: layers,gen,train,segment")
+    args = ap.parse_args()
+    groups = set(args.only.split(",")) if args.only else None
+
+    em = Emitter(args.out)
+    if groups is None or "layers" in groups:
+        print("[aot] per-layer artifacts")
+        emit_layer_artifacts(em)
+    if groups is None or "gen" in groups:
+        print("[aot] generator artifacts")
+        emit_generator_artifacts(em)
+    if groups is None or "train" in groups:
+        print("[aot] train-step artifact")
+        emit_train_artifact(em)
+    if groups is None or "segment" in groups:
+        print("[aot] segmentation artifacts")
+        emit_segment_artifact(em)
+    em.finish()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,129 @@
+"""L1: HUGE2 kernel decomposition of the transposed convolution (paper 3.1)
+plus untangling (paper 3.2), built on the Pallas GEMM in ``untangled.py``.
+
+For stride ``s`` the R x S transposed kernel splits into ``s*s`` *patterns*
+by row/column parity.  Pattern (phi_y, phi_x) produces exactly the output
+polyphase ``O[phi_y::s, phi_x::s]`` and reads only *real* (never
+zero-inserted) input elements — so the zero-inflated tensor of the naive
+algorithm is never materialised, every multiply-add is effective, and the
+polyphase writes are disjoint (no accumulation races; paper 3.1).
+
+Index algebra (1-D; both axes are independent):
+
+    lo      = R - 1 - pad                    # low pad of the inflated input
+    a0(phi) = (lo - phi) mod s               # first kernel tap of pattern
+    T(phi)  = ceil((R - a0) / s)             # taps per pattern
+    delta   = (phi + a0 - lo) / s  (integer) # input offset of tap 0
+    O[phi + s*q] = sum_t sum_c I[q + t + delta, c] * K[a0 + s*t, c, :]
+
+Each tap is then *untangled* into a (Q_y*Q_x, C) @ (C, N) Pallas GEMM,
+accumulated — the paper's "set of 1x1 convolutions".
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from . import untangled
+from .ref import out_size_transpose
+
+
+def pattern_params(r: int, stride: int, pad: int, phi: int):
+    """(a0, taps, delta) for one axis of one pattern — the Section 3.1
+    decomposition algebra."""
+    lo = r - 1 - pad
+    a0 = (lo - phi) % stride
+    taps = max(0, math.ceil((r - a0) / stride))
+    delta = (phi + a0 - lo) // stride
+    assert (phi + a0 - lo) % stride == 0
+    return a0, taps, delta
+
+
+def decompose_kernel(k, stride: int, pad: int):
+    """Split k:(R,S,C,N) into the s*s pattern sub-kernels.
+
+    Returns {(phi_y, phi_x): (sub_kernel (Tr,Ts,C,N), delta_y, delta_x)}.
+    """
+    r, s, _, _ = k.shape
+    out = {}
+    for phi_y in range(stride):
+        a0y, tr, dy = pattern_params(r, stride, pad, phi_y)
+        for phi_x in range(stride):
+            a0x, ts, dx = pattern_params(s, stride, pad, phi_x)
+            sub = k[a0y::stride, a0x::stride, :, :]
+            assert sub.shape[0] == tr and sub.shape[1] == ts
+            out[(phi_y, phi_x)] = (sub, dy, dx)
+    return out
+
+
+def conv2d_transpose_huge2(x, k, stride: int = 2, pad: int = 2,
+                           out_pad: int = 1, tm: int = 128, tn: int = 128,
+                           tk: int = 128):
+    """HUGE2 transposed convolution: decompose + untangle + scatter.
+
+    x: (B, H, W, C);  k: (R, S, C, N)  ->  (B, Ho, Wo, N)
+    Numerically identical to ``ref.conv2d_transpose``.
+    """
+    b, h, w, c = x.shape
+    r, s, _, n = k.shape
+    ho = out_size_transpose(h, stride, r, pad, out_pad)
+    wo = out_size_transpose(w, stride, s, pad, out_pad)
+    out = jnp.zeros((b, ho, wo, n), x.dtype)
+    patterns = decompose_kernel(k, stride, pad)
+
+    for (phi_y, phi_x), (sub, dy, dx) in patterns.items():
+        q_y = _polyphase_len(ho, stride, phi_y)
+        q_x = _polyphase_len(wo, stride, phi_x)
+        tr, ts = sub.shape[0], sub.shape[1]
+        if q_y == 0 or q_x == 0 or tr == 0 or ts == 0:
+            continue
+        # Pad the (real, small) input so every tap slice is in range.
+        pyl = max(0, -dy)
+        pxl = max(0, -dx)
+        pyh = max(0, q_y - 1 + tr - 1 + dy - (h - 1))
+        pxh = max(0, q_x - 1 + ts - 1 + dx - (w - 1))
+        xp = jnp.pad(x, ((0, 0), (pyl, pyh), (pxl, pxh), (0, 0)))
+
+        # Untangle: accumulate one Pallas GEMM per kernel tap.
+        acc = jnp.zeros((b * q_y * q_x, n), x.dtype)
+        for t_r in range(tr):
+            for t_c in range(ts):
+                oy = t_r + dy + pyl
+                ox = t_c + dx + pxl
+                patch = xp[:, oy:oy + q_y, ox:ox + q_x, :]
+                lhs = patch.reshape(b * q_y * q_x, c)
+                rhs = sub[t_r, t_c]  # (C, N): the regrouped 1x1 kernel
+                acc = untangled.matmul_acc(lhs, rhs, acc, tm=tm, tn=tn, tk=tk)
+        sub_out = acc.reshape(b, q_y, q_x, n)
+        # Scatter/combine (paper Fig. 4): disjoint polyphase writes.
+        out = out.at[:, phi_y::stride, phi_x::stride, :].set(sub_out)
+    return out
+
+
+def _polyphase_len(total: int, stride: int, phi: int) -> int:
+    """Number of output positions y < total with y % stride == phi."""
+    if phi >= total:
+        return 0
+    return (total - phi + stride - 1) // stride
+
+
+def flop_count(h: int, w: int, c: int, n: int, r: int, s: int,
+               stride: int, pad: int, out_pad: int) -> dict:
+    """Effective multiply-add counts: naive zero-inserted algorithm vs the
+    HUGE2 decomposition.  Feeds the analytical GPU roofline (memsim) and
+    EXPERIMENTS.md — mirrors rust ``memsim::counter``."""
+    ho = out_size_transpose(h, stride, r, pad, out_pad)
+    wo = out_size_transpose(w, stride, s, pad, out_pad)
+    naive = ho * wo * r * s * c * n  # slides over the inflated tensor
+    eff = 0
+    for phi_y in range(stride):
+        _, tr, _ = pattern_params(r, stride, pad, phi_y)
+        qy = _polyphase_len(ho, stride, phi_y)
+        for phi_x in range(stride):
+            _, ts, _ = pattern_params(s, stride, pad, phi_x)
+            qx = _polyphase_len(wo, stride, phi_x)
+            eff += qy * qx * tr * ts * c * n
+    return {"naive_macs": naive, "huge2_macs": eff,
+            "ratio": naive / max(eff, 1)}

@@ -1,0 +1,74 @@
+"""L1: untangled dilated convolution and GAN-training gradients (paper
+3.2.2 / 3.2.3), built on the Pallas GEMM in ``untangled.py``.
+
+Dilated convolution never materialises the zero-dilated kernel: each of the
+R*S real taps reads a strided slice of the input and contributes one
+(Ho*Wo, C) @ (C, N) GEMM — the receptive field "shrinks by a multiple of
+the stride" (paper Fig. 6 left).
+
+The discriminator weight gradient (paper 3.2.3) is the same machinery with
+the roles swapped: the derivative map acts as a stride-dilated kernel, so
+each of the R*S weight-gradient taps is a (C, Oh*Ow) @ (Oh*Ow, N) GEMM.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import untangled
+from .ref import out_size_dilated
+
+
+def conv2d_dilated_huge2(x, k, dilation: int = 2, stride: int = 1,
+                         pad: int = 0, tm: int = 128, tn: int = 128,
+                         tk: int = 128):
+    """Untangled dilated conv. x: (B,H,W,C), k: (R,S,C,N) -> (B,Ho,Wo,N).
+
+    Numerically identical to ``ref.conv2d_dilated`` — but touches only the
+    R*S real kernel taps, never the (R-1)*d+1 square of zeros.
+    """
+    b, h, w, c = x.shape
+    r, s, _, n = k.shape
+    ho = out_size_dilated(h, r, dilation, stride, pad)
+    wo = out_size_dilated(w, s, dilation, stride, pad)
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+
+    acc = jnp.zeros((b * ho * wo, n), x.dtype)
+    for t_r in range(r):
+        for t_c in range(s):
+            oy = t_r * dilation
+            ox = t_c * dilation
+            # Strided receptive field of this tap (paper Fig. 6 left).
+            patch = xp[:, oy:oy + (ho - 1) * stride + 1:stride,
+                       ox:ox + (wo - 1) * stride + 1:stride, :]
+            lhs = patch.reshape(b * ho * wo, c)
+            acc = untangled.matmul_acc(lhs, k[t_r, t_c], acc,
+                                       tm=tm, tn=tn, tk=tk)
+    return acc.reshape(b, ho, wo, n)
+
+
+def weight_grad_huge2(x, dy, stride: int = 2, pad: int = 2, r: int = 5,
+                      s: int = 5, tm: int = 128, tn: int = 128,
+                      tk: int = 128):
+    """Discriminator weight gradient via untangling (paper 3.2.3).
+
+    x: (B,H,W,C) forward input;  dy: (B,Oh,Ow,N) derivative maps of a
+    forward conv with stride ``stride`` and kernel (r,s,C,N).
+    Returns dk: (r,s,C,N).  Each tap (m,n) is one GEMM:
+        dk[m,n] = X_mn^T @ DY,  X_mn: (B*Oh*Ow, C), DY: (B*Oh*Ow, N)
+    i.e. the derivative map convolves the input as a stride-dilated kernel.
+    """
+    b, h, w, c = x.shape
+    _, oh, ow, n = dy.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    rhs = dy.reshape(b * oh * ow, n)
+    taps = []
+    for m in range(r):
+        row = []
+        for nn in range(s):
+            patch = xp[:, m:m + (oh - 1) * stride + 1:stride,
+                       nn:nn + (ow - 1) * stride + 1:stride, :]
+            lhs = patch.reshape(b * oh * ow, c).T  # (C, B*Oh*Ow)
+            row.append(untangled.matmul(lhs, rhs, tm=tm, tn=tn, tk=tk))
+        taps.append(jnp.stack(row))
+    return jnp.stack(taps)  # (r, s, C, N)

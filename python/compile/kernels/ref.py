@@ -1,0 +1,147 @@
+"""Pure-jnp correctness oracles for the HUGE2 kernels.
+
+Canonical conventions (shared by every layer of the stack — python pallas
+kernels, rust baseline, rust huge2):
+
+* Tensors are NHWC: ``x[b, h, w, c]`` with ``b`` usually 1.
+* Kernels are HWIO: ``k[r, s, c_in, c_out]``.
+* All convolutions are cross-correlations (no kernel flip), matching
+  Algorithm 1 / Algorithm 2 of the paper.
+
+Transposed convolution (paper Alg. 1, "zero-insertion" definition):
+the input is dilated by the stride (``s-1`` zeros between every pair of
+rows/cols), padded asymmetrically by ``(R-1-p, R-1-p+op)`` and then a
+stride-1 valid cross-correlation with the kernel is applied.  With
+``R=5, s=2, p=2, op=1`` this is exactly the DCGAN 2x upsampling layer:
+``H -> 2H``.
+
+Dilated convolution (paper Alg. 2): the *kernel* is dilated by the
+dilation factor ``d``; stride and symmetric padding as usual.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+# NHWC activations, HWIO kernels.
+DIMS = ("NHWC", "HWIO", "NHWC")
+
+
+def out_size_transpose(h: int, stride: int, r: int, pad: int, out_pad: int) -> int:
+    """Spatial output size of the canonical transposed convolution."""
+    return (h - 1) * stride - 2 * pad + r + out_pad
+
+
+def out_size_dilated(h: int, r: int, dilation: int, stride: int, pad: int) -> int:
+    """Spatial output size of the canonical dilated convolution."""
+    eff = (r - 1) * dilation + 1
+    return (h + 2 * pad - eff) // stride + 1
+
+
+def conv2d(x, k, stride: int = 1, pad: int = 0):
+    """Standard cross-correlation. x: (B,H,W,C), k: (R,S,C,N)."""
+    return lax.conv_general_dilated(
+        x, k,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=DIMS,
+    )
+
+
+def conv2d_transpose(x, k, stride: int = 2, pad: int = 2, out_pad: int = 1):
+    """Canonical transposed convolution via lhs-dilation (the oracle).
+
+    Equivalent to: inflate x with (stride-1) zeros between elements, pad by
+    (R-1-pad) low / (R-1-pad+out_pad) high, then valid cross-correlate.
+    """
+    r = k.shape[0]
+    s = k.shape[1]
+    lo_h, hi_h = r - 1 - pad, r - 1 - pad + out_pad
+    lo_w, hi_w = s - 1 - pad, s - 1 - pad + out_pad
+    return lax.conv_general_dilated(
+        x, k,
+        window_strides=(1, 1),
+        padding=[(lo_h, hi_h), (lo_w, hi_w)],
+        lhs_dilation=(stride, stride),
+        dimension_numbers=DIMS,
+    )
+
+
+def conv2d_transpose_zerofill(x, k, stride: int = 2, pad: int = 2, out_pad: int = 1):
+    """Second, independent oracle: literally materialise the zero-inserted
+    input tensor (the DarkNet/naive baseline algorithm) and run a dense
+    stride-1 convolution over it.  This is the algorithm HUGE2 beats; it is
+    also the numeric ground truth the decomposition must match exactly.
+    """
+    b, h, w, c = x.shape
+    r, s, _, _ = k.shape
+    ih = (h - 1) * stride + 1
+    iw = (w - 1) * stride + 1
+    inflated = jnp.zeros((b, ih, iw, c), x.dtype)
+    inflated = inflated.at[:, ::stride, ::stride, :].set(x)
+    lo_h, hi_h = r - 1 - pad, r - 1 - pad + out_pad
+    lo_w, hi_w = s - 1 - pad, s - 1 - pad + out_pad
+    padded = jnp.pad(inflated, ((0, 0), (lo_h, hi_h), (lo_w, hi_w), (0, 0)))
+    return conv2d(padded, k, stride=1, pad=0)
+
+
+def conv2d_dilated(x, k, dilation: int = 2, stride: int = 1, pad: int = 0):
+    """Canonical dilated (atrous) cross-correlation."""
+    return lax.conv_general_dilated(
+        x, k,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        rhs_dilation=(dilation, dilation),
+        dimension_numbers=DIMS,
+    )
+
+
+def conv2d_dilated_zerofill(x, k, dilation: int = 2, stride: int = 1, pad: int = 0):
+    """Independent oracle: materialise the zero-dilated kernel and run a
+    standard convolution (the naive baseline for Alg. 2)."""
+    r, s, c, n = k.shape
+    er = (r - 1) * dilation + 1
+    es = (s - 1) * dilation + 1
+    dk = jnp.zeros((er, es, c, n), k.dtype)
+    dk = dk.at[::dilation, ::dilation, :, :].set(k)
+    return conv2d(x, dk, stride=stride, pad=pad)
+
+
+def weight_grad_dilated(x, dy, stride: int = 2, pad: int = 2,
+                        r: int = 5, s: int = 5):
+    """Discriminator weight gradient as a dilated convolution (paper 3.2.3).
+
+    For a forward strided conv  y = conv(x, k, stride, pad)  with kernel
+    (R,S,C,N), the gradient dL/dk is the correlation of x with the
+    stride-dilated derivative maps dy:
+
+        dk[m, n, c, j] = sum_{b,oh,ow} x[b, m + oh*stride - pad,
+                                          n + ow*stride - pad, c]
+                         * dy[b, oh, ow, j]
+
+    Implemented with lax with C playing the batch role; this is the oracle
+    the rust ``deconv::grad`` path and the pallas kernel must match.
+    """
+    # x:(B,H,W,C) -> lhs:(C,H,W,B); dy:(B,OH,OW,N) -> rhs:(OH,OW,B,N)
+    lhs = jnp.transpose(x, (3, 1, 2, 0))
+    rhs = jnp.transpose(dy, (1, 2, 0, 3))
+    out = lax.conv_general_dilated(
+        lhs, rhs,
+        window_strides=(1, 1),
+        padding=[(pad, pad), (pad, pad)],
+        rhs_dilation=(stride, stride),
+        dimension_numbers=DIMS,
+    )
+    # out: (C, R', S', N) -> (R, S, C, N).  R' >= R when (H+2p-R) % stride
+    # != 0 (trailing input rows unused by the forward conv) — crop.
+    return jnp.transpose(out, (1, 2, 0, 3))[:r, :s]
+
+
+def input_grad_transpose(dy, k, stride: int = 2, pad: int = 2, out_pad: int = 1):
+    """Generator-side backward: dL/dx of a forward strided conv is exactly a
+    transposed convolution of dy with the spatially-flipped kernel (in/out
+    channels swapped).  Used by the training benches."""
+    kf = k[::-1, ::-1, :, :]
+    kf = jnp.transpose(kf, (0, 1, 3, 2))  # (R,S,N,C)
+    return conv2d_transpose(dy, kf, stride=stride, pad=pad, out_pad=out_pad)

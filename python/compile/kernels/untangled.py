@@ -1,0 +1,165 @@
+"""L1 Pallas kernel: the untangled 1x1-convolution GEMM (paper 3.2).
+
+HUGE2's untangling step turns every decomposed deconvolution pattern into a
+set of 1x1 convolutions: for each kernel tap (m, n) the contribution to the
+output is a plain matrix multiplication
+
+    (Ho*Wo, C) @ (C, N)   accumulated over taps.
+
+This module provides that GEMM as a Pallas kernel, tiled for the TPU MXU:
+
+* grid = (M/TM, N/TN, K/TK); the K axis is the innermost (sequential)
+  grid dimension so a VMEM scratch accumulator carries partial sums.
+* Block shapes default to (128, 128, 128) — one MXU-sized tile per step —
+  and are shrunk automatically for small operands.
+* ``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+  custom-calls, so the kernel is lowered to plain HLO.  On a real TPU the
+  same BlockSpecs target the 128x128 systolic array directly (see
+  DESIGN.md "Hardware-Adaptation").
+
+Two entry points:
+
+* ``matmul(x, w)``         -> x @ w
+* ``matmul_acc(x, w, acc)``-> acc + x @ w   (the tap-accumulation form)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# MXU-native tile; shrunk for small operands.
+DEFAULT_TM = 128
+DEFAULT_TN = 128
+DEFAULT_TK = 128
+
+
+def _pick_tile(dim: int, pref: int) -> int:
+    """Largest power-of-two tile <= pref that keeps padding overhead small."""
+    t = pref
+    while t > 8 and t > dim:
+        t //= 2
+    return t
+
+
+def _pad_to(x, m: int, axis: int):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+    """One (TM, TN) output tile; accumulates over the K grid axis."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU matmul on the current (TM, TK) x (TK, TN) blocks; accumulate in
+    # f32 scratch regardless of input dtype.
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _matmul_acc_kernel(x_ref, w_ref, a_ref, o_ref, acc_ref, *, nk: int):
+    """Same as _matmul_kernel but seeded with a resident accumulator tile —
+    the HUGE2 tap-accumulation: out = acc + x @ w."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = a_ref[...].astype(jnp.float32)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk"))
+def matmul(x, w, tm: int = DEFAULT_TM, tn: int = DEFAULT_TN, tk: int = DEFAULT_TK):
+    """Pallas tiled GEMM: (M, K) @ (K, N) -> (M, N)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {w.shape}"
+    tm = _pick_tile(m, tm)
+    tn = _pick_tile(n, tn)
+    tk = _pick_tile(k, tk)
+    xp = _pad_to(_pad_to(x, tm, 0), tk, 1)
+    wp = _pad_to(_pad_to(w, tk, 0), tn, 1)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    nk = kp // tk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(mp // tm, np_ // tn, nk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk"))
+def matmul_acc(x, w, acc, tm: int = DEFAULT_TM, tn: int = DEFAULT_TN,
+               tk: int = DEFAULT_TK):
+    """Pallas tiled GEMM with accumulation: acc + (M, K) @ (K, N).
+
+    This is the primitive every untangled tap of the decomposed
+    deconvolution reduces to (paper Fig. 5): the (C,)-column group of N
+    kernels forms the (K=C, N) weight matrix, the receptive field forms
+    the (M=Ho*Wo, K=C) input matrix, and tap products accumulate.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and acc.shape == (m, n), (x.shape, w.shape, acc.shape)
+    tm = _pick_tile(m, tm)
+    tn = _pick_tile(n, tn)
+    tk = _pick_tile(k, tk)
+    xp = _pad_to(_pad_to(x, tm, 0), tk, 1)
+    wp = _pad_to(_pad_to(w, tk, 0), tn, 1)
+    ap = _pad_to(_pad_to(acc, tm, 0), tn, 1)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    nk = kp // tk
+    out = pl.pallas_call(
+        functools.partial(_matmul_acc_kernel, nk=nk),
+        grid=(mp // tm, np_ // tn, nk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), acc.dtype),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        interpret=True,
+    )(xp, wp, ap)
+    return out[:m, :n]
+
+
+def vmem_bytes(tm: int = DEFAULT_TM, tn: int = DEFAULT_TN,
+               tk: int = DEFAULT_TK, dtype_bytes: int = 4) -> int:
+    """VMEM footprint of one grid step (x tile + w tile + acc + out tile).
+
+    Used by DESIGN.md / EXPERIMENTS.md to estimate real-TPU residency:
+    footprint must stay well under ~16 MiB VMEM per core.
+    """
+    return dtype_bytes * (tm * tk + tk * tn + 2 * tm * tn)

@@ -1,0 +1,251 @@
+"""L2: the paper's evaluation models in JAX, calling the L1 HUGE2 kernels.
+
+Table 1 of the paper defines the workload: the deconvolution stacks of
+DCGAN (Radford et al. 2015) and cGAN (Mirza & Osindero 2014), pretrained on
+CIFAR-100 (32x32 RGB).  We rebuild both generators (plus the DCGAN
+discriminator needed for the training experiments) so that
+
+* every deconv layer exists in two numerically identical variants —
+  ``engine="huge2"`` (decomposed + untangled Pallas kernels) and
+  ``engine="baseline"`` (the naive zero-insertion algorithm DarkNet uses);
+* the full forwards lower to single HLO modules for the rust runtime;
+* a complete GAN training step (both losses, SGD) lowers to one HLO module
+  for the end-to-end training example.
+
+Weights are synthetic (seeded PRNG): inference *speed* of a deconv layer is
+weight-independent, and numerics are validated against the oracle instead
+of CIFAR-100 sample quality (see DESIGN.md substitution table).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.decomposed import conv2d_transpose_huge2
+from .kernels.dilated import conv2d_dilated_huge2
+
+
+# --------------------------------------------------------------------------
+# Table 1 — the paper's layer configurations.
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DeconvLayer:
+    """One Table-1 row: a stride-2 transposed-convolution layer."""
+    name: str
+    h: int          # input spatial size (square)
+    c_in: int
+    c_out: int
+    k: int          # kernel size (square)
+    stride: int
+    pad: int
+    out_pad: int
+
+    @property
+    def h_out(self) -> int:
+        return ref.out_size_transpose(self.h, self.stride, self.k,
+                                      self.pad, self.out_pad)
+
+
+# DCGAN: 4x4x1024 -> 8 -> 16 -> 32 (CIFAR), 5x5 kernels, stride 2.
+DCGAN_LAYERS: List[DeconvLayer] = [
+    DeconvLayer("dcgan_dc1", 4, 1024, 512, 5, 2, 2, 1),
+    DeconvLayer("dcgan_dc2", 8, 512, 256, 5, 2, 2, 1),
+    DeconvLayer("dcgan_dc3", 16, 256, 128, 5, 2, 2, 1),
+    DeconvLayer("dcgan_dc4", 32, 128, 3, 5, 2, 2, 1),
+]
+
+# cGAN: 8x8x256 -> 16 -> 32, 4x4 kernels, stride 2 (pad 1, no out-pad).
+CGAN_LAYERS: List[DeconvLayer] = [
+    DeconvLayer("cgan_dc1", 8, 256, 128, 4, 2, 1, 0),
+    DeconvLayer("cgan_dc2", 16, 128, 3, 4, 2, 1, 0),
+]
+
+ALL_LAYERS: List[DeconvLayer] = DCGAN_LAYERS + CGAN_LAYERS
+
+Z_DIM = 100
+N_CLASSES = 10  # cGAN conditioning
+
+
+def deconv(x, k, layer: DeconvLayer, engine: str = "huge2"):
+    """Dispatch one Table-1 layer to the selected engine."""
+    if engine == "huge2":
+        return conv2d_transpose_huge2(x, k, stride=layer.stride,
+                                      pad=layer.pad, out_pad=layer.out_pad)
+    if engine == "baseline":
+        return ref.conv2d_transpose_zerofill(x, k, stride=layer.stride,
+                                             pad=layer.pad,
+                                             out_pad=layer.out_pad)
+    if engine == "oracle":
+        return ref.conv2d_transpose(x, k, stride=layer.stride,
+                                    pad=layer.pad, out_pad=layer.out_pad)
+    raise ValueError(f"unknown engine {engine!r}")
+
+
+# --------------------------------------------------------------------------
+# Parameter initialisation (seeded, reproducible across python/rust).
+# --------------------------------------------------------------------------
+
+def init_dcgan_generator(key, layers=None, z_dim: int = Z_DIM) -> Dict:
+    layers = layers or DCGAN_LAYERS
+    first = layers[0]
+    keys = jax.random.split(key, len(layers) + 1)
+    params = {
+        "proj_w": jax.random.normal(
+            keys[0], (z_dim, first.h * first.h * first.c_in),
+            jnp.float32) * 0.02,
+    }
+    for i, (lk, layer) in enumerate(zip(keys[1:], layers)):
+        params[f"k{i}"] = jax.random.normal(
+            lk, (layer.k, layer.k, layer.c_in, layer.c_out),
+            jnp.float32) * 0.02
+    return params
+
+
+def init_cgan_generator(key, layers=None, z_dim: int = Z_DIM,
+                        n_classes: int = N_CLASSES) -> Dict:
+    layers = layers or CGAN_LAYERS
+    first = layers[0]
+    keys = jax.random.split(key, len(layers) + 1)
+    params = {
+        "proj_w": jax.random.normal(
+            keys[0], (z_dim + n_classes, first.h * first.h * first.c_in),
+            jnp.float32) * 0.02,
+    }
+    for i, (lk, layer) in enumerate(zip(keys[1:], layers)):
+        params[f"k{i}"] = jax.random.normal(
+            lk, (layer.k, layer.k, layer.c_in, layer.c_out),
+            jnp.float32) * 0.02
+    return params
+
+
+def init_discriminator(key, chans: Tuple[int, ...] = (3, 64, 128, 256)) -> Dict:
+    """Strided-conv discriminator: 32 -> 16 -> 8 -> 4 -> logit."""
+    keys = jax.random.split(key, len(chans))
+    params = {}
+    for i in range(len(chans) - 1):
+        params[f"k{i}"] = jax.random.normal(
+            keys[i], (5, 5, chans[i], chans[i + 1]), jnp.float32) * 0.02
+    params["head_w"] = jax.random.normal(
+        keys[-1], (4 * 4 * chans[-1], 1), jnp.float32) * 0.02
+    return params
+
+
+# --------------------------------------------------------------------------
+# Forward passes.
+# --------------------------------------------------------------------------
+
+def dcgan_generator(params: Dict, z, engine: str = "huge2",
+                    layers=None):
+    """z: (B, Z_DIM) -> images (B, 32, 32, 3) in [-1, 1]."""
+    layers = layers or DCGAN_LAYERS
+    first = layers[0]
+    b = z.shape[0]
+    x = (z @ params["proj_w"]).reshape(b, first.h, first.h, first.c_in)
+    x = jax.nn.relu(x)
+    for i, layer in enumerate(layers):
+        x = deconv(x, params[f"k{i}"], layer, engine)
+        x = jnp.tanh(x) if i == len(layers) - 1 else jax.nn.relu(x)
+    return x
+
+
+def cgan_generator(params: Dict, z, y_onehot, engine: str = "huge2",
+                   layers=None):
+    """z: (B, Z_DIM), y_onehot: (B, N_CLASSES) -> (B, 32, 32, 3)."""
+    layers = layers or CGAN_LAYERS
+    first = layers[0]
+    zc = jnp.concatenate([z, y_onehot], axis=-1)
+    b = z.shape[0]
+    x = (zc @ params["proj_w"]).reshape(b, first.h, first.h, first.c_in)
+    x = jax.nn.relu(x)
+    for i, layer in enumerate(layers):
+        x = deconv(x, params[f"k{i}"], layer, engine)
+        x = jnp.tanh(x) if i == len(layers) - 1 else jax.nn.relu(x)
+    return x
+
+
+def discriminator(params: Dict, img):
+    """img: (B, 32, 32, 3) -> logits (B, 1)."""
+    x = img
+    i = 0
+    while f"k{i}" in params:
+        x = ref.conv2d(x, params[f"k{i}"], stride=2, pad=2)
+        x = jax.nn.leaky_relu(x, 0.2)
+        i += 1
+    b = x.shape[0]
+    return x.reshape(b, -1) @ params["head_w"]
+
+
+def atrous_pyramid(x, ks, dilations=(1, 2, 4, 8), engine: str = "huge2"):
+    """Semantic-segmentation-style atrous spatial pyramid (paper §1 / §2.1.2
+    motivation): parallel dilated convs, summed.  x: (B,H,W,C),
+    ks: list of (3,3,C,N) kernels, 'same' output size."""
+    outs = []
+    for k, d in zip(ks, dilations):
+        pad = d  # 3x3 kernel, 'same'
+        if engine == "huge2":
+            outs.append(conv2d_dilated_huge2(x, k, dilation=d, stride=1,
+                                             pad=pad))
+        else:
+            outs.append(ref.conv2d_dilated_zerofill(x, k, dilation=d,
+                                                    stride=1, pad=pad))
+    return sum(outs)
+
+
+# --------------------------------------------------------------------------
+# Tiny-DCGAN training step (for the e2e training example).
+#
+# Channel counts are Table-1 / 8 so a few hundred SGD steps run in seconds
+# on the CPU PJRT client; the *structure* (two stride-2 5x5 deconvs, strided
+# disc, alternating SGD) is the paper's.
+# --------------------------------------------------------------------------
+
+TINY_LAYERS: List[DeconvLayer] = [
+    DeconvLayer("tiny_dc1", 8, 64, 32, 5, 2, 2, 1),
+    DeconvLayer("tiny_dc2", 16, 32, 3, 5, 2, 2, 1),
+]
+TINY_Z = 32
+
+
+def init_tiny_gan(key):
+    kg, kd = jax.random.split(key)
+    gen = init_dcgan_generator(kg, layers=TINY_LAYERS, z_dim=TINY_Z)
+    disc = init_discriminator(kd, chans=(3, 32, 64, 128))
+    return gen, disc
+
+
+def _bce_logits(logits, label: float):
+    # label in {0., 1.}; numerically stable BCE-with-logits.
+    return jnp.mean(jnp.maximum(logits, 0) - logits * label
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def gan_train_step(gen: Dict, disc: Dict, z, real, lr: float = 0.05):
+    """One alternating-SGD GAN step on the tiny model.
+
+    Returns (new_gen, new_disc, loss_g, loss_d).  The generator forward
+    uses the oracle engine here: `jax.grad` through the huge2 engine is
+    numerically identical but lowers a much larger HLO; the *training
+    experiments* (Fig 8 right) benchmark the huge2 gradient kernels
+    directly in rust (`deconv::grad`) and in `kernels/dilated.py`.
+    """
+    def loss_d_fn(dp):
+        fake = dcgan_generator(gen, z, engine="oracle", layers=TINY_LAYERS)
+        l_real = _bce_logits(discriminator(dp, real), 1.0)
+        l_fake = _bce_logits(discriminator(dp, fake), 0.0)
+        return l_real + l_fake
+
+    def loss_g_fn(gp):
+        fake = dcgan_generator(gp, z, engine="oracle", layers=TINY_LAYERS)
+        return _bce_logits(discriminator(disc, fake), 1.0)
+
+    loss_d, gd = jax.value_and_grad(loss_d_fn)(disc)
+    new_disc = {k: v - lr * gd[k] for k, v in disc.items()}
+    loss_g, gg = jax.value_and_grad(loss_g_fn)(gen)
+    new_gen = {k: v - lr * gg[k] for k, v in gen.items()}
+    return new_gen, new_disc, loss_g, loss_d

@@ -1,0 +1,191 @@
+"""Core correctness signal: HUGE2 Pallas kernels vs pure-jnp oracles.
+
+Every algorithmic identity of the paper is checked:
+  * decomposition + untangling == zero-insertion transposed conv (Alg 1)
+  * untangled dilated conv     == zero-dilated-kernel conv (Alg 2)
+  * weight-grad-as-dilated-conv == jax.grad of the forward conv (3.2.3)
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import ref, untangled, decomposed, dilated
+from compile import model
+
+RNG = np.random.default_rng(1234)
+
+
+def randn(*shape):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32))
+
+
+def assert_close(a, b, atol=2e-4, rtol=2e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=atol, rtol=rtol)
+
+
+# --------------------------------------------------------------------------
+# Pallas GEMM primitive
+# --------------------------------------------------------------------------
+
+class TestMatmul:
+    @pytest.mark.parametrize("m,k,n", [
+        (1, 1, 1), (3, 5, 7), (16, 16, 16), (128, 64, 32),
+        (130, 70, 33),  # non-divisible by any tile
+        (256, 128, 256),
+    ])
+    def test_matches_jnp(self, m, k, n):
+        x, w = randn(m, k), randn(k, n)
+        assert_close(untangled.matmul(x, w), x @ w)
+
+    @pytest.mark.parametrize("m,k,n", [(5, 3, 4), (64, 128, 64), (33, 17, 9)])
+    def test_acc_matches_jnp(self, m, k, n):
+        x, w, a = randn(m, k), randn(k, n), randn(m, n)
+        assert_close(untangled.matmul_acc(x, w, a), a + x @ w)
+
+    def test_small_tiles(self):
+        x, w = randn(40, 24), randn(24, 40)
+        assert_close(untangled.matmul(x, w, tm=16, tn=16, tk=8), x @ w)
+
+    def test_vmem_budget(self):
+        # default tile fits comfortably in one TPU core's VMEM (~16 MiB)
+        assert untangled.vmem_bytes() < 16 * 2 ** 20 // 4
+
+
+# --------------------------------------------------------------------------
+# Oracles agree with each other (lax lhs-dilation vs literal zero-insertion)
+# --------------------------------------------------------------------------
+
+class TestOracles:
+    @pytest.mark.parametrize("h,c,n,r,stride,pad,op", [
+        (4, 8, 6, 5, 2, 2, 1),
+        (8, 4, 4, 4, 2, 1, 0),
+        (5, 3, 2, 3, 2, 1, 1),
+        (6, 2, 3, 3, 3, 0, 0),
+        (7, 1, 1, 5, 2, 2, 1),
+    ])
+    def test_transpose_oracles_agree(self, h, c, n, r, stride, pad, op):
+        x, k = randn(1, h, h, c), randn(r, r, c, n)
+        a = ref.conv2d_transpose(x, k, stride, pad, op)
+        b = ref.conv2d_transpose_zerofill(x, k, stride, pad, op)
+        assert a.shape[1] == ref.out_size_transpose(h, stride, r, pad, op)
+        assert_close(a, b)
+
+    @pytest.mark.parametrize("d,st,pad", [(2, 1, 0), (2, 1, 2), (3, 1, 3),
+                                          (2, 2, 2), (4, 1, 4)])
+    def test_dilated_oracles_agree(self, d, st, pad):
+        x, k = randn(1, 13, 13, 5), randn(3, 3, 5, 4)
+        a = ref.conv2d_dilated(x, k, d, st, pad)
+        b = ref.conv2d_dilated_zerofill(x, k, d, st, pad)
+        assert_close(a, b)
+
+    def test_weight_grad_matches_autodiff(self):
+        x, k = randn(2, 8, 8, 5), randn(5, 5, 5, 7)
+        y = ref.conv2d(x, k, stride=2, pad=2)
+        dy = randn(*y.shape)
+        g_ref = ref.weight_grad_dilated(x, dy, stride=2, pad=2, r=5, s=5)
+        g_ad = jax.grad(
+            lambda kk: jnp.sum(ref.conv2d(x, kk, stride=2, pad=2) * dy))(k)
+        assert_close(g_ref, g_ad)
+
+    def test_input_grad_matches_autodiff(self):
+        x, k = randn(1, 8, 8, 4), randn(5, 5, 4, 6)
+        y = ref.conv2d(x, k, stride=2, pad=2)
+        dy = randn(*y.shape)
+        g_ad = jax.grad(
+            lambda xx: jnp.sum(ref.conv2d(xx, k, stride=2, pad=2) * dy))(x)
+        g_ref = ref.input_grad_transpose(dy, k, stride=2, pad=2, out_pad=1)
+        assert_close(g_ad, g_ref)
+
+
+# --------------------------------------------------------------------------
+# HUGE2 decomposed transposed conv (the headline kernel)
+# --------------------------------------------------------------------------
+
+class TestDecomposed:
+    @pytest.mark.parametrize("layer", model.ALL_LAYERS,
+                             ids=[l.name for l in model.ALL_LAYERS])
+    def test_table1_layers(self, layer):
+        """Every Table-1 configuration, exact vs oracle."""
+        # shrink channels 8x to keep interpret-mode runtime sane; spatial
+        # geometry (the decomposition) is exercised at full fidelity
+        c = max(1, layer.c_in // 8)
+        n = max(1, layer.c_out // 8) if layer.c_out > 3 else layer.c_out
+        x = randn(1, layer.h, layer.h, c)
+        k = randn(layer.k, layer.k, c, n)
+        got = decomposed.conv2d_transpose_huge2(
+            x, k, layer.stride, layer.pad, layer.out_pad)
+        want = ref.conv2d_transpose(x, k, layer.stride, layer.pad,
+                                    layer.out_pad)
+        assert got.shape == (1, layer.h_out, layer.h_out, n)
+        assert_close(got, want)
+
+    @pytest.mark.parametrize("stride", [2, 3, 4])
+    def test_higher_strides(self, stride):
+        x, k = randn(1, 5, 5, 3), randn(2 * stride + 1, 2 * stride + 1, 3, 2)
+        got = decomposed.conv2d_transpose_huge2(x, k, stride, stride, 1)
+        want = ref.conv2d_transpose(x, k, stride, stride, 1)
+        assert_close(got, want)
+
+    def test_batch(self):
+        x, k = randn(3, 4, 4, 4), randn(5, 5, 4, 2)
+        assert_close(decomposed.conv2d_transpose_huge2(x, k),
+                     ref.conv2d_transpose(x, k))
+
+    def test_rect_kernel(self):
+        x, k = randn(1, 6, 6, 2), randn(3, 3, 2, 2)
+        got = decomposed.conv2d_transpose_huge2(x, k, 2, 1, 0)
+        want = ref.conv2d_transpose(x, k, 2, 1, 0)
+        assert_close(got, want)
+
+    def test_pattern_count(self):
+        pats = decomposed.decompose_kernel(randn(5, 5, 2, 2), 2, 2)
+        assert len(pats) == 4  # the paper's 4 patterns for stride 2
+        # Taps partition the 5x5 kernel: sum of tap counts == 25
+        total = sum(v[0].shape[0] * v[0].shape[1] for v in pats.values())
+        assert total == 25
+
+    def test_flop_count_dcgan_dc1(self):
+        fc = decomposed.flop_count(4, 4, 1024, 512, 5, 5, 2, 2, 1)
+        # naive slides a 5x5 window over the inflated tensor: 8*8*25*C*N
+        assert fc["naive_macs"] == 8 * 8 * 25 * 1024 * 512
+        # stride-2 decomposition removes ~3/4 of the MACs
+        assert 3.0 < fc["ratio"] < 4.5
+
+
+# --------------------------------------------------------------------------
+# HUGE2 dilated conv + training gradients
+# --------------------------------------------------------------------------
+
+class TestDilated:
+    @pytest.mark.parametrize("d,st,pad", [(2, 1, 2), (3, 1, 3), (2, 2, 2),
+                                          (4, 1, 4), (2, 1, 0)])
+    def test_matches_oracle(self, d, st, pad):
+        x, k = randn(1, 13, 13, 6), randn(3, 3, 6, 5)
+        got = dilated.conv2d_dilated_huge2(x, k, d, st, pad)
+        want = ref.conv2d_dilated(x, k, d, st, pad)
+        assert_close(got, want)
+
+    def test_batch(self):
+        x, k = randn(2, 9, 9, 3), randn(3, 3, 3, 3)
+        assert_close(dilated.conv2d_dilated_huge2(x, k, 2, 1, 2),
+                     ref.conv2d_dilated(x, k, 2, 1, 2))
+
+    def test_weight_grad_matches_oracle_and_autodiff(self):
+        x, k = randn(2, 8, 8, 4), randn(5, 5, 4, 6)
+        y = ref.conv2d(x, k, stride=2, pad=2)
+        dy = randn(*y.shape)
+        got = dilated.weight_grad_huge2(x, dy, stride=2, pad=2, r=5, s=5)
+        want = ref.weight_grad_dilated(x, dy, stride=2, pad=2, r=5, s=5)
+        g_ad = jax.grad(
+            lambda kk: jnp.sum(ref.conv2d(x, kk, stride=2, pad=2) * dy))(k)
+        assert_close(got, want)
+        assert_close(got, g_ad)
+
+    def test_depthwise_outer_product_case(self):
+        # paper 3.2.3: C=1 dilated conv == outer product of two vectors
+        x, k = randn(1, 7, 7, 1), randn(3, 3, 1, 1)
+        assert_close(dilated.conv2d_dilated_huge2(x, k, 2, 1, 0),
+                     ref.conv2d_dilated(x, k, 2, 1, 0))

@@ -1,0 +1,115 @@
+"""L2 model tests: generator shapes, engine equivalence, train step."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def close(a, b, tol=5e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=tol, rtol=tol)
+
+
+class TestTable1:
+    def test_dcgan_geometry(self):
+        """Table 1 (paper): 4x4x1024 -> 8 -> 16 -> 32x32x3."""
+        hs = [l.h for l in model.DCGAN_LAYERS]
+        assert hs == [4, 8, 16, 32]
+        outs = [l.h_out for l in model.DCGAN_LAYERS]
+        assert outs == [8, 16, 32, 64][:0] or outs == [8, 16, 32, 64]
+        cs = [(l.c_in, l.c_out) for l in model.DCGAN_LAYERS]
+        assert cs == [(1024, 512), (512, 256), (256, 128), (128, 3)]
+
+    def test_cgan_geometry(self):
+        assert [(l.h, l.c_in, l.c_out, l.k) for l in model.CGAN_LAYERS] == \
+            [(8, 256, 128, 4), (16, 128, 3, 4)]
+        assert [l.h_out for l in model.CGAN_LAYERS] == [16, 32]
+
+    def test_layers_chain(self):
+        for a, b in zip(model.DCGAN_LAYERS, model.DCGAN_LAYERS[1:]):
+            assert a.h_out == b.h and a.c_out == b.c_in
+
+
+class TestGenerators:
+    def _tiny_params(self, layers, z_dim):
+        # shrink channels so interpret-mode forward is fast
+        small = [model.DeconvLayer(l.name, l.h, max(1, l.c_in // 16),
+                                   l.c_out if l.c_out <= 3
+                                   else max(1, l.c_out // 16),
+                                   l.k, l.stride, l.pad, l.out_pad)
+                 for l in layers]
+        # re-chain channels
+        fixed = []
+        for i, l in enumerate(small):
+            c_in = fixed[-1].c_out if i else l.c_in
+            fixed.append(model.DeconvLayer(l.name, l.h, c_in, l.c_out,
+                                           l.k, l.stride, l.pad, l.out_pad))
+        return fixed
+
+    def test_dcgan_engines_agree(self):
+        layers = self._tiny_params(model.DCGAN_LAYERS, model.Z_DIM)
+        params = model.init_dcgan_generator(jax.random.PRNGKey(0),
+                                            layers=layers)
+        z = jax.random.normal(jax.random.PRNGKey(1), (2, model.Z_DIM))
+        a = model.dcgan_generator(params, z, engine="huge2", layers=layers)
+        b = model.dcgan_generator(params, z, engine="baseline",
+                                  layers=layers)
+        c = model.dcgan_generator(params, z, engine="oracle", layers=layers)
+        assert a.shape == (2, 64, 64, 3)
+        close(a, b)
+        close(a, c)
+        # tanh output range
+        assert np.abs(np.asarray(a)).max() <= 1.0
+
+    def test_cgan_engines_agree(self):
+        layers = self._tiny_params(model.CGAN_LAYERS, model.Z_DIM)
+        params = model.init_cgan_generator(jax.random.PRNGKey(0),
+                                           layers=layers)
+        z = jax.random.normal(jax.random.PRNGKey(1), (1, model.Z_DIM))
+        y = jax.nn.one_hot(jnp.array([3]), model.N_CLASSES)
+        a = model.cgan_generator(params, z, y, engine="huge2", layers=layers)
+        b = model.cgan_generator(params, z, y, engine="baseline",
+                                 layers=layers)
+        assert a.shape == (1, 32, 32, 3)
+        close(a, b)
+
+    def test_discriminator_shape(self):
+        params = model.init_discriminator(jax.random.PRNGKey(0))
+        img = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 32, 3))
+        assert model.discriminator(params, img).shape == (4, 1)
+
+    def test_atrous_pyramid_engines_agree(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, 17, 17, 4))
+        ks = [jax.random.normal(jax.random.PRNGKey(i + 1), (3, 3, 4, 4))
+              * 0.1 for i in range(4)]
+        a = model.atrous_pyramid(x, ks, engine="huge2")
+        b = model.atrous_pyramid(x, ks, engine="baseline")
+        assert a.shape == x.shape[:3] + (4,)
+        close(a, b)
+
+
+class TestTraining:
+    def test_train_step_decreases_d_loss(self):
+        gen, disc = model.init_tiny_gan(jax.random.PRNGKey(0))
+        z = jax.random.normal(jax.random.PRNGKey(1), (8, model.TINY_Z))
+        real = jnp.tanh(
+            jax.random.normal(jax.random.PRNGKey(2), (8, 32, 32, 3)))
+        step = jax.jit(model.gan_train_step)
+        g, d, lg0, ld0 = step(gen, disc, z, real)
+        for _ in range(5):
+            g, d, lg, ld = step(g, d, z, real)
+        assert np.isfinite(float(lg)) and np.isfinite(float(ld))
+        assert float(ld) < float(ld0)  # D learns on a fixed batch
+
+    def test_param_shapes_stable(self):
+        gen, disc = model.init_tiny_gan(jax.random.PRNGKey(0))
+        z = jax.random.normal(jax.random.PRNGKey(1), (4, model.TINY_Z))
+        real = jnp.zeros((4, 32, 32, 3))
+        g, d, _, _ = model.gan_train_step(gen, disc, z, real)
+        for k in gen:
+            assert g[k].shape == gen[k].shape
+        for k in disc:
+            assert d[k].shape == disc[k].shape

@@ -1,0 +1,103 @@
+"""Hypothesis sweeps over the Pallas kernels' shape/parameter space.
+
+These are the python-side property tests the deliverables require: random
+shapes, strides, pads and dtypes, always asserting allclose against the
+pure-jnp oracle in ref.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, untangled, decomposed, dilated
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def arr(rng, *shape, dtype=np.float32):
+    return jnp.asarray(rng.normal(size=shape).astype(dtype))
+
+
+def close(a, b, tol=3e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=tol, rtol=tol)
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 200), k=st.integers(1, 96), n=st.integers(1, 96),
+       seed=st.integers(0, 2 ** 31))
+def test_matmul_any_shape(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = arr(rng, m, k), arr(rng, k, n)
+    close(untangled.matmul(x, w), x @ w)
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 100), k=st.integers(1, 64), n=st.integers(1, 64),
+       seed=st.integers(0, 2 ** 31))
+def test_matmul_acc_any_shape(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w, a = arr(rng, m, k), arr(rng, k, n), arr(rng, m, n)
+    close(untangled.matmul_acc(x, w, a), a + x @ w)
+
+
+@settings(**SETTINGS)
+@given(h=st.integers(2, 9), c=st.integers(1, 8), n=st.integers(1, 8),
+       r=st.integers(2, 5), stride=st.integers(2, 3),
+       out_pad=st.integers(0, 1), pad_frac=st.integers(0, 100),
+       seed=st.integers(0, 2 ** 31))
+def test_transpose_decomposition_any_config(h, c, n, r, stride, out_pad,
+                                            pad_frac, seed):
+    """The §3.1 decomposition identity holds for *any* legal configuration,
+    not just the paper's Table-1 rows."""
+    pad = pad_frac % r  # any pad in [0, r)
+    out_pad = min(out_pad, stride - 1)
+    if ref.out_size_transpose(h, stride, r, pad, out_pad) <= 0:
+        return
+    rng = np.random.default_rng(seed)
+    x, k = arr(rng, 1, h, h, c), arr(rng, r, r, c, n)
+    close(decomposed.conv2d_transpose_huge2(x, k, stride, pad, out_pad),
+          ref.conv2d_transpose(x, k, stride, pad, out_pad))
+
+
+@settings(**SETTINGS)
+@given(h=st.integers(5, 16), c=st.integers(1, 6), n=st.integers(1, 6),
+       r=st.integers(1, 3), d=st.integers(1, 4), stride=st.integers(1, 2),
+       pad=st.integers(0, 4), seed=st.integers(0, 2 ** 31))
+def test_dilated_untangling_any_config(h, c, n, r, d, stride, pad, seed):
+    if ref.out_size_dilated(h, r, d, stride, pad) <= 0:
+        return
+    rng = np.random.default_rng(seed)
+    x, k = arr(rng, 1, h, h, c), arr(rng, r, r, c, n)
+    close(dilated.conv2d_dilated_huge2(x, k, d, stride, pad),
+          ref.conv2d_dilated(x, k, d, stride, pad))
+
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 3), h=st.sampled_from([8, 12, 16]),
+       c=st.integers(1, 5), n=st.integers(1, 5),
+       seed=st.integers(0, 2 ** 31))
+def test_weight_grad_any_config(b, h, c, n, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, b, h, h, c)
+    k = arr(rng, 5, 5, c, n)
+    y = ref.conv2d(x, k, stride=2, pad=2)
+    dy = arr(rng, *y.shape)
+    close(dilated.weight_grad_huge2(x, dy, stride=2, pad=2, r=5, s=5),
+          ref.weight_grad_dilated(x, dy, stride=2, pad=2, r=5, s=5))
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2 ** 31))
+def test_mac_counts_decrease(seed):
+    """Invariant: the decomposition never *increases* effective MACs, and
+    for stride s it removes ~(1 - 1/s^2) of them on large outputs."""
+    rng = np.random.default_rng(seed)
+    h = int(rng.integers(4, 32))
+    r = int(rng.integers(3, 6))
+    stride = int(rng.integers(2, 4))
+    pad = int(rng.integers(0, r))
+    fc = decomposed.flop_count(h, h, 16, 16, r, r, stride, pad,
+                               min(1, stride - 1))
+    assert fc["huge2_macs"] <= fc["naive_macs"]
+    assert fc["ratio"] >= 1.0

@@ -1,0 +1,80 @@
+//! Reproduces **Figure 7 (right)**: per-layer inference speedup of the
+//! HUGE² engine over the DarkNet-style naive baseline on CPU, for every
+//! Table-1 layer of DCGAN and cGAN.
+//!
+//! Paper claim: ~5× on a 4-core Cortex-A57; shallower layers are more
+//! compute-bound (speedup tracks the 4× MAC reduction + GEMM efficiency),
+//! deeper layers gain more from the memory side.
+//!
+//! Run: `cargo bench --bench fig7_speedup`
+
+use huge2::bench_util::{fmt_dur, measure_budget, Table};
+use huge2::config::table1;
+use huge2::deconv::{baseline, huge2 as engine};
+use huge2::rng::Rng;
+use huge2::tensor::Tensor;
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_secs_f64(
+        std::env::var("BENCH_BUDGET_S")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(2.0),
+    );
+    println!("\n== Fig 7 (right): CPU inference speedup, batch 1 ==");
+    println!("(budget {}s/engine/layer; median of adaptive samples)\n",
+             budget.as_secs_f64());
+
+    let mut table = Table::new(&["layer", "gan", "baseline", "huge2",
+                                 "speedup", "paper(≈)"]);
+    let mut geo = 1.0f64;
+    let mut count = 0;
+    for layer in table1() {
+        let mut rng = Rng::new(layer.h as u64 * 31 + layer.c_in as u64);
+        let x = Tensor::randn(&[1, layer.h, layer.h, layer.c_in], &mut rng);
+        let k = Tensor::randn(&[layer.k, layer.k, layer.c_in, layer.c_out],
+                              &mut rng);
+        let p = layer.deconv_params();
+
+        let base = measure_budget(budget, || {
+            std::hint::black_box(baseline::conv2d_transpose(&x, &k, &p));
+        });
+        // model-load-time decomposition excluded (serving engines
+        // decompose once) — same treatment as the baseline's weights
+        let patterns = engine::decompose(&k, &p);
+        let fast = measure_budget(budget, || {
+            std::hint::black_box(engine::conv2d_transpose_with(
+                &x, &patterns, layer.k, layer.k, &p));
+        });
+
+        let speedup = base.median_s() / fast.median_s();
+        geo *= speedup;
+        count += 1;
+        table.row(&[
+            layer.name.into(),
+            layer.gan.into(),
+            fmt_dur(base.median),
+            fmt_dur(fast.median),
+            format!("{speedup:.2}x"),
+            "3-6x".into(),
+        ]);
+    }
+    table.print();
+    println!("\ngeometric-mean speedup: {:.2}x  (paper: ~5x on 4-core \
+              Cortex-A57)", geo.powf(1.0 / count as f64));
+
+    // correctness guard: a bench that silently diverges is worthless
+    let layer = &table1()[2];
+    let mut rng = Rng::new(7);
+    let x = Tensor::randn(&[1, layer.h, layer.h, layer.c_in], &mut rng);
+    let k = Tensor::randn(&[layer.k, layer.k, layer.c_in, layer.c_out],
+                          &mut rng);
+    let p = layer.deconv_params();
+    let a = baseline::conv2d_transpose(&x, &k, &p);
+    let b = engine::conv2d_transpose(&x, &k, &p);
+    assert!(a.allclose(&b, 1e-3), "engines diverged: {}",
+            a.max_abs_diff(&b));
+    println!("correctness: engines agree (max |Δ| = {:.2e})",
+             a.max_abs_diff(&b));
+}

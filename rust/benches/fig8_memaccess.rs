@@ -1,0 +1,79 @@
+//! Reproduces **Figure 8 (left)** — memory-access reduction — via the
+//! instrumented cache simulator, and **Figure 7 (left)** — embedded-GPU
+//! speedup — via the TX2 roofline model (no CUDA device here; this column
+//! is an ESTIMATE and labelled as such — DESIGN.md §2).
+//!
+//! Paper claims: 30–70 % access reduction, larger on deeper (data-bound)
+//! layers; ~10× GPU speedup.
+//!
+//! Run: `cargo bench --bench fig8_memaccess`
+
+use huge2::bench_util::Table;
+use huge2::config::{dilated_workloads, table1};
+use huge2::memsim::counter::trace_dilated;
+use huge2::memsim::{trace_layer, EngineKind, GpuModel};
+
+fn main() {
+    println!("\n== Fig 8 (left): memory accesses, baseline vs HUGE2 ==");
+    println!("(TX2-like hierarchy: 32KiB/2-way L1, 2MiB/16-way L2, \
+              64B lines)\n");
+    let mut t = Table::new(&["layer", "base accesses", "huge2 accesses",
+                             "reduction", "base DRAM KB", "huge2 DRAM KB",
+                             "paper(≈)"]);
+    for l in table1() {
+        let b = trace_layer(&l, EngineKind::Baseline);
+        let h = trace_layer(&l, EngineKind::Huge2);
+        let red = 100.0
+            * (1.0 - h.hierarchy.scalar_accesses as f64
+               / b.hierarchy.scalar_accesses as f64);
+        t.row(&[
+            l.name.into(),
+            b.hierarchy.scalar_accesses.to_string(),
+            h.hierarchy.scalar_accesses.to_string(),
+            format!("{red:.1}%"),
+            (b.dram_bytes / 1024).to_string(),
+            (h.dram_bytes / 1024).to_string(),
+            "30-70%".into(),
+        ]);
+    }
+    t.print();
+
+    println!("\n== dilated-conv workloads (segmentation / §2.1.2) ==\n");
+    let mut t = Table::new(&["workload", "base accesses", "huge2 accesses",
+                             "reduction"]);
+    for (name, h, c, n, r, p) in dilated_workloads() {
+        let b = trace_dilated(h, c, n, r, &p, EngineKind::Baseline);
+        let f = trace_dilated(h, c, n, r, &p, EngineKind::Huge2);
+        t.row(&[
+            name.into(),
+            b.hierarchy.scalar_accesses.to_string(),
+            f.hierarchy.scalar_accesses.to_string(),
+            format!("{:.1}%",
+                    100.0 * (1.0 - f.hierarchy.scalar_accesses as f64
+                             / b.hierarchy.scalar_accesses as f64)),
+        ]);
+    }
+    t.print();
+
+    println!("\n== Fig 7 (left): embedded-GPU speedup (roofline ESTIMATE, \
+              TX2 parameters) ==\n");
+    let model = GpuModel::default();
+    let mut t = Table::new(&["layer", "t_base est", "t_huge2 est",
+                             "speedup", "baseline bound", "paper(≈)"]);
+    for l in table1() {
+        let e = model.estimate(&l);
+        t.row(&[
+            l.name.into(),
+            format!("{:.3}ms", e.t_baseline_s * 1e3),
+            format!("{:.3}ms", e.t_huge2_s * 1e3),
+            format!("{:.1}x", e.speedup),
+            if e.baseline_compute_bound { "compute" } else { "memory" }
+                .into(),
+            "~10x".into(),
+        ]);
+    }
+    t.print();
+    println!("\nNOTE: GPU column is an analytical estimate (no CUDA \
+              device in this environment); the CPU columns above and in \
+              fig7_speedup are measured.");
+}

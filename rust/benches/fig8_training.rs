@@ -1,0 +1,93 @@
+//! Reproduces **Figure 8 (right)**: GAN-training speedup on "several
+//! typical layers" (paper §4.2.1) — both cases the paper covers:
+//!
+//! * **dilated derivative maps convolving the input** — the discriminator
+//!   weight gradient (§3.2.3, Fig. 6 step 3): naive engines materialise
+//!   the stride-dilated derivative kernel (zeros included); HUGE²
+//!   untangles each tap into a `(C,N) += Xᵀ·dY` GEMM.
+//! * **derivative maps stridedly convolving input tensors** — the
+//!   generator input gradient, which *is* a transposed convolution, so it
+//!   exercises the Fig.-7 engines on backward shapes.
+//!
+//! Run: `cargo bench --bench fig8_training`
+
+use huge2::bench_util::{fmt_dur, measure_budget, Table};
+use huge2::deconv::{grad, DeconvParams};
+use huge2::rng::Rng;
+use huge2::tensor::Tensor;
+use std::time::Duration;
+
+/// Discriminator layers of the CIFAR DCGAN (32→16→8→4), batch 4.
+const DISC_LAYERS: &[(&str, usize, usize, usize)] = &[
+    // (name, h_in, c_in, c_out); 5x5, stride 2, pad 2
+    ("disc_l1_32x32", 32, 3, 64),
+    ("disc_l2_16x16", 16, 64, 128),
+    ("disc_l3_8x8", 8, 128, 256),
+];
+
+fn main() {
+    let budget = Duration::from_secs_f64(
+        std::env::var("BENCH_BUDGET_S")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(1.5),
+    );
+    let b = 4; // minibatch
+    println!("\n== Fig 8 (right) case 1: discriminator weight gradient \
+              (dilated derivative maps) ==\n");
+    let mut t = Table::new(&["layer", "baseline", "huge2", "speedup"]);
+    for &(name, h, c, n) in DISC_LAYERS {
+        let mut rng = Rng::new(h as u64);
+        let x = Tensor::randn(&[b, h, h, c], &mut rng);
+        let oh = (h + 4 - 5) / 2 + 1;
+        let dy = Tensor::randn(&[b, oh, oh, n], &mut rng);
+
+        let base = measure_budget(budget, || {
+            std::hint::black_box(grad::weight_grad_baseline(
+                &x, &dy, 5, 5, 2, 2));
+        });
+        let fast = measure_budget(budget, || {
+            std::hint::black_box(grad::weight_grad_huge2(
+                &x, &dy, 5, 5, 2, 2));
+        });
+        t.row(&[
+            name.into(),
+            fmt_dur(base.median),
+            fmt_dur(fast.median),
+            format!("{:.2}x", base.median_s() / fast.median_s()),
+        ]);
+        // correctness guard
+        let a = grad::weight_grad_baseline(&x, &dy, 5, 5, 2, 2);
+        let f = grad::weight_grad_huge2(&x, &dy, 5, 5, 2, 2);
+        assert!(a.allclose(&f, 1e-2), "{name} diverged: {}",
+                a.max_abs_diff(&f));
+    }
+    t.print();
+
+    println!("\n== Fig 8 (right) case 2: generator input gradient \
+              (strided convolution of derivative maps) ==\n");
+    let mut t = Table::new(&["layer", "baseline", "huge2", "speedup"]);
+    for &(name, h, c, n) in DISC_LAYERS {
+        let mut rng = Rng::new(h as u64 + 99);
+        let p = DeconvParams::new(2, 2, 1);
+        let oh = (h + 4 - 5) / 2 + 1;
+        let k = Tensor::randn(&[5, 5, c, n], &mut rng);
+        let dy = Tensor::randn(&[b, oh, oh, n], &mut rng);
+
+        let base = measure_budget(budget, || {
+            std::hint::black_box(grad::input_grad_baseline(&dy, &k, &p));
+        });
+        let fast = measure_budget(budget, || {
+            std::hint::black_box(grad::input_grad_huge2(&dy, &k, &p));
+        });
+        t.row(&[
+            name.into(),
+            fmt_dur(base.median),
+            fmt_dur(fast.median),
+            format!("{:.2}x", base.median_s() / fast.median_s()),
+        ]);
+    }
+    t.print();
+    println!("\npaper: training speedups on selected layers, same \
+              decomposition/untangling machinery as inference.");
+}

@@ -1,0 +1,163 @@
+//! Measurement harness for the paper-reproduction benches (the vendored
+//! crate set has no criterion; this is the hand-rolled equivalent:
+//! warmup, N samples, median + MAD, throughput, aligned table output).
+
+use std::time::{Duration, Instant};
+
+/// Result of measuring one closure.
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    pub median: Duration,
+    /// Median absolute deviation — robust spread estimate.
+    pub mad: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub samples: usize,
+}
+
+impl Measurement {
+    pub fn median_s(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+
+    /// Relative spread (MAD / median).
+    pub fn rel_spread(&self) -> f64 {
+        if self.median.is_zero() {
+            0.0
+        } else {
+            self.mad.as_secs_f64() / self.median.as_secs_f64()
+        }
+    }
+}
+
+/// Measure `f`: `warmup` discarded runs, then `samples` timed runs.
+pub fn measure(warmup: usize, samples: usize,
+               mut f: impl FnMut()) -> Measurement {
+    assert!(samples > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<Duration> = (0..samples)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed()
+        })
+        .collect();
+    times.sort_unstable();
+    let median = times[times.len() / 2];
+    let mut devs: Vec<Duration> = times
+        .iter()
+        .map(|&t| if t > median { t - median } else { median - t })
+        .collect();
+    devs.sort_unstable();
+    Measurement {
+        median,
+        mad: devs[devs.len() / 2],
+        min: times[0],
+        max: *times.last().unwrap(),
+        samples,
+    }
+}
+
+/// Adaptive variant: keeps a time budget by shrinking samples for slow
+/// closures (at least 3 samples).
+pub fn measure_budget(budget: Duration, mut f: impl FnMut()) -> Measurement {
+    let t0 = Instant::now();
+    f(); // warmup + cost probe
+    let probe = t0.elapsed();
+    let n = ((budget.as_secs_f64() / probe.as_secs_f64().max(1e-9)) as usize)
+        .clamp(3, 30);
+    measure(0, n, f)
+}
+
+/// Human-friendly duration.
+pub fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}µs", s * 1e6)
+    }
+}
+
+/// Simple aligned-table printer for bench reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!("{c:>w$}  ", w = w));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>()
+                                  + 2 * widths.len()));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_runs() {
+        let mut n = 0;
+        let m = measure(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(m.samples, 5);
+        assert!(m.min <= m.median && m.median <= m.max);
+    }
+
+    #[test]
+    fn measures_sleep_roughly() {
+        let m = measure(0, 3,
+                        || std::thread::sleep(Duration::from_millis(5)));
+        assert!(m.median >= Duration::from_millis(4));
+        assert!(m.median < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_micros(7)).ends_with("µs"));
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print(); // smoke: no panic
+    }
+}

@@ -1,0 +1,116 @@
+//! Hand-rolled CLI (no clap in the vendor set).
+//!
+//! ```text
+//! huge2 inspect                       # Table 1, MAC counts, artifacts
+//! huge2 bench --layer dcgan_dc3       # one layer, both engines
+//! huge2 serve --model dcgan --rate 2 --requests 20
+//! huge2 reproduce                     # all paper tables (text form)
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// Parsed `--key value` / `--flag` arguments after the subcommand.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`.
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let mut it = argv.iter();
+        let subcommand = it
+            .next()
+            .ok_or_else(|| anyhow!("usage: huge2 <inspect|bench|serve|\
+                                    reproduce> [--key value]"))?
+            .clone();
+        let mut flags = HashMap::new();
+        while let Some(arg) = it.next() {
+            let key = arg
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got {arg:?}"))?;
+            if key.is_empty() {
+                bail!("empty flag name");
+            }
+            // value-less flags get "true"
+            match it.clone().next() {
+                Some(v) if !v.starts_with("--") => {
+                    flags.insert(key.to_string(), v.clone());
+                    it.next();
+                }
+                _ => {
+                    flags.insert(key.to_string(), "true".to_string());
+                }
+            }
+        }
+        Ok(Args { subcommand, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, \
+                                      got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(&argv("bench --layer dcgan_dc3 --iters 5 \
+                                   --verbose")).unwrap();
+        assert_eq!(a.subcommand, "bench");
+        assert_eq!(a.get("layer"), Some("dcgan_dc3"));
+        assert_eq!(a.get_usize("iters", 1).unwrap(), 5);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_or("missing", "x"), "x");
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(Args::parse(&[]).is_err());
+        assert!(Args::parse(&argv("bench layer")).is_err());
+        let a = Args::parse(&argv("bench --iters foo")).unwrap();
+        assert!(a.get_usize("iters", 1).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(&argv("serve --verbose --rate 2.5")).unwrap();
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_f64("rate", 0.0).unwrap(), 2.5);
+    }
+}

@@ -1,0 +1,224 @@
+//! Configuration system: the paper's Table-1 workload plus the serving
+//! engine's runtime configuration, loadable from a minimal TOML subset
+//! (the vendored crate set has no serde/toml — the parser is local).
+
+mod toml_mini;
+
+pub use toml_mini::{parse_toml, TomlValue};
+
+use crate::deconv::{DeconvParams, DilatedParams};
+
+/// One Table-1 row: a stride-2 transposed-convolution layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerConfig {
+    pub name: &'static str,
+    pub gan: &'static str,
+    /// Input spatial size (square).
+    pub h: usize,
+    pub c_in: usize,
+    pub c_out: usize,
+    /// Kernel size (square).
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub out_pad: usize,
+}
+
+impl LayerConfig {
+    pub fn deconv_params(&self) -> DeconvParams {
+        DeconvParams::new(self.stride, self.pad, self.out_pad)
+    }
+
+    pub fn h_out(&self) -> usize {
+        self.deconv_params().out_size(self.h, self.k)
+    }
+
+    /// Input/kernel/output element counts (batch 1).
+    pub fn sizes(&self) -> (usize, usize, usize) {
+        let ho = self.h_out();
+        (
+            self.h * self.h * self.c_in,
+            self.k * self.k * self.c_in * self.c_out,
+            ho * ho * self.c_out,
+        )
+    }
+}
+
+/// The paper's Table 1: DCGAN DC1–DC4 and cGAN DC1–DC2 (CIFAR geometry).
+pub fn table1() -> Vec<LayerConfig> {
+    vec![
+        LayerConfig { name: "dcgan_dc1", gan: "DCGAN", h: 4, c_in: 1024,
+                      c_out: 512, k: 5, stride: 2, pad: 2, out_pad: 1 },
+        LayerConfig { name: "dcgan_dc2", gan: "DCGAN", h: 8, c_in: 512,
+                      c_out: 256, k: 5, stride: 2, pad: 2, out_pad: 1 },
+        LayerConfig { name: "dcgan_dc3", gan: "DCGAN", h: 16, c_in: 256,
+                      c_out: 128, k: 5, stride: 2, pad: 2, out_pad: 1 },
+        LayerConfig { name: "dcgan_dc4", gan: "DCGAN", h: 32, c_in: 128,
+                      c_out: 3, k: 5, stride: 2, pad: 2, out_pad: 1 },
+        LayerConfig { name: "cgan_dc1", gan: "cGAN", h: 8, c_in: 256,
+                      c_out: 128, k: 4, stride: 2, pad: 1, out_pad: 0 },
+        LayerConfig { name: "cgan_dc2", gan: "cGAN", h: 16, c_in: 128,
+                      c_out: 3, k: 4, stride: 2, pad: 1, out_pad: 0 },
+    ]
+}
+
+pub fn dcgan_layers() -> Vec<LayerConfig> {
+    table1().into_iter().filter(|l| l.gan == "DCGAN").collect()
+}
+
+pub fn cgan_layers() -> Vec<LayerConfig> {
+    table1().into_iter().filter(|l| l.gan == "cGAN").collect()
+}
+
+pub fn layer_by_name(name: &str) -> Option<LayerConfig> {
+    table1().into_iter().find(|l| l.name == name)
+}
+
+/// Dilated-conv workloads for the Fig.-8 training / segmentation benches.
+pub fn dilated_workloads() -> Vec<(&'static str, usize, usize, usize, usize,
+                                   DilatedParams)> {
+    // (name, h, c, n, r, params)
+    vec![
+        ("seg_aspp_d2", 33, 64, 64, 3, DilatedParams::new(2, 1, 2)),
+        ("seg_aspp_d4", 33, 64, 64, 3, DilatedParams::new(4, 1, 4)),
+        ("seg_aspp_d8", 33, 64, 64, 3, DilatedParams::new(8, 1, 8)),
+        ("disc_bwd_16", 16, 32, 32, 3, DilatedParams::new(2, 1, 2)),
+    ]
+}
+
+/// Serving-engine runtime configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineConfig {
+    /// Max requests fused into one batch.
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch (µs).
+    pub batch_timeout_us: u64,
+    /// Bounded-queue depth before backpressure rejects.
+    pub queue_depth: usize,
+    /// Worker threads executing compiled artifacts.
+    pub workers: usize,
+    /// Directory of AOT artifacts.
+    pub artifact_dir: String,
+    /// Batch-size buckets compiled ahead of time (must match aot.py).
+    pub batch_buckets: Vec<usize>,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            max_batch: 8,
+            batch_timeout_us: 2000,
+            queue_depth: 256,
+            workers: 2,
+            artifact_dir: "artifacts".to_string(),
+            batch_buckets: vec![1, 4, 8],
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Load from the minimal-TOML config format:
+    ///
+    /// ```toml
+    /// max_batch = 8
+    /// batch_timeout_us = 2000
+    /// queue_depth = 256
+    /// workers = 2
+    /// artifact_dir = "artifacts"
+    /// batch_buckets = [1, 4, 8]
+    /// ```
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let map = parse_toml(text)?;
+        let mut cfg = EngineConfig::default();
+        for (k, v) in &map {
+            match (k.as_str(), v) {
+                ("max_batch", TomlValue::Int(i)) => cfg.max_batch = *i as usize,
+                ("batch_timeout_us", TomlValue::Int(i)) => {
+                    cfg.batch_timeout_us = *i as u64
+                }
+                ("queue_depth", TomlValue::Int(i)) => {
+                    cfg.queue_depth = *i as usize
+                }
+                ("workers", TomlValue::Int(i)) => cfg.workers = *i as usize,
+                ("artifact_dir", TomlValue::Str(s)) => {
+                    cfg.artifact_dir = s.clone()
+                }
+                ("batch_buckets", TomlValue::IntList(xs)) => {
+                    cfg.batch_buckets =
+                        xs.iter().map(|&x| x as usize).collect()
+                }
+                (other, _) => {
+                    return Err(format!("unknown or mistyped key: {other}"))
+                }
+            }
+        }
+        if cfg.max_batch == 0 || cfg.workers == 0 || cfg.queue_depth == 0 {
+            return Err("max_batch, workers, queue_depth must be > 0".into());
+        }
+        if cfg.batch_buckets.is_empty() {
+            return Err("batch_buckets must be non-empty".into());
+        }
+        cfg.batch_buckets.sort_unstable();
+        Ok(cfg)
+    }
+
+    /// Smallest compiled bucket that fits `n` requests (else the largest).
+    pub fn bucket_for(&self, n: usize) -> usize {
+        *self
+            .batch_buckets
+            .iter()
+            .find(|&&b| b >= n)
+            .unwrap_or(self.batch_buckets.last().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        let t = table1();
+        assert_eq!(t.len(), 6);
+        assert_eq!(t[0].c_in, 1024);
+        assert_eq!(t[0].h_out(), 8);
+        assert_eq!(t[3].h_out(), 64);
+        assert_eq!(t[4].k, 4);
+        assert_eq!(t[4].h_out(), 16);
+        // layers chain
+        for w in dcgan_layers().windows(2) {
+            assert_eq!(w[0].h_out(), w[1].h);
+            assert_eq!(w[0].c_out, w[1].c_in);
+        }
+    }
+
+    #[test]
+    fn engine_config_from_toml() {
+        let cfg = EngineConfig::from_toml(
+            "max_batch = 16\nworkers = 4\nartifact_dir = \"a/b\"\n\
+             batch_buckets = [1, 2, 16]\n# comment\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.max_batch, 16);
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.artifact_dir, "a/b");
+        assert_eq!(cfg.batch_buckets, vec![1, 2, 16]);
+        // untouched field keeps default
+        assert_eq!(cfg.queue_depth, 256);
+    }
+
+    #[test]
+    fn engine_config_rejects_bad_keys() {
+        assert!(EngineConfig::from_toml("nope = 3").is_err());
+        assert!(EngineConfig::from_toml("workers = 0").is_err());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let cfg = EngineConfig::default();
+        assert_eq!(cfg.bucket_for(1), 1);
+        assert_eq!(cfg.bucket_for(2), 4);
+        assert_eq!(cfg.bucket_for(5), 8);
+        assert_eq!(cfg.bucket_for(99), 8);
+    }
+}

@@ -1,0 +1,128 @@
+//! Minimal TOML-subset parser (no external crates available).
+//!
+//! Supports exactly what the engine's config files need:
+//! `key = int | float | "string" | true/false | [int, int, ...]`,
+//! `#` comments, blank lines. No tables, no nesting — by design; config
+//! files stay flat and greppable.
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Bool(bool),
+    IntList(Vec<i64>),
+}
+
+/// Parse the subset; returns key/value pairs in file order.
+pub fn parse_toml(text: &str) -> Result<Vec<(String, TomlValue)>, String> {
+    let mut out = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        if key.is_empty()
+            || !key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+        {
+            return Err(format!("line {}: bad key {key:?}", lineno + 1));
+        }
+        out.push((key.to_string(), parse_value(val.trim(), lineno + 1)?));
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quotes is content, not a comment.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str, lineno: usize) -> Result<TomlValue, String> {
+    if v.is_empty() {
+        return Err(format!("line {lineno}: empty value"));
+    }
+    if let Some(body) = v.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| format!("line {lineno}: unterminated string"))?;
+        if body.contains('"') {
+            return Err(format!("line {lineno}: embedded quote"));
+        }
+        return Ok(TomlValue::Str(body.to_string()));
+    }
+    if let Some(body) = v.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| format!("line {lineno}: unterminated list"))?;
+        let mut xs = Vec::new();
+        for item in body.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            xs.push(item.parse::<i64>().map_err(|_| {
+                format!("line {lineno}: non-integer list item {item:?}")
+            })?);
+        }
+        return Ok(TomlValue::IntList(xs));
+    }
+    match v {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("line {lineno}: cannot parse value {v:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_types() {
+        let m = parse_toml(
+            "a = 3\nb = 2.5\nc = \"hi # there\"\nd = true\ne = [1, 2, 3]\n\
+             # full comment\n\nf = -7 # trailing\n",
+        )
+        .unwrap();
+        assert_eq!(m[0], ("a".into(), TomlValue::Int(3)));
+        assert_eq!(m[1], ("b".into(), TomlValue::Float(2.5)));
+        assert_eq!(m[2], ("c".into(), TomlValue::Str("hi # there".into())));
+        assert_eq!(m[3], ("d".into(), TomlValue::Bool(true)));
+        assert_eq!(m[4], ("e".into(), TomlValue::IntList(vec![1, 2, 3])));
+        assert_eq!(m[5], ("f".into(), TomlValue::Int(-7)));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_toml("novalue").is_err());
+        assert!(parse_toml("k = \"open").is_err());
+        assert!(parse_toml("k = [1, 2").is_err());
+        assert!(parse_toml("bad key = 1").is_err());
+        assert!(parse_toml("k = what").is_err());
+    }
+
+    #[test]
+    fn empty_ok() {
+        assert!(parse_toml("").unwrap().is_empty());
+        assert!(parse_toml("\n# only comments\n").unwrap().is_empty());
+    }
+}

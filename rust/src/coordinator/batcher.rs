@@ -1,0 +1,125 @@
+//! Dynamic batcher: fuse queued generation requests into one PJRT call.
+//!
+//! Policy (the standard serving trade-off): a batch closes when it
+//! reaches `max_batch` *or* `batch_timeout` has elapsed since its first
+//! request — bounded tail latency under light load, full batches under
+//! heavy load. The batch then routes to the smallest compiled batch
+//! bucket that fits (`EngineConfig::bucket_for`), padding with zero
+//! latents if needed.
+
+use std::time::{Duration, Instant};
+
+use super::queue::BoundedQueue;
+
+/// Collect the next batch from `q`.
+///
+/// Blocks for the first request; then keeps admitting until `max_batch`
+/// or `timeout` past the *first* request's arrival in the batch window.
+/// Returns `None` when the queue is closed and drained.
+pub fn next_batch<T>(q: &BoundedQueue<T>, max_batch: usize,
+                     timeout: Duration) -> Option<Vec<T>> {
+    debug_assert!(max_batch > 0);
+    let first = q.pop()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + timeout;
+    while batch.len() < max_batch {
+        match q.pop_until(deadline) {
+            Ok(Some(item)) => batch.push(item),
+            Ok(None) => break,          // window expired
+            Err(()) => break,           // closed; ship what we have
+        }
+    }
+    Some(batch)
+}
+
+/// Statistics helper: ideal batch sizes for an arrival trace — used by
+/// the serving bench to sanity-check the batcher against the theoretical
+/// optimum for a given (rate, timeout, max_batch).
+pub fn ideal_batches(arrivals_us: &[u64], max_batch: usize,
+                     timeout_us: u64) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < arrivals_us.len() {
+        let window_end = arrivals_us[i] + timeout_us;
+        let mut j = i + 1;
+        while j < arrivals_us.len()
+            && j - i < max_batch
+            && arrivals_us[j] <= window_end
+        {
+            j += 1;
+        }
+        out.push(j - i);
+        i = j;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn batches_up_to_max() {
+        let q = BoundedQueue::new(64);
+        for i in 0..10 {
+            q.try_push(i).unwrap();
+        }
+        let b = next_batch(&q, 4, Duration::from_millis(5)).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        let b = next_batch(&q, 4, Duration::from_millis(5)).unwrap();
+        assert_eq!(b, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn timeout_ships_partial_batch() {
+        let q = BoundedQueue::new(64);
+        q.try_push(1).unwrap();
+        let t0 = Instant::now();
+        let b = next_batch(&q, 8, Duration::from_millis(20)).unwrap();
+        assert_eq!(b, vec![1]);
+        assert!(t0.elapsed() >= Duration::from_millis(19));
+    }
+
+    #[test]
+    fn late_arrivals_join_within_window() {
+        let q = Arc::new(BoundedQueue::new(64));
+        q.try_push(1).unwrap();
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            q2.try_push(2).unwrap();
+        });
+        let b = next_batch(&q, 8, Duration::from_millis(50)).unwrap();
+        t.join().unwrap();
+        assert_eq!(b, vec![1, 2]);
+    }
+
+    #[test]
+    fn closed_queue_returns_none() {
+        let q: BoundedQueue<i32> = BoundedQueue::new(4);
+        q.close();
+        assert!(next_batch(&q, 4, Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn close_mid_window_ships_partial() {
+        let q = Arc::new(BoundedQueue::new(4));
+        q.try_push(7).unwrap();
+        let q2 = q.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            q2.close();
+        });
+        let b = next_batch(&q, 8, Duration::from_secs(5)).unwrap();
+        assert_eq!(b, vec![7]);
+    }
+
+    #[test]
+    fn ideal_batches_partition_trace() {
+        let arrivals = vec![0, 1, 2, 100, 101, 300];
+        let b = ideal_batches(&arrivals, 2, 10);
+        assert_eq!(b, vec![2, 1, 2, 1]);
+        assert_eq!(b.iter().sum::<usize>(), arrivals.len());
+    }
+}

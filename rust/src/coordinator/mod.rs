@@ -1,0 +1,29 @@
+//! Layer-3 coordinator: the HUGE² edge serving engine.
+//!
+//! Shape (vLLM-router-like, scaled to edge inference):
+//!
+//! ```text
+//!  clients ──submit──> [BoundedQueue]  (backpressure: reject when full)
+//!                          │
+//!                    [dynamic batcher]  (max_batch OR deadline)
+//!                          │
+//!                    [worker threads] ──> PJRT artifact / native engine
+//!                          │
+//!                      responses (+ latency, batch telemetry)
+//! ```
+//!
+//! * [`queue`] — bounded MPMC admission queue.
+//! * [`batcher`] — deadline/size batching policy.
+//! * [`router`] — model registry (PJRT artifacts or native generators).
+//! * [`worker`] — batch fusion, bucket padding, execution, reply scatter.
+//! * [`engine`] — the public facade.
+
+pub mod batcher;
+pub mod engine;
+pub mod queue;
+pub mod router;
+pub mod worker;
+
+pub use engine::Engine;
+pub use queue::{BoundedQueue, PushError};
+pub use router::{Backend, Model, Request, Response};

@@ -1,0 +1,203 @@
+//! Bounded MPMC queue with backpressure — the engine's admission point.
+//!
+//! Hand-rolled on `Mutex` + `Condvar` (no tokio in the vendor set).
+//! `try_push` never blocks: when the queue is full the request is
+//! *rejected* so an overloaded edge device sheds load instead of building
+//! an unbounded backlog (the coordinator's backpressure contract).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+#[derive(Debug)]
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded multi-producer / multi-consumer queue.
+#[derive(Debug)]
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+/// Why a push was refused.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    /// Queue at capacity — caller should shed load.
+    Full(T),
+    /// Queue closed — engine is shutting down.
+    Closed(T),
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        BoundedQueue {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Non-blocking push; rejects when full or closed.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed(item));
+        }
+        if g.items.len() >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; `None` when the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(x) = g.items.pop_front() {
+                return Some(x);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Pop with a deadline; `Ok(None)` on timeout.
+    pub fn pop_until(&self, deadline: Instant) -> Result<Option<T>, ()> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(x) = g.items.pop_front() {
+                return Ok(Some(x));
+            }
+            if g.closed {
+                return Err(());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            let (ng, res) = self
+                .not_empty
+                .wait_timeout(g, deadline - now)
+                .unwrap();
+            g = ng;
+            if res.timed_out() && g.items.is_empty() {
+                if g.closed {
+                    return Err(());
+                }
+                return Ok(None);
+            }
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        self.inner.lock().unwrap().items.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close: producers start failing, consumers drain then get `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::{Duration, Duration as D};
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.try_push(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn rejects_when_full() {
+        let q = BoundedQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.try_push(3), Err(PushError::Full(3)));
+        q.try_pop();
+        q.try_push(3).unwrap();
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = BoundedQueue::new(4);
+        q.try_push(1).unwrap();
+        q.close();
+        assert_eq!(q.try_push(2), Err(PushError::Closed(2)));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pop_until_times_out() {
+        let q: BoundedQueue<i32> = BoundedQueue::new(4);
+        let r = q.pop_until(Instant::now() + D::from_millis(10));
+        assert_eq!(r, Ok(None));
+    }
+
+    #[test]
+    fn cross_thread_handoff() {
+        let q = Arc::new(BoundedQueue::new(64));
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..1000 {
+                loop {
+                    match q2.try_push(i) {
+                        Ok(()) => break,
+                        Err(PushError::Full(_)) => std::thread::yield_now(),
+                        Err(PushError::Closed(_)) => panic!("closed"),
+                    }
+                }
+            }
+            q2.close();
+        });
+        let mut got = Vec::new();
+        while let Some(x) = q.pop() {
+            got.push(x);
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn wakes_blocked_consumer() {
+        let q = Arc::new(BoundedQueue::new(4));
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(Duration::from_millis(20));
+        q.try_push(42).unwrap();
+        assert_eq!(consumer.join().unwrap(), Some(42));
+    }
+}

@@ -1,0 +1,198 @@
+//! Model registry + request routing.
+//!
+//! A [`Model`] describes one servable generator: its latent geometry, its
+//! weights (owned by the engine — the AOT artifacts take weights as
+//! runtime inputs so one compiled module serves any checkpoint), and the
+//! batch buckets that were compiled ahead of time. The router maps a
+//! request's model name to the per-model queue.
+
+use anyhow::{bail, Result};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::gan::Generator;
+use crate::rng::Rng;
+use crate::runtime::RuntimeHandle;
+use crate::tensor::Tensor;
+
+/// One inference request: a latent (plus optional conditioning one-hot).
+pub struct Request {
+    pub id: u64,
+    pub z: Vec<f32>,
+    /// cGAN class one-hot (len == cond_dim) or empty.
+    pub cond: Vec<f32>,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// The generated image plus serving telemetry.
+pub struct Response {
+    pub id: u64,
+    /// `(1, H, W, C)` image in [-1, 1].
+    pub image: Tensor,
+    /// Queue wait + execution, from submit to reply.
+    pub latency: std::time::Duration,
+    /// Requests fused into the executing batch.
+    pub batch_size: usize,
+    /// Compiled bucket the batch ran in.
+    pub bucket: usize,
+}
+
+/// How a model executes.
+pub enum Backend {
+    /// AOT JAX/Pallas artifact through the PJRT runtime service (the
+    /// production path). Weights are bound in the service thread under
+    /// the model's name.
+    Pjrt(Arc<RuntimeHandle>),
+    /// Pure-Rust HUGE² engine (fallback / CPU-bench path).
+    Native(Arc<Generator>),
+}
+
+/// A servable generator.
+pub struct Model {
+    pub name: String,
+    /// Artifact name prefix; bucket `b` resolves to `{prefix}_b{b}`.
+    pub artifact_prefix: String,
+    pub z_dim: usize,
+    /// Conditioning one-hot width (0 = unconditional).
+    pub cond_dim: usize,
+    pub buckets: Vec<usize>,
+    pub backend: Backend,
+    /// Single-image output shape `(1, H, W, C)`.
+    pub out_shape: Vec<usize>,
+}
+
+impl Model {
+    /// Build a PJRT-served model from its manifest entry: weight shapes
+    /// are read from the bucket-1 artifact spec, seeded from `seed`
+    /// (DCGAN-style 0.02·N(0,1)) and bound resident in the runtime
+    /// service; `latent_inputs` is 1 for DCGAN (z) and 2 for cGAN
+    /// (z, one-hot).
+    pub fn from_artifacts(name: &str, prefix: &str,
+                          runtime: Arc<RuntimeHandle>,
+                          latent_inputs: usize, buckets: &[usize],
+                          seed: u64) -> Result<Self> {
+        let spec = runtime
+            .manifest()
+            .get(&format!("{prefix}_b{}", buckets[0]))?
+            .clone();
+        if spec.inputs.len() <= latent_inputs {
+            bail!("{prefix}: expected weight inputs after {latent_inputs} \
+                   latent inputs");
+        }
+        let z_dim = *spec.inputs[0].dims.last().unwrap();
+        let cond_dim = if latent_inputs == 2 {
+            *spec.inputs[1].dims.last().unwrap()
+        } else {
+            0
+        };
+        let mut rng = Rng::new(seed);
+        let weights: Vec<Tensor> = spec.inputs[latent_inputs..]
+            .iter()
+            .map(|ts| Tensor::randn(&ts.dims, &mut rng).scale(0.02))
+            .collect();
+        runtime.bind(name, weights)?;
+        // pre-compile every bucket so first requests don't pay XLA compile
+        for b in buckets {
+            runtime.warm(&format!("{prefix}_b{b}"))?;
+        }
+        let out_dims = &spec.outputs[0].dims;
+        let out_shape = vec![1, out_dims[1], out_dims[2], out_dims[3]];
+        Ok(Model {
+            name: name.to_string(),
+            artifact_prefix: prefix.to_string(),
+            z_dim,
+            cond_dim,
+            buckets: buckets.to_vec(),
+            backend: Backend::Pjrt(runtime),
+            out_shape,
+        })
+    }
+
+    /// Build a natively-served model (pure-Rust HUGE² engine).
+    pub fn native(name: &str, gen: Arc<Generator>, cond_dim: usize) -> Self {
+        let out = gen.out_shape(1);
+        let z_total = gen.proj.shape()[0];
+        Model {
+            name: name.to_string(),
+            artifact_prefix: String::new(),
+            z_dim: z_total - cond_dim,
+            cond_dim,
+            buckets: vec![usize::MAX], // native path takes any batch size
+            backend: Backend::Native(gen),
+            out_shape: out,
+        }
+    }
+
+    /// Smallest compiled bucket that fits `n` (native: exactly `n`).
+    pub fn bucket_for(&self, n: usize) -> usize {
+        if matches!(self.backend, Backend::Native(_)) {
+            return n;
+        }
+        *self
+            .buckets
+            .iter()
+            .find(|&&b| b >= n)
+            .unwrap_or_else(|| self.buckets.last().unwrap())
+    }
+
+    /// Validate a request against the model's latent geometry.
+    pub fn validate(&self, z: &[f32], cond: &[f32]) -> Result<()> {
+        if z.len() != self.z_dim {
+            bail!("{}: z has {} dims, model wants {}", self.name, z.len(),
+                  self.z_dim);
+        }
+        if cond.len() != self.cond_dim {
+            bail!("{}: cond has {} dims, model wants {}", self.name,
+                  cond.len(), self.cond_dim);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::cgan_layers;
+
+    fn tiny_native() -> Model {
+        let mut rng = Rng::new(1);
+        let gen = Generator::new(cgan_layers(), 8, 2, &mut rng);
+        Model::native("tiny", Arc::new(gen), 2)
+    }
+
+    #[test]
+    fn native_model_geometry() {
+        let m = tiny_native();
+        assert_eq!(m.z_dim, 8);
+        assert_eq!(m.cond_dim, 2);
+        assert_eq!(m.out_shape, vec![1, 32, 32, 3]);
+        assert_eq!(m.bucket_for(5), 5);
+    }
+
+    #[test]
+    fn validate_rejects_bad_latents() {
+        let m = tiny_native();
+        assert!(m.validate(&[0.0; 8], &[0.0; 2]).is_ok());
+        assert!(m.validate(&[0.0; 7], &[0.0; 2]).is_err());
+        assert!(m.validate(&[0.0; 8], &[]).is_err());
+    }
+
+    #[test]
+    fn pjrt_model_from_manifest() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            return;
+        }
+        let rt = Arc::new(RuntimeHandle::spawn(dir).unwrap());
+        let m = Model::from_artifacts("dcgan", "dcgan_gen", rt, 1,
+                                      &[1, 4], 42).unwrap();
+        assert_eq!(m.z_dim, 100);
+        assert_eq!(m.cond_dim, 0);
+        assert_eq!(m.out_shape, vec![1, 64, 64, 3]);
+        assert_eq!(m.bucket_for(2), 4);
+        assert_eq!(m.bucket_for(100), 4);
+    }
+}

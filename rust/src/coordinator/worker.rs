@@ -1,0 +1,159 @@
+//! Batch execution: fuse a batch of requests into one forward pass (PJRT
+//! artifact call or native engine call), then scatter replies.
+
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::gan::Engine as NativeEngine;
+use crate::tensor::Tensor;
+
+use super::router::{Backend, Model, Request, Response};
+
+/// Execute one batch on its model and reply to every requester.
+///
+/// The batch is padded with zero latents up to the compiled bucket size;
+/// padded outputs are discarded. Reply sends ignore disconnected
+/// receivers (a client that timed out and dropped its channel).
+/// `before_reply` runs after execution but before any reply is sent, so
+/// engine counters are consistent the moment a client observes a result.
+pub fn execute_batch(model: &Model, batch: Vec<Request>,
+                     before_reply: impl FnOnce(usize)) -> Result<usize> {
+    let n = batch.len();
+    let bucket = model.bucket_for(n);
+    let out = run_forward(model, &batch, bucket)?;
+    before_reply(n);
+    let (_, h, w, c) = out.dims4();
+    let img_elems = h * w * c;
+    for (i, req) in batch.into_iter().enumerate() {
+        let data =
+            out.data()[i * img_elems..(i + 1) * img_elems].to_vec();
+        let image = Tensor::from_vec(&[1, h, w, c], data);
+        let _ = req.reply.send(Response {
+            id: req.id,
+            image,
+            latency: req.enqueued.elapsed(),
+            batch_size: n,
+            bucket,
+        });
+    }
+    Ok(bucket)
+}
+
+/// One fused forward pass at `bucket` batch size.
+fn run_forward(model: &Model, batch: &[Request], bucket: usize)
+               -> Result<Tensor> {
+    let n = batch.len();
+    debug_assert!(bucket >= n || matches!(model.backend,
+                                          Backend::Pjrt(_)));
+    // If even the largest bucket is smaller than the batch, split.
+    if bucket < n {
+        let mut parts: Vec<Tensor> = Vec::new();
+        for chunk in batch.chunks(bucket) {
+            parts.push(run_forward(model, chunk, bucket)?);
+        }
+        // concatenate along batch dim
+        let (_, h, w, c) = parts[0].dims4();
+        let mut data = Vec::with_capacity(n * h * w * c);
+        for (ci, p) in parts.iter().enumerate() {
+            let take = (n - ci * bucket).min(bucket);
+            data.extend_from_slice(&p.data()[..take * h * w * c]);
+        }
+        return Ok(Tensor::from_vec(&[n, h, w, c], data));
+    }
+
+    // Gather latents, zero-padded to the bucket.
+    let mut z = vec![0.0f32; bucket * model.z_dim];
+    for (i, r) in batch.iter().enumerate() {
+        z[i * model.z_dim..(i + 1) * model.z_dim].copy_from_slice(&r.z);
+    }
+    let zt = Tensor::from_vec(&[bucket, model.z_dim], z);
+    let cond = if model.cond_dim > 0 {
+        let mut y = vec![0.0f32; bucket * model.cond_dim];
+        for (i, r) in batch.iter().enumerate() {
+            y[i * model.cond_dim..(i + 1) * model.cond_dim]
+                .copy_from_slice(&r.cond);
+        }
+        Some(Tensor::from_vec(&[bucket, model.cond_dim], y))
+    } else {
+        None
+    };
+
+    match &model.backend {
+        Backend::Pjrt(rt) => {
+            let name = format!("{}_b{bucket}", model.artifact_prefix);
+            let mut inputs: Vec<Tensor> = vec![zt];
+            if let Some(c) = cond {
+                inputs.push(c);
+            }
+            // weights are bound resident in the runtime service
+            let outs = rt.run_bound(&name, inputs, &model.name)?;
+            outs.into_iter()
+                .next()
+                .ok_or_else(|| anyhow!("{name}: no output"))
+        }
+        Backend::Native(gen) => {
+            // native path concatenates conditioning onto z
+            let zin = match &cond {
+                None => zt,
+                Some(c) => {
+                    let zd = model.z_dim + model.cond_dim;
+                    let mut data = vec![0.0f32; bucket * zd];
+                    for i in 0..bucket {
+                        data[i * zd..i * zd + model.z_dim].copy_from_slice(
+                            &zt.data()[i * model.z_dim
+                                ..(i + 1) * model.z_dim]);
+                        data[i * zd + model.z_dim..(i + 1) * zd]
+                            .copy_from_slice(
+                                &c.data()[i * model.cond_dim
+                                    ..(i + 1) * model.cond_dim]);
+                    }
+                    Tensor::from_vec(&[bucket, zd], data)
+                }
+            };
+            Ok(gen.forward(&zin, NativeEngine::Huge2))
+        }
+    }
+}
+
+/// Spawn `count` worker threads draining `queue` for `model`.
+pub fn spawn_workers(
+    model: Arc<Model>,
+    queue: Arc<super::queue::BoundedQueue<Request>>,
+    cfg: crate::config::EngineConfig,
+    counters: Arc<crate::metrics::Counters>,
+    hist: Arc<crate::metrics::Histogram>,
+    count: usize,
+) -> Vec<std::thread::JoinHandle<()>> {
+    (0..count)
+        .map(|_| {
+            let model = model.clone();
+            let queue = queue.clone();
+            let counters = counters.clone();
+            let hist = hist.clone();
+            let timeout =
+                std::time::Duration::from_micros(cfg.batch_timeout_us);
+            let max_batch = cfg.max_batch;
+            std::thread::spawn(move || {
+                while let Some(batch) =
+                    super::batcher::next_batch(&queue, max_batch, timeout)
+                {
+                    let t0 = Instant::now();
+                    let res = execute_batch(&model, batch, |n| {
+                        use std::sync::atomic::Ordering::Relaxed;
+                        counters.batches.fetch_add(1, Relaxed);
+                        counters.batched_requests.fetch_add(n as u64,
+                                                            Relaxed);
+                        counters.completed.fetch_add(n as u64, Relaxed);
+                        hist.record(t0.elapsed());
+                    });
+                    if let Err(e) = res {
+                        // batch dropped; requesters see a closed channel
+                        eprintln!("[worker:{}] batch failed: {e:#}",
+                                  model.name);
+                    }
+                }
+            })
+        })
+        .collect()
+}

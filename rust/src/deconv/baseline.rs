@@ -1,0 +1,164 @@
+//! The DarkNet-style naive baseline (the algorithm Fig. 7/8 compare
+//! against): zero-inflate the input, then run a dense standard convolution
+//! via im2col + GEMM.
+//!
+//! Every inserted zero is materialised, copied into the column matrix and
+//! multiplied — at stride 2 roughly 3/4 of the inflated tensor is zeros,
+//! so ~75 % of MACs and column-matrix traffic is waste. This is faithful
+//! to DarkNet's `forward_deconvolutional_layer` cost model (GEMM over the
+//! full inflated geometry; DarkNet phrases it as GEMM+col2im, which touches
+//! the same bytes in the adjoint order).
+
+use crate::gemm::sgemm;
+use crate::im2col::im2col;
+use crate::tensor::Tensor;
+
+use super::{DeconvParams, DilatedParams};
+
+/// Materialise the zero-inflated, asymmetrically padded input tensor
+/// (`Î` in the paper): zeros between every pair of rows/cols plus the
+/// `(r-1-pad, r-1-pad+out_pad)` border.
+pub fn inflate(x: &Tensor, r: usize, s: usize, p: &DeconvParams) -> Tensor {
+    let (b, h, w, c) = x.dims4();
+    let st = p.stride;
+    let ih = (h - 1) * st + 1;
+    let iw = (w - 1) * st + 1;
+    let (lo_h, hi_h) = p.inflate_pad(r);
+    let (lo_w, hi_w) = p.inflate_pad(s);
+    let mut out = Tensor::zeros(&[b, ih + lo_h + hi_h, iw + lo_w + hi_w, c]);
+    let wo = iw + lo_w + hi_w;
+    let xd = x.data();
+    let od = out.data_mut();
+    for bi in 0..b {
+        for hi in 0..h {
+            for wi in 0..w {
+                let src = ((bi * h + hi) * w + wi) * c;
+                let dst = ((bi * (ih + lo_h + hi_h) + lo_h + hi * st) * wo
+                    + lo_w + wi * st) * c;
+                od[dst..dst + c].copy_from_slice(&xd[src..src + c]);
+            }
+        }
+    }
+    out
+}
+
+/// Naive transposed convolution: inflate → im2col → GEMM.
+///
+/// `x`: NHWC `(B,H,W,C)`; `k`: HWIO `(R,S,C,N)`; output `(B,Ho,Wo,N)`.
+pub fn conv2d_transpose(x: &Tensor, k: &Tensor, p: &DeconvParams) -> Tensor {
+    let (b, h, w, _c) = x.dims4();
+    let (r, s, kc, n) = k.dims4();
+    let ho = p.out_size(h, r);
+    let wo = p.out_size(w, s);
+    let inflated = inflate(x, r, s, p);
+    let (_, ih, iw, _) = inflated.dims4();
+    let mut out = Tensor::zeros(&[b, ho, wo, n]);
+    let kmat = k.data(); // (R*S*C, N) row-major — exactly HWIO flattened
+    for bi in 0..b {
+        let img = Tensor::from_vec(
+            &[1, ih, iw, inflated.shape()[3]],
+            inflated.data()[bi * ih * iw * kc..(bi + 1) * ih * iw * kc]
+                .to_vec(),
+        );
+        let (col, oh2, ow2) = im2col(&img, r, s, 1, 0);
+        debug_assert_eq!((oh2, ow2), (ho, wo));
+        let dst = &mut out.data_mut()[bi * ho * wo * n..(bi + 1) * ho * wo * n];
+        sgemm(ho * wo, n, r * s * kc, col.data(), kmat, dst, false);
+    }
+    out
+}
+
+/// Naive standard convolution (im2col + GEMM) — used by the discriminator
+/// forward and as the substrate of the naive dilated path.
+pub fn conv2d(x: &Tensor, k: &Tensor, stride: usize, pad: usize) -> Tensor {
+    let (b, h, w, c) = x.dims4();
+    let (r, s, kc, n) = k.dims4();
+    assert_eq!(c, kc, "channel mismatch");
+    let ho = (h + 2 * pad - r) / stride + 1;
+    let wo = (w + 2 * pad - s) / stride + 1;
+    let mut out = Tensor::zeros(&[b, ho, wo, n]);
+    for bi in 0..b {
+        let img = Tensor::from_vec(
+            &[1, h, w, c],
+            x.data()[bi * h * w * c..(bi + 1) * h * w * c].to_vec(),
+        );
+        let (col, _, _) = im2col(&img, r, s, stride, pad);
+        let dst = &mut out.data_mut()[bi * ho * wo * n..(bi + 1) * ho * wo * n];
+        sgemm(ho * wo, n, r * s * c, col.data(), k.data(), dst, false);
+    }
+    out
+}
+
+/// Naive dilated convolution: materialise the zero-dilated kernel, then a
+/// dense standard convolution over it (paper Alg. 2 as implemented by
+/// engines without atrous support).
+pub fn conv2d_dilated(x: &Tensor, k: &Tensor, p: &DilatedParams) -> Tensor {
+    let (r, s, c, n) = k.dims4();
+    let d = p.dilation;
+    let er = (r - 1) * d + 1;
+    let es = (s - 1) * d + 1;
+    let mut dk = Tensor::zeros(&[er, es, c, n]);
+    for m in 0..r {
+        for nn in 0..s {
+            for ci in 0..c {
+                for ni in 0..n {
+                    let v = k.at(&[m, nn, ci, ni]);
+                    dk.set(&[m * d, nn * d, ci, ni], v);
+                }
+            }
+        }
+    }
+    conv2d(x, &dk, p.stride, p.pad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn inflate_geometry_dcgan() {
+        let x = Tensor::full(&[1, 4, 4, 2], 1.0);
+        let p = DeconvParams::new(2, 2, 1);
+        let inf = inflate(&x, 5, 5, &p);
+        // core 7 + pads (2,3) = 12
+        assert_eq!(inf.shape(), &[1, 12, 12, 2]);
+        let nz = inf.data().iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(nz, 16 * 2); // only the 16 real elements survive
+        assert_eq!(inf.at(&[0, 2, 2, 0]), 1.0); // first real elem at (lo, lo)
+    }
+
+    #[test]
+    fn identity_kernel_upsamples() {
+        // 1x1 kernel * stride 2: output is the zero-inflated input
+        let mut rng = Rng::new(4);
+        let x = Tensor::randn(&[1, 3, 3, 1], &mut rng);
+        let k = Tensor::full(&[1, 1, 1, 1], 1.0);
+        let p = DeconvParams::new(2, 0, 1);
+        let y = conv2d_transpose(&x, &k, &p);
+        assert_eq!(y.shape(), &[1, 6, 6, 1]);
+        assert_eq!(y.at(&[0, 0, 0, 0]), x.at(&[0, 0, 0, 0]));
+        assert_eq!(y.at(&[0, 2, 4, 0]), x.at(&[0, 1, 2, 0]));
+        assert_eq!(y.at(&[0, 1, 1, 0]), 0.0);
+    }
+
+    #[test]
+    fn conv2d_known_values() {
+        // all-ones 2x2 input, all-ones 2x2 kernel, valid: single output 4
+        let x = Tensor::full(&[1, 2, 2, 1], 1.0);
+        let k = Tensor::full(&[2, 2, 1, 1], 1.0);
+        let y = conv2d(&x, &k, 1, 0);
+        assert_eq!(y.shape(), &[1, 1, 1, 1]);
+        assert_eq!(y.at(&[0, 0, 0, 0]), 4.0);
+    }
+
+    #[test]
+    fn dilated_equals_bigger_dense_kernel() {
+        let mut rng = Rng::new(5);
+        let x = Tensor::randn(&[1, 7, 7, 2], &mut rng);
+        let k = Tensor::randn(&[3, 3, 2, 2], &mut rng);
+        let p = DilatedParams::new(2, 1, 0);
+        let y = conv2d_dilated(&x, &k, &p);
+        assert_eq!(y.shape(), &[1, 3, 3, 2]);
+    }
+}

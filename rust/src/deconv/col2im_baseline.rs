@@ -1,0 +1,161 @@
+//! Second baseline: the **output-side (col2im) formulation** — what
+//! DarkNet's `forward_deconvolutional_layer` literally does:
+//!
+//! ```text
+//! col(R·S·N, H·W) = Kᵀ(R·S·N, C) · X(C, H·W)      (one GEMM per image)
+//! O += col2im(col)                                  (overlapped scatter)
+//! ```
+//!
+//! Unlike the zero-insertion baseline it performs **no** wasted zero-MACs
+//! (its GEMM is over the real input only) — its costs are the col-matrix
+//! materialisation and, crucially, the *overlapped accumulation scatter*
+//! the paper's §2.2 "Reverse Looping and Overlapping" discussion targets:
+//! chained read-modify-writes to the same output locations, which
+//! serialise on parallel hardware and defeat write-coalescing.
+//!
+//! Having both baselines makes the ablation exact:
+//! * zero-insertion baseline → measures the *zero-skipping* win,
+//! * col2im baseline        → measures the *scatter/locality* win.
+
+use crate::gemm::sgemm;
+use crate::tensor::Tensor;
+
+use super::DeconvParams;
+
+/// DarkNet-style transposed convolution: GEMM then col2im scatter-add.
+///
+/// `x`: NHWC `(B,H,W,C)`; `k`: HWIO `(R,S,C,N)`; output `(B,Ho,Wo,N)`.
+/// Numerically identical to the other two engines.
+pub fn conv2d_transpose(x: &Tensor, k: &Tensor, p: &DeconvParams) -> Tensor {
+    let (b, h, w, c) = x.dims4();
+    let (r, s, kc, n) = k.dims4();
+    assert_eq!(c, kc);
+    let ho = p.out_size(h, r);
+    let wo = p.out_size(w, s);
+    let (lo_h, _) = p.inflate_pad(r);
+    let (lo_w, _) = p.inflate_pad(s);
+    let st = p.stride;
+
+    // Kᵀ: (R·S·N, C) — reorganised once (model-load cost, same treatment
+    // as HUGE²'s decomposition).
+    let mut kt = vec![0.0f32; r * s * n * c];
+    for m in 0..r {
+        for nn in 0..s {
+            for ci in 0..c {
+                for j in 0..n {
+                    kt[((m * s + nn) * n + j) * c + ci] =
+                        k.data()[((m * s + nn) * c + ci) * n + j];
+                }
+            }
+        }
+    }
+
+    let mut out = Tensor::zeros(&[b, ho, wo, n]);
+    let mut col = vec![0.0f32; r * s * n * h * w];
+    // Xᵀ buffer: (C, H·W) per image.
+    let mut xt = vec![0.0f32; c * h * w];
+    for bi in 0..b {
+        let img = &x.data()[bi * h * w * c..(bi + 1) * h * w * c];
+        for pix in 0..h * w {
+            for ci in 0..c {
+                xt[ci * h * w + pix] = img[pix * c + ci];
+            }
+        }
+        // col(R·S·N, H·W) = Kᵀ · X
+        sgemm(r * s * n, h * w, c, &kt, &xt, &mut col, false);
+        // col2im: overlapped scatter-add into the output
+        let od = &mut out.data_mut()[bi * ho * wo * n
+            ..(bi + 1) * ho * wo * n];
+        for m in 0..r {
+            for nn in 0..s {
+                for j in 0..n {
+                    let crow = &col[((m * s + nn) * n + j) * h * w..]
+                        [..h * w];
+                    for iy in 0..h {
+                        // input row iy sits at inflated position
+                        // lo + iy·st; tap m reads it into output row
+                        // y = (lo + iy·st) − m
+                        let oy = iy as isize * st as isize + lo_h as isize
+                            - m as isize;
+                        if oy < 0 || oy as usize >= ho {
+                            continue;
+                        }
+                        for ix in 0..w {
+                            let ox = ix as isize * st as isize
+                                + lo_w as isize - nn as isize;
+                            if ox < 0 || ox as usize >= wo {
+                                continue;
+                            }
+                            od[((oy as usize) * wo + ox as usize) * n + j]
+                                += crow[iy * w + ix];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Cost accounting for the ablation: (MACs, scatter-adds).
+pub fn costs(h: usize, w: usize, c: usize, n: usize, r: usize, s: usize)
+             -> (u64, u64) {
+    ((r * s * n * h * w * c) as u64, (r * s * n * h * w) as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::deconv::{baseline, huge2};
+    use crate::rng::Rng;
+
+    fn check(h: usize, c: usize, n: usize, r: usize, p: DeconvParams,
+             seed: u64) {
+        let mut rng = Rng::new(seed);
+        let x = Tensor::randn(&[1, h, h, c], &mut rng);
+        let k = Tensor::randn(&[r, r, c, n], &mut rng);
+        let want = baseline::conv2d_transpose(&x, &k, &p);
+        let got = conv2d_transpose(&x, &k, &p);
+        assert_eq!(got.shape(), want.shape());
+        assert!(got.allclose(&want, 1e-3),
+                "h={h} c={c} n={n} r={r} {p:?} diff={}",
+                got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn matches_other_engines_dcgan() {
+        check(4, 16, 8, 5, DeconvParams::new(2, 2, 1), 31);
+        check(8, 8, 4, 5, DeconvParams::new(2, 2, 1), 32);
+    }
+
+    #[test]
+    fn matches_other_engines_cgan_and_strides() {
+        check(8, 8, 4, 4, DeconvParams::new(2, 1, 0), 33);
+        check(5, 3, 2, 5, DeconvParams::new(3, 2, 1), 34);
+        check(3, 2, 2, 3, DeconvParams::new(2, 0, 0), 35);
+    }
+
+    #[test]
+    fn batch() {
+        let mut rng = Rng::new(36);
+        let p = DeconvParams::new(2, 2, 1);
+        let x = Tensor::randn(&[3, 4, 4, 6], &mut rng);
+        let k = Tensor::randn(&[5, 5, 6, 4], &mut rng);
+        let a = conv2d_transpose(&x, &k, &p);
+        let b = huge2::conv2d_transpose(&x, &k, &p);
+        assert!(a.allclose(&b, 1e-3));
+    }
+
+    #[test]
+    fn no_zero_macs_by_construction() {
+        // the col2im baseline's GEMM MAC count equals HUGE2's effective
+        // count (both skip zeros) — its cost is the scatter, not the MACs
+        let (macs, scatters) = costs(16, 16, 256, 128, 5, 5);
+        let p = DeconvParams::new(2, 2, 1);
+        let (_, eff) = huge2::mac_counts(16, 16, 256, 128, 5, 5, &p);
+        // col2im does r·s·n·h·w·c; huge2 does ho·wo/4·r·s·c·n ≈ same
+        assert!((macs as f64 / eff as f64 - 1.0).abs() < 0.35,
+                "macs {macs} vs eff {eff}");
+        assert!(scatters > 0);
+    }
+}

@@ -1,0 +1,135 @@
+//! HUGE² dilated (atrous) convolution — untangling without kernel
+//! inflation (paper §3.2.2).
+//!
+//! Each of the `R·S` real taps reads a stride-strided view of the input
+//! and contributes one `(Wo, C) @ (C, N)` GEMM per output row; the view's
+//! element stride is `stride·C`, which [`crate::gemm::sgemm_strided`]
+//! absorbs during packing — still zero copies.
+
+use crate::gemm::sgemm_strided;
+use crate::tensor::Tensor;
+
+use super::DilatedParams;
+
+/// HUGE² dilated convolution. `x`: NHWC; `k`: HWIO `(R,S,C,N)`.
+/// Numerically identical to [`super::baseline::conv2d_dilated`].
+pub fn conv2d_dilated(x: &Tensor, k: &Tensor, p: &DilatedParams) -> Tensor {
+    let (b, h, w, c) = x.dims4();
+    let (r, s, kc, n) = k.dims4();
+    assert_eq!(c, kc);
+    let ho = p.out_size(h, r);
+    let wo = p.out_size(w, s);
+    let xp = x.pad_spatial(p.pad, p.pad, p.pad, p.pad);
+    let (_, hp, wp, _) = xp.dims4();
+    let mut out = Tensor::zeros(&[b, ho, wo, n]);
+
+    for bi in 0..b {
+        let img = &xp.data()[bi * hp * wp * c..(bi + 1) * hp * wp * c];
+        let od = &mut out.data_mut()[bi * ho * wo * n..(bi + 1) * ho * wo * n];
+        // Tap loops outer so the (C, N) tap weights stay cache-resident
+        // across all output rows (same reuse order as the transposed path).
+        for t_r in 0..r {
+            for t_c in 0..s {
+                let wslice = &k.data()[(t_r * s + t_c) * c * n
+                    ..(t_r * s + t_c + 1) * c * n];
+                let ix0 = t_c * p.dilation;
+                for oy in 0..ho {
+                    let dst = &mut od[oy * wo * n..(oy + 1) * wo * n];
+                    let iy = oy * p.stride + t_r * p.dilation;
+                    let a0 = (iy * wp + ix0) * c;
+                    // A: (wo, C) view, element row stride = stride·C
+                    let lda = p.stride * c;
+                    let a_len = (wo - 1) * lda + c;
+                    let a = &img[a0..a0 + a_len];
+                    sgemm_strided(wo, n, c, a, lda, wslice, dst, true);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// MAC counts: naive (dense over the dilated kernel extent) vs untangled.
+pub fn mac_counts(h: usize, w: usize, c: usize, n: usize, r: usize,
+                  s: usize, p: &DilatedParams) -> (u64, u64) {
+    let ho = p.out_size(h, r);
+    let wo = p.out_size(w, s);
+    let er = p.eff_kernel(r);
+    let es = p.eff_kernel(s);
+    let naive = (ho * wo * er * es * c * n) as u64;
+    let eff = (ho * wo * r * s * c * n) as u64;
+    (naive, eff)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::deconv::baseline;
+    use crate::rng::Rng;
+
+    fn roundtrip(h: usize, c: usize, n: usize, r: usize, p: DilatedParams,
+                 seed: u64) {
+        let mut rng = Rng::new(seed);
+        let x = Tensor::randn(&[1, h, h, c], &mut rng);
+        let k = Tensor::randn(&[r, r, c, n], &mut rng);
+        let want = baseline::conv2d_dilated(&x, &k, &p);
+        let got = conv2d_dilated(&x, &k, &p);
+        assert_eq!(got.shape(), want.shape());
+        assert!(got.allclose(&want, 1e-4),
+                "h={h} c={c} n={n} r={r} {p:?} diff={}",
+                got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn same_padding() {
+        roundtrip(13, 4, 3, 3, DilatedParams::new(2, 1, 2), 1);
+        roundtrip(13, 4, 3, 3, DilatedParams::new(4, 1, 4), 2);
+    }
+
+    #[test]
+    fn valid_padding() {
+        roundtrip(9, 2, 2, 3, DilatedParams::new(2, 1, 0), 3);
+    }
+
+    #[test]
+    fn strided() {
+        roundtrip(13, 3, 2, 3, DilatedParams::new(2, 2, 2), 4);
+        roundtrip(17, 2, 2, 3, DilatedParams::new(3, 2, 3), 5);
+    }
+
+    #[test]
+    fn dilation_one_is_standard_conv() {
+        let mut rng = Rng::new(6);
+        let x = Tensor::randn(&[1, 8, 8, 3], &mut rng);
+        let k = Tensor::randn(&[3, 3, 3, 2], &mut rng);
+        let p = DilatedParams::new(1, 1, 1);
+        let got = conv2d_dilated(&x, &k, &p);
+        let want = baseline::conv2d(&x, &k, 1, 1);
+        assert!(got.allclose(&want, 1e-4));
+    }
+
+    #[test]
+    fn depthwise_outer_product_case() {
+        // paper 3.2.3: C=1 dilated conv is an outer product of vectors
+        roundtrip(7, 1, 1, 3, DilatedParams::new(2, 1, 0), 7);
+    }
+
+    #[test]
+    fn batch() {
+        let mut rng = Rng::new(8);
+        let p = DilatedParams::new(2, 1, 2);
+        let x = Tensor::randn(&[2, 9, 9, 3], &mut rng);
+        let k = Tensor::randn(&[3, 3, 3, 4], &mut rng);
+        let got = conv2d_dilated(&x, &k, &p);
+        let want = baseline::conv2d_dilated(&x, &k, &p);
+        assert!(got.allclose(&want, 1e-4));
+    }
+
+    #[test]
+    fn mac_ratio_is_dilation_squared() {
+        let p = DilatedParams::new(2, 1, 2);
+        let (naive, eff) = mac_counts(16, 16, 8, 8, 3, 3, &p);
+        // (5*5)/(3*3) ≈ 2.78
+        assert!((naive as f64 / eff as f64 - 25.0 / 9.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,242 @@
+//! GAN-training gradients (paper §3.2.3 and Fig. 6 right).
+//!
+//! * **Discriminator weight gradient** — the derivative maps act as a
+//!   stride-dilated kernel convolving the input:
+//!   `dK[m,n,c,j] = Σ_{oh,ow} X[m+oh·st-pad, n+ow·st-pad, c]·dY[oh,ow,j]`.
+//!   Untangled, each of the `R·S` taps is a `(C,N) += Xᵀ·dY` GEMM
+//!   ([`crate::gemm::sgemm_at`]). The naive variant materialises the
+//!   zero-dilated derivative kernel first (what the baseline engine does).
+//! * **Generator input gradient** — a transposed convolution of `dY` with
+//!   the flipped kernel, so it reuses the Fig.-7 engines directly; both
+//!   variants exposed for the Fig.-8-right bench.
+
+use crate::gemm::sgemm_at;
+use crate::tensor::Tensor;
+
+use super::{baseline, huge2, DeconvParams};
+
+/// Untangled (HUGE²) discriminator weight gradient.
+///
+/// `x`: `(B,H,W,C)` forward input; `dy`: `(B,Oh,Ow,N)` derivative maps of
+/// a forward conv with kernel `(r,s,C,N)`, stride `st`, pad `pad`.
+/// Returns `dk`: `(r,s,C,N)`.
+pub fn weight_grad_huge2(x: &Tensor, dy: &Tensor, r: usize, s: usize,
+                         stride: usize, pad: usize) -> Tensor {
+    let (b, _h, _w, c) = x.dims4();
+    let (b2, oh, ow, n) = dy.dims4();
+    assert_eq!(b, b2);
+    let xp = x.pad_spatial(pad, pad, pad, pad);
+    let (_, hp, wp, _) = xp.dims4();
+    let mut dk = Tensor::zeros(&[r, s, c, n]);
+
+    for bi in 0..b {
+        let img = &xp.data()[bi * hp * wp * c..(bi + 1) * hp * wp * c];
+        let dyb = &dy.data()[bi * oh * ow * n..(bi + 1) * oh * ow * n];
+        for m in 0..r {
+            for nn in 0..s {
+                let dst = &mut dk.data_mut()[(m * s + nn) * c * n
+                    ..(m * s + nn + 1) * c * n];
+                // Accumulate over output rows: each row is a
+                // (C,N) += Xᵀ(C,Ow)·dY(Ow,N) rank-Ow update.
+                for oy in 0..oh {
+                    let iy = m + oy * stride;
+                    let ix0 = nn;
+                    let a0 = (iy * wp + ix0) * c;
+                    let lda = stride * c;
+                    let a_len = (ow - 1) * lda + c;
+                    let a = &img[a0..a0 + a_len];
+                    let brow = &dyb[oy * ow * n..(oy + 1) * ow * n];
+                    sgemm_at(ow, n, c, a, lda, brow, dst, true);
+                }
+            }
+        }
+    }
+    dk
+}
+
+/// Naive discriminator weight gradient: materialise the stride-dilated
+/// derivative maps as kernels (zeros included), im2col the input over the
+/// *full dilated extent*, and run one dense GEMM — the DarkNet-style
+/// baseline cost model of Fig. 8 right (step 3 of Fig. 6). It uses the
+/// same GEMM core as HUGE², so the measured ratio isolates the wasted
+/// zero-MACs + materialisation traffic, not GEMM quality.
+pub fn weight_grad_baseline(x: &Tensor, dy: &Tensor, r: usize, s: usize,
+                            stride: usize, pad: usize) -> Tensor {
+    use crate::gemm::sgemm;
+    let (b, _h, _w, c) = x.dims4();
+    let (_, oh, ow, n) = dy.dims4();
+    // Dilate dy into an ((oh-1)*st+1) square kernel per (b, j).
+    let er = (oh - 1) * stride + 1;
+    let es = (ow - 1) * stride + 1;
+    let mut dk = Tensor::zeros(&[r, s, c, n]);
+    let xp = x.pad_spatial(pad, pad, pad, pad);
+    let (_, hp, wp, _) = xp.dims4();
+    let mut dker = vec![0.0f32; er * es * n];
+    // col matrix: one row per (m, nn, ci) over the full dilated window
+    let mut col = vec![0.0f32; r * s * c * er * es];
+    for bi in 0..b {
+        // dilated derivative kernel, materialised with its zeros
+        dker.fill(0.0);
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for j in 0..n {
+                    dker[((oy * stride) * es + ox * stride) * n + j] =
+                        dy.at(&[bi, oy, ox, j]);
+                }
+            }
+        }
+        // im2col over the dilated extent (zeros and all)
+        let img = &xp.data()[bi * hp * wp * c..(bi + 1) * hp * wp * c];
+        col.fill(0.0);
+        for m in 0..r {
+            for nn in 0..s {
+                for ci in 0..c {
+                    let row = ((m * s + nn) * c + ci) * er * es;
+                    for u in 0..er {
+                        let iy = m + u;
+                        if iy >= hp {
+                            break;
+                        }
+                        for v in 0..es {
+                            let ix = nn + v;
+                            if ix >= wp {
+                                break;
+                            }
+                            col[row + u * es + v] =
+                                img[(iy * wp + ix) * c + ci];
+                        }
+                    }
+                }
+            }
+        }
+        // one dense GEMM: (r·s·c, er·es) @ (er·es, n) — every zero of the
+        // dilated derivative kernel is multiplied; exactly the naive waste
+        sgemm(r * s * c, n, er * es, &col, &dker, dk.data_mut(), true);
+    }
+
+    dk
+}
+
+/// Generator input gradient via the HUGE² transposed-conv engine.
+pub fn input_grad_huge2(dy: &Tensor, k: &Tensor, p: &DeconvParams) -> Tensor {
+    huge2::conv2d_transpose(dy, &flip_swap(k), p)
+}
+
+/// Generator input gradient via the naive engine.
+pub fn input_grad_baseline(dy: &Tensor, k: &Tensor, p: &DeconvParams)
+                           -> Tensor {
+    baseline::conv2d_transpose(dy, &flip_swap(k), p)
+}
+
+/// Spatially flip `(R,S,C,N)` and swap the channel axes -> `(R,S,N,C)`.
+fn flip_swap(k: &Tensor) -> Tensor {
+    let (r, s, c, n) = k.dims4();
+    let mut out = Tensor::zeros(&[r, s, n, c]);
+    for m in 0..r {
+        for nn in 0..s {
+            for ci in 0..c {
+                for ni in 0..n {
+                    let v = k.at(&[r - 1 - m, s - 1 - nn, ci, ni]);
+                    out.set(&[m, nn, ni, ci], v);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// MAC counts for the weight gradient: naive (dilated derivative kernel,
+/// zeros included) vs untangled.
+pub fn weight_grad_macs(_h: usize, _w: usize, c: usize, n: usize, r: usize,
+                        s: usize, oh: usize, ow: usize, stride: usize)
+                        -> (u64, u64) {
+    let er = (oh - 1) * stride + 1;
+    let es = (ow - 1) * stride + 1;
+    let naive = (r * s * c * n * er * es) as u64;
+    let eff = (r * s * c * n * oh * ow) as u64;
+
+    (naive, eff)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::deconv::baseline as base;
+    use crate::rng::Rng;
+
+    /// Finite-difference check of the weight gradient.
+    #[test]
+    fn weight_grad_matches_finite_difference() {
+        let mut rng = Rng::new(11);
+        let (h, c, n, r, st, pad) = (6, 2, 2, 3, 2, 1);
+        let x = Tensor::randn(&[1, h, h, c], &mut rng);
+        let mut k = Tensor::randn(&[r, r, c, n], &mut rng);
+        let y = base::conv2d(&x, &k, st, pad);
+        let dy = Tensor::full(y.shape(), 1.0);
+        let g = weight_grad_huge2(&x, &dy, r, r, st, pad);
+        // check a few entries by central differences
+        let eps = 1e-3;
+        for &idx in &[0usize, 3, 7, k.len() - 1] {
+            let orig = k.data()[idx];
+            k.data_mut()[idx] = orig + eps;
+            let yp: f32 = base::conv2d(&x, &k, st, pad).data().iter().sum();
+            k.data_mut()[idx] = orig - eps;
+            let ym: f32 = base::conv2d(&x, &k, st, pad).data().iter().sum();
+            k.data_mut()[idx] = orig;
+            let fd = (yp - ym) / (2.0 * eps);
+            let an = g.data()[idx];
+            assert!((fd - an).abs() < 2e-2, "idx {idx}: fd {fd} vs {an}");
+        }
+    }
+
+    #[test]
+    fn huge2_matches_baseline_weight_grad() {
+        let mut rng = Rng::new(12);
+        let (h, c, n, r, st, pad) = (8, 3, 4, 5, 2, 2);
+        let x = Tensor::randn(&[2, h, h, c], &mut rng);
+        let oh = (h + 2 * pad - r) / st + 1;
+        let dy = Tensor::randn(&[2, oh, oh, n], &mut rng);
+        let a = weight_grad_huge2(&x, &dy, r, r, st, pad);
+        let b = weight_grad_baseline(&x, &dy, r, r, st, pad);
+        assert!(a.allclose(&b, 1e-3), "diff {}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn input_grad_engines_agree() {
+        let mut rng = Rng::new(13);
+        let p = DeconvParams::new(2, 2, 1);
+        let k = Tensor::randn(&[5, 5, 3, 4], &mut rng);
+        let dy = Tensor::randn(&[1, 4, 4, 4], &mut rng);
+        let a = input_grad_huge2(&dy, &k, &p);
+        let b = input_grad_baseline(&dy, &k, &p);
+        assert_eq!(a.shape(), &[1, 8, 8, 3]);
+        assert!(a.allclose(&b, 1e-4));
+    }
+
+    #[test]
+    fn input_grad_is_conv_adjoint() {
+        // <conv(x), dy> == <x, input_grad(dy)>
+        let mut rng = Rng::new(14);
+        let (st, pad) = (2, 2);
+        let x = Tensor::randn(&[1, 8, 8, 2], &mut rng);
+        let k = Tensor::randn(&[5, 5, 2, 3], &mut rng);
+        let y = base::conv2d(&x, &k, st, pad);
+        let dy = Tensor::randn(y.shape(), &mut rng);
+        let gx = input_grad_huge2(&dy, &k, &DeconvParams::new(st, pad, 1));
+        let lhs: f64 = y.data().iter().zip(dy.data())
+            .map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        let rhs: f64 = x.data().iter().zip(gx.data())
+            .map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        assert!((lhs - rhs).abs() < 1e-2 * lhs.abs().max(1.0),
+                "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn weight_grad_mac_ratio() {
+        // DCGAN D1-like: 32->16, 5x5, stride 2: naive dilates 16x16 dy to
+        // 31x31 -> ~3.75x more MACs
+        let (naive, eff) = weight_grad_macs(32, 32, 3, 64, 5, 5, 16, 16, 2);
+        let ratio = naive as f64 / eff as f64;
+        assert!(ratio > 3.0 && ratio < 4.0, "{ratio}");
+    }
+}

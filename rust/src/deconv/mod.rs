@@ -1,0 +1,169 @@
+//! Deconvolution engines — the paper's core contribution and its baseline.
+//!
+//! * [`baseline`] — the naive DarkNet-style algorithm: materialise the
+//!   zero-inflated input, im2col, one big GEMM. ~75 % of its MACs multiply
+//!   zeros at stride 2.
+//! * [`huge2`] — the paper's engine: kernel decomposition (§3.1) into
+//!   stride-parity patterns + untangling (§3.2) into 1×1-conv GEMMs +
+//!   polyphase scatter, never touching an inserted zero.
+//! * [`dilated`] — both variants of dilated (atrous) convolution (§2.1.2).
+//! * [`grad`] — GAN-training gradients (§3.2.3): weight gradient as a
+//!   dilated convolution, input gradient as a transposed convolution.
+//!
+//! All engines share [`crate::gemm`], so measured ratios isolate the
+//! algorithm (DESIGN.md §2).
+
+pub mod baseline;
+pub mod col2im_baseline;
+pub mod dilated;
+pub mod grad;
+pub mod huge2;
+pub mod parallel;
+
+/// Geometry of one transposed-convolution layer (mirrors the python
+/// `DeconvLayer` / `ref.py` conventions exactly).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeconvParams {
+    pub stride: usize,
+    pub pad: usize,
+    pub out_pad: usize,
+}
+
+impl DeconvParams {
+    pub const fn new(stride: usize, pad: usize, out_pad: usize) -> Self {
+        DeconvParams { stride, pad, out_pad }
+    }
+
+    /// Output spatial size: `(h-1)·stride - 2·pad + r + out_pad`.
+    pub fn out_size(&self, h: usize, r: usize) -> usize {
+        (h - 1) * self.stride + r + self.out_pad - 2 * self.pad
+    }
+
+    /// Low/high zero-padding of the inflated tensor along one axis.
+    pub fn inflate_pad(&self, r: usize) -> (usize, usize) {
+        let lo = r - 1 - self.pad;
+        (lo, lo + self.out_pad)
+    }
+}
+
+/// Geometry of a dilated convolution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DilatedParams {
+    pub dilation: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl DilatedParams {
+    pub const fn new(dilation: usize, stride: usize, pad: usize) -> Self {
+        DilatedParams { dilation, stride, pad }
+    }
+
+    /// Effective (dilated) kernel extent.
+    pub fn eff_kernel(&self, r: usize) -> usize {
+        (r - 1) * self.dilation + 1
+    }
+
+    pub fn out_size(&self, h: usize, r: usize) -> usize {
+        (h + 2 * self.pad - self.eff_kernel(r)) / self.stride + 1
+    }
+}
+
+/// One §3.1 pattern along a single axis.
+///
+/// For output phase `phi` (`y ≡ phi mod stride`), the taps used are
+/// `a0, a0+stride, …` and tap `t` reads input index `q + t + delta`
+/// where `q = (y - phi)/stride`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AxisPattern {
+    /// First kernel tap of this pattern.
+    pub a0: usize,
+    /// Number of taps (`ceil((r - a0)/stride)`).
+    pub taps: usize,
+    /// Input offset of tap 0 (can be negative: reads the padded border).
+    pub delta: isize,
+}
+
+/// Decomposition algebra for one axis (see python `pattern_params`).
+pub fn axis_pattern(r: usize, stride: usize, pad: usize, phi: usize)
+                    -> AxisPattern {
+    let lo = r - 1 - pad; // low inflate-pad
+    let a0 = (lo + stride - phi % stride) % stride;
+    let taps = if a0 >= r { 0 } else { (r - a0).div_ceil(stride) };
+    let delta = (phi as isize + a0 as isize - lo as isize) / stride as isize;
+    debug_assert_eq!((phi as isize + a0 as isize - lo as isize)
+                         .rem_euclid(stride as isize), 0);
+    AxisPattern { a0, taps, delta }
+}
+
+/// Number of output positions `y < total` with `y ≡ phi (mod stride)`.
+pub fn polyphase_len(total: usize, stride: usize, phi: usize) -> usize {
+    if phi >= total {
+        0
+    } else {
+        (total - phi).div_ceil(stride)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dcgan_geometry() {
+        let p = DeconvParams::new(2, 2, 1);
+        assert_eq!(p.out_size(4, 5), 8);
+        assert_eq!(p.out_size(32, 5), 64);
+        assert_eq!(p.inflate_pad(5), (2, 3));
+    }
+
+    #[test]
+    fn cgan_geometry() {
+        let p = DeconvParams::new(2, 1, 0);
+        assert_eq!(p.out_size(8, 4), 16);
+        assert_eq!(p.inflate_pad(4), (2, 2));
+    }
+
+    #[test]
+    fn patterns_partition_kernel() {
+        // sum of per-pattern taps == r for every (r, stride, pad)
+        for r in 1..=7 {
+            for stride in 1..=4 {
+                for pad in 0..r {
+                    let total: usize = (0..stride)
+                        .map(|phi| axis_pattern(r, stride, pad, phi).taps)
+                        .sum();
+                    assert_eq!(total, r, "r={r} stride={stride} pad={pad}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dcgan_patterns_match_paper() {
+        // 5x5 kernel, stride 2, pad 2 -> patterns with 3 and 2 taps
+        let p0 = axis_pattern(5, 2, 2, 0);
+        let p1 = axis_pattern(5, 2, 2, 1);
+        assert_eq!((p0.a0, p0.taps), (0, 3));
+        assert_eq!((p1.a0, p1.taps), (1, 2));
+    }
+
+    #[test]
+    fn polyphase_lengths_sum_to_total() {
+        for total in 1..40 {
+            for stride in 1..5 {
+                let s: usize = (0..stride)
+                    .map(|phi| polyphase_len(total, stride, phi))
+                    .sum();
+                assert_eq!(s, total);
+            }
+        }
+    }
+
+    #[test]
+    fn dilated_geometry() {
+        let p = DilatedParams::new(2, 1, 2);
+        assert_eq!(p.eff_kernel(3), 5);
+        assert_eq!(p.out_size(13, 3), 13); // 'same' when pad == dilation
+    }
+}

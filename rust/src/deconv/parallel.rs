@@ -1,0 +1,182 @@
+//! Multi-core engines — the paper's testbed is a 4-core Cortex-A57, and
+//! §3.1's "non-overlapped sparse regions … do not cause any race
+//! conditions" is precisely a parallelism claim: HUGE²'s `stride²`
+//! patterns write disjoint output polyphases, so they parallelise with
+//! no synchronisation at all. The baseline parallelises only inside its
+//! single big GEMM (its output rows overlap the col matrix, and the
+//! inflation/im2col phases are bandwidth-bound).
+
+use crate::gemm::{sgemm_parallel, sgemm_prepacked};
+use crate::im2col::im2col;
+use crate::tensor::Tensor;
+
+use super::huge2::Pattern;
+use super::{polyphase_len, DeconvParams};
+
+/// Multi-threaded naive baseline: inflate + im2col single-threaded
+/// (bandwidth-bound), GEMM sharded over `threads`.
+pub fn baseline_conv2d_transpose_mt(x: &Tensor, k: &Tensor,
+                                    p: &DeconvParams, threads: usize)
+                                    -> Tensor {
+    let (b, h, w, _c) = x.dims4();
+    let (r, s, kc, n) = k.dims4();
+    let ho = p.out_size(h, r);
+    let wo = p.out_size(w, s);
+    let inflated = super::baseline::inflate(x, r, s, p);
+    let (_, ih, iw, _) = inflated.dims4();
+    let mut out = Tensor::zeros(&[b, ho, wo, n]);
+    for bi in 0..b {
+        let img = Tensor::from_vec(
+            &[1, ih, iw, kc],
+            inflated.data()[bi * ih * iw * kc..(bi + 1) * ih * iw * kc]
+                .to_vec(),
+        );
+        let (col, _, _) = im2col(&img, r, s, 1, 0);
+        let dst = &mut out.data_mut()[bi * ho * wo * n
+            ..(bi + 1) * ho * wo * n];
+        sgemm_parallel(ho * wo, n, r * s * kc, col.data(), k.data(), dst,
+                       false, threads);
+    }
+    out
+}
+
+/// Multi-threaded HUGE²: one thread per pattern (up to `threads`),
+/// zero synchronisation — each pattern owns a disjoint output polyphase.
+pub fn huge2_conv2d_transpose_mt(x: &Tensor, patterns: &[Pattern],
+                                 r: usize, s: usize, p: &DeconvParams,
+                                 threads: usize) -> Tensor {
+    let (b, h, w, c) = x.dims4();
+    let n = patterns[0].sub.shape()[3];
+    let st = p.stride;
+    let ho = p.out_size(h, r);
+    let wo = p.out_size(w, s);
+
+    // shared padded input (same algebra as the single-threaded engine)
+    let max_dy = patterns.iter().map(|pt| pt.ay.taps as isize - 1
+        + pt.ay.delta).max().unwrap_or(0);
+    let max_dx = patterns.iter().map(|pt| pt.ax.taps as isize - 1
+        + pt.ax.delta).max().unwrap_or(0);
+    let min_dy = patterns.iter().map(|pt| pt.ay.delta).min().unwrap_or(0);
+    let min_dx = patterns.iter().map(|pt| pt.ax.delta).min().unwrap_or(0);
+    let max_qy = (0..st).map(|phi| polyphase_len(ho, st, phi)).max().unwrap();
+    let max_qx = (0..st).map(|phi| polyphase_len(wo, st, phi)).max().unwrap();
+    let pad_lo_y = (-min_dy).max(0) as usize;
+    let pad_lo_x = (-min_dx).max(0) as usize;
+    let pad_hi_y = ((max_qy as isize - 1 + max_dy) - (h as isize - 1)).max(0)
+        as usize;
+    let pad_hi_x = ((max_qx as isize - 1 + max_dx) - (w as isize - 1)).max(0)
+        as usize;
+    let xp = x.pad_spatial(pad_lo_y, pad_hi_y, pad_lo_x, pad_hi_x);
+    let (_, hp, wp, _) = xp.dims4();
+
+    let mut out = Tensor::zeros(&[b, ho, wo, n]);
+    let threads = threads.max(1);
+
+    for bi in 0..b {
+        let img = &xp.data()[bi * hp * wp * c..(bi + 1) * hp * wp * c];
+        // Compute every pattern's polyphase concurrently...
+        let mut results: Vec<(usize, Vec<f32>, usize, usize)> =
+            std::thread::scope(|sc| {
+                let mut handles = Vec::new();
+                for (pi, chunk) in patterns.chunks(
+                    patterns.len().div_ceil(threads)).enumerate()
+                {
+                    handles.push(sc.spawn(move || {
+                        let mut local = Vec::new();
+                        for (ci, pt) in chunk.iter().enumerate() {
+                            let qy = polyphase_len(ho, st, pt.phi_y);
+                            let qx = polyphase_len(wo, st, pt.phi_x);
+                            if qy == 0 || qx == 0 || pt.ay.taps == 0
+                                || pt.ax.taps == 0
+                            {
+                                continue;
+                            }
+                            let mut sub = vec![0.0f32; qy * qx * n];
+                            let mut a_buf = vec![0.0f32; qy * qx * c];
+                            for t_y in 0..pt.ay.taps {
+                                for t_x in 0..pt.ax.taps {
+                                    let pb = &pt.packed[t_y * pt.ax.taps
+                                        + t_x];
+                                    let ix0 = (t_x as isize + pt.ax.delta
+                                        + pad_lo_x as isize) as usize;
+                                    for q_y in 0..qy {
+                                        let iy = (q_y as isize
+                                            + t_y as isize + pt.ay.delta
+                                            + pad_lo_y as isize) as usize;
+                                        let a0 = (iy * wp + ix0) * c;
+                                        a_buf[q_y * qx * c
+                                            ..(q_y + 1) * qx * c]
+                                            .copy_from_slice(
+                                                &img[a0..a0 + qx * c]);
+                                    }
+                                    sgemm_prepacked(qy * qx,
+                                                    &a_buf[..qy * qx * c],
+                                                    c, pb, &mut sub, true);
+                                }
+                            }
+                            let idx = pi * patterns.len()
+                                .div_ceil(threads) + ci;
+                            local.push((idx, sub, qy, qx));
+                        }
+                        local
+                    }));
+                }
+                handles.into_iter()
+                    .flat_map(|h| h.join().unwrap())
+                    .collect()
+            });
+        // ...then scatter serially (cheap, disjoint anyway).
+        results.sort_by_key(|(i, ..)| *i);
+        let od = out.data_mut();
+        for (idx, sub, qy, qx) in results {
+            let pt = &patterns[idx];
+            for q_y in 0..qy {
+                let oy = pt.phi_y + q_y * st;
+                for q_x in 0..qx {
+                    let ox = pt.phi_x + q_x * st;
+                    let src = (q_y * qx + q_x) * n;
+                    let dst = ((bi * ho + oy) * wo + ox) * n;
+                    od[dst..dst + n].copy_from_slice(&sub[src..src + n]);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::deconv::{baseline, huge2};
+    use crate::rng::Rng;
+
+    #[test]
+    fn mt_engines_match_single_thread() {
+        let mut rng = Rng::new(21);
+        let p = DeconvParams::new(2, 2, 1);
+        let x = Tensor::randn(&[1, 8, 8, 16], &mut rng);
+        let k = Tensor::randn(&[5, 5, 16, 8], &mut rng);
+        let want = baseline::conv2d_transpose(&x, &k, &p);
+        let patterns = huge2::decompose(&k, &p);
+        for threads in [1, 2, 4, 7] {
+            let a = baseline_conv2d_transpose_mt(&x, &k, &p, threads);
+            let b = huge2_conv2d_transpose_mt(&x, &patterns, 5, 5, &p,
+                                              threads);
+            assert!(a.allclose(&want, 1e-4), "baseline mt{threads}");
+            assert!(b.allclose(&want, 1e-4), "huge2 mt{threads}: {}",
+                    b.max_abs_diff(&want));
+        }
+    }
+
+    #[test]
+    fn mt_stride3() {
+        let mut rng = Rng::new(22);
+        let p = DeconvParams::new(3, 2, 1);
+        let x = Tensor::randn(&[2, 5, 5, 4], &mut rng);
+        let k = Tensor::randn(&[5, 5, 4, 3], &mut rng);
+        let want = baseline::conv2d_transpose(&x, &k, &p);
+        let patterns = huge2::decompose(&k, &p);
+        let got = huge2_conv2d_transpose_mt(&x, &patterns, 5, 5, &p, 3);
+        assert!(got.allclose(&want, 1e-4));
+    }
+}

@@ -1,0 +1,209 @@
+//! Pure-Rust GAN models assembled from Table-1 configs — the CPU-side
+//! workload of Fig. 7/8. (The PJRT-compiled JAX models in `artifacts/` are
+//! the served path; this module is the native path the CPU benches and the
+//! fallback `--engine native` serving mode use.)
+
+use crate::config::{cgan_layers, dcgan_layers, LayerConfig};
+use crate::deconv::huge2::{decompose, Pattern};
+use crate::deconv::{baseline, huge2};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+/// Which deconvolution engine a forward pass uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// DarkNet-style zero-insertion + im2col + GEMM.
+    Baseline,
+    /// Kernel decomposition + untangling (the paper).
+    Huge2,
+}
+
+/// One deconv layer with its weights and (for HUGE²) the pre-decomposed
+/// patterns — decomposition happens once at model-load time, as a serving
+/// engine would do.
+pub struct GenLayer {
+    pub cfg: LayerConfig,
+    pub kernel: Tensor,
+    patterns: Vec<Pattern>,
+}
+
+impl GenLayer {
+    pub fn new(cfg: LayerConfig, kernel: Tensor) -> Self {
+        assert_eq!(kernel.shape(),
+                   &[cfg.k, cfg.k, cfg.c_in, cfg.c_out]);
+        let patterns = decompose(&kernel, &cfg.deconv_params());
+        GenLayer { cfg, kernel, patterns }
+    }
+
+    pub fn forward(&self, x: &Tensor, engine: Engine) -> Tensor {
+        let p = self.cfg.deconv_params();
+        match engine {
+            Engine::Baseline => baseline::conv2d_transpose(x, &self.kernel, &p),
+            Engine::Huge2 => huge2::conv2d_transpose_with(
+                x, &self.patterns, self.cfg.k, self.cfg.k, &p),
+        }
+    }
+}
+
+/// A DCGAN/cGAN-style generator: dense projection + deconv stack.
+pub struct Generator {
+    pub z_dim: usize,
+    /// `(z_dim [+ n_classes], h0·h0·c0)` projection matrix.
+    pub proj: Tensor,
+    pub layers: Vec<GenLayer>,
+}
+
+impl Generator {
+    /// Build with seeded DCGAN-style weights (0.02·N(0,1)).
+    pub fn new(layer_cfgs: Vec<LayerConfig>, z_dim: usize, cond: usize,
+               rng: &mut Rng) -> Self {
+        let first = &layer_cfgs[0];
+        let proj = Tensor::randn(
+            &[z_dim + cond, first.h * first.h * first.c_in], rng)
+            .scale(0.02);
+        let layers = layer_cfgs
+            .into_iter()
+            .map(|cfg| {
+                let k = Tensor::randn(
+                    &[cfg.k, cfg.k, cfg.c_in, cfg.c_out], rng)
+                    .scale(0.02);
+                GenLayer::new(cfg, k)
+            })
+            .collect();
+        Generator { z_dim, proj, layers }
+    }
+
+    /// The paper's DCGAN generator (Table 1, DC1–DC4).
+    pub fn dcgan(seed: u64) -> Self {
+        Generator::new(dcgan_layers(), 100, 0, &mut Rng::new(seed))
+    }
+
+    /// The paper's cGAN generator (Table 1, DC1–DC2; 10-class conditioning).
+    pub fn cgan(seed: u64) -> Self {
+        Generator::new(cgan_layers(), 100, 10, &mut Rng::new(seed))
+    }
+
+    /// `z`: `(B, z_dim [+cond])` -> image `(B, H, W, c_out)` in [-1, 1].
+    pub fn forward(&self, z: &Tensor, engine: Engine) -> Tensor {
+        let (b, zd) = z.dims2();
+        let (pd, hid) = self.proj.dims2();
+        assert_eq!(zd, pd, "latent dim mismatch");
+        let first = &self.layers[0].cfg;
+        // dense projection
+        let mut x0 = vec![0.0f32; b * hid];
+        crate::gemm::sgemm(b, hid, zd, z.data(), self.proj.data(),
+                           &mut x0, false);
+        let mut x = Tensor::from_vec(&[b, first.h, first.h, first.c_in], x0)
+            .relu();
+        let n = self.layers.len();
+        for (i, layer) in self.layers.iter().enumerate() {
+            x = layer.forward(&x, engine);
+            x = if i == n - 1 { x.tanh() } else { x.relu() };
+        }
+        x
+    }
+
+    /// Output image shape for batch `b`.
+    pub fn out_shape(&self, b: usize) -> Vec<usize> {
+        let last = &self.layers[self.layers.len() - 1].cfg;
+        vec![b, last.h_out(), last.h_out(), last.c_out]
+    }
+}
+
+/// Strided-conv discriminator (the training-side workload of §3.2.3).
+pub struct Discriminator {
+    pub kernels: Vec<Tensor>, // each (5,5,C,N), stride 2, pad 2
+    pub head: Tensor,         // (4·4·c_last, 1)
+}
+
+impl Discriminator {
+    pub fn new(chans: &[usize], rng: &mut Rng) -> Self {
+        let kernels = chans
+            .windows(2)
+            .map(|w| Tensor::randn(&[5, 5, w[0], w[1]], rng).scale(0.02))
+            .collect();
+        let head = Tensor::randn(&[4 * 4 * chans[chans.len() - 1], 1], rng)
+            .scale(0.02);
+        Discriminator { kernels, head }
+    }
+
+    /// `img`: `(B, 32, 32, C0)` -> logits `(B, 1)`; also returns the
+    /// per-layer activations (needed by the backward bench).
+    pub fn forward(&self, img: &Tensor) -> (Tensor, Vec<Tensor>) {
+        let mut acts = vec![img.clone()];
+        let mut x = img.clone();
+        for k in &self.kernels {
+            x = baseline::conv2d(&x, k, 2, 2).leaky_relu(0.2);
+            acts.push(x.clone());
+        }
+        let (b, h, w, c) = x.dims4();
+        let flat = x.reshape(&[b, h * w * c]);
+        let mut logits = vec![0.0f32; b];
+        crate::gemm::sgemm(b, 1, h * w * c, flat.data(), self.head.data(),
+                           &mut logits, false);
+        (Tensor::from_vec(&[b, 1], logits), acts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::table1;
+
+    fn tiny_gen() -> Generator {
+        // Table-1 geometry at 1/32 channel scale for fast tests
+        let cfgs: Vec<LayerConfig> = table1()
+            .into_iter()
+            .filter(|l| l.gan == "DCGAN")
+            .collect();
+        let mut shrunk = Vec::new();
+        let mut c_in = 32;
+        for l in cfgs {
+            let c_out = if l.c_out == 3 { 3 } else { l.c_out / 32 };
+            shrunk.push(LayerConfig { c_in, c_out, ..l });
+            c_in = c_out;
+        }
+        Generator::new(shrunk, 16, 0, &mut Rng::new(9))
+    }
+
+    #[test]
+    fn engines_agree_end_to_end() {
+        let g = tiny_gen();
+        let mut rng = Rng::new(10);
+        let z = Tensor::randn(&[2, 16], &mut rng);
+        let a = g.forward(&z, Engine::Huge2);
+        let b = g.forward(&z, Engine::Baseline);
+        assert_eq!(a.shape(), g.out_shape(2).as_slice());
+        assert_eq!(a.shape(), &[2, 64, 64, 3]);
+        assert!(a.allclose(&b, 1e-4), "diff {}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn output_in_tanh_range() {
+        let g = tiny_gen();
+        let mut rng = Rng::new(11);
+        let z = Tensor::randn(&[1, 16], &mut rng);
+        let img = g.forward(&z, Engine::Huge2);
+        assert!(img.data().iter().all(|v| v.abs() <= 1.0));
+    }
+
+    #[test]
+    fn deterministic_weights() {
+        let a = Generator::dcgan(3);
+        let b = Generator::dcgan(3);
+        assert_eq!(a.proj.checksum(), b.proj.checksum());
+        assert_eq!(a.layers[0].kernel.checksum(),
+                   b.layers[0].kernel.checksum());
+    }
+
+    #[test]
+    fn discriminator_pipeline() {
+        let mut rng = Rng::new(12);
+        let d = Discriminator::new(&[3, 8, 16, 32], &mut rng);
+        let img = Tensor::randn(&[2, 32, 32, 3], &mut rng);
+        let (logits, acts) = d.forward(&img);
+        assert_eq!(logits.shape(), &[2, 1]);
+        assert_eq!(acts.len(), 4);
+        assert_eq!(acts[3].shape(), &[2, 4, 4, 32]);
+    }
+}

@@ -1,0 +1,443 @@
+//! Blocked single-precision GEMM — the shared compute core.
+//!
+//! Both deconvolution engines (the DarkNet-style baseline and HUGE²)
+//! funnel all their multiply-adds through this one GEMM, so the measured
+//! baseline-vs-HUGE² ratio isolates the *algorithmic* difference the paper
+//! claims (zero-skipping + access coalescing), not a difference in GEMM
+//! quality (DESIGN.md §2).
+//!
+//! Structure: classic Goto-style three-level blocking
+//!   * `KC × NC` panel of B packed row-major by NR-wide slivers,
+//!   * `MC × KC` panel of A packed column-major by MR-tall slivers,
+//!   * an `MR × NR` register micro-kernel (4 × 16 f32 — fits AVX2's
+//!     16 ymm registers) with an unrolled FMA loop.
+//!
+//! `sgemm_parallel` shards the M dimension over `std::thread::scope`
+//! (the vendored crate set has no rayon).
+
+/// Micro-tile rows.
+const MR: usize = 4;
+/// Micro-tile cols (4 × f32x4 or 2 × f32x8 vectors).
+const NR: usize = 16;
+/// L2-ish block of K.
+const KC: usize = 256;
+/// L3-ish block of M.
+const MC: usize = 128;
+/// Panel width of N.
+const NC: usize = 1024;
+
+/// C[m×n] (+)= A[m×k] · B[k×n], all row-major contiguous.
+///
+/// If `accumulate` is false, C is overwritten; otherwise added into.
+pub fn sgemm(m: usize, n: usize, k: usize, a: &[f32], b: &[f32],
+             c: &mut [f32], accumulate: bool) {
+    assert_eq!(a.len(), m * k, "A size");
+    sgemm_strided(m, n, k, a, k, b, c, accumulate);
+}
+
+/// `sgemm` with an explicit row stride for A (`lda >= k` elements).
+///
+/// This is what lets the HUGE² engine run its untangled tap-GEMMs
+/// *directly on views of the input tensor* — e.g. a (Wo, C) row of a
+/// stride-`st` dilated conv is A with `lda = st·C` — with zero im2col-style
+/// copying. The packing routine absorbs the stride.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_strided(m: usize, n: usize, k: usize, a: &[f32], lda: usize,
+                     b: &[f32], c: &mut [f32], accumulate: bool) {
+    assert!(lda >= k, "lda {lda} < k {k}");
+    assert!(m == 0 || a.len() >= (m - 1) * lda + k, "A size");
+    assert_eq!(b.len(), k * n, "B size");
+    assert_eq!(c.len(), m * n, "C size");
+    if !accumulate {
+        c.fill(0.0);
+    }
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+
+    let mut packed_a = vec![0.0f32; MC * KC];
+    let mut packed_b = vec![0.0f32; KC * NC.min(round_up(n, NR))];
+
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kc = KC.min(k - pc);
+            pack_b(&mut packed_b, b, k, n, pc, jc, kc, nc);
+            for ic in (0..m).step_by(MC) {
+                let mc = MC.min(m - ic);
+                pack_a(&mut packed_a, a, lda, ic, pc, mc, kc);
+                macro_kernel(&packed_a, &packed_b, c, n, ic, jc, mc, nc, kc);
+            }
+        }
+    }
+}
+
+/// B packed once into micro-kernel layout — for weight matrices that are
+/// static across calls (the HUGE² tap panels: decompose once at model
+/// load, then every inference skips the per-call `pack_b` entirely).
+///
+/// Layout: for each NC panel (`jc`), for each KC panel (`pc`), the
+/// NR-sliver packing `pack_b` produces — the exact stream order
+/// `sgemm_strided` consumes.
+#[derive(Debug, Clone)]
+pub struct PackedB {
+    pub k: usize,
+    pub n: usize,
+    data: Vec<f32>,
+    /// Offset of each (jc, pc) panel in `data`.
+    panels: Vec<(usize, usize, usize)>, // (jc, pc, offset)
+}
+
+impl PackedB {
+    /// Pack a row-major `(k, n)` B.
+    pub fn pack(k: usize, n: usize, b: &[f32]) -> Self {
+        assert_eq!(b.len(), k * n);
+        let mut data = Vec::new();
+        let mut panels = Vec::new();
+        for jc in (0..n).step_by(NC) {
+            let nc = NC.min(n - jc);
+            let nc_padded = round_up(nc, NR);
+            for pc in (0..k).step_by(KC) {
+                let kc = KC.min(k - pc);
+                panels.push((jc, pc, data.len()));
+                let start = data.len();
+                data.resize(start + kc * nc_padded, 0.0);
+                pack_b(&mut data[start..], b, k, n, pc, jc, kc, nc);
+            }
+        }
+        PackedB { k, n, data, panels }
+    }
+
+    fn panel(&self, jc: usize, pc: usize) -> &[f32] {
+        let (_, _, off) = *self
+            .panels
+            .iter()
+            .find(|&&(j, p, _)| j == jc && p == pc)
+            .expect("panel");
+        &self.data[off..]
+    }
+}
+
+/// `sgemm_strided` against a pre-packed B: skips all B packing at call
+/// time. C[m×n] (+)= A[m×k]·B.
+pub fn sgemm_prepacked(m: usize, a: &[f32], lda: usize, b: &PackedB,
+                       c: &mut [f32], accumulate: bool) {
+    let (k, n) = (b.k, b.n);
+    assert!(lda >= k);
+    assert!(m == 0 || a.len() >= (m - 1) * lda + k, "A size");
+    assert_eq!(c.len(), m * n, "C size");
+    if !accumulate {
+        c.fill(0.0);
+    }
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let mut packed_a = vec![0.0f32; MC * KC];
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kc = KC.min(k - pc);
+            let pb = b.panel(jc, pc);
+            for ic in (0..m).step_by(MC) {
+                let mc = MC.min(m - ic);
+                pack_a(&mut packed_a, a, lda, ic, pc, mc, kc);
+                macro_kernel(&packed_a, pb, c, n, ic, jc, mc, nc, kc);
+            }
+        }
+    }
+}
+
+/// C[k×n] (+)= Aᵀ · B where A is [m×k] row-major (so Aᵀ is k×m) and
+/// B is [m×n]. Rank-1-update formulation — the weight-gradient taps
+/// (paper §3.2.3) are exactly this shape: dK_tap (C×N) += Xᵀ(C×M)·dY(M×N).
+pub fn sgemm_at(m: usize, n: usize, k: usize, a: &[f32], lda: usize,
+                b: &[f32], c: &mut [f32], accumulate: bool) {
+    assert!(m == 0 || a.len() >= (m - 1) * lda + k);
+    assert_eq!(b.len(), m * n);
+    assert_eq!(c.len(), k * n);
+    if !accumulate {
+        c.fill(0.0);
+    }
+    for q in 0..m {
+        let arow = &a[q * lda..q * lda + k];
+        let brow = &b[q * n..(q + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[p * n..(p + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// Multi-threaded `sgemm`: shards rows of C across `threads`.
+pub fn sgemm_parallel(m: usize, n: usize, k: usize, a: &[f32], b: &[f32],
+                      c: &mut [f32], accumulate: bool, threads: usize) {
+    let threads = threads.max(1).min(m.max(1));
+    if threads == 1 || m * n * k < 64 * 64 * 64 {
+        return sgemm(m, n, k, a, b, c, accumulate);
+    }
+    let rows_per = m.div_ceil(threads);
+    // Split C into disjoint row bands; each thread runs a private sgemm.
+    let mut bands: Vec<&mut [f32]> = Vec::with_capacity(threads);
+    let mut rest = c;
+    let mut starts = Vec::with_capacity(threads);
+    let mut start = 0;
+    while start < m {
+        let rows = rows_per.min(m - start);
+        let (band, tail) = rest.split_at_mut(rows * n);
+        bands.push(band);
+        starts.push(start);
+        rest = tail;
+        start += rows;
+    }
+    std::thread::scope(|s| {
+        for (band, &row0) in bands.into_iter().zip(&starts) {
+            let rows = band.len() / n;
+            let a_band = &a[row0 * k..(row0 + rows) * k];
+            s.spawn(move || {
+                sgemm(rows, n, k, a_band, b, band, accumulate);
+            });
+        }
+    });
+}
+
+#[inline]
+fn round_up(x: usize, m: usize) -> usize {
+    x.div_ceil(m) * m
+}
+
+/// Pack an `mc × kc` panel of A into MR-tall column-major slivers.
+fn pack_a(dst: &mut [f32], a: &[f32], lda: usize, ic: usize, pc: usize,
+          mc: usize, kc: usize) {
+    let mut w = 0;
+    for i0 in (0..mc).step_by(MR) {
+        let rows = MR.min(mc - i0);
+        for p in 0..kc {
+            for i in 0..MR {
+                dst[w] = if i < rows {
+                    a[(ic + i0 + i) * lda + pc + p]
+                } else {
+                    0.0
+                };
+                w += 1;
+            }
+        }
+    }
+}
+
+/// Pack a `kc × nc` panel of B into NR-wide row-major slivers.
+fn pack_b(dst: &mut [f32], b: &[f32], _ldb_rows: usize, ldb: usize,
+          pc: usize, jc: usize, kc: usize, nc: usize) {
+    let mut w = 0;
+    for j0 in (0..nc).step_by(NR) {
+        let cols = NR.min(nc - j0);
+        for p in 0..kc {
+            let src = (pc + p) * ldb + jc + j0;
+            for j in 0..NR {
+                dst[w] = if j < cols { b[src + j] } else { 0.0 };
+                w += 1;
+            }
+        }
+    }
+}
+
+/// Drive the micro-kernel over one (mc × nc) block.
+#[allow(clippy::too_many_arguments)]
+fn macro_kernel(pa: &[f32], pb: &[f32], c: &mut [f32], ldc: usize,
+                ic: usize, jc: usize, mc: usize, nc: usize, kc: usize) {
+    for (jt, j0) in (0..nc).step_by(NR).enumerate() {
+        let cols = NR.min(nc - j0);
+        let bp = &pb[jt * kc * NR..(jt + 1) * kc * NR];
+        for (it, i0) in (0..mc).step_by(MR).enumerate() {
+            let rows = MR.min(mc - i0);
+            let ap = &pa[it * kc * MR..(it + 1) * kc * MR];
+            if rows == MR && cols == NR {
+                micro_kernel_full(ap, bp, c, ldc, ic + i0, jc + j0, kc);
+            } else {
+                micro_kernel_edge(ap, bp, c, ldc, ic + i0, jc + j0, kc,
+                                  rows, cols);
+            }
+        }
+    }
+}
+
+/// Full MR×NR register tile; the inner loop LLVM auto-vectorises to FMAs.
+#[inline]
+fn micro_kernel_full(ap: &[f32], bp: &[f32], c: &mut [f32], ldc: usize,
+                     row: usize, col: usize, kc: usize) {
+    let mut acc = [[0.0f32; NR]; MR];
+    let mut aoff = 0;
+    let mut boff = 0;
+    for _ in 0..kc {
+        let a0 = ap[aoff];
+        let a1 = ap[aoff + 1];
+        let a2 = ap[aoff + 2];
+        let a3 = ap[aoff + 3];
+        let bv = &bp[boff..boff + NR];
+        for j in 0..NR {
+            let b = bv[j];
+            acc[0][j] += a0 * b;
+            acc[1][j] += a1 * b;
+            acc[2][j] += a2 * b;
+            acc[3][j] += a3 * b;
+        }
+        aoff += MR;
+        boff += NR;
+    }
+    for i in 0..MR {
+        let dst = &mut c[(row + i) * ldc + col..(row + i) * ldc + col + NR];
+        for j in 0..NR {
+            dst[j] += acc[i][j];
+        }
+    }
+}
+
+/// Edge tile (partial rows/cols).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_kernel_edge(ap: &[f32], bp: &[f32], c: &mut [f32], ldc: usize,
+                     row: usize, col: usize, kc: usize, rows: usize,
+                     cols: usize) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kc {
+        let bv = &bp[p * NR..p * NR + NR];
+        for i in 0..rows {
+            let a = ap[p * MR + i];
+            for j in 0..cols {
+                acc[i][j] += a * bv[j];
+            }
+        }
+    }
+    for i in 0..rows {
+        for j in 0..cols {
+            c[(row + i) * ldc + col + j] += acc[i][j];
+        }
+    }
+}
+
+/// Reference GEMM (textbook triple loop) — the oracle for property tests.
+pub fn sgemm_naive(m: usize, n: usize, k: usize, a: &[f32], b: &[f32],
+                   c: &mut [f32], accumulate: bool) {
+    if !accumulate {
+        c.fill(0.0);
+    }
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn check(m: usize, n: usize, k: usize, threads: usize) {
+        let mut rng = Rng::new((m * 31 + n * 7 + k) as u64);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.next_normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.next_normal()).collect();
+        let mut want = vec![0.0; m * n];
+        sgemm_naive(m, n, k, &a, &b, &mut want, false);
+        let mut got = vec![0.0; m * n];
+        if threads == 1 {
+            sgemm(m, n, k, &a, &b, &mut got, false);
+        } else {
+            sgemm_parallel(m, n, k, &a, &b, &mut got, false, threads);
+        }
+        let err = got
+            .iter()
+            .zip(&want)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(err < 1e-3 * (k as f32).sqrt(), "err={err} m={m} n={n} k={k}");
+    }
+
+    #[test]
+    fn small_shapes() {
+        for &(m, n, k) in &[(1, 1, 1), (3, 5, 7), (4, 16, 8), (5, 17, 9)] {
+            check(m, n, k, 1);
+        }
+    }
+
+    #[test]
+    fn tile_boundaries() {
+        for &(m, n, k) in &[
+            (MR, NR, KC),
+            (MR + 1, NR + 1, KC + 1),
+            (MC, NR, KC),
+            (MC + 3, 2 * NR + 5, KC + 7),
+        ] {
+            check(m, n, k, 1);
+        }
+    }
+
+    #[test]
+    fn big_block() {
+        check(200, 130, 300, 1);
+    }
+
+    #[test]
+    fn parallel_matches() {
+        check(257, 129, 65, 4);
+        check(64, 64, 64, 3);
+    }
+
+    #[test]
+    fn prepacked_matches_sgemm() {
+        let mut rng = Rng::new(9);
+        for &(m, n, k) in &[(1, 1, 1), (4, 16, 8), (5, 17, 300),
+                             (130, 40, 70), (3, 1100, 80)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.next_normal()).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.next_normal()).collect();
+            let mut want = vec![0.0; m * n];
+            sgemm(m, n, k, &a, &b, &mut want, false);
+            let pb = PackedB::pack(k, n, &b);
+            let mut got = vec![1.0; m * n];
+            sgemm_prepacked(m, &a, k, &pb, &mut got, false);
+            let err = got.iter().zip(&want)
+                .map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+            assert!(err < 1e-4 * (k as f32).sqrt(),
+                    "err={err} m={m} n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn prepacked_strided_a() {
+        let mut rng = Rng::new(10);
+        let (m, n, k, lda) = (7, 9, 5, 12);
+        let a: Vec<f32> = (0..m * lda).map(|_| rng.next_normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.next_normal()).collect();
+        let mut want = vec![0.0; m * n];
+        sgemm_strided(m, n, k, &a[..(m - 1) * lda + k], lda, &b, &mut want,
+                      false);
+        let pb = PackedB::pack(k, n, &b);
+        let mut got = vec![0.0; m * n];
+        sgemm_prepacked(m, &a[..(m - 1) * lda + k], lda, &pb, &mut got,
+                        false);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn accumulate_adds() {
+        let a = vec![1.0; 4];
+        let b = vec![1.0; 4];
+        let mut c = vec![10.0; 4];
+        sgemm(2, 2, 2, &a, &b, &mut c, true);
+        assert_eq!(c, vec![12.0; 4]);
+        sgemm(2, 2, 2, &a, &b, &mut c, false);
+        assert_eq!(c, vec![2.0; 4]);
+    }
+}

@@ -1,0 +1,139 @@
+//! im2col / col2im — the DarkNet-baseline substrate.
+//!
+//! "Most 2D standard and transpose convolution implementations in modern
+//! deep learning libraries are based on im2col" (paper §4). The baseline
+//! engine materialises the full column matrix — including every inserted
+//! zero of the inflated input — which is exactly the waste HUGE² removes.
+//!
+//! Layout: NHWC activations, so one column row is the flattened
+//! `(R, S, C)` receptive field of one output position and the column
+//! matrix is `(Ho·Wo, R·S·C)`.
+
+use crate::tensor::Tensor;
+
+/// Column matrix geometry for a standard conv over `x`.
+pub fn col_shape(h: usize, w: usize, r: usize, s: usize, stride: usize,
+                 pad: usize) -> (usize, usize, usize) {
+    let ho = (h + 2 * pad - r) / stride + 1;
+    let wo = (w + 2 * pad - s) / stride + 1;
+    (ho, wo, r * s * 0 + r * s) // (ho, wo, taps)
+}
+
+/// Expand NHWC input (single batch) into the `(Ho·Wo, R·S·C)` column
+/// matrix of a stride-`stride`, pad-`pad` standard convolution.
+pub fn im2col(x: &Tensor, r: usize, s: usize, stride: usize, pad: usize)
+              -> (Tensor, usize, usize) {
+    let (b, h, w, c) = x.dims4();
+    assert_eq!(b, 1, "im2col is per-image (batch handled by caller)");
+    let ho = (h + 2 * pad - r) / stride + 1;
+    let wo = (w + 2 * pad - s) / stride + 1;
+    let mut col = Tensor::zeros(&[ho * wo, r * s * c]);
+    let xd = x.data();
+    let cd = col.data_mut();
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let row = (oy * wo + ox) * r * s * c;
+            for m in 0..r {
+                let iy = (oy * stride + m) as isize - pad as isize;
+                for n in 0..s {
+                    let ix = (ox * stride + n) as isize - pad as isize;
+                    let dst = row + (m * s + n) * c;
+                    if iy >= 0 && (iy as usize) < h && ix >= 0
+                        && (ix as usize) < w
+                    {
+                        let src = ((iy as usize) * w + ix as usize) * c;
+                        cd[dst..dst + c].copy_from_slice(&xd[src..src + c]);
+                    }
+                    // else: stays zero (padding)
+                }
+            }
+        }
+    }
+    (col, ho, wo)
+}
+
+/// Scatter-accumulate a `(Ho·Wo, R·S·C)` column matrix back into an NHWC
+/// image — the adjoint of [`im2col`]. DarkNet implements transposed
+/// convolution as `GEMM -> col2im`; we expose it for the baseline
+/// gradient path and for property-testing the adjoint identity.
+pub fn col2im(col: &Tensor, h: usize, w: usize, c: usize, r: usize,
+              s: usize, stride: usize, pad: usize) -> Tensor {
+    let ho = (h + 2 * pad - r) / stride + 1;
+    let wo = (w + 2 * pad - s) / stride + 1;
+    assert_eq!(col.shape(), &[ho * wo, r * s * c]);
+    let mut out = Tensor::zeros(&[1, h, w, c]);
+    let od = out.data_mut();
+    let cd = col.data();
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let row = (oy * wo + ox) * r * s * c;
+            for m in 0..r {
+                let iy = (oy * stride + m) as isize - pad as isize;
+                for n in 0..s {
+                    let ix = (ox * stride + n) as isize - pad as isize;
+                    if iy >= 0 && (iy as usize) < h && ix >= 0
+                        && (ix as usize) < w
+                    {
+                        let dst = ((iy as usize) * w + ix as usize) * c;
+                        let src = row + (m * s + n) * c;
+                        for ci in 0..c {
+                            od[dst + ci] += cd[src + ci];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn identity_kernel_geometry() {
+        // 1x1 kernel, stride 1, no pad: col == flattened input
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&[1, 3, 4, 5], &mut rng);
+        let (col, ho, wo) = im2col(&x, 1, 1, 1, 0);
+        assert_eq!((ho, wo), (3, 4));
+        assert_eq!(col.data(), x.data());
+    }
+
+    #[test]
+    fn padding_zeroes_border() {
+        let x = Tensor::full(&[1, 2, 2, 1], 1.0);
+        let (col, ho, wo) = im2col(&x, 3, 3, 1, 1);
+        assert_eq!((ho, wo), (2, 2));
+        // top-left output's top-left tap is padding
+        assert_eq!(col.at(&[0, 0]), 0.0);
+        // its centre tap is the (0,0) input
+        assert_eq!(col.at(&[0, 4]), 1.0);
+    }
+
+    #[test]
+    fn col2im_is_adjoint_of_im2col() {
+        // <im2col(x), y> == <x, col2im(y)> for random x, y
+        let mut rng = Rng::new(3);
+        let (h, w, c, r, s, stride, pad) = (5, 6, 3, 3, 3, 2, 1);
+        let x = Tensor::randn(&[1, h, w, c], &mut rng);
+        let (col, ho, wo) = im2col(&x, r, s, stride, pad);
+        let y = Tensor::randn(&[ho * wo, r * s * c], &mut rng);
+        let lhs: f64 = col
+            .data()
+            .iter()
+            .zip(y.data())
+            .map(|(a, b)| (*a as f64) * (*b as f64))
+            .sum();
+        let back = col2im(&y, h, w, c, r, s, stride, pad);
+        let rhs: f64 = x
+            .data()
+            .iter()
+            .zip(back.data())
+            .map(|(a, b)| (*a as f64) * (*b as f64))
+            .sum();
+        assert!((lhs - rhs).abs() < 1e-3, "{lhs} vs {rhs}");
+    }
+}

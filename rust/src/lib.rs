@@ -1,0 +1,53 @@
+//! # HUGE² — a Highly Untangled Generative-model Engine for Edge-computing
+//!
+//! Reproduction of Shi et al. (cs.LG 2019): accelerating the two
+//! "deconvolutions" that dominate generative models and semantic
+//! segmentation — **transposed convolution** and **dilated convolution** —
+//! by (1) decomposing kernels into stride-parity *patterns*, (2)
+//! *untangling* each pattern into a set of 1×1 convolutions (plain GEMMs),
+//! and (3) scattering the disjoint polyphase results into the output.
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) express the same
+//!   decomposition for the TPU MXU; compiled AOT to HLO text.
+//! * **L2** — JAX models (`python/compile/model.py`): DCGAN / cGAN
+//!   generators, discriminator, a full GAN train step.
+//! * **L3** — this crate: a pure-Rust implementation of both the naive
+//!   DarkNet-style baseline and the HUGE² algorithm (for the paper's CPU
+//!   experiments), a cache/roofline simulator (for the memory-access and
+//!   embedded-GPU experiments), and an edge serving engine (router,
+//!   dynamic batcher, worker pool) that executes the AOT artifacts through
+//!   the PJRT C API.
+//!
+//! Quickstart:
+//!
+//! ```no_run
+//! use huge2::config::table1;
+//! use huge2::deconv::{baseline, huge2 as engine};
+//! use huge2::tensor::Tensor;
+//! use huge2::rng::Rng;
+//!
+//! let layer = &table1()[2]; // DCGAN DC3
+//! let mut rng = Rng::new(7);
+//! let x = Tensor::randn(&[1, layer.h, layer.h, layer.c_in], &mut rng);
+//! let k = Tensor::randn(&[layer.k, layer.k, layer.c_in, layer.c_out], &mut rng);
+//! let slow = baseline::conv2d_transpose(&x, &k, &layer.deconv_params());
+//! let fast = engine::conv2d_transpose(&x, &k, &layer.deconv_params());
+//! assert!(slow.allclose(&fast, 1e-4));
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod deconv;
+pub mod gan;
+pub mod gemm;
+pub mod im2col;
+pub mod memsim;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod trace;
+pub mod bench_util;

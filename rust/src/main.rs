@@ -1,0 +1,235 @@
+//! `huge2` — the HUGE² edge serving engine CLI (leader entrypoint).
+
+use anyhow::{bail, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use huge2::bench_util::{fmt_dur, measure_budget, Table};
+use huge2::cli::Args;
+use huge2::config::{layer_by_name, table1, EngineConfig};
+use huge2::coordinator::Engine;
+use huge2::deconv::{baseline, huge2 as engine2};
+use huge2::gan::Generator;
+use huge2::memsim::{trace_layer, EngineKind, GpuModel};
+use huge2::rng::Rng;
+use huge2::runtime::RuntimeHandle;
+use huge2::tensor::Tensor;
+use huge2::trace::poisson;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("huge2: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.subcommand.as_str() {
+        "inspect" => inspect(&args),
+        "bench" => bench(&args),
+        "serve" => serve(&args),
+        "reproduce" => reproduce(&args),
+        other => bail!("unknown subcommand {other:?} \
+                        (inspect|bench|serve|reproduce)"),
+    }
+}
+
+/// Print Table 1, per-layer MAC accounting and available artifacts.
+fn inspect(args: &Args) -> Result<()> {
+    println!("Table 1 — deconvolution layer configurations\n");
+    let mut t = Table::new(&["layer", "gan", "input", "kernel", "stride",
+                             "output", "naive MACs", "HUGE2 MACs", "ratio"]);
+    for l in table1() {
+        let (naive, eff) = engine2::mac_counts(
+            l.h, l.h, l.c_in, l.c_out, l.k, l.k, &l.deconv_params());
+        t.row(&[
+            l.name.into(),
+            l.gan.into(),
+            format!("{0}x{0}x{1}", l.h, l.c_in),
+            format!("{0}x{0}x{1},{2}", l.k, l.c_in, l.c_out),
+            format!("{0}x{0}", l.stride),
+            format!("{0}x{0}x{1}", l.h_out(), l.c_out),
+            naive.to_string(),
+            eff.to_string(),
+            format!("{:.2}x", naive as f64 / eff as f64),
+        ]);
+    }
+    t.print();
+
+    let dir = std::path::PathBuf::from(args.get_or("artifacts",
+                                                   "artifacts"));
+    if dir.join("manifest.txt").exists() {
+        let m = huge2::runtime::Manifest::load(&dir)?;
+        println!("\n{} AOT artifacts in {}:", m.len(), dir.display());
+        for name in m.names() {
+            println!("  {name}");
+        }
+    } else {
+        println!("\n(no artifacts at {}; run `make artifacts`)",
+                 dir.display());
+    }
+    Ok(())
+}
+
+/// Benchmark one Table-1 layer, both engines.
+fn bench(args: &Args) -> Result<()> {
+    let name = args.get_or("layer", "dcgan_dc3");
+    let layer = layer_by_name(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown layer {name:?}"))?;
+    let budget = Duration::from_secs_f64(args.get_f64("budget", 2.0)?);
+    let mut rng = Rng::new(42);
+    let x = Tensor::randn(&[1, layer.h, layer.h, layer.c_in], &mut rng);
+    let k = Tensor::randn(&[layer.k, layer.k, layer.c_in, layer.c_out],
+                          &mut rng);
+    let p = layer.deconv_params();
+
+    let base = measure_budget(budget, || {
+        std::hint::black_box(baseline::conv2d_transpose(&x, &k, &p));
+    });
+    let patterns = engine2::decompose(&k, &p);
+    let fast = measure_budget(budget, || {
+        std::hint::black_box(engine2::conv2d_transpose_with(
+            &x, &patterns, layer.k, layer.k, &p));
+    });
+    println!("{name}: baseline {} ±{:.0}%, huge2 {} ±{:.0}%  →  {:.2}x",
+             fmt_dur(base.median), 100.0 * base.rel_spread(),
+             fmt_dur(fast.median), 100.0 * fast.rel_spread(),
+             base.median_s() / fast.median_s());
+    // correctness cross-check while we're here
+    let want = baseline::conv2d_transpose(&x, &k, &p);
+    let got = engine2::conv2d_transpose(&x, &k, &p);
+    println!("max |Δ| = {:.2e}", got.max_abs_diff(&want));
+    Ok(())
+}
+
+/// Run the serving engine on a synthetic Poisson workload.
+fn serve(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "dcgan");
+    let rate = args.get_f64("rate", 2.0)?;
+    let n = args.get_usize("requests", 20)?;
+    let native = args.has("native");
+    // --config file.toml supplies defaults; explicit flags override
+    let base = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            EngineConfig::from_toml(&text)
+                .map_err(|e| anyhow::anyhow!("config {path}: {e}"))?
+        }
+        None => EngineConfig::default(),
+    };
+    let cfg = EngineConfig {
+        workers: args.get_usize("workers", base.workers)?,
+        max_batch: args.get_usize("max-batch", base.max_batch)?,
+        batch_timeout_us: args.get_usize(
+            "batch-timeout-us", base.batch_timeout_us as usize)? as u64,
+        artifact_dir: args.get("artifacts")
+            .map(str::to_string)
+            .unwrap_or(base.artifact_dir.clone()),
+        ..base
+    };
+
+    let mut eng = Engine::new(cfg.clone());
+    let z_dim;
+    if native {
+        let gen = Arc::new(Generator::dcgan(7));
+        z_dim = gen.z_dim;
+        eng.register_native(huge2::coordinator::Model::native(
+            &model, gen, 0))?;
+        println!("serving {model} natively (pure-rust HUGE2 engine)");
+    } else {
+        let rt = Arc::new(RuntimeHandle::spawn(
+            cfg.artifact_dir.clone().into())?);
+        eng.register_pjrt(&model, &format!("{model}_gen"), rt, 1, 7)?;
+        z_dim = 100;
+        println!("serving {model} via PJRT artifacts \
+                  (JAX/Pallas HUGE2 kernels)");
+    }
+
+    let arrivals = poisson(rate, n, 99);
+    println!("open-loop Poisson workload: rate={rate}/s, {n} requests");
+    let t0 = Instant::now();
+    let mut rng = Rng::new(1);
+    let mut pending = Vec::new();
+    for a in &arrivals {
+        let wait = a.at.saturating_sub(t0.elapsed());
+        if !wait.is_zero() {
+            std::thread::sleep(wait);
+        }
+        let z: Vec<f32> = (0..z_dim).map(|_| rng.next_normal()).collect();
+        match eng.submit(&model, z, vec![]) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => println!("  rejected: {e}"),
+        }
+    }
+    let mut lat = Vec::new();
+    for rx in pending {
+        if let Ok(resp) = rx.recv() {
+            lat.push(resp.latency);
+        }
+    }
+    let wall = t0.elapsed();
+    lat.sort_unstable();
+    if lat.is_empty() {
+        bail!("no responses");
+    }
+    println!("completed {} in {} → {:.2} img/s", lat.len(), fmt_dur(wall),
+             lat.len() as f64 / wall.as_secs_f64());
+    println!("latency p50={} p95={} max={}",
+             fmt_dur(lat[lat.len() / 2]),
+             fmt_dur(lat[(lat.len() * 95 / 100).min(lat.len() - 1)]),
+             fmt_dur(*lat.last().unwrap()));
+    println!("mean batch size {:.2}", eng.counters.mean_batch_size());
+    eng.shutdown();
+    Ok(())
+}
+
+/// Print all the paper's tables/figures (analytic + simulated parts).
+fn reproduce(_args: &Args) -> Result<()> {
+    println!("== Fig 8 (left): memory-access reduction (cache-sim) ==\n");
+    let mut t = Table::new(&["layer", "baseline accesses", "huge2 accesses",
+                             "reduction", "baseline DRAM", "huge2 DRAM"]);
+    for l in table1() {
+        let b = trace_layer(&l, EngineKind::Baseline);
+        let h = trace_layer(&l, EngineKind::Huge2);
+        t.row(&[
+            l.name.into(),
+            b.hierarchy.scalar_accesses.to_string(),
+            h.hierarchy.scalar_accesses.to_string(),
+            format!("{:.1}%", 100.0 * (1.0 - h.hierarchy.scalar_accesses
+                                       as f64
+                                       / b.hierarchy.scalar_accesses as f64)),
+            format!("{}KB", b.dram_bytes / 1024),
+            format!("{}KB", h.dram_bytes / 1024),
+        ]);
+    }
+    t.print();
+
+    println!("\n== Fig 7 (left): embedded-GPU speedup (roofline \
+              ESTIMATE; no CUDA device — see DESIGN.md §2) ==\n");
+    let model = GpuModel::default();
+    let mut t = Table::new(&["layer", "t_baseline", "t_huge2", "speedup",
+                             "baseline bound"]);
+    for l in table1() {
+        let e = model.estimate(&l);
+        t.row(&[
+            l.name.into(),
+            format!("{:.2}ms", e.t_baseline_s * 1e3),
+            format!("{:.2}ms", e.t_huge2_s * 1e3),
+            format!("{:.1}x", e.speedup),
+            if e.baseline_compute_bound { "compute" } else { "memory" }
+                .into(),
+        ]);
+    }
+    t.print();
+    println!("\nFig 7 (right) CPU speedups: run `cargo bench --bench \
+              fig7_speedup`");
+    println!("Fig 8 (right) training speedups: `cargo bench --bench \
+              fig8_training`");
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! Memory-system simulation — the substrate for the paper's Fig. 8 (left)
+//! "memory access reduction" metric and the Fig. 7 (left) embedded-GPU
+//! estimate.
+//!
+//! The authors measured a Jetson TX2; we have neither its ARM CPU
+//! performance counters nor its GPU. Instead (DESIGN.md §2):
+//!
+//! * [`cache`] — a set-associative LRU cache simulator with TX2-like
+//!   geometry (32 KiB L1 / 2 MiB shared L2, 64-byte lines).
+//! * [`counter`] — replays the exact byte-access streams of both deconv
+//!   algorithms (baseline inflate+im2col+GEMM vs HUGE² pattern GEMMs)
+//!   through the cache hierarchy, at cache-line-granular span resolution.
+//! * [`gpu_model`] — an analytical roofline of the 256-core Pascal
+//!   embedded GPU fed by exact MAC/byte counts and coalescing factors.
+
+pub mod cache;
+pub mod counter;
+pub mod gpu_model;
+
+pub use cache::{Cache, CacheConfig, Hierarchy, HierarchyStats};
+pub use counter::{trace_layer, AccessStats, EngineKind};
+pub use gpu_model::{GpuModel, GpuEstimate};

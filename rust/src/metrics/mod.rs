@@ -1,0 +1,195 @@
+//! Engine metrics: log-bucketed latency histograms and throughput
+//! counters (hand-rolled; no external metrics crates in the vendor set).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// HDR-style latency histogram: 64 log2 major buckets × 16 linear minor
+/// buckets ⇒ ≤ ~6 % relative quantile error, O(1) record, lock-free.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+const MINOR: usize = 16;
+const MAJOR: usize = 40; // up to ~2^40 µs ≈ 12 days
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        let mut buckets = Vec::with_capacity(MAJOR * MINOR);
+        buckets.resize_with(MAJOR * MINOR, || AtomicU64::new(0));
+        Histogram {
+            buckets,
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    fn index(us: u64) -> usize {
+        if us < MINOR as u64 {
+            return us as usize;
+        }
+        let major = 63 - us.leading_zeros() as usize; // floor(log2)
+        let shift = major - 4; // keep top 4 bits after the leading 1
+        let minor = ((us >> shift) & (MINOR as u64 - 1)) as usize;
+        ((major - 3) * MINOR + minor).min(MAJOR * MINOR - 1)
+    }
+
+    /// Lower bound of a bucket (inverse of `index`).
+    fn bucket_floor(idx: usize) -> u64 {
+        if idx < MINOR {
+            return idx as u64;
+        }
+        let major = idx / MINOR + 3;
+        let minor = (idx % MINOR) as u64;
+        (1u64 << major) | (minor << (major - 4))
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        self.buckets[Self::index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Quantile in µs (q ∈ [0,1]); bucket lower bound.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::bucket_floor(i);
+            }
+        }
+        self.max_us()
+    }
+
+    /// "p50=…µs p95=…µs p99=…µs max=…µs (n=…)"
+    pub fn summary(&self) -> String {
+        format!(
+            "p50={}µs p95={}µs p99={}µs max={}µs mean={:.0}µs (n={})",
+            self.quantile_us(0.50),
+            self.quantile_us(0.95),
+            self.quantile_us(0.99),
+            self.max_us(),
+            self.mean_us(),
+            self.count()
+        )
+    }
+}
+
+/// Monotonic event counters for the serving engine.
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_ordered() {
+        let h = Histogram::new();
+        for us in 1..=1000u64 {
+            h.record(Duration::from_micros(us));
+        }
+        let p50 = h.quantile_us(0.5);
+        let p95 = h.quantile_us(0.95);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 <= p95 && p95 <= p99 && p99 <= h.max_us());
+        // log-bucket error ≤ ~6%
+        assert!((p50 as f64 - 500.0).abs() / 500.0 < 0.10, "p50={p50}");
+        assert!((p95 as f64 - 950.0).abs() / 950.0 < 0.10, "p95={p95}");
+    }
+
+    #[test]
+    fn bucket_floor_inverts_index() {
+        for us in [0u64, 5, 15, 16, 100, 1000, 123456, 10_000_000] {
+            let idx = Histogram::index(us);
+            let floor = Histogram::bucket_floor(idx);
+            assert!(floor <= us, "floor({idx})={floor} > {us}");
+            // next bucket's floor exceeds us
+            if idx + 1 < MAJOR * MINOR {
+                assert!(Histogram::bucket_floor(idx + 1) > us);
+            }
+        }
+    }
+
+    #[test]
+    fn mean_and_count() {
+        let h = Histogram::new();
+        h.record(Duration::from_micros(100));
+        h.record(Duration::from_micros(300));
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.mean_us(), 200.0);
+        assert_eq!(h.max_us(), 300);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn batch_counter() {
+        let c = Counters::new();
+        c.batches.fetch_add(2, Ordering::Relaxed);
+        c.batched_requests.fetch_add(10, Ordering::Relaxed);
+        assert_eq!(c.mean_batch_size(), 5.0);
+    }
+}

@@ -1,0 +1,136 @@
+//! Deterministic PRNG substrate.
+//!
+//! The vendored crate set has no `rand`, so the engine carries its own
+//! generator: SplitMix64 (Steele et al. 2014) — a tiny, high-quality,
+//! splittable 64-bit generator. It seeds synthetic weights, latents,
+//! workload traces and the property-based tests, so every experiment in
+//! EXPERIMENTS.md is bit-reproducible.
+
+/// SplitMix64 PRNG with Box–Muller normal sampling.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    /// Cached second output of the last Box–Muller transform.
+    spare: Option<f32>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed, spare: None }
+    }
+
+    /// Derive an independent stream (for per-thread / per-request rngs).
+    pub fn split(&mut self) -> Rng {
+        Rng::new(self.next_u64() ^ 0x9e37_79b9_7f4a_7c15)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform in [0, 1) with 53-bit precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn next_below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn next_normal(&mut self) -> f32 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        loop {
+            let u1 = self.next_f32();
+            if u1 <= f32::EPSILON {
+                continue;
+            }
+            let u2 = self.next_f32();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f32::consts::PI * u2;
+            self.spare = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// Exponential with rate `lambda` (inter-arrival times of the Poisson
+    /// open-loop workload generator).
+    pub fn next_exp(&mut self, lambda: f64) -> f64 {
+        let u = loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        -u.ln() / lambda
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn split_streams_differ() {
+        let mut a = Rng::new(42);
+        let mut c = a.split();
+        let xs: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..16).map(|_| c.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let x = r.next_f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let n = 100_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.next_normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>()
+            / n as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn exp_mean() {
+        let mut r = Rng::new(5);
+        let n = 50_000;
+        let m: f64 = (0..n).map(|_| r.next_exp(4.0)).sum::<f64>() / n as f64;
+        assert!((m - 0.25).abs() < 0.01, "mean {m}");
+    }
+}

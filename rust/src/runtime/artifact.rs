@@ -1,0 +1,207 @@
+//! AOT-artifact manifest: the contract between `python/compile/aot.py`
+//! and the Rust runtime.
+//!
+//! Format (one record per compiled entry point):
+//!
+//! ```text
+//! artifact <name> <file>
+//! input 0 float32 1,4,4,1024
+//! input 1 float32 5,5,1024,512
+//! output 0 float32 1,8,8,512
+//! end
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One compiled entry point.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest of an artifact directory.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    by_name: HashMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut by_name = HashMap::new();
+        let mut cur: Option<ArtifactSpec> = None;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let tag = parts.next().unwrap();
+            let err = |m: &str| anyhow!("manifest line {}: {m}", lineno + 1);
+            match tag {
+                "artifact" => {
+                    if cur.is_some() {
+                        bail!(err("nested artifact (missing 'end')"));
+                    }
+                    let name = parts.next().ok_or_else(|| err("name"))?;
+                    let file = parts.next().ok_or_else(|| err("file"))?;
+                    cur = Some(ArtifactSpec {
+                        name: name.to_string(),
+                        file: dir.join(file),
+                        inputs: vec![],
+                        outputs: vec![],
+                    });
+                }
+                "input" | "output" => {
+                    let spec = cur.as_mut()
+                        .ok_or_else(|| err("io outside artifact"))?;
+                    let idx: usize = parts
+                        .next().ok_or_else(|| err("index"))?
+                        .parse().map_err(|_| err("bad index"))?;
+                    let dtype = parts.next().ok_or_else(|| err("dtype"))?;
+                    let dims_s = parts.next().ok_or_else(|| err("dims"))?;
+                    let dims: Vec<usize> = if dims_s == "scalar" {
+                        vec![]
+                    } else {
+                        dims_s
+                            .split(',')
+                            .map(|d| d.parse()
+                                 .map_err(|_| err("bad dim")))
+                            .collect::<Result<_>>()?
+                    };
+                    let ts = TensorSpec { dtype: dtype.to_string(), dims };
+                    let list = if tag == "input" {
+                        &mut spec.inputs
+                    } else {
+                        &mut spec.outputs
+                    };
+                    if idx != list.len() {
+                        bail!(err("out-of-order io index"));
+                    }
+                    list.push(ts);
+                }
+                "end" => {
+                    let spec = cur.take()
+                        .ok_or_else(|| err("end outside artifact"))?;
+                    by_name.insert(spec.name.clone(), spec);
+                }
+                other => bail!(err(&format!("unknown tag {other:?}"))),
+            }
+        }
+        if cur.is_some() {
+            bail!("manifest truncated (missing final 'end')");
+        }
+        Ok(Manifest { by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.by_name
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest \
+                                    (available: {:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> =
+            self.by_name.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+artifact demo demo.hlo.txt
+input 0 float32 1,4,4,8
+input 1 float32 5,5,8,4
+output 0 float32 1,8,8,4
+end
+artifact scalar_out s.hlo.txt
+output 0 float32 scalar
+end
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!(m.len(), 2);
+        let d = m.get("demo").unwrap();
+        assert_eq!(d.inputs.len(), 2);
+        assert_eq!(d.inputs[0].dims, vec![1, 4, 4, 8]);
+        assert_eq!(d.inputs[0].elements(), 128);
+        assert_eq!(d.file, Path::new("/a/demo.hlo.txt"));
+        let s = m.get("scalar_out").unwrap();
+        assert_eq!(s.outputs[0].dims, Vec::<usize>::new());
+        assert_eq!(s.outputs[0].elements(), 1);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in [
+            "input 0 float32 1,2\n",
+            "artifact a f\ninput 1 float32 1\nend\n",
+            "artifact a f\n",
+            "artifact a f\nartifact b g\nend\n",
+            "bogus\n",
+        ] {
+            assert!(Manifest::parse(bad, Path::new("/")).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn missing_artifact_error_lists_names() {
+        let m = Manifest::parse(SAMPLE, Path::new("/")).unwrap();
+        let e = m.get("nope").unwrap_err().to_string();
+        assert!(e.contains("demo"));
+    }
+
+    #[test]
+    fn real_manifest_loads() {
+        // integration: parse the manifest actually emitted by aot.py if
+        // artifacts were built
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.get("dcgan_dc1_huge2").is_ok());
+            let g = m.get("dcgan_gen_b1").unwrap();
+            assert_eq!(g.inputs[0].dims, vec![1, 100]);
+            assert_eq!(g.outputs[0].dims, vec![1, 64, 64, 3]);
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Artifact loading + PJRT execution (the L3 ↔ L2/L1 bridge).
+//!
+//! * [`artifact`] — manifest of the AOT entry points emitted by
+//!   `python/compile/aot.py` (names, files, input/output specs).
+//! * [`pjrt`] — compile HLO text on the PJRT CPU client and execute it
+//!   with [`crate::tensor::Tensor`] inputs/outputs.
+
+pub mod artifact;
+pub mod pjrt;
+pub mod service;
+
+pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+pub use pjrt::{Executable, Runtime};
+pub use service::RuntimeHandle;

@@ -1,0 +1,196 @@
+//! PJRT execution of AOT artifacts — the bridge from the Rust coordinator
+//! to the JAX/Pallas-compiled HLO (via the `xla` crate's PJRT C API).
+//!
+//! Pattern (from /opt/xla-example/load_hlo): HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation` → `client.compile`
+//! → `execute`. Text is the interchange format because xla_extension
+//! 0.5.1 rejects jax≥0.5's 64-bit-id serialized protos.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::tensor::Tensor;
+
+use super::artifact::{ArtifactSpec, Manifest};
+
+/// A compiled entry point ready to execute.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Run with NHWC/row-major f32 tensors; returns one tensor per output.
+    ///
+    /// Inputs are validated against the manifest (count + element count)
+    /// before they touch the runtime, so shape bugs fail with a useful
+    /// message instead of an XLA internal error.
+    pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!("{}: expected {} inputs, got {}", self.spec.name,
+                  self.spec.inputs.len(), inputs.len());
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (i, (t, ts)) in inputs.iter().zip(&self.spec.inputs).enumerate()
+        {
+            if t.len() != ts.elements() {
+                bail!("{}: input {i} has {} elements, manifest says {:?}",
+                      self.spec.name, t.len(), ts.dims);
+            }
+            let dims: Vec<i64> =
+                ts.dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(t.data()).reshape(&dims)?;
+            lits.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always unwrap a tuple.
+        let outs = result.to_tuple()?;
+        if outs.len() != self.spec.outputs.len() {
+            bail!("{}: runtime returned {} outputs, manifest says {}",
+                  self.spec.name, outs.len(), self.spec.outputs.len());
+        }
+        let mut tensors = Vec::with_capacity(outs.len());
+        for (lit, ts) in outs.iter().zip(&self.spec.outputs) {
+            let v = lit.to_vec::<f32>()?;
+            let dims = if ts.dims.is_empty() {
+                vec![1]
+            } else {
+                ts.dims.clone()
+            };
+            tensors.push(Tensor::from_vec(&dims, v));
+        }
+        Ok(tensors)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+}
+
+/// The runtime: one PJRT CPU client + lazily compiled, cached executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open an artifact directory (must contain `manifest.txt`).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) one artifact by name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .with_context(|| format!("parsing {}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let arc = std::sync::Arc::new(Executable { spec, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Convenience: load + run in one call.
+    pub fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.load(name)?.run(inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::layer_by_name;
+    use crate::deconv::baseline;
+    use crate::rng::Rng;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.txt").exists()
+    }
+
+    /// The cross-layer correctness keystone: the AOT-compiled Pallas
+    /// HUGE² kernel and the pure-Rust engines agree on a Table-1 layer.
+    #[test]
+    fn pjrt_layer_matches_rust_engines() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = Runtime::open(&artifacts_dir()).unwrap();
+        let layer = layer_by_name("cgan_dc2").unwrap();
+        let mut rng = Rng::new(77);
+        let x = Tensor::randn(&[1, layer.h, layer.h, layer.c_in], &mut rng);
+        let k = Tensor::randn(&[layer.k, layer.k, layer.c_in, layer.c_out],
+                              &mut rng).scale(0.05);
+        let got_pallas = rt.run("cgan_dc2_huge2", &[&x, &k]).unwrap();
+        let got_base = rt.run("cgan_dc2_baseline", &[&x, &k]).unwrap();
+        let want = baseline::conv2d_transpose(&x, &k, &layer.deconv_params());
+        assert_eq!(got_pallas[0].shape(), want.shape());
+        assert!(got_pallas[0].allclose(&want, 1e-3),
+                "pallas vs rust: {}", got_pallas[0].max_abs_diff(&want));
+        assert!(got_base[0].allclose(&want, 1e-3),
+                "jax-baseline vs rust: {}", got_base[0].max_abs_diff(&want));
+    }
+
+    #[test]
+    fn rejects_wrong_input_count_and_shape() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::open(&artifacts_dir()).unwrap();
+        let exe = rt.load("cgan_dc2_huge2").unwrap();
+        let x = Tensor::zeros(&[1, 16, 16, 128]);
+        assert!(exe.run(&[&x]).is_err()); // missing kernel input
+        let bad = Tensor::zeros(&[1, 2, 2, 1]);
+        let k = Tensor::zeros(&[4, 4, 128, 3]);
+        assert!(exe.run(&[&bad, &k]).is_err());
+    }
+
+    #[test]
+    fn executables_are_cached() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::open(&artifacts_dir()).unwrap();
+        let a = rt.load("cgan_dc2_huge2").unwrap();
+        let b = rt.load("cgan_dc2_huge2").unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::open(&artifacts_dir()).unwrap();
+        assert!(rt.load("does_not_exist").is_err());
+    }
+}

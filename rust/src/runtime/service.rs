@@ -1,0 +1,239 @@
+//! Runtime service thread: the PJRT client behind a `Send + Sync` handle.
+//!
+//! The `xla` crate's client/executable types hold `Rc`s and raw pointers
+//! (not `Send`), so the engine runs ONE dedicated runtime thread that owns
+//! the [`Runtime`] and serves execution jobs over a channel. This also
+//! serialises device access — the CPU PJRT client parallelises *inside* an
+//! execution, so a single submission thread is the throughput-optimal
+//! topology (and matches how a real TPU/edge accelerator is driven).
+//!
+//! Model weights are **bound once** (`bind`) and stay resident in the
+//! service thread, so a per-batch job ships only the latents — the
+//! multi-megabyte weight tensors never cross the channel after load.
+
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use crate::tensor::Tensor;
+
+use super::artifact::Manifest;
+use super::pjrt::Runtime;
+
+enum Job {
+    /// Execute `name` with `inputs` (+ weights bound under `bound_key`).
+    Run {
+        name: String,
+        inputs: Vec<Tensor>,
+        bound_key: Option<String>,
+        reply: mpsc::Sender<Result<Vec<Tensor>>>,
+    },
+    /// Store weights under a key, resident in the service thread.
+    Bind {
+        key: String,
+        weights: Vec<Tensor>,
+        reply: mpsc::Sender<Result<()>>,
+    },
+    /// Pre-compile an artifact (warmup).
+    Warm { name: String, reply: mpsc::Sender<Result<()>> },
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to the runtime service.
+pub struct RuntimeHandle {
+    tx: Mutex<mpsc::Sender<Job>>,
+    manifest: Manifest,
+}
+
+impl RuntimeHandle {
+    /// Start the service thread on an artifact directory.
+    pub fn spawn(dir: PathBuf) -> Result<Self> {
+        let manifest = Manifest::load(&dir)?;
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (init_tx, init_rx) = mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("pjrt-runtime".into())
+            .spawn(move || {
+                let rt = match Runtime::open(&dir) {
+                    Ok(rt) => {
+                        let _ = init_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let mut bound: HashMap<String, Vec<Tensor>> = HashMap::new();
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        Job::Run { name, inputs, bound_key, reply } => {
+                            let res = (|| {
+                                let mut refs: Vec<&Tensor> =
+                                    inputs.iter().collect();
+                                if let Some(key) = &bound_key {
+                                    let w = bound.get(key).ok_or_else(|| {
+                                        anyhow!("no weights bound as \
+                                                 {key:?}")
+                                    })?;
+                                    refs.extend(w.iter());
+                                }
+                                rt.run(&name, &refs)
+                            })();
+                            let _ = reply.send(res);
+                        }
+                        Job::Bind { key, weights, reply } => {
+                            bound.insert(key, weights);
+                            let _ = reply.send(Ok(()));
+                        }
+                        Job::Warm { name, reply } => {
+                            let _ = reply.send(rt.load(&name).map(|_| ()));
+                        }
+                        Job::Shutdown => break,
+                    }
+                }
+            })?;
+        init_rx
+            .recv()
+            .map_err(|_| anyhow!("runtime thread died during init"))??;
+        Ok(RuntimeHandle { tx: Mutex::new(tx), manifest })
+    }
+
+    fn send(&self, job: Job) -> Result<()> {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(job)
+            .map_err(|_| anyhow!("runtime service stopped"))
+    }
+
+    /// Execute an artifact with explicit inputs.
+    pub fn run(&self, name: &str, inputs: Vec<Tensor>)
+               -> Result<Vec<Tensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Job::Run {
+            name: name.into(),
+            inputs,
+            bound_key: None,
+            reply,
+        })?;
+        rx.recv().map_err(|_| anyhow!("runtime service stopped"))?
+    }
+
+    /// Execute with `inputs` followed by the weights bound under `key`.
+    pub fn run_bound(&self, name: &str, inputs: Vec<Tensor>, key: &str)
+                     -> Result<Vec<Tensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Job::Run {
+            name: name.into(),
+            inputs,
+            bound_key: Some(key.into()),
+            reply,
+        })?;
+        rx.recv().map_err(|_| anyhow!("runtime service stopped"))?
+    }
+
+    /// Make weights resident in the service thread under `key`.
+    pub fn bind(&self, key: &str, weights: Vec<Tensor>) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Job::Bind { key: key.into(), weights, reply })?;
+        rx.recv().map_err(|_| anyhow!("runtime service stopped"))?
+    }
+
+    /// Pre-compile an artifact so first-request latency excludes XLA
+    /// compilation.
+    pub fn warm(&self, name: &str) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Job::Warm { name: name.into(), reply })?;
+        rx.recv().map_err(|_| anyhow!("runtime service stopped"))?
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+}
+
+impl Drop for RuntimeHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.lock().unwrap().send(Job::Shutdown);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use std::path::Path;
+    use std::sync::Arc;
+
+    fn dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have() -> bool {
+        dir().join("manifest.txt").exists()
+    }
+
+    #[test]
+    fn run_through_service_thread() {
+        if !have() {
+            return;
+        }
+        let h = RuntimeHandle::spawn(dir()).unwrap();
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[1, 16, 16, 128], &mut rng);
+        let k = Tensor::randn(&[4, 4, 128, 3], &mut rng).scale(0.05);
+        let out = h.run("cgan_dc2_huge2", vec![x, k]).unwrap();
+        assert_eq!(out[0].shape(), &[1, 32, 32, 3]);
+    }
+
+    #[test]
+    fn bound_weights_stay_resident() {
+        if !have() {
+            return;
+        }
+        let h = RuntimeHandle::spawn(dir()).unwrap();
+        let mut rng = Rng::new(4);
+        let k = Tensor::randn(&[4, 4, 128, 3], &mut rng).scale(0.05);
+        h.bind("w", vec![k.clone()]).unwrap();
+        let x = Tensor::randn(&[1, 16, 16, 128], &mut rng);
+        let a = h.run_bound("cgan_dc2_huge2", vec![x.clone()], "w").unwrap();
+        let b = h.run("cgan_dc2_huge2", vec![x, k]).unwrap();
+        assert!(a[0].allclose(&b[0], 1e-6));
+    }
+
+    #[test]
+    fn handle_shared_across_threads() {
+        if !have() {
+            return;
+        }
+        let h = Arc::new(RuntimeHandle::spawn(dir()).unwrap());
+        h.warm("cgan_dc2_huge2").unwrap();
+        let mut joins = Vec::new();
+        for t in 0..4u64 {
+            let h = h.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(t);
+                let x = Tensor::randn(&[1, 16, 16, 128], &mut rng);
+                let k = Tensor::randn(&[4, 4, 128, 3], &mut rng);
+                let out = h.run("cgan_dc2_huge2", vec![x, k]).unwrap();
+                assert_eq!(out[0].shape(), &[1, 32, 32, 3]);
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn unknown_bind_key_is_clean_error() {
+        if !have() {
+            return;
+        }
+        let h = RuntimeHandle::spawn(dir()).unwrap();
+        let x = Tensor::zeros(&[1, 16, 16, 128]);
+        assert!(h.run_bound("cgan_dc2_huge2", vec![x], "nope").is_err());
+    }
+}

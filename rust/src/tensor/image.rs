@@ -1,0 +1,85 @@
+//! Image output substrate: write generated `(1, H, W, 3)` tensors in
+//! [-1, 1] as binary PPM (P6) — no image crates in the vendor set, and an
+//! edge generation engine must be able to emit its product.
+
+use super::Tensor;
+use std::io::Write;
+use std::path::Path;
+
+/// Map [-1, 1] to [0, 255] with clamping.
+#[inline]
+fn to_u8(v: f32) -> u8 {
+    (((v.clamp(-1.0, 1.0) + 1.0) * 0.5) * 255.0).round() as u8
+}
+
+/// Write an NHWC `(1, H, W, 3)` tensor as a binary PPM file.
+pub fn write_ppm(img: &Tensor, path: &Path) -> std::io::Result<()> {
+    let (b, h, w, c) = img.dims4();
+    assert_eq!((b, c), (1, 3), "write_ppm wants (1, H, W, 3)");
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write!(f, "P6\n{w} {h}\n255\n")?;
+    let bytes: Vec<u8> = img.data().iter().map(|&v| to_u8(v)).collect();
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Tile a batch `(B, H, W, 3)` into one `(1, rows·H, cols·W, 3)` montage.
+pub fn montage(imgs: &Tensor, cols: usize) -> Tensor {
+    let (b, h, w, c) = imgs.dims4();
+    assert_eq!(c, 3);
+    let cols = cols.max(1).min(b);
+    let rows = b.div_ceil(cols);
+    let mut out = Tensor::zeros(&[1, rows * h, cols * w, c]);
+    for bi in 0..b {
+        let (ry, cx) = (bi / cols, bi % cols);
+        for y in 0..h {
+            let src = ((bi * h + y) * w) * c;
+            let dst = (((ry * h + y) * cols * w) + cx * w) * c;
+            out.data_mut()[dst..dst + w * c]
+                .copy_from_slice(&imgs.data()[src..src + w * c]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn ppm_round_trip_header_and_size() {
+        let mut rng = Rng::new(1);
+        let img = Tensor::randn(&[1, 8, 6, 3], &mut rng).tanh();
+        let path = std::env::temp_dir().join("huge2_test.ppm");
+        write_ppm(&img, &path).unwrap();
+        let data = std::fs::read(&path).unwrap();
+        assert!(data.starts_with(b"P6\n6 8\n255\n"));
+        assert_eq!(data.len(), b"P6\n6 8\n255\n".len() + 8 * 6 * 3);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn value_mapping() {
+        assert_eq!(to_u8(-1.0), 0);
+        assert_eq!(to_u8(1.0), 255);
+        assert_eq!(to_u8(0.0), 128);
+        assert_eq!(to_u8(-5.0), 0); // clamped
+    }
+
+    #[test]
+    fn montage_tiles() {
+        let mut imgs = Tensor::zeros(&[4, 2, 2, 3]);
+        // mark each image's (0,0,0) with its index
+        for bi in 0..4 {
+            let off = bi * 2 * 2 * 3;
+            imgs.data_mut()[off] = bi as f32;
+        }
+        let m = montage(&imgs, 2);
+        assert_eq!(m.shape(), &[1, 4, 4, 3]);
+        assert_eq!(m.at(&[0, 0, 0, 0]), 0.0);
+        assert_eq!(m.at(&[0, 0, 2, 0]), 1.0);
+        assert_eq!(m.at(&[0, 2, 0, 0]), 2.0);
+        assert_eq!(m.at(&[0, 2, 2, 0]), 3.0);
+    }
+}

@@ -1,0 +1,331 @@
+//! Dense f32 tensor substrate.
+//!
+//! Activations are **NHWC** (`[batch, height, width, channels]`) and
+//! kernels **HWIO** (`[r, s, c_in, c_out]`) throughout the crate — the
+//! same canonical convention as the python oracle (`ref.py`), so numeric
+//! cross-checks between layers are byte-comparable.
+//!
+//! The paper's untangling step prefers layouts where C (inputs) and N
+//! (kernels) are innermost/contiguous ("C×N×R×S kernels, C×H×W inputs",
+//! §4.2); NHWC/HWIO give exactly that contiguity on the dimensions the
+//! untangled GEMMs stream over.
+
+pub mod image;
+
+use crate::rng::Rng;
+use std::fmt;
+
+/// A dense, row-major f32 tensor with dynamic rank.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    // ---------------------------------------------------------------- ctors
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {:?} != data len {}", shape, data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    /// Standard-normal entries scaled like the python init (0.02·N(0,1)
+    /// is applied by callers that want DCGAN-style weights).
+    pub fn randn(shape: &[usize], rng: &mut Rng) -> Self {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.next_normal()).collect();
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    // ------------------------------------------------------------ accessors
+
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Flat offset of a multi-index (row-major).
+    #[inline]
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (i, (&ix, &d)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(ix < d, "index {ix} out of bound {d} at dim {i}");
+            off = off * d + ix;
+        }
+        off
+    }
+
+    #[inline]
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let off = self.offset(idx);
+        self.data[off] = v;
+    }
+
+    // ----------------------------------------------------------- transforms
+
+    /// Reinterpret with a new shape (same element count).
+    pub fn reshape(&self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        Tensor { shape: shape.to_vec(), data: self.data.clone() }
+    }
+
+    /// NHWC -> NCHW copy (for the DarkNet-layout baseline experiments).
+    pub fn nhwc_to_nchw(&self) -> Tensor {
+        let (b, h, w, c) = self.dims4();
+        let mut out = Tensor::zeros(&[b, c, h, w]);
+        for bi in 0..b {
+            for hi in 0..h {
+                for wi in 0..w {
+                    for ci in 0..c {
+                        let v = self.data[((bi * h + hi) * w + wi) * c + ci];
+                        out.data[((bi * c + ci) * h + hi) * w + wi] = v;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// NCHW -> NHWC copy.
+    pub fn nchw_to_nhwc(&self) -> Tensor {
+        let (b, c, h, w) = self.dims4();
+        let mut out = Tensor::zeros(&[b, h, w, c]);
+        for bi in 0..b {
+            for ci in 0..c {
+                for hi in 0..h {
+                    for wi in 0..w {
+                        let v = self.data[((bi * c + ci) * h + hi) * w + wi];
+                        out.data[((bi * h + hi) * w + wi) * c + ci] = v;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Zero-pad spatial dims of an NHWC tensor:
+    /// `(lo_h, hi_h, lo_w, hi_w)`.
+    pub fn pad_spatial(&self, lo_h: usize, hi_h: usize, lo_w: usize,
+                       hi_w: usize) -> Tensor {
+        let (b, h, w, c) = self.dims4();
+        let mut out = Tensor::zeros(&[b, h + lo_h + hi_h, w + lo_w + hi_w, c]);
+        let wo = w + lo_w + hi_w;
+        for bi in 0..b {
+            for hi in 0..h {
+                let src = ((bi * h + hi) * w) * c;
+                let dst = ((bi * (h + lo_h + hi_h) + hi + lo_h) * wo + lo_w) * c;
+                out.data[dst..dst + w * c]
+                    .copy_from_slice(&self.data[src..src + w * c]);
+            }
+        }
+        out
+    }
+
+    /// Elementwise map.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn relu(&self) -> Tensor {
+        self.map(|x| x.max(0.0))
+    }
+
+    pub fn tanh(&self) -> Tensor {
+        self.map(f32::tanh)
+    }
+
+    pub fn leaky_relu(&self, a: f32) -> Tensor {
+        self.map(|x| if x >= 0.0 { x } else { a * x })
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    // ----------------------------------------------------------- comparison
+
+    /// Max |a - b| over all elements (shape must match).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Mixed absolute/relative closeness, the rust analogue of
+    /// `np.testing.assert_allclose(atol=tol, rtol=tol)`.
+    pub fn allclose(&self, other: &Tensor, tol: f32) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= tol + tol * b.abs().max(a.abs()))
+    }
+
+    /// Deterministic checksum (order-dependent FNV over bit patterns) for
+    /// cross-layer regression pinning.
+    pub fn checksum(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &v in &self.data {
+            // Canonicalise -0.0 so equal tensors hash equal.
+            let bits = if v == 0.0 { 0 } else { v.to_bits() };
+            h ^= bits as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        h
+    }
+
+    // -------------------------------------------------------------- helpers
+
+    /// Unpack a rank-4 shape.
+    #[inline]
+    pub fn dims4(&self) -> (usize, usize, usize, usize) {
+        assert_eq!(self.shape.len(), 4, "expected rank-4, got {:?}", self.shape);
+        (self.shape[0], self.shape[1], self.shape[2], self.shape[3])
+    }
+
+    /// Unpack a rank-2 shape.
+    #[inline]
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.shape.len(), 2, "expected rank-2, got {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 16 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_row_major() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|x| x as f32).collect());
+        assert_eq!(t.at(&[0, 0]), 0.0);
+        assert_eq!(t.at(&[0, 2]), 2.0);
+        assert_eq!(t.at(&[1, 0]), 3.0);
+        assert_eq!(t.at(&[1, 2]), 5.0);
+    }
+
+    #[test]
+    fn layout_round_trip() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn(&[2, 3, 4, 5], &mut rng);
+        let back = t.nhwc_to_nchw().nchw_to_nhwc();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn pad_spatial_places_content() {
+        let t = Tensor::full(&[1, 2, 2, 1], 7.0);
+        let p = t.pad_spatial(1, 2, 3, 0);
+        assert_eq!(p.shape(), &[1, 5, 5, 1]);
+        assert_eq!(p.at(&[0, 1, 3, 0]), 7.0);
+        assert_eq!(p.at(&[0, 0, 3, 0]), 0.0);
+        let total: f32 = p.data().iter().sum();
+        assert_eq!(total, 4.0 * 7.0);
+    }
+
+    #[test]
+    fn allclose_tolerates_small_error() {
+        let a = Tensor::full(&[4], 1.0);
+        let mut b = a.clone();
+        b.data_mut()[2] = 1.0 + 5e-7;
+        assert!(a.allclose(&b, 1e-5));
+        b.data_mut()[2] = 1.1;
+        assert!(!a.allclose(&b, 1e-5));
+    }
+
+    #[test]
+    fn checksum_sensitive_to_order() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![2.0, 1.0]);
+        assert_ne!(a.checksum(), b.checksum());
+        assert_eq!(a.checksum(), a.clone().checksum());
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_checks_len() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+}

@@ -1,0 +1,100 @@
+//! Synthetic request-workload generators for the serving benches:
+//! open-loop Poisson arrivals (edge cameras / interactive clients) and
+//! closed-loop saturation (the paper's "throughput" setting).
+
+use crate::rng::Rng;
+use std::time::Duration;
+
+/// One generation request in a workload trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Arrival {
+    /// Offset from trace start.
+    pub at: Duration,
+    /// Request id (dense, 0-based).
+    pub id: u64,
+}
+
+/// Open-loop Poisson arrival process at `rate_hz`, `n` requests.
+pub fn poisson(rate_hz: f64, n: usize, seed: u64) -> Vec<Arrival> {
+    assert!(rate_hz > 0.0);
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    (0..n as u64)
+        .map(|id| {
+            t += rng.next_exp(rate_hz);
+            Arrival { at: Duration::from_secs_f64(t), id }
+        })
+        .collect()
+}
+
+/// Deterministic uniform arrivals (one every `1/rate_hz`).
+pub fn uniform(rate_hz: f64, n: usize) -> Vec<Arrival> {
+    assert!(rate_hz > 0.0);
+    let dt = 1.0 / rate_hz;
+    (0..n as u64)
+        .map(|id| Arrival {
+            at: Duration::from_secs_f64(dt * (id + 1) as f64),
+            id,
+        })
+        .collect()
+}
+
+/// Bursty arrivals: bursts of `burst` back-to-back requests with Poisson
+/// gaps between bursts — stresses the dynamic batcher's deadline logic.
+pub fn bursty(burst: usize, gap_hz: f64, n: usize, seed: u64)
+              -> Vec<Arrival> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    let mut id = 0u64;
+    while out.len() < n {
+        t += rng.next_exp(gap_hz);
+        for _ in 0..burst {
+            if out.len() == n {
+                break;
+            }
+            out.push(Arrival { at: Duration::from_secs_f64(t), id });
+            id += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_rate() {
+        let tr = poisson(100.0, 20_000, 7);
+        let span = tr.last().unwrap().at.as_secs_f64();
+        let rate = tr.len() as f64 / span;
+        assert!((rate - 100.0).abs() < 5.0, "rate {rate}");
+    }
+
+    #[test]
+    fn arrivals_monotone() {
+        for tr in [poisson(50.0, 1000, 1), uniform(50.0, 1000),
+                   bursty(8, 10.0, 1000, 2)] {
+            for w in tr.windows(2) {
+                assert!(w[0].at <= w[1].at);
+                assert_eq!(w[0].id + 1, w[1].id);
+            }
+        }
+    }
+
+    #[test]
+    fn bursty_groups() {
+        let tr = bursty(4, 10.0, 40, 3);
+        // every burst of 4 shares a timestamp
+        for chunk in tr.chunks(4) {
+            assert!(chunk.iter().all(|a| a.at == chunk[0].at));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        assert_eq!(poisson(10.0, 100, 5), poisson(10.0, 100, 5));
+        assert_ne!(poisson(10.0, 100, 5), poisson(10.0, 100, 6));
+    }
+}

@@ -1,0 +1,178 @@
+//! Property-based tests on coordinator invariants (hand-rolled,
+//! seeded — proptest is not in the vendor set).
+//!
+//! * queue: model-based test against `VecDeque` (FIFO, capacity,
+//!   close semantics hold under random op sequences)
+//! * batcher: batches partition the request stream, never exceed
+//!   max_batch, preserve order
+//! * accounting: submitted == completed + rejected after drain
+//! * histogram: quantiles within log-bucket error of exact values
+
+use huge2::coordinator::batcher::{ideal_batches, next_batch};
+use huge2::coordinator::{BoundedQueue, PushError};
+use huge2::metrics::Histogram;
+use huge2::rng::Rng;
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Duration;
+
+#[test]
+fn queue_matches_vecdeque_model() {
+    let mut rng = Rng::new(42);
+    for case in 0..50 {
+        let cap = 1 + rng.next_below(8);
+        let q: BoundedQueue<u32> = BoundedQueue::new(cap);
+        let mut model: VecDeque<u32> = VecDeque::new();
+        let mut closed = false;
+        for op in 0..200 {
+            match rng.next_below(if closed { 2 } else { 3 }) {
+                0 => {
+                    // pop
+                    let got = q.try_pop();
+                    let want = model.pop_front();
+                    assert_eq!(got, want, "case {case} op {op}");
+                }
+                1 => {
+                    // len check
+                    assert_eq!(q.len(), model.len());
+                }
+                _ => {
+                    // push
+                    let v = rng.next_u64() as u32;
+                    match q.try_push(v) {
+                        Ok(()) => {
+                            assert!(model.len() < cap && !closed);
+                            model.push_back(v);
+                        }
+                        Err(PushError::Full(x)) => {
+                            assert_eq!(x, v);
+                            assert_eq!(model.len(), cap);
+                        }
+                        Err(PushError::Closed(x)) => {
+                            assert_eq!(x, v);
+                            assert!(closed);
+                        }
+                    }
+                }
+            }
+            if op == 150 {
+                q.close();
+                closed = true;
+            }
+        }
+    }
+}
+
+#[test]
+fn batches_partition_stream_in_order() {
+    let mut rng = Rng::new(7);
+    for _ in 0..30 {
+        let n = 1 + rng.next_below(64);
+        let max_batch = 1 + rng.next_below(10);
+        let q = Arc::new(BoundedQueue::new(n));
+        for i in 0..n as u32 {
+            q.try_push(i).unwrap();
+        }
+        q.close();
+        let mut seen = Vec::new();
+        while let Some(batch) =
+            next_batch(&q, max_batch, Duration::from_micros(100))
+        {
+            assert!(!batch.is_empty() && batch.len() <= max_batch);
+            seen.extend(batch);
+        }
+        assert_eq!(seen, (0..n as u32).collect::<Vec<_>>(),
+                   "stream must be partitioned in order");
+    }
+}
+
+#[test]
+fn ideal_batches_invariants() {
+    let mut rng = Rng::new(11);
+    for _ in 0..100 {
+        let n = 1 + rng.next_below(40);
+        let max_batch = 1 + rng.next_below(8);
+        let timeout = 1 + rng.next_below(100) as u64;
+        let mut t = 0u64;
+        let arrivals: Vec<u64> = (0..n)
+            .map(|_| {
+                t += rng.next_below(50) as u64;
+                t
+            })
+            .collect();
+        let batches = ideal_batches(&arrivals, max_batch, timeout);
+        assert_eq!(batches.iter().sum::<usize>(), n, "partition");
+        assert!(batches.iter().all(|&b| b >= 1 && b <= max_batch));
+    }
+}
+
+#[test]
+fn histogram_quantiles_bounded_error() {
+    let mut rng = Rng::new(13);
+    for _ in 0..10 {
+        let h = Histogram::new();
+        let mut vals: Vec<u64> = (0..2000)
+            .map(|_| 1 + rng.next_u64() % 1_000_000)
+            .collect();
+        for &v in &vals {
+            h.record(Duration::from_micros(v));
+        }
+        vals.sort_unstable();
+        for q in [0.5, 0.9, 0.99] {
+            let exact = vals[((vals.len() as f64 * q) as usize)
+                .min(vals.len() - 1)] as f64;
+            let est = h.quantile_us(q) as f64;
+            let rel = (est - exact).abs() / exact;
+            assert!(rel < 0.10, "q={q}: est {est} vs exact {exact} \
+                                 (rel {rel:.3})");
+        }
+        assert_eq!(h.count(), 2000);
+    }
+}
+
+#[test]
+fn engine_accounting_invariant_under_flood() {
+    use huge2::config::{cgan_layers, EngineConfig};
+    use huge2::coordinator::{Engine, Model};
+    use huge2::gan::Generator;
+
+    let mut rng = Rng::new(3);
+    let mut cfgs = cgan_layers();
+    for l in &mut cfgs {
+        l.c_in /= 8;
+        if l.c_out > 3 {
+            l.c_out /= 8;
+        }
+    }
+    cfgs[1].c_in = cfgs[0].c_out;
+    let gen = Generator::new(cfgs, 8, 0, &mut rng);
+    let mut eng = Engine::new(EngineConfig {
+        workers: 2,
+        queue_depth: 4,
+        max_batch: 4,
+        batch_timeout_us: 200,
+        ..EngineConfig::default()
+    });
+    eng.register_native(Model::native("m", Arc::new(gen), 0)).unwrap();
+
+    let mut receivers = Vec::new();
+    let mut rejected = 0u64;
+    for _ in 0..120 {
+        match eng.submit("m", vec![0.0; 8], vec![]) {
+            Ok(rx) => receivers.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    let mut completed = 0u64;
+    for rx in receivers {
+        if rx.recv().is_ok() {
+            completed += 1;
+        }
+    }
+    use std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(eng.counters.submitted.load(Relaxed), 120);
+    assert_eq!(eng.counters.rejected.load(Relaxed), rejected);
+    assert_eq!(eng.counters.completed.load(Relaxed), completed);
+    // conservation: every submission is accounted for exactly once
+    assert_eq!(completed + rejected, 120);
+}

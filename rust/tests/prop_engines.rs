@@ -1,0 +1,162 @@
+//! Property-based tests over the deconvolution engines (hand-rolled
+//! generator loop — the vendor set has no proptest; every case is seeded
+//! and reproducible from the printed seed).
+//!
+//! Invariants:
+//!  * HUGE² == baseline on random legal transposed-conv configs
+//!  * untangled dilated == naive dilated on random configs
+//!  * decomposition partitions the kernel taps exactly
+//!  * MAC accounting: huge2 ≤ naive, equality iff stride == 1
+
+use huge2::deconv::{axis_pattern, baseline, dilated, huge2 as engine,
+                    polyphase_len, DeconvParams, DilatedParams};
+use huge2::rng::Rng;
+use huge2::tensor::Tensor;
+
+const CASES: usize = 120;
+
+fn rand_dims(rng: &mut Rng) -> (usize, usize, usize, usize) {
+    (
+        2 + rng.next_below(7),  // h in 2..9
+        1 + rng.next_below(6),  // c
+        1 + rng.next_below(6),  // n
+        1 + rng.next_below(5),  // r in 1..6
+    )
+}
+
+#[test]
+fn transpose_engines_agree_on_random_configs() {
+    let mut rng = Rng::new(0xdeadbeef);
+    let mut tested = 0;
+    while tested < CASES {
+        let seed = rng.next_u64();
+        let mut r2 = Rng::new(seed);
+        let (h, c, n, r) = rand_dims(&mut r2);
+        let stride = 1 + r2.next_below(3);
+        let pad = r2.next_below(r);
+        let out_pad = r2.next_below(stride.max(1));
+        let p = DeconvParams::new(stride, pad, out_pad);
+        if (h - 1) * stride + r + out_pad <= 2 * pad {
+            continue; // empty output
+        }
+        let x = Tensor::randn(&[1, h, h, c], &mut r2);
+        let k = Tensor::randn(&[r, r, c, n], &mut r2);
+        let want = baseline::conv2d_transpose(&x, &k, &p);
+        let got = engine::conv2d_transpose(&x, &k, &p);
+        assert!(got.allclose(&want, 1e-3),
+                "seed {seed:#x}: h={h} c={c} n={n} r={r} {p:?} \
+                 diff={}", got.max_abs_diff(&want));
+        tested += 1;
+    }
+}
+
+#[test]
+fn dilated_engines_agree_on_random_configs() {
+    let mut rng = Rng::new(0xfeedface);
+    let mut tested = 0;
+    while tested < CASES {
+        let seed = rng.next_u64();
+        let mut r2 = Rng::new(seed);
+        let (mut h, c, n, r) = rand_dims(&mut r2);
+        h += 6; // dilated kernels need room
+        let d = 1 + r2.next_below(4);
+        let stride = 1 + r2.next_below(2);
+        let pad = r2.next_below(2 * d);
+        let p = DilatedParams::new(d, stride, pad);
+        if h + 2 * pad < p.eff_kernel(r) {
+            continue;
+        }
+        let x = Tensor::randn(&[1, h, h, c], &mut r2);
+        let k = Tensor::randn(&[r, r, c, n], &mut r2);
+        let want = baseline::conv2d_dilated(&x, &k, &p);
+        let got = dilated::conv2d_dilated(&x, &k, &p);
+        assert!(got.allclose(&want, 1e-3),
+                "seed {seed:#x}: h={h} c={c} n={n} r={r} {p:?} \
+                 diff={}", got.max_abs_diff(&want));
+        tested += 1;
+    }
+}
+
+#[test]
+fn patterns_partition_taps_and_outputs() {
+    let mut rng = Rng::new(0xabcdef);
+    for _ in 0..400 {
+        let r = 1 + rng.next_below(7);
+        let stride = 1 + rng.next_below(4);
+        let pad = rng.next_below(r);
+        // taps across patterns partition the kernel rows exactly
+        let taps: usize = (0..stride)
+            .map(|phi| axis_pattern(r, stride, pad, phi).taps)
+            .sum();
+        assert_eq!(taps, r, "r={r} stride={stride} pad={pad}");
+        // polyphases partition any output length
+        let total = 1 + rng.next_below(64);
+        let s: usize = (0..stride)
+            .map(|phi| polyphase_len(total, stride, phi))
+            .sum();
+        assert_eq!(s, total);
+    }
+}
+
+#[test]
+fn mac_counts_never_increase() {
+    let mut rng = Rng::new(0x123456);
+    for _ in 0..300 {
+        let h = 2 + rng.next_below(30);
+        let r = 1 + rng.next_below(6);
+        let stride = 1 + rng.next_below(4);
+        let pad = rng.next_below(r);
+        let out_pad = rng.next_below(stride);
+        let p = DeconvParams::new(stride, pad, out_pad);
+        if (h - 1) * stride + r + out_pad <= 2 * pad {
+            continue;
+        }
+        let (naive, eff) = engine::mac_counts(h, h, 8, 8, r, r, &p);
+        assert!(eff <= naive, "h={h} r={r} {p:?}");
+        if stride == 1 {
+            assert_eq!(eff, naive, "stride 1 has nothing to skip");
+        }
+    }
+}
+
+#[test]
+fn batch_equals_per_image_loop() {
+    // processing a batch == processing each image separately
+    let mut rng = Rng::new(0x777);
+    let p = DeconvParams::new(2, 2, 1);
+    let b = 3;
+    let x = Tensor::randn(&[b, 5, 5, 4], &mut rng);
+    let k = Tensor::randn(&[5, 5, 4, 3], &mut rng);
+    let all = engine::conv2d_transpose(&x, &k, &p);
+    let (_, ho, wo, n) = all.dims4();
+    for bi in 0..b {
+        let xi = Tensor::from_vec(
+            &[1, 5, 5, 4],
+            x.data()[bi * 100..(bi + 1) * 100].to_vec(),
+        );
+        let yi = engine::conv2d_transpose(&xi, &k, &p);
+        let want = &all.data()[bi * ho * wo * n..(bi + 1) * ho * wo * n];
+        let diff = yi
+            .data()
+            .iter()
+            .zip(want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(diff < 1e-5, "batch {bi} diff {diff}");
+    }
+}
+
+#[test]
+fn linearity_of_the_operator() {
+    // deconv(a·x1 + x2) == a·deconv(x1) + deconv(x2)
+    let mut rng = Rng::new(0x999);
+    let p = DeconvParams::new(2, 1, 1);
+    let x1 = Tensor::randn(&[1, 6, 6, 3], &mut rng);
+    let x2 = Tensor::randn(&[1, 6, 6, 3], &mut rng);
+    let k = Tensor::randn(&[3, 3, 3, 2], &mut rng);
+    let a = 2.5f32;
+    let lhs = engine::conv2d_transpose(&x1.scale(a).add(&x2), &k, &p);
+    let rhs = engine::conv2d_transpose(&x1, &k, &p).scale(a)
+        .add(&engine::conv2d_transpose(&x2, &k, &p));
+    assert!(lhs.allclose(&rhs, 1e-3), "diff {}", lhs.max_abs_diff(&rhs));
+}
