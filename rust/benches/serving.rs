@@ -1,11 +1,15 @@
 //! End-to-end serving bench: the L3 engine over the AOT JAX/Pallas
-//! artifacts, with a **batching ablation** (DESIGN.md §5 E2E-serve).
+//! artifacts, with a **batching ablation** (DESIGN.md §5 E2E-serve) and a
+//! **replay-driven regression workload** (DESIGN.md §7): a recorded trace
+//! re-drives the bit-identical workload every run, so throughput deltas
+//! are attributable to engine changes, not workload noise.
 //!
 //! Measures closed-loop throughput and open-loop latency with the dynamic
 //! batcher on (max_batch 8, 20 ms window) vs off (max_batch 1), plus the
 //! native pure-Rust engine for reference.
 //!
-//! Run: `cargo bench --bench serving` (needs `make artifacts`).
+//! Run: `cargo bench --bench serving` (the replay section always runs;
+//! the PJRT sections need `make artifacts`).
 
 use huge2::bench_util::{fmt_dur, Table};
 use huge2::config::EngineConfig;
@@ -54,14 +58,116 @@ fn closed_loop(eng: &Arc<Engine>, model: &str, z_dim: usize,
     )
 }
 
-fn main() {
-    let dir = std::path::PathBuf::from("artifacts");
-    if !dir.join("manifest.txt").exists() {
-        eprintln!("serving bench needs artifacts: run `make artifacts`");
-        return;
+/// Replay-driven regression entry: record one bursty native serve run,
+/// then re-drive the identical workload twice in fast mode against fresh
+/// engines. Divergence aborts the bench — a perf number from an engine
+/// that changed its outputs is not a regression measurement.
+fn replay_regression(quick: bool) {
+    use huge2::replay::{Recorder, Replayer, Timing, TraceHeader,
+                        TraceSink};
+    use huge2::trace::bursty;
+
+    let n = if quick { 16 } else { 64 };
+    let seed = 42u64;
+    let build = |sink: Option<Arc<TraceSink>>| -> Engine {
+        let mut e = Engine::new(EngineConfig {
+            workers: 2,
+            max_batch: 8,
+            batch_timeout_us: 2_000,
+            ..EngineConfig::default()
+        });
+        if let Some(s) = sink {
+            e.set_trace_sink(s).unwrap();
+        }
+        let gen = Generator::tiny_cgan(seed);
+        e.register_native(Model::native("tiny", Arc::new(gen), 0))
+            .unwrap();
+        e
+    };
+
+    println!("\n== replay-driven regression workload (record once, \
+              verified replay) ==\n");
+    let sink = Arc::new(TraceSink::new());
+    let eng = build(Some(sink.clone()));
+    let arrivals = bursty(8, 50.0, n, 7);
+    let t0 = Instant::now();
+    let mut rng = Rng::new(1);
+    let mut pending = Vec::new();
+    for a in &arrivals {
+        let wait = a.at.saturating_sub(t0.elapsed());
+        if !wait.is_zero() {
+            std::thread::sleep(wait);
+        }
+        let z: Vec<f32> = (0..8).map(|_| rng.next_normal()).collect();
+        if let Ok(rx) = eng.submit("tiny", z, vec![]) {
+            pending.push(rx);
+        }
     }
+    for rx in pending {
+        let _ = rx.recv();
+    }
+    let t_record = t0.elapsed();
+    eng.shutdown();
+    let rec = Recorder::from_parts(
+        TraceHeader {
+            model: "tiny".into(),
+            backend: "native".into(),
+            seed,
+            z_dim: 8,
+            cond_dim: 0,
+        },
+        sink,
+    );
+    let path = std::env::temp_dir().join(format!(
+        "huge2_serving_bench_{}.jsonl",
+        std::process::id()
+    ));
+    let n_events = rec.save(&path).unwrap();
+
+    let rp = Replayer::load(&path).unwrap();
+    let mut t = Table::new(&["phase", "requests", "wall", "img/s",
+                             "verified"]);
+    t.row(&[
+        "record (bursty, open-loop)".into(),
+        arrivals.len().to_string(),
+        fmt_dur(t_record),
+        format!("{:.1}",
+                arrivals.len() as f64 / t_record.as_secs_f64()),
+        format!("{n_events} events"),
+    ]);
+    for run in 1..=2 {
+        let eng = build(None);
+        let report = rp.run(&eng, Timing::Fast).unwrap();
+        eng.shutdown();
+        assert!(report.is_clean(), "replay diverged: {}",
+                report.first_divergence().unwrap());
+        t.row(&[
+            format!("replay #{run} (fast)"),
+            report.requests.to_string(),
+            fmt_dur(report.wall),
+            format!("{:.1}",
+                    report.requests as f64 / report.wall.as_secs_f64()),
+            format!("{}/{} checksums", report.matched, report.compared),
+        ]);
+    }
+    t.print();
+    std::fs::remove_file(&path).ok();
+    println!("(bit-identical workload each run; divergence aborts — \
+              pin perf regressions to engine changes, not noise)");
+}
+
+fn main() {
     let quick = std::env::var("BENCH_QUICK").is_ok();
     let per_client = if quick { 2 } else { 6 };
+
+    replay_regression(quick);
+
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("\nPJRT serving sections need artifacts: run \
+                   `make artifacts`");
+        return;
+    }
 
     println!("\n== E2E serving: DCGAN generator (PJRT, JAX/Pallas HUGE2 \
               kernels, interpret-mode CPU) ==\n");

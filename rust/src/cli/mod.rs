@@ -4,16 +4,23 @@
 //! huge2 inspect                       # Table 1, MAC counts, artifacts
 //! huge2 bench --layer dcgan_dc3       # one layer, both engines
 //! huge2 serve --model dcgan --rate 2 --requests 20
+//! huge2 serve --native --record t.jsonl
+//! huge2 replay t.jsonl --timing fast  # verify recorded checksums
 //! huge2 reproduce                     # all paper tables (text form)
 //! ```
+//!
+//! Grammar: `huge2 <subcommand> [positional...] [--key value | --flag]`.
+//! Positionals (e.g. the replay trace path) must precede the first flag.
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 
-/// Parsed `--key value` / `--flag` arguments after the subcommand.
+/// Parsed `[positional...] --key value / --flag` arguments after the
+/// subcommand.
 #[derive(Debug, Default)]
 pub struct Args {
     pub subcommand: String,
+    positionals: Vec<String>,
     flags: HashMap<String, String>,
 }
 
@@ -24,13 +31,24 @@ impl Args {
         let subcommand = it
             .next()
             .ok_or_else(|| anyhow!("usage: huge2 <inspect|bench|serve|\
-                                    reproduce> [--key value]"))?
+                                    replay|reproduce> \
+                                    [positional] [--key value]"))?
             .clone();
+        let mut positionals = Vec::new();
         let mut flags = HashMap::new();
+        let mut seen_flag = false;
         while let Some(arg) = it.next() {
-            let key = arg
-                .strip_prefix("--")
-                .ok_or_else(|| anyhow!("expected --flag, got {arg:?}"))?;
+            let key = match arg.strip_prefix("--") {
+                Some(key) => key,
+                None if !seen_flag => {
+                    // leading bare tokens are positionals
+                    positionals.push(arg.clone());
+                    continue;
+                }
+                None => bail!("expected --flag, got {arg:?} \
+                               (positionals must precede flags)"),
+            };
+            seen_flag = true;
             if key.is_empty() {
                 bail!("empty flag name");
             }
@@ -45,7 +63,23 @@ impl Args {
                 }
             }
         }
-        Ok(Args { subcommand, flags })
+        Ok(Args { subcommand, positionals, flags })
+    }
+
+    /// `i`-th bare (non-flag) argument after the subcommand.
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+
+    /// Error if the command received more than `max` positionals — a
+    /// typo'd flag (`serve native` for `serve --native`) must fail
+    /// loudly, not be silently ignored.
+    pub fn expect_positionals_at_most(&self, max: usize) -> Result<()> {
+        if self.positionals.len() > max {
+            bail!("unexpected argument {:?} (did you mean --{}?)",
+                  self.positionals[max], self.positionals[max]);
+        }
+        Ok(())
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
@@ -102,7 +136,9 @@ mod tests {
     #[test]
     fn rejects_bad_input() {
         assert!(Args::parse(&[]).is_err());
-        assert!(Args::parse(&argv("bench layer")).is_err());
+        // bare token *after* a flag pair is an error, not a positional
+        assert!(Args::parse(&argv("bench --layer x --iters 3 stray"))
+            .is_err());
         let a = Args::parse(&argv("bench --iters foo")).unwrap();
         assert!(a.get_usize("iters", 1).is_err());
     }
@@ -112,5 +148,31 @@ mod tests {
         let a = Args::parse(&argv("serve --verbose --rate 2.5")).unwrap();
         assert!(a.has("verbose"));
         assert_eq!(a.get_f64("rate", 0.0).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn positionals_precede_flags() {
+        let a = Args::parse(&argv("replay trace.jsonl --timing fast"))
+            .unwrap();
+        assert_eq!(a.subcommand, "replay");
+        assert_eq!(a.positional(0), Some("trace.jsonl"));
+        assert_eq!(a.positional(1), None);
+        assert_eq!(a.get("timing"), Some("fast"));
+        // multiple positionals keep order
+        let b = Args::parse(&argv("replay a.jsonl b.jsonl")).unwrap();
+        assert_eq!(b.positional(0), Some("a.jsonl"));
+        assert_eq!(b.positional(1), Some("b.jsonl"));
+    }
+
+    #[test]
+    fn stray_positionals_are_rejected_on_demand() {
+        // `serve native` (typo'd flag) parses, but the handler-side
+        // check refuses it instead of silently ignoring the token
+        let a = Args::parse(&argv("serve native")).unwrap();
+        assert!(a.expect_positionals_at_most(0).is_err());
+        let b = Args::parse(&argv("replay t.jsonl")).unwrap();
+        assert!(b.expect_positionals_at_most(1).is_ok());
+        let c = Args::parse(&argv("replay t.jsonl extra")).unwrap();
+        assert!(c.expect_positionals_at_most(1).is_err());
     }
 }

@@ -9,6 +9,8 @@ use std::time::Instant;
 
 use crate::config::EngineConfig;
 use crate::metrics::{Counters, Histogram};
+use crate::replay::event::EventBody;
+use crate::replay::recorder::TraceSink;
 
 use super::queue::{BoundedQueue, PushError};
 use super::router::{Model, Request, Response};
@@ -19,6 +21,21 @@ struct ModelRuntime {
     queue: Arc<BoundedQueue<Request>>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
+
+/// Marker error for queue-full rejections. Callers that retry (the
+/// replayer's fast mode) downcast to distinguish *transient*
+/// backpressure from deterministic rejects (validation, shutdown):
+/// `err.downcast_ref::<Backpressure>().is_some()`.
+#[derive(Debug, Clone, Copy)]
+pub struct Backpressure;
+
+impl std::fmt::Display for Backpressure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "queue full (backpressure)")
+    }
+}
+
+impl std::error::Error for Backpressure {}
 
 /// The HUGE² edge serving engine.
 ///
@@ -42,6 +59,9 @@ pub struct Engine {
     pub counters: Arc<Counters>,
     /// Batch execution time (per batch).
     pub exec_hist: Arc<Histogram>,
+    /// Record/replay hook: when set, every arrival/enqueue/reject (here)
+    /// and batch/response (workers) is appended to the trace.
+    sink: Option<Arc<TraceSink>>,
 }
 
 impl Engine {
@@ -52,7 +72,19 @@ impl Engine {
             next_id: AtomicU64::new(0),
             counters: Arc::new(Counters::new()),
             exec_hist: Arc::new(Histogram::new()),
+            sink: None,
         }
+    }
+
+    /// Install a recording sink (see [`crate::replay`]). Must be called
+    /// before any model is registered — workers capture the sink when
+    /// they are spawned.
+    pub fn set_trace_sink(&mut self, sink: Arc<TraceSink>) -> Result<()> {
+        if !self.models.is_empty() {
+            bail!("set_trace_sink must be called before any register()");
+        }
+        self.sink = Some(sink);
+        Ok(())
     }
 
     /// Register a PJRT-served model (see [`Model::from_artifacts`]).
@@ -80,7 +112,7 @@ impl Engine {
         let workers = spawn_workers(
             model.clone(), queue.clone(), self.cfg.clone(),
             self.counters.clone(), self.exec_hist.clone(),
-            self.cfg.workers);
+            self.sink.clone(), self.cfg.workers);
         self.models
             .insert(name, ModelRuntime { model, queue, workers });
         Ok(())
@@ -98,29 +130,59 @@ impl Engine {
     /// full (backpressure — the caller should retry later or shed).
     pub fn submit(&self, model: &str, z: Vec<f32>, cond: Vec<f32>)
                   -> Result<mpsc::Receiver<Response>> {
-        let mr = self
-            .models
-            .get(model)
-            .ok_or_else(|| anyhow!("unknown model {model:?} \
-                                    (have {:?})", self.model_names()))?;
-        mr.model.validate(&z, &cond)?;
-        let (tx, rx) = mpsc::channel();
-        let req = Request {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            z,
-            cond,
-            enqueued: Instant::now(),
-            reply: tx,
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        if let Some(s) = &self.sink {
+            // the workload's non-deterministic input, captured bit-exactly
+            s.record(EventBody::RequestArrival {
+                id,
+                model: model.to_string(),
+                z: z.clone(),
+                cond: cond.clone(),
+            });
+        }
+        let mr = match self.models.get(model) {
+            Some(mr) => mr,
+            None => {
+                return Err(self.reject(id, anyhow!(
+                    "unknown model {model:?} (have {:?})",
+                    self.model_names())));
+            }
         };
+        if let Err(e) = mr.model.validate(&z, &cond) {
+            return Err(self.reject(id, e));
+        }
+        let (tx, rx) = mpsc::channel();
+        let req = Request { id, z, cond, enqueued: Instant::now(),
+                            reply: tx };
         self.counters.submitted.fetch_add(1, Ordering::Relaxed);
-        match mr.queue.try_push(req) {
+        // Enqueue is recorded under the queue lock: the trace can never
+        // show a worker's BatchFormed/Response for an id before its
+        // Enqueue, and `depth` is exact.
+        let push = mr.queue.try_push_then(req, |depth| {
+            if let Some(s) = &self.sink {
+                s.record(EventBody::Enqueue { id, depth });
+            }
+        });
+        match push {
             Ok(()) => Ok(rx),
             Err(PushError::Full(_)) => {
                 self.counters.rejected.fetch_add(1, Ordering::Relaxed);
-                bail!("queue full for {model:?} (backpressure)")
+                Err(self.reject(id, anyhow::Error::new(Backpressure)
+                    .context(format!("queue full for {model:?}"))))
             }
-            Err(PushError::Closed(_)) => bail!("engine shutting down"),
+            Err(PushError::Closed(_)) => {
+                Err(self.reject(id, anyhow!("engine shutting down")))
+            }
         }
+    }
+
+    /// Record a `Reject` trace event (when recording) and pass the error
+    /// through unchanged.
+    fn reject(&self, id: u64, err: anyhow::Error) -> anyhow::Error {
+        if let Some(s) = &self.sink {
+            s.record(EventBody::Reject { id, reason: format!("{err:#}") });
+        }
+        err
     }
 
     /// Blocking convenience: submit + wait.
@@ -165,7 +227,6 @@ impl Drop for Engine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::cgan_layers;
     use crate::gan::Generator;
     use crate::rng::Rng;
 
@@ -178,17 +239,8 @@ mod tests {
             ..EngineConfig::default()
         };
         let mut e = Engine::new(cfg);
-        let mut rng = Rng::new(5);
         // small native cGAN-geometry generator (fast on CPU)
-        let mut cfgs = cgan_layers();
-        for l in &mut cfgs {
-            l.c_in /= 8;
-            if l.c_out > 3 {
-                l.c_out /= 8;
-            }
-        }
-        cfgs[1].c_in = cfgs[0].c_out;
-        let gen = Generator::new(cfgs, 8, 0, &mut rng);
+        let gen = Generator::tiny_cgan(5);
         e.register_native(super::super::router::Model::native(
             "tiny", Arc::new(gen), 0)).unwrap();
         e
@@ -256,16 +308,7 @@ mod tests {
             ..EngineConfig::default()
         };
         let mut e = Engine::new(cfg);
-        let mut rng = Rng::new(7);
-        let mut cfgs = cgan_layers();
-        for l in &mut cfgs {
-            l.c_in /= 4;
-            if l.c_out > 3 {
-                l.c_out /= 4;
-            }
-        }
-        cfgs[1].c_in = cfgs[0].c_out;
-        let gen = Generator::new(cfgs, 8, 0, &mut rng);
+        let gen = Generator::tiny_cgan(7);
         e.register_native(super::super::router::Model::native(
             "m", Arc::new(gen), 0)).unwrap();
         // flood faster than one worker can drain a 2-deep queue
@@ -281,6 +324,49 @@ mod tests {
         // accepted requests still complete
         for rx in receivers {
             rx.recv().unwrap();
+        }
+    }
+
+    #[test]
+    fn trace_sink_captures_request_lifecycle() {
+        use crate::replay::recorder::TraceSink;
+
+        let cfg = EngineConfig {
+            workers: 1,
+            queue_depth: 16,
+            max_batch: 4,
+            batch_timeout_us: 500,
+            ..EngineConfig::default()
+        };
+        let mut e = Engine::new(cfg);
+        let sink = Arc::new(TraceSink::new());
+        e.set_trace_sink(sink.clone()).unwrap();
+        let gen = Generator::tiny_cgan(5);
+        e.register_native(super::super::router::Model::native(
+            "tiny", Arc::new(gen), 0)).unwrap();
+        // the sink cannot be swapped once workers have captured it
+        assert!(e.set_trace_sink(Arc::new(TraceSink::new())).is_err());
+
+        let mut rng = Rng::new(6);
+        for _ in 0..3 {
+            let z: Vec<f32> = (0..8).map(|_| rng.next_normal()).collect();
+            e.generate("tiny", z, vec![]).unwrap();
+        }
+        assert!(e.submit("missing", vec![0.0; 8], vec![]).is_err());
+        e.shutdown();
+
+        let evs = sink.snapshot();
+        let n = |k: &str| {
+            evs.iter().filter(|ev| ev.body.kind() == k).count()
+        };
+        assert_eq!(n("arrival"), 4);
+        assert_eq!(n("enqueue"), 3);
+        assert_eq!(n("reject"), 1);
+        assert_eq!(n("response"), 3);
+        assert!(n("batch_formed") >= 1);
+        assert_eq!(n("batch_formed"), n("batch_executed"));
+        for w in evs.windows(2) {
+            assert!(w[0].t_us <= w[1].t_us, "monotone timestamps");
         }
     }
 }

@@ -24,6 +24,6 @@ pub mod queue;
 pub mod router;
 pub mod worker;
 
-pub use engine::Engine;
+pub use engine::{Backpressure, Engine};
 pub use queue::{BoundedQueue, PushError};
 pub use router::{Backend, Model, Request, Response};

@@ -44,6 +44,16 @@ impl<T> BoundedQueue<T> {
 
     /// Non-blocking push; rejects when full or closed.
     pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        self.try_push_then(item, |_| {})
+    }
+
+    /// `try_push`, invoking `on_push(depth_after)` under the queue lock
+    /// on success. Because consumers cannot pop until the lock is
+    /// released, anything `on_push` publishes (e.g. a trace event) is
+    /// ordered strictly before any consumer-side observation of the
+    /// item — and `depth_after` is exact, not racing concurrent pops.
+    pub fn try_push_then(&self, item: T, on_push: impl FnOnce(usize))
+                         -> Result<(), PushError<T>> {
         let mut g = self.inner.lock().unwrap();
         if g.closed {
             return Err(PushError::Closed(item));
@@ -52,6 +62,7 @@ impl<T> BoundedQueue<T> {
             return Err(PushError::Full(item));
         }
         g.items.push_back(item);
+        on_push(g.items.len());
         drop(g);
         self.not_empty.notify_one();
         Ok(())

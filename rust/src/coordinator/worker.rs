@@ -6,6 +6,8 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::gan::Engine as NativeEngine;
+use crate::replay::event::EventBody;
+use crate::replay::recorder::TraceSink;
 use crate::tensor::Tensor;
 
 use super::router::{Backend, Model, Request, Response};
@@ -17,7 +19,11 @@ use super::router::{Backend, Model, Request, Response};
 /// receivers (a client that timed out and dropped its channel).
 /// `before_reply` runs after execution but before any reply is sent, so
 /// engine counters are consistent the moment a client observes a result.
+/// With a recording `sink`, each reply's output checksum is recorded as a
+/// `Response` event *before* the send, so the trace is complete even if
+/// the client races the recorder to shutdown.
 pub fn execute_batch(model: &Model, batch: Vec<Request>,
+                     sink: Option<&TraceSink>,
                      before_reply: impl FnOnce(usize)) -> Result<usize> {
     let n = batch.len();
     let bucket = model.bucket_for(n);
@@ -29,10 +35,20 @@ pub fn execute_batch(model: &Model, batch: Vec<Request>,
         let data =
             out.data()[i * img_elems..(i + 1) * img_elems].to_vec();
         let image = Tensor::from_vec(&[1, h, w, c], data);
+        let latency = req.enqueued.elapsed();
+        if let Some(s) = sink {
+            s.record(EventBody::Response {
+                id: req.id,
+                batch_size: n,
+                bucket,
+                latency_us: latency.as_micros() as u64,
+                checksum: image.checksum(),
+            });
+        }
         let _ = req.reply.send(Response {
             id: req.id,
             image,
-            latency: req.enqueued.elapsed(),
+            latency,
             batch_size: n,
             bucket,
         });
@@ -117,12 +133,16 @@ fn run_forward(model: &Model, batch: &[Request], bucket: usize)
 }
 
 /// Spawn `count` worker threads draining `queue` for `model`.
+///
+/// A `sink`, when present, observes every batch the workers form and
+/// execute (plus per-reply `Response` events from [`execute_batch`]).
 pub fn spawn_workers(
     model: Arc<Model>,
     queue: Arc<super::queue::BoundedQueue<Request>>,
     cfg: crate::config::EngineConfig,
     counters: Arc<crate::metrics::Counters>,
     hist: Arc<crate::metrics::Histogram>,
+    sink: Option<Arc<TraceSink>>,
     count: usize,
 ) -> Vec<std::thread::JoinHandle<()>> {
     (0..count)
@@ -131,6 +151,7 @@ pub fn spawn_workers(
             let queue = queue.clone();
             let counters = counters.clone();
             let hist = hist.clone();
+            let sink = sink.clone();
             let timeout =
                 std::time::Duration::from_micros(cfg.batch_timeout_us);
             let max_batch = cfg.max_batch;
@@ -138,8 +159,19 @@ pub fn spawn_workers(
                 while let Some(batch) =
                     super::batcher::next_batch(&queue, max_batch, timeout)
                 {
+                    // id collection only when recording — a plain run
+                    // pays just the null-checks (recorder.rs cost model)
+                    let ids: Option<Vec<u64>> = sink.as_ref().map(|_| {
+                        batch.iter().map(|r| r.id).collect()
+                    });
+                    if let (Some(s), Some(ids)) = (&sink, &ids) {
+                        s.record(EventBody::BatchFormed {
+                            ids: ids.clone(),
+                        });
+                    }
                     let t0 = Instant::now();
-                    let res = execute_batch(&model, batch, |n| {
+                    let res = execute_batch(&model, batch,
+                                            sink.as_deref(), |n| {
                         use std::sync::atomic::Ordering::Relaxed;
                         counters.batches.fetch_add(1, Relaxed);
                         counters.batched_requests.fetch_add(n as u64,
@@ -147,10 +179,23 @@ pub fn spawn_workers(
                         counters.completed.fetch_add(n as u64, Relaxed);
                         hist.record(t0.elapsed());
                     });
-                    if let Err(e) = res {
-                        // batch dropped; requesters see a closed channel
-                        eprintln!("[worker:{}] batch failed: {e:#}",
-                                  model.name);
+                    match res {
+                        Ok(bucket) => {
+                            if let (Some(s), Some(ids)) = (&sink, ids) {
+                                s.record(EventBody::BatchExecuted {
+                                    ids,
+                                    bucket,
+                                    exec_us: t0.elapsed().as_micros()
+                                        as u64,
+                                });
+                            }
+                        }
+                        Err(e) => {
+                            // batch dropped; requesters see a closed
+                            // channel
+                            eprintln!("[worker:{}] batch failed: {e:#}",
+                                      model.name);
+                        }
                     }
                 }
             })

@@ -83,6 +83,21 @@ impl Generator {
         Generator::new(cgan_layers(), 100, 10, &mut Rng::new(seed))
     }
 
+    /// Tiny unconditional cGAN-geometry generator (1/8 channels, 8-dim
+    /// latent) — the shared fast, bit-reproducible native model for
+    /// tests and benches (`32x32x3` output in ~sub-ms per image).
+    pub fn tiny_cgan(seed: u64) -> Self {
+        let mut cfgs = cgan_layers();
+        for l in &mut cfgs {
+            l.c_in /= 8;
+            if l.c_out > 3 {
+                l.c_out /= 8;
+            }
+        }
+        cfgs[1].c_in = cfgs[0].c_out;
+        Generator::new(cfgs, 8, 0, &mut Rng::new(seed))
+    }
+
     /// `z`: `(B, z_dim [+cond])` -> image `(B, H, W, c_out)` in [-1, 1].
     pub fn forward(&self, z: &Tensor, engine: Engine) -> Tensor {
         let (b, zd) = z.dims2();

@@ -36,6 +36,52 @@
 //! let fast = engine::conv2d_transpose(&x, &k, &layer.deconv_params());
 //! assert!(slow.allclose(&fast, 1e-4));
 //! ```
+//!
+//! ## Record / replay quickstart
+//!
+//! Serving runs are **recordable and deterministically replayable**
+//! (see [`replay`]): every non-deterministic workload input (arrival
+//! offsets, request ids, latents) is captured to a JSONL trace along
+//! with a checksum of every output, and a replay re-drives the exact
+//! workload, verifying the engine reproduces each image bit-for-bit.
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use huge2::config::EngineConfig;
+//! use huge2::coordinator::{Engine, Model};
+//! use huge2::gan::Generator;
+//! use huge2::replay::{Recorder, Replayer, Timing, TraceHeader};
+//!
+//! // --- record a serve session ---
+//! let rec = Recorder::new(TraceHeader {
+//!     model: "dcgan".into(),
+//!     backend: "native".into(),
+//!     seed: 7,
+//!     z_dim: 100,
+//!     cond_dim: 0,
+//! });
+//! let mut eng = Engine::new(EngineConfig::default());
+//! eng.set_trace_sink(rec.sink())?;
+//! eng.register_native(Model::native(
+//!     "dcgan", Arc::new(Generator::dcgan(7)), 0))?;
+//! eng.generate("dcgan", vec![0.0; 100], vec![])?;
+//! eng.shutdown();
+//! rec.save(std::path::Path::new("t.jsonl"))?;
+//!
+//! // --- replay it and verify zero divergence ---
+//! let rp = Replayer::load(std::path::Path::new("t.jsonl"))?;
+//! let mut eng = Engine::new(EngineConfig::default());
+//! eng.register_native(Model::native(
+//!     "dcgan", Arc::new(Generator::dcgan(rp.header().seed)), 0))?;
+//! let report = rp.run(&eng, Timing::Fast)?;
+//! assert!(report.is_clean(), "{}", report.first_divergence().unwrap());
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! The same flow is wired end-to-end in the CLI:
+//! `huge2 serve --native --record t.jsonl`, then
+//! `huge2 replay t.jsonl --timing fast` (exits non-zero on divergence,
+//! naming the first mismatching event).
 
 pub mod cli;
 pub mod config;
@@ -46,6 +92,7 @@ pub mod gemm;
 pub mod im2col;
 pub mod memsim;
 pub mod metrics;
+pub mod replay;
 pub mod rng;
 pub mod runtime;
 pub mod tensor;

@@ -1,6 +1,7 @@
 //! `huge2` — the HUGE² edge serving engine CLI (leader entrypoint).
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -11,10 +12,11 @@ use huge2::coordinator::Engine;
 use huge2::deconv::{baseline, huge2 as engine2};
 use huge2::gan::Generator;
 use huge2::memsim::{trace_layer, EngineKind, GpuModel};
+use huge2::replay::{Recorder, Replayer, Timing, TraceHeader, TraceSink};
 use huge2::rng::Rng;
 use huge2::runtime::RuntimeHandle;
 use huge2::tensor::Tensor;
-use huge2::trace::poisson;
+use huge2::trace::{self, poisson};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -30,13 +32,20 @@ fn main() {
 
 fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
+    // central stray-positional rejection: only `replay` takes one
+    let max_positionals = match args.subcommand.as_str() {
+        "replay" => 1,
+        _ => 0,
+    };
+    args.expect_positionals_at_most(max_positionals)?;
     match args.subcommand.as_str() {
         "inspect" => inspect(&args),
         "bench" => bench(&args),
         "serve" => serve(&args),
+        "replay" => replay(&args),
         "reproduce" => reproduce(&args),
         other => bail!("unknown subcommand {other:?} \
-                        (inspect|bench|serve|reproduce)"),
+                        (inspect|bench|serve|replay|reproduce)"),
     }
 }
 
@@ -108,18 +117,31 @@ fn bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Run the serving engine on a synthetic Poisson workload.
+/// A flag whose value must be a file path: value-less `--record`
+/// parses as the sentinel "true", which must not silently become a
+/// file named `true`.
+fn path_flag<'a>(args: &'a Args, key: &str) -> Result<Option<&'a str>> {
+    match args.get(key) {
+        None => Ok(None),
+        Some("true") => bail!("--{key} requires a file path"),
+        Some(v) => Ok(Some(v)),
+    }
+}
+
+/// Run the serving engine on a synthetic Poisson workload (or a saved
+/// arrival fixture), optionally recording a replayable trace.
 fn serve(args: &Args) -> Result<()> {
     let model = args.get_or("model", "dcgan");
     let rate = args.get_f64("rate", 2.0)?;
     let n = args.get_usize("requests", 20)?;
     let native = args.has("native");
+    let seed = args.get_usize("seed", 7)? as u64;
     // --config file.toml supplies defaults; explicit flags override
     let base = match args.get("config") {
         Some(path) => {
             let text = std::fs::read_to_string(path)?;
             EngineConfig::from_toml(&text)
-                .map_err(|e| anyhow::anyhow!("config {path}: {e}"))?
+                .map_err(|e| anyhow!("config {path}: {e}"))?
         }
         None => EngineConfig::default(),
     };
@@ -134,10 +156,22 @@ fn serve(args: &Args) -> Result<()> {
         ..base
     };
 
+    let record_path = path_flag(args, "record")?;
+    let arrivals_path = path_flag(args, "arrivals")?;
+    let save_arrivals_path = path_flag(args, "save-arrivals")?;
+
     let mut eng = Engine::new(cfg.clone());
+    // --record out.jsonl: the sink must be installed before workers spawn
+    let sink = if record_path.is_some() {
+        let s = Arc::new(TraceSink::new());
+        eng.set_trace_sink(s.clone())?;
+        Some(s)
+    } else {
+        None
+    };
     let z_dim;
     if native {
-        let gen = Arc::new(Generator::dcgan(7));
+        let gen = Arc::new(Generator::dcgan(seed));
         z_dim = gen.z_dim;
         eng.register_native(huge2::coordinator::Model::native(
             &model, gen, 0))?;
@@ -145,14 +179,30 @@ fn serve(args: &Args) -> Result<()> {
     } else {
         let rt = Arc::new(RuntimeHandle::spawn(
             cfg.artifact_dir.clone().into())?);
-        eng.register_pjrt(&model, &format!("{model}_gen"), rt, 1, 7)?;
+        eng.register_pjrt(&model, &format!("{model}_gen"), rt, 1, seed)?;
         z_dim = 100;
         println!("serving {model} via PJRT artifacts \
                   (JAX/Pallas HUGE2 kernels)");
     }
 
-    let arrivals = poisson(rate, n, 99);
-    println!("open-loop Poisson workload: rate={rate}/s, {n} requests");
+    // workload: a saved fixture (--arrivals f) or synthetic Poisson
+    let arrivals = match arrivals_path {
+        Some(path) => {
+            let tr = trace::load(Path::new(path))?;
+            println!("arrival fixture {path}: {} requests", tr.len());
+            tr
+        }
+        None => {
+            let tr = poisson(rate, n, 99);
+            println!("open-loop Poisson workload: rate={rate}/s, \
+                      {n} requests");
+            tr
+        }
+    };
+    if let Some(path) = save_arrivals_path {
+        trace::save(Path::new(path), &arrivals)?;
+        println!("saved arrival fixture to {path}");
+    }
     let t0 = Instant::now();
     let mut rng = Rng::new(1);
     let mut pending = Vec::new();
@@ -186,11 +236,92 @@ fn serve(args: &Args) -> Result<()> {
              fmt_dur(*lat.last().unwrap()));
     println!("mean batch size {:.2}", eng.counters.mean_batch_size());
     eng.shutdown();
+    // save the trace only after shutdown: workers have flushed every
+    // batch/response event into the sink by then
+    if let Some(sink) = sink {
+        let path = record_path.unwrap();
+        let rec = Recorder::from_parts(
+            TraceHeader {
+                model: model.clone(),
+                backend: if native { "native" } else { "pjrt" }.into(),
+                seed,
+                z_dim,
+                cond_dim: 0,
+            },
+            sink,
+        );
+        let n_events = rec.save(Path::new(path))?;
+        println!("recorded {n_events} trace events to {path} \
+                  (replay: huge2 replay {path} --timing fast)");
+    }
     Ok(())
 }
 
+/// Re-drive a recorded trace through a freshly built engine and verify
+/// every recorded output checksum (exit non-zero on divergence, naming
+/// the first mismatching event).
+fn replay(args: &Args) -> Result<()> {
+    let path = args
+        .positional(0)
+        .or(path_flag(args, "trace")?)
+        .ok_or_else(|| anyhow!("usage: huge2 replay <trace.jsonl> \
+                                [--timing faithful|fast]"))?
+        .to_string();
+    let timing: Timing = args.get_or("timing", "fast").parse()?;
+    let rp = Replayer::load(Path::new(&path))?;
+    let h = rp.header().clone();
+    println!("trace {path}: model {:?} on {} backend (seed {}), \
+              {} events, {} arrivals",
+             h.model, h.backend, h.seed, rp.events().len(),
+             rp.arrival_count());
+
+    let base = EngineConfig::default();
+    let cfg = EngineConfig {
+        workers: args.get_usize("workers", base.workers)?,
+        max_batch: args.get_usize("max-batch", base.max_batch)?,
+        batch_timeout_us: args.get_usize(
+            "batch-timeout-us", base.batch_timeout_us as usize)? as u64,
+        artifact_dir: args.get("artifacts")
+            .map(str::to_string)
+            .unwrap_or(base.artifact_dir.clone()),
+        ..base
+    };
+    let mut eng = Engine::new(cfg.clone());
+    match h.backend.as_str() {
+        "native" => {
+            let gen = Arc::new(Generator::dcgan(h.seed));
+            if gen.z_dim != h.z_dim || h.cond_dim != 0 {
+                bail!("trace wants z_dim {} / cond_dim {}, native DCGAN \
+                       generator has z_dim {}",
+                      h.z_dim, h.cond_dim, gen.z_dim);
+            }
+            eng.register_native(huge2::coordinator::Model::native(
+                &h.model, gen, h.cond_dim))?;
+        }
+        "pjrt" => {
+            let rt = Arc::new(RuntimeHandle::spawn(
+                cfg.artifact_dir.clone().into())?);
+            let latent_inputs = if h.cond_dim > 0 { 2 } else { 1 };
+            eng.register_pjrt(&h.model, &format!("{}_gen", h.model), rt,
+                              latent_inputs, h.seed)?;
+        }
+        other => bail!("trace has unknown backend {other:?}"),
+    }
+    println!("replaying with --timing {}...", timing.as_str());
+    let report = rp.run(&eng, timing)?;
+    eng.shutdown();
+    println!("{}", report.summary());
+    match report.first_divergence() {
+        None => {
+            println!("replay OK: every recorded checksum reproduced");
+            Ok(())
+        }
+        Some(d) => bail!("replay diverged: {d}"),
+    }
+}
+
 /// Print all the paper's tables/figures (analytic + simulated parts).
-fn reproduce(_args: &Args) -> Result<()> {
+fn reproduce(args: &Args) -> Result<()> {
     println!("== Fig 8 (left): memory-access reduction (cache-sim) ==\n");
     let mut t = Table::new(&["layer", "baseline accesses", "huge2 accesses",
                              "reduction", "baseline DRAM", "huge2 DRAM"]);

@@ -1,0 +1,603 @@
+//! Dependency-free JSONL codec for trace files (in the spirit of
+//! `config/toml_mini.rs`: we parse exactly the subset we emit, with
+//! useful errors, and nothing else).
+//!
+//! Wire format: line 1 is the header object, every further line is one
+//! event object. Floats round-trip **bit-exactly** as 8-hex-digit IEEE-754
+//! bit patterns (`"3f800000"`), because a replay that perturbs a latent in
+//! the 7th decimal is not a replay. Checksums are 16-hex-digit strings —
+//! JSON numbers are f64 and cannot carry a u64 faithfully through other
+//! tools.
+//!
+//! ```text
+//! {"huge2_trace":1,"model":"dcgan","backend":"native","seed":7,"z_dim":100,"cond_dim":0}
+//! {"t_us":812,"ev":"arrival","id":0,"model":"dcgan","z":["bf1c6a00","3e99f3c2"],"cond":[]}
+//! {"t_us":815,"ev":"enqueue","id":0,"depth":1}
+//! {"t_us":2201,"ev":"batch_formed","ids":[0,1]}
+//! {"t_us":9610,"ev":"batch_executed","ids":[0,1],"bucket":2,"exec_us":7409}
+//! {"t_us":9612,"ev":"response","id":0,"batch_size":2,"bucket":2,"latency_us":8800,"checksum":"9f86d081884c7d65"}
+//! ```
+
+use anyhow::{anyhow, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use super::event::{EventBody, TraceEvent, TraceHeader};
+
+/// Current trace-format version (the header's `huge2_trace` value).
+pub const TRACE_VERSION: u32 = 1;
+
+// ------------------------------------------------------------------ encode
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn f32_hex(v: f32) -> String {
+    format!("{:08x}", v.to_bits())
+}
+
+fn f32s_json(vs: &[f32]) -> String {
+    let items: Vec<String> =
+        vs.iter().map(|&v| format!("\"{}\"", f32_hex(v))).collect();
+    format!("[{}]", items.join(","))
+}
+
+fn u64s_json(vs: &[u64]) -> String {
+    let items: Vec<String> = vs.iter().map(|v| v.to_string()).collect();
+    format!("[{}]", items.join(","))
+}
+
+/// Serialize the header to its (single) JSONL line, stamped with
+/// [`TRACE_VERSION`].
+pub fn encode_header(h: &TraceHeader) -> String {
+    format!(
+        "{{\"huge2_trace\":{TRACE_VERSION},\"model\":\"{}\",\
+         \"backend\":\"{}\",\"seed\":{},\"z_dim\":{},\"cond_dim\":{}}}",
+        esc(&h.model),
+        esc(&h.backend),
+        h.seed,
+        h.z_dim,
+        h.cond_dim
+    )
+}
+
+/// Serialize one event to its JSONL line.
+pub fn encode_event(e: &TraceEvent) -> String {
+    let t = e.t_us;
+    match &e.body {
+        EventBody::RequestArrival { id, model, z, cond } => format!(
+            "{{\"t_us\":{t},\"ev\":\"arrival\",\"id\":{id},\
+             \"model\":\"{}\",\"z\":{},\"cond\":{}}}",
+            esc(model),
+            f32s_json(z),
+            f32s_json(cond)
+        ),
+        EventBody::Enqueue { id, depth } => format!(
+            "{{\"t_us\":{t},\"ev\":\"enqueue\",\"id\":{id},\
+             \"depth\":{depth}}}"
+        ),
+        EventBody::Reject { id, reason } => format!(
+            "{{\"t_us\":{t},\"ev\":\"reject\",\"id\":{id},\
+             \"reason\":\"{}\"}}",
+            esc(reason)
+        ),
+        EventBody::BatchFormed { ids } => format!(
+            "{{\"t_us\":{t},\"ev\":\"batch_formed\",\"ids\":{}}}",
+            u64s_json(ids)
+        ),
+        EventBody::BatchExecuted { ids, bucket, exec_us } => format!(
+            "{{\"t_us\":{t},\"ev\":\"batch_executed\",\"ids\":{},\
+             \"bucket\":{bucket},\"exec_us\":{exec_us}}}",
+            u64s_json(ids)
+        ),
+        EventBody::Response { id, batch_size, bucket, latency_us,
+                              checksum } => format!(
+            "{{\"t_us\":{t},\"ev\":\"response\",\"id\":{id},\
+             \"batch_size\":{batch_size},\"bucket\":{bucket},\
+             \"latency_us\":{latency_us},\"checksum\":\"{checksum:016x}\"}}"
+        ),
+    }
+}
+
+// ------------------------------------------------------------------ decode
+
+/// Parsed JSON value (the subset the trace format uses).
+#[derive(Debug, Clone, PartialEq)]
+enum Val {
+    Num(u64),
+    Str(String),
+    List(Vec<Val>),
+}
+
+struct Parser {
+    chars: Vec<char>,
+    i: usize,
+}
+
+impl Parser {
+    fn new(s: &str) -> Self {
+        Parser { chars: s.chars().collect(), i: 0 }
+    }
+
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.i).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek();
+        if c.is_some() {
+            self.i += 1;
+        }
+        c
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(' ' | '\t')) {
+            self.i += 1;
+        }
+    }
+
+    fn expect(&mut self, want: char) -> Result<(), String> {
+        self.skip_ws();
+        match self.bump() {
+            Some(c) if c == want => Ok(()),
+            Some(c) => Err(format!("expected {want:?}, got {c:?} \
+                                    at char {}", self.i)),
+            None => Err(format!("expected {want:?}, got end of line")),
+        }
+    }
+
+    /// Parse a string; the opening quote must be the next token.
+    fn string(&mut self) -> Result<String, String> {
+        self.expect('"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump() {
+                None => return Err("unterminated string".into()),
+                Some('"') => return Ok(out),
+                Some('\\') => match self.bump() {
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('r') => out.push('\r'),
+                    Some('u') => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let d = self
+                                .bump()
+                                .and_then(|c| c.to_digit(16))
+                                .ok_or("bad \\u escape")?;
+                            code = code * 16 + d;
+                        }
+                        out.push(
+                            char::from_u32(code)
+                                .ok_or("bad \\u code point")?,
+                        );
+                    }
+                    other => {
+                        return Err(format!("bad escape {other:?}"));
+                    }
+                },
+                Some(c) => out.push(c),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<u64, String> {
+        let start = self.i;
+        while matches!(self.peek(), Some('0'..='9')) {
+            self.i += 1;
+        }
+        if self.i == start {
+            return Err(format!("expected a number at char {}", self.i));
+        }
+        let s: String = self.chars[start..self.i].iter().collect();
+        s.parse::<u64>().map_err(|_| format!("number {s:?} out of range"))
+    }
+
+    fn value(&mut self) -> Result<Val, String> {
+        self.skip_ws();
+        match self.peek() {
+            Some('"') => Ok(Val::Str(self.string()?)),
+            Some('0'..='9') => Ok(Val::Num(self.number()?)),
+            Some('[') => {
+                self.bump();
+                let mut items = Vec::new();
+                self.skip_ws();
+                if self.peek() == Some(']') {
+                    self.bump();
+                    return Ok(Val::List(items));
+                }
+                loop {
+                    items.push(self.value()?);
+                    self.skip_ws();
+                    match self.bump() {
+                        Some(',') => continue,
+                        Some(']') => return Ok(Val::List(items)),
+                        other => {
+                            return Err(format!(
+                                "expected ',' or ']' in list, got {other:?}"
+                            ));
+                        }
+                    }
+                }
+            }
+            other => Err(format!("unexpected value start {other:?}")),
+        }
+    }
+
+    /// Parse a flat `{"k":v,...}` object; nothing may trail it.
+    fn object(&mut self) -> Result<Vec<(String, Val)>, String> {
+        self.expect('{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some('}') {
+            self.bump();
+        } else {
+            loop {
+                self.skip_ws();
+                let key = self.string()?;
+                self.expect(':')?;
+                let val = self.value()?;
+                fields.push((key, val));
+                self.skip_ws();
+                match self.bump() {
+                    Some(',') => continue,
+                    Some('}') => break,
+                    other => {
+                        return Err(format!(
+                            "expected ',' or '}}' after field, got {other:?}"
+                        ));
+                    }
+                }
+            }
+        }
+        self.skip_ws();
+        if let Some(c) = self.peek() {
+            return Err(format!("trailing {c:?} after object"));
+        }
+        Ok(fields)
+    }
+}
+
+fn get<'a>(m: &'a [(String, Val)], k: &str) -> Result<&'a Val, String> {
+    m.iter()
+        .find(|(key, _)| key == k)
+        .map(|(_, v)| v)
+        .ok_or_else(|| format!("missing field {k:?}"))
+}
+
+fn num(m: &[(String, Val)], k: &str) -> Result<u64, String> {
+    match get(m, k)? {
+        Val::Num(n) => Ok(*n),
+        other => Err(format!("field {k:?}: expected number, got {other:?}")),
+    }
+}
+
+fn string(m: &[(String, Val)], k: &str) -> Result<String, String> {
+    match get(m, k)? {
+        Val::Str(s) => Ok(s.clone()),
+        other => Err(format!("field {k:?}: expected string, got {other:?}")),
+    }
+}
+
+fn u64_list(m: &[(String, Val)], k: &str) -> Result<Vec<u64>, String> {
+    match get(m, k)? {
+        Val::List(items) => items
+            .iter()
+            .map(|v| match v {
+                Val::Num(n) => Ok(*n),
+                other => Err(format!(
+                    "field {k:?}: expected number item, got {other:?}"
+                )),
+            })
+            .collect(),
+        other => Err(format!("field {k:?}: expected list, got {other:?}")),
+    }
+}
+
+fn hex_u32(s: &str) -> Result<u32, String> {
+    if s.is_empty() || s.len() > 8 {
+        return Err(format!("bad f32 bit pattern {s:?}"));
+    }
+    u32::from_str_radix(s, 16)
+        .map_err(|_| format!("bad f32 bit pattern {s:?}"))
+}
+
+fn f32_list(m: &[(String, Val)], k: &str) -> Result<Vec<f32>, String> {
+    match get(m, k)? {
+        Val::List(items) => items
+            .iter()
+            .map(|v| match v {
+                Val::Str(s) => Ok(f32::from_bits(hex_u32(s)?)),
+                other => Err(format!(
+                    "field {k:?}: expected hex-string item, got {other:?}"
+                )),
+            })
+            .collect(),
+        other => Err(format!("field {k:?}: expected list, got {other:?}")),
+    }
+}
+
+fn hex64(m: &[(String, Val)], k: &str) -> Result<u64, String> {
+    let s = string(m, k)?;
+    if s.is_empty() || s.len() > 16 {
+        return Err(format!("field {k:?}: bad u64 hex {s:?}"));
+    }
+    u64::from_str_radix(&s, 16)
+        .map_err(|_| format!("field {k:?}: bad u64 hex {s:?}"))
+}
+
+/// Parse the header line.
+pub fn decode_header(line: &str) -> Result<TraceHeader, String> {
+    let m = Parser::new(line).object()?;
+    let version = num(&m, "huge2_trace")? as u32;
+    if version != TRACE_VERSION {
+        return Err(format!(
+            "unsupported trace version {version} (this build reads \
+             {TRACE_VERSION})"
+        ));
+    }
+    Ok(TraceHeader {
+        model: string(&m, "model")?,
+        backend: string(&m, "backend")?,
+        seed: num(&m, "seed")?,
+        z_dim: num(&m, "z_dim")? as usize,
+        cond_dim: num(&m, "cond_dim")? as usize,
+    })
+}
+
+/// Parse one event line.
+pub fn decode_event(line: &str) -> Result<TraceEvent, String> {
+    let m = Parser::new(line).object()?;
+    let t_us = num(&m, "t_us")?;
+    let kind = string(&m, "ev")?;
+    let body = match kind.as_str() {
+        "arrival" => EventBody::RequestArrival {
+            id: num(&m, "id")?,
+            model: string(&m, "model")?,
+            z: f32_list(&m, "z")?,
+            cond: f32_list(&m, "cond")?,
+        },
+        "enqueue" => EventBody::Enqueue {
+            id: num(&m, "id")?,
+            depth: num(&m, "depth")? as usize,
+        },
+        "reject" => EventBody::Reject {
+            id: num(&m, "id")?,
+            reason: string(&m, "reason")?,
+        },
+        "batch_formed" => EventBody::BatchFormed {
+            ids: u64_list(&m, "ids")?,
+        },
+        "batch_executed" => EventBody::BatchExecuted {
+            ids: u64_list(&m, "ids")?,
+            bucket: num(&m, "bucket")? as usize,
+            exec_us: num(&m, "exec_us")?,
+        },
+        "response" => EventBody::Response {
+            id: num(&m, "id")?,
+            batch_size: num(&m, "batch_size")? as usize,
+            bucket: num(&m, "bucket")? as usize,
+            latency_us: num(&m, "latency_us")?,
+            checksum: hex64(&m, "checksum")?,
+        },
+        other => return Err(format!("unknown event kind {other:?}")),
+    };
+    Ok(TraceEvent { t_us, body })
+}
+
+// ---------------------------------------------------------------- file I/O
+
+/// Write a complete trace (header + events) as JSONL.
+pub fn write_trace(path: &Path, header: &TraceHeader,
+                   events: &[TraceEvent]) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating trace {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "{}", encode_header(header))?;
+    for e in events {
+        writeln!(w, "{}", encode_event(e))?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a complete trace. Errors name the offending line — a tampered
+/// or truncated trace is rejected, never silently skipped.
+pub fn read_trace(path: &Path) -> Result<(TraceHeader, Vec<TraceEvent>)> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening trace {}", path.display()))?;
+    let reader = BufReader::new(file);
+    let mut header: Option<TraceHeader> = None;
+    let mut events = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line
+            .with_context(|| format!("reading {}", path.display()))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        if header.is_none() {
+            header = Some(decode_header(&line).map_err(|e| {
+                anyhow!("{}:{}: {e}", path.display(), lineno + 1)
+            })?);
+        } else {
+            events.push(decode_event(&line).map_err(|e| {
+                anyhow!("{}:{}: {e}", path.display(), lineno + 1)
+            })?);
+        }
+    }
+    let header = header
+        .ok_or_else(|| anyhow!("{}: empty trace", path.display()))?;
+    Ok((header, events))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn header() -> TraceHeader {
+        TraceHeader {
+            model: "dcgan".into(),
+            backend: "native".into(),
+            seed: 7,
+            z_dim: 100,
+            cond_dim: 0,
+        }
+    }
+
+    #[test]
+    fn header_round_trip() {
+        let h = header();
+        assert_eq!(decode_header(&encode_header(&h)).unwrap(), h);
+    }
+
+    #[test]
+    fn every_event_kind_round_trips() {
+        let evs = vec![
+            TraceEvent {
+                t_us: 0,
+                body: EventBody::RequestArrival {
+                    id: 0,
+                    model: "m\"with\\quotes\nand newline".into(),
+                    z: vec![1.5, -0.0, f32::NAN, f32::MIN_POSITIVE],
+                    cond: vec![],
+                },
+            },
+            TraceEvent {
+                t_us: 1,
+                body: EventBody::Enqueue { id: 0, depth: 3 },
+            },
+            TraceEvent {
+                t_us: 2,
+                body: EventBody::Reject {
+                    id: 1,
+                    reason: "queue full for \"m\"".into(),
+                },
+            },
+            TraceEvent {
+                t_us: 3,
+                body: EventBody::BatchFormed { ids: vec![0, 2, 5] },
+            },
+            TraceEvent {
+                t_us: 4,
+                body: EventBody::BatchExecuted {
+                    ids: vec![0, 2],
+                    bucket: 4,
+                    exec_us: 1234,
+                },
+            },
+            TraceEvent {
+                t_us: 5,
+                body: EventBody::Response {
+                    id: 0,
+                    batch_size: 2,
+                    bucket: 4,
+                    latency_us: 999,
+                    checksum: u64::MAX,
+                },
+            },
+        ];
+        for e in &evs {
+            let line = encode_event(e);
+            let back = decode_event(&line).unwrap();
+            // NaN != NaN under PartialEq: compare via re-encoding, which
+            // is bit-pattern-faithful.
+            assert_eq!(encode_event(&back), line, "line {line}");
+        }
+    }
+
+    #[test]
+    fn f32_bit_exactness() {
+        for v in [0.0f32, -0.0, 1.0, -1.0, f32::INFINITY, f32::EPSILON,
+                  1.0e-38, 1.234_567_9] {
+            let e = TraceEvent {
+                t_us: 0,
+                body: EventBody::RequestArrival {
+                    id: 0,
+                    model: "m".into(),
+                    z: vec![v],
+                    cond: vec![],
+                },
+            };
+            match decode_event(&encode_event(&e)).unwrap().body {
+                EventBody::RequestArrival { z, .. } => {
+                    assert_eq!(z[0].to_bits(), v.to_bits());
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(decode_event("").is_err());
+        assert!(decode_event("{").is_err());
+        assert!(decode_event("{}").is_err());
+        assert!(decode_event("{\"t_us\":1}").is_err());
+        assert!(decode_event("{\"t_us\":1,\"ev\":\"nope\"}").is_err());
+        assert!(decode_event(
+            "{\"t_us\":1,\"ev\":\"enqueue\",\"id\":0,\"depth\":1}x"
+        )
+        .is_err());
+        // tampered checksum (non-hex)
+        assert!(decode_event(
+            "{\"t_us\":1,\"ev\":\"response\",\"id\":0,\"batch_size\":1,\
+             \"bucket\":1,\"latency_us\":1,\"checksum\":\"zzzz\"}"
+        )
+        .is_err());
+        // tampered latent bits
+        assert!(decode_event(
+            "{\"t_us\":1,\"ev\":\"arrival\",\"id\":0,\"model\":\"m\",\
+             \"z\":[\"nothex\"],\"cond\":[]}"
+        )
+        .is_err());
+        assert!(decode_header("{\"huge2_trace\":99}").is_err());
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!(
+            "huge2_codec_test_{}.jsonl",
+            std::process::id()
+        ));
+        let evs = vec![
+            TraceEvent {
+                t_us: 10,
+                body: EventBody::Enqueue { id: 0, depth: 1 },
+            },
+            TraceEvent {
+                t_us: 20,
+                body: EventBody::Response {
+                    id: 0,
+                    batch_size: 1,
+                    bucket: 1,
+                    latency_us: 5,
+                    checksum: 0xdead_beef,
+                },
+            },
+        ];
+        write_trace(&path, &header(), &evs).unwrap();
+        let (h, back) = read_trace(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(h, header());
+        assert_eq!(back, evs);
+    }
+}

@@ -1,0 +1,219 @@
+//! Divergence detection and reporting — the wasm-rr contract: replay
+//! either reproduces every recorded output checksum or fails loudly,
+//! naming the **first** trace event whose outcome the replay could not
+//! reproduce.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::time::Duration;
+
+use super::event::{EventBody, TraceEvent};
+
+/// One reproducibility violation, anchored to the recorded trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Divergence {
+    /// The replayed output for `id` hashed differently than recorded.
+    ChecksumMismatch {
+        /// 0-based index of the recorded `Response` event in the trace.
+        event_index: usize,
+        id: u64,
+        recorded: u64,
+        replayed: u64,
+    },
+    /// The recording answered `id` but the replay produced no response
+    /// (rejected at submit, or the batch failed).
+    MissingResponse { event_index: usize, id: u64 },
+}
+
+impl Divergence {
+    /// Trace index of the first event the replay failed to reproduce.
+    pub fn event_index(&self) -> usize {
+        match self {
+            Divergence::ChecksumMismatch { event_index, .. }
+            | Divergence::MissingResponse { event_index, .. } => {
+                *event_index
+            }
+        }
+    }
+}
+
+impl fmt::Display for Divergence {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Divergence::ChecksumMismatch {
+                event_index,
+                id,
+                recorded,
+                replayed,
+            } => write!(
+                f,
+                "event #{event_index} (response id={id}): checksum \
+                 mismatch — recorded {recorded:#018x}, replayed \
+                 {replayed:#018x}"
+            ),
+            Divergence::MissingResponse { event_index, id } => write!(
+                f,
+                "event #{event_index} (response id={id}): recorded a \
+                 response but replay produced none"
+            ),
+        }
+    }
+}
+
+/// Outcome of one replay run.
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    /// Arrivals re-driven through the engine.
+    pub requests: usize,
+    /// Replayed responses that had a recorded counterpart to verify.
+    pub compared: usize,
+    /// Of those, how many matched bit-for-bit.
+    pub matched: usize,
+    /// Replay responses with no recorded counterpart (the recording
+    /// rejected the request; fast replay may admit it). Informational —
+    /// scheduling is allowed to differ, outputs are not.
+    pub extra_responses: usize,
+    /// All violations, ordered by recorded event index.
+    pub divergences: Vec<Divergence>,
+    /// Replay wall-clock.
+    pub wall: Duration,
+}
+
+impl ReplayReport {
+    pub fn is_clean(&self) -> bool {
+        self.divergences.is_empty()
+    }
+
+    /// The first mismatching event (trace order), if any.
+    pub fn first_divergence(&self) -> Option<&Divergence> {
+        self.divergences.first()
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} requests replayed, {}/{} checksums verified, {} \
+             divergence(s), {} extra response(s), {:.2}s wall",
+            self.requests,
+            self.matched,
+            self.compared,
+            self.divergences.len(),
+            self.extra_responses,
+            self.wall.as_secs_f64()
+        )
+    }
+}
+
+/// Compare replayed output checksums against every recorded `Response`
+/// event, in trace order. `replayed` maps request id → output checksum.
+pub fn diff_responses(events: &[TraceEvent],
+                      replayed: &HashMap<u64, u64>)
+                      -> (Vec<Divergence>, usize, usize) {
+    let mut divergences = Vec::new();
+    let mut compared = 0;
+    let mut matched = 0;
+    for (idx, ev) in events.iter().enumerate() {
+        if let EventBody::Response { id, checksum, .. } = &ev.body {
+            match replayed.get(id) {
+                None => divergences.push(Divergence::MissingResponse {
+                    event_index: idx,
+                    id: *id,
+                }),
+                Some(got) => {
+                    compared += 1;
+                    if got == checksum {
+                        matched += 1;
+                    } else {
+                        divergences.push(Divergence::ChecksumMismatch {
+                            event_index: idx,
+                            id: *id,
+                            recorded: *checksum,
+                            replayed: *got,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    (divergences, compared, matched)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(t_us: u64, id: u64, checksum: u64) -> TraceEvent {
+        TraceEvent {
+            t_us,
+            body: EventBody::Response {
+                id,
+                batch_size: 1,
+                bucket: 1,
+                latency_us: 1,
+                checksum,
+            },
+        }
+    }
+
+    #[test]
+    fn clean_when_all_match() {
+        let events = vec![resp(0, 0, 10), resp(1, 1, 11)];
+        let replayed: HashMap<u64, u64> =
+            [(0, 10), (1, 11)].into_iter().collect();
+        let (d, compared, matched) = diff_responses(&events, &replayed);
+        assert!(d.is_empty());
+        assert_eq!((compared, matched), (2, 2));
+    }
+
+    #[test]
+    fn mismatch_names_first_event() {
+        let events = vec![
+            TraceEvent {
+                t_us: 0,
+                body: EventBody::Enqueue { id: 0, depth: 1 },
+            },
+            resp(1, 0, 10),
+            resp(2, 1, 11),
+        ];
+        let replayed: HashMap<u64, u64> =
+            [(0, 10), (1, 99)].into_iter().collect();
+        let (d, compared, matched) = diff_responses(&events, &replayed);
+        assert_eq!((compared, matched), (2, 1));
+        assert_eq!(
+            d,
+            vec![Divergence::ChecksumMismatch {
+                event_index: 2,
+                id: 1,
+                recorded: 11,
+                replayed: 99,
+            }]
+        );
+        assert_eq!(d[0].event_index(), 2);
+        let msg = d[0].to_string();
+        assert!(msg.contains("event #2"), "{msg}");
+        assert!(msg.contains("id=1"), "{msg}");
+    }
+
+    #[test]
+    fn missing_response_is_a_divergence() {
+        let events = vec![resp(0, 3, 10)];
+        let replayed = HashMap::new();
+        let (d, compared, _) = diff_responses(&events, &replayed);
+        assert_eq!(compared, 0);
+        assert_eq!(
+            d,
+            vec![Divergence::MissingResponse { event_index: 0, id: 3 }]
+        );
+    }
+
+    #[test]
+    fn divergences_come_out_in_trace_order() {
+        let events = vec![resp(0, 2, 1), resp(1, 0, 1), resp(2, 1, 1)];
+        let replayed: HashMap<u64, u64> =
+            [(2, 9), (0, 9), (1, 9)].into_iter().collect();
+        let (d, _, _) = diff_responses(&events, &replayed);
+        let idxs: Vec<usize> =
+            d.iter().map(|x| x.event_index()).collect();
+        assert_eq!(idxs, vec![0, 1, 2]);
+    }
+}

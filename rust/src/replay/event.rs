@@ -1,0 +1,143 @@
+//! The trace-event model: every externally-visible state transition of
+//! the serving engine, stamped with a monotonic timestamp.
+//!
+//! The deterministic-replay contract (borrowed from wasm-rr): a recording
+//! captures **all non-deterministic inputs** of a serve run — arrival
+//! times, request ids, latent vectors — plus a checksum of every output,
+//! so a replay can re-drive the exact workload and *prove* the engine
+//! produced byte-identical images. Scheduling detail (batch composition,
+//! queue depths, latencies) is recorded as telemetry but deliberately NOT
+//! pinned: the engine is free to batch differently under `--timing fast`,
+//! because per-request outputs are batch-composition-invariant (each GEMM
+//! row accumulates independently — see DESIGN.md §7).
+
+/// One timestamped trace record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Microseconds since the recording sink was created. Monotone
+    /// non-decreasing in file order (stamped under the sink's lock).
+    pub t_us: u64,
+    pub body: EventBody,
+}
+
+/// What happened.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventBody {
+    /// A request reached `Engine::submit` — the workload's
+    /// non-deterministic input, captured bit-exactly (`z`/`cond` round-trip
+    /// through the codec via their IEEE-754 bit patterns).
+    RequestArrival {
+        id: u64,
+        model: String,
+        z: Vec<f32>,
+        cond: Vec<f32>,
+    },
+    /// Admission succeeded; `depth` is the queue depth just after the push.
+    Enqueue { id: u64, depth: usize },
+    /// Admission failed (validation, backpressure, or shutdown).
+    Reject { id: u64, reason: String },
+    /// The dynamic batcher closed a batch (ids in queue order).
+    BatchFormed { ids: Vec<u64> },
+    /// A batch finished executing on its backend.
+    BatchExecuted {
+        ids: Vec<u64>,
+        /// Compiled bucket the batch ran in (== len(ids) on native).
+        bucket: usize,
+        exec_us: u64,
+    },
+    /// A response was sent to a client. `checksum` pins the output bytes
+    /// ([`crate::tensor::Tensor::checksum`]); replay verifies it.
+    Response {
+        id: u64,
+        batch_size: usize,
+        bucket: usize,
+        latency_us: u64,
+        checksum: u64,
+    },
+}
+
+impl EventBody {
+    /// Wire tag of the event kind (the codec's `"ev"` field).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            EventBody::RequestArrival { .. } => "arrival",
+            EventBody::Enqueue { .. } => "enqueue",
+            EventBody::Reject { .. } => "reject",
+            EventBody::BatchFormed { .. } => "batch_formed",
+            EventBody::BatchExecuted { .. } => "batch_executed",
+            EventBody::Response { .. } => "response",
+        }
+    }
+
+    /// The request id this event concerns, if it concerns exactly one.
+    pub fn request_id(&self) -> Option<u64> {
+        match self {
+            EventBody::RequestArrival { id, .. }
+            | EventBody::Enqueue { id, .. }
+            | EventBody::Reject { id, .. }
+            | EventBody::Response { id, .. } => Some(*id),
+            EventBody::BatchFormed { .. }
+            | EventBody::BatchExecuted { .. } => None,
+        }
+    }
+}
+
+/// Trace-file header: everything a replayer needs to rebuild the serving
+/// setup the recording ran against. The wire format version is not a
+/// field here — the codec stamps [`TRACE_VERSION`] on write and rejects
+/// anything else on read, so an unsupported version is unrepresentable
+/// in memory.
+///
+/// [`TRACE_VERSION`]: crate::replay::codec::TRACE_VERSION
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceHeader {
+    /// Registered model name requests were submitted under.
+    pub model: String,
+    /// `"native"` (pure-Rust generator) or `"pjrt"` (AOT artifacts).
+    pub backend: String,
+    /// Weight seed; the native backend rebuilds the exact generator from
+    /// it, the PJRT backend re-binds identically seeded weights.
+    pub seed: u64,
+    pub z_dim: usize,
+    pub cond_dim: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_are_distinct() {
+        let evs = [
+            EventBody::RequestArrival {
+                id: 0,
+                model: "m".into(),
+                z: vec![],
+                cond: vec![],
+            },
+            EventBody::Enqueue { id: 0, depth: 1 },
+            EventBody::Reject { id: 0, reason: "r".into() },
+            EventBody::BatchFormed { ids: vec![0] },
+            EventBody::BatchExecuted { ids: vec![0], bucket: 1, exec_us: 2 },
+            EventBody::Response {
+                id: 0,
+                batch_size: 1,
+                bucket: 1,
+                latency_us: 3,
+                checksum: 4,
+            },
+        ];
+        let mut kinds: Vec<&str> = evs.iter().map(|e| e.kind()).collect();
+        kinds.sort_unstable();
+        kinds.dedup();
+        assert_eq!(kinds.len(), evs.len());
+    }
+
+    #[test]
+    fn request_id_only_for_per_request_events() {
+        assert_eq!(EventBody::Enqueue { id: 7, depth: 0 }.request_id(),
+                   Some(7));
+        assert_eq!(EventBody::BatchFormed { ids: vec![7] }.request_id(),
+                   None);
+    }
+}

@@ -1,0 +1,36 @@
+//! Deterministic record/replay for the serving engine.
+//!
+//! A `huge2 serve --record out.jsonl` run captures every
+//! non-deterministic workload input (arrival offsets, request ids,
+//! latents) plus a checksum of every output into a JSONL trace;
+//! `huge2 replay out.jsonl` re-drives the identical workload through a
+//! freshly built engine and verifies each per-request output checksum
+//! bit-for-bit. The contract is wasm-rr's: *all non-deterministic inputs
+//! return recorded values; divergence is an error* — reported with the
+//! first mismatching trace event.
+//!
+//! Layout:
+//!
+//! * [`event`] — the structured trace-event model + trace header.
+//! * [`codec`] — dependency-free JSONL encode/decode (bit-exact floats).
+//! * [`recorder`] — the `Arc<TraceSink>` hook the coordinator feeds, and
+//!   the `Recorder` that saves a session.
+//! * [`replayer`] — re-drives a trace, `--timing faithful|fast`.
+//! * [`divergence`] — checksum comparison + first-mismatch reporting.
+//!
+//! The canonical library-level quickstart (Recorder → set_trace_sink →
+//! serve → save, then Replayer::load → run → is_clean) lives in the
+//! [crate docs](crate); `examples/record_replay.rs` is the runnable
+//! version, and DESIGN.md §7 specifies the semantics.
+
+pub mod codec;
+pub mod divergence;
+pub mod event;
+pub mod recorder;
+pub mod replayer;
+
+pub use codec::TRACE_VERSION;
+pub use divergence::{Divergence, ReplayReport};
+pub use event::{EventBody, TraceEvent, TraceHeader};
+pub use recorder::{Recorder, TraceSink};
+pub use replayer::{Replayer, Timing};

@@ -1,0 +1,245 @@
+//! The replay side: re-drive a recorded workload through a live engine
+//! and verify every recorded output checksum.
+//!
+//! Two timing modes (the casettek/raster window-replay split):
+//!
+//! * **faithful** — sleep until each request's recorded arrival offset,
+//!   reproducing the original open-loop pressure (batch sizes and
+//!   latencies come out statistically comparable — useful for perf
+//!   bisection);
+//! * **fast** — submit as fast as the queue admits (batches form
+//!   differently, wall-clock shrinks — useful for CI regression checks,
+//!   valid because per-request outputs are batch-composition-invariant,
+//!   DESIGN.md §7).
+//!
+//! In both modes the verification contract is identical: every recorded
+//! `Response` checksum must be reproduced bit-for-bit, else the run
+//! reports a [`Divergence`](super::divergence::Divergence) naming the
+//! first mismatching event.
+
+use anyhow::{anyhow, Result};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::path::Path;
+use std::str::FromStr;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Backpressure, Engine, Response};
+
+use super::codec;
+use super::divergence::{diff_responses, ReplayReport};
+use super::event::{EventBody, TraceEvent, TraceHeader};
+
+/// How the replayer paces recorded arrivals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Timing {
+    /// Sleep to each recorded arrival offset.
+    Faithful,
+    /// Submit as fast as possible.
+    Fast,
+}
+
+impl Timing {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Timing::Faithful => "faithful",
+            Timing::Fast => "fast",
+        }
+    }
+}
+
+impl FromStr for Timing {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "faithful" => Ok(Timing::Faithful),
+            "fast" => Ok(Timing::Fast),
+            other => Err(anyhow!(
+                "--timing expects 'faithful' or 'fast', got {other:?}"
+            )),
+        }
+    }
+}
+
+/// A loaded trace, ready to re-drive.
+pub struct Replayer {
+    header: TraceHeader,
+    events: Vec<TraceEvent>,
+}
+
+impl Replayer {
+    /// Load and fully validate a JSONL trace file (a tampered line is an
+    /// error here, before any compute is spent).
+    pub fn load(path: &Path) -> Result<Self> {
+        let (header, events) = codec::read_trace(path)?;
+        Ok(Replayer { header, events })
+    }
+
+    /// Build from in-memory parts (tests, benches).
+    pub fn from_parts(header: TraceHeader, events: Vec<TraceEvent>)
+                      -> Self {
+        Replayer { header, events }
+    }
+
+    pub fn header(&self) -> &TraceHeader {
+        &self.header
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// Number of recorded arrivals (requests a replay will re-drive).
+    pub fn arrival_count(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| {
+                matches!(e.body, EventBody::RequestArrival { .. })
+            })
+            .count()
+    }
+
+    /// Re-drive the recorded workload through `engine` (the trace's model
+    /// must already be registered) and verify output checksums.
+    ///
+    /// Admission may legitimately differ from the recording (fast mode
+    /// floods the queue the recording paced): a request the recording
+    /// *rejected* but the replay answers is counted as an extra response,
+    /// not a divergence. A request the recording *answered* must be
+    /// answered identically — anything else diverges.
+    ///
+    /// Backpressure on replay is NOT a divergence: when `submit` rejects
+    /// while our own requests are still in flight, the replayer drains
+    /// the oldest in-flight response and retries, so a fast replay of a
+    /// trace larger than the queue depth completes instead of
+    /// mis-reporting deterministic requests as missing. Only a reject
+    /// with nothing in flight (validation failure, shutdown) drops the
+    /// request.
+    pub fn run(&self, engine: &Engine, timing: Timing)
+               -> Result<ReplayReport> {
+        let t0 = Instant::now();
+        // Faithful offsets are rebased to the first arrival: recorded
+        // t_us counts from sink creation, which includes the recording
+        // run's model-load time — dead idle that pacing must not replay.
+        let base_us = self
+            .events
+            .iter()
+            .find(|e| matches!(e.body, EventBody::RequestArrival { .. }))
+            .map(|e| e.t_us)
+            .unwrap_or(0);
+        let mut pending: VecDeque<(u64, mpsc::Receiver<Response>)> =
+            VecDeque::new();
+        let mut replayed: HashMap<u64, u64> = HashMap::new();
+        let mut requests = 0usize;
+        for ev in &self.events {
+            let EventBody::RequestArrival { id, model, z, cond } = &ev.body
+            else {
+                continue;
+            };
+            requests += 1;
+            if timing == Timing::Faithful {
+                let at =
+                    Duration::from_micros(ev.t_us.saturating_sub(base_us));
+                let elapsed = t0.elapsed();
+                if at > elapsed {
+                    std::thread::sleep(at - elapsed);
+                }
+            }
+            loop {
+                match engine.submit(model, z.clone(), cond.clone()) {
+                    Ok(rx) => {
+                        pending.push_back((*id, rx));
+                        break;
+                    }
+                    Err(e) if e.downcast_ref::<Backpressure>().is_some()
+                        && !pending.is_empty() =>
+                    {
+                        // transient backpressure from our own in-flight
+                        // requests: drain the oldest, then retry
+                        let (pid, rx) = pending.pop_front().unwrap();
+                        if let Ok(resp) = rx.recv() {
+                            replayed.insert(pid, resp.image.checksum());
+                        }
+                    }
+                    // Deterministic reject (validation/shutdown) — or
+                    // backpressure with nothing of ours in flight, which
+                    // cannot clear by waiting. Surfaces as
+                    // MissingResponse iff the recording answered this id.
+                    Err(_) => break,
+                }
+            }
+        }
+
+        for (id, rx) in pending {
+            if let Ok(resp) = rx.recv() {
+                replayed.insert(id, resp.image.checksum());
+            }
+        }
+
+        let (divergences, compared, matched) =
+            diff_responses(&self.events, &replayed);
+        let recorded_ids: HashSet<u64> = self
+            .events
+            .iter()
+            .filter_map(|e| match &e.body {
+                EventBody::Response { id, .. } => Some(*id),
+                _ => None,
+            })
+            .collect();
+        let extra_responses = replayed
+            .keys()
+            .filter(|id| !recorded_ids.contains(id))
+            .count();
+        Ok(ReplayReport {
+            requests,
+            compared,
+            matched,
+            extra_responses,
+            divergences,
+            wall: t0.elapsed(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_parses() {
+        assert_eq!("fast".parse::<Timing>().unwrap(), Timing::Fast);
+        assert_eq!("faithful".parse::<Timing>().unwrap(),
+                   Timing::Faithful);
+        assert!("slow".parse::<Timing>().is_err());
+        assert_eq!(Timing::Fast.as_str(), "fast");
+    }
+
+    #[test]
+    fn arrival_count_counts_only_arrivals() {
+        let header = TraceHeader {
+            model: "m".into(),
+            backend: "native".into(),
+            seed: 0,
+            z_dim: 1,
+            cond_dim: 0,
+        };
+        let events = vec![
+            TraceEvent {
+                t_us: 0,
+                body: EventBody::RequestArrival {
+                    id: 0,
+                    model: "m".into(),
+                    z: vec![0.0],
+                    cond: vec![],
+                },
+            },
+            TraceEvent {
+                t_us: 1,
+                body: EventBody::Enqueue { id: 0, depth: 1 },
+            },
+        ];
+        let rp = Replayer::from_parts(header, events);
+        assert_eq!(rp.arrival_count(), 1);
+    }
+}

@@ -6,6 +6,13 @@
 //!   with [`crate::tensor::Tensor`] inputs/outputs.
 
 pub mod artifact;
+/// Real PJRT bridge — needs the vendored `xla` crate (feature `pjrt`).
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+/// Same public surface, no `xla` dependency: every execution attempt
+/// fails with an actionable error (build with `--features pjrt`).
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 pub mod service;
 

@@ -1,8 +1,18 @@
 //! Synthetic request-workload generators for the serving benches:
 //! open-loop Poisson arrivals (edge cameras / interactive clients) and
 //! closed-loop saturation (the paper's "throughput" setting).
+//!
+//! Arrival traces are also **replayable fixtures**: [`save`] / [`load`]
+//! round-trip a trace through a tiny text format (`<offset_ns> <id>`
+//! lines), so a synthetic workload generated once — or captured from a
+//! live run — can be re-driven bit-identically by `huge2 serve
+//! --arrivals f` or fed to the record/replay subsystem
+//! ([`crate::replay`]).
 
+use anyhow::{anyhow, bail, Context, Result};
 use crate::rng::Rng;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
 use std::time::Duration;
 
 /// One generation request in a workload trace.
@@ -60,6 +70,63 @@ pub fn bursty(burst: usize, gap_hz: f64, n: usize, seed: u64)
     out
 }
 
+/// Save an arrival trace as a replayable fixture: one `<offset_ns> <id>`
+/// line per request (ns so the round-trip is exact), `#` comments.
+pub fn save(path: &Path, arrivals: &[Arrival]) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "# huge2 arrival trace v1: <offset_ns> <id>")?;
+    for a in arrivals {
+        writeln!(w, "{} {}", a.at.as_nanos(), a.id)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load an arrival-trace fixture written by [`save`]. Rejects malformed
+/// lines and non-monotone offsets (a corrupted fixture should fail
+/// loudly, not skew a benchmark silently).
+pub fn load(path: &Path) -> Result<Vec<Arrival>> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let reader = BufReader::new(file);
+    let mut out: Vec<Arrival> = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line
+            .with_context(|| format!("reading {}", path.display()))?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let bad = || {
+            anyhow!("{}:{}: expected '<offset_ns> <id>', got {line:?}",
+                    path.display(), lineno + 1)
+        };
+        let ns: u64 = parts
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(&bad)?;
+        let id: u64 = parts
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(&bad)?;
+        if parts.next().is_some() {
+            return Err(bad());
+        }
+        let at = Duration::from_nanos(ns);
+        if let Some(prev) = out.last() {
+            if prev.at > at {
+                bail!("{}:{}: offsets must be monotone non-decreasing",
+                      path.display(), lineno + 1);
+            }
+        }
+        out.push(Arrival { at, id });
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -96,5 +163,38 @@ mod tests {
     fn deterministic_given_seed() {
         assert_eq!(poisson(10.0, 100, 5), poisson(10.0, 100, 5));
         assert_ne!(poisson(10.0, 100, 5), poisson(10.0, 100, 6));
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir()
+            .join(format!("huge2_trace_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn save_load_round_trip_is_exact() {
+        for (i, tr) in [poisson(50.0, 200, 1), uniform(50.0, 64),
+                        bursty(8, 10.0, 100, 2)]
+            .into_iter()
+            .enumerate()
+        {
+            let path = tmp(&format!("rt{i}.txt"));
+            save(&path, &tr).unwrap();
+            let back = load(&path).unwrap();
+            std::fs::remove_file(&path).ok();
+            assert_eq!(back, tr);
+        }
+    }
+
+    #[test]
+    fn load_rejects_corruption() {
+        let path = tmp("bad.txt");
+        std::fs::write(&path, "# c\n10 0\nnot a line\n").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::write(&path, "20 0\n10 1\n").unwrap();
+        assert!(load(&path).is_err(), "non-monotone offsets rejected");
+        std::fs::write(&path, "10 0 junk\n").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+        assert!(load(&path).is_err(), "missing file is an error");
     }
 }

@@ -132,20 +132,11 @@ fn histogram_quantiles_bounded_error() {
 
 #[test]
 fn engine_accounting_invariant_under_flood() {
-    use huge2::config::{cgan_layers, EngineConfig};
+    use huge2::config::EngineConfig;
     use huge2::coordinator::{Engine, Model};
     use huge2::gan::Generator;
 
-    let mut rng = Rng::new(3);
-    let mut cfgs = cgan_layers();
-    for l in &mut cfgs {
-        l.c_in /= 8;
-        if l.c_out > 3 {
-            l.c_out /= 8;
-        }
-    }
-    cfgs[1].c_in = cfgs[0].c_out;
-    let gen = Generator::new(cfgs, 8, 0, &mut rng);
+    let gen = Generator::tiny_cgan(3);
     let mut eng = Engine::new(EngineConfig {
         workers: 2,
         queue_depth: 4,
