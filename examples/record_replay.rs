@@ -52,7 +52,9 @@ fn main() -> anyhow::Result<()> {
             std::thread::sleep(wait);
         }
         let z: Vec<f32> = (0..z_dim).map(|_| rng.next_normal()).collect();
-        pending.push(eng.submit("dcgan", z, vec![])?);
+        pending.push(eng.submit("dcgan",
+                                huge2::coordinator::Payload::latent(
+                                    z, vec![]))?);
     }
     for rx in pending {
         rx.recv()?;
@@ -67,6 +69,8 @@ fn main() -> anyhow::Result<()> {
             seed,
             z_dim,
             cond_dim: 0,
+            task: "generate".into(),
+            net: String::new(),
         },
         sink,
     );

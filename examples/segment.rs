@@ -1,45 +1,52 @@
-//! Semantic-segmentation-style workload (the paper's second motivating
-//! domain, §1/§2.1.2): an atrous spatial pyramid — parallel dilated
-//! convolutions at dilations 1/2/4/8 — over a feature map, comparing the
-//! naive zero-dilated-kernel engine with HUGE² untangling, and (if
-//! artifacts exist) the AOT JAX/Pallas pyramid through PJRT.
+//! Semantic segmentation **end-to-end** through the `seg` subsystem (the
+//! paper's second motivating domain, §1/§2.1.2): build a [`SegNet`] from
+//! dilated-conv layer configs (atrous spatial pyramid at dilations
+//! 1/2/4/8), compare the naive zero-dilated-kernel engine with HUGE²
+//! untangling per pyramid branch, then serve the net through the
+//! coordinator — submit an image request, get a class-argmax mask back.
 //!
 //! Run: `cargo run --release --example segment`
 
-use huge2::bench_util::{fmt_dur, measure, Table};
-use huge2::deconv::{baseline, dilated, DilatedParams};
+use huge2::bench_util::{fmt_dur, Table};
+use huge2::config::{segnet, EngineConfig};
+use huge2::coordinator::{Engine as Coordinator, Model, Payload};
+use huge2::deconv::Engine;
 use huge2::rng::Rng;
-use huge2::runtime::RuntimeHandle;
+use huge2::seg::SegNet;
 use huge2::tensor::Tensor;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
-    let (h, c, n) = (33, 32, 32);
+    // --- build: weights seeded, kernels tap-packed at load time ---
+    let net = Arc::new(SegNet::new(&segnet(), 7));
+    let in_shape = net.in_shape();
     let mut rng = Rng::new(11);
-    let x = Tensor::randn(&[1, h, h, c], &mut rng);
-    let ks: Vec<Tensor> = (0..4)
-        .map(|_| Tensor::randn(&[3, 3, c, n], &mut rng).scale(0.05))
-        .collect();
-    let dils = [1usize, 2, 4, 8];
+    let x = Tensor::randn(&in_shape, &mut rng);
+    println!("segnet: input {in_shape:?}, {} classes, ASPP dilations {:?} \
+              ('same' padding)\n",
+             net.n_classes(),
+             net.aspp.iter().map(|l| l.cfg.params.dilation)
+                 .collect::<Vec<_>>());
 
-    println!("atrous pyramid over {h}x{h}x{c}, dilations {dils:?} \
-              ('same' padding)\n");
+    // --- per-branch timing table: baseline vs HUGE² untangled ---
+    let trunk_out = {
+        let mut h = x.clone();
+        for l in &net.trunk {
+            h = l.forward(&h, Engine::Huge2).relu();
+        }
+        h
+    };
     let mut t = Table::new(&["dilation", "baseline", "huge2", "speedup",
                              "max |Δ|"]);
     let mut pyr_base: Option<Tensor> = None;
     let mut pyr_fast: Option<Tensor> = None;
-    for (k, &d) in ks.iter().zip(&dils) {
-        let p = DilatedParams::new(d, 1, d);
-        let tb = measure(1, 5, || { baseline::conv2d_dilated(&x, k, &p); });
-        let tf = measure(1, 5, || { dilated::conv2d_dilated(&x, k, &p); });
-        let yb = baseline::conv2d_dilated(&x, k, &p);
-        let yf = dilated::conv2d_dilated(&x, k, &p);
-        t.row(&[
-            format!("d={d}"),
-            fmt_dur(tb.median),
-            fmt_dur(tf.median),
-            format!("{:.2}x", tb.median_s() / tf.median_s()),
-            format!("{:.2e}", yf.max_abs_diff(&yb)),
-        ]);
+    for l in &net.aspp {
+        let [base, fast, speedup, diff] =
+            huge2::seg::layer_timing_cells(l, &trunk_out);
+        t.row(&[format!("d={}", l.cfg.params.dilation), base, fast,
+                speedup, diff]);
+        let yb = l.forward(&trunk_out, Engine::Baseline);
+        let yf = l.forward(&trunk_out, Engine::Huge2);
         pyr_base = Some(match pyr_base {
             None => yb,
             Some(acc) => acc.add(&yb),
@@ -52,20 +59,64 @@ fn main() -> anyhow::Result<()> {
     t.print();
     let (pb, pf) = (pyr_base.unwrap(), pyr_fast.unwrap());
     assert!(pf.allclose(&pb, 1e-3));
-    println!("\npyramid sum agrees across engines \
-              (max |Δ| = {:.2e})", pf.max_abs_diff(&pb));
+    println!("\npyramid sum agrees across engines (max |Δ| = {:.2e})",
+             pf.max_abs_diff(&pb));
 
-    // the AOT pallas pyramid, if compiled
+    // --- serve: the same net through the multi-task coordinator ---
+    let cfg = EngineConfig {
+        workers: 2,
+        max_batch: 4,
+        batch_timeout_us: 2_000,
+        ..EngineConfig::default()
+    };
+    let mut eng = Coordinator::new(cfg);
+    eng.register_native(Model::native_seg("segnet", net.clone()))?;
+    println!("\nserving 'segnet' natively; submitting 4 image requests...");
+    let mut pending = Vec::new();
+    for i in 0..4u64 {
+        let img = Tensor::randn(&in_shape, &mut Rng::new(100 + i));
+        pending.push(eng.submit("segnet", Payload::image(img, 100 + i))?);
+    }
+    for rx in pending {
+        let r = rx.recv()?;
+        let mut hist = vec![0usize; net.n_classes()];
+        for &v in r.output.data() {
+            hist[v as usize] += 1;
+        }
+        println!("  mask {:?} in {} (batch {}): class histogram {hist:?}",
+                 r.output.shape(), fmt_dur(r.latency), r.batch_size);
+    }
+    eng.shutdown();
+
+    // --- the AOT Pallas pyramid, if compiled: the only Rust-side check
+    // of the `atrous_pyramid` artifact, kept from the pre-seg-subsystem
+    // example (its fixed geometry: 33×33×32 input, 3×3×32×32 kernels,
+    // dilations 1/2/4/8) ---
     let dir = std::path::PathBuf::from("artifacts");
     if dir.join("manifest.txt").exists() {
-        let rt = RuntimeHandle::spawn(dir)?;
-        let mut inputs = vec![x.clone()];
-        inputs.extend(ks.iter().cloned());
+        let mut rng = Rng::new(11);
+        let (h, c, n) = (33, 32, 32);
+        let xa = Tensor::randn(&[1, h, h, c], &mut rng);
+        let ks: Vec<Tensor> = (0..4)
+            .map(|_| Tensor::randn(&[3, 3, c, n], &mut rng).scale(0.05))
+            .collect();
+        let mut want: Option<Tensor> = None;
+        for (k, d) in ks.iter().zip([1usize, 2, 4, 8]) {
+            let p = huge2::deconv::DilatedParams::new(d, 1, d);
+            let y = huge2::deconv::baseline::conv2d_dilated(&xa, k, &p);
+            want = Some(match want {
+                None => y,
+                Some(acc) => acc.add(&y),
+            });
+        }
+        let want = want.unwrap();
+        let rt = huge2::runtime::RuntimeHandle::spawn(dir)?;
+        let mut inputs = vec![xa];
+        inputs.extend(ks);
         let y = rt.run("atrous_pyramid", inputs)?;
-        // the artifact's pyramid uses dilations (1,2,4,8) too
-        println!("PJRT pallas pyramid agrees: max |Δ| = {:.2e}",
-                 y[0].max_abs_diff(&pb));
-        assert!(y[0].allclose(&pb, 1e-3));
+        println!("\nPJRT pallas pyramid agrees: max |Δ| = {:.2e}",
+                 y[0].max_abs_diff(&want));
+        assert!(y[0].allclose(&want, 1e-3));
     }
     println!("OK");
     Ok(())

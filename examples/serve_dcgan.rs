@@ -11,7 +11,7 @@
 //! Run: `cargo run --release --example serve_dcgan [rate] [n_requests]`
 
 use huge2::config::EngineConfig;
-use huge2::coordinator::Engine;
+use huge2::coordinator::{Engine, Payload};
 use huge2::rng::Rng;
 use huge2::runtime::RuntimeHandle;
 use huge2::trace::poisson;
@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
             std::thread::sleep(wait);
         }
         let z: Vec<f32> = (0..100).map(|_| rng.next_normal()).collect();
-        match eng.submit("dcgan", z, vec![]) {
+        match eng.submit("dcgan", Payload::latent(z, vec![])) {
             Ok(rx) => pending.push(rx),
             Err(_) => rejected += 1,
         }
@@ -66,12 +66,12 @@ fn main() -> anyhow::Result<()> {
     let mut first_images: Vec<huge2::tensor::Tensor> = Vec::new();
     for rx in pending {
         let r = rx.recv()?;
-        assert_eq!(r.image.shape(), &[1, 64, 64, 3]);
+        assert_eq!(r.output.shape(), &[1, 64, 64, 3]);
         // tanh range sanity on the actual generated pixels
-        assert!(r.image.data().iter().all(|v| v.abs() <= 1.0));
-        checksum ^= r.image.checksum();
+        assert!(r.output.data().iter().all(|v| v.abs() <= 1.0));
+        checksum ^= r.output.checksum();
         if first_images.len() < 4 {
-            first_images.push(r.image.clone());
+            first_images.push(r.output.clone());
         }
         lats.push(r.latency);
         batch_sizes.push(r.batch_size);

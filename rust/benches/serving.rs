@@ -99,7 +99,8 @@ fn replay_regression(quick: bool) {
             std::thread::sleep(wait);
         }
         let z: Vec<f32> = (0..8).map(|_| rng.next_normal()).collect();
-        if let Ok(rx) = eng.submit("tiny", z, vec![]) {
+        let payload = huge2::coordinator::Payload::latent(z, vec![]);
+        if let Ok(rx) = eng.submit("tiny", payload) {
             pending.push(rx);
         }
     }
@@ -115,6 +116,8 @@ fn replay_regression(quick: bool) {
             seed,
             z_dim: 8,
             cond_dim: 0,
+            task: "generate".into(),
+            net: String::new(),
         },
         sink,
     );
@@ -156,11 +159,97 @@ fn replay_regression(quick: bool) {
               pin perf regressions to engine changes, not noise)");
 }
 
+/// Segmentation serving regression: record a native seg run, re-drive it
+/// twice in fast mode — same discipline as [`replay_regression`], over
+/// the dilated-conv path (image payloads, trace format v2).
+fn seg_replay_regression(quick: bool) {
+    use huge2::config::tiny_segnet;
+    use huge2::coordinator::Payload;
+    use huge2::replay::{Recorder, Replayer, Timing, TraceHeader,
+                        TraceSink};
+    use huge2::rng::Rng;
+    use huge2::seg::SegNet;
+    use huge2::tensor::Tensor;
+
+    let n = if quick { 16 } else { 64 };
+    let seed = 21u64;
+    let build = |sink: Option<Arc<TraceSink>>| -> Engine {
+        let mut e = Engine::new(EngineConfig {
+            workers: 2,
+            max_batch: 8,
+            batch_timeout_us: 2_000,
+            ..EngineConfig::default()
+        });
+        if let Some(s) = sink {
+            e.set_trace_sink(s).unwrap();
+        }
+        let net = Arc::new(SegNet::new(&tiny_segnet(), seed));
+        e.register_native(Model::native_seg("seg", net)).unwrap();
+        e
+    };
+
+    println!("\n== segmentation replay regression (image payloads, \
+              trace v2) ==\n");
+    // geometry from the config, not hardcoded — a tiny_segnet change
+    // must not silently turn this phase into a 0-request no-op
+    let in_shape = SegNet::new(&tiny_segnet(), seed).in_shape();
+    let sink = Arc::new(TraceSink::new());
+    let eng = build(Some(sink.clone()));
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..n as u64 {
+        let img_seed = 900 + i;
+        let img = Tensor::randn(&in_shape, &mut Rng::new(img_seed));
+        if let Ok(rx) = eng.submit("seg", Payload::image(img, img_seed)) {
+            pending.push(rx);
+        }
+    }
+    assert!(!pending.is_empty(), "no seg requests were admitted");
+    for rx in pending {
+        let _ = rx.recv();
+    }
+    let t_record = t0.elapsed();
+    eng.shutdown();
+    let rec = Recorder::from_parts(
+        TraceHeader {
+            model: "seg".into(),
+            backend: "native".into(),
+            seed,
+            z_dim: 0,
+            cond_dim: 0,
+            task: "segment".into(),
+            net: "tiny_segnet".into(),
+        },
+        sink,
+    );
+    let path = std::env::temp_dir().join(format!(
+        "huge2_seg_bench_{}.jsonl",
+        std::process::id()
+    ));
+    let n_events = rec.save(&path).unwrap();
+    println!("recorded {n} seg requests ({n_events} events) in {}",
+             fmt_dur(t_record));
+
+    let rp = Replayer::load(&path).unwrap();
+    for run in 1..=2 {
+        let eng = build(None);
+        let report = rp.run(&eng, Timing::Fast).unwrap();
+        eng.shutdown();
+        assert!(report.is_clean(), "seg replay diverged: {}",
+                report.first_divergence().unwrap());
+        println!("replay #{run} (fast): {} requests, {}/{} checksums, {}",
+                 report.requests, report.matched, report.compared,
+                 fmt_dur(report.wall));
+    }
+    std::fs::remove_file(&path).ok();
+}
+
 fn main() {
     let quick = std::env::var("BENCH_QUICK").is_ok();
     let per_client = if quick { 2 } else { 6 };
 
     replay_regression(quick);
+    seg_replay_regression(quick);
 
     let dir = std::path::PathBuf::from("artifacts");
     if !dir.join("manifest.txt").exists() {

@@ -5,6 +5,8 @@
 //! huge2 bench --layer dcgan_dc3       # one layer, both engines
 //! huge2 serve --model dcgan --rate 2 --requests 20
 //! huge2 serve --native --record t.jsonl
+//! huge2 serve --task segment --record t.jsonl   # seg-net serving
+//! huge2 segment --net segnet          # one-shot: timing table + mask
 //! huge2 replay t.jsonl --timing fast  # verify recorded checksums
 //! huge2 reproduce                     # all paper tables (text form)
 //! ```
@@ -31,7 +33,7 @@ impl Args {
         let subcommand = it
             .next()
             .ok_or_else(|| anyhow!("usage: huge2 <inspect|bench|serve|\
-                                    replay|reproduce> \
+                                    segment|replay|reproduce> \
                                     [positional] [--key value]"))?
             .clone();
         let mut positionals = Vec::new();

@@ -6,7 +6,7 @@ mod toml_mini;
 
 pub use toml_mini::{parse_toml, TomlValue};
 
-use crate::deconv::{DeconvParams, DilatedParams};
+use crate::deconv::{DeconvParams, DilatedParams, Engine};
 
 /// One Table-1 row: a stride-2 transposed-convolution layer.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -84,6 +84,120 @@ pub fn dilated_workloads() -> Vec<(&'static str, usize, usize, usize, usize,
         ("seg_aspp_d8", 33, 64, 64, 3, DilatedParams::new(8, 1, 8)),
         ("disc_bwd_16", 16, 32, 32, 3, DilatedParams::new(2, 1, 2)),
     ]
+}
+
+/// One segmentation-net layer: a dilated (atrous) convolution, with a
+/// per-layer choice of engine and threading — the seg analogue of
+/// [`LayerConfig`]. Geometry follows [`DilatedParams::out_size`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SegLayerConfig {
+    pub name: &'static str,
+    /// Input spatial size (square).
+    pub h: usize,
+    pub c_in: usize,
+    pub c_out: usize,
+    /// Kernel size (square).
+    pub k: usize,
+    pub params: DilatedParams,
+    /// Baseline vs HUGE² untangled dilated conv for this layer.
+    pub engine: Engine,
+    /// Threads for this layer's forward (1 = single-threaded). The MT
+    /// engine is bit-identical across thread counts, so this is a pure
+    /// throughput knob — it never perturbs replay checksums.
+    pub threads: usize,
+}
+
+impl SegLayerConfig {
+    pub fn h_out(&self) -> usize {
+        self.params.out_size(self.h, self.k)
+    }
+}
+
+/// A segmentation network: sequential trunk → parallel atrous pyramid
+/// (branches summed) → 1×1 classifier head (DeepLab/ENet shape, §2.1.2).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SegNetConfig {
+    /// Registry name ([`segnet_by_name`]); recorded in trace headers so
+    /// `huge2 replay` can rebuild the exact net from the file alone.
+    pub name: &'static str,
+    pub trunk: Vec<SegLayerConfig>,
+    pub aspp: Vec<SegLayerConfig>,
+    pub head: SegLayerConfig,
+    pub n_classes: usize,
+}
+
+const SEG_HUGE2: Engine = Engine::Huge2;
+
+/// The canonical serving segnet: 33×33×3 input, ASPP at dilations
+/// 1/2/4/8 over 64 channels (the same geometry as [`dilated_workloads`]),
+/// 12-class head. Early (large) layers run the multi-threaded dilated
+/// engine.
+pub fn segnet() -> SegNetConfig {
+    let d = |dil: usize| DilatedParams::new(dil, 1, dil); // 'same' padding
+    SegNetConfig {
+        name: "segnet",
+        trunk: vec![
+            SegLayerConfig { name: "seg_enc1", h: 33, c_in: 3, c_out: 32,
+                             k: 3, params: d(1), engine: SEG_HUGE2,
+                             threads: 4 },
+            SegLayerConfig { name: "seg_enc2", h: 33, c_in: 32, c_out: 64,
+                             k: 3, params: d(2), engine: SEG_HUGE2,
+                             threads: 4 },
+        ],
+        aspp: vec![
+            SegLayerConfig { name: "seg_aspp_d1", h: 33, c_in: 64,
+                             c_out: 64, k: 3, params: d(1),
+                             engine: SEG_HUGE2, threads: 1 },
+            SegLayerConfig { name: "seg_aspp_d2", h: 33, c_in: 64,
+                             c_out: 64, k: 3, params: d(2),
+                             engine: SEG_HUGE2, threads: 1 },
+            SegLayerConfig { name: "seg_aspp_d4", h: 33, c_in: 64,
+                             c_out: 64, k: 3, params: d(4),
+                             engine: SEG_HUGE2, threads: 1 },
+            SegLayerConfig { name: "seg_aspp_d8", h: 33, c_in: 64,
+                             c_out: 64, k: 3, params: d(8),
+                             engine: SEG_HUGE2, threads: 1 },
+        ],
+        head: SegLayerConfig { name: "seg_head", h: 33, c_in: 64,
+                               c_out: 12, k: 1,
+                               params: DilatedParams::new(1, 1, 0),
+                               engine: SEG_HUGE2, threads: 1 },
+        n_classes: 12,
+    }
+}
+
+/// Shrunk segnet (9×9×2 input, 3 classes) — the fast, bit-reproducible
+/// model for tests and benches, the seg analogue of
+/// [`crate::gan::Generator::tiny_cgan`].
+pub fn tiny_segnet() -> SegNetConfig {
+    let d = |dil: usize| DilatedParams::new(dil, 1, dil);
+    SegNetConfig {
+        name: "tiny_segnet",
+        trunk: vec![SegLayerConfig { name: "tseg_enc1", h: 9, c_in: 2,
+                                     c_out: 4, k: 3, params: d(1),
+                                     engine: SEG_HUGE2, threads: 1 }],
+        aspp: vec![
+            SegLayerConfig { name: "tseg_aspp_d1", h: 9, c_in: 4, c_out: 4,
+                             k: 3, params: d(1), engine: SEG_HUGE2,
+                             threads: 1 },
+            SegLayerConfig { name: "tseg_aspp_d2", h: 9, c_in: 4, c_out: 4,
+                             k: 3, params: d(2), engine: SEG_HUGE2,
+                             threads: 1 },
+        ],
+        head: SegLayerConfig { name: "tseg_head", h: 9, c_in: 4, c_out: 3,
+                               k: 1, params: DilatedParams::new(1, 1, 0),
+                               engine: SEG_HUGE2, threads: 1 },
+        n_classes: 3,
+    }
+}
+
+/// Seg-net registry: the names trace headers / the CLI accept.
+pub fn segnet_by_name(name: &str) -> Option<SegNetConfig> {
+    match name {
+        "segnet" => Some(segnet()),
+        "tiny_segnet" => Some(tiny_segnet()),
+        _ => None,
+    }
 }
 
 /// Serving-engine runtime configuration.
@@ -190,6 +304,31 @@ mod tests {
             assert_eq!(w[0].h_out(), w[1].h);
             assert_eq!(w[0].c_out, w[1].c_in);
         }
+    }
+
+    #[test]
+    fn segnet_configs_chain() {
+        for cfg in [segnet(), tiny_segnet()] {
+            // trunk chains spatially and channel-wise
+            for w in cfg.trunk.windows(2) {
+                assert_eq!(w[0].h_out(), w[1].h, "{}", cfg.name);
+                assert_eq!(w[0].c_out, w[1].c_in, "{}", cfg.name);
+            }
+            let last = cfg.trunk.last().unwrap();
+            // every ASPP branch consumes the trunk output and produces
+            // the same shape (branches are summed)
+            for b in &cfg.aspp {
+                assert_eq!(b.h, last.h_out(), "{}:{}", cfg.name, b.name);
+                assert_eq!(b.c_in, last.c_out, "{}:{}", cfg.name, b.name);
+                assert_eq!(b.h_out(), cfg.aspp[0].h_out());
+                assert_eq!(b.c_out, cfg.aspp[0].c_out);
+            }
+            assert_eq!(cfg.head.c_in, cfg.aspp[0].c_out);
+            assert_eq!(cfg.head.h, cfg.aspp[0].h_out());
+            assert_eq!(cfg.head.c_out, cfg.n_classes);
+            assert_eq!(segnet_by_name(cfg.name), Some(cfg));
+        }
+        assert!(segnet_by_name("nope").is_none());
     }
 
     #[test]

@@ -1,4 +1,8 @@
-//! Dynamic batcher: fuse queued generation requests into one PJRT call.
+//! Dynamic batcher: fuse queued requests into one forward pass.
+//!
+//! The batcher is payload-agnostic — it partitions a single model's
+//! queue, and queues are per-model, so a batch never mixes tasks; the
+//! worker's task dispatch happens after the batch is closed.
 //!
 //! Policy (the standard serving trade-off): a batch closes when it
 //! reaches `max_batch` *or* `batch_timeout` has elapsed since its first

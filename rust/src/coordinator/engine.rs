@@ -13,7 +13,7 @@ use crate::replay::event::EventBody;
 use crate::replay::recorder::TraceSink;
 
 use super::queue::{BoundedQueue, PushError};
-use super::router::{Model, Request, Response};
+use super::router::{Model, Payload, Request, Response};
 use super::worker::spawn_workers;
 
 struct ModelRuntime {
@@ -37,19 +37,21 @@ impl std::fmt::Display for Backpressure {
 
 impl std::error::Error for Backpressure {}
 
-/// The HUGE² edge serving engine.
+/// The HUGE² edge serving engine (multi-task: image generation and
+/// semantic segmentation share the queue → batcher → worker pipeline).
 ///
 /// ```no_run
 /// use huge2::config::EngineConfig;
-/// use huge2::coordinator::Engine;
+/// use huge2::coordinator::{Engine, Payload};
 /// # use std::sync::Arc;
 /// # use huge2::runtime::RuntimeHandle;
 /// let rt = Arc::new(RuntimeHandle::spawn("artifacts".into())?);
 /// let mut engine = Engine::new(EngineConfig::default());
 /// engine.register_pjrt("dcgan", "dcgan_gen", rt, 1, 42)?;
-/// let rx = engine.submit("dcgan", vec![0.0; 100], vec![])?;
+/// let rx = engine.submit("dcgan", Payload::latent(vec![0.0; 100],
+///                                                 vec![]))?;
 /// let resp = rx.recv()?;
-/// println!("image {:?} in {:?}", resp.image.shape(), resp.latency);
+/// println!("image {:?} in {:?}", resp.output.shape(), resp.latency);
 /// # Ok::<(), anyhow::Error>(())
 /// ```
 pub struct Engine {
@@ -125,20 +127,27 @@ impl Engine {
         v
     }
 
-    /// Submit a generation request. Returns the response channel, or an
-    /// error if the model is unknown, the latent malformed, or the queue
-    /// full (backpressure — the caller should retry later or shed).
-    pub fn submit(&self, model: &str, z: Vec<f32>, cond: Vec<f32>)
+    /// Submit a request (any task). Returns the response channel, or an
+    /// error if the model is unknown, the payload malformed or of the
+    /// wrong task, or the queue full (backpressure — the caller should
+    /// retry later or shed).
+    pub fn submit(&self, model: &str, payload: Payload)
                   -> Result<mpsc::Receiver<Response>> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         if let Some(s) = &self.sink {
-            // the workload's non-deterministic input, captured bit-exactly
-            s.record(EventBody::RequestArrival {
-                id,
-                model: model.to_string(),
-                z: z.clone(),
-                cond: cond.clone(),
-            });
+            // The workload's non-deterministic input: latents captured
+            // bit-exactly, images as (shape, seed, checksum) — trace v2.
+            // An unreplayable input must not enter the trace: it is
+            // rejected here (recorded as a Reject, no arrival event) so
+            // the fault surfaces at record time, not at every replay.
+            match payload.to_recordable_arrival() {
+                Ok(arrival) => s.record(EventBody::RequestArrival {
+                    id,
+                    model: model.to_string(),
+                    payload: arrival,
+                }),
+                Err(e) => return Err(self.reject(id, e)),
+            }
         }
         let mr = match self.models.get(model) {
             Some(mr) => mr,
@@ -148,11 +157,11 @@ impl Engine {
                     self.model_names())));
             }
         };
-        if let Err(e) = mr.model.validate(&z, &cond) {
+        if let Err(e) = mr.model.validate(&payload) {
             return Err(self.reject(id, e));
         }
         let (tx, rx) = mpsc::channel();
-        let req = Request { id, z, cond, enqueued: Instant::now(),
+        let req = Request { id, payload, enqueued: Instant::now(),
                             reply: tx };
         self.counters.submitted.fetch_add(1, Ordering::Relaxed);
         // Enqueue is recorded under the queue lock: the trace can never
@@ -185,10 +194,19 @@ impl Engine {
         err
     }
 
-    /// Blocking convenience: submit + wait.
+    /// Blocking convenience: submit a latent + wait for the image.
     pub fn generate(&self, model: &str, z: Vec<f32>, cond: Vec<f32>)
                     -> Result<Response> {
-        let rx = self.submit(model, z, cond)?;
+        let rx = self.submit(model, Payload::latent(z, cond))?;
+        rx.recv().map_err(|_| anyhow!("worker dropped the request \
+                                       (batch execution failed)"))
+    }
+
+    /// Blocking convenience: submit an image + wait for the mask. `seed`
+    /// is the image's synthesis-provenance tag (see [`Payload::Image`]).
+    pub fn segment(&self, model: &str, image: crate::tensor::Tensor,
+                   seed: u64) -> Result<Response> {
+        let rx = self.submit(model, Payload::image(image, seed))?;
         rx.recv().map_err(|_| anyhow!("worker dropped the request \
                                        (batch execution failed)"))
     }
@@ -227,8 +245,15 @@ impl Drop for Engine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::tiny_segnet;
     use crate::gan::Generator;
     use crate::rng::Rng;
+    use crate::seg::SegNet;
+    use crate::tensor::Tensor;
+
+    fn lat(z: usize) -> Payload {
+        Payload::latent(vec![0.0; z], vec![])
+    }
 
     fn native_engine(workers: usize, queue_depth: usize) -> Engine {
         let cfg = EngineConfig {
@@ -252,22 +277,49 @@ mod tests {
         let mut rng = Rng::new(6);
         let z: Vec<f32> = (0..8).map(|_| rng.next_normal()).collect();
         let r = e.generate("tiny", z, vec![]).unwrap();
-        assert_eq!(r.image.shape(), &[1, 32, 32, 3]);
-        assert!(r.image.data().iter().all(|v| v.abs() <= 1.0));
+        assert_eq!(r.output.shape(), &[1, 32, 32, 3]);
+        assert!(r.output.data().iter().all(|v| v.abs() <= 1.0));
         assert!(r.batch_size >= 1);
     }
 
     #[test]
     fn unknown_model_rejected() {
         let e = native_engine(1, 16);
-        assert!(e.submit("nope", vec![0.0; 8], vec![]).is_err());
+        assert!(e.submit("nope", lat(8)).is_err());
     }
 
     #[test]
     fn malformed_latent_rejected() {
         let e = native_engine(1, 16);
-        assert!(e.submit("tiny", vec![0.0; 7], vec![]).is_err());
-        assert!(e.submit("tiny", vec![0.0; 8], vec![1.0]).is_err());
+        assert!(e.submit("tiny", lat(7)).is_err());
+        assert!(e
+            .submit("tiny", Payload::latent(vec![0.0; 8], vec![1.0]))
+            .is_err());
+    }
+
+    #[test]
+    fn segment_round_trip_and_task_mismatch() {
+        let cfg = EngineConfig {
+            workers: 1,
+            queue_depth: 16,
+            max_batch: 4,
+            batch_timeout_us: 500,
+            ..EngineConfig::default()
+        };
+        let mut e = Engine::new(cfg);
+        let net = Arc::new(SegNet::new(&tiny_segnet(), 3));
+        let n_classes = net.n_classes() as f32;
+        let in_shape = net.in_shape();
+        e.register_native(super::super::router::Model::native_seg(
+            "seg", net)).unwrap();
+        let img = Tensor::randn(&in_shape, &mut Rng::new(4));
+        let r = e.segment("seg", img, 4).unwrap();
+        assert_eq!(r.output.shape(), &[1, 9, 9, 1]);
+        assert!(r.output.data().iter()
+            .all(|&v| v >= 0.0 && v < n_classes && v.fract() == 0.0));
+        // a latent payload must be rejected by the seg model
+        assert!(e.submit("seg", lat(8)).is_err());
+        e.shutdown();
     }
 
     #[test]
@@ -282,7 +334,7 @@ mod tests {
                     let z: Vec<f32> =
                         (0..8).map(|_| rng.next_normal()).collect();
                     let r = e.generate("tiny", z, vec![]).unwrap();
-                    assert_eq!(r.image.shape(), &[1, 32, 32, 3]);
+                    assert_eq!(r.output.shape(), &[1, 32, 32, 3]);
                 }
             }));
         }
@@ -315,7 +367,7 @@ mod tests {
         let mut rejected = 0;
         let mut receivers = Vec::new();
         for _ in 0..200 {
-            match e.submit("m", vec![0.0; 8], vec![]) {
+            match e.submit("m", lat(8)) {
                 Ok(rx) => receivers.push(rx),
                 Err(_) => rejected += 1,
             }
@@ -352,7 +404,7 @@ mod tests {
             let z: Vec<f32> = (0..8).map(|_| rng.next_normal()).collect();
             e.generate("tiny", z, vec![]).unwrap();
         }
-        assert!(e.submit("missing", vec![0.0; 8], vec![]).is_err());
+        assert!(e.submit("missing", lat(8)).is_err());
         e.shutdown();
 
         let evs = sink.snapshot();

@@ -1,21 +1,27 @@
 //! Layer-3 coordinator: the HUGE² edge serving engine.
 //!
-//! Shape (vLLM-router-like, scaled to edge inference):
+//! Shape (vLLM-router-like, scaled to edge inference). The pipeline is
+//! **multi-task**: a request carries a [`Payload`] (latent → image, or
+//! image → segmentation mask), every model declares its [`Task`], and
+//! workers dispatch on the model's backend.
 //!
 //! ```text
-//!  clients ──submit──> [BoundedQueue]  (backpressure: reject when full)
+//!  clients ──submit(Payload)──> [BoundedQueue]  (backpressure: reject)
 //!                          │
 //!                    [dynamic batcher]  (max_batch OR deadline)
 //!                          │
-//!                    [worker threads] ──> PJRT artifact / native engine
-//!                          │
+//!                    [worker threads] ──> PJRT artifact / native
+//!                          │              generator / native seg net
 //!                      responses (+ latency, batch telemetry)
 //! ```
 //!
 //! * [`queue`] — bounded MPMC admission queue.
-//! * [`batcher`] — deadline/size batching policy.
-//! * [`router`] — model registry (PJRT artifacts or native generators).
-//! * [`worker`] — batch fusion, bucket padding, execution, reply scatter.
+//! * [`batcher`] — deadline/size batching policy (payload-agnostic:
+//!   queues are per-model, so a batch never mixes tasks).
+//! * [`router`] — model registry (PJRT artifacts, native generators,
+//!   native segmentation nets) + payload/task validation.
+//! * [`worker`] — batch fusion, bucket padding, per-task execution,
+//!   reply scatter.
 //! * [`engine`] — the public facade.
 
 pub mod batcher;
@@ -26,4 +32,4 @@ pub mod worker;
 
 pub use engine::{Backpressure, Engine};
 pub use queue::{BoundedQueue, PushError};
-pub use router::{Backend, Model, Request, Response};
+pub use router::{Backend, Model, Payload, Request, Response, Task};

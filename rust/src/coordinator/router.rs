@@ -1,10 +1,14 @@
-//! Model registry + request routing.
+//! Model registry + multi-task request routing.
 //!
-//! A [`Model`] describes one servable generator: its latent geometry, its
-//! weights (owned by the engine — the AOT artifacts take weights as
-//! runtime inputs so one compiled module serves any checkpoint), and the
-//! batch buckets that were compiled ahead of time. The router maps a
-//! request's model name to the per-model queue.
+//! A [`Model`] describes one servable network — a GAN generator
+//! ([`Task::Generate`]: latent in, image out) or a segmentation net
+//! ([`Task::Segment`]: image in, class-argmax mask out) — its input
+//! geometry, its weights (owned by the engine — the AOT artifacts take
+//! weights as runtime inputs so one compiled module serves any
+//! checkpoint), and the batch buckets that were compiled ahead of time.
+//! The router maps a request's model name to the per-model queue; the
+//! request's [`Payload`] must match the model's task
+//! ([`Model::validate`]).
 
 use anyhow::{bail, Result};
 use std::sync::mpsc;
@@ -12,25 +16,125 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::gan::Generator;
+use crate::replay::event::ArrivalPayload;
 use crate::rng::Rng;
 use crate::runtime::RuntimeHandle;
+use crate::seg::SegNet;
 use crate::tensor::Tensor;
 
-/// One inference request: a latent (plus optional conditioning one-hot).
+/// What a model computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    /// Latent (+ optional conditioning one-hot) → generated image.
+    Generate,
+    /// Image tensor → per-pixel class-argmax mask.
+    Segment,
+}
+
+impl Task {
+    /// Wire name (trace headers, `--task` flag).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Task::Generate => "generate",
+            Task::Segment => "segment",
+        }
+    }
+}
+
+impl std::str::FromStr for Task {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "generate" => Ok(Task::Generate),
+            "segment" => Ok(Task::Segment),
+            other => Err(anyhow::anyhow!(
+                "task must be 'generate' or 'segment', got {other:?}")),
+        }
+    }
+}
+
+/// What a request carries — the task-specific input.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// Latent vector plus cGAN class one-hot (empty if unconditional).
+    Latent { z: Vec<f32>, cond: Vec<f32> },
+    /// `(1, H, W, C)` input image. `seed` is the provenance tag of the
+    /// canonical synthesis (`Tensor::randn(shape, Rng::new(seed))`): the
+    /// recorder stores `(shape, seed, checksum)` instead of raw pixels
+    /// (trace format v2, DESIGN.md §8), and replay regenerates the image
+    /// from it, verifying the checksum.
+    Image { tensor: Tensor, seed: u64 },
+}
+
+impl Payload {
+    pub fn latent(z: Vec<f32>, cond: Vec<f32>) -> Self {
+        Payload::Latent { z, cond }
+    }
+
+    pub fn image(tensor: Tensor, seed: u64) -> Self {
+        Payload::Image { tensor, seed }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Payload::Latent { .. } => "latent",
+            Payload::Image { .. } => "image",
+        }
+    }
+
+    /// The trace-event form of this payload, with the recordability
+    /// check folded in (the image tensor is hashed exactly once): an
+    /// image payload must BE the canonical synthesis of its seed,
+    /// because the trace stores only (shape, seed, checksum) and replay
+    /// rebuilds the tensor from them (DESIGN.md §8). Failing here — at
+    /// the fault site — beats recording a trace whose every replay
+    /// aborts with a reconstruction mismatch. Costs one regeneration per
+    /// image request, only while recording.
+    pub fn to_recordable_arrival(&self) -> Result<ArrivalPayload> {
+        let arrival = self.to_arrival();
+        if let ArrivalPayload::Image { shape, seed, checksum } = &arrival {
+            let canon = Tensor::randn(shape, &mut Rng::new(*seed));
+            if canon.checksum() != *checksum {
+                bail!("image payload is not the canonical synthesis of \
+                       seed {seed} (Tensor::randn over its shape) — it \
+                       cannot be recorded for replay; see DESIGN.md §8");
+            }
+        }
+        Ok(arrival)
+    }
+
+    /// The trace-event form of this payload: latents are captured
+    /// bit-exactly; images are captured as (shape, seed, checksum).
+    pub fn to_arrival(&self) -> ArrivalPayload {
+        match self {
+            Payload::Latent { z, cond } => ArrivalPayload::Latent {
+                z: z.clone(),
+                cond: cond.clone(),
+            },
+            Payload::Image { tensor, seed } => ArrivalPayload::Image {
+                shape: tensor.shape().to_vec(),
+                seed: *seed,
+                checksum: tensor.checksum(),
+            },
+        }
+    }
+}
+
+/// One inference request: the task payload plus reply plumbing.
 pub struct Request {
     pub id: u64,
-    pub z: Vec<f32>,
-    /// cGAN class one-hot (len == cond_dim) or empty.
-    pub cond: Vec<f32>,
+    pub payload: Payload,
     pub enqueued: Instant,
     pub reply: mpsc::Sender<Response>,
 }
 
-/// The generated image plus serving telemetry.
+/// The task output plus serving telemetry.
 pub struct Response {
     pub id: u64,
-    /// `(1, H, W, C)` image in [-1, 1].
-    pub image: Tensor,
+    /// [`Task::Generate`]: `(1, H, W, C)` image in [-1, 1].
+    /// [`Task::Segment`]: `(1, H, W, 1)` class-index mask.
+    pub output: Tensor,
     /// Queue wait + execution, from submit to reply.
     pub latency: std::time::Duration,
     /// Requests fused into the executing batch.
@@ -45,21 +149,27 @@ pub enum Backend {
     /// production path). Weights are bound in the service thread under
     /// the model's name.
     Pjrt(Arc<RuntimeHandle>),
-    /// Pure-Rust HUGE² engine (fallback / CPU-bench path).
+    /// Pure-Rust HUGE² GAN generator (fallback / CPU-bench path).
     Native(Arc<Generator>),
+    /// Pure-Rust HUGE² segmentation net (dilated-conv path).
+    NativeSeg(Arc<SegNet>),
 }
 
-/// A servable generator.
+/// A servable network.
 pub struct Model {
     pub name: String,
+    pub task: Task,
     /// Artifact name prefix; bucket `b` resolves to `{prefix}_b{b}`.
     pub artifact_prefix: String,
     pub z_dim: usize,
     /// Conditioning one-hot width (0 = unconditional).
     pub cond_dim: usize,
+    /// Single-image input shape `(1, H, W, C)` for [`Task::Segment`];
+    /// empty for [`Task::Generate`] (input geometry is z_dim/cond_dim).
+    pub in_shape: Vec<usize>,
     pub buckets: Vec<usize>,
     pub backend: Backend,
-    /// Single-image output shape `(1, H, W, C)`.
+    /// Single-request output shape `(1, H, W, C)`.
     pub out_shape: Vec<usize>,
 }
 
@@ -101,33 +211,61 @@ impl Model {
         let out_shape = vec![1, out_dims[1], out_dims[2], out_dims[3]];
         Ok(Model {
             name: name.to_string(),
+            task: Task::Generate,
             artifact_prefix: prefix.to_string(),
             z_dim,
             cond_dim,
+            in_shape: Vec::new(),
             buckets: buckets.to_vec(),
             backend: Backend::Pjrt(runtime),
             out_shape,
         })
     }
 
-    /// Build a natively-served model (pure-Rust HUGE² engine).
+    /// Build a natively-served generator (pure-Rust HUGE² engine).
     pub fn native(name: &str, gen: Arc<Generator>, cond_dim: usize) -> Self {
         let out = gen.out_shape(1);
         let z_total = gen.proj.shape()[0];
         Model {
             name: name.to_string(),
+            task: Task::Generate,
             artifact_prefix: String::new(),
             z_dim: z_total - cond_dim,
             cond_dim,
+            in_shape: Vec::new(),
             buckets: vec![usize::MAX], // native path takes any batch size
             backend: Backend::Native(gen),
             out_shape: out,
         }
     }
 
+    /// Build a natively-served segmentation model: image requests in,
+    /// class-argmax masks out. Like the generator path, the net's dilated
+    /// kernels were pre-decomposed (tap-packed) when the `SegNet` was
+    /// built — registration is load time, not inference time.
+    pub fn native_seg(name: &str, net: Arc<SegNet>) -> Self {
+        let in_shape = net.in_shape();
+        // mask geometry follows the net's *output* spatial dims, which a
+        // strided/valid-padding config may shrink below the input's
+        let logits = net.logits_shape(1);
+        let mask = vec![1, logits[1], logits[2], 1];
+        Model {
+            name: name.to_string(),
+            task: Task::Segment,
+            artifact_prefix: String::new(),
+            z_dim: 0,
+            cond_dim: 0,
+            in_shape,
+            buckets: vec![usize::MAX],
+            backend: Backend::NativeSeg(net),
+            out_shape: mask,
+        }
+    }
+
     /// Smallest compiled bucket that fits `n` (native: exactly `n`).
     pub fn bucket_for(&self, n: usize) -> usize {
-        if matches!(self.backend, Backend::Native(_)) {
+        if matches!(self.backend,
+                    Backend::Native(_) | Backend::NativeSeg(_)) {
             return n;
         }
         *self
@@ -137,24 +275,39 @@ impl Model {
             .unwrap_or_else(|| self.buckets.last().unwrap())
     }
 
-    /// Validate a request against the model's latent geometry.
-    pub fn validate(&self, z: &[f32], cond: &[f32]) -> Result<()> {
-        if z.len() != self.z_dim {
-            bail!("{}: z has {} dims, model wants {}", self.name, z.len(),
-                  self.z_dim);
+    /// Validate a request payload against the model's task and input
+    /// geometry.
+    pub fn validate(&self, payload: &Payload) -> Result<()> {
+        match (self.task, payload) {
+            (Task::Generate, Payload::Latent { z, cond }) => {
+                if z.len() != self.z_dim {
+                    bail!("{}: z has {} dims, model wants {}", self.name,
+                          z.len(), self.z_dim);
+                }
+                if cond.len() != self.cond_dim {
+                    bail!("{}: cond has {} dims, model wants {}", self.name,
+                          cond.len(), self.cond_dim);
+                }
+                Ok(())
+            }
+            (Task::Segment, Payload::Image { tensor, .. }) => {
+                if tensor.shape() != self.in_shape.as_slice() {
+                    bail!("{}: image has shape {:?}, model wants {:?}",
+                          self.name, tensor.shape(), self.in_shape);
+                }
+                Ok(())
+            }
+            (task, p) => bail!(
+                "{}: task {:?} cannot serve a {} payload", self.name, task,
+                p.kind()),
         }
-        if cond.len() != self.cond_dim {
-            bail!("{}: cond has {} dims, model wants {}", self.name,
-                  cond.len(), self.cond_dim);
-        }
-        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::cgan_layers;
+    use crate::config::{cgan_layers, tiny_segnet};
 
     fn tiny_native() -> Model {
         let mut rng = Rng::new(1);
@@ -162,9 +315,14 @@ mod tests {
         Model::native("tiny", Arc::new(gen), 2)
     }
 
+    fn lat(z: usize, cond: usize) -> Payload {
+        Payload::latent(vec![0.0; z], vec![0.0; cond])
+    }
+
     #[test]
     fn native_model_geometry() {
         let m = tiny_native();
+        assert_eq!(m.task, Task::Generate);
         assert_eq!(m.z_dim, 8);
         assert_eq!(m.cond_dim, 2);
         assert_eq!(m.out_shape, vec![1, 32, 32, 3]);
@@ -174,9 +332,34 @@ mod tests {
     #[test]
     fn validate_rejects_bad_latents() {
         let m = tiny_native();
-        assert!(m.validate(&[0.0; 8], &[0.0; 2]).is_ok());
-        assert!(m.validate(&[0.0; 7], &[0.0; 2]).is_err());
-        assert!(m.validate(&[0.0; 8], &[]).is_err());
+        assert!(m.validate(&lat(8, 2)).is_ok());
+        assert!(m.validate(&lat(7, 2)).is_err());
+        assert!(m.validate(&lat(8, 0)).is_err());
+    }
+
+    #[test]
+    fn seg_model_geometry_and_validation() {
+        let net = Arc::new(SegNet::new(&tiny_segnet(), 3));
+        let m = Model::native_seg("seg", net.clone());
+        assert_eq!(m.task, Task::Segment);
+        assert_eq!(m.in_shape, vec![1, 9, 9, 2]);
+        assert_eq!(m.out_shape, vec![1, 9, 9, 1]);
+        assert_eq!(m.bucket_for(3), 3);
+        let good = Payload::image(Tensor::zeros(&net.in_shape()), 1);
+        assert!(m.validate(&good).is_ok());
+        let bad = Payload::image(Tensor::zeros(&[1, 8, 9, 2]), 1);
+        assert!(m.validate(&bad).is_err());
+        // cross-task payloads are rejected on both sides
+        assert!(m.validate(&lat(8, 0)).is_err());
+        assert!(tiny_native().validate(&good).is_err());
+    }
+
+    #[test]
+    fn task_wire_names_round_trip() {
+        for t in [Task::Generate, Task::Segment] {
+            assert_eq!(t.as_str().parse::<Task>().unwrap(), t);
+        }
+        assert!("nope".parse::<Task>().is_err());
     }
 
     #[test]

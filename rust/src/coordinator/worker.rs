@@ -1,5 +1,6 @@
 //! Batch execution: fuse a batch of requests into one forward pass (PJRT
-//! artifact call or native engine call), then scatter replies.
+//! artifact call, native generator, or native segmentation net — the
+//! dispatch point of the multi-task pipeline), then scatter replies.
 
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
@@ -10,12 +11,13 @@ use crate::replay::event::EventBody;
 use crate::replay::recorder::TraceSink;
 use crate::tensor::Tensor;
 
-use super::router::{Backend, Model, Request, Response};
+use super::router::{Backend, Model, Payload, Request, Response};
 
 /// Execute one batch on its model and reply to every requester.
 ///
-/// The batch is padded with zero latents up to the compiled bucket size;
-/// padded outputs are discarded. Reply sends ignore disconnected
+/// Generate batches are padded with zero latents up to the compiled
+/// bucket size (padded outputs are discarded); segment batches run at
+/// their exact size. Reply sends ignore disconnected
 /// receivers (a client that timed out and dropped its channel).
 /// `before_reply` runs after execution but before any reply is sent, so
 /// engine counters are consistent the moment a client observes a result.
@@ -30,11 +32,10 @@ pub fn execute_batch(model: &Model, batch: Vec<Request>,
     let out = run_forward(model, &batch, bucket)?;
     before_reply(n);
     let (_, h, w, c) = out.dims4();
-    let img_elems = h * w * c;
+    let elems = h * w * c;
     for (i, req) in batch.into_iter().enumerate() {
-        let data =
-            out.data()[i * img_elems..(i + 1) * img_elems].to_vec();
-        let image = Tensor::from_vec(&[1, h, w, c], data);
+        let data = out.data()[i * elems..(i + 1) * elems].to_vec();
+        let output = Tensor::from_vec(&[1, h, w, c], data);
         let latency = req.enqueued.elapsed();
         if let Some(s) = sink {
             s.record(EventBody::Response {
@@ -42,18 +43,42 @@ pub fn execute_batch(model: &Model, batch: Vec<Request>,
                 batch_size: n,
                 bucket,
                 latency_us: latency.as_micros() as u64,
-                checksum: image.checksum(),
+                checksum: output.checksum(),
             });
         }
         let _ = req.reply.send(Response {
             id: req.id,
-            image,
+            output,
             latency,
             batch_size: n,
             bucket,
         });
     }
     Ok(bucket)
+}
+
+/// Pull the latent (+ conditioning) matrices out of a generate batch,
+/// zero-padded to `bucket` rows. Payload kinds were validated at submit;
+/// a mismatch here is an engine bug.
+fn gather_latents(model: &Model, batch: &[Request], bucket: usize)
+                  -> Result<(Tensor, Option<Tensor>)> {
+    let mut z = vec![0.0f32; bucket * model.z_dim];
+    let mut y = vec![0.0f32; bucket * model.cond_dim];
+    for (i, r) in batch.iter().enumerate() {
+        let Payload::Latent { z: rz, cond } = &r.payload else {
+            return Err(anyhow!("{}: generate batch got a {} payload",
+                               model.name, r.payload.kind()));
+        };
+        z[i * model.z_dim..(i + 1) * model.z_dim].copy_from_slice(rz);
+        if model.cond_dim > 0 {
+            y[i * model.cond_dim..(i + 1) * model.cond_dim]
+                .copy_from_slice(cond);
+        }
+    }
+    let zt = Tensor::from_vec(&[bucket, model.z_dim], z);
+    let cond = (model.cond_dim > 0)
+        .then(|| Tensor::from_vec(&[bucket, model.cond_dim], y));
+    Ok((zt, cond))
 }
 
 /// One fused forward pass at `bucket` batch size.
@@ -78,25 +103,10 @@ fn run_forward(model: &Model, batch: &[Request], bucket: usize)
         return Ok(Tensor::from_vec(&[n, h, w, c], data));
     }
 
-    // Gather latents, zero-padded to the bucket.
-    let mut z = vec![0.0f32; bucket * model.z_dim];
-    for (i, r) in batch.iter().enumerate() {
-        z[i * model.z_dim..(i + 1) * model.z_dim].copy_from_slice(&r.z);
-    }
-    let zt = Tensor::from_vec(&[bucket, model.z_dim], z);
-    let cond = if model.cond_dim > 0 {
-        let mut y = vec![0.0f32; bucket * model.cond_dim];
-        for (i, r) in batch.iter().enumerate() {
-            y[i * model.cond_dim..(i + 1) * model.cond_dim]
-                .copy_from_slice(&r.cond);
-        }
-        Some(Tensor::from_vec(&[bucket, model.cond_dim], y))
-    } else {
-        None
-    };
-
     match &model.backend {
         Backend::Pjrt(rt) => {
+            // Gather latents, zero-padded to the bucket.
+            let (zt, cond) = gather_latents(model, batch, bucket)?;
             let name = format!("{}_b{bucket}", model.artifact_prefix);
             let mut inputs: Vec<Tensor> = vec![zt];
             if let Some(c) = cond {
@@ -109,6 +119,7 @@ fn run_forward(model: &Model, batch: &[Request], bucket: usize)
                 .ok_or_else(|| anyhow!("{name}: no output"))
         }
         Backend::Native(gen) => {
+            let (zt, cond) = gather_latents(model, batch, bucket)?;
             // native path concatenates conditioning onto z
             let zin = match &cond {
                 None => zt,
@@ -128,6 +139,26 @@ fn run_forward(model: &Model, batch: &[Request], bucket: usize)
                 }
             };
             Ok(gen.forward(&zin, NativeEngine::Huge2))
+        }
+        Backend::NativeSeg(net) => {
+            // Stack the (1, H, W, C) request images into one (n, H, W, C)
+            // batch. Native buckets are exact (bucket == n), so there is
+            // no padding; per-image compute is independent, so outputs
+            // stay batch-composition-invariant (DESIGN.md §8).
+            let (h, w, c) =
+                (model.in_shape[1], model.in_shape[2], model.in_shape[3]);
+            let mut data = Vec::with_capacity(n * h * w * c);
+            for r in batch {
+                let Payload::Image { tensor, .. } = &r.payload else {
+                    return Err(anyhow!(
+                        "{}: segment batch got a {} payload", model.name,
+                        r.payload.kind()));
+                };
+                data.extend_from_slice(tensor.data());
+            }
+            let x = Tensor::from_vec(&[n, h, w, c], data);
+            let logits = net.forward(&x);
+            Ok(crate::seg::argmax_mask(&logits))
         }
     }
 }

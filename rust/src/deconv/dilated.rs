@@ -6,10 +6,34 @@
 //! element stride is `stride·C`, which [`crate::gemm::sgemm_strided`]
 //! absorbs during packing — still zero copies.
 
-use crate::gemm::sgemm_strided;
+use crate::gemm::{sgemm_prepacked, sgemm_strided, PackedB};
 use crate::tensor::Tensor;
 
 use super::DilatedParams;
+
+/// A dilated kernel's `R·S` taps, each pre-packed into GEMM micro-kernel
+/// layout — the dilated-path analogue of [`super::huge2::decompose`]:
+/// packing happens once at model-load time, so every inference's tap
+/// GEMMs skip all B packing (`seg::SegLayer` holds one of these per
+/// layer, exactly as `gan::GenLayer` holds its `Pattern`s).
+#[derive(Debug, Clone)]
+pub struct DilatedTaps {
+    pub r: usize,
+    pub s: usize,
+    pub c: usize,
+    pub n: usize,
+    /// `(C, N)` panels in `(t_r·S + t_c)` order.
+    pub(crate) packed: Vec<PackedB>,
+}
+
+/// Pack every tap of `k` (HWIO `(R,S,C,N)`) for [`conv2d_dilated_with`].
+pub fn pack_taps(k: &Tensor) -> DilatedTaps {
+    let (r, s, c, n) = k.dims4();
+    let packed = (0..r * s)
+        .map(|t| PackedB::pack(c, n, &k.data()[t * c * n..(t + 1) * c * n]))
+        .collect();
+    DilatedTaps { r, s, c, n, packed }
+}
 
 /// HUGE² dilated convolution. `x`: NHWC; `k`: HWIO `(R,S,C,N)`.
 /// Numerically identical to [`super::baseline::conv2d_dilated`].
@@ -44,6 +68,55 @@ pub fn conv2d_dilated(x: &Tensor, k: &Tensor, p: &DilatedParams) -> Tensor {
                     sgemm_strided(wo, n, c, a, lda, wslice, dst, true);
                 }
             }
+        }
+    }
+    out
+}
+
+/// Accumulate every tap's contribution into one output row (`dst` is
+/// row `oy`, length `wo·n`; `img` is one padded image of width `wp`).
+/// Taps run in `(t_r, t_c)` ascending order — this one function defines
+/// the per-row accumulation order for **both** the single-threaded and
+/// the multi-threaded untangled engines, so their bit-identity
+/// (DESIGN.md §8) holds by construction, not by duplication discipline.
+pub(crate) fn accumulate_row(dst: &mut [f32], img: &[f32],
+                             taps: &DilatedTaps, p: &DilatedParams,
+                             oy: usize, wp: usize, wo: usize) {
+    let (s, c) = (taps.s, taps.c);
+    for t_r in 0..taps.r {
+        for t_c in 0..s {
+            let pb = &taps.packed[t_r * s + t_c];
+            let ix0 = t_c * p.dilation;
+            let iy = oy * p.stride + t_r * p.dilation;
+            let a0 = (iy * wp + ix0) * c;
+            let lda = p.stride * c;
+            let a_len = (wo - 1) * lda + c;
+            sgemm_prepacked(wo, &img[a0..a0 + a_len], lda, pb, dst, true);
+        }
+    }
+}
+
+/// [`conv2d_dilated`] with pre-packed tap panels (model-load-time
+/// decomposition). Bit-identical to the unpacked engine: the per-row
+/// tap accumulation order and the blocked GEMM are the same, so serving
+/// engines can switch to this without perturbing replay checksums.
+pub fn conv2d_dilated_with(x: &Tensor, taps: &DilatedTaps,
+                           p: &DilatedParams) -> Tensor {
+    let (b, h, w, c) = x.dims4();
+    let (r, s, n) = (taps.r, taps.s, taps.n);
+    assert_eq!(c, taps.c);
+    let ho = p.out_size(h, r);
+    let wo = p.out_size(w, s);
+    let xp = x.pad_spatial(p.pad, p.pad, p.pad, p.pad);
+    let (_, hp, wp, _) = xp.dims4();
+    let mut out = Tensor::zeros(&[b, ho, wo, n]);
+
+    for bi in 0..b {
+        let img = &xp.data()[bi * hp * wp * c..(bi + 1) * hp * wp * c];
+        let od = &mut out.data_mut()[bi * ho * wo * n..(bi + 1) * ho * wo * n];
+        for oy in 0..ho {
+            accumulate_row(&mut od[oy * wo * n..(oy + 1) * wo * n], img,
+                           taps, p, oy, wp, wo);
         }
     }
     out
@@ -123,6 +196,24 @@ mod tests {
         let got = conv2d_dilated(&x, &k, &p);
         let want = baseline::conv2d_dilated(&x, &k, &p);
         assert!(got.allclose(&want, 1e-4));
+    }
+
+    #[test]
+    fn prepacked_taps_are_bit_identical() {
+        let mut rng = Rng::new(9);
+        for (h, c, n, r, p) in [
+            (13, 4, 3, 3, DilatedParams::new(2, 1, 2)),
+            (13, 3, 2, 3, DilatedParams::new(2, 2, 2)),
+            (9, 2, 5, 1, DilatedParams::new(1, 1, 0)),
+        ] {
+            let x = Tensor::randn(&[2, h, h, c], &mut rng);
+            let k = Tensor::randn(&[r, r, c, n], &mut rng);
+            let want = conv2d_dilated(&x, &k, &p);
+            let taps = pack_taps(&k);
+            let got = conv2d_dilated_with(&x, &taps, &p);
+            assert_eq!(got.checksum(), want.checksum(),
+                       "prepacked path must not perturb replay checksums");
+        }
     }
 
     #[test]

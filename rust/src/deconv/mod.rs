@@ -20,6 +20,20 @@ pub mod grad;
 pub mod huge2;
 pub mod parallel;
 
+/// Which deconvolution engine a forward pass uses. Shared by every
+/// consumer of the two kernel families — the GAN generator stack
+/// ([`crate::gan`], transposed convs) and the segmentation stack
+/// ([`crate::seg`], dilated convs) — so multi-task models can make the
+/// baseline-vs-HUGE² choice per layer with one vocabulary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// DarkNet-style zero-insertion (transposed) / zero-dilated-kernel
+    /// (dilated) + im2col + GEMM.
+    Baseline,
+    /// Kernel decomposition + untangling (the paper).
+    Huge2,
+}
+
 /// Geometry of one transposed-convolution layer (mirrors the python
 /// `DeconvLayer` / `ref.py` conventions exactly).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -10,8 +10,9 @@ use crate::gemm::{sgemm_parallel, sgemm_prepacked};
 use crate::im2col::im2col;
 use crate::tensor::Tensor;
 
+use super::dilated::{self, DilatedTaps};
 use super::huge2::Pattern;
-use super::{polyphase_len, DeconvParams};
+use super::{polyphase_len, DeconvParams, DilatedParams};
 
 /// Multi-threaded naive baseline: inflate + im2col single-threaded
 /// (bandwidth-bound), GEMM sharded over `threads`.
@@ -144,10 +145,54 @@ pub fn huge2_conv2d_transpose_mt(x: &Tensor, patterns: &[Pattern],
     out
 }
 
+/// Multi-threaded HUGE² dilated convolution: output *rows* are sharded
+/// over `threads` (dilated outputs are dense, so rows — not polyphases —
+/// are the natural disjoint partition). Every row runs the same
+/// [`dilated::accumulate_row`] as the single-threaded engine, so results
+/// are **bit-identical for every thread count** by construction — the
+/// replay subsystem's fast mode depends on exactly this (DESIGN.md
+/// §3/§8).
+pub fn conv2d_dilated_mt(x: &Tensor, taps: &DilatedTaps, p: &DilatedParams,
+                         threads: usize) -> Tensor {
+    let (b, h, w, c) = x.dims4();
+    let (r, s, n) = (taps.r, taps.s, taps.n);
+    assert_eq!(c, taps.c);
+    let ho = p.out_size(h, r);
+    let wo = p.out_size(w, s);
+    let xp = x.pad_spatial(p.pad, p.pad, p.pad, p.pad);
+    let (_, hp, wp, _) = xp.dims4();
+    let mut out = Tensor::zeros(&[b, ho, wo, n]);
+    let threads = threads.max(1).min(ho.max(1));
+    let rows_per = ho.div_ceil(threads);
+
+    for bi in 0..b {
+        let img = &xp.data()[bi * hp * wp * c..(bi + 1) * hp * wp * c];
+        let od = &mut out.data_mut()[bi * ho * wo * n..(bi + 1) * ho * wo * n];
+        std::thread::scope(|sc| {
+            let mut rest = od;
+            let mut oy0 = 0;
+            while oy0 < ho {
+                let rows = rows_per.min(ho - oy0);
+                let (band, tail) = rest.split_at_mut(rows * wo * n);
+                rest = tail;
+                let y0 = oy0;
+                sc.spawn(move || {
+                    for (ri, dst) in band.chunks_mut(wo * n).enumerate() {
+                        dilated::accumulate_row(dst, img, taps, p, y0 + ri,
+                                                wp, wo);
+                    }
+                });
+                oy0 += rows;
+            }
+        });
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::deconv::{baseline, huge2};
+    use crate::deconv::{baseline, dilated, huge2};
     use crate::rng::Rng;
 
     #[test]
@@ -178,5 +223,24 @@ mod tests {
         let patterns = huge2::decompose(&k, &p);
         let got = huge2_conv2d_transpose_mt(&x, &patterns, 5, 5, &p, 3);
         assert!(got.allclose(&want, 1e-4));
+    }
+
+    #[test]
+    fn mt_dilated_bit_identical_for_every_thread_count() {
+        let mut rng = Rng::new(23);
+        for p in [DilatedParams::new(2, 1, 2), DilatedParams::new(3, 2, 3),
+                  DilatedParams::new(1, 1, 1)] {
+            let x = Tensor::randn(&[2, 13, 13, 5], &mut rng);
+            let k = Tensor::randn(&[3, 3, 5, 4], &mut rng);
+            let taps = dilated::pack_taps(&k);
+            let want = dilated::conv2d_dilated_with(&x, &taps, &p);
+            assert!(want.allclose(&baseline::conv2d_dilated(&x, &k, &p),
+                                  1e-4));
+            for threads in [1, 2, 3, 7, 64] {
+                let got = conv2d_dilated_mt(&x, &taps, &p, threads);
+                assert_eq!(got.checksum(), want.checksum(),
+                           "threads={threads} {p:?} must be bit-identical");
+            }
+        }
     }
 }

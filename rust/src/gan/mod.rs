@@ -9,13 +9,25 @@ use crate::deconv::{baseline, huge2};
 use crate::rng::Rng;
 use crate::tensor::Tensor;
 
-/// Which deconvolution engine a forward pass uses.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Engine {
-    /// DarkNet-style zero-insertion + im2col + GEMM.
-    Baseline,
-    /// Kernel decomposition + untangling (the paper).
-    Huge2,
+// The engine selector is shared with the segmentation stack; it lives in
+// `deconv` (the layer both stacks sit on) and is re-exported here so
+// `gan::Engine` call sites keep working.
+pub use crate::deconv::Engine;
+
+/// The shared forward surface of every natively-servable model (the GAN
+/// [`Generator`], the segmentation [`crate::seg::SegNet`]): batch-major
+/// NHWC tensors in and out, engine-selectable per call. Cross-engine
+/// property tests are written against this trait so one helper covers
+/// every model family. (The coordinator's worker still dispatches on the
+/// concrete `Backend` variants — input assembly is task-specific — so a
+/// new model family extends `Backend` and `Model` too, not just this.)
+pub trait Forward {
+    /// `x`: `(B, ...)` → output `(B, ...)`; the same input must produce
+    /// bit-identical output regardless of which other rows share the
+    /// batch (DESIGN.md §3 batch-composition invariance).
+    fn forward(&self, x: &Tensor, engine: Engine) -> Tensor;
+    /// Shape [`Forward::forward`] returns for batch size `b`.
+    fn out_shape(&self, b: usize) -> Vec<usize>;
 }
 
 /// One deconv layer with its weights and (for HUGE²) the pre-decomposed
@@ -122,6 +134,16 @@ impl Generator {
     pub fn out_shape(&self, b: usize) -> Vec<usize> {
         let last = &self.layers[self.layers.len() - 1].cfg;
         vec![b, last.h_out(), last.h_out(), last.c_out]
+    }
+}
+
+impl Forward for Generator {
+    fn forward(&self, x: &Tensor, engine: Engine) -> Tensor {
+        Generator::forward(self, x, engine)
+    }
+
+    fn out_shape(&self, b: usize) -> Vec<usize> {
+        Generator::out_shape(self, b)
     }
 }
 

@@ -37,6 +37,34 @@
 //! assert!(slow.allclose(&fast, 1e-4));
 //! ```
 //!
+//! ## Segmentation quickstart
+//!
+//! The serving pipeline is **multi-task**: alongside latent→image GAN
+//! requests, the engine serves image→mask segmentation through the same
+//! queue/batcher/worker stack (see [`seg`]). A [`seg::SegNet`] is built
+//! from dilated-conv layer configs and pre-decomposes (tap-packs) its
+//! kernels at load time:
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use huge2::config::{tiny_segnet, EngineConfig};
+//! use huge2::coordinator::{Engine, Model};
+//! use huge2::rng::Rng;
+//! use huge2::seg::SegNet;
+//! use huge2::tensor::Tensor;
+//!
+//! let net = Arc::new(SegNet::new(&tiny_segnet(), 7));
+//! let img = Tensor::randn(&net.in_shape(), &mut Rng::new(11));
+//! let mut eng = Engine::new(EngineConfig::default());
+//! eng.register_native(Model::native_seg("segnet", net))?;
+//! let resp = eng.segment("segnet", img, 11)?;   // (1, H, W, 1) mask
+//! println!("mask {:?} in {:?}", resp.output.shape(), resp.latency);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! CLI: `huge2 serve --task segment [--record t.jsonl]` serves the net,
+//! `huge2 segment` runs a one-shot baseline-vs-HUGE² timing table + mask.
+//!
 //! ## Record / replay quickstart
 //!
 //! Serving runs are **recordable and deterministically replayable**
@@ -59,6 +87,8 @@
 //!     seed: 7,
 //!     z_dim: 100,
 //!     cond_dim: 0,
+//!     task: "generate".into(),
+//!     net: String::new(),
 //! });
 //! let mut eng = Engine::new(EngineConfig::default());
 //! eng.set_trace_sink(rec.sink())?;
@@ -95,6 +125,7 @@ pub mod metrics;
 pub mod replay;
 pub mod rng;
 pub mod runtime;
+pub mod seg;
 pub mod tensor;
 pub mod trace;
 pub mod bench_util;

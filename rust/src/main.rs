@@ -7,16 +7,17 @@ use std::time::{Duration, Instant};
 
 use huge2::bench_util::{fmt_dur, measure_budget, Table};
 use huge2::cli::Args;
-use huge2::config::{layer_by_name, table1, EngineConfig};
-use huge2::coordinator::Engine;
-use huge2::deconv::{baseline, huge2 as engine2};
+use huge2::config::{layer_by_name, segnet_by_name, table1, EngineConfig};
+use huge2::coordinator::{Engine, Payload, Response};
+use huge2::deconv::{baseline, huge2 as engine2, Engine as DeconvEngine};
 use huge2::gan::Generator;
 use huge2::memsim::{trace_layer, EngineKind, GpuModel};
 use huge2::replay::{Recorder, Replayer, Timing, TraceHeader, TraceSink};
 use huge2::rng::Rng;
 use huge2::runtime::RuntimeHandle;
+use huge2::seg::SegNet;
 use huge2::tensor::Tensor;
-use huge2::trace::{self, poisson};
+use huge2::trace::{self, poisson, Arrival};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -42,10 +43,11 @@ fn run(argv: &[String]) -> Result<()> {
         "inspect" => inspect(&args),
         "bench" => bench(&args),
         "serve" => serve(&args),
+        "segment" => segment(&args),
         "replay" => replay(&args),
         "reproduce" => reproduce(&args),
         other => bail!("unknown subcommand {other:?} \
-                        (inspect|bench|serve|replay|reproduce)"),
+                        (inspect|bench|serve|segment|replay|reproduce)"),
     }
 }
 
@@ -128,15 +130,8 @@ fn path_flag<'a>(args: &'a Args, key: &str) -> Result<Option<&'a str>> {
     }
 }
 
-/// Run the serving engine on a synthetic Poisson workload (or a saved
-/// arrival fixture), optionally recording a replayable trace.
-fn serve(args: &Args) -> Result<()> {
-    let model = args.get_or("model", "dcgan");
-    let rate = args.get_f64("rate", 2.0)?;
-    let n = args.get_usize("requests", 20)?;
-    let native = args.has("native");
-    let seed = args.get_usize("seed", 7)? as u64;
-    // --config file.toml supplies defaults; explicit flags override
+/// `--config file.toml` supplies defaults; explicit flags override.
+fn load_engine_cfg(args: &Args) -> Result<EngineConfig> {
     let base = match args.get("config") {
         Some(path) => {
             let text = std::fs::read_to_string(path)?;
@@ -145,7 +140,7 @@ fn serve(args: &Args) -> Result<()> {
         }
         None => EngineConfig::default(),
     };
-    let cfg = EngineConfig {
+    Ok(EngineConfig {
         workers: args.get_usize("workers", base.workers)?,
         max_batch: args.get_usize("max-batch", base.max_batch)?,
         batch_timeout_us: args.get_usize(
@@ -154,11 +149,86 @@ fn serve(args: &Args) -> Result<()> {
             .map(str::to_string)
             .unwrap_or(base.artifact_dir.clone()),
         ..base
-    };
+    })
+}
 
+/// Workload for a serve run: a saved fixture (`--arrivals f`) or
+/// synthetic Poisson, optionally re-saved (`--save-arrivals f`).
+fn load_workload(args: &Args, rate: f64, n: usize) -> Result<Vec<Arrival>> {
+    let arrivals = match path_flag(args, "arrivals")? {
+        Some(path) => {
+            let tr = trace::load(Path::new(path))?;
+            println!("arrival fixture {path}: {} requests", tr.len());
+            tr
+        }
+        None => {
+            let tr = poisson(rate, n, 99);
+            println!("open-loop Poisson workload: rate={rate}/s, \
+                      {n} requests");
+            tr
+        }
+    };
+    if let Some(path) = path_flag(args, "save-arrivals")? {
+        trace::save(Path::new(path), &arrivals)?;
+        println!("saved arrival fixture to {path}");
+    }
+    Ok(arrivals)
+}
+
+/// Drain responses, print throughput/latency/batching, shut down, and —
+/// when recording — save the trace (only after shutdown: workers have
+/// flushed every batch/response event into the sink by then).
+fn finish_serve(eng: Engine, pending: Vec<std::sync::mpsc::Receiver<Response>>,
+                t0: Instant, record: Option<(&str, Arc<TraceSink>,
+                                             TraceHeader)>) -> Result<()> {
+    let mut lat = Vec::new();
+    for rx in pending {
+        if let Ok(resp) = rx.recv() {
+            lat.push(resp.latency);
+        }
+    }
+    let wall = t0.elapsed();
+    lat.sort_unstable();
+    if lat.is_empty() {
+        bail!("no responses");
+    }
+    println!("completed {} in {} → {:.2} req/s", lat.len(), fmt_dur(wall),
+             lat.len() as f64 / wall.as_secs_f64());
+    println!("latency p50={} p95={} max={}",
+             fmt_dur(lat[lat.len() / 2]),
+             fmt_dur(lat[(lat.len() * 95 / 100).min(lat.len() - 1)]),
+             fmt_dur(*lat.last().unwrap()));
+    println!("mean batch size {:.2}", eng.counters.mean_batch_size());
+    eng.shutdown();
+    if let Some((path, sink, header)) = record {
+        let rec = Recorder::from_parts(header, sink);
+        let n_events = rec.save(Path::new(path))?;
+        println!("recorded {n_events} trace events to {path} \
+                  (replay: huge2 replay {path} --timing fast)");
+    }
+    Ok(())
+}
+
+/// Run the serving engine on a synthetic workload, optionally recording
+/// a replayable trace. `--task generate` (default) serves latent→image;
+/// `--task segment` serves image→mask through the same pipeline.
+fn serve(args: &Args) -> Result<()> {
+    match args.get_or("task", "generate").as_str() {
+        "generate" => serve_generate(args),
+        "segment" => serve_segment(args),
+        other => bail!("--task expects 'generate' or 'segment', \
+                        got {other:?}"),
+    }
+}
+
+fn serve_generate(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "dcgan");
+    let rate = args.get_f64("rate", 2.0)?;
+    let n = args.get_usize("requests", 20)?;
+    let native = args.has("native");
+    let seed = args.get_usize("seed", 7)? as u64;
+    let cfg = load_engine_cfg(args)?;
     let record_path = path_flag(args, "record")?;
-    let arrivals_path = path_flag(args, "arrivals")?;
-    let save_arrivals_path = path_flag(args, "save-arrivals")?;
 
     let mut eng = Engine::new(cfg.clone());
     // --record out.jsonl: the sink must be installed before workers spawn
@@ -185,24 +255,7 @@ fn serve(args: &Args) -> Result<()> {
                   (JAX/Pallas HUGE2 kernels)");
     }
 
-    // workload: a saved fixture (--arrivals f) or synthetic Poisson
-    let arrivals = match arrivals_path {
-        Some(path) => {
-            let tr = trace::load(Path::new(path))?;
-            println!("arrival fixture {path}: {} requests", tr.len());
-            tr
-        }
-        None => {
-            let tr = poisson(rate, n, 99);
-            println!("open-loop Poisson workload: rate={rate}/s, \
-                      {n} requests");
-            tr
-        }
-    };
-    if let Some(path) = save_arrivals_path {
-        trace::save(Path::new(path), &arrivals)?;
-        println!("saved arrival fixture to {path}");
-    }
+    let arrivals = load_workload(args, rate, n)?;
     let t0 = Instant::now();
     let mut rng = Rng::new(1);
     let mut pending = Vec::new();
@@ -212,49 +265,90 @@ fn serve(args: &Args) -> Result<()> {
             std::thread::sleep(wait);
         }
         let z: Vec<f32> = (0..z_dim).map(|_| rng.next_normal()).collect();
-        match eng.submit(&model, z, vec![]) {
+        match eng.submit(&model, Payload::latent(z, vec![])) {
             Ok(rx) => pending.push(rx),
             Err(e) => println!("  rejected: {e}"),
         }
     }
-    let mut lat = Vec::new();
-    for rx in pending {
-        if let Ok(resp) = rx.recv() {
-            lat.push(resp.latency);
+    let record = sink.map(|s| {
+        (record_path.unwrap(), s, TraceHeader {
+            model: model.clone(),
+            backend: if native { "native" } else { "pjrt" }.into(),
+            seed,
+            z_dim,
+            cond_dim: 0,
+            task: "generate".into(),
+            net: String::new(),
+        })
+    });
+    finish_serve(eng, pending, t0, record)
+}
+
+/// Resolve a `--net` / trace-header seg-net name against the registry.
+fn seg_net_cfg(name: &str) -> Result<huge2::config::SegNetConfig> {
+    segnet_by_name(name).ok_or_else(|| anyhow!(
+        "unknown seg net {name:?} (segnet|tiny_segnet)"))
+}
+
+/// `huge2 serve --task segment`: serve the native segmentation net
+/// (image requests in, class-argmax masks out), same workload/recording
+/// surface as the generate path.
+fn serve_segment(args: &Args) -> Result<()> {
+    let net_name = args.get_or("net", "segnet");
+    let model = args.get_or("model", net_name.as_str());
+    let rate = args.get_f64("rate", 2.0)?;
+    let n = args.get_usize("requests", 20)?;
+    let seed = args.get_usize("seed", 7)? as u64;
+    let cfg = load_engine_cfg(args)?;
+    let record_path = path_flag(args, "record")?;
+
+    let net_cfg = seg_net_cfg(&net_name)?;
+    let mut eng = Engine::new(cfg);
+    let sink = if record_path.is_some() {
+        let s = Arc::new(TraceSink::new());
+        eng.set_trace_sink(s.clone())?;
+        Some(s)
+    } else {
+        None
+    };
+    let net = Arc::new(SegNet::new(&net_cfg, seed));
+    let in_shape = net.in_shape();
+    let n_classes = net.n_classes();
+    eng.register_native(huge2::coordinator::Model::native_seg(
+        &model, net))?;
+    println!("serving {model} natively (HUGE2 untangled dilated convs, \
+              input {in_shape:?}, {n_classes} classes)");
+
+    let arrivals = load_workload(args, rate, n)?;
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for (i, a) in arrivals.iter().enumerate() {
+        let wait = a.at.saturating_sub(t0.elapsed());
+        if !wait.is_zero() {
+            std::thread::sleep(wait);
+        }
+        // canonical synthesis: the per-request seed is all a recording
+        // needs to rebuild this image bit-exactly (trace v2)
+        let img_seed = seed ^ (i as u64 + 1)
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let img = Tensor::randn(&in_shape, &mut Rng::new(img_seed));
+        match eng.submit(&model, Payload::image(img, img_seed)) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => println!("  rejected: {e}"),
         }
     }
-    let wall = t0.elapsed();
-    lat.sort_unstable();
-    if lat.is_empty() {
-        bail!("no responses");
-    }
-    println!("completed {} in {} → {:.2} img/s", lat.len(), fmt_dur(wall),
-             lat.len() as f64 / wall.as_secs_f64());
-    println!("latency p50={} p95={} max={}",
-             fmt_dur(lat[lat.len() / 2]),
-             fmt_dur(lat[(lat.len() * 95 / 100).min(lat.len() - 1)]),
-             fmt_dur(*lat.last().unwrap()));
-    println!("mean batch size {:.2}", eng.counters.mean_batch_size());
-    eng.shutdown();
-    // save the trace only after shutdown: workers have flushed every
-    // batch/response event into the sink by then
-    if let Some(sink) = sink {
-        let path = record_path.unwrap();
-        let rec = Recorder::from_parts(
-            TraceHeader {
-                model: model.clone(),
-                backend: if native { "native" } else { "pjrt" }.into(),
-                seed,
-                z_dim,
-                cond_dim: 0,
-            },
-            sink,
-        );
-        let n_events = rec.save(Path::new(path))?;
-        println!("recorded {n_events} trace events to {path} \
-                  (replay: huge2 replay {path} --timing fast)");
-    }
-    Ok(())
+    let record = sink.map(|s| {
+        (record_path.unwrap(), s, TraceHeader {
+            model: model.clone(),
+            backend: "native".into(),
+            seed,
+            z_dim: 0,
+            cond_dim: 0,
+            task: "segment".into(),
+            net: net_name.clone(),
+        })
+    });
+    finish_serve(eng, pending, t0, record)
 }
 
 /// Re-drive a recorded trace through a freshly built engine and verify
@@ -287,8 +381,8 @@ fn replay(args: &Args) -> Result<()> {
         ..base
     };
     let mut eng = Engine::new(cfg.clone());
-    match h.backend.as_str() {
-        "native" => {
+    match (h.task.as_str(), h.backend.as_str()) {
+        ("generate", "native") => {
             let gen = Arc::new(Generator::dcgan(h.seed));
             if gen.z_dim != h.z_dim || h.cond_dim != 0 {
                 bail!("trace wants z_dim {} / cond_dim {}, native DCGAN \
@@ -298,14 +392,22 @@ fn replay(args: &Args) -> Result<()> {
             eng.register_native(huge2::coordinator::Model::native(
                 &h.model, gen, h.cond_dim))?;
         }
-        "pjrt" => {
+        ("generate", "pjrt") => {
             let rt = Arc::new(RuntimeHandle::spawn(
                 cfg.artifact_dir.clone().into())?);
             let latent_inputs = if h.cond_dim > 0 { 2 } else { 1 };
             eng.register_pjrt(&h.model, &format!("{}_gen", h.model), rt,
                               latent_inputs, h.seed)?;
         }
-        other => bail!("trace has unknown backend {other:?}"),
+        ("segment", "native") => {
+            // the header names the seg-net config + weight seed — the
+            // exact net rebuilds from the trace file alone
+            let net_cfg = seg_net_cfg(&h.net)?;
+            eng.register_native(huge2::coordinator::Model::native_seg(
+                &h.model, Arc::new(SegNet::new(&net_cfg, h.seed))))?;
+        }
+        (task, backend) => bail!(
+            "trace has unsupported task/backend {task:?}/{backend:?}"),
     }
     println!("replaying with --timing {}...", timing.as_str());
     let report = rp.run(&eng, timing)?;
@@ -318,6 +420,68 @@ fn replay(args: &Args) -> Result<()> {
         }
         Some(d) => bail!("replay diverged: {d}"),
     }
+}
+
+/// One-shot segmentation: build a seg net, run one image through both
+/// engines with a per-layer timing table, print the mask summary.
+fn segment(args: &Args) -> Result<()> {
+    let net_name = args.get_or("net", "segnet");
+    let seed = args.get_usize("seed", 7)? as u64;
+    let img_seed = args.get_usize("image-seed", 11)? as u64;
+    let net_cfg = seg_net_cfg(&net_name)?;
+    let net = SegNet::new(&net_cfg, seed);
+    let x = Tensor::randn(&net.in_shape(), &mut Rng::new(img_seed));
+    println!("{net_name}: input {:?}, {} classes, {} trunk + {} ASPP \
+              layers\n", net.in_shape(), net.n_classes(),
+             net.trunk.len(), net.aspp.len());
+
+    // per-layer baseline vs HUGE² timing on the real activations
+    let mut t = Table::new(&["layer", "dilation", "baseline", "huge2",
+                             "speedup", "max |Δ|"]);
+    let mut row = |l: &huge2::seg::SegLayer, x: &Tensor| {
+        let [base, fast, speedup, diff] =
+            huge2::seg::layer_timing_cells(l, x);
+        t.row(&[
+            l.cfg.name.into(),
+            format!("d={}", l.cfg.params.dilation),
+            base,
+            fast,
+            speedup,
+            diff,
+        ]);
+    };
+    let mut h = x.clone();
+    for l in &net.trunk {
+        row(l, &h);
+        h = l.forward(&h, DeconvEngine::Huge2).relu();
+    }
+    let mut aspp_sum: Option<Tensor> = None;
+    for l in &net.aspp {
+        row(l, &h);
+        let y = l.forward(&h, DeconvEngine::Huge2);
+        aspp_sum = Some(match aspp_sum {
+            None => y,
+            Some(a) => a.add(&y),
+        });
+    }
+    // the head's real activation is the relu'd branch sum
+    let h = aspp_sum.unwrap().relu();
+    row(&net.head, &h);
+    t.print();
+
+    // end-to-end: both engines agree, then the actual product — a mask
+    let logits_b = net.forward_with(&x, Some(DeconvEngine::Baseline));
+    let logits_f = net.forward_with(&x, Some(DeconvEngine::Huge2));
+    println!("\nend-to-end max |Δ| = {:.2e}",
+             logits_f.max_abs_diff(&logits_b));
+    let mask = huge2::seg::argmax_mask(&logits_f);
+    let mut hist = vec![0usize; net.n_classes()];
+    for &v in mask.data() {
+        hist[v as usize] += 1;
+    }
+    println!("mask {:?} (checksum {:#018x}); class histogram: {hist:?}",
+             mask.shape(), mask.checksum());
+    Ok(())
 }
 
 /// Print all the paper's tables/figures (analytic + simulated parts).

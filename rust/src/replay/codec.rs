@@ -10,22 +10,30 @@
 //! tools.
 //!
 //! ```text
-//! {"huge2_trace":1,"model":"dcgan","backend":"native","seed":7,"z_dim":100,"cond_dim":0}
+//! {"huge2_trace":2,"model":"dcgan","backend":"native","seed":7,"z_dim":100,"cond_dim":0,"task":"generate","net":""}
 //! {"t_us":812,"ev":"arrival","id":0,"model":"dcgan","z":["bf1c6a00","3e99f3c2"],"cond":[]}
 //! {"t_us":815,"ev":"enqueue","id":0,"depth":1}
 //! {"t_us":2201,"ev":"batch_formed","ids":[0,1]}
 //! {"t_us":9610,"ev":"batch_executed","ids":[0,1],"bucket":2,"exec_us":7409}
 //! {"t_us":9612,"ev":"response","id":0,"batch_size":2,"bucket":2,"latency_us":8800,"checksum":"9f86d081884c7d65"}
 //! ```
+//!
+//! **Versioning** (DESIGN.md §8): writes always stamp [`TRACE_VERSION`]
+//! (2). Reads accept v1 and v2; a v1 header decodes with
+//! `task="generate"`, `net=""` — v1 GAN traces replay unchanged, because
+//! latent arrival events are encoded identically in both versions. New
+//! in v2: `task`/`net` header fields, and image-payload arrivals
+//! (`"shape":[1,33,33,3],"input_seed":9,"input_checksum":"…"` in place of
+//! `z`/`cond` — payload checksums replace raw capture for image inputs).
 
 use anyhow::{anyhow, Context, Result};
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
 
-use super::event::{EventBody, TraceEvent, TraceHeader};
+use super::event::{ArrivalPayload, EventBody, TraceEvent, TraceHeader};
 
 /// Current trace-format version (the header's `huge2_trace` value).
-pub const TRACE_VERSION: u32 = 1;
+pub const TRACE_VERSION: u32 = 2;
 
 // ------------------------------------------------------------------ encode
 
@@ -57,7 +65,8 @@ fn f32s_json(vs: &[f32]) -> String {
     format!("[{}]", items.join(","))
 }
 
-fn u64s_json(vs: &[u64]) -> String {
+/// Bare-number JSON list (`[1,2,3]`) — ids, shapes.
+fn nums_json<T: std::fmt::Display>(vs: &[T]) -> String {
     let items: Vec<String> = vs.iter().map(|v| v.to_string()).collect();
     format!("[{}]", items.join(","))
 }
@@ -67,12 +76,15 @@ fn u64s_json(vs: &[u64]) -> String {
 pub fn encode_header(h: &TraceHeader) -> String {
     format!(
         "{{\"huge2_trace\":{TRACE_VERSION},\"model\":\"{}\",\
-         \"backend\":\"{}\",\"seed\":{},\"z_dim\":{},\"cond_dim\":{}}}",
+         \"backend\":\"{}\",\"seed\":{},\"z_dim\":{},\"cond_dim\":{},\
+         \"task\":\"{}\",\"net\":\"{}\"}}",
         esc(&h.model),
         esc(&h.backend),
         h.seed,
         h.z_dim,
-        h.cond_dim
+        h.cond_dim,
+        esc(&h.task),
+        esc(&h.net)
     )
 }
 
@@ -80,12 +92,27 @@ pub fn encode_header(h: &TraceHeader) -> String {
 pub fn encode_event(e: &TraceEvent) -> String {
     let t = e.t_us;
     match &e.body {
-        EventBody::RequestArrival { id, model, z, cond } => format!(
+        EventBody::RequestArrival {
+            id,
+            model,
+            payload: ArrivalPayload::Latent { z, cond },
+        } => format!(
             "{{\"t_us\":{t},\"ev\":\"arrival\",\"id\":{id},\
              \"model\":\"{}\",\"z\":{},\"cond\":{}}}",
             esc(model),
             f32s_json(z),
             f32s_json(cond)
+        ),
+        EventBody::RequestArrival {
+            id,
+            model,
+            payload: ArrivalPayload::Image { shape, seed, checksum },
+        } => format!(
+            "{{\"t_us\":{t},\"ev\":\"arrival\",\"id\":{id},\
+             \"model\":\"{}\",\"shape\":{},\"input_seed\":{seed},\
+             \"input_checksum\":\"{checksum:016x}\"}}",
+            esc(model),
+            nums_json(shape)
         ),
         EventBody::Enqueue { id, depth } => format!(
             "{{\"t_us\":{t},\"ev\":\"enqueue\",\"id\":{id},\
@@ -98,12 +125,12 @@ pub fn encode_event(e: &TraceEvent) -> String {
         ),
         EventBody::BatchFormed { ids } => format!(
             "{{\"t_us\":{t},\"ev\":\"batch_formed\",\"ids\":{}}}",
-            u64s_json(ids)
+            nums_json(ids)
         ),
         EventBody::BatchExecuted { ids, bucket, exec_us } => format!(
             "{{\"t_us\":{t},\"ev\":\"batch_executed\",\"ids\":{},\
              \"bucket\":{bucket},\"exec_us\":{exec_us}}}",
-            u64s_json(ids)
+            nums_json(ids)
         ),
         EventBody::Response { id, batch_size, bucket, latency_us,
                               checksum } => format!(
@@ -344,22 +371,32 @@ fn hex64(m: &[(String, Val)], k: &str) -> Result<u64, String> {
         .map_err(|_| format!("field {k:?}: bad u64 hex {s:?}"))
 }
 
-/// Parse the header line.
+/// Parse the header line. Accepts format versions `1..=TRACE_VERSION`;
+/// v1 headers decode with `task="generate"`, `net=""`.
 pub fn decode_header(line: &str) -> Result<TraceHeader, String> {
     let m = Parser::new(line).object()?;
-    let version = num(&m, "huge2_trace")? as u32;
-    if version != TRACE_VERSION {
+    // compare in u64: a corrupt header like 2^32+2 must not truncate
+    // into a "valid" version
+    let version = num(&m, "huge2_trace")?;
+    if version == 0 || version > TRACE_VERSION as u64 {
         return Err(format!(
             "unsupported trace version {version} (this build reads \
-             {TRACE_VERSION})"
+             1..={TRACE_VERSION})"
         ));
     }
+    let (task, net) = if version >= 2 {
+        (string(&m, "task")?, string(&m, "net")?)
+    } else {
+        ("generate".to_string(), String::new())
+    };
     Ok(TraceHeader {
         model: string(&m, "model")?,
         backend: string(&m, "backend")?,
         seed: num(&m, "seed")?,
         z_dim: num(&m, "z_dim")? as usize,
         cond_dim: num(&m, "cond_dim")? as usize,
+        task,
+        net,
     })
 }
 
@@ -369,12 +406,30 @@ pub fn decode_event(line: &str) -> Result<TraceEvent, String> {
     let t_us = num(&m, "t_us")?;
     let kind = string(&m, "ev")?;
     let body = match kind.as_str() {
-        "arrival" => EventBody::RequestArrival {
-            id: num(&m, "id")?,
-            model: string(&m, "model")?,
-            z: f32_list(&m, "z")?,
-            cond: f32_list(&m, "cond")?,
-        },
+        "arrival" => {
+            // latent arrivals carry "z"/"cond" (v1 == v2); image
+            // arrivals (v2) carry "shape"/"input_seed"/"input_checksum"
+            let payload = if get(&m, "z").is_ok() {
+                ArrivalPayload::Latent {
+                    z: f32_list(&m, "z")?,
+                    cond: f32_list(&m, "cond")?,
+                }
+            } else {
+                ArrivalPayload::Image {
+                    shape: u64_list(&m, "shape")?
+                        .into_iter()
+                        .map(|v| v as usize)
+                        .collect(),
+                    seed: num(&m, "input_seed")?,
+                    checksum: hex64(&m, "input_checksum")?,
+                }
+            };
+            EventBody::RequestArrival {
+                id: num(&m, "id")?,
+                model: string(&m, "model")?,
+                payload,
+            }
+        }
         "enqueue" => EventBody::Enqueue {
             id: num(&m, "id")?,
             depth: num(&m, "depth")? as usize,
@@ -459,6 +514,8 @@ mod tests {
             seed: 7,
             z_dim: 100,
             cond_dim: 0,
+            task: "generate".into(),
+            net: String::new(),
         }
     }
 
@@ -466,6 +523,50 @@ mod tests {
     fn header_round_trip() {
         let h = header();
         assert_eq!(decode_header(&encode_header(&h)).unwrap(), h);
+        let seg = TraceHeader {
+            task: "segment".into(),
+            net: "segnet".into(),
+            z_dim: 0,
+            ..header()
+        };
+        assert_eq!(decode_header(&encode_header(&seg)).unwrap(), seg);
+    }
+
+    #[test]
+    fn v1_header_decodes_with_generate_defaults() {
+        let line = "{\"huge2_trace\":1,\"model\":\"dcgan\",\
+                    \"backend\":\"native\",\"seed\":7,\"z_dim\":100,\
+                    \"cond_dim\":0}";
+        let h = decode_header(line).unwrap();
+        assert_eq!(h, header());
+        assert_eq!(h.task, "generate");
+        assert_eq!(h.net, "");
+        // future versions are rejected, past versions are not
+        assert!(decode_header("{\"huge2_trace\":3}").is_err());
+        assert!(decode_header("{\"huge2_trace\":0}").is_err());
+    }
+
+    #[test]
+    fn image_arrival_round_trips() {
+        let e = TraceEvent {
+            t_us: 4,
+            body: EventBody::RequestArrival {
+                id: 9,
+                model: "segnet".into(),
+                payload: ArrivalPayload::Image {
+                    shape: vec![1, 33, 33, 3],
+                    seed: 0xfeed_beef,
+                    checksum: u64::MAX,
+                },
+            },
+        };
+        let line = encode_event(&e);
+        assert!(line.contains("\"input_seed\""), "{line}");
+        assert_eq!(decode_event(&line).unwrap(), e);
+        // tampered input checksum hex is rejected at decode
+        let bad = line.replace("\"input_checksum\":\"ffff",
+                               "\"input_checksum\":\"zzzz");
+        assert!(decode_event(&bad).is_err());
     }
 
     #[test]
@@ -476,8 +577,22 @@ mod tests {
                 body: EventBody::RequestArrival {
                     id: 0,
                     model: "m\"with\\quotes\nand newline".into(),
-                    z: vec![1.5, -0.0, f32::NAN, f32::MIN_POSITIVE],
-                    cond: vec![],
+                    payload: ArrivalPayload::Latent {
+                        z: vec![1.5, -0.0, f32::NAN, f32::MIN_POSITIVE],
+                        cond: vec![],
+                    },
+                },
+            },
+            TraceEvent {
+                t_us: 0,
+                body: EventBody::RequestArrival {
+                    id: 7,
+                    model: "segnet".into(),
+                    payload: ArrivalPayload::Image {
+                        shape: vec![1, 9, 9, 2],
+                        seed: 3,
+                        checksum: 0xabcd,
+                    },
                 },
             },
             TraceEvent {
@@ -532,12 +647,17 @@ mod tests {
                 body: EventBody::RequestArrival {
                     id: 0,
                     model: "m".into(),
-                    z: vec![v],
-                    cond: vec![],
+                    payload: ArrivalPayload::Latent {
+                        z: vec![v],
+                        cond: vec![],
+                    },
                 },
             };
             match decode_event(&encode_event(&e)).unwrap().body {
-                EventBody::RequestArrival { z, .. } => {
+                EventBody::RequestArrival {
+                    payload: ArrivalPayload::Latent { z, .. },
+                    ..
+                } => {
                     assert_eq!(z[0].to_bits(), v.to_bits());
                 }
                 _ => unreachable!(),

@@ -20,17 +20,30 @@ pub struct TraceEvent {
     pub body: EventBody,
 }
 
+/// The task input a recorded arrival carried (mirrors
+/// `coordinator::Payload`, in trace form).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalPayload {
+    /// Latent + conditioning, captured bit-exactly (IEEE-754 bit
+    /// patterns in the codec).
+    Latent { z: Vec<f32>, cond: Vec<f32> },
+    /// Image input, captured as **(shape, synthesis seed, checksum)**
+    /// instead of raw pixels (trace format v2): replay regenerates
+    /// `Tensor::randn(shape, Rng::new(seed))` and verifies the checksum
+    /// before submitting, so the trace stays kilobytes while the input
+    /// is still pinned bit-exactly.
+    Image { shape: Vec<usize>, seed: u64, checksum: u64 },
+}
+
 /// What happened.
 #[derive(Debug, Clone, PartialEq)]
 pub enum EventBody {
     /// A request reached `Engine::submit` — the workload's
-    /// non-deterministic input, captured bit-exactly (`z`/`cond` round-trip
-    /// through the codec via their IEEE-754 bit patterns).
+    /// non-deterministic input.
     RequestArrival {
         id: u64,
         model: String,
-        z: Vec<f32>,
-        cond: Vec<f32>,
+        payload: ArrivalPayload,
     },
     /// Admission succeeded; `depth` is the queue depth just after the push.
     Enqueue { id: u64, depth: usize },
@@ -85,8 +98,8 @@ impl EventBody {
 /// Trace-file header: everything a replayer needs to rebuild the serving
 /// setup the recording ran against. The wire format version is not a
 /// field here — the codec stamps [`TRACE_VERSION`] on write and rejects
-/// anything else on read, so an unsupported version is unrepresentable
-/// in memory.
+/// anything newer on read (older versions decode with documented
+/// defaults), so an unsupported version is unrepresentable in memory.
 ///
 /// [`TRACE_VERSION`]: crate::replay::codec::TRACE_VERSION
 #[derive(Debug, Clone, PartialEq)]
@@ -95,11 +108,17 @@ pub struct TraceHeader {
     pub model: String,
     /// `"native"` (pure-Rust generator) or `"pjrt"` (AOT artifacts).
     pub backend: String,
-    /// Weight seed; the native backend rebuilds the exact generator from
+    /// Weight seed; the native backend rebuilds the exact model from
     /// it, the PJRT backend re-binds identically seeded weights.
     pub seed: u64,
     pub z_dim: usize,
     pub cond_dim: usize,
+    /// `"generate"` or `"segment"` (v2 field; v1 traces decode as
+    /// `"generate"`).
+    pub task: String,
+    /// Segmentation-net config name (`config::segnet_by_name`) for
+    /// `task == "segment"`; empty otherwise (v2 field; v1 decodes empty).
+    pub net: String,
 }
 
 #[cfg(test)]
@@ -112,8 +131,7 @@ mod tests {
             EventBody::RequestArrival {
                 id: 0,
                 model: "m".into(),
-                z: vec![],
-                cond: vec![],
+                payload: ArrivalPayload::Latent { z: vec![], cond: vec![] },
             },
             EventBody::Enqueue { id: 0, depth: 1 },
             EventBody::Reject { id: 0, reason: "r".into() },

@@ -18,10 +18,16 @@
 //! * [`replayer`] — re-drives a trace, `--timing faithful|fast`.
 //! * [`divergence`] — checksum comparison + first-mismatch reporting.
 //!
+//! Recording is **multi-task** (trace format v2): latent payloads are
+//! captured bit-exactly; image payloads (segmentation requests) are
+//! captured as (shape, synthesis seed, checksum) — raw pixels never hit
+//! the trace — and replay regenerates + verifies them before submitting.
+//! v1 traces still load (they decode as `task="generate"`).
+//!
 //! The canonical library-level quickstart (Recorder → set_trace_sink →
 //! serve → save, then Replayer::load → run → is_clean) lives in the
 //! [crate docs](crate); `examples/record_replay.rs` is the runnable
-//! version, and DESIGN.md §7 specifies the semantics.
+//! version, and DESIGN.md §7/§8 specify the semantics.
 
 pub mod codec;
 pub mod divergence;
@@ -31,6 +37,6 @@ pub mod replayer;
 
 pub use codec::TRACE_VERSION;
 pub use divergence::{Divergence, ReplayReport};
-pub use event::{EventBody, TraceEvent, TraceHeader};
+pub use event::{ArrivalPayload, EventBody, TraceEvent, TraceHeader};
 pub use recorder::{Recorder, TraceSink};
 pub use replayer::{Replayer, Timing};

@@ -131,6 +131,8 @@ mod tests {
             seed: 5,
             z_dim: 8,
             cond_dim: 0,
+            task: "generate".into(),
+            net: String::new(),
         });
         let sink = rec.sink();
         sink.record(EventBody::Enqueue { id: 0, depth: 1 });

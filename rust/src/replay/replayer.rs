@@ -24,11 +24,13 @@ use std::str::FromStr;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{Backpressure, Engine, Response};
+use crate::coordinator::{Backpressure, Engine, Payload, Response};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
 
 use super::codec;
 use super::divergence::{diff_responses, ReplayReport};
-use super::event::{EventBody, TraceEvent, TraceHeader};
+use super::event::{ArrivalPayload, EventBody, TraceEvent, TraceHeader};
 
 /// How the replayer paces recorded arrivals.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -132,12 +134,48 @@ impl Replayer {
             VecDeque::new();
         let mut replayed: HashMap<u64, u64> = HashMap::new();
         let mut requests = 0usize;
-        for ev in &self.events {
-            let EventBody::RequestArrival { id, model, z, cond } = &ev.body
+        for (ev_idx, ev) in self.events.iter().enumerate() {
+            let EventBody::RequestArrival { id, model, payload } = &ev.body
             else {
                 continue;
             };
             requests += 1;
+            // Rebuild the recorded input. Latents are stored bit-exactly;
+            // image payloads are stored as (shape, seed, checksum) — the
+            // tensor is regenerated from the canonical synthesis and the
+            // checksum proves it matches what the recording served
+            // (trace v2, DESIGN.md §8). A mismatch means the trace (or
+            // this build's synthesis) is broken, so the whole replay is
+            // invalid — a hard error, not a per-request divergence.
+            let payload = match payload {
+                ArrivalPayload::Latent { z, cond } => {
+                    Payload::latent(z.clone(), cond.clone())
+                }
+                ArrivalPayload::Image { shape, seed, checksum } => {
+                    // the shape comes from an untrusted file: bound it
+                    // before allocating (a tampered line must produce a
+                    // clean error, not an OOM abort)
+                    const MAX_IMAGE_ELEMS: usize = 1 << 24; // 64 MiB f32
+                    let elems: usize =
+                        shape.iter().try_fold(1usize, |a, &d| {
+                            a.checked_mul(d)
+                        }).unwrap_or(usize::MAX);
+                    if shape.len() != 4 || elems > MAX_IMAGE_ELEMS {
+                        return Err(anyhow!(
+                            "event #{ev_idx} (arrival id={id}): \
+                             implausible image shape {shape:?} in trace"));
+                    }
+                    let t = Tensor::randn(shape, &mut Rng::new(*seed));
+                    if t.checksum() != *checksum {
+                        return Err(anyhow!(
+                            "event #{ev_idx} (arrival id={id}): image \
+                             payload reconstruction checksum mismatch — \
+                             recorded {checksum:#018x}, rebuilt {:#018x}",
+                            t.checksum()));
+                    }
+                    Payload::image(t, *seed)
+                }
+            };
             if timing == Timing::Faithful {
                 let at =
                     Duration::from_micros(ev.t_us.saturating_sub(base_us));
@@ -147,7 +185,7 @@ impl Replayer {
                 }
             }
             loop {
-                match engine.submit(model, z.clone(), cond.clone()) {
+                match engine.submit(model, payload.clone()) {
                     Ok(rx) => {
                         pending.push_back((*id, rx));
                         break;
@@ -159,7 +197,7 @@ impl Replayer {
                         // requests: drain the oldest, then retry
                         let (pid, rx) = pending.pop_front().unwrap();
                         if let Ok(resp) = rx.recv() {
-                            replayed.insert(pid, resp.image.checksum());
+                            replayed.insert(pid, resp.output.checksum());
                         }
                     }
                     // Deterministic reject (validation/shutdown) — or
@@ -173,7 +211,7 @@ impl Replayer {
 
         for (id, rx) in pending {
             if let Ok(resp) = rx.recv() {
-                replayed.insert(id, resp.image.checksum());
+                replayed.insert(id, resp.output.checksum());
             }
         }
 
@@ -223,6 +261,8 @@ mod tests {
             seed: 0,
             z_dim: 1,
             cond_dim: 0,
+            task: "generate".into(),
+            net: String::new(),
         };
         let events = vec![
             TraceEvent {
@@ -230,8 +270,10 @@ mod tests {
                 body: EventBody::RequestArrival {
                     id: 0,
                     model: "m".into(),
-                    z: vec![0.0],
-                    cond: vec![],
+                    payload: ArrivalPayload::Latent {
+                        z: vec![0.0],
+                        cond: vec![],
+                    },
                 },
             },
             TraceEvent {

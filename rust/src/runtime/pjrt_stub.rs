@@ -1,4 +1,5 @@
-//! Stub PJRT runtime, compiled when the `pjrt` cargo feature is off.
+//! Stub PJRT runtime, compiled unless the `pjrt` **and** `xla` cargo
+//! features are both on.
 //!
 //! The real implementation (`pjrt.rs`) needs the vendored `xla` crate
 //! (PJRT C API + `xla_extension` shared library), which not every build
@@ -7,7 +8,8 @@
 //! it mirrors the public surface of [`Runtime`]/[`Executable`] exactly,
 //! still validates the artifact directory (so error ordering matches the
 //! real path), and fails `open` with an actionable message instead of a
-//! linker error at build time.
+//! linker error at build time. `cargo check --features pjrt` (CI) builds
+//! this stub, so the feature flag itself can never rot.
 
 use anyhow::{bail, Result};
 use std::path::Path;
@@ -18,9 +20,9 @@ use crate::tensor::Tensor;
 use super::artifact::{ArtifactSpec, Manifest};
 
 const NO_PJRT: &str =
-    "PJRT execution is not compiled into this build (cargo feature \
-     `pjrt` is off; it needs the vendored `xla` crate). Serve with \
-     --native, or rebuild with `cargo build --features pjrt`.";
+    "PJRT execution is not compiled into this build (it needs the cargo \
+     features `pjrt,xla` plus the vendored `xla` crate). Serve with \
+     --native, or rebuild with `cargo build --features pjrt,xla`.";
 
 /// Stub of the compiled-artifact handle. Never constructible (the stub
 /// [`Runtime::open`] always fails), but keeps dependents well-typed.

@@ -1,0 +1,243 @@
+//! Segmentation model subsystem — the serving-side home of the paper's
+//! *second* deconvolution family (dilated/atrous convolution, §2.1.2,
+//! §3.2.2), mirroring what [`crate::gan`] is for the transposed family.
+//!
+//! A [`SegNet`] is assembled from [`SegLayerConfig`]s in [`crate::config`]
+//! (sequential trunk → parallel atrous spatial pyramid, branches summed →
+//! 1×1 classifier head — the DeepLab/ENet shape), with a **per-layer**
+//! choice of baseline vs HUGE² untangled dilated conv and a per-layer
+//! thread count. Like `gan::GenLayer`, every layer pre-decomposes at
+//! load time: the `R·S` tap weight panels are packed into GEMM
+//! micro-kernel layout once ([`dilated::pack_taps`]), so inference never
+//! packs B.
+//!
+//! Serving contract (DESIGN.md §8): the forward pass is deterministic,
+//! bit-identical across thread counts, and batch-composition-invariant
+//! (each image in a batch is computed independently), so segmentation
+//! requests record/replay under the same checksum discipline as GAN
+//! requests.
+
+use crate::config::{SegLayerConfig, SegNetConfig};
+use crate::deconv::dilated::{self, DilatedTaps};
+use crate::deconv::{baseline, parallel, Engine};
+use crate::gan::Forward;
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+/// One dilated-conv layer with its weights and pre-packed tap panels
+/// (packed once at model-load time, as a serving engine would do).
+pub struct SegLayer {
+    pub cfg: SegLayerConfig,
+    pub kernel: Tensor,
+    taps: DilatedTaps,
+}
+
+impl SegLayer {
+    pub fn new(cfg: SegLayerConfig, kernel: Tensor) -> Self {
+        assert_eq!(kernel.shape(), &[cfg.k, cfg.k, cfg.c_in, cfg.c_out]);
+        let taps = dilated::pack_taps(&kernel);
+        SegLayer { cfg, kernel, taps }
+    }
+
+    /// Forward one layer with an explicit engine choice (the per-config
+    /// choice lives in `cfg.engine`; [`SegNet::forward`] applies it).
+    pub fn forward(&self, x: &Tensor, engine: Engine) -> Tensor {
+        let p = self.cfg.params;
+        match engine {
+            Engine::Baseline => baseline::conv2d_dilated(x, &self.kernel, &p),
+            Engine::Huge2 if self.cfg.threads > 1 => {
+                parallel::conv2d_dilated_mt(x, &self.taps, &p,
+                                            self.cfg.threads)
+            }
+            Engine::Huge2 => dilated::conv2d_dilated_with(x, &self.taps, &p),
+        }
+    }
+}
+
+/// A segmentation network: trunk, atrous pyramid, classifier head.
+pub struct SegNet {
+    pub cfg: SegNetConfig,
+    pub trunk: Vec<SegLayer>,
+    pub aspp: Vec<SegLayer>,
+    pub head: SegLayer,
+}
+
+impl SegNet {
+    /// Build with seeded 0.02·N(0,1) weights (bit-reproducible from
+    /// `seed` — the trace header records it so replay can rebuild the
+    /// exact net). Weight order: trunk, then ASPP branches, then head.
+    pub fn new(cfg: &SegNetConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut mk = |c: &SegLayerConfig| {
+            let k = Tensor::randn(&[c.k, c.k, c.c_in, c.c_out], &mut rng)
+                .scale(0.02);
+            SegLayer::new(c.clone(), k)
+        };
+        let trunk: Vec<SegLayer> = cfg.trunk.iter().map(&mut mk).collect();
+        let aspp: Vec<SegLayer> = cfg.aspp.iter().map(&mut mk).collect();
+        let head = mk(&cfg.head);
+        assert!(!trunk.is_empty() && !aspp.is_empty(),
+                "segnet needs a trunk and at least one ASPP branch");
+        SegNet { cfg: cfg.clone(), trunk, aspp, head }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.cfg.n_classes
+    }
+
+    /// Single-image input shape `(1, H, W, C)` — what request payloads
+    /// must carry ([`crate::coordinator::Model::native_seg`] validates
+    /// against it).
+    pub fn in_shape(&self) -> Vec<usize> {
+        let f = &self.trunk[0].cfg;
+        vec![1, f.h, f.h, f.c_in]
+    }
+
+    /// Logit tensor shape for batch `b`: `(b, Ho, Wo, n_classes)`.
+    pub fn logits_shape(&self, b: usize) -> Vec<usize> {
+        let h = self.head.cfg.h_out();
+        vec![b, h, h, self.cfg.n_classes]
+    }
+
+    /// `x`: `(B, H, W, C)` → logits `(B, Ho, Wo, n_classes)`, using each
+    /// layer's configured engine/threads.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        self.forward_with(x, None)
+    }
+
+    /// [`SegNet::forward`] with an engine override applied to every layer
+    /// (`None` = per-layer config) — the cross-engine property tests and
+    /// the CLI timing table use this.
+    pub fn forward_with(&self, x: &Tensor, over: Option<Engine>) -> Tensor {
+        let pick = |l: &SegLayer| over.unwrap_or(l.cfg.engine);
+        let mut h = x.clone();
+        for l in &self.trunk {
+            h = l.forward(&h, pick(l)).relu();
+        }
+        // ASPP: parallel branches over the same input, summed in config
+        // order (fixed order — replay determinism).
+        let mut acc: Option<Tensor> = None;
+        for l in &self.aspp {
+            let y = l.forward(&h, pick(l));
+            acc = Some(match acc {
+                None => y,
+                Some(a) => a.add(&y),
+            });
+        }
+        let h = acc.unwrap().relu();
+        self.head.forward(&h, pick(&self.head))
+    }
+
+    /// End-to-end inference: forward + per-pixel class argmax.
+    pub fn predict(&self, x: &Tensor) -> Tensor {
+        argmax_mask(&self.forward(x))
+    }
+}
+
+impl Forward for SegNet {
+    fn forward(&self, x: &Tensor, engine: Engine) -> Tensor {
+        self.forward_with(x, Some(engine))
+    }
+
+    fn out_shape(&self, b: usize) -> Vec<usize> {
+        self.logits_shape(b)
+    }
+}
+
+/// Measure one layer under both engines on `x` and format the shared
+/// report cells `[baseline, huge2, speedup, max |Δ|]`. The `huge2
+/// segment` subcommand and `examples/segment.rs` both build their
+/// timing tables from this, so the measurement discipline (warmup,
+/// sample count, speedup formula) cannot drift between them.
+pub fn layer_timing_cells(l: &SegLayer, x: &Tensor) -> [String; 4] {
+    use crate::bench_util::{fmt_dur, measure};
+    let tb = measure(1, 5, || {
+        std::hint::black_box(l.forward(x, Engine::Baseline));
+    });
+    let tf = measure(1, 5, || {
+        std::hint::black_box(l.forward(x, Engine::Huge2));
+    });
+    let yb = l.forward(x, Engine::Baseline);
+    let yf = l.forward(x, Engine::Huge2);
+    [
+        fmt_dur(tb.median),
+        fmt_dur(tf.median),
+        format!("{:.2}x", tb.median_s() / tf.median_s()),
+        format!("{:.2e}", yf.max_abs_diff(&yb)),
+    ]
+}
+
+/// Per-pixel class argmax: logits `(B, H, W, K)` → mask `(B, H, W, 1)` of
+/// class indices as f32. Ties break to the **lowest** class index
+/// (strict-`>` scan), so the mask is deterministic — a response checksum
+/// over it is replayable.
+pub fn argmax_mask(logits: &Tensor) -> Tensor {
+    let (b, h, w, k) = logits.dims4();
+    assert!(k > 0);
+    let src = logits.data();
+    let mut out = Tensor::zeros(&[b, h, w, 1]);
+    for (pix, dst) in out.data_mut().iter_mut().enumerate() {
+        let row = &src[pix * k..(pix + 1) * k];
+        let mut best = 0usize;
+        for (i, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = i;
+            }
+        }
+        *dst = best as f32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{segnet, tiny_segnet};
+
+    #[test]
+    fn tiny_net_shapes() {
+        let net = SegNet::new(&tiny_segnet(), 5);
+        assert_eq!(net.in_shape(), vec![1, 9, 9, 2]);
+        assert_eq!(net.logits_shape(3), vec![3, 9, 9, 3]);
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&net.in_shape(), &mut rng);
+        let logits = net.forward(&x);
+        assert_eq!(logits.shape(), net.logits_shape(1).as_slice());
+        let mask = net.predict(&x);
+        assert_eq!(mask.shape(), &[1, 9, 9, 1]);
+        let nc = net.n_classes() as f32;
+        assert!(mask.data().iter().all(|&v| v >= 0.0 && v < nc
+                                       && v.fract() == 0.0));
+    }
+
+    #[test]
+    fn engines_agree_and_huge2_is_deterministic() {
+        let net = SegNet::new(&tiny_segnet(), 7);
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&net.in_shape(), &mut rng);
+        let a = net.forward_with(&x, Some(Engine::Huge2));
+        let b = net.forward_with(&x, Some(Engine::Baseline));
+        assert!(a.allclose(&b, 1e-4), "diff {}", a.max_abs_diff(&b));
+        let a2 = net.forward_with(&x, Some(Engine::Huge2));
+        assert_eq!(a.checksum(), a2.checksum());
+    }
+
+    #[test]
+    fn seeded_weights_reproduce() {
+        let a = SegNet::new(&segnet(), 11);
+        let b = SegNet::new(&segnet(), 11);
+        assert_eq!(a.trunk[0].kernel.checksum(),
+                   b.trunk[0].kernel.checksum());
+        assert_eq!(a.head.kernel.checksum(), b.head.kernel.checksum());
+        let c = SegNet::new(&segnet(), 12);
+        assert_ne!(a.head.kernel.checksum(), c.head.kernel.checksum());
+    }
+
+    #[test]
+    fn argmax_mask_breaks_ties_low() {
+        let logits = Tensor::from_vec(&[1, 1, 2, 3],
+                                      vec![1.0, 3.0, 3.0, 2.0, -1.0, 2.0]);
+        let m = argmax_mask(&logits);
+        assert_eq!(m.data(), &[1.0, 0.0]);
+    }
+}

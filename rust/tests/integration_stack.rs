@@ -103,8 +103,8 @@ fn pjrt_generator_matches_native_generator_shapes() {
     let mut rng = Rng::new(9);
     let z: Vec<f32> = (0..100).map(|_| rng.next_normal()).collect();
     let r = eng.generate("dcgan", z, vec![]).unwrap();
-    assert_eq!(r.image.shape(), &[1, 64, 64, 3]);
-    assert!(r.image.data().iter().all(|v| v.abs() <= 1.0));
+    assert_eq!(r.output.shape(), &[1, 64, 64, 3]);
+    assert!(r.output.data().iter().all(|v| v.abs() <= 1.0));
     eng.shutdown();
 }
 
@@ -125,12 +125,12 @@ fn pjrt_cgan_conditioning_round_trip() {
     let mut y = vec![0.0f32; 10];
     y[3] = 1.0;
     let r = eng.generate("cgan", z.clone(), y).unwrap();
-    assert_eq!(r.image.shape(), &[1, 32, 32, 3]);
+    assert_eq!(r.output.shape(), &[1, 32, 32, 3]);
     // different class -> different image (conditioning actually wired)
     let mut y2 = vec![0.0f32; 10];
     y2[7] = 1.0;
     let r2 = eng.generate("cgan", z, y2).unwrap();
-    assert!(r.image.max_abs_diff(&r2.image) > 1e-6,
+    assert!(r.output.max_abs_diff(&r2.output) > 1e-6,
             "conditioning must affect the output");
     eng.shutdown();
 }

@@ -133,7 +133,7 @@ fn histogram_quantiles_bounded_error() {
 #[test]
 fn engine_accounting_invariant_under_flood() {
     use huge2::config::EngineConfig;
-    use huge2::coordinator::{Engine, Model};
+    use huge2::coordinator::{Engine, Model, Payload};
     use huge2::gan::Generator;
 
     let gen = Generator::tiny_cgan(3);
@@ -149,7 +149,7 @@ fn engine_accounting_invariant_under_flood() {
     let mut receivers = Vec::new();
     let mut rejected = 0u64;
     for _ in 0..120 {
-        match eng.submit("m", vec![0.0; 8], vec![]) {
+        match eng.submit("m", Payload::latent(vec![0.0; 8], vec![])) {
             Ok(rx) => receivers.push(rx),
             Err(_) => rejected += 1,
         }

@@ -9,7 +9,7 @@
 //!  * MAC accounting: huge2 ≤ naive, equality iff stride == 1
 
 use huge2::deconv::{axis_pattern, baseline, dilated, huge2 as engine,
-                    polyphase_len, DeconvParams, DilatedParams};
+                    parallel, polyphase_len, DeconvParams, DilatedParams};
 use huge2::rng::Rng;
 use huge2::tensor::Tensor;
 
@@ -74,6 +74,49 @@ fn dilated_engines_agree_on_random_configs() {
                 "seed {seed:#x}: h={h} c={c} n={n} r={r} {p:?} \
                  diff={}", got.max_abs_diff(&want));
         tested += 1;
+    }
+}
+
+#[test]
+fn dilated_property_grid_all_engines() {
+    // Deterministic grid over kernel size × dilation × stride × padding
+    // ("valid" and "same"), covering stride>1 explicitly. All four
+    // implementations must agree with the naive baseline, and the three
+    // untangled variants (strided, prepacked, multi-threaded) must be
+    // bit-identical to each other — that equivalence is what licenses
+    // swapping them freely under recorded serving traces.
+    let mut rng = Rng::new(0x5e6);
+    for r in [1usize, 3] {
+        for d in [1usize, 2, 3] {
+            for stride in [1usize, 2] {
+                let same = d * (r - 1) / 2; // 'same' when stride == 1
+                for pad in [0usize, same] {
+                    let p = DilatedParams::new(d, stride, pad);
+                    let h = p.eff_kernel(r) + 6;
+                    let (c, n) = (3, 4);
+                    let x = Tensor::randn(&[2, h, h, c], &mut rng);
+                    let k = Tensor::randn(&[r, r, c, n], &mut rng);
+                    let want = baseline::conv2d_dilated(&x, &k, &p);
+                    let got = dilated::conv2d_dilated(&x, &k, &p);
+                    assert!(got.allclose(&want, 1e-3),
+                            "r={r} d={d} stride={stride} pad={pad} \
+                             diff={}", got.max_abs_diff(&want));
+                    if stride == 1 && pad == same {
+                        assert_eq!(got.shape(), x.shape()[..3].iter()
+                            .chain(&[n]).copied().collect::<Vec<_>>()
+                            .as_slice(), "'same' keeps spatial dims");
+                    }
+                    let taps = dilated::pack_taps(&k);
+                    let packed = dilated::conv2d_dilated_with(&x, &taps, &p);
+                    let mt = parallel::conv2d_dilated_mt(&x, &taps, &p, 3);
+                    assert_eq!(packed.checksum(), got.checksum(),
+                               "prepacked r={r} d={d} stride={stride} \
+                                pad={pad}");
+                    assert_eq!(mt.checksum(), got.checksum(),
+                               "mt r={r} d={d} stride={stride} pad={pad}");
+                }
+            }
+        }
     }
 }
 

@@ -10,10 +10,10 @@
 //!   mismatching event.
 
 use huge2::config::EngineConfig;
-use huge2::coordinator::{Engine, Model};
+use huge2::coordinator::{Engine, Model, Payload};
 use huge2::gan::Generator;
-use huge2::replay::{codec, Divergence, EventBody, Replayer, Timing,
-                    TraceEvent, TraceHeader, TraceSink};
+use huge2::replay::{codec, ArrivalPayload, Divergence, EventBody,
+                    Replayer, Timing, TraceEvent, TraceHeader, TraceSink};
 use huge2::rng::Rng;
 use std::sync::Arc;
 
@@ -51,6 +51,8 @@ fn header(seed: u64) -> TraceHeader {
         seed,
         z_dim: Z_DIM,
         cond_dim: 0,
+        task: "generate".into(),
+        net: String::new(),
     }
 }
 
@@ -62,7 +64,8 @@ fn record_run(seed: u64, n: usize) -> Vec<TraceEvent> {
     let mut pending = Vec::new();
     for _ in 0..n {
         let z: Vec<f32> = (0..Z_DIM).map(|_| rng.next_normal()).collect();
-        pending.push(eng.submit("tiny", z, vec![]).unwrap());
+        pending.push(eng.submit("tiny", Payload::latent(z, vec![]))
+            .unwrap());
     }
     for rx in pending {
         rx.recv().unwrap();
@@ -169,7 +172,10 @@ fn tampered_checksum_names_first_mismatching_event() {
 fn tampered_latent_changes_the_output() {
     let mut events = record_run(5, 6);
     for e in &mut events {
-        if let EventBody::RequestArrival { z, .. } = &mut e.body {
+        if let EventBody::RequestArrival {
+            payload: ArrivalPayload::Latent { z, .. }, ..
+        } = &mut e.body
+        {
             z[0] += 0.5;
             break;
         }
@@ -187,7 +193,10 @@ fn truncated_latent_surfaces_as_missing_response() {
     let mut events = record_run(5, 4);
     let mut victim = None;
     for e in &mut events {
-        if let EventBody::RequestArrival { id, z, .. } = &mut e.body {
+        if let EventBody::RequestArrival {
+            id, payload: ArrivalPayload::Latent { z, .. }, ..
+        } = &mut e.body
+        {
             z.pop(); // now fails Model::validate on replay
             victim = Some(*id);
             break;
@@ -256,12 +265,23 @@ fn random_ids(rng: &mut Rng) -> Vec<u64> {
 }
 
 fn random_event(rng: &mut Rng, t_us: u64) -> TraceEvent {
-    let body = match rng.next_below(6) {
+    let body = match rng.next_below(7) {
         0 => EventBody::RequestArrival {
             id: rng.next_u64(),
             model: random_string(rng),
-            z: random_floats(rng),
-            cond: random_floats(rng),
+            payload: ArrivalPayload::Latent {
+                z: random_floats(rng),
+                cond: random_floats(rng),
+            },
+        },
+        6 => EventBody::RequestArrival {
+            id: rng.next_u64(),
+            model: random_string(rng),
+            payload: ArrivalPayload::Image {
+                shape: (0..4).map(|_| 1 + rng.next_below(64)).collect(),
+                seed: rng.next_u64(),
+                checksum: rng.next_u64(),
+            },
         },
         1 => EventBody::Enqueue {
             id: rng.next_u64(),

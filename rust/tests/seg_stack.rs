@@ -1,0 +1,256 @@
+//! Segmentation stack integration tests: config → seg net → coordinator
+//! → record/replay (trace format v2), plus the v1 backward-compat rule
+//! (DESIGN.md §8).
+
+use huge2::config::{tiny_segnet, EngineConfig};
+use huge2::coordinator::{Engine, Model, Payload};
+use huge2::deconv::Engine as Eng;
+use huge2::gan::{Forward, Generator};
+use huge2::replay::{codec, ArrivalPayload, EventBody, Replayer, Timing,
+                    TraceEvent, TraceHeader, TraceSink};
+use huge2::rng::Rng;
+use huge2::seg::SegNet;
+use huge2::tensor::Tensor;
+use std::sync::Arc;
+
+fn seg_engine(seed: u64, sink: Option<Arc<TraceSink>>) -> Engine {
+    let cfg = EngineConfig {
+        workers: 2,
+        queue_depth: 64,
+        max_batch: 4,
+        batch_timeout_us: 500,
+        ..EngineConfig::default()
+    };
+    let mut e = Engine::new(cfg);
+    if let Some(s) = sink {
+        e.set_trace_sink(s).unwrap();
+    }
+    let net = Arc::new(SegNet::new(&tiny_segnet(), seed));
+    e.register_native(Model::native_seg("seg", net)).unwrap();
+    e
+}
+
+fn seg_header(seed: u64) -> TraceHeader {
+    TraceHeader {
+        model: "seg".into(),
+        backend: "native".into(),
+        seed,
+        z_dim: 0,
+        cond_dim: 0,
+        task: "segment".into(),
+        net: "tiny_segnet".into(),
+    }
+}
+
+/// Record a seg serve run of `n` image requests; returns the events.
+fn record_seg_run(seed: u64, n: usize) -> Vec<TraceEvent> {
+    let sink = Arc::new(TraceSink::new());
+    let eng = seg_engine(seed, Some(sink.clone()));
+    let shape = [1usize, 9, 9, 2];
+    let mut pending = Vec::new();
+    for i in 0..n as u64 {
+        let img_seed = 500 + i;
+        let img = Tensor::randn(&shape, &mut Rng::new(img_seed));
+        pending.push(eng.submit("seg", Payload::image(img, img_seed))
+            .unwrap());
+    }
+    for rx in pending {
+        rx.recv().unwrap();
+    }
+    eng.shutdown();
+    sink.snapshot()
+}
+
+#[test]
+fn forward_trait_spans_both_model_families() {
+    // the shared Forward surface: baseline and HUGE² agree for any model
+    fn engines_agree<M: Forward>(m: &M, x: &Tensor) {
+        let a = m.forward(x, Eng::Huge2);
+        let b = m.forward(x, Eng::Baseline);
+        assert_eq!(a.shape(), m.out_shape(x.shape()[0]).as_slice());
+        assert!(a.allclose(&b, 1e-4), "diff {}", a.max_abs_diff(&b));
+    }
+    let mut rng = Rng::new(3);
+    let gen = Generator::tiny_cgan(5);
+    let z = Tensor::randn(&[2, 8], &mut rng);
+    engines_agree(&gen, &z);
+    let net = SegNet::new(&tiny_segnet(), 5);
+    let mut img_data = Vec::new();
+    for s in [10u64, 11] {
+        img_data.extend(Tensor::randn(&[1, 9, 9, 2], &mut Rng::new(s))
+            .into_vec());
+    }
+    let imgs = Tensor::from_vec(&[2, 9, 9, 2], img_data);
+    engines_agree(&net, &imgs);
+}
+
+#[test]
+fn seg_forward_is_thread_count_invariant() {
+    // same weights, same input, different per-layer thread counts →
+    // bit-identical logits (the invariance fast replay relies on)
+    let mut cfg_mt = tiny_segnet();
+    for l in cfg_mt.trunk.iter_mut().chain(cfg_mt.aspp.iter_mut()) {
+        l.threads = 3;
+    }
+    let a = SegNet::new(&tiny_segnet(), 9);
+    let b = SegNet::new(&cfg_mt, 9);
+    let x = Tensor::randn(&[2, 9, 9, 2], &mut Rng::new(4));
+    assert_eq!(a.forward(&x).checksum(), b.forward(&x).checksum());
+}
+
+#[test]
+fn seg_record_then_fast_replay_is_divergence_free() {
+    let events = record_seg_run(5, 16);
+    let responses = events
+        .iter()
+        .filter(|e| matches!(e.body, EventBody::Response { .. }))
+        .count();
+    assert_eq!(responses, 16);
+    // image arrivals were captured as (shape, seed, checksum), not pixels
+    assert!(events.iter().any(|e| matches!(
+        &e.body,
+        EventBody::RequestArrival {
+            payload: ArrivalPayload::Image { .. }, ..
+        })));
+
+    let rp = Replayer::from_parts(seg_header(5), events);
+    let eng = seg_engine(5, None);
+    let report = rp.run(&eng, Timing::Fast).unwrap();
+    eng.shutdown();
+    assert!(report.is_clean(), "diverged: {:?}", report.divergences);
+    assert_eq!(report.matched, 16);
+}
+
+#[test]
+fn seg_replay_against_wrong_weights_diverges() {
+    let events = record_seg_run(5, 6);
+    let rp = Replayer::from_parts(seg_header(5), events);
+    let eng = seg_engine(6, None); // different weight seed
+    let report = rp.run(&eng, Timing::Fast).unwrap();
+    eng.shutdown();
+    assert!(!report.is_clean(),
+            "different weights must not reproduce mask checksums");
+}
+
+#[test]
+fn non_canonical_image_is_rejected_at_record_time() {
+    // a tensor that is not Tensor::randn(shape, Rng::new(seed)) cannot
+    // be stored as (shape, seed, checksum); recording must reject it at
+    // submit — the fault site — instead of minting an unreplayable trace
+    let sink = Arc::new(TraceSink::new());
+    let eng = seg_engine(5, Some(sink.clone()));
+    let mut img = Tensor::randn(&[1, 9, 9, 2], &mut Rng::new(42));
+    img.data_mut()[0] += 1.0; // no longer the canonical synthesis
+    let err = eng.submit("seg", Payload::image(img.clone(), 42))
+        .unwrap_err().to_string();
+    assert!(err.contains("canonical synthesis"), "{err}");
+    // the same canonical image IS recordable...
+    let ok = Tensor::randn(&[1, 9, 9, 2], &mut Rng::new(42));
+    eng.submit("seg", Payload::image(ok, 42)).unwrap().recv().unwrap();
+    eng.shutdown();
+    // ...and without a sink, non-canonical images serve fine
+    let eng = seg_engine(5, None);
+    eng.submit("seg", Payload::image(img, 42)).unwrap().recv().unwrap();
+    eng.shutdown();
+}
+
+#[test]
+fn tampered_input_checksum_fails_reconstruction() {
+    let mut events = record_seg_run(5, 4);
+    for e in &mut events {
+        if let EventBody::RequestArrival {
+            payload: ArrivalPayload::Image { checksum, .. }, ..
+        } = &mut e.body
+        {
+            *checksum ^= 1;
+            break;
+        }
+    }
+    let rp = Replayer::from_parts(seg_header(5), events);
+    let eng = seg_engine(5, None);
+    let err = rp.run(&eng, Timing::Fast).unwrap_err().to_string();
+    eng.shutdown();
+    assert!(err.contains("reconstruction checksum mismatch"), "{err}");
+}
+
+#[test]
+fn seg_trace_file_round_trips_through_codec() {
+    let events = record_seg_run(7, 5);
+    let path = std::env::temp_dir().join(format!(
+        "huge2_seg_trace_{}.jsonl",
+        std::process::id()
+    ));
+    codec::write_trace(&path, &seg_header(7), &events).unwrap();
+    let rp = Replayer::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(rp.header(), &seg_header(7));
+    assert_eq!(rp.arrival_count(), 5);
+    let eng = seg_engine(7, None);
+    let report = rp.run(&eng, Timing::Fast).unwrap();
+    eng.shutdown();
+    assert!(report.is_clean(), "diverged: {:?}", report.divergences);
+}
+
+// ------------------------------------------------------------- v1 compat
+
+/// A v1 GAN trace (recorded before trace format v2 existed) must still
+/// load and replay cleanly: v1 headers decode with task="generate" and
+/// latent arrival events are byte-identical across versions.
+#[test]
+fn v1_gan_trace_still_replays_cleanly() {
+    // record a latent workload with today's engine...
+    let cfg = EngineConfig {
+        workers: 2,
+        queue_depth: 64,
+        max_batch: 4,
+        batch_timeout_us: 500,
+        ..EngineConfig::default()
+    };
+    let build = || Engine::new(cfg.clone());
+    let sink = Arc::new(TraceSink::new());
+    let mut eng = build();
+    eng.set_trace_sink(sink.clone()).unwrap();
+    eng.register_native(Model::native(
+        "tiny", Arc::new(Generator::tiny_cgan(5)), 0)).unwrap();
+    let mut rng = Rng::new(1234);
+    let mut pending = Vec::new();
+    for _ in 0..8 {
+        let z: Vec<f32> = (0..8).map(|_| rng.next_normal()).collect();
+        pending.push(eng.submit("tiny", Payload::latent(z, vec![]))
+            .unwrap());
+    }
+    for rx in pending {
+        rx.recv().unwrap();
+    }
+    eng.shutdown();
+
+    // ...then write it as a *v1* file: v1 header line + the event lines
+    // (latent events encode identically in v1 and v2)
+    let path = std::env::temp_dir().join(format!(
+        "huge2_v1_trace_{}.jsonl",
+        std::process::id()
+    ));
+    let mut text = String::from(
+        "{\"huge2_trace\":1,\"model\":\"tiny\",\"backend\":\"native\",\
+         \"seed\":5,\"z_dim\":8,\"cond_dim\":0}\n");
+    for e in sink.snapshot() {
+        text.push_str(&codec::encode_event(&e));
+        text.push('\n');
+    }
+    std::fs::write(&path, &text).unwrap();
+
+    let rp = Replayer::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(rp.header().task, "generate");
+    assert_eq!(rp.header().net, "");
+    assert_eq!(rp.arrival_count(), 8);
+    let mut eng = build();
+    eng.register_native(Model::native(
+        "tiny", Arc::new(Generator::tiny_cgan(rp.header().seed)), 0))
+        .unwrap();
+    let report = rp.run(&eng, Timing::Fast).unwrap();
+    eng.shutdown();
+    assert!(report.is_clean(), "v1 trace diverged: {:?}",
+            report.divergences);
+    assert_eq!(report.matched, 8);
+}
