@@ -58,6 +58,94 @@ fn closed_loop(eng: &Arc<Engine>, model: &str, z_dim: usize,
     )
 }
 
+/// Workspace-reuse phase (DESIGN.md §9): the same tiny-cGAN batch
+/// workload run with a **fresh workspace per batch** (the pre-refactor
+/// allocation behavior: every batch pays its scratch allocations) vs
+/// **one reused workspace** (steady state: pool misses only during the
+/// warmup batch). Reports allocations/batch before vs after, and
+/// asserts the outputs are bit-identical.
+fn workspace_reuse_phase(quick: bool) {
+    use huge2::gan::Engine as GanEngine;
+    use huge2::workspace::Workspace;
+
+    let batches = if quick { 4 } else { 16 };
+    let batch = 4usize;
+    let gen = Generator::tiny_cgan(9);
+    let mut rng = Rng::new(3);
+    let zs: Vec<huge2::tensor::Tensor> = (0..batches)
+        .map(|_| {
+            let data: Vec<f32> =
+                (0..batch * 8).map(|_| rng.next_normal()).collect();
+            huge2::tensor::Tensor::from_vec(&[batch, 8], data)
+        })
+        .collect();
+
+    println!("\n== workspace reuse: allocations/batch, fresh-per-batch \
+              (before) vs reused pool (after) ==\n");
+    let mut t = Table::new(&["mode", "batches", "alloc B/batch",
+                             "miss/batch", "wall", "checksum"]);
+
+    // before: a fresh workspace per batch — every batch re-allocates
+    let mut fresh_bytes = 0u64;
+    let mut fresh_misses = 0u64;
+    let mut fresh_sum = 0u64;
+    let t0 = Instant::now();
+    for z in &zs {
+        let ws = Workspace::new();
+        let out = gen.forward_ws(z, GanEngine::Huge2, &mut ws.handle());
+        fresh_sum ^= out.checksum();
+        let c = ws.counters();
+        fresh_bytes += c.bytes_allocated;
+        fresh_misses += c.pool_misses;
+    }
+    let t_fresh = t0.elapsed();
+    t.row(&[
+        "fresh per batch (before)".into(),
+        batches.to_string(),
+        format!("{}", fresh_bytes / batches as u64),
+        format!("{:.1}", fresh_misses as f64 / batches as f64),
+        fmt_dur(t_fresh),
+        format!("{fresh_sum:016x}"),
+    ]);
+
+    // after: one reused workspace — warmup batch allocates, rest hit
+    let ws = Workspace::new();
+    let mut hnd = ws.handle();
+    let mut reused_sum = 0u64;
+    let t0 = Instant::now();
+    reused_sum ^= gen.forward_ws(&zs[0], GanEngine::Huge2, &mut hnd)
+        .checksum();
+    let warm = ws.counters();
+    for z in &zs[1..] {
+        reused_sum ^= gen.forward_ws(z, GanEngine::Huge2, &mut hnd)
+            .checksum();
+    }
+    let t_reused = t0.elapsed();
+    let steady = ws.counters();
+    let steady_batches = (batches - 1).max(1) as u64;
+    t.row(&[
+        "reused pool (after)".into(),
+        batches.to_string(),
+        format!("{} (warmup {})",
+                (steady.bytes_allocated - warm.bytes_allocated)
+                    / steady_batches,
+                warm.bytes_allocated),
+        format!("{:.1}",
+                (steady.pool_misses - warm.pool_misses) as f64
+                    / steady_batches as f64),
+        fmt_dur(t_reused),
+        format!("{reused_sum:016x}"),
+    ]);
+    t.print();
+    assert_eq!(fresh_sum, reused_sum,
+               "pooled batches must be bit-identical to fresh");
+    assert_eq!(steady.bytes_allocated, warm.bytes_allocated,
+               "steady batches must not allocate");
+    println!("(steady-state allocations/batch must be 0 — the \
+              workspace_stack.rs regression test pins the same \
+              invariant through the serving engine)");
+}
+
 /// Replay-driven regression entry: record one bursty native serve run,
 /// then re-drive the identical workload twice in fast mode against fresh
 /// engines. Divergence aborts the bench — a perf number from an engine
@@ -248,6 +336,7 @@ fn main() {
     let quick = std::env::var("BENCH_QUICK").is_ok();
     let per_client = if quick { 2 } else { 6 };
 
+    workspace_reuse_phase(quick);
     replay_regression(quick);
     seg_replay_regression(quick);
 

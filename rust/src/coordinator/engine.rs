@@ -11,6 +11,7 @@ use crate::config::EngineConfig;
 use crate::metrics::{Counters, Histogram};
 use crate::replay::event::EventBody;
 use crate::replay::recorder::TraceSink;
+use crate::workspace::{Workspace, WorkspaceCounters};
 
 use super::queue::{BoundedQueue, PushError};
 use super::router::{Model, Payload, Request, Response};
@@ -64,6 +65,10 @@ pub struct Engine {
     /// Record/replay hook: when set, every arrival/enqueue/reject (here)
     /// and batch/response (workers) is appended to the trace.
     sink: Option<Arc<TraceSink>>,
+    /// Shared buffer pool; every worker thread holds a per-thread handle
+    /// over it, so steady-state batch execution is allocation-free
+    /// (DESIGN.md §9). [`Engine::workspace_counters`] exposes the proof.
+    workspace: Arc<Workspace>,
 }
 
 impl Engine {
@@ -75,7 +80,16 @@ impl Engine {
             counters: Arc::new(Counters::new()),
             exec_hist: Arc::new(Histogram::new()),
             sink: None,
+            workspace: Arc::new(Workspace::new()),
         }
+    }
+
+    /// Snapshot of the shared workspace's allocation counters. After the
+    /// per-worker warmup batches, `bytes_allocated` must stay flat — the
+    /// zero-steady-state-allocation invariant
+    /// (`tests/workspace_stack.rs`).
+    pub fn workspace_counters(&self) -> WorkspaceCounters {
+        self.workspace.counters()
     }
 
     /// Install a recording sink (see [`crate::replay`]). Must be called
@@ -114,7 +128,7 @@ impl Engine {
         let workers = spawn_workers(
             model.clone(), queue.clone(), self.cfg.clone(),
             self.counters.clone(), self.exec_hist.clone(),
-            self.sink.clone(), self.cfg.workers);
+            self.sink.clone(), self.workspace.clone(), self.cfg.workers);
         self.models
             .insert(name, ModelRuntime { model, queue, workers });
         Ok(())

@@ -10,6 +10,7 @@ use crate::gan::Engine as NativeEngine;
 use crate::replay::event::EventBody;
 use crate::replay::recorder::TraceSink;
 use crate::tensor::Tensor;
+use crate::workspace::{Workspace, WsHandle};
 
 use super::router::{Backend, Model, Payload, Request, Response};
 
@@ -24,12 +25,16 @@ use super::router::{Backend, Model, Payload, Request, Response};
 /// With a recording `sink`, each reply's output checksum is recorded as a
 /// `Response` event *before* the send, so the trace is complete even if
 /// the client races the recorder to shutdown.
+/// `hnd` is the executing worker's workspace handle: native forwards
+/// draw padded-batch latents, batch image gathers, activations and GEMM
+/// scratch from it, so steady-state batches allocate nothing but the
+/// per-request reply tensors (DESIGN.md §9).
 pub fn execute_batch(model: &Model, batch: Vec<Request>,
-                     sink: Option<&TraceSink>,
+                     sink: Option<&TraceSink>, hnd: &mut WsHandle,
                      before_reply: impl FnOnce(usize)) -> Result<usize> {
     let n = batch.len();
     let bucket = model.bucket_for(n);
-    let out = run_forward(model, &batch, bucket)?;
+    let out = run_forward(model, &batch, bucket, hnd)?;
     before_reply(n);
     let (_, h, w, c) = out.dims4();
     let elems = h * w * c;
@@ -57,18 +62,26 @@ pub fn execute_batch(model: &Model, batch: Vec<Request>,
     Ok(bucket)
 }
 
+/// Destructure a generate request's latent (+ conditioning) payload —
+/// the one copy of the payload-kind check both backends share. Kinds
+/// were validated at submit; a mismatch here is an engine bug.
+fn latent_parts<'a>(model: &Model, r: &'a Request)
+                    -> Result<(&'a [f32], &'a [f32])> {
+    match &r.payload {
+        Payload::Latent { z, cond } => Ok((z, cond)),
+        other => Err(anyhow!("{}: generate batch got a {} payload",
+                             model.name, other.kind())),
+    }
+}
+
 /// Pull the latent (+ conditioning) matrices out of a generate batch,
-/// zero-padded to `bucket` rows. Payload kinds were validated at submit;
-/// a mismatch here is an engine bug.
+/// zero-padded to `bucket` rows (the PJRT input form).
 fn gather_latents(model: &Model, batch: &[Request], bucket: usize)
                   -> Result<(Tensor, Option<Tensor>)> {
     let mut z = vec![0.0f32; bucket * model.z_dim];
     let mut y = vec![0.0f32; bucket * model.cond_dim];
     for (i, r) in batch.iter().enumerate() {
-        let Payload::Latent { z: rz, cond } = &r.payload else {
-            return Err(anyhow!("{}: generate batch got a {} payload",
-                               model.name, r.payload.kind()));
-        };
+        let (rz, cond) = latent_parts(model, r)?;
         z[i * model.z_dim..(i + 1) * model.z_dim].copy_from_slice(rz);
         if model.cond_dim > 0 {
             y[i * model.cond_dim..(i + 1) * model.cond_dim]
@@ -82,8 +95,8 @@ fn gather_latents(model: &Model, batch: &[Request], bucket: usize)
 }
 
 /// One fused forward pass at `bucket` batch size.
-fn run_forward(model: &Model, batch: &[Request], bucket: usize)
-               -> Result<Tensor> {
+fn run_forward(model: &Model, batch: &[Request], bucket: usize,
+               hnd: &mut WsHandle) -> Result<Tensor> {
     let n = batch.len();
     debug_assert!(bucket >= n || matches!(model.backend,
                                           Backend::Pjrt(_)));
@@ -91,7 +104,7 @@ fn run_forward(model: &Model, batch: &[Request], bucket: usize)
     if bucket < n {
         let mut parts: Vec<Tensor> = Vec::new();
         for chunk in batch.chunks(bucket) {
-            parts.push(run_forward(model, chunk, bucket)?);
+            parts.push(run_forward(model, chunk, bucket, hnd)?);
         }
         // concatenate along batch dim
         let (_, h, w, c) = parts[0].dims4();
@@ -119,46 +132,75 @@ fn run_forward(model: &Model, batch: &[Request], bucket: usize)
                 .ok_or_else(|| anyhow!("{name}: no output"))
         }
         Backend::Native(gen) => {
-            let (zt, cond) = gather_latents(model, batch, bucket)?;
-            // native path concatenates conditioning onto z
-            let zin = match &cond {
-                None => zt,
-                Some(c) => {
-                    let zd = model.z_dim + model.cond_dim;
-                    let mut data = vec![0.0f32; bucket * zd];
-                    for i in 0..bucket {
-                        data[i * zd..i * zd + model.z_dim].copy_from_slice(
-                            &zt.data()[i * model.z_dim
-                                ..(i + 1) * model.z_dim]);
-                        data[i * zd + model.z_dim..(i + 1) * zd]
-                            .copy_from_slice(
-                                &c.data()[i * model.cond_dim
-                                    ..(i + 1) * model.cond_dim]);
+            // Padded-batch latent buffer: pooled, zeroed (zero rows pad
+            // the batch up to `bucket`), reused across batches. On a
+            // gather error the buffer is checked back in, not dropped —
+            // an error path must not shrink the pool.
+            let zd = model.z_dim + model.cond_dim;
+            let mut zin = hnd.checkout_zeroed(bucket * zd);
+            let mut gather_err = None;
+            for (i, r) in batch.iter().enumerate() {
+                match latent_parts(model, r) {
+                    Ok((z, cond)) => {
+                        zin[i * zd..i * zd + model.z_dim]
+                            .copy_from_slice(z);
+                        if model.cond_dim > 0 {
+                            zin[i * zd + model.z_dim..(i + 1) * zd]
+                                .copy_from_slice(cond);
+                        }
                     }
-                    Tensor::from_vec(&[bucket, zd], data)
+                    Err(e) => {
+                        gather_err = Some(e);
+                        break;
+                    }
                 }
-            };
-            Ok(gen.forward(&zin, NativeEngine::Huge2))
+            }
+            if let Some(e) = gather_err {
+                hnd.checkin(zin);
+                return Err(e);
+            }
+            let mut out = Tensor::zeros(&gen.out_shape(bucket));
+            gen.forward_into(&zin, bucket, NativeEngine::Huge2,
+                             out.data_mut(), hnd);
+            hnd.checkin(zin);
+            Ok(out)
         }
         Backend::NativeSeg(net) => {
             // Stack the (1, H, W, C) request images into one (n, H, W, C)
-            // batch. Native buckets are exact (bucket == n), so there is
-            // no padding; per-image compute is independent, so outputs
-            // stay batch-composition-invariant (DESIGN.md §8).
+            // batch (pooled gather buffer — fully overwritten). Native
+            // buckets are exact (bucket == n), so there is no padding;
+            // per-image compute is independent, so outputs stay
+            // batch-composition-invariant (DESIGN.md §8).
             let (h, w, c) =
                 (model.in_shape[1], model.in_shape[2], model.in_shape[3]);
-            let mut data = Vec::with_capacity(n * h * w * c);
-            for r in batch {
-                let Payload::Image { tensor, .. } = &r.payload else {
-                    return Err(anyhow!(
-                        "{}: segment batch got a {} payload", model.name,
-                        r.payload.kind()));
-                };
-                data.extend_from_slice(tensor.data());
+            let mut xb = hnd.checkout(n * h * w * c);
+            let mut gather_err = None;
+            for (i, r) in batch.iter().enumerate() {
+                match &r.payload {
+                    Payload::Image { tensor, .. } => {
+                        xb[i * h * w * c..(i + 1) * h * w * c]
+                            .copy_from_slice(tensor.data());
+                    }
+                    other => {
+                        gather_err = Some(anyhow!(
+                            "{}: segment batch got a {} payload",
+                            model.name, other.kind()));
+                        break;
+                    }
+                }
             }
-            let x = Tensor::from_vec(&[n, h, w, c], data);
-            let logits = net.forward(&x);
-            Ok(crate::seg::argmax_mask(&logits))
+            if let Some(e) = gather_err {
+                hnd.checkin(xb);
+                return Err(e);
+            }
+            let ls = net.logits_shape(n);
+            let mut logits = hnd.checkout(ls.iter().product());
+            net.forward_into(&xb, n, None, &mut logits, hnd);
+            let mask = crate::seg::argmax_mask_from(&logits, ls[0], ls[1],
+                                                    ls[2], ls[3]);
+            hnd.checkin(xb);
+            hnd.checkin(logits);
+            Ok(mask)
         }
     }
 }
@@ -167,6 +209,12 @@ fn run_forward(model: &Model, batch: &[Request], bucket: usize)
 ///
 /// A `sink`, when present, observes every batch the workers form and
 /// execute (plus per-reply `Response` events from [`execute_batch`]).
+/// Each worker thread holds a [`WsHandle`] over the engine's shared
+/// `workspace` for its whole lifetime: after the first (warmup) batch of
+/// a given shape, every buffer checkout is a hit on the thread's local
+/// cache and steady-state serving allocates nothing
+/// (`tests/workspace_stack.rs` pins this).
+#[allow(clippy::too_many_arguments)]
 pub fn spawn_workers(
     model: Arc<Model>,
     queue: Arc<super::queue::BoundedQueue<Request>>,
@@ -174,6 +222,7 @@ pub fn spawn_workers(
     counters: Arc<crate::metrics::Counters>,
     hist: Arc<crate::metrics::Histogram>,
     sink: Option<Arc<TraceSink>>,
+    workspace: Arc<Workspace>,
     count: usize,
 ) -> Vec<std::thread::JoinHandle<()>> {
     (0..count)
@@ -183,10 +232,12 @@ pub fn spawn_workers(
             let counters = counters.clone();
             let hist = hist.clone();
             let sink = sink.clone();
+            let workspace = workspace.clone();
             let timeout =
                 std::time::Duration::from_micros(cfg.batch_timeout_us);
             let max_batch = cfg.max_batch;
             std::thread::spawn(move || {
+                let mut hnd = workspace.handle();
                 while let Some(batch) =
                     super::batcher::next_batch(&queue, max_batch, timeout)
                 {
@@ -202,7 +253,8 @@ pub fn spawn_workers(
                     }
                     let t0 = Instant::now();
                     let res = execute_batch(&model, batch,
-                                            sink.as_deref(), |n| {
+                                            sink.as_deref(), &mut hnd,
+                                            |n| {
                         use std::sync::atomic::Ordering::Relaxed;
                         counters.batches.fetch_add(1, Relaxed);
                         counters.batched_requests.fetch_add(n as u64,

@@ -9,9 +9,10 @@
 //! full inflated geometry; DarkNet phrases it as GEMM+col2im, which touches
 //! the same bytes in the adjoint order).
 
-use crate::gemm::sgemm;
-use crate::im2col::im2col;
+use crate::gemm::sgemm_with;
+use crate::im2col::im2col_into;
 use crate::tensor::Tensor;
+use crate::workspace::{Workspace, WsHandle};
 
 use super::{DeconvParams, DilatedParams};
 
@@ -26,89 +27,175 @@ pub fn inflate(x: &Tensor, r: usize, s: usize, p: &DeconvParams) -> Tensor {
     let (lo_h, hi_h) = p.inflate_pad(r);
     let (lo_w, hi_w) = p.inflate_pad(s);
     let mut out = Tensor::zeros(&[b, ih + lo_h + hi_h, iw + lo_w + hi_w, c]);
-    let wo = iw + lo_w + hi_w;
-    let xd = x.data();
-    let od = out.data_mut();
+    inflate_into(x.data(), b, h, w, c, r, s, p, out.data_mut());
+    out
+}
+
+/// [`inflate`] over raw slices into caller-owned scratch. Fully
+/// overwrites `dst` (the inserted zeros are written explicitly), so a
+/// dirty workspace slab is safe. Returns the padded `(ih, iw)`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn inflate_into(xd: &[f32], b: usize, h: usize, w: usize,
+                           c: usize, r: usize, s: usize, p: &DeconvParams,
+                           dst: &mut [f32]) -> (usize, usize) {
+    let st = p.stride;
+    let (lo_h, hi_h) = p.inflate_pad(r);
+    let (lo_w, hi_w) = p.inflate_pad(s);
+    let ih = (h - 1) * st + 1 + lo_h + hi_h;
+    let iw = (w - 1) * st + 1 + lo_w + hi_w;
+    assert_eq!(dst.len(), b * ih * iw * c, "inflated size");
+    dst.fill(0.0);
     for bi in 0..b {
         for hi in 0..h {
             for wi in 0..w {
                 let src = ((bi * h + hi) * w + wi) * c;
-                let dst = ((bi * (ih + lo_h + hi_h) + lo_h + hi * st) * wo
-                    + lo_w + wi * st) * c;
-                od[dst..dst + c].copy_from_slice(&xd[src..src + c]);
+                let d = ((bi * ih + lo_h + hi * st) * iw + lo_w + wi * st)
+                    * c;
+                dst[d..d + c].copy_from_slice(&xd[src..src + c]);
             }
         }
     }
-    out
+    (ih, iw)
 }
 
 /// Naive transposed convolution: inflate → im2col → GEMM.
 ///
 /// `x`: NHWC `(B,H,W,C)`; `k`: HWIO `(R,S,C,N)`; output `(B,Ho,Wo,N)`.
 pub fn conv2d_transpose(x: &Tensor, k: &Tensor, p: &DeconvParams) -> Tensor {
-    let (b, h, w, _c) = x.dims4();
+    let ws = Workspace::new();
+    conv2d_transpose_ws(x, k, p, &mut ws.handle())
+}
+
+/// [`conv2d_transpose`] drawing the inflated tensor and column matrix
+/// from a workspace handle (bit-identical; DESIGN.md §9).
+pub fn conv2d_transpose_ws(x: &Tensor, k: &Tensor, p: &DeconvParams,
+                           h: &mut WsHandle) -> Tensor {
+    let (b, ih, iw, c) = x.dims4();
+    let (r, s, _kc, n) = k.dims4();
+    let ho = p.out_size(ih, r);
+    let wo = p.out_size(iw, s);
+    let mut out = Tensor::zeros(&[b, ho, wo, n]);
+    transpose_into(x.data(), b, ih, iw, c, k, p, out.data_mut(), h);
+    out
+}
+
+/// Slice-level core of the naive transposed conv: `out` (length
+/// `b·ho·wo·n`) is fully overwritten; all scratch comes from `hnd`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn transpose_into(xd: &[f32], b: usize, h: usize, w: usize,
+                             c: usize, k: &Tensor, p: &DeconvParams,
+                             out: &mut [f32], hnd: &mut WsHandle) {
     let (r, s, kc, n) = k.dims4();
+    assert_eq!(c, kc, "channel mismatch");
     let ho = p.out_size(h, r);
     let wo = p.out_size(w, s);
-    let inflated = inflate(x, r, s, p);
-    let (_, ih, iw, _) = inflated.dims4();
-    let mut out = Tensor::zeros(&[b, ho, wo, n]);
+    assert_eq!(out.len(), b * ho * wo * n, "output size");
+    let st = p.stride;
+    let (lo_h, hi_h) = p.inflate_pad(r);
+    let (lo_w, hi_w) = p.inflate_pad(s);
+    let ih = (h - 1) * st + 1 + lo_h + hi_h;
+    let iw = (w - 1) * st + 1 + lo_w + hi_w;
+    let mut inflated = hnd.checkout(b * ih * iw * c);
+    inflate_into(xd, b, h, w, c, r, s, p, &mut inflated);
+    let mut col = hnd.checkout(ho * wo * r * s * c);
     let kmat = k.data(); // (R*S*C, N) row-major — exactly HWIO flattened
     for bi in 0..b {
-        let img = Tensor::from_vec(
-            &[1, ih, iw, inflated.shape()[3]],
-            inflated.data()[bi * ih * iw * kc..(bi + 1) * ih * iw * kc]
-                .to_vec(),
-        );
-        let (col, oh2, ow2) = im2col(&img, r, s, 1, 0);
-        debug_assert_eq!((oh2, ow2), (ho, wo));
-        let dst = &mut out.data_mut()[bi * ho * wo * n..(bi + 1) * ho * wo * n];
-        sgemm(ho * wo, n, r * s * kc, col.data(), kmat, dst, false);
+        let img = &inflated[bi * ih * iw * c..(bi + 1) * ih * iw * c];
+        let dims = im2col_into(img, ih, iw, c, r, s, 1, 0, &mut col);
+        debug_assert_eq!(dims, (ho, wo));
+        let dst = &mut out[bi * ho * wo * n..(bi + 1) * ho * wo * n];
+        sgemm_with(hnd, ho * wo, n, r * s * c, &col, kmat, dst, false);
     }
-    out
+    hnd.checkin(inflated);
+    hnd.checkin(col);
 }
 
 /// Naive standard convolution (im2col + GEMM) — used by the discriminator
 /// forward and as the substrate of the naive dilated path.
 pub fn conv2d(x: &Tensor, k: &Tensor, stride: usize, pad: usize) -> Tensor {
-    let (b, h, w, c) = x.dims4();
+    let ws = Workspace::new();
+    conv2d_ws(x, k, stride, pad, &mut ws.handle())
+}
+
+/// [`conv2d`] drawing its column matrix from a workspace handle.
+pub fn conv2d_ws(x: &Tensor, k: &Tensor, stride: usize, pad: usize,
+                 h: &mut WsHandle) -> Tensor {
+    let (b, ih, iw, c) = x.dims4();
     let (r, s, kc, n) = k.dims4();
     assert_eq!(c, kc, "channel mismatch");
+    let ho = (ih + 2 * pad - r) / stride + 1;
+    let wo = (iw + 2 * pad - s) / stride + 1;
+    let mut out = Tensor::zeros(&[b, ho, wo, n]);
+    conv2d_into(x.data(), b, ih, iw, c, k.data(), r, s, n, stride, pad,
+                out.data_mut(), h);
+    out
+}
+
+/// Slice-level core of the standard conv: the kernel arrives as its HWIO
+/// flattening `(R·S·C, N)` so the dilated path can hand over a
+/// workspace-built dilated kernel without a `Tensor` detour.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn conv2d_into(xd: &[f32], b: usize, h: usize, w: usize,
+                          c: usize, kmat: &[f32], r: usize, s: usize,
+                          n: usize, stride: usize, pad: usize,
+                          out: &mut [f32], hnd: &mut WsHandle) {
+    assert_eq!(kmat.len(), r * s * c * n, "kernel size");
     let ho = (h + 2 * pad - r) / stride + 1;
     let wo = (w + 2 * pad - s) / stride + 1;
-    let mut out = Tensor::zeros(&[b, ho, wo, n]);
+    assert_eq!(out.len(), b * ho * wo * n, "output size");
+    let mut col = hnd.checkout(ho * wo * r * s * c);
     for bi in 0..b {
-        let img = Tensor::from_vec(
-            &[1, h, w, c],
-            x.data()[bi * h * w * c..(bi + 1) * h * w * c].to_vec(),
-        );
-        let (col, _, _) = im2col(&img, r, s, stride, pad);
-        let dst = &mut out.data_mut()[bi * ho * wo * n..(bi + 1) * ho * wo * n];
-        sgemm(ho * wo, n, r * s * c, col.data(), k.data(), dst, false);
+        let img = &xd[bi * h * w * c..(bi + 1) * h * w * c];
+        im2col_into(img, h, w, c, r, s, stride, pad, &mut col);
+        let dst = &mut out[bi * ho * wo * n..(bi + 1) * ho * wo * n];
+        sgemm_with(hnd, ho * wo, n, r * s * c, &col, kmat, dst, false);
     }
-    out
+    hnd.checkin(col);
 }
 
 /// Naive dilated convolution: materialise the zero-dilated kernel, then a
 /// dense standard convolution over it (paper Alg. 2 as implemented by
 /// engines without atrous support).
 pub fn conv2d_dilated(x: &Tensor, k: &Tensor, p: &DilatedParams) -> Tensor {
-    let (r, s, c, n) = k.dims4();
+    let ws = Workspace::new();
+    conv2d_dilated_ws(x, k, p, &mut ws.handle())
+}
+
+/// [`conv2d_dilated`] drawing the dilated kernel and column matrix from
+/// a workspace handle.
+pub fn conv2d_dilated_ws(x: &Tensor, k: &Tensor, p: &DilatedParams,
+                         h: &mut WsHandle) -> Tensor {
+    let (b, ih, iw, c) = x.dims4();
+    let (r, s, _, n) = k.dims4();
+    let ho = p.out_size(ih, r);
+    let wo = p.out_size(iw, s);
+    let mut out = Tensor::zeros(&[b, ho, wo, n]);
+    conv2d_dilated_into(x.data(), b, ih, iw, c, k, p, out.data_mut(), h);
+    out
+}
+
+/// Slice-level core of the naive dilated conv.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn conv2d_dilated_into(xd: &[f32], b: usize, h: usize,
+                                  w: usize, c: usize, k: &Tensor,
+                                  p: &DilatedParams, out: &mut [f32],
+                                  hnd: &mut WsHandle) {
+    let (r, s, kc, n) = k.dims4();
+    assert_eq!(c, kc, "channel mismatch");
     let d = p.dilation;
     let er = (r - 1) * d + 1;
     let es = (s - 1) * d + 1;
-    let mut dk = Tensor::zeros(&[er, es, c, n]);
+    let mut dk = hnd.checkout_zeroed(er * es * c * n);
+    let kd = k.data();
     for m in 0..r {
         for nn in 0..s {
-            for ci in 0..c {
-                for ni in 0..n {
-                    let v = k.at(&[m, nn, ci, ni]);
-                    dk.set(&[m * d, nn * d, ci, ni], v);
-                }
-            }
+            let src = (m * s + nn) * c * n;
+            let dst = (m * d * es + nn * d) * c * n;
+            dk[dst..dst + c * n].copy_from_slice(&kd[src..src + c * n]);
         }
     }
-    conv2d(x, &dk, p.stride, p.pad)
+    conv2d_into(xd, b, h, w, c, &dk, er, es, n, p.stride, p.pad, out, hnd);
+    hnd.checkin(dk);
 }
 
 #[cfg(test)]

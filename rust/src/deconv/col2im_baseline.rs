@@ -17,8 +17,9 @@
 //! * zero-insertion baseline → measures the *zero-skipping* win,
 //! * col2im baseline        → measures the *scatter/locality* win.
 
-use crate::gemm::sgemm;
+use crate::gemm::sgemm_with;
 use crate::tensor::Tensor;
+use crate::workspace::{Workspace, WsHandle};
 
 use super::DeconvParams;
 
@@ -27,6 +28,15 @@ use super::DeconvParams;
 /// `x`: NHWC `(B,H,W,C)`; `k`: HWIO `(R,S,C,N)`; output `(B,Ho,Wo,N)`.
 /// Numerically identical to the other two engines.
 pub fn conv2d_transpose(x: &Tensor, k: &Tensor, p: &DeconvParams) -> Tensor {
+    let ws = Workspace::new();
+    conv2d_transpose_ws(x, k, p, &mut ws.handle())
+}
+
+/// [`conv2d_transpose`] drawing `Kᵀ`, the col matrix and the `Xᵀ` buffer
+/// from a workspace handle (all three are fully overwritten before use,
+/// so dirty slabs are safe; bit-identical — DESIGN.md §9).
+pub fn conv2d_transpose_ws(x: &Tensor, k: &Tensor, p: &DeconvParams,
+                           hnd: &mut WsHandle) -> Tensor {
     let (b, h, w, c) = x.dims4();
     let (r, s, kc, n) = k.dims4();
     assert_eq!(c, kc);
@@ -37,8 +47,8 @@ pub fn conv2d_transpose(x: &Tensor, k: &Tensor, p: &DeconvParams) -> Tensor {
     let st = p.stride;
 
     // Kᵀ: (R·S·N, C) — reorganised once (model-load cost, same treatment
-    // as HUGE²'s decomposition).
-    let mut kt = vec![0.0f32; r * s * n * c];
+    // as HUGE²'s decomposition). Every element written → dirty-safe.
+    let mut kt = hnd.checkout(r * s * n * c);
     for m in 0..r {
         for nn in 0..s {
             for ci in 0..c {
@@ -51,9 +61,9 @@ pub fn conv2d_transpose(x: &Tensor, k: &Tensor, p: &DeconvParams) -> Tensor {
     }
 
     let mut out = Tensor::zeros(&[b, ho, wo, n]);
-    let mut col = vec![0.0f32; r * s * n * h * w];
+    let mut col = hnd.checkout(r * s * n * h * w);
     // Xᵀ buffer: (C, H·W) per image.
-    let mut xt = vec![0.0f32; c * h * w];
+    let mut xt = hnd.checkout(c * h * w);
     for bi in 0..b {
         let img = &x.data()[bi * h * w * c..(bi + 1) * h * w * c];
         for pix in 0..h * w {
@@ -62,7 +72,7 @@ pub fn conv2d_transpose(x: &Tensor, k: &Tensor, p: &DeconvParams) -> Tensor {
             }
         }
         // col(R·S·N, H·W) = Kᵀ · X
-        sgemm(r * s * n, h * w, c, &kt, &xt, &mut col, false);
+        sgemm_with(hnd, r * s * n, h * w, c, &kt, &xt, &mut col, false);
         // col2im: overlapped scatter-add into the output
         let od = &mut out.data_mut()[bi * ho * wo * n
             ..(bi + 1) * ho * wo * n];
@@ -94,6 +104,9 @@ pub fn conv2d_transpose(x: &Tensor, k: &Tensor, p: &DeconvParams) -> Tensor {
             }
         }
     }
+    hnd.checkin(kt);
+    hnd.checkin(col);
+    hnd.checkin(xt);
     out
 }
 

@@ -6,10 +6,11 @@
 //! element stride is `stride·C`, which [`crate::gemm::sgemm_strided`]
 //! absorbs during packing — still zero copies.
 
-use crate::gemm::{sgemm_prepacked, sgemm_strided, PackedB};
+use crate::gemm::{sgemm_prepacked_with, sgemm_strided_with, PackedB};
 use crate::tensor::Tensor;
+use crate::workspace::{Workspace, WsHandle};
 
-use super::DilatedParams;
+use super::{pad_spatial_into, DilatedParams};
 
 /// A dilated kernel's `R·S` taps, each pre-packed into GEMM micro-kernel
 /// layout — the dilated-path analogue of [`super::huge2::decompose`]:
@@ -38,17 +39,20 @@ pub fn pack_taps(k: &Tensor) -> DilatedTaps {
 /// HUGE² dilated convolution. `x`: NHWC; `k`: HWIO `(R,S,C,N)`.
 /// Numerically identical to [`super::baseline::conv2d_dilated`].
 pub fn conv2d_dilated(x: &Tensor, k: &Tensor, p: &DilatedParams) -> Tensor {
+    let ws = Workspace::new();
+    let hnd = &mut ws.handle();
     let (b, h, w, c) = x.dims4();
     let (r, s, kc, n) = k.dims4();
     assert_eq!(c, kc);
     let ho = p.out_size(h, r);
     let wo = p.out_size(w, s);
-    let xp = x.pad_spatial(p.pad, p.pad, p.pad, p.pad);
-    let (_, hp, wp, _) = xp.dims4();
+    let mut xp = hnd.checkout(b * (h + 2 * p.pad) * (w + 2 * p.pad) * c);
+    let (hp, wp) = pad_spatial_into(x.data(), b, h, w, c, p.pad, p.pad,
+                                    p.pad, p.pad, &mut xp);
     let mut out = Tensor::zeros(&[b, ho, wo, n]);
 
     for bi in 0..b {
-        let img = &xp.data()[bi * hp * wp * c..(bi + 1) * hp * wp * c];
+        let img = &xp[bi * hp * wp * c..(bi + 1) * hp * wp * c];
         let od = &mut out.data_mut()[bi * ho * wo * n..(bi + 1) * ho * wo * n];
         // Tap loops outer so the (C, N) tap weights stay cache-resident
         // across all output rows (same reuse order as the transposed path).
@@ -65,7 +69,8 @@ pub fn conv2d_dilated(x: &Tensor, k: &Tensor, p: &DilatedParams) -> Tensor {
                     let lda = p.stride * c;
                     let a_len = (wo - 1) * lda + c;
                     let a = &img[a0..a0 + a_len];
-                    sgemm_strided(wo, n, c, a, lda, wslice, dst, true);
+                    sgemm_strided_with(hnd, wo, n, c, a, lda, wslice, dst,
+                                       true);
                 }
             }
         }
@@ -79,9 +84,11 @@ pub fn conv2d_dilated(x: &Tensor, k: &Tensor, p: &DilatedParams) -> Tensor {
 /// the per-row accumulation order for **both** the single-threaded and
 /// the multi-threaded untangled engines, so their bit-identity
 /// (DESIGN.md §8) holds by construction, not by duplication discipline.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn accumulate_row(dst: &mut [f32], img: &[f32],
                              taps: &DilatedTaps, p: &DilatedParams,
-                             oy: usize, wp: usize, wo: usize) {
+                             oy: usize, wp: usize, wo: usize,
+                             hnd: &mut WsHandle) {
     let (s, c) = (taps.s, taps.c);
     for t_r in 0..taps.r {
         for t_c in 0..s {
@@ -91,7 +98,8 @@ pub(crate) fn accumulate_row(dst: &mut [f32], img: &[f32],
             let a0 = (iy * wp + ix0) * c;
             let lda = p.stride * c;
             let a_len = (wo - 1) * lda + c;
-            sgemm_prepacked(wo, &img[a0..a0 + a_len], lda, pb, dst, true);
+            sgemm_prepacked_with(hnd, wo, &img[a0..a0 + a_len], lda, pb,
+                                 dst, true);
         }
     }
 }
@@ -102,24 +110,50 @@ pub(crate) fn accumulate_row(dst: &mut [f32], img: &[f32],
 /// engines can switch to this without perturbing replay checksums.
 pub fn conv2d_dilated_with(x: &Tensor, taps: &DilatedTaps,
                            p: &DilatedParams) -> Tensor {
+    let ws = Workspace::new();
+    conv2d_dilated_ws(x, taps, p, &mut ws.handle())
+}
+
+/// [`conv2d_dilated_with`] drawing padded input and GEMM scratch from a
+/// workspace handle (bit-identical; DESIGN.md §9).
+pub fn conv2d_dilated_ws(x: &Tensor, taps: &DilatedTaps, p: &DilatedParams,
+                         hnd: &mut WsHandle) -> Tensor {
     let (b, h, w, c) = x.dims4();
+    let ho = p.out_size(h, taps.r);
+    let wo = p.out_size(w, taps.s);
+    let mut out = Tensor::zeros(&[b, ho, wo, taps.n]);
+    dilated_into(x.data(), b, h, w, c, taps, p, out.data_mut(), hnd);
+    out
+}
+
+/// Slice-level core of the untangled dilated conv: `out` (length
+/// `b·ho·wo·n`) is fully overwritten (zeroed, then tap-accumulated); all
+/// scratch comes from `hnd`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dilated_into(xd: &[f32], b: usize, h: usize, w: usize,
+                           c: usize, taps: &DilatedTaps, p: &DilatedParams,
+                           out: &mut [f32], hnd: &mut WsHandle) {
     let (r, s, n) = (taps.r, taps.s, taps.n);
     assert_eq!(c, taps.c);
     let ho = p.out_size(h, r);
     let wo = p.out_size(w, s);
-    let xp = x.pad_spatial(p.pad, p.pad, p.pad, p.pad);
-    let (_, hp, wp, _) = xp.dims4();
-    let mut out = Tensor::zeros(&[b, ho, wo, n]);
-
+    assert_eq!(out.len(), b * ho * wo * n, "output size");
+    // Unconditional: `out` may be a dirty pooled slab, and the tap
+    // GEMMs accumulate (+=). Fresh Tensor::zeros callers pay ~nothing
+    // extra (calloc), so this is the only real memset.
+    out.fill(0.0);
+    let mut xp = hnd.checkout(b * (h + 2 * p.pad) * (w + 2 * p.pad) * c);
+    let (hp, wp) = pad_spatial_into(xd, b, h, w, c, p.pad, p.pad, p.pad,
+                                    p.pad, &mut xp);
     for bi in 0..b {
-        let img = &xp.data()[bi * hp * wp * c..(bi + 1) * hp * wp * c];
-        let od = &mut out.data_mut()[bi * ho * wo * n..(bi + 1) * ho * wo * n];
+        let img = &xp[bi * hp * wp * c..(bi + 1) * hp * wp * c];
+        let od = &mut out[bi * ho * wo * n..(bi + 1) * ho * wo * n];
         for oy in 0..ho {
             accumulate_row(&mut od[oy * wo * n..(oy + 1) * wo * n], img,
-                           taps, p, oy, wp, wo);
+                           taps, p, oy, wp, wo, hnd);
         }
     }
-    out
+    hnd.checkin(xp);
 }
 
 /// MAC counts: naive (dense over the dilated kernel extent) vs untangled.

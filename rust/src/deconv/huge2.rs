@@ -15,10 +15,12 @@
 //! * polyphase outputs are disjoint — no read-modify-write races, and the
 //!   scatter writes each cache line exactly once per pattern.
 
-use crate::gemm::{sgemm_prepacked, PackedB};
+use crate::gemm::{sgemm_prepacked_with, PackedB};
 use crate::tensor::Tensor;
+use crate::workspace::{Workspace, WsHandle};
 
-use super::{axis_pattern, polyphase_len, AxisPattern, DeconvParams};
+use super::{axis_pattern, pad_spatial_into, polyphase_len, AxisPattern,
+            DeconvParams};
 
 /// One decomposed pattern of a 2-D kernel: the dense sub-kernel plus the
 /// axis algebra needed to address its receptive field.
@@ -78,11 +80,44 @@ pub fn conv2d_transpose(x: &Tensor, k: &Tensor, p: &DeconvParams) -> Tensor {
 /// model-load time and reuse across requests).
 pub fn conv2d_transpose_with(x: &Tensor, patterns: &[Pattern], r: usize,
                              s: usize, p: &DeconvParams) -> Tensor {
+    let ws = Workspace::new();
+    conv2d_transpose_ws(x, patterns, r, s, p, &mut ws.handle())
+}
+
+/// [`conv2d_transpose_with`] drawing the padded input, per-pattern
+/// sub-output, tap A-assembly buffer and GEMM panels from a workspace
+/// handle (bit-identical; DESIGN.md §9).
+pub fn conv2d_transpose_ws(x: &Tensor, patterns: &[Pattern], r: usize,
+                           s: usize, p: &DeconvParams, hnd: &mut WsHandle)
+                           -> Tensor {
     let (b, h, w, c) = x.dims4();
+    let n = patterns[0].sub.shape()[3];
+    let ho = p.out_size(h, r);
+    let wo = p.out_size(w, s);
+    let mut out = Tensor::zeros(&[b, ho, wo, n]);
+    transpose_into(x.data(), b, h, w, c, patterns, r, s, p,
+                   out.data_mut(), hnd);
+    out
+}
+
+/// Slice-level core of the untangled transposed conv: `out` (length
+/// `b·ho·wo·n`) is fully overwritten (zeroed, then polyphase-scattered);
+/// all scratch comes from `hnd`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn transpose_into(xd: &[f32], b: usize, h: usize, w: usize,
+                             c: usize, patterns: &[Pattern], r: usize,
+                             s: usize, p: &DeconvParams, out: &mut [f32],
+                             hnd: &mut WsHandle) {
     let n = patterns[0].sub.shape()[3];
     let st = p.stride;
     let ho = p.out_size(h, r);
     let wo = p.out_size(w, s);
+    assert_eq!(out.len(), b * ho * wo * n, "output size");
+    // Unconditional: `out` may be a dirty pooled slab (gan ping-pong),
+    // and empty-pattern polyphases are never scattered over. Callers
+    // passing a fresh Tensor::zeros pay ~nothing extra: large zeroed
+    // allocations come from calloc, so this is the only real memset.
+    out.fill(0.0);
 
     // Shared padded input: generous border covers every pattern's reach.
     let max_dy = patterns.iter().map(|pt| pt.ay.taps as isize - 1
@@ -99,16 +134,19 @@ pub fn conv2d_transpose_with(x: &Tensor, patterns: &[Pattern], r: usize,
         as usize;
     let pad_hi_x = ((max_qx as isize - 1 + max_dx) - (w as isize - 1)).max(0)
         as usize;
-    let xp = x.pad_spatial(pad_lo_y, pad_hi_y, pad_lo_x, pad_hi_x);
-    let (_, hp, wp, _) = xp.dims4();
+    let mut xp = hnd.checkout(b * (h + pad_lo_y + pad_hi_y)
+        * (w + pad_lo_x + pad_hi_x) * c);
+    let (hp, wp) = pad_spatial_into(xd, b, h, w, c, pad_lo_y, pad_hi_y,
+                                    pad_lo_x, pad_hi_x, &mut xp);
 
-    let mut out = Tensor::zeros(&[b, ho, wo, n]);
-    // Per-pattern sub-output buffer + tap A-assembly buffer, both reused.
-    let mut sub_out = vec![0.0f32; max_qy * max_qx * n];
-    let mut a_buf = vec![0.0f32; max_qy * max_qx * c];
+    // Per-pattern sub-output buffer + tap A-assembly buffer, both reused
+    // (and pooled: dirty is fine — `sub` is zero-filled per pattern, the
+    // A buffer's used prefix is fully overwritten per tap).
+    let mut sub_out = hnd.checkout(max_qy * max_qx * n);
+    let mut a_buf = hnd.checkout(max_qy * max_qx * c);
 
     for bi in 0..b {
-        let img = &xp.data()[bi * hp * wp * c..(bi + 1) * hp * wp * c];
+        let img = &xp[bi * hp * wp * c..(bi + 1) * hp * wp * c];
         for pt in patterns {
             let qy = polyphase_len(ho, st, pt.phi_y);
             let qx = polyphase_len(wo, st, pt.phi_x);
@@ -128,31 +166,33 @@ pub fn conv2d_transpose_with(x: &Tensor, patterns: &[Pattern], r: usize,
                     let pb = &pt.packed[t_y * pt.ax.taps + t_x];
                     let ix0 = (t_x as isize + pt.ax.delta
                         + pad_lo_x as isize) as usize;
-                    let a = &mut a_buf[..qy * qx * c];
                     for q_y in 0..qy {
                         let iy = (q_y as isize + t_y as isize + pt.ay.delta
                             + pad_lo_y as isize) as usize;
                         let a0 = (iy * wp + ix0) * c;
-                        a[q_y * qx * c..(q_y + 1) * qx * c]
+                        a_buf[q_y * qx * c..(q_y + 1) * qx * c]
                             .copy_from_slice(&img[a0..a0 + qx * c]);
                     }
-                    sgemm_prepacked(qy * qx, a, c, pb, sub, true);
+                    sgemm_prepacked_with(hnd, qy * qx,
+                                         &a_buf[..qy * qx * c], c, pb,
+                                         sub, true);
                 }
             }
             // Polyphase scatter (disjoint writes; paper Fig. 4).
-            let od = out.data_mut();
             for q_y in 0..qy {
                 let oy = pt.phi_y + q_y * st;
                 for q_x in 0..qx {
                     let ox = pt.phi_x + q_x * st;
                     let src = (q_y * qx + q_x) * n;
                     let dst = ((bi * ho + oy) * wo + ox) * n;
-                    od[dst..dst + n].copy_from_slice(&sub[src..src + n]);
+                    out[dst..dst + n].copy_from_slice(&sub[src..src + n]);
                 }
             }
         }
     }
-    out
+    hnd.checkin(xp);
+    hnd.checkin(sub_out);
+    hnd.checkin(a_buf);
 }
 
 /// Effective-MAC accounting for one layer (feeds the GPU roofline and the

@@ -110,6 +110,30 @@ pub fn axis_pattern(r: usize, stride: usize, pad: usize, phi: usize)
     AxisPattern { a0, taps, delta }
 }
 
+/// Zero-pad the spatial dims of a raw NHWC slice into caller-owned
+/// scratch (the pooled engines' padded-input buffer). Fully overwrites
+/// `dst` (borders zeroed explicitly), so dirty workspace slabs are safe.
+/// Returns `(hp, wp)`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn pad_spatial_into(xd: &[f32], b: usize, h: usize, w: usize,
+                               c: usize, lo_h: usize, hi_h: usize,
+                               lo_w: usize, hi_w: usize, dst: &mut [f32])
+                               -> (usize, usize) {
+    let hp = h + lo_h + hi_h;
+    let wp = w + lo_w + hi_w;
+    assert_eq!(xd.len(), b * h * w * c, "input size");
+    assert_eq!(dst.len(), b * hp * wp * c, "padded size");
+    dst.fill(0.0);
+    for bi in 0..b {
+        for hi in 0..h {
+            let src = ((bi * h + hi) * w) * c;
+            let d = ((bi * hp + hi + lo_h) * wp + lo_w) * c;
+            dst[d..d + w * c].copy_from_slice(&xd[src..src + w * c]);
+        }
+    }
+    (hp, wp)
+}
+
 /// Number of output positions `y < total` with `y ≡ phi (mod stride)`.
 pub fn polyphase_len(total: usize, stride: usize, phi: usize) -> usize {
     if phi >= total {

@@ -6,38 +6,56 @@
 //! single big GEMM (its output rows overlap the col matrix, and the
 //! inflation/im2col phases are bandwidth-bound).
 
-use crate::gemm::{sgemm_parallel, sgemm_prepacked};
-use crate::im2col::im2col;
+use crate::gemm::{sgemm_parallel_with, sgemm_prepacked_with};
+use crate::im2col::im2col_into;
 use crate::tensor::Tensor;
+use crate::workspace::{Workspace, WsBuf};
 
 use super::dilated::{self, DilatedTaps};
 use super::huge2::Pattern;
-use super::{polyphase_len, DeconvParams, DilatedParams};
+use super::{pad_spatial_into, polyphase_len, DeconvParams, DilatedParams};
 
 /// Multi-threaded naive baseline: inflate + im2col single-threaded
 /// (bandwidth-bound), GEMM sharded over `threads`.
 pub fn baseline_conv2d_transpose_mt(x: &Tensor, k: &Tensor,
                                     p: &DeconvParams, threads: usize)
                                     -> Tensor {
-    let (b, h, w, _c) = x.dims4();
+    let ws = Workspace::new();
+    baseline_conv2d_transpose_mt_ws(x, k, p, threads, &ws)
+}
+
+/// [`baseline_conv2d_transpose_mt`] over a shared workspace: the
+/// inflation and column buffers come from the caller's pool, and each
+/// GEMM shard thread draws its packing panels through its own handle.
+pub fn baseline_conv2d_transpose_mt_ws(x: &Tensor, k: &Tensor,
+                                       p: &DeconvParams, threads: usize,
+                                       ws: &Workspace) -> Tensor {
+    let mut hnd = ws.handle();
+    let (b, h, w, c) = x.dims4();
     let (r, s, kc, n) = k.dims4();
+    assert_eq!(c, kc, "channel mismatch");
     let ho = p.out_size(h, r);
     let wo = p.out_size(w, s);
-    let inflated = super::baseline::inflate(x, r, s, p);
-    let (_, ih, iw, _) = inflated.dims4();
+    let st = p.stride;
+    let (lo_h, hi_h) = p.inflate_pad(r);
+    let (lo_w, hi_w) = p.inflate_pad(s);
+    let ih = (h - 1) * st + 1 + lo_h + hi_h;
+    let iw = (w - 1) * st + 1 + lo_w + hi_w;
+    let mut inflated = hnd.checkout(b * ih * iw * c);
+    super::baseline::inflate_into(x.data(), b, h, w, c, r, s, p,
+                                  &mut inflated);
+    let mut col = hnd.checkout(ho * wo * r * s * c);
     let mut out = Tensor::zeros(&[b, ho, wo, n]);
     for bi in 0..b {
-        let img = Tensor::from_vec(
-            &[1, ih, iw, kc],
-            inflated.data()[bi * ih * iw * kc..(bi + 1) * ih * iw * kc]
-                .to_vec(),
-        );
-        let (col, _, _) = im2col(&img, r, s, 1, 0);
+        let img = &inflated[bi * ih * iw * c..(bi + 1) * ih * iw * c];
+        im2col_into(img, ih, iw, c, r, s, 1, 0, &mut col);
         let dst = &mut out.data_mut()[bi * ho * wo * n
             ..(bi + 1) * ho * wo * n];
-        sgemm_parallel(ho * wo, n, r * s * kc, col.data(), k.data(), dst,
-                       false, threads);
+        sgemm_parallel_with(ws, ho * wo, n, r * s * c, &col, k.data(),
+                            dst, false, threads);
     }
+    hnd.checkin(inflated);
+    hnd.checkin(col);
     out
 }
 
@@ -46,6 +64,19 @@ pub fn baseline_conv2d_transpose_mt(x: &Tensor, k: &Tensor,
 pub fn huge2_conv2d_transpose_mt(x: &Tensor, patterns: &[Pattern],
                                  r: usize, s: usize, p: &DeconvParams,
                                  threads: usize) -> Tensor {
+    let ws = Workspace::new();
+    huge2_conv2d_transpose_mt_ws(x, patterns, r, s, p, threads, &ws)
+}
+
+/// [`huge2_conv2d_transpose_mt`] over a shared workspace: each pattern
+/// thread draws its sub-output, A-assembly buffer and GEMM panels
+/// through its own per-thread handle; sub-outputs travel back to the
+/// main thread for the scatter and are checked in there.
+pub fn huge2_conv2d_transpose_mt_ws(x: &Tensor, patterns: &[Pattern],
+                                    r: usize, s: usize, p: &DeconvParams,
+                                    threads: usize, ws: &Workspace)
+                                    -> Tensor {
+    let mut hnd = ws.handle();
     let (b, h, w, c) = x.dims4();
     let n = patterns[0].sub.shape()[3];
     let st = p.stride;
@@ -67,22 +98,26 @@ pub fn huge2_conv2d_transpose_mt(x: &Tensor, patterns: &[Pattern],
         as usize;
     let pad_hi_x = ((max_qx as isize - 1 + max_dx) - (w as isize - 1)).max(0)
         as usize;
-    let xp = x.pad_spatial(pad_lo_y, pad_hi_y, pad_lo_x, pad_hi_x);
-    let (_, hp, wp, _) = xp.dims4();
+    let mut xp = hnd.checkout(b * (h + pad_lo_y + pad_hi_y)
+        * (w + pad_lo_x + pad_hi_x) * c);
+    let (hp, wp) = pad_spatial_into(x.data(), b, h, w, c, pad_lo_y,
+                                    pad_hi_y, pad_lo_x, pad_hi_x,
+                                    &mut xp);
 
     let mut out = Tensor::zeros(&[b, ho, wo, n]);
     let threads = threads.max(1);
 
     for bi in 0..b {
-        let img = &xp.data()[bi * hp * wp * c..(bi + 1) * hp * wp * c];
+        let img = &xp[bi * hp * wp * c..(bi + 1) * hp * wp * c];
         // Compute every pattern's polyphase concurrently...
-        let mut results: Vec<(usize, Vec<f32>, usize, usize)> =
+        let mut results: Vec<(usize, WsBuf, usize, usize)> =
             std::thread::scope(|sc| {
                 let mut handles = Vec::new();
                 for (pi, chunk) in patterns.chunks(
                     patterns.len().div_ceil(threads)).enumerate()
                 {
                     handles.push(sc.spawn(move || {
+                        let mut h = ws.handle();
                         let mut local = Vec::new();
                         for (ci, pt) in chunk.iter().enumerate() {
                             let qy = polyphase_len(ho, st, pt.phi_y);
@@ -92,8 +127,8 @@ pub fn huge2_conv2d_transpose_mt(x: &Tensor, patterns: &[Pattern],
                             {
                                 continue;
                             }
-                            let mut sub = vec![0.0f32; qy * qx * n];
-                            let mut a_buf = vec![0.0f32; qy * qx * c];
+                            let mut sub = h.checkout_zeroed(qy * qx * n);
+                            let mut a_buf = h.checkout(qy * qx * c);
                             for t_y in 0..pt.ay.taps {
                                 for t_x in 0..pt.ax.taps {
                                     let pb = &pt.packed[t_y * pt.ax.taps
@@ -110,11 +145,13 @@ pub fn huge2_conv2d_transpose_mt(x: &Tensor, patterns: &[Pattern],
                                             .copy_from_slice(
                                                 &img[a0..a0 + qx * c]);
                                     }
-                                    sgemm_prepacked(qy * qx,
-                                                    &a_buf[..qy * qx * c],
-                                                    c, pb, &mut sub, true);
+                                    sgemm_prepacked_with(
+                                        &mut h, qy * qx,
+                                        &a_buf[..qy * qx * c],
+                                        c, pb, &mut sub, true);
                                 }
                             }
+                            h.checkin(a_buf);
                             let idx = pi * patterns.len()
                                 .div_ceil(threads) + ci;
                             local.push((idx, sub, qy, qx));
@@ -140,8 +177,10 @@ pub fn huge2_conv2d_transpose_mt(x: &Tensor, patterns: &[Pattern],
                     od[dst..dst + n].copy_from_slice(&sub[src..src + n]);
                 }
             }
+            hnd.checkin(sub);
         }
     }
+    hnd.checkin(xp);
     out
 }
 
@@ -154,20 +193,48 @@ pub fn huge2_conv2d_transpose_mt(x: &Tensor, patterns: &[Pattern],
 /// §3/§8).
 pub fn conv2d_dilated_mt(x: &Tensor, taps: &DilatedTaps, p: &DilatedParams,
                          threads: usize) -> Tensor {
+    let ws = Workspace::new();
+    conv2d_dilated_mt_ws(x, taps, p, threads, &ws)
+}
+
+/// [`conv2d_dilated_mt`] over a shared workspace: the padded input comes
+/// from the caller's pool, and each row-shard thread draws its GEMM
+/// panels through its own per-thread handle.
+pub fn conv2d_dilated_mt_ws(x: &Tensor, taps: &DilatedTaps,
+                            p: &DilatedParams, threads: usize,
+                            ws: &Workspace) -> Tensor {
     let (b, h, w, c) = x.dims4();
+    let ho = p.out_size(h, taps.r);
+    let wo = p.out_size(w, taps.s);
+    let mut out = Tensor::zeros(&[b, ho, wo, taps.n]);
+    dilated_mt_into(x.data(), b, h, w, c, taps, p, threads,
+                    out.data_mut(), ws);
+    out
+}
+
+/// Slice-level core of the multi-threaded untangled dilated conv (the
+/// seg stack's pooled layer path). `out` is fully overwritten.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dilated_mt_into(xd: &[f32], b: usize, h: usize, w: usize,
+                              c: usize, taps: &DilatedTaps,
+                              p: &DilatedParams, threads: usize,
+                              out: &mut [f32], ws: &Workspace) {
     let (r, s, n) = (taps.r, taps.s, taps.n);
     assert_eq!(c, taps.c);
     let ho = p.out_size(h, r);
     let wo = p.out_size(w, s);
-    let xp = x.pad_spatial(p.pad, p.pad, p.pad, p.pad);
-    let (_, hp, wp, _) = xp.dims4();
-    let mut out = Tensor::zeros(&[b, ho, wo, n]);
+    assert_eq!(out.len(), b * ho * wo * n, "output size");
+    out.fill(0.0);
+    let mut hnd = ws.handle();
+    let mut xp = hnd.checkout(b * (h + 2 * p.pad) * (w + 2 * p.pad) * c);
+    let (hp, wp) = pad_spatial_into(xd, b, h, w, c, p.pad, p.pad, p.pad,
+                                    p.pad, &mut xp);
     let threads = threads.max(1).min(ho.max(1));
     let rows_per = ho.div_ceil(threads);
 
     for bi in 0..b {
-        let img = &xp.data()[bi * hp * wp * c..(bi + 1) * hp * wp * c];
-        let od = &mut out.data_mut()[bi * ho * wo * n..(bi + 1) * ho * wo * n];
+        let img = &xp[bi * hp * wp * c..(bi + 1) * hp * wp * c];
+        let od = &mut out[bi * ho * wo * n..(bi + 1) * ho * wo * n];
         std::thread::scope(|sc| {
             let mut rest = od;
             let mut oy0 = 0;
@@ -177,16 +244,17 @@ pub fn conv2d_dilated_mt(x: &Tensor, taps: &DilatedTaps, p: &DilatedParams,
                 rest = tail;
                 let y0 = oy0;
                 sc.spawn(move || {
+                    let mut th = ws.handle();
                     for (ri, dst) in band.chunks_mut(wo * n).enumerate() {
                         dilated::accumulate_row(dst, img, taps, p, y0 + ri,
-                                                wp, wo);
+                                                wp, wo, &mut th);
                     }
                 });
                 oy0 += rows;
             }
         });
     }
-    out
+    hnd.checkin(xp);
 }
 
 #[cfg(test)]

@@ -8,6 +8,7 @@ use crate::deconv::huge2::{decompose, Pattern};
 use crate::deconv::{baseline, huge2};
 use crate::rng::Rng;
 use crate::tensor::Tensor;
+use crate::workspace::{Workspace, WsHandle};
 
 // The engine selector is shared with the segmentation stack; it lives in
 // `deconv` (the layer both stacks sit on) and is re-exported here so
@@ -53,6 +54,22 @@ impl GenLayer {
             Engine::Baseline => baseline::conv2d_transpose(x, &self.kernel, &p),
             Engine::Huge2 => huge2::conv2d_transpose_with(
                 x, &self.patterns, self.cfg.k, self.cfg.k, &p),
+        }
+    }
+
+    /// Slice-level forward for the pooled generator path: `xd` is the
+    /// `(b, h, h, c_in)` activation (dims from `cfg`), `out` the
+    /// `(b, h_out, h_out, c_out)` destination; all scratch from `hnd`.
+    pub(crate) fn forward_into(&self, xd: &[f32], b: usize, engine: Engine,
+                               out: &mut [f32], hnd: &mut WsHandle) {
+        let p = self.cfg.deconv_params();
+        let (ih, c_in) = (self.cfg.h, self.cfg.c_in);
+        match engine {
+            Engine::Baseline => baseline::transpose_into(
+                xd, b, ih, ih, c_in, &self.kernel, &p, out, hnd),
+            Engine::Huge2 => huge2::transpose_into(
+                xd, b, ih, ih, c_in, &self.patterns, self.cfg.k,
+                self.cfg.k, &p, out, hnd),
         }
     }
 }
@@ -112,22 +129,56 @@ impl Generator {
 
     /// `z`: `(B, z_dim [+cond])` -> image `(B, H, W, c_out)` in [-1, 1].
     pub fn forward(&self, z: &Tensor, engine: Engine) -> Tensor {
+        let ws = Workspace::new();
+        self.forward_ws(z, engine, &mut ws.handle())
+    }
+
+    /// [`Generator::forward`] drawing every intermediate activation and
+    /// all engine scratch from a workspace handle — the steady-state
+    /// serving path (bit-identical to the fresh-workspace wrapper;
+    /// DESIGN.md §9).
+    pub fn forward_ws(&self, z: &Tensor, engine: Engine,
+                      hnd: &mut WsHandle) -> Tensor {
         let (b, zd) = z.dims2();
-        let (pd, hid) = self.proj.dims2();
+        let (pd, _) = self.proj.dims2();
         assert_eq!(zd, pd, "latent dim mismatch");
-        let first = &self.layers[0].cfg;
-        // dense projection
-        let mut x0 = vec![0.0f32; b * hid];
-        crate::gemm::sgemm(b, hid, zd, z.data(), self.proj.data(),
-                           &mut x0, false);
-        let mut x = Tensor::from_vec(&[b, first.h, first.h, first.c_in], x0)
-            .relu();
+        let mut out = Tensor::zeros(&self.out_shape(b));
+        self.forward_into(z.data(), b, engine, out.data_mut(), hnd);
+        out
+    }
+
+    /// Slice-level forward: `zd` is the `(b, z_dim [+cond])` latent
+    /// matrix, `out` the `(b, H, W, c_out)` destination (fully
+    /// overwritten). Intermediate activations ping-pong between pooled
+    /// slabs instead of allocating per layer.
+    pub fn forward_into(&self, zd: &[f32], b: usize, engine: Engine,
+                        out: &mut [f32], hnd: &mut WsHandle) {
+        let (pd, hid) = self.proj.dims2();
+        assert_eq!(zd.len(), b * pd, "latent dim mismatch");
+        let last = &self.layers[self.layers.len() - 1].cfg;
+        assert_eq!(out.len(), b * last.h_out() * last.h_out() * last.c_out,
+                   "output size");
+        // dense projection (sgemm overwrites the full slice — dirty ok)
+        let mut cur = hnd.checkout(b * hid);
+        crate::gemm::sgemm_with(hnd, b, hid, pd, zd, self.proj.data(),
+                                &mut cur, false);
+        crate::tensor::relu_inplace(&mut cur);
         let n = self.layers.len();
         for (i, layer) in self.layers.iter().enumerate() {
-            x = layer.forward(&x, engine);
-            x = if i == n - 1 { x.tanh() } else { x.relu() };
+            if i == n - 1 {
+                layer.forward_into(&cur, b, engine, out, hnd);
+                crate::tensor::tanh_inplace(out);
+            } else {
+                let cfg = &layer.cfg;
+                let mut nxt = hnd.checkout(
+                    b * cfg.h_out() * cfg.h_out() * cfg.c_out);
+                layer.forward_into(&cur, b, engine, &mut nxt, hnd);
+                crate::tensor::relu_inplace(&mut nxt);
+                hnd.checkin(cur);
+                cur = nxt;
+            }
         }
-        x
+        hnd.checkin(cur);
     }
 
     /// Output image shape for batch `b`.

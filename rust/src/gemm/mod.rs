@@ -14,6 +14,14 @@
 //!
 //! `sgemm_parallel` shards the M dimension over `std::thread::scope`
 //! (the vendored crate set has no rayon).
+//!
+//! Every entry point has a `*_with(ws, …)` twin that draws its packing
+//! panels from a [`crate::workspace::Workspace`] instead of allocating —
+//! the packing routines fully overwrite the panel region they use, so
+//! dirty pool buffers are safe (DESIGN.md §9). The no-workspace names
+//! are thin wrappers over a fresh workspace and stay bit-identical.
+
+use crate::workspace::{Workspace, WsHandle};
 
 /// Micro-tile rows.
 const MR: usize = 4;
@@ -35,6 +43,14 @@ pub fn sgemm(m: usize, n: usize, k: usize, a: &[f32], b: &[f32],
     sgemm_strided(m, n, k, a, k, b, c, accumulate);
 }
 
+/// [`sgemm`] drawing its packing panels from a workspace handle.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_with(ws: &mut WsHandle, m: usize, n: usize, k: usize,
+                  a: &[f32], b: &[f32], c: &mut [f32], accumulate: bool) {
+    assert_eq!(a.len(), m * k, "A size");
+    sgemm_strided_with(ws, m, n, k, a, k, b, c, accumulate);
+}
+
 /// `sgemm` with an explicit row stride for A (`lda >= k` elements).
 ///
 /// This is what lets the HUGE² engine run its untangled tap-GEMMs
@@ -44,6 +60,18 @@ pub fn sgemm(m: usize, n: usize, k: usize, a: &[f32], b: &[f32],
 #[allow(clippy::too_many_arguments)]
 pub fn sgemm_strided(m: usize, n: usize, k: usize, a: &[f32], lda: usize,
                      b: &[f32], c: &mut [f32], accumulate: bool) {
+    let ws = Workspace::new();
+    sgemm_strided_with(&mut ws.handle(), m, n, k, a, lda, b, c, accumulate);
+}
+
+/// [`sgemm_strided`] drawing its packing panels from a workspace handle.
+/// Dirty buffers are safe: `pack_a`/`pack_b` fully overwrite (including
+/// the zero padding of edge slivers) exactly the region the macro kernel
+/// reads.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_strided_with(ws: &mut WsHandle, m: usize, n: usize, k: usize,
+                          a: &[f32], lda: usize, b: &[f32], c: &mut [f32],
+                          accumulate: bool) {
     assert!(lda >= k, "lda {lda} < k {k}");
     assert!(m == 0 || a.len() >= (m - 1) * lda + k, "A size");
     assert_eq!(b.len(), k * n, "B size");
@@ -55,8 +83,8 @@ pub fn sgemm_strided(m: usize, n: usize, k: usize, a: &[f32], lda: usize,
         return;
     }
 
-    let mut packed_a = vec![0.0f32; MC * KC];
-    let mut packed_b = vec![0.0f32; KC * NC.min(round_up(n, NR))];
+    let mut packed_a = ws.checkout(MC * KC);
+    let mut packed_b = ws.checkout(KC * NC.min(round_up(n, NR)));
 
     for jc in (0..n).step_by(NC) {
         let nc = NC.min(n - jc);
@@ -70,6 +98,8 @@ pub fn sgemm_strided(m: usize, n: usize, k: usize, a: &[f32], lda: usize,
             }
         }
     }
+    ws.checkin(packed_a);
+    ws.checkin(packed_b);
 }
 
 /// B packed once into micro-kernel layout — for weight matrices that are
@@ -122,6 +152,16 @@ impl PackedB {
 /// time. C[m×n] (+)= A[m×k]·B.
 pub fn sgemm_prepacked(m: usize, a: &[f32], lda: usize, b: &PackedB,
                        c: &mut [f32], accumulate: bool) {
+    let ws = Workspace::new();
+    sgemm_prepacked_with(&mut ws.handle(), m, a, lda, b, c, accumulate);
+}
+
+/// [`sgemm_prepacked`] drawing its A panel from a workspace handle — the
+/// form every per-tap GEMM in the untangled engines uses, so row-level
+/// calls stop allocating entirely.
+pub fn sgemm_prepacked_with(ws: &mut WsHandle, m: usize, a: &[f32],
+                            lda: usize, b: &PackedB, c: &mut [f32],
+                            accumulate: bool) {
     let (k, n) = (b.k, b.n);
     assert!(lda >= k);
     assert!(m == 0 || a.len() >= (m - 1) * lda + k, "A size");
@@ -132,7 +172,7 @@ pub fn sgemm_prepacked(m: usize, a: &[f32], lda: usize, b: &PackedB,
     if m == 0 || n == 0 || k == 0 {
         return;
     }
-    let mut packed_a = vec![0.0f32; MC * KC];
+    let mut packed_a = ws.checkout(MC * KC);
     for jc in (0..n).step_by(NC) {
         let nc = NC.min(n - jc);
         for pc in (0..k).step_by(KC) {
@@ -145,6 +185,7 @@ pub fn sgemm_prepacked(m: usize, a: &[f32], lda: usize, b: &PackedB,
             }
         }
     }
+    ws.checkin(packed_a);
 }
 
 /// C[k×n] (+)= Aᵀ · B where A is [m×k] row-major (so Aᵀ is k×m) and
@@ -176,9 +217,19 @@ pub fn sgemm_at(m: usize, n: usize, k: usize, a: &[f32], lda: usize,
 /// Multi-threaded `sgemm`: shards rows of C across `threads`.
 pub fn sgemm_parallel(m: usize, n: usize, k: usize, a: &[f32], b: &[f32],
                       c: &mut [f32], accumulate: bool, threads: usize) {
+    let ws = Workspace::new();
+    sgemm_parallel_with(&ws, m, n, k, a, b, c, accumulate, threads);
+}
+
+/// [`sgemm_parallel`] over a shared workspace: each shard thread draws
+/// its packing panels through its own per-thread handle.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_parallel_with(ws: &Workspace, m: usize, n: usize, k: usize,
+                           a: &[f32], b: &[f32], c: &mut [f32],
+                           accumulate: bool, threads: usize) {
     let threads = threads.max(1).min(m.max(1));
     if threads == 1 || m * n * k < 64 * 64 * 64 {
-        return sgemm(m, n, k, a, b, c, accumulate);
+        return sgemm_with(&mut ws.handle(), m, n, k, a, b, c, accumulate);
     }
     let rows_per = m.div_ceil(threads);
     // Split C into disjoint row bands; each thread runs a private sgemm.
@@ -199,7 +250,8 @@ pub fn sgemm_parallel(m: usize, n: usize, k: usize, a: &[f32], b: &[f32],
             let rows = band.len() / n;
             let a_band = &a[row0 * k..(row0 + rows) * k];
             s.spawn(move || {
-                sgemm(rows, n, k, a_band, b, band, accumulate);
+                let mut h = ws.handle();
+                sgemm_with(&mut h, rows, n, k, a_band, b, band, accumulate);
             });
         }
     });

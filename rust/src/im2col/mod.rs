@@ -28,8 +28,22 @@ pub fn im2col(x: &Tensor, r: usize, s: usize, stride: usize, pad: usize)
     let ho = (h + 2 * pad - r) / stride + 1;
     let wo = (w + 2 * pad - s) / stride + 1;
     let mut col = Tensor::zeros(&[ho * wo, r * s * c]);
-    let xd = x.data();
-    let cd = col.data_mut();
+    im2col_into(x.data(), h, w, c, r, s, stride, pad, col.data_mut());
+    (col, ho, wo)
+}
+
+/// [`im2col`] over a raw image slice, writing into caller-owned scratch
+/// (a workspace slab on the pooled paths). Every element of `dst` is
+/// written — padding taps are zero-filled explicitly — so a **dirty**
+/// buffer is safe (DESIGN.md §9). Returns `(ho, wo)`.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_into(xd: &[f32], h: usize, w: usize, c: usize, r: usize,
+                   s: usize, stride: usize, pad: usize, dst: &mut [f32])
+                   -> (usize, usize) {
+    let ho = (h + 2 * pad - r) / stride + 1;
+    let wo = (w + 2 * pad - s) / stride + 1;
+    assert_eq!(xd.len(), h * w * c, "image size");
+    assert_eq!(dst.len(), ho * wo * r * s * c, "column matrix size");
     for oy in 0..ho {
         for ox in 0..wo {
             let row = (oy * wo + ox) * r * s * c;
@@ -37,19 +51,21 @@ pub fn im2col(x: &Tensor, r: usize, s: usize, stride: usize, pad: usize)
                 let iy = (oy * stride + m) as isize - pad as isize;
                 for n in 0..s {
                     let ix = (ox * stride + n) as isize - pad as isize;
-                    let dst = row + (m * s + n) * c;
+                    let d = row + (m * s + n) * c;
                     if iy >= 0 && (iy as usize) < h && ix >= 0
                         && (ix as usize) < w
                     {
                         let src = ((iy as usize) * w + ix as usize) * c;
-                        cd[dst..dst + c].copy_from_slice(&xd[src..src + c]);
+                        dst[d..d + c].copy_from_slice(&xd[src..src + c]);
+                    } else {
+                        dst[d..d + c].fill(0.0); // padding (explicit:
+                                                 // dst may be dirty)
                     }
-                    // else: stays zero (padding)
                 }
             }
         }
     }
-    (col, ho, wo)
+    (ho, wo)
 }
 
 /// Scatter-accumulate a `(Ho·Wo, R·S·C)` column matrix back into an NHWC

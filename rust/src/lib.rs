@@ -112,6 +112,36 @@
 //! `huge2 serve --native --record t.jsonl`, then
 //! `huge2 replay t.jsonl --timing fast` (exits non-zero on divergence,
 //! naming the first mismatching event).
+//!
+//! ## Workspace quickstart (zero-allocation hot path)
+//!
+//! Every hot-path entry point has a pooled twin — `sgemm_with(ws, …)`
+//! at the GEMM layer, `*_ws(…, handle)` on the deconv engines and model
+//! forwards — that draws all scratch (packing panels, padded inputs,
+//! sub-outputs, intermediate activations) from a [`workspace::Workspace`]
+//! instead of allocating. Results are bit-identical; after a warmup
+//! pass the pool serves every checkout and `bytes_allocated` stays
+//! flat (DESIGN.md §9). The serving engine does this internally per
+//! worker thread — [`coordinator::Engine::workspace_counters`] exposes
+//! the proof.
+//!
+//! ```no_run
+//! use huge2::gan::{Engine, Generator};
+//! use huge2::rng::Rng;
+//! use huge2::tensor::Tensor;
+//! use huge2::workspace::Workspace;
+//!
+//! let gen = Generator::tiny_cgan(7);
+//! let z = Tensor::randn(&[4, 8], &mut Rng::new(1));
+//! let ws = Workspace::new();
+//! let mut h = ws.handle();
+//! let warm = gen.forward_ws(&z, Engine::Huge2, &mut h);   // allocates
+//! let steady = gen.forward_ws(&z, Engine::Huge2, &mut h); // pool hits
+//! assert_eq!(warm.checksum(), steady.checksum());
+//! let c = ws.counters();
+//! println!("{} checkouts, {} misses, {} B allocated",
+//!          c.checkouts, c.pool_misses, c.bytes_allocated);
+//! ```
 
 pub mod cli;
 pub mod config;
@@ -129,3 +159,4 @@ pub mod seg;
 pub mod tensor;
 pub mod trace;
 pub mod bench_util;
+pub mod workspace;

@@ -23,6 +23,7 @@ use crate::deconv::{baseline, parallel, Engine};
 use crate::gan::Forward;
 use crate::rng::Rng;
 use crate::tensor::Tensor;
+use crate::workspace::{Workspace, WsHandle};
 
 /// One dilated-conv layer with its weights and pre-packed tap panels
 /// (packed once at model-load time, as a serving engine would do).
@@ -50,6 +51,29 @@ impl SegLayer {
                                             self.cfg.threads)
             }
             Engine::Huge2 => dilated::conv2d_dilated_with(x, &self.taps, &p),
+        }
+    }
+
+    /// Slice-level forward for the pooled net path: `xd` is the
+    /// `(b, h, h, c_in)` activation (dims from `cfg`), `out` the
+    /// `(b, h_out, h_out, c_out)` destination; all scratch from `hnd`
+    /// (the multi-threaded engine hands `hnd.workspace()` to its row
+    /// shards).
+    pub(crate) fn forward_into(&self, xd: &[f32], b: usize, engine: Engine,
+                               out: &mut [f32], hnd: &mut WsHandle) {
+        let p = self.cfg.params;
+        let (ih, c_in) = (self.cfg.h, self.cfg.c_in);
+        match engine {
+            Engine::Baseline => baseline::conv2d_dilated_into(
+                xd, b, ih, ih, c_in, &self.kernel, &p, out, hnd),
+            Engine::Huge2 if self.cfg.threads > 1 => {
+                parallel::dilated_mt_into(xd, b, ih, ih, c_in, &self.taps,
+                                          &p, self.cfg.threads, out,
+                                          hnd.workspace())
+            }
+            Engine::Huge2 => dilated::dilated_into(xd, b, ih, ih, c_in,
+                                                   &self.taps, &p, out,
+                                                   hnd),
         }
     }
 }
@@ -109,23 +133,65 @@ impl SegNet {
     /// (`None` = per-layer config) — the cross-engine property tests and
     /// the CLI timing table use this.
     pub fn forward_with(&self, x: &Tensor, over: Option<Engine>) -> Tensor {
+        let ws = Workspace::new();
+        self.forward_ws(x, over, &mut ws.handle())
+    }
+
+    /// [`SegNet::forward_with`] drawing every intermediate activation and
+    /// all engine scratch from a workspace handle — the steady-state
+    /// serving path (bit-identical to the fresh-workspace wrapper;
+    /// DESIGN.md §9).
+    pub fn forward_ws(&self, x: &Tensor, over: Option<Engine>,
+                      hnd: &mut WsHandle) -> Tensor {
+        let b = x.shape()[0];
+        let mut out = Tensor::zeros(&self.logits_shape(b));
+        self.forward_into(x.data(), b, over, out.data_mut(), hnd);
+        out
+    }
+
+    /// Slice-level forward: `xd` is the `(b, H, W, C)` input, `out` the
+    /// `(b, Ho, Wo, n_classes)` logits destination (fully overwritten).
+    /// Activations ping-pong between pooled slabs; the ASPP branches
+    /// accumulate in place in config order (same left-to-right sum as
+    /// the tensor path — replay determinism).
+    pub fn forward_into(&self, xd: &[f32], b: usize, over: Option<Engine>,
+                        out: &mut [f32], hnd: &mut WsHandle) {
         let pick = |l: &SegLayer| over.unwrap_or(l.cfg.engine);
-        let mut h = x.clone();
+        let elems = |c: &SegLayerConfig| b * c.h_out() * c.h_out() * c.c_out;
+        // trunk: sequential ping-pong
+        let mut cur = None;
         for l in &self.trunk {
-            h = l.forward(&h, pick(l)).relu();
+            let mut nxt = hnd.checkout(elems(&l.cfg));
+            match &cur {
+                None => l.forward_into(xd, b, pick(l), &mut nxt, hnd),
+                Some(prev) => l.forward_into(prev, b, pick(l), &mut nxt,
+                                             hnd),
+            }
+            crate::tensor::relu_inplace(&mut nxt);
+            if let Some(prev) = cur.replace(nxt) {
+                hnd.checkin(prev);
+            }
         }
+        let trunk_out = cur.expect("segnet needs a trunk");
         // ASPP: parallel branches over the same input, summed in config
         // order (fixed order — replay determinism).
-        let mut acc: Option<Tensor> = None;
-        for l in &self.aspp {
-            let y = l.forward(&h, pick(l));
-            acc = Some(match acc {
-                None => y,
-                Some(a) => a.add(&y),
-            });
+        let ae = elems(&self.aspp[0].cfg);
+        let mut acc = hnd.checkout(ae);
+        self.aspp[0].forward_into(&trunk_out, b, pick(&self.aspp[0]),
+                                  &mut acc, hnd);
+        let mut branch = hnd.checkout(ae);
+        for l in &self.aspp[1..] {
+            assert_eq!(elems(&l.cfg), ae, "ASPP branch shape mismatch");
+            l.forward_into(&trunk_out, b, pick(l), &mut branch, hnd);
+            for (a, y) in acc.iter_mut().zip(branch.iter()) {
+                *a += *y;
+            }
         }
-        let h = acc.unwrap().relu();
-        self.head.forward(&h, pick(&self.head))
+        hnd.checkin(branch);
+        hnd.checkin(trunk_out);
+        crate::tensor::relu_inplace(&mut acc);
+        self.head.forward_into(&acc, b, pick(&self.head), out, hnd);
+        hnd.checkin(acc);
     }
 
     /// End-to-end inference: forward + per-pixel class argmax.
@@ -173,8 +239,16 @@ pub fn layer_timing_cells(l: &SegLayer, x: &Tensor) -> [String; 4] {
 /// over it is replayable.
 pub fn argmax_mask(logits: &Tensor) -> Tensor {
     let (b, h, w, k) = logits.dims4();
+    argmax_mask_from(logits.data(), b, h, w, k)
+}
+
+/// [`argmax_mask`] over a raw logits slice (the pooled worker path keeps
+/// batch logits in a workspace slab; only the mask — the client-owned
+/// response — is a fresh tensor).
+pub fn argmax_mask_from(src: &[f32], b: usize, h: usize, w: usize,
+                        k: usize) -> Tensor {
     assert!(k > 0);
-    let src = logits.data();
+    assert_eq!(src.len(), b * h * w * k, "logits size");
     let mut out = Tensor::zeros(&[b, h, w, 1]);
     for (pix, dst) in out.data_mut().iter_mut().enumerate() {
         let row = &src[pix * k..(pix + 1) * k];

@@ -263,6 +263,23 @@ impl Tensor {
     }
 }
 
+/// In-place slice relu — the pooled forwards' analogue of
+/// [`Tensor::relu`]. One definition shared by the gan/seg slice paths,
+/// so activation semantics cannot drift from the tensor path (which
+/// would silently break pooled-vs-fresh bit-identity).
+pub fn relu_inplace(xs: &mut [f32]) {
+    for v in xs {
+        *v = v.max(0.0);
+    }
+}
+
+/// In-place slice tanh — see [`relu_inplace`].
+pub fn tanh_inplace(xs: &mut [f32]) {
+    for v in xs {
+        *v = v.tanh();
+    }
+}
+
 impl fmt::Debug for Tensor {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "Tensor{:?}", self.shape)?;

@@ -1,0 +1,322 @@
+//! Checkout/checkin buffer pool — the zero-allocation hot-path substrate
+//! (DESIGN.md §9).
+//!
+//! The paper's headline claim is a smaller memory footprint and fewer
+//! memory accesses, yet a naive implementation re-allocates scratch on
+//! every forward: GEMM packing panels, deconv sub-outputs and tap
+//! buffers, im2col column matrices, padded batch latents. A [`Workspace`]
+//! makes steady-state serving allocation-free: buffers are checked out of
+//! a size-classed pool, used, and checked back in; after a warmup pass
+//! every checkout is a pool hit and `bytes_allocated` stays flat — a
+//! *testable invariant* (`tests/workspace_stack.rs`), not a hope.
+//!
+//! Design:
+//!
+//! * **Size classes** — slabs are `f32` boxes of power-of-two length
+//!   (≥ [`MIN_CLASS`]); a checkout of `len` elements draws from class
+//!   `len.next_power_of_two()` and exposes exactly `len` elements via
+//!   [`WsBuf`]'s `Deref`. Rounding keeps the class count tiny and lets
+//!   near-miss shapes (e.g. per-pattern polyphase buffers) share slabs.
+//! * **Per-thread handles** — [`Workspace::handle`] returns a
+//!   [`WsHandle`] holding a lock-free local cache; the shared pool's
+//!   mutex is touched only on local-cache misses and at handle drop
+//!   (which returns the cache to the pool). Scoped worker threads each
+//!   create a handle from the same `&Workspace`.
+//! * **Dirty reuse** — checked-out buffers contain whatever the previous
+//!   user left. Every pooled compute path either fully overwrites its
+//!   scratch before reading it (GEMM packing, im2col, tap A-assembly) or
+//!   checks out zeroed ([`WsHandle::checkout_zeroed`]: padded inputs,
+//!   zero-inflated tensors). The pooled-vs-fresh bit-identity property
+//!   grid (`tests/prop_engines.rs`) enforces this with NaN poisoning:
+//!   any path that reads stale bytes diverges loudly.
+//! * **Counters** — atomic `bytes_allocated` / `checkouts` /
+//!   `pool_hits` / `pool_misses` make "zero steady-state allocation" an
+//!   assertable property: after warmup, `bytes_allocated` must not grow.
+
+use std::collections::HashMap;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Mutex;
+
+/// Smallest slab class (elements). 256 f32 = 1 KiB.
+pub const MIN_CLASS: usize = 256;
+
+/// Size class for a requested length: next power of two, floored at
+/// [`MIN_CLASS`].
+#[inline]
+pub fn class_of(len: usize) -> usize {
+    len.max(MIN_CLASS).next_power_of_two()
+}
+
+/// Point-in-time view of a workspace's counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct WorkspaceCounters {
+    /// Total bytes of *fresh* slab allocations (cumulative; one increment
+    /// per pool miss). Flat ⇔ the pool is serving every checkout.
+    pub bytes_allocated: u64,
+    /// Total checkouts (hits + misses).
+    pub checkouts: u64,
+    /// Checkouts served from a handle's local cache or the shared pool.
+    pub pool_hits: u64,
+    /// Checkouts that had to allocate a fresh slab.
+    pub pool_misses: u64,
+}
+
+/// A size-classed pool of `f32` slabs shared by any number of
+/// [`WsHandle`]s. `Sync`: the shared pool is mutex-guarded, counters are
+/// atomic.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    shared: Mutex<HashMap<usize, Vec<Box<[f32]>>>>,
+    bytes_allocated: AtomicU64,
+    checkouts: AtomicU64,
+    pool_hits: AtomicU64,
+    pool_misses: AtomicU64,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A checkout/checkin handle with a lock-free local cache. Create one
+    /// per thread; drop returns its cached slabs to the shared pool.
+    pub fn handle(&self) -> WsHandle<'_> {
+        WsHandle { ws: self, local: HashMap::new() }
+    }
+
+    /// Counter snapshot (atomics, `Relaxed` — exact once the engine is
+    /// quiescent, monotone always).
+    pub fn counters(&self) -> WorkspaceCounters {
+        WorkspaceCounters {
+            bytes_allocated: self.bytes_allocated.load(Relaxed),
+            checkouts: self.checkouts.load(Relaxed),
+            pool_hits: self.pool_hits.load(Relaxed),
+            pool_misses: self.pool_misses.load(Relaxed),
+        }
+    }
+
+    /// Bytes currently parked in the shared pool (excludes handles'
+    /// local caches and checked-out buffers).
+    pub fn pooled_bytes(&self) -> u64 {
+        let shared = self.lock_shared();
+        shared
+            .values()
+            .flat_map(|v| v.iter())
+            .map(|s| (s.len() * 4) as u64)
+            .sum()
+    }
+
+    /// Overwrite every slab in the shared pool with `v` (test hook: NaN
+    /// poisoning proves pooled compute paths never read stale scratch —
+    /// a forgotten overwrite propagates NaN into the output checksum).
+    pub fn poison(&self, v: f32) {
+        let mut shared = self.lock_shared();
+        for slabs in shared.values_mut() {
+            for s in slabs.iter_mut() {
+                s.fill(v);
+            }
+        }
+    }
+
+    fn lock_shared(
+        &self,
+    ) -> std::sync::MutexGuard<'_, HashMap<usize, Vec<Box<[f32]>>>> {
+        // A panicking checkout holder must not wedge every other worker:
+        // the pool holds only plain slabs, so a poisoned lock is safe to
+        // bypass.
+        self.shared.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// A checked-out slab exposing exactly the requested length. Contents
+/// are **dirty** unless it came from [`WsHandle::checkout_zeroed`] —
+/// callers must fully overwrite before reading (see module docs).
+/// `Send`: moving a buffer across threads (e.g. a per-pattern sub-output
+/// handed back for scatter) is fine; check it in to any handle of the
+/// same workspace.
+#[derive(Debug)]
+pub struct WsBuf {
+    slab: Box<[f32]>,
+    len: usize,
+}
+
+impl Deref for WsBuf {
+    type Target = [f32];
+
+    #[inline]
+    fn deref(&self) -> &[f32] {
+        &self.slab[..self.len]
+    }
+}
+
+impl DerefMut for WsBuf {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.slab[..self.len]
+    }
+}
+
+/// Per-thread checkout/checkin handle (see [`Workspace::handle`]).
+#[derive(Debug)]
+pub struct WsHandle<'w> {
+    ws: &'w Workspace,
+    local: HashMap<usize, Vec<Box<[f32]>>>,
+}
+
+impl<'w> WsHandle<'w> {
+    /// The pool this handle draws from (lets a single-threaded caller
+    /// hand the same workspace to a multi-threaded engine).
+    pub fn workspace(&self) -> &'w Workspace {
+        self.ws
+    }
+
+    /// Check out `len` elements of **dirty** scratch.
+    pub fn checkout(&mut self, len: usize) -> WsBuf {
+        let class = class_of(len);
+        self.ws.checkouts.fetch_add(1, Relaxed);
+        let mut reused = self.local.get_mut(&class).and_then(|v| v.pop());
+        if reused.is_none() {
+            reused =
+                self.ws.lock_shared().get_mut(&class).and_then(|v| v.pop());
+        }
+        let slab = match reused {
+            Some(s) => {
+                self.ws.pool_hits.fetch_add(1, Relaxed);
+                s
+            }
+            None => {
+                self.ws.pool_misses.fetch_add(1, Relaxed);
+                self.ws
+                    .bytes_allocated
+                    .fetch_add((class * 4) as u64, Relaxed);
+                vec![0.0f32; class].into_boxed_slice()
+            }
+        };
+        WsBuf { slab, len }
+    }
+
+    /// Check out `len` elements zeroed (for buffers whose zeros are
+    /// load-bearing: padded borders, zero-inflated tensors).
+    pub fn checkout_zeroed(&mut self, len: usize) -> WsBuf {
+        let mut buf = self.checkout(len);
+        buf.fill(0.0);
+        buf
+    }
+
+    /// Return a buffer to this handle's local cache.
+    pub fn checkin(&mut self, buf: WsBuf) {
+        self.local.entry(buf.slab.len()).or_default().push(buf.slab);
+    }
+}
+
+impl Drop for WsHandle<'_> {
+    fn drop(&mut self) {
+        if self.local.is_empty() {
+            return;
+        }
+        let mut shared = self.ws.lock_shared();
+        for (class, mut slabs) in self.local.drain() {
+            shared.entry(class).or_default().append(&mut slabs);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_rounding() {
+        assert_eq!(class_of(0), MIN_CLASS);
+        assert_eq!(class_of(1), MIN_CLASS);
+        assert_eq!(class_of(256), 256);
+        assert_eq!(class_of(257), 512);
+        assert_eq!(class_of(100_000), 131_072);
+    }
+
+    #[test]
+    fn checkout_len_and_reuse() {
+        let ws = Workspace::new();
+        let mut h = ws.handle();
+        let mut a = h.checkout(300);
+        assert_eq!(a.len(), 300);
+        a[299] = 7.0;
+        h.checkin(a);
+        // same class (512) — must be a hit, and dirty
+        let b = h.checkout(400);
+        assert_eq!(b.len(), 400);
+        let c = ws.counters();
+        assert_eq!(c.checkouts, 2);
+        assert_eq!(c.pool_misses, 1);
+        assert_eq!(c.pool_hits, 1);
+        assert_eq!(c.bytes_allocated, 512 * 4);
+    }
+
+    #[test]
+    fn zeroed_checkout_zeros_requested_len() {
+        let ws = Workspace::new();
+        let mut h = ws.handle();
+        let mut a = h.checkout(128);
+        a.fill(9.0);
+        h.checkin(a);
+        let b = h.checkout_zeroed(64);
+        assert!(b.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn handle_drop_returns_to_shared_pool() {
+        let ws = Workspace::new();
+        {
+            let mut h = ws.handle();
+            let a = h.checkout(1000);
+            h.checkin(a);
+        }
+        assert_eq!(ws.pooled_bytes(), 1024 * 4);
+        let mut h2 = ws.handle();
+        let _b = h2.checkout(1024);
+        let c = ws.counters();
+        assert_eq!(c.pool_misses, 1, "second handle must hit the pool");
+        assert_eq!(c.pool_hits, 1);
+    }
+
+    #[test]
+    fn cross_thread_checkout() {
+        let ws = Workspace::new();
+        {
+            let mut h = ws.handle();
+            let b = h.checkout(5000);
+            h.checkin(b);
+        }
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                s.spawn(|| {
+                    let mut h = ws.handle();
+                    let b = h.checkout(5000);
+                    h.checkin(b);
+                });
+            }
+        });
+        let c = ws.counters();
+        assert_eq!(c.checkouts, 3);
+        // at most one extra slab: the two threads may or may not overlap
+        assert!(c.pool_misses <= 2);
+        assert!(c.pool_hits >= 1);
+    }
+
+    #[test]
+    fn poison_marks_pooled_slabs() {
+        let ws = Workspace::new();
+        {
+            let mut h = ws.handle();
+            let b = h.checkout(256);
+            h.checkin(b);
+        }
+        ws.poison(f32::NAN);
+        let mut h = ws.handle();
+        let b = h.checkout(256);
+        assert!(b[0].is_nan(), "dirty checkout must expose poisoned bytes");
+        let z = h.checkout_zeroed(256);
+        assert!(z.iter().all(|&v| v == 0.0));
+    }
+}

@@ -8,10 +8,12 @@
 //!  * decomposition partitions the kernel taps exactly
 //!  * MAC accounting: huge2 ≤ naive, equality iff stride == 1
 
-use huge2::deconv::{axis_pattern, baseline, dilated, huge2 as engine,
-                    parallel, polyphase_len, DeconvParams, DilatedParams};
+use huge2::deconv::{axis_pattern, baseline, col2im_baseline, dilated,
+                    huge2 as engine, parallel, polyphase_len, DeconvParams,
+                    DilatedParams};
 use huge2::rng::Rng;
 use huge2::tensor::Tensor;
+use huge2::workspace::Workspace;
 
 const CASES: usize = 120;
 
@@ -118,6 +120,120 @@ fn dilated_property_grid_all_engines() {
             }
         }
     }
+}
+
+/// Pooled-vs-fresh bit-identity over the transposed-conv engine grid:
+/// for every engine variant × shape × thread count, a forward through a
+/// **dirty** (NaN-poisoned, cross-shape-reused) workspace must be
+/// bit-identical to one through fresh allocations. Any pooled path that
+/// reads stale scratch instead of fully overwriting it propagates NaN
+/// into the checksum and fails loudly (DESIGN.md §9).
+#[test]
+fn pooled_transpose_grid_bit_identical_to_fresh() {
+    let ws = Workspace::new(); // ONE pool across all shapes: buffers are
+                               // reused dirty across engines and sizes
+    let mut rng = Rng::new(0xa11c);
+    let shapes = [
+        (4, 16, 8, 5, DeconvParams::new(2, 2, 1)),
+        (8, 8, 4, 4, DeconvParams::new(2, 1, 0)),
+        (5, 3, 2, 5, DeconvParams::new(3, 2, 1)),
+        (3, 2, 2, 3, DeconvParams::new(2, 0, 0)),
+    ];
+    for &(h, c, n, r, p) in &shapes {
+        let x = Tensor::randn(&[2, h, h, c], &mut rng);
+        let k = Tensor::randn(&[r, r, c, n], &mut rng);
+        let patterns = engine::decompose(&k, &p);
+        let ctx = format!("h={h} c={c} n={n} r={r} {p:?}");
+
+        ws.poison(f32::NAN);
+        assert_eq!(
+            engine::conv2d_transpose_ws(&x, &patterns, r, r, &p,
+                                        &mut ws.handle()).checksum(),
+            engine::conv2d_transpose_with(&x, &patterns, r, r, &p)
+                .checksum(),
+            "huge2 st pooled != fresh: {ctx}");
+
+        ws.poison(f32::NAN);
+        assert_eq!(
+            baseline::conv2d_transpose_ws(&x, &k, &p, &mut ws.handle())
+                .checksum(),
+            baseline::conv2d_transpose(&x, &k, &p).checksum(),
+            "baseline st pooled != fresh: {ctx}");
+
+        ws.poison(f32::NAN);
+        assert_eq!(
+            col2im_baseline::conv2d_transpose_ws(&x, &k, &p,
+                                                 &mut ws.handle())
+                .checksum(),
+            col2im_baseline::conv2d_transpose(&x, &k, &p).checksum(),
+            "col2im pooled != fresh: {ctx}");
+
+        for threads in [1usize, 2, 4, 7] {
+            ws.poison(f32::NAN);
+            assert_eq!(
+                parallel::huge2_conv2d_transpose_mt_ws(
+                    &x, &patterns, r, r, &p, threads, &ws).checksum(),
+                parallel::huge2_conv2d_transpose_mt(
+                    &x, &patterns, r, r, &p, threads).checksum(),
+                "huge2 mt{threads} pooled != fresh: {ctx}");
+            ws.poison(f32::NAN);
+            assert_eq!(
+                parallel::baseline_conv2d_transpose_mt_ws(
+                    &x, &k, &p, threads, &ws).checksum(),
+                parallel::baseline_conv2d_transpose_mt(
+                    &x, &k, &p, threads).checksum(),
+                "baseline mt{threads} pooled != fresh: {ctx}");
+        }
+    }
+    let c = ws.counters();
+    assert!(c.pool_hits > 0, "grid must actually exercise buffer reuse");
+    assert!(c.pool_misses < c.checkouts,
+            "steady pool must serve most checkouts");
+}
+
+/// Same discipline over the dilated-conv engine grid (naive, untangled
+/// strided, prepacked, multi-threaded × thread counts).
+#[test]
+fn pooled_dilated_grid_bit_identical_to_fresh() {
+    let ws = Workspace::new();
+    let mut rng = Rng::new(0xd11a);
+    let shapes = [
+        (13, 4, 3, 3, DilatedParams::new(2, 1, 2)),
+        (13, 3, 2, 3, DilatedParams::new(2, 2, 2)),
+        (9, 2, 5, 1, DilatedParams::new(1, 1, 0)),
+        (17, 2, 2, 3, DilatedParams::new(3, 2, 3)),
+    ];
+    for &(h, c, n, r, p) in &shapes {
+        let x = Tensor::randn(&[2, h, h, c], &mut rng);
+        let k = Tensor::randn(&[r, r, c, n], &mut rng);
+        let taps = dilated::pack_taps(&k);
+        let ctx = format!("h={h} c={c} n={n} r={r} {p:?}");
+
+        ws.poison(f32::NAN);
+        assert_eq!(
+            baseline::conv2d_dilated_ws(&x, &k, &p, &mut ws.handle())
+                .checksum(),
+            baseline::conv2d_dilated(&x, &k, &p).checksum(),
+            "baseline dilated pooled != fresh: {ctx}");
+
+        ws.poison(f32::NAN);
+        assert_eq!(
+            dilated::conv2d_dilated_ws(&x, &taps, &p, &mut ws.handle())
+                .checksum(),
+            dilated::conv2d_dilated_with(&x, &taps, &p).checksum(),
+            "untangled dilated pooled != fresh: {ctx}");
+
+        for threads in [1usize, 2, 3, 7, 64] {
+            ws.poison(f32::NAN);
+            assert_eq!(
+                parallel::conv2d_dilated_mt_ws(&x, &taps, &p, threads,
+                                               &ws).checksum(),
+                parallel::conv2d_dilated_mt(&x, &taps, &p, threads)
+                    .checksum(),
+                "dilated mt{threads} pooled != fresh: {ctx}");
+        }
+    }
+    assert!(ws.counters().pool_hits > 0);
 }
 
 #[test]

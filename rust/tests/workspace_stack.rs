@@ -1,0 +1,208 @@
+//! Workspace-stack integration tests (DESIGN.md §9): the
+//! zero-steady-state-allocation invariant over the full serving engine,
+//! pooled-vs-fresh bit-identity at the model level, and a concurrent
+//! multi-model record→replay soak exercising workspace reuse under real
+//! worker interleaving.
+
+use huge2::config::{tiny_segnet, EngineConfig};
+use huge2::coordinator::{Engine, Model, Payload};
+use huge2::deconv::Engine as Eng;
+use huge2::gan::Generator;
+use huge2::replay::{EventBody, Replayer, Timing, TraceHeader, TraceSink};
+use huge2::rng::Rng;
+use huge2::seg::SegNet;
+use huge2::tensor::Tensor;
+use huge2::workspace::Workspace;
+use std::sync::Arc;
+
+// ------------------------------------------------- model-level identity
+
+/// Generator + SegNet forwards through a dirty (NaN-poisoned, reused)
+/// workspace must be bit-identical to the fresh-allocation twin, for
+/// both engines.
+#[test]
+fn model_forwards_bit_identical_through_dirty_workspace() {
+    let ws = Workspace::new();
+
+    let gen = Generator::tiny_cgan(5);
+    let z = Tensor::randn(&[3, 8], &mut Rng::new(2));
+    for engine in [Eng::Huge2, Eng::Baseline] {
+        let fresh = gen.forward(&z, engine);
+        for round in 0..2 {
+            ws.poison(f32::NAN);
+            let pooled = gen.forward_ws(&z, engine, &mut ws.handle());
+            assert_eq!(pooled.checksum(), fresh.checksum(),
+                       "generator {engine:?} round {round}");
+        }
+    }
+
+    let net = SegNet::new(&tiny_segnet(), 7);
+    let mut img_data = Vec::new();
+    for s in [20u64, 21] {
+        img_data.extend(Tensor::randn(&[1, 9, 9, 2], &mut Rng::new(s))
+            .into_vec());
+    }
+    let x = Tensor::from_vec(&[2, 9, 9, 2], img_data);
+    for over in [None, Some(Eng::Huge2), Some(Eng::Baseline)] {
+        let fresh = net.forward_with(&x, over);
+        ws.poison(f32::NAN);
+        let pooled = net.forward_ws(&x, over, &mut ws.handle());
+        assert_eq!(pooled.checksum(), fresh.checksum(), "segnet {over:?}");
+    }
+
+    let c = ws.counters();
+    assert!(c.pool_hits > 0, "models must actually reuse pooled buffers");
+}
+
+// ------------------------------------------- steady-state allocation
+
+fn mixed_engine(workers: usize) -> Engine {
+    let cfg = EngineConfig {
+        workers,
+        queue_depth: 64,
+        max_batch: 4,
+        batch_timeout_us: 500,
+        ..EngineConfig::default()
+    };
+    let mut e = Engine::new(cfg);
+    e.register_native(Model::native(
+        "tiny", Arc::new(Generator::tiny_cgan(5)), 0)).unwrap();
+    e.register_native(Model::native_seg(
+        "seg", Arc::new(SegNet::new(&tiny_segnet(), 5)))).unwrap();
+    e
+}
+
+fn gen_once(e: &Engine, rng: &mut Rng) {
+    let z: Vec<f32> = (0..8).map(|_| rng.next_normal()).collect();
+    let r = e.generate("tiny", z, vec![]).unwrap();
+    assert_eq!(r.output.shape(), &[1, 32, 32, 3]);
+}
+
+fn seg_once(e: &Engine, seed: u64) {
+    let img = Tensor::randn(&[1, 9, 9, 2], &mut Rng::new(seed));
+    let r = e.segment("seg", img, seed).unwrap();
+    assert_eq!(r.output.shape(), &[1, 9, 9, 1]);
+}
+
+/// The headline regression test: serve batches through engine + workers,
+/// snapshot the workspace counters after a warmup batch per worker, and
+/// assert `bytes_allocated` does not grow afterwards — pool misses
+/// happen only during warmup; steady-state serving is allocation-free.
+#[test]
+fn steady_state_serving_is_allocation_free() {
+    let e = mixed_engine(1);
+    let mut rng = Rng::new(40);
+    // warmup: one batch per model's worker (plus one spare round)
+    for _ in 0..2 {
+        gen_once(&e, &mut rng);
+        seg_once(&e, 800);
+    }
+    let warm = e.workspace_counters();
+    assert!(warm.pool_misses > 0, "warmup must populate the pool");
+
+    // ≥ 8 steady batches per model — counters must stay flat
+    for i in 0..8u64 {
+        gen_once(&e, &mut rng);
+        seg_once(&e, 810 + i);
+    }
+    let steady = e.workspace_counters();
+    assert_eq!(steady.bytes_allocated, warm.bytes_allocated,
+               "steady-state serving allocated fresh slabs: \
+                warm={warm:?} steady={steady:?}");
+    assert_eq!(steady.pool_misses, warm.pool_misses,
+               "pool misses after warmup: warm={warm:?} steady={steady:?}");
+    assert!(steady.checkouts > warm.checkouts,
+            "steady batches must run through the pool");
+    assert_eq!(steady.pool_hits - warm.pool_hits,
+               steady.checkouts - warm.checkouts,
+               "every steady checkout must be a pool hit");
+    e.shutdown();
+}
+
+// ----------------------------------------- concurrent multi-model soak
+
+/// Record a seeded mixed generate+segment stream driven concurrently
+/// against two models, then fast-replay the trace and assert zero
+/// divergence — workspace reuse under real worker interleaving must not
+/// perturb a single output bit.
+#[test]
+fn concurrent_mixed_soak_replays_divergence_free() {
+    let per_model = 24usize;
+    let build = |sink: Option<Arc<TraceSink>>| {
+        let cfg = EngineConfig {
+            workers: 2,
+            queue_depth: 256,
+            max_batch: 4,
+            batch_timeout_us: 500,
+            ..EngineConfig::default()
+        };
+        let mut e = Engine::new(cfg);
+        if let Some(s) = sink {
+            e.set_trace_sink(s).unwrap();
+        }
+        e.register_native(Model::native(
+            "tiny", Arc::new(Generator::tiny_cgan(5)), 0)).unwrap();
+        e.register_native(Model::native_seg(
+            "seg", Arc::new(SegNet::new(&tiny_segnet(), 5)))).unwrap();
+        e
+    };
+
+    let sink = Arc::new(TraceSink::new());
+    let eng = Arc::new(build(Some(sink.clone())));
+    std::thread::scope(|s| {
+        let e = eng.clone();
+        s.spawn(move || {
+            let mut rng = Rng::new(91);
+            let mut pending = Vec::new();
+            for _ in 0..per_model {
+                let z: Vec<f32> =
+                    (0..8).map(|_| rng.next_normal()).collect();
+                pending.push(e.submit("tiny", Payload::latent(z, vec![]))
+                    .unwrap());
+            }
+            for rx in pending {
+                rx.recv().unwrap();
+            }
+        });
+        let e = eng.clone();
+        s.spawn(move || {
+            let mut pending = Vec::new();
+            for i in 0..per_model as u64 {
+                let seed = 700 + i;
+                let img = Tensor::randn(&[1, 9, 9, 2],
+                                        &mut Rng::new(seed));
+                pending.push(e.submit("seg", Payload::image(img, seed))
+                    .unwrap());
+            }
+            for rx in pending {
+                rx.recv().unwrap();
+            }
+        });
+    });
+    let events = sink.snapshot();
+    Arc::into_inner(eng).expect("submitters done").shutdown();
+    let responses = events
+        .iter()
+        .filter(|e| matches!(e.body, EventBody::Response { .. }))
+        .count();
+    assert_eq!(responses, 2 * per_model);
+
+    let header = TraceHeader {
+        model: "tiny".into(),
+        backend: "native".into(),
+        seed: 5,
+        z_dim: 8,
+        cond_dim: 0,
+        task: "generate".into(),
+        net: "tiny_segnet".into(),
+    };
+    let rp = Replayer::from_parts(header, sink.snapshot());
+    for run in 1..=2 {
+        let eng = build(None);
+        let report = rp.run(&eng, Timing::Fast).unwrap();
+        eng.shutdown();
+        assert!(report.is_clean(), "soak replay #{run} diverged: {:?}",
+                report.divergences);
+        assert_eq!(report.matched, 2 * per_model, "replay #{run}");
+    }
+}
