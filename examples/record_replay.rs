@@ -71,6 +71,7 @@ fn main() -> anyhow::Result<()> {
             cond_dim: 0,
             task: "generate".into(),
             net: String::new(),
+            engine_digest: String::new(),
         },
         sink,
     );

@@ -146,6 +146,106 @@ fn workspace_reuse_phase(quick: bool) {
               invariant through the serving engine)");
 }
 
+/// Plan-prepack phase (DESIGN.md §10): the same tiny-cGAN batch
+/// workload run with **legacy per-forward packing** — every batch
+/// re-decomposes the kernels and packs the tap panels inside the
+/// engine call, as a serving path without compiled plans would — vs
+/// the **prepack-once compiled plan** executing through a reused
+/// workspace. Reports ns/batch, B packed per batch, and workspace
+/// alloc B/batch; asserts the two strategies are bit-identical.
+fn plan_prepack_phase(quick: bool) {
+    use huge2::deconv::huge2 as engine2;
+    use huge2::gan::Engine as GanEngine;
+    use huge2::plan::ExecPlan;
+    use huge2::workspace::Workspace;
+
+    let batches = if quick { 4 } else { 16 };
+    let batch = 4usize;
+    let gen = Generator::tiny_cgan(11);
+    let mut rng = Rng::new(5);
+    let zs: Vec<huge2::tensor::Tensor> = (0..batches)
+        .map(|_| {
+            let data: Vec<f32> =
+                (0..batch * 8).map(|_| rng.next_normal()).collect();
+            huge2::tensor::Tensor::from_vec(&[batch, 8], data)
+        })
+        .collect();
+    let plan = ExecPlan::for_generator(&gen, GanEngine::Huge2);
+
+    println!("\n== compiled plans: prepack-once vs legacy per-forward \
+              packing ==\n");
+    let mut t = Table::new(&["mode", "batches", "ns/batch",
+                             "packed B/batch", "alloc B/batch",
+                             "checksum"]);
+
+    // legacy: the pre-plan API decomposes + packs B on every forward
+    let legacy_forward = |z: &huge2::tensor::Tensor| {
+        let (b, zd) = z.dims2();
+        let (_, hid) = gen.proj.dims2();
+        let mut cur = vec![0.0f32; b * hid];
+        huge2::gemm::sgemm(b, hid, zd, z.data(), gen.proj.data(),
+                           &mut cur, false);
+        let f = &gen.layers[0].cfg;
+        let mut x = huge2::tensor::Tensor::from_vec(
+            &[b, f.h, f.h, f.c_in], cur).relu();
+        let n = gen.layers.len();
+        for (i, l) in gen.layers.iter().enumerate() {
+            let y = engine2::conv2d_transpose(&x, &l.kernel,
+                                              &l.cfg.deconv_params());
+            x = if i == n - 1 { y.tanh() } else { y.relu() };
+        }
+        x
+    };
+    let mut legacy_sum = 0u64;
+    let t0 = Instant::now();
+    for z in &zs {
+        legacy_sum ^= legacy_forward(z).checksum();
+    }
+    let t_legacy = t0.elapsed();
+    t.row(&[
+        "legacy (pack every forward)".into(),
+        batches.to_string(),
+        format!("{}", t_legacy.as_nanos() as u64 / batches as u64),
+        plan.prepacked_bytes().to_string(),
+        "fresh scratch".into(),
+        format!("{legacy_sum:016x}"),
+    ]);
+
+    // plan: packed once at compile; steady batches reuse the pool
+    let ws = Workspace::new();
+    let mut hnd = ws.handle();
+    let mut plan_sum = 0u64;
+    let t0 = Instant::now();
+    plan_sum ^= plan.run(&zs[0], &mut hnd).checksum();
+    let warm = ws.counters();
+    for z in &zs[1..] {
+        plan_sum ^= plan.run(z, &mut hnd).checksum();
+    }
+    let t_plan = t0.elapsed();
+    let steady = ws.counters();
+    let steady_batches = (batches - 1).max(1) as u64;
+    t.row(&[
+        "plan (prepack once)".into(),
+        batches.to_string(),
+        format!("{}", t_plan.as_nanos() as u64 / batches as u64),
+        "0".into(),
+        format!("{}",
+                (steady.bytes_allocated - warm.bytes_allocated)
+                    / steady_batches),
+        format!("{plan_sum:016x}"),
+    ]);
+    t.print();
+    assert_eq!(legacy_sum, plan_sum,
+               "prepack-once plan must be bit-identical to per-forward \
+                packing");
+    assert_eq!(steady.bytes_allocated, warm.bytes_allocated,
+               "steady plan batches must not allocate");
+    println!("(plan compiled once at model load: {} prepacked bytes, \
+              digest {:016x}, ws high-water {}B at batch {batch})",
+             plan.prepacked_bytes(), plan.engine_digest(),
+             4 * plan.high_water_elems(batch));
+}
+
 /// Replay-driven regression entry: record one bursty native serve run,
 /// then re-drive the identical workload twice in fast mode against fresh
 /// engines. Divergence aborts the bench — a perf number from an engine
@@ -206,6 +306,7 @@ fn replay_regression(quick: bool) {
             cond_dim: 0,
             task: "generate".into(),
             net: String::new(),
+            engine_digest: String::new(),
         },
         sink,
     );
@@ -307,6 +408,7 @@ fn seg_replay_regression(quick: bool) {
             cond_dim: 0,
             task: "segment".into(),
             net: "tiny_segnet".into(),
+            engine_digest: String::new(),
         },
         sink,
     );
@@ -337,6 +439,7 @@ fn main() {
     let per_client = if quick { 2 } else { 6 };
 
     workspace_reuse_phase(quick);
+    plan_prepack_phase(quick);
     replay_regression(quick);
     seg_replay_regression(quick);
 

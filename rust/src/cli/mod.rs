@@ -3,6 +3,8 @@
 //! ```text
 //! huge2 inspect                       # Table 1, MAC counts, artifacts
 //! huge2 bench --layer dcgan_dc3       # one layer, both engines
+//! huge2 plan --net segnet             # compiled plan: engines, threads,
+//!                                     # prepacked bytes, ws high-water
 //! huge2 serve --model dcgan --rate 2 --requests 20
 //! huge2 serve --native --record t.jsonl
 //! huge2 serve --task segment --record t.jsonl   # seg-net serving
@@ -32,8 +34,8 @@ impl Args {
         let mut it = argv.iter();
         let subcommand = it
             .next()
-            .ok_or_else(|| anyhow!("usage: huge2 <inspect|bench|serve|\
-                                    segment|replay|reproduce> \
+            .ok_or_else(|| anyhow!("usage: huge2 <inspect|bench|plan|\
+                                    serve|segment|replay|reproduce> \
                                     [positional] [--key value]"))?
             .clone();
         let mut positionals = Vec::new();

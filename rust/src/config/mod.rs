@@ -99,7 +99,8 @@ pub struct SegLayerConfig {
     /// Kernel size (square).
     pub k: usize,
     pub params: DilatedParams,
-    /// Baseline vs HUGE² untangled dilated conv for this layer.
+    /// Baseline vs HUGE² untangled dilated conv for this layer — or
+    /// [`Engine::Auto`] to resolve from the plan heuristic at load time.
     pub engine: Engine,
     /// Threads for this layer's forward (1 = single-threaded). The MT
     /// engine is bit-identical across thread counts, so this is a pure
@@ -126,7 +127,12 @@ pub struct SegNetConfig {
     pub n_classes: usize,
 }
 
-const SEG_HUGE2: Engine = Engine::Huge2;
+/// Registry default: resolve each layer's engine (and, for heavy
+/// layers, its thread count) at plan-compile time from the build-time
+/// heuristic in [`crate::plan`] — "load-time engine selection"
+/// (DESIGN.md §10). Explicit `Engine::Baseline`/`Engine::Huge2` remain
+/// valid per-layer choices.
+const SEG_AUTO: Engine = Engine::Auto;
 
 /// The canonical serving segnet: 33×33×3 input, ASPP at dilations
 /// 1/2/4/8 over 64 channels (the same geometry as [`dilated_workloads`]),
@@ -138,30 +144,30 @@ pub fn segnet() -> SegNetConfig {
         name: "segnet",
         trunk: vec![
             SegLayerConfig { name: "seg_enc1", h: 33, c_in: 3, c_out: 32,
-                             k: 3, params: d(1), engine: SEG_HUGE2,
+                             k: 3, params: d(1), engine: SEG_AUTO,
                              threads: 4 },
             SegLayerConfig { name: "seg_enc2", h: 33, c_in: 32, c_out: 64,
-                             k: 3, params: d(2), engine: SEG_HUGE2,
+                             k: 3, params: d(2), engine: SEG_AUTO,
                              threads: 4 },
         ],
         aspp: vec![
             SegLayerConfig { name: "seg_aspp_d1", h: 33, c_in: 64,
                              c_out: 64, k: 3, params: d(1),
-                             engine: SEG_HUGE2, threads: 1 },
+                             engine: SEG_AUTO, threads: 1 },
             SegLayerConfig { name: "seg_aspp_d2", h: 33, c_in: 64,
                              c_out: 64, k: 3, params: d(2),
-                             engine: SEG_HUGE2, threads: 1 },
+                             engine: SEG_AUTO, threads: 1 },
             SegLayerConfig { name: "seg_aspp_d4", h: 33, c_in: 64,
                              c_out: 64, k: 3, params: d(4),
-                             engine: SEG_HUGE2, threads: 1 },
+                             engine: SEG_AUTO, threads: 1 },
             SegLayerConfig { name: "seg_aspp_d8", h: 33, c_in: 64,
                              c_out: 64, k: 3, params: d(8),
-                             engine: SEG_HUGE2, threads: 1 },
+                             engine: SEG_AUTO, threads: 1 },
         ],
         head: SegLayerConfig { name: "seg_head", h: 33, c_in: 64,
                                c_out: 12, k: 1,
                                params: DilatedParams::new(1, 1, 0),
-                               engine: SEG_HUGE2, threads: 1 },
+                               engine: SEG_AUTO, threads: 1 },
         n_classes: 12,
     }
 }
@@ -175,18 +181,18 @@ pub fn tiny_segnet() -> SegNetConfig {
         name: "tiny_segnet",
         trunk: vec![SegLayerConfig { name: "tseg_enc1", h: 9, c_in: 2,
                                      c_out: 4, k: 3, params: d(1),
-                                     engine: SEG_HUGE2, threads: 1 }],
+                                     engine: SEG_AUTO, threads: 1 }],
         aspp: vec![
             SegLayerConfig { name: "tseg_aspp_d1", h: 9, c_in: 4, c_out: 4,
-                             k: 3, params: d(1), engine: SEG_HUGE2,
+                             k: 3, params: d(1), engine: SEG_AUTO,
                              threads: 1 },
             SegLayerConfig { name: "tseg_aspp_d2", h: 9, c_in: 4, c_out: 4,
-                             k: 3, params: d(2), engine: SEG_HUGE2,
+                             k: 3, params: d(2), engine: SEG_AUTO,
                              threads: 1 },
         ],
         head: SegLayerConfig { name: "tseg_head", h: 9, c_in: 4, c_out: 3,
                                k: 1, params: DilatedParams::new(1, 1, 0),
-                               engine: SEG_HUGE2, threads: 1 },
+                               engine: SEG_AUTO, threads: 1 },
         n_classes: 3,
     }
 }

@@ -92,6 +92,18 @@ impl Engine {
         self.workspace.counters()
     }
 
+    /// Engine-selection digest of a registered native model's compiled
+    /// plan (`None` for unknown models and PJRT backends). Recorded in
+    /// trace headers and re-checked by [`crate::replay::Replayer::run`]
+    /// so `Engine::Auto` replays deterministically even if the
+    /// heuristic changed between builds (DESIGN.md §10).
+    pub fn plan_digest(&self, model: &str) -> Option<u64> {
+        self.models
+            .get(model)
+            .and_then(|mr| mr.model.plan())
+            .map(|p| p.engine_digest())
+    }
+
     /// Install a recording sink (see [`crate::replay`]). Must be called
     /// before any model is registered — workers capture the sink when
     /// they are spawned.

@@ -16,6 +16,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::gan::Generator;
+use crate::plan::ExecPlan;
 use crate::replay::event::ArrivalPayload;
 use crate::rng::Rng;
 use crate::runtime::RuntimeHandle;
@@ -171,6 +172,11 @@ pub struct Model {
     pub backend: Backend,
     /// Single-request output shape `(1, H, W, C)`.
     pub out_shape: Vec<usize>,
+    /// The compiled serving plan (native backends; `None` for PJRT).
+    /// Workers execute this uniformly — for the seg model it already
+    /// ends in the argmax head, so `run_into` yields the client-ready
+    /// output for **both** tasks (DESIGN.md §10).
+    plan: Option<ExecPlan>,
 }
 
 impl Model {
@@ -219,13 +225,17 @@ impl Model {
             buckets: buckets.to_vec(),
             backend: Backend::Pjrt(runtime),
             out_shape,
+            plan: None,
         })
     }
 
-    /// Build a natively-served generator (pure-Rust HUGE² engine).
+    /// Build a natively-served generator (pure-Rust HUGE² engine). The
+    /// model adopts the generator's load-time-compiled [`ExecPlan`]
+    /// (engine selection resolved, all prepacking done).
     pub fn native(name: &str, gen: Arc<Generator>, cond_dim: usize) -> Self {
         let out = gen.out_shape(1);
         let z_total = gen.proj.shape()[0];
+        let plan = gen.plan().clone();
         Model {
             name: name.to_string(),
             task: Task::Generate,
@@ -236,19 +246,18 @@ impl Model {
             buckets: vec![usize::MAX], // native path takes any batch size
             backend: Backend::Native(gen),
             out_shape: out,
+            plan: Some(plan),
         }
     }
 
     /// Build a natively-served segmentation model: image requests in,
-    /// class-argmax masks out. Like the generator path, the net's dilated
-    /// kernels were pre-decomposed (tap-packed) when the `SegNet` was
-    /// built — registration is load time, not inference time.
+    /// class-argmax masks out. The serving plan is the net's compiled
+    /// logits plan plus the argmax head — registration is load time,
+    /// not inference time.
     pub fn native_seg(name: &str, net: Arc<SegNet>) -> Self {
         let in_shape = net.in_shape();
-        // mask geometry follows the net's *output* spatial dims, which a
-        // strided/valid-padding config may shrink below the input's
-        let logits = net.logits_shape(1);
-        let mask = vec![1, logits[1], logits[2], 1];
+        let plan = net.plan().with_argmax_head(net.n_classes());
+        let out_shape = plan.out_shape(1);
         Model {
             name: name.to_string(),
             task: Task::Segment,
@@ -258,8 +267,14 @@ impl Model {
             in_shape,
             buckets: vec![usize::MAX],
             backend: Backend::NativeSeg(net),
-            out_shape: mask,
+            out_shape,
+            plan: Some(plan),
         }
+    }
+
+    /// The compiled serving plan (native backends).
+    pub fn plan(&self) -> Option<&ExecPlan> {
+        self.plan.as_ref()
     }
 
     /// Smallest compiled bucket that fits `n` (native: exactly `n`).

@@ -1,12 +1,11 @@
 //! Batch execution: fuse a batch of requests into one forward pass (PJRT
-//! artifact call, native generator, or native segmentation net — the
-//! dispatch point of the multi-task pipeline), then scatter replies.
+//! artifact call, or a native compiled [`crate::plan::ExecPlan`] — one
+//! uniform path for every native task), then scatter replies.
 
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::gan::Engine as NativeEngine;
 use crate::replay::event::EventBody;
 use crate::replay::recorder::TraceSink;
 use crate::tensor::Tensor;
@@ -62,9 +61,9 @@ pub fn execute_batch(model: &Model, batch: Vec<Request>,
     Ok(bucket)
 }
 
-/// Destructure a generate request's latent (+ conditioning) payload —
-/// the one copy of the payload-kind check both backends share. Kinds
-/// were validated at submit; a mismatch here is an engine bug.
+/// Destructure a generate request's latent (+ conditioning) payload
+/// (the PJRT gather path). Kinds were validated at submit; a mismatch
+/// here is an engine bug.
 fn latent_parts<'a>(model: &Model, r: &'a Request)
                     -> Result<(&'a [f32], &'a [f32])> {
     match &r.payload {
@@ -131,59 +130,39 @@ fn run_forward(model: &Model, batch: &[Request], bucket: usize,
                 .next()
                 .ok_or_else(|| anyhow!("{name}: no output"))
         }
-        Backend::Native(gen) => {
-            // Padded-batch latent buffer: pooled, zeroed (zero rows pad
-            // the batch up to `bucket`), reused across batches. On a
+        Backend::Native(_) | Backend::NativeSeg(_) => {
+            // One uniform native path: gather the request payloads into
+            // a pooled `(n, in_elems)` batch (latent rows or image rows
+            // — the only task-specific step left), then execute the
+            // model's load-time-compiled plan. The seg plan ends in the
+            // argmax head, so `run_into` yields the client-ready output
+            // for both tasks. Native buckets are exact (bucket == n);
+            // per-row compute is independent, so outputs stay
+            // batch-composition-invariant (DESIGN.md §8/§10). On a
             // gather error the buffer is checked back in, not dropped —
             // an error path must not shrink the pool.
-            let zd = model.z_dim + model.cond_dim;
-            let mut zin = hnd.checkout_zeroed(bucket * zd);
+            let plan = model.plan().expect("native backend without a plan");
+            let ie = plan.in_elems();
+            let mut xb = hnd.checkout(n * ie);
             let mut gather_err = None;
             for (i, r) in batch.iter().enumerate() {
-                match latent_parts(model, r) {
-                    Ok((z, cond)) => {
-                        zin[i * zd..i * zd + model.z_dim]
-                            .copy_from_slice(z);
-                        if model.cond_dim > 0 {
-                            zin[i * zd + model.z_dim..(i + 1) * zd]
-                                .copy_from_slice(cond);
-                        }
-                    }
-                    Err(e) => {
-                        gather_err = Some(e);
-                        break;
-                    }
-                }
-            }
-            if let Some(e) = gather_err {
-                hnd.checkin(zin);
-                return Err(e);
-            }
-            let mut out = Tensor::zeros(&gen.out_shape(bucket));
-            gen.forward_into(&zin, bucket, NativeEngine::Huge2,
-                             out.data_mut(), hnd);
-            hnd.checkin(zin);
-            Ok(out)
-        }
-        Backend::NativeSeg(net) => {
-            // Stack the (1, H, W, C) request images into one (n, H, W, C)
-            // batch (pooled gather buffer — fully overwritten). Native
-            // buckets are exact (bucket == n), so there is no padding;
-            // per-image compute is independent, so outputs stay
-            // batch-composition-invariant (DESIGN.md §8).
-            let (h, w, c) =
-                (model.in_shape[1], model.in_shape[2], model.in_shape[3]);
-            let mut xb = hnd.checkout(n * h * w * c);
-            let mut gather_err = None;
-            for (i, r) in batch.iter().enumerate() {
+                let row = &mut xb[i * ie..(i + 1) * ie];
                 match &r.payload {
-                    Payload::Image { tensor, .. } => {
-                        xb[i * h * w * c..(i + 1) * h * w * c]
-                            .copy_from_slice(tensor.data());
+                    Payload::Latent { z, cond }
+                        if z.len() + cond.len() == ie =>
+                    {
+                        row[..z.len()].copy_from_slice(z);
+                        row[z.len()..].copy_from_slice(cond);
+                    }
+                    Payload::Image { tensor, .. }
+                        if tensor.len() == ie =>
+                    {
+                        row.copy_from_slice(tensor.data());
                     }
                     other => {
                         gather_err = Some(anyhow!(
-                            "{}: segment batch got a {} payload",
+                            "{}: batch got an incompatible {} payload \
+                             (plan wants {ie} input elements)",
                             model.name, other.kind()));
                         break;
                     }
@@ -193,14 +172,10 @@ fn run_forward(model: &Model, batch: &[Request], bucket: usize,
                 hnd.checkin(xb);
                 return Err(e);
             }
-            let ls = net.logits_shape(n);
-            let mut logits = hnd.checkout(ls.iter().product());
-            net.forward_into(&xb, n, None, &mut logits, hnd);
-            let mask = crate::seg::argmax_mask_from(&logits, ls[0], ls[1],
-                                                    ls[2], ls[3]);
+            let mut out = Tensor::zeros(&plan.out_shape(n));
+            plan.run_into(&xb, n, out.data_mut(), hnd);
             hnd.checkin(xb);
-            hnd.checkin(logits);
-            Ok(mask)
+            Ok(out)
         }
     }
 }

@@ -27,6 +27,13 @@ pub struct DilatedTaps {
     pub(crate) packed: Vec<PackedB>,
 }
 
+impl DilatedTaps {
+    /// Bytes held by the packed tap panels (plan prepack accounting).
+    pub fn packed_bytes(&self) -> usize {
+        self.packed.iter().map(|p| p.bytes()).sum()
+    }
+}
+
 /// Pack every tap of `k` (HWIO `(R,S,C,N)`) for [`conv2d_dilated_with`].
 pub fn pack_taps(k: &Tensor) -> DilatedTaps {
     let (r, s, c, n) = k.dims4();

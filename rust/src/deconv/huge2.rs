@@ -100,6 +100,30 @@ pub fn conv2d_transpose_ws(x: &Tensor, patterns: &[Pattern], r: usize,
     out
 }
 
+/// Padded-input geometry shared by the single- and multi-threaded
+/// untangled transpose engines (and the plan's workspace accounting):
+/// `(pad_lo_y, pad_hi_y, pad_lo_x, pad_hi_x)` — a border generous
+/// enough to cover every pattern's receptive-field reach.
+pub(crate) fn pad_geometry(patterns: &[Pattern], h: usize, w: usize,
+                           ho: usize, wo: usize, st: usize)
+                           -> (usize, usize, usize, usize) {
+    let max_dy = patterns.iter().map(|pt| pt.ay.taps as isize - 1
+        + pt.ay.delta).max().unwrap_or(0);
+    let max_dx = patterns.iter().map(|pt| pt.ax.taps as isize - 1
+        + pt.ax.delta).max().unwrap_or(0);
+    let min_dy = patterns.iter().map(|pt| pt.ay.delta).min().unwrap_or(0);
+    let min_dx = patterns.iter().map(|pt| pt.ax.delta).min().unwrap_or(0);
+    let max_qy = (0..st).map(|phi| polyphase_len(ho, st, phi)).max().unwrap();
+    let max_qx = (0..st).map(|phi| polyphase_len(wo, st, phi)).max().unwrap();
+    let pad_lo_y = (-min_dy).max(0) as usize;
+    let pad_lo_x = (-min_dx).max(0) as usize;
+    let pad_hi_y = ((max_qy as isize - 1 + max_dy) - (h as isize - 1)).max(0)
+        as usize;
+    let pad_hi_x = ((max_qx as isize - 1 + max_dx) - (w as isize - 1)).max(0)
+        as usize;
+    (pad_lo_y, pad_hi_y, pad_lo_x, pad_hi_x)
+}
+
 /// Slice-level core of the untangled transposed conv: `out` (length
 /// `b·ho·wo·n`) is fully overwritten (zeroed, then polyphase-scattered);
 /// all scratch comes from `hnd`.
@@ -120,20 +144,8 @@ pub(crate) fn transpose_into(xd: &[f32], b: usize, h: usize, w: usize,
     out.fill(0.0);
 
     // Shared padded input: generous border covers every pattern's reach.
-    let max_dy = patterns.iter().map(|pt| pt.ay.taps as isize - 1
-        + pt.ay.delta).max().unwrap_or(0);
-    let max_dx = patterns.iter().map(|pt| pt.ax.taps as isize - 1
-        + pt.ax.delta).max().unwrap_or(0);
-    let min_dy = patterns.iter().map(|pt| pt.ay.delta).min().unwrap_or(0);
-    let min_dx = patterns.iter().map(|pt| pt.ax.delta).min().unwrap_or(0);
-    let max_qy = (0..st).map(|phi| polyphase_len(ho, st, phi)).max().unwrap();
-    let max_qx = (0..st).map(|phi| polyphase_len(wo, st, phi)).max().unwrap();
-    let pad_lo_y = (-min_dy).max(0) as usize;
-    let pad_lo_x = (-min_dx).max(0) as usize;
-    let pad_hi_y = ((max_qy as isize - 1 + max_dy) - (h as isize - 1)).max(0)
-        as usize;
-    let pad_hi_x = ((max_qx as isize - 1 + max_dx) - (w as isize - 1)).max(0)
-        as usize;
+    let (pad_lo_y, pad_hi_y, pad_lo_x, pad_hi_x) =
+        pad_geometry(patterns, h, w, ho, wo, st);
     let mut xp = hnd.checkout(b * (h + pad_lo_y + pad_hi_y)
         * (w + pad_lo_x + pad_hi_x) * c);
     let (hp, wp) = pad_spatial_into(xd, b, h, w, c, pad_lo_y, pad_hi_y,
@@ -142,6 +154,8 @@ pub(crate) fn transpose_into(xd: &[f32], b: usize, h: usize, w: usize,
     // Per-pattern sub-output buffer + tap A-assembly buffer, both reused
     // (and pooled: dirty is fine — `sub` is zero-filled per pattern, the
     // A buffer's used prefix is fully overwritten per tap).
+    let max_qy = (0..st).map(|phi| polyphase_len(ho, st, phi)).max().unwrap();
+    let max_qx = (0..st).map(|phi| polyphase_len(wo, st, phi)).max().unwrap();
     let mut sub_out = hnd.checkout(max_qy * max_qx * n);
     let mut a_buf = hnd.checkout(max_qy * max_qx * c);
 

@@ -32,6 +32,23 @@ pub enum Engine {
     Baseline,
     /// Kernel decomposition + untangling (the paper).
     Huge2,
+    /// Resolve per layer at plan-compile time from the shape/thread
+    /// heuristic in [`crate::plan`] (Baseline vs HUGE² vs the
+    /// multi-threaded HUGE² engines). Never reaches an engine kernel:
+    /// [`crate::plan::resolve_transpose`]/[`crate::plan::resolve_dilated`]
+    /// turn it into one of the two concrete variants.
+    Auto,
+}
+
+impl Engine {
+    /// Stable lowercase name (plan tables, digests, `--engine` flag).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Baseline => "baseline",
+            Engine::Huge2 => "huge2",
+            Engine::Auto => "auto",
+        }
+    }
 }
 
 /// Geometry of one transposed-convolution layer (mirrors the python

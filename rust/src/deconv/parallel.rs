@@ -76,35 +76,43 @@ pub fn huge2_conv2d_transpose_mt_ws(x: &Tensor, patterns: &[Pattern],
                                     r: usize, s: usize, p: &DeconvParams,
                                     threads: usize, ws: &Workspace)
                                     -> Tensor {
-    let mut hnd = ws.handle();
     let (b, h, w, c) = x.dims4();
+    let n = patterns[0].sub.shape()[3];
+    let ho = p.out_size(h, r);
+    let wo = p.out_size(w, s);
+    let mut out = Tensor::zeros(&[b, ho, wo, n]);
+    transpose_mt_into(x.data(), b, h, w, c, patterns, r, s, p, threads,
+                      out.data_mut(), ws);
+    out
+}
+
+/// Slice-level core of the multi-threaded untangled transposed conv
+/// (the plan executor's MT path). `out` is fully overwritten (zeroed,
+/// then polyphase-scattered), so a dirty pooled slab is safe —
+/// bit-identical to [`super::huge2::transpose_into`] for every thread
+/// count (each pattern's tap loop and scatter are the same code path).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn transpose_mt_into(xd: &[f32], b: usize, h: usize, w: usize,
+                                c: usize, patterns: &[Pattern], r: usize,
+                                s: usize, p: &DeconvParams, threads: usize,
+                                out: &mut [f32], ws: &Workspace) {
+    let mut hnd = ws.handle();
     let n = patterns[0].sub.shape()[3];
     let st = p.stride;
     let ho = p.out_size(h, r);
     let wo = p.out_size(w, s);
+    assert_eq!(out.len(), b * ho * wo * n, "output size");
+    out.fill(0.0);
 
     // shared padded input (same algebra as the single-threaded engine)
-    let max_dy = patterns.iter().map(|pt| pt.ay.taps as isize - 1
-        + pt.ay.delta).max().unwrap_or(0);
-    let max_dx = patterns.iter().map(|pt| pt.ax.taps as isize - 1
-        + pt.ax.delta).max().unwrap_or(0);
-    let min_dy = patterns.iter().map(|pt| pt.ay.delta).min().unwrap_or(0);
-    let min_dx = patterns.iter().map(|pt| pt.ax.delta).min().unwrap_or(0);
-    let max_qy = (0..st).map(|phi| polyphase_len(ho, st, phi)).max().unwrap();
-    let max_qx = (0..st).map(|phi| polyphase_len(wo, st, phi)).max().unwrap();
-    let pad_lo_y = (-min_dy).max(0) as usize;
-    let pad_lo_x = (-min_dx).max(0) as usize;
-    let pad_hi_y = ((max_qy as isize - 1 + max_dy) - (h as isize - 1)).max(0)
-        as usize;
-    let pad_hi_x = ((max_qx as isize - 1 + max_dx) - (w as isize - 1)).max(0)
-        as usize;
+    let (pad_lo_y, pad_hi_y, pad_lo_x, pad_hi_x) =
+        super::huge2::pad_geometry(patterns, h, w, ho, wo, st);
     let mut xp = hnd.checkout(b * (h + pad_lo_y + pad_hi_y)
         * (w + pad_lo_x + pad_hi_x) * c);
-    let (hp, wp) = pad_spatial_into(x.data(), b, h, w, c, pad_lo_y,
+    let (hp, wp) = pad_spatial_into(xd, b, h, w, c, pad_lo_y,
                                     pad_hi_y, pad_lo_x, pad_hi_x,
                                     &mut xp);
 
-    let mut out = Tensor::zeros(&[b, ho, wo, n]);
     let threads = threads.max(1);
 
     for bi in 0..b {
@@ -165,7 +173,6 @@ pub fn huge2_conv2d_transpose_mt_ws(x: &Tensor, patterns: &[Pattern],
             });
         // ...then scatter serially (cheap, disjoint anyway).
         results.sort_by_key(|(i, ..)| *i);
-        let od = out.data_mut();
         for (idx, sub, qy, qx) in results {
             let pt = &patterns[idx];
             for q_y in 0..qy {
@@ -174,14 +181,13 @@ pub fn huge2_conv2d_transpose_mt_ws(x: &Tensor, patterns: &[Pattern],
                     let ox = pt.phi_x + q_x * st;
                     let src = (q_y * qx + q_x) * n;
                     let dst = ((bi * ho + oy) * wo + ox) * n;
-                    od[dst..dst + n].copy_from_slice(&sub[src..src + n]);
+                    out[dst..dst + n].copy_from_slice(&sub[src..src + n]);
                 }
             }
             hnd.checkin(sub);
         }
     }
     hnd.checkin(xp);
-    out
 }
 
 /// Multi-threaded HUGE² dilated convolution: output *rows* are sharded

@@ -2,10 +2,20 @@
 //! workload of Fig. 7/8. (The PJRT-compiled JAX models in `artifacts/` are
 //! the served path; this module is the native path the CPU benches and the
 //! fallback `--engine native` serving mode use.)
+//!
+//! Since the plan refactor (DESIGN.md §10) the forward internals live in
+//! **one** place — [`crate::plan::ExecPlan`] — compiled once at model
+//! load. `Generator::forward*` are thin wrappers: calls matching the
+//! stored plan's engine run it directly; other engines compile a
+//! transient plan (cheap — prepacked state is `Arc`-shared, never
+//! re-packed).
+
+use std::sync::Arc;
 
 use crate::config::{cgan_layers, dcgan_layers, LayerConfig};
 use crate::deconv::huge2::{decompose, Pattern};
-use crate::deconv::{baseline, huge2};
+use crate::deconv::baseline;
+use crate::plan::{resolve_transpose, run_transpose_op, ExecPlan};
 use crate::rng::Rng;
 use crate::tensor::Tensor;
 use crate::workspace::{Workspace, WsHandle};
@@ -19,9 +29,10 @@ pub use crate::deconv::Engine;
 /// [`Generator`], the segmentation [`crate::seg::SegNet`]): batch-major
 /// NHWC tensors in and out, engine-selectable per call. Cross-engine
 /// property tests are written against this trait so one helper covers
-/// every model family. (The coordinator's worker still dispatches on the
-/// concrete `Backend` variants — input assembly is task-specific — so a
-/// new model family extends `Backend` and `Model` too, not just this.)
+/// every model family. (The coordinator's worker executes the models'
+/// compiled [`ExecPlan`]s uniformly — input assembly is the only
+/// task-specific step left, so a new model family extends `Backend` and
+/// `Model` too, not just this.)
 pub trait Forward {
     /// `x`: `(B, ...)` → output `(B, ...)`; the same input must produce
     /// bit-identical output regardless of which other rows share the
@@ -33,53 +44,53 @@ pub trait Forward {
 
 /// One deconv layer with its weights and (for HUGE²) the pre-decomposed
 /// patterns — decomposition happens once at model-load time, as a serving
-/// engine would do.
+/// engine would do. The prepacked state is `Arc`-shared with every
+/// compiled [`ExecPlan`] that references this layer.
 pub struct GenLayer {
     pub cfg: LayerConfig,
-    pub kernel: Tensor,
-    patterns: Vec<Pattern>,
+    pub kernel: Arc<Tensor>,
+    pub(crate) patterns: Arc<Vec<Pattern>>,
 }
 
 impl GenLayer {
     pub fn new(cfg: LayerConfig, kernel: Tensor) -> Self {
         assert_eq!(kernel.shape(),
                    &[cfg.k, cfg.k, cfg.c_in, cfg.c_out]);
-        let patterns = decompose(&kernel, &cfg.deconv_params());
-        GenLayer { cfg, kernel, patterns }
+        let patterns = Arc::new(decompose(&kernel, &cfg.deconv_params()));
+        GenLayer { cfg, kernel: Arc::new(kernel), patterns }
     }
 
+    /// Forward one layer with an explicit engine choice (`Auto` resolves
+    /// through the plan heuristic). Accepts any batch/spatial geometry
+    /// compatible with the kernel, like the raw engines do.
     pub fn forward(&self, x: &Tensor, engine: Engine) -> Tensor {
+        let ws = Workspace::new();
+        let hnd = &mut ws.handle();
         let p = self.cfg.deconv_params();
-        match engine {
-            Engine::Baseline => baseline::conv2d_transpose(x, &self.kernel, &p),
-            Engine::Huge2 => huge2::conv2d_transpose_with(
-                x, &self.patterns, self.cfg.k, self.cfg.k, &p),
-        }
-    }
-
-    /// Slice-level forward for the pooled generator path: `xd` is the
-    /// `(b, h, h, c_in)` activation (dims from `cfg`), `out` the
-    /// `(b, h_out, h_out, c_out)` destination; all scratch from `hnd`.
-    pub(crate) fn forward_into(&self, xd: &[f32], b: usize, engine: Engine,
-                               out: &mut [f32], hnd: &mut WsHandle) {
-        let p = self.cfg.deconv_params();
-        let (ih, c_in) = (self.cfg.h, self.cfg.c_in);
-        match engine {
-            Engine::Baseline => baseline::transpose_into(
-                xd, b, ih, ih, c_in, &self.kernel, &p, out, hnd),
-            Engine::Huge2 => huge2::transpose_into(
-                xd, b, ih, ih, c_in, &self.patterns, self.cfg.k,
-                self.cfg.k, &p, out, hnd),
-        }
+        let (b, h, w, c) = x.dims4();
+        let (eng, threads) =
+            resolve_transpose(engine, h, w, c, self.cfg.c_out, self.cfg.k,
+                              &p, 1);
+        let ho = p.out_size(h, self.cfg.k);
+        let wo = p.out_size(w, self.cfg.k);
+        let mut out = Tensor::zeros(&[b, ho, wo, self.cfg.c_out]);
+        run_transpose_op(x.data(), b, h, w, c, &self.kernel,
+                         &self.patterns, self.cfg.k, &p, eng, threads,
+                         out.data_mut(), hnd);
+        out
     }
 }
 
-/// A DCGAN/cGAN-style generator: dense projection + deconv stack.
+/// A DCGAN/cGAN-style generator: dense projection + deconv stack,
+/// compiled to an [`ExecPlan`] at load time.
 pub struct Generator {
     pub z_dim: usize,
     /// `(z_dim [+ n_classes], h0·h0·c0)` projection matrix.
-    pub proj: Tensor,
+    pub proj: Arc<Tensor>,
     pub layers: Vec<GenLayer>,
+    /// The serving plan, compiled with [`Engine::Auto`] (load-time
+    /// engine selection); explicit-engine forwards compile transients.
+    plan: ExecPlan,
 }
 
 impl Generator {
@@ -87,10 +98,10 @@ impl Generator {
     pub fn new(layer_cfgs: Vec<LayerConfig>, z_dim: usize, cond: usize,
                rng: &mut Rng) -> Self {
         let first = &layer_cfgs[0];
-        let proj = Tensor::randn(
+        let proj = Arc::new(Tensor::randn(
             &[z_dim + cond, first.h * first.h * first.c_in], rng)
-            .scale(0.02);
-        let layers = layer_cfgs
+            .scale(0.02));
+        let layers: Vec<GenLayer> = layer_cfgs
             .into_iter()
             .map(|cfg| {
                 let k = Tensor::randn(
@@ -99,7 +110,8 @@ impl Generator {
                 GenLayer::new(cfg, k)
             })
             .collect();
-        Generator { z_dim, proj, layers }
+        let plan = ExecPlan::compile_gan(&proj, &layers, Engine::Auto);
+        Generator { z_dim, proj, layers, plan }
     }
 
     /// The paper's DCGAN generator (Table 1, DC1–DC4).
@@ -127,6 +139,12 @@ impl Generator {
         Generator::new(cfgs, 8, 0, &mut Rng::new(seed))
     }
 
+    /// The load-time-compiled execution plan (serving path; engine
+    /// selection already resolved, all prepacking shared).
+    pub fn plan(&self) -> &ExecPlan {
+        &self.plan
+    }
+
     /// `z`: `(B, z_dim [+cond])` -> image `(B, H, W, c_out)` in [-1, 1].
     pub fn forward(&self, z: &Tensor, engine: Engine) -> Tensor {
         let ws = Workspace::new();
@@ -149,42 +167,27 @@ impl Generator {
 
     /// Slice-level forward: `zd` is the `(b, z_dim [+cond])` latent
     /// matrix, `out` the `(b, H, W, c_out)` destination (fully
-    /// overwritten). Intermediate activations ping-pong between pooled
-    /// slabs instead of allocating per layer.
+    /// overwritten). Thin wrapper over [`ExecPlan::run_into`] — the one
+    /// place the forward internals live. Calls whose engine the stored
+    /// plan already resolves to (the common Huge2 case: every GAN layer
+    /// is stride-2) run it directly — no per-call compile, so the
+    /// steady state stays allocation-free; only a genuinely different
+    /// selection compiles a transient plan.
     pub fn forward_into(&self, zd: &[f32], b: usize, engine: Engine,
                         out: &mut [f32], hnd: &mut WsHandle) {
-        let (pd, hid) = self.proj.dims2();
-        assert_eq!(zd.len(), b * pd, "latent dim mismatch");
-        let last = &self.layers[self.layers.len() - 1].cfg;
-        assert_eq!(out.len(), b * last.h_out() * last.h_out() * last.c_out,
-                   "output size");
-        // dense projection (sgemm overwrites the full slice — dirty ok)
-        let mut cur = hnd.checkout(b * hid);
-        crate::gemm::sgemm_with(hnd, b, hid, pd, zd, self.proj.data(),
-                                &mut cur, false);
-        crate::tensor::relu_inplace(&mut cur);
-        let n = self.layers.len();
-        for (i, layer) in self.layers.iter().enumerate() {
-            if i == n - 1 {
-                layer.forward_into(&cur, b, engine, out, hnd);
-                crate::tensor::tanh_inplace(out);
-            } else {
-                let cfg = &layer.cfg;
-                let mut nxt = hnd.checkout(
-                    b * cfg.h_out() * cfg.h_out() * cfg.c_out);
-                layer.forward_into(&cur, b, engine, &mut nxt, hnd);
-                crate::tensor::relu_inplace(&mut nxt);
-                hnd.checkin(cur);
-                cur = nxt;
-            }
+        if Some(engine) == self.plan.requested()
+            || self.plan.resolves_to(engine)
+        {
+            self.plan.run_into(zd, b, out, hnd);
+        } else {
+            ExecPlan::compile_gan(&self.proj, &self.layers, engine)
+                .run_into(zd, b, out, hnd);
         }
-        hnd.checkin(cur);
     }
 
     /// Output image shape for batch `b`.
     pub fn out_shape(&self, b: usize) -> Vec<usize> {
-        let last = &self.layers[self.layers.len() - 1].cfg;
-        vec![b, last.h_out(), last.h_out(), last.c_out]
+        self.plan.out_shape(b)
     }
 }
 
@@ -264,6 +267,13 @@ mod tests {
         assert_eq!(a.shape(), g.out_shape(2).as_slice());
         assert_eq!(a.shape(), &[2, 64, 64, 3]);
         assert!(a.allclose(&b, 1e-4), "diff {}", a.max_abs_diff(&b));
+        // Auto resolves per layer but stays within engine tolerance,
+        // and the stored plan reproduces it bit-exactly
+        let c = g.forward(&z, Engine::Auto);
+        assert!(c.allclose(&a, 1e-4));
+        let ws = Workspace::new();
+        let d = g.plan().run(&z, &mut ws.handle());
+        assert_eq!(c.checksum(), d.checksum());
     }
 
     #[test]
@@ -282,6 +292,7 @@ mod tests {
         assert_eq!(a.proj.checksum(), b.proj.checksum());
         assert_eq!(a.layers[0].kernel.checksum(),
                    b.layers[0].kernel.checksum());
+        assert_eq!(a.plan().engine_digest(), b.plan().engine_digest());
     }
 
     #[test]

@@ -119,6 +119,12 @@ pub struct PackedB {
 }
 
 impl PackedB {
+    /// Bytes held by the packed panels (the plan's "prepacked bytes"
+    /// accounting: what model load paid so inference never packs B).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
     /// Pack a row-major `(k, n)` B.
     pub fn pack(k: usize, n: usize, b: &[f32]) -> Self {
         assert_eq!(b.len(), k * n);
@@ -260,6 +266,19 @@ pub fn sgemm_parallel_with(ws: &Workspace, m: usize, n: usize, k: usize,
 #[inline]
 fn round_up(x: usize, m: usize) -> usize {
     x.div_ceil(m) * m
+}
+
+/// Workspace elements one `sgemm_with`/`sgemm_strided_with` call checks
+/// out (A panel + B panel) — the plan's workspace high-water accounting
+/// (DESIGN.md §10) mirrors the checkouts in the GEMM body exactly.
+pub fn sgemm_scratch_elems(n: usize) -> usize {
+    MC * KC + KC * NC.min(round_up(n, NR))
+}
+
+/// Workspace elements one `sgemm_prepacked_with` call checks out (A
+/// panel only — B was packed at model load).
+pub fn prepacked_scratch_elems() -> usize {
+    MC * KC
 }
 
 /// Pack an `mc × kc` panel of A into MR-tall column-major slivers.

@@ -37,13 +37,52 @@
 //! assert!(slow.allclose(&fast, 1e-4));
 //! ```
 //!
+//! ## Compiled plans (load-time engine selection)
+//!
+//! Every natively served model compiles to a [`plan::ExecPlan`] at
+//! load: one layer IR (project / transpose-conv / dilated-conv /
+//! activation / head) whose per-layer engine is resolved once —
+//! including [`deconv::Engine::Auto`], the shape/thread heuristic —
+//! with all prepacking `Arc`-shared and every intermediate shape plus
+//! the workspace high-water mark precomputed. Model forwards and the
+//! serving workers are thin wrappers over [`plan::ExecPlan::run_into`]:
+//!
+//! ```no_run
+//! use huge2::gan::{Engine, Generator};
+//! use huge2::plan::ExecPlan;
+//! use huge2::rng::Rng;
+//! use huge2::tensor::Tensor;
+//! use huge2::workspace::Workspace;
+//!
+//! let gen = Generator::dcgan(7);
+//! let plan = gen.plan();                 // compiled at load, Auto-resolved
+//! for step in plan.steps() {
+//!     println!("{:16} {:14} {:?} x{}", step.name, step.op.kind(),
+//!              step.engine.map(|e| e.name()), step.threads);
+//! }
+//! println!("high-water {}B, digest {:016x}",
+//!          4 * plan.high_water_elems(1), plan.engine_digest());
+//! let z = Tensor::randn(&[1, 100], &mut Rng::new(1));
+//! let ws = Workspace::new();
+//! let img = plan.run(&z, &mut ws.handle());    // the serving fast path
+//! // explicit engines compile transient plans (no re-packing):
+//! let same = gen.forward(&z, Engine::Auto);
+//! assert_eq!(img.checksum(), same.checksum());
+//! # let _ = ExecPlan::for_generator(&gen, Engine::Baseline);
+//! ```
+//!
+//! CLI: `huge2 plan --net <dcgan|cgan|tiny_cgan|segnet|tiny_segnet>`
+//! prints the per-layer table (engine, threads, prepacked bytes,
+//! shapes) plus the plan's workspace high-water mark and digest.
+//!
 //! ## Segmentation quickstart
 //!
 //! The serving pipeline is **multi-task**: alongside latent→image GAN
 //! requests, the engine serves image→mask segmentation through the same
 //! queue/batcher/worker stack (see [`seg`]). A [`seg::SegNet`] is built
-//! from dilated-conv layer configs and pre-decomposes (tap-packs) its
-//! kernels at load time:
+//! from dilated-conv layer configs, pre-decomposes (tap-packs) its
+//! kernels at load time and compiles its plan (the worker executes the
+//! plan + argmax head uniformly with the GAN path):
 //!
 //! ```no_run
 //! use std::sync::Arc;
@@ -81,6 +120,7 @@
 //! use huge2::replay::{Recorder, Replayer, Timing, TraceHeader};
 //!
 //! // --- record a serve session ---
+//! let gen = Arc::new(Generator::dcgan(7));
 //! let rec = Recorder::new(TraceHeader {
 //!     model: "dcgan".into(),
 //!     backend: "native".into(),
@@ -89,11 +129,12 @@
 //!     cond_dim: 0,
 //!     task: "generate".into(),
 //!     net: String::new(),
+//!     // pins the plan's per-layer engine choices; replay re-checks it
+//!     engine_digest: format!("{:016x}", gen.plan().engine_digest()),
 //! });
 //! let mut eng = Engine::new(EngineConfig::default());
 //! eng.set_trace_sink(rec.sink())?;
-//! eng.register_native(Model::native(
-//!     "dcgan", Arc::new(Generator::dcgan(7)), 0))?;
+//! eng.register_native(Model::native("dcgan", gen, 0))?;
 //! eng.generate("dcgan", vec![0.0; 100], vec![])?;
 //! eng.shutdown();
 //! rec.save(std::path::Path::new("t.jsonl"))?;
@@ -152,6 +193,7 @@ pub mod gemm;
 pub mod im2col;
 pub mod memsim;
 pub mod metrics;
+pub mod plan;
 pub mod replay;
 pub mod rng;
 pub mod runtime;

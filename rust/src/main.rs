@@ -42,13 +42,86 @@ fn run(argv: &[String]) -> Result<()> {
     match args.subcommand.as_str() {
         "inspect" => inspect(&args),
         "bench" => bench(&args),
+        "plan" => plan_cmd(&args),
         "serve" => serve(&args),
         "segment" => segment(&args),
         "replay" => replay(&args),
         "reproduce" => reproduce(&args),
         other => bail!("unknown subcommand {other:?} \
-                        (inspect|bench|serve|segment|replay|reproduce)"),
+                        (inspect|bench|plan|serve|segment|replay|\
+                         reproduce)"),
     }
+}
+
+/// `huge2 plan --net <name>`: print the compiled execution plan — the
+/// per-layer table of resolved engine, threads, prepacked bytes and
+/// intermediate shape, plus the plan's workspace high-water mark and
+/// engine-selection digest (DESIGN.md §10).
+fn plan_cmd(args: &Args) -> Result<()> {
+    use huge2::plan::{ExecPlan, PlanOp};
+
+    let net = args.get_or("net", "dcgan");
+    let seed = args.get_usize("seed", 7)? as u64;
+    let batch = args.get_usize("batch", 1)?.max(1);
+    let engine = match args.get_or("engine", "auto").as_str() {
+        "auto" => DeconvEngine::Auto,
+        "huge2" => DeconvEngine::Huge2,
+        "baseline" => DeconvEngine::Baseline,
+        other => bail!("--engine expects auto|huge2|baseline, \
+                        got {other:?}"),
+    };
+    let plan: ExecPlan = match net.as_str() {
+        "dcgan" => ExecPlan::for_generator(&Generator::dcgan(seed), engine),
+        "cgan" => ExecPlan::for_generator(&Generator::cgan(seed), engine),
+        "tiny_cgan" => {
+            ExecPlan::for_generator(&Generator::tiny_cgan(seed), engine)
+        }
+        name => {
+            let cfg = seg_net_cfg(name).map_err(|_| anyhow!(
+                "unknown net {name:?} (dcgan|cgan|tiny_cgan|segnet|\
+                 tiny_segnet)"))?;
+            let net = SegNet::new(&cfg, seed);
+            // --engine auto keeps the per-layer config engines (the
+            // registry default is Auto); explicit flags override all
+            let over = (engine != DeconvEngine::Auto).then_some(engine);
+            // the serving form: logits plan + argmax head
+            ExecPlan::for_segnet(&net, over)
+                .with_argmax_head(net.n_classes())
+        }
+    };
+
+    println!("{net} (seed {seed}): compiled execution plan, \
+              {} steps\n", plan.steps().len());
+    let mut t = Table::new(&["step", "op", "engine", "threads",
+                             "out shape", "prepacked"]);
+    for st in plan.steps() {
+        let is_compute = !matches!(st.op, PlanOp::Activation(_)
+                                          | PlanOp::Head(_));
+        t.row(&[
+            st.name.clone(),
+            st.op.kind().into(),
+            st.engine.map(|e| e.name().to_string())
+                .unwrap_or_else(|| "-".into()),
+            if is_compute { st.threads.to_string() } else { "-".into() },
+            format!("{}x{}x{}", st.out_shape[0], st.out_shape[1],
+                    st.out_shape[2]),
+            if st.prepacked_bytes > 0 {
+                format!("{:.1}KB", st.prepacked_bytes as f64 / 1024.0)
+            } else {
+                "-".into()
+            },
+        ]);
+    }
+    t.print();
+    println!("\ninput: {} elems/request; output (batch {batch}): {:?}",
+             plan.in_elems(), plan.out_shape(batch));
+    println!("prepacked at load: {:.1}KB total (zero packing per \
+              inference)", plan.prepacked_bytes() as f64 / 1024.0);
+    println!("workspace high-water (batch {batch}): {:.1}KB pooled",
+             plan.high_water_elems(batch) as f64 * 4.0 / 1024.0);
+    println!("engine-selection digest: {:016x} (recorded in trace \
+              headers; replay re-checks it)", plan.engine_digest());
+    Ok(())
 }
 
 /// Print Table 1, per-layer MAC accounting and available artifacts.
@@ -270,6 +343,11 @@ fn serve_generate(args: &Args) -> Result<()> {
             Err(e) => println!("  rejected: {e}"),
         }
     }
+    // the compiled plan's engine-selection digest (native; PJRT has no
+    // plan) — replay re-checks it against its rebuilt engine
+    let engine_digest = eng.plan_digest(&model)
+        .map(|d| format!("{d:016x}"))
+        .unwrap_or_default();
     let record = sink.map(|s| {
         (record_path.unwrap(), s, TraceHeader {
             model: model.clone(),
@@ -279,6 +357,7 @@ fn serve_generate(args: &Args) -> Result<()> {
             cond_dim: 0,
             task: "generate".into(),
             net: String::new(),
+            engine_digest,
         })
     });
     finish_serve(eng, pending, t0, record)
@@ -337,6 +416,9 @@ fn serve_segment(args: &Args) -> Result<()> {
             Err(e) => println!("  rejected: {e}"),
         }
     }
+    let engine_digest = eng.plan_digest(&model)
+        .map(|d| format!("{d:016x}"))
+        .unwrap_or_default();
     let record = sink.map(|s| {
         (record_path.unwrap(), s, TraceHeader {
             model: model.clone(),
@@ -346,6 +428,7 @@ fn serve_segment(args: &Args) -> Result<()> {
             cond_dim: 0,
             task: "segment".into(),
             net: net_name.clone(),
+            engine_digest,
         })
     });
     finish_serve(eng, pending, t0, record)

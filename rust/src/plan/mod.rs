@@ -1,0 +1,907 @@
+//! Compiled execution plans — one layer IR for every natively served
+//! forward path (DESIGN.md §10).
+//!
+//! Before this module, `gan::Generator` and `seg::SegNet` each
+//! hand-rolled their own engine dispatch, activation ping-pong and
+//! `forward/forward_ws/forward_into` triplet — exactly the tangle the
+//! paper argues against. An [`ExecPlan`] is compiled **once at model
+//! load** from the layer configs:
+//!
+//! * every layer's engine is **resolved** ([`resolve_transpose`] /
+//!   [`resolve_dilated`]) — including [`Engine::Auto`], which picks
+//!   Baseline vs HUGE² vs the multi-threaded HUGE² engines from a
+//!   shape/thread heuristic calibrated at build time;
+//! * all prepacked state (HUGE² kernel decomposition,
+//!   [`dilated::pack_taps`] panels — both packed when the layer was
+//!   built) is **shared by `Arc`**, never re-packed;
+//! * every intermediate shape and the workspace high-water mark are
+//!   **precomputed**, so steady-state execution is pure slab reuse
+//!   through one executor ([`ExecPlan::run_into`]) — the single place
+//!   the forward internals of both model families live.
+//!
+//! The serving coordinator executes plans uniformly (one worker path
+//! for generate and segment), and the plan's engine-selection
+//! [digest](ExecPlan::engine_digest) rides in the replay trace header
+//! so `Engine::Auto` replays deterministically even if the heuristic
+//! changes between builds.
+
+use std::sync::Arc;
+
+use crate::deconv::dilated::DilatedTaps;
+use crate::deconv::huge2::Pattern;
+use crate::deconv::{baseline, dilated, huge2, parallel, DeconvParams,
+                    DilatedParams, Engine};
+use crate::gan::GenLayer;
+use crate::seg::SegLayer;
+use crate::tensor::Tensor;
+use crate::workspace::{WsBuf, WsHandle};
+
+// ------------------------------------------------------- Auto heuristic
+
+/// Threads the Auto heuristic assigns to layers heavy enough to shard —
+/// the paper's testbed core count (4-core Cortex-A57, DESIGN.md §2).
+pub const AUTO_THREADS: usize = 4;
+
+/// Per-image effective MACs above which the multi-threaded HUGE²
+/// engines pay for their shard spawn/join (calibrated on the
+/// `ablations` bench's multicore-scaling phase: below ~8 M MACs the
+/// scoped-thread overhead eats the win).
+pub const AUTO_MT_MIN_MACS: u64 = 8 << 20;
+
+/// Per-image effective MACs below which a dilation-1 dilated conv runs
+/// faster as the baseline's one fused im2col GEMM than as `R·S` small
+/// per-row tap GEMMs (at dilation 1 untangling skips no zeros, so the
+/// fused GEMM's better blocking wins on small layers).
+pub const AUTO_FUSED_MAX_MACS: u64 = 1 << 16;
+
+/// Resolve a transposed-conv layer's engine + thread count. Concrete
+/// requests pass through (`threads_hint` floors the thread count for
+/// HUGE²; Baseline is always single-threaded — its MT variant has no
+/// slice-level core). `Auto`: stride 1 has no zeros to skip, so the
+/// baseline's single fused GEMM wins; otherwise HUGE², multi-threaded
+/// when the layer is heavy enough.
+#[allow(clippy::too_many_arguments)]
+pub fn resolve_transpose(requested: Engine, h: usize, w: usize,
+                         c_in: usize, c_out: usize, k: usize,
+                         p: &DeconvParams, threads_hint: usize)
+                         -> (Engine, usize) {
+    match requested {
+        Engine::Baseline => (Engine::Baseline, 1),
+        Engine::Huge2 => (Engine::Huge2, threads_hint.max(1)),
+        Engine::Auto => {
+            if p.stride == 1 {
+                return (Engine::Baseline, 1);
+            }
+            let (_, eff) = huge2::mac_counts(h, w, c_in, c_out, k, k, p);
+            let auto = if eff >= AUTO_MT_MIN_MACS { AUTO_THREADS } else { 1 };
+            (Engine::Huge2, threads_hint.max(1).max(auto))
+        }
+    }
+}
+
+/// Resolve a dilated-conv layer's engine + thread count (the dilated
+/// twin of [`resolve_transpose`]). `Auto`: dilation > 1 always favors
+/// untangling (the baseline pays `d²` dense MACs over the inflated
+/// kernel); at dilation 1 small layers keep the baseline's fused GEMM.
+#[allow(clippy::too_many_arguments)]
+pub fn resolve_dilated(requested: Engine, h: usize, w: usize, c_in: usize,
+                       c_out: usize, k: usize, p: &DilatedParams,
+                       threads_hint: usize) -> (Engine, usize) {
+    match requested {
+        Engine::Baseline => (Engine::Baseline, 1),
+        Engine::Huge2 => (Engine::Huge2, threads_hint.max(1)),
+        Engine::Auto => {
+            let (_, eff) = dilated::mac_counts(h, w, c_in, c_out, k, k, p);
+            if p.dilation == 1 && eff < AUTO_FUSED_MAX_MACS {
+                return (Engine::Baseline, 1);
+            }
+            let auto = if eff >= AUTO_MT_MIN_MACS { AUTO_THREADS } else { 1 };
+            (Engine::Huge2, threads_hint.max(1).max(auto))
+        }
+    }
+}
+
+// ------------------------------------------------------ shared dispatch
+
+/// The one transposed-conv dispatch site: slice-level forward through a
+/// **concrete** (already resolved) engine. Both the plan executor and
+/// [`GenLayer::forward`] route here, so engine dispatch exists in
+/// exactly one place.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_transpose_op(xd: &[f32], b: usize, h: usize, w: usize,
+                               c_in: usize, kernel: &Tensor,
+                               patterns: &[Pattern], k: usize,
+                               p: &DeconvParams, engine: Engine,
+                               threads: usize, out: &mut [f32],
+                               hnd: &mut WsHandle) {
+    match engine {
+        Engine::Baseline => baseline::transpose_into(
+            xd, b, h, w, c_in, kernel, p, out, hnd),
+        Engine::Huge2 if threads > 1 => parallel::transpose_mt_into(
+            xd, b, h, w, c_in, patterns, k, k, p, threads, out,
+            hnd.workspace()),
+        Engine::Huge2 => huge2::transpose_into(
+            xd, b, h, w, c_in, patterns, k, k, p, out, hnd),
+        Engine::Auto => unreachable!("Auto must be resolved before dispatch"),
+    }
+}
+
+/// The one dilated-conv dispatch site (see [`run_transpose_op`]); both
+/// the plan executor and [`SegLayer::forward`] route here.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_dilated_op(xd: &[f32], b: usize, h: usize, w: usize,
+                             c_in: usize, kernel: &Tensor,
+                             taps: &DilatedTaps, p: &DilatedParams,
+                             engine: Engine, threads: usize,
+                             out: &mut [f32], hnd: &mut WsHandle) {
+    match engine {
+        Engine::Baseline => baseline::conv2d_dilated_into(
+            xd, b, h, w, c_in, kernel, p, out, hnd),
+        Engine::Huge2 if threads > 1 => parallel::dilated_mt_into(
+            xd, b, h, w, c_in, taps, p, threads, out, hnd.workspace()),
+        Engine::Huge2 => dilated::dilated_into(
+            xd, b, h, w, c_in, taps, p, out, hnd),
+        Engine::Auto => unreachable!("Auto must be resolved before dispatch"),
+    }
+}
+
+// ----------------------------------------------------------------- IR
+
+/// Elementwise activation op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    Relu,
+    Tanh,
+}
+
+impl Act {
+    fn name(&self) -> &'static str {
+        match self {
+            Act::Relu => "relu",
+            Act::Tanh => "tanh",
+        }
+    }
+
+    fn apply(&self, buf: &mut [f32]) {
+        match self {
+            Act::Relu => crate::tensor::relu_inplace(buf),
+            Act::Tanh => crate::tensor::tanh_inplace(buf),
+        }
+    }
+}
+
+/// How a conv step joins the dataflow: sequential, or as a branch of a
+/// parallel pyramid (ASPP) whose branches all read the saved group
+/// input and sum into one accumulator in IR order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fan {
+    /// Reads the current activation, produces the next one.
+    Seq,
+    /// First pyramid branch: saves the current activation as the group
+    /// input and produces the accumulator.
+    BranchFirst,
+    /// Later pyramid branch: reads the saved group input, sums into the
+    /// accumulator.
+    BranchAdd,
+}
+
+/// Output head op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Head {
+    /// Per-pixel class argmax: logits `(b,h,w,K)` → mask `(b,h,w,1)`
+    /// (ties break low — deterministic, replay-checksummable).
+    ArgmaxMask { classes: usize },
+}
+
+/// One IR op, carrying the prepacked state it executes with (shared via
+/// `Arc` from the owning model layer — compiled plans never re-pack).
+#[derive(Debug, Clone)]
+pub enum PlanOp {
+    /// Dense latent projection `(b, in_dim) @ w → (b, out_dim)`.
+    Project {
+        w: Arc<Tensor>,
+        in_dim: usize,
+        out_dim: usize,
+    },
+    /// Stride-`s` transposed convolution (GAN upsampling family).
+    TransposeConv {
+        kernel: Arc<Tensor>,
+        patterns: Arc<Vec<Pattern>>,
+        k: usize,
+        params: DeconvParams,
+        h: usize,
+        c_in: usize,
+        c_out: usize,
+    },
+    /// Dilated (atrous) convolution (segmentation family).
+    DilatedConv {
+        kernel: Arc<Tensor>,
+        taps: Arc<DilatedTaps>,
+        params: DilatedParams,
+        h: usize,
+        c_in: usize,
+        c_out: usize,
+        fan: Fan,
+    },
+    /// In-place elementwise activation on the current buffer.
+    Activation(Act),
+    /// Output head.
+    Head(Head),
+}
+
+impl PlanOp {
+    /// Wire/table tag of the op kind.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            PlanOp::Project { .. } => "project",
+            PlanOp::TransposeConv { .. } => "transpose-conv",
+            PlanOp::DilatedConv { fan: Fan::Seq, .. } => "dilated-conv",
+            PlanOp::DilatedConv { .. } => "dilated-conv[aspp]",
+            PlanOp::Activation(_) => "activation",
+            PlanOp::Head(_) => "head",
+        }
+    }
+
+    /// Does this op produce a new activation buffer (vs mutating or
+    /// accumulating into an existing one)?
+    fn is_producer(&self) -> bool {
+        !matches!(self,
+                  PlanOp::Activation(_)
+                  | PlanOp::DilatedConv { fan: Fan::BranchAdd, .. })
+    }
+}
+
+/// One compiled step: the op plus everything resolved at compile time —
+/// concrete engine, thread count, per-image output geometry, prepacked
+/// bytes. What `huge2 plan` prints a row per.
+#[derive(Debug, Clone)]
+pub struct PlanStep {
+    /// Layer/op name (config name, or `proj`/`relu`/`tanh`/`argmax`).
+    pub name: String,
+    pub op: PlanOp,
+    /// Resolved concrete engine (`None` for activations/heads).
+    pub engine: Option<Engine>,
+    pub threads: usize,
+    /// Per-image output shape `[h, w, c]`.
+    pub out_shape: [usize; 3],
+    /// Per-image output element count (`h·w·c`).
+    pub out_elems: usize,
+    /// Bytes of GEMM-packed panels this step reuses (paid at model
+    /// load, zero per inference).
+    pub prepacked_bytes: usize,
+}
+
+/// A compiled forward plan: the unified executable form of a
+/// [`crate::gan::Generator`] or [`crate::seg::SegNet`] (plus, for
+/// serving, an output head). See the module docs and DESIGN.md §10.
+#[derive(Debug, Clone)]
+pub struct ExecPlan {
+    /// What compile was asked for: `Some(engine)` = one engine applied
+    /// to every layer (possibly `Auto`); `None` = per-layer config
+    /// engines. Model forwards use this to route matching calls to the
+    /// stored plan instead of compiling a transient one.
+    requested: Option<Engine>,
+    steps: Vec<PlanStep>,
+    /// Per-request input element count.
+    in_elems: usize,
+    /// FNV-1a over every resolved (name, op, engine, threads, shape) —
+    /// precomputed; recorded in replay trace headers.
+    digest: u64,
+}
+
+impl ExecPlan {
+    // ------------------------------------------------------- compile
+
+    /// Compile a fresh plan for a built generator with one engine
+    /// applied to every layer (`Auto` included). Cheap: the prepacked
+    /// state is `Arc`-shared from the generator's layers, never
+    /// re-packed — the serving plan the generator already stores is
+    /// [`crate::gan::Generator::plan`].
+    pub fn for_generator(gen: &crate::gan::Generator, engine: Engine)
+                         -> ExecPlan {
+        ExecPlan::compile_gan(&gen.proj, &gen.layers, engine)
+    }
+
+    /// Compile a fresh logits plan for a built seg net. `over` = one
+    /// engine for every layer; `None` honors the per-layer config
+    /// engines (resolving `Auto`). The net's stored serving plan is
+    /// [`crate::seg::SegNet::plan`]; append
+    /// [`ExecPlan::with_argmax_head`] for the mask-producing form.
+    pub fn for_segnet(net: &crate::seg::SegNet, over: Option<Engine>)
+                      -> ExecPlan {
+        ExecPlan::compile_seg(&net.trunk, &net.aspp, &net.head, over)
+    }
+
+    /// Compile a generator-shaped plan: dense projection → relu →
+    /// transposed-conv stack (relu between layers, tanh head).
+    pub(crate) fn compile_gan(proj: &Arc<Tensor>, layers: &[GenLayer],
+                              engine: Engine) -> ExecPlan {
+        let (in_dim, hid) = proj.dims2();
+        let first = &layers[0].cfg;
+        debug_assert_eq!(hid, first.h * first.h * first.c_in);
+        let mut steps = Vec::with_capacity(2 + 2 * layers.len());
+        push_step(&mut steps, "proj",
+                  PlanOp::Project { w: proj.clone(), in_dim, out_dim: hid },
+                  None, 1, [first.h, first.h, first.c_in], 0);
+        push_act(&mut steps, Act::Relu);
+        let n = layers.len();
+        for (i, l) in layers.iter().enumerate() {
+            let cfg = &l.cfg;
+            let p = cfg.deconv_params();
+            let (eng, threads) = resolve_transpose(
+                engine, cfg.h, cfg.h, cfg.c_in, cfg.c_out, cfg.k, &p, 1);
+            let prepacked = l.patterns.iter()
+                .flat_map(|pt| pt.packed.iter())
+                .map(|pb| pb.bytes())
+                .sum();
+            push_step(&mut steps, cfg.name,
+                      PlanOp::TransposeConv {
+                          kernel: l.kernel.clone(),
+                          patterns: l.patterns.clone(),
+                          k: cfg.k,
+                          params: p,
+                          h: cfg.h,
+                          c_in: cfg.c_in,
+                          c_out: cfg.c_out,
+                      },
+                      Some(eng), threads,
+                      [cfg.h_out(), cfg.h_out(), cfg.c_out], prepacked);
+            push_act(&mut steps,
+                     if i == n - 1 { Act::Tanh } else { Act::Relu });
+        }
+        ExecPlan::new(Some(engine), in_dim, steps)
+    }
+
+    /// Compile a segnet-shaped plan: dilated trunk (relu each) →
+    /// parallel atrous pyramid (branches summed, relu) → 1×1 head.
+    /// `over` = engine applied to every layer; `None` honors each
+    /// layer's configured engine (resolving any `Auto`). The plan ends
+    /// at the logits — serving appends [`ExecPlan::with_argmax_head`].
+    pub(crate) fn compile_seg(trunk: &[SegLayer], aspp: &[SegLayer],
+                              head: &SegLayer, over: Option<Engine>)
+                              -> ExecPlan {
+        let first = &trunk[0].cfg;
+        let in_elems = first.h * first.h * first.c_in;
+        let mut steps = Vec::new();
+        let dilated_step = |steps: &mut Vec<PlanStep>, l: &SegLayer,
+                            fan: Fan| {
+            let cfg = &l.cfg;
+            let (eng, threads) = resolve_dilated(
+                over.unwrap_or(cfg.engine), cfg.h, cfg.h, cfg.c_in,
+                cfg.c_out, cfg.k, &cfg.params, cfg.threads);
+            push_step(steps, cfg.name,
+                      PlanOp::DilatedConv {
+                          kernel: l.kernel.clone(),
+                          taps: l.taps.clone(),
+                          params: cfg.params,
+                          h: cfg.h,
+                          c_in: cfg.c_in,
+                          c_out: cfg.c_out,
+                          fan,
+                      },
+                      Some(eng), threads,
+                      [cfg.h_out(), cfg.h_out(), cfg.c_out],
+                      l.taps.packed_bytes());
+        };
+        for l in trunk {
+            dilated_step(&mut steps, l, Fan::Seq);
+            push_act(&mut steps, Act::Relu);
+        }
+        for (i, l) in aspp.iter().enumerate() {
+            // branches are summed elementwise into one accumulator, so
+            // every branch must produce the first branch's shape (the
+            // check the legacy forward made per call now runs once, at
+            // compile)
+            assert_eq!(
+                (l.cfg.h_out(), l.cfg.c_out),
+                (aspp[0].cfg.h_out(), aspp[0].cfg.c_out),
+                "ASPP branch shape mismatch: {}", l.cfg.name);
+            let fan = if i == 0 { Fan::BranchFirst } else { Fan::BranchAdd };
+            dilated_step(&mut steps, l, fan);
+        }
+        push_act(&mut steps, Act::Relu);
+        dilated_step(&mut steps, head, Fan::Seq);
+        ExecPlan::new(over, in_elems, steps)
+    }
+
+    /// This plan with every HUGE² conv step's thread count forced to
+    /// `threads` (Baseline steps stay single-threaded). The MT engines
+    /// are bit-identical across thread counts (DESIGN.md §8), so this
+    /// is a pure throughput knob for deployments with a different core
+    /// budget — and the lever the plan-vs-legacy bit-identity grid
+    /// sweeps.
+    pub fn with_threads(&self, threads: usize) -> ExecPlan {
+        let mut steps = self.steps.clone();
+        for st in &mut steps {
+            if st.engine == Some(Engine::Huge2) {
+                st.threads = threads.max(1);
+            }
+        }
+        ExecPlan::new(self.requested, self.in_elems, steps)
+    }
+
+    /// This plan plus an output head — the serving form (e.g. the seg
+    /// model's per-pixel argmax, so the worker's `run_into` yields the
+    /// client-ready mask directly).
+    pub fn with_argmax_head(&self, classes: usize) -> ExecPlan {
+        let last = self.steps.last().expect("plan has steps");
+        let [h, w, k] = last.out_shape;
+        assert_eq!(k, classes, "head classes must match the logits");
+        let mut steps = self.steps.clone();
+        push_step(&mut steps, "argmax",
+                  PlanOp::Head(Head::ArgmaxMask { classes }), None, 1,
+                  [h, w, 1], 0);
+        ExecPlan::new(self.requested, self.in_elems, steps)
+    }
+
+    fn new(requested: Option<Engine>, in_elems: usize,
+           steps: Vec<PlanStep>) -> ExecPlan {
+        assert!(steps.iter().any(|s| s.op.is_producer()),
+                "a plan needs at least one producing op");
+        let digest = digest_steps(requested, in_elems, &steps);
+        ExecPlan { requested, steps, in_elems, digest }
+    }
+
+    // ----------------------------------------------------- introspect
+
+    pub fn requested(&self) -> Option<Engine> {
+        self.requested
+    }
+
+    /// True when every compiled compute step resolved to the concrete
+    /// engine `e` — executing this plan is then bit-identical to one
+    /// compiled with `e` applied everywhere (thread counts may differ;
+    /// the MT engines are bit-identical across thread counts, §8).
+    /// Model forwards use this to route explicit-engine calls to the
+    /// stored plan instead of compiling a transient one, keeping the
+    /// steady-state allocation-free (DESIGN.md §9).
+    pub fn resolves_to(&self, e: Engine) -> bool {
+        e != Engine::Auto
+            && self.steps.iter()
+                .all(|s| s.engine.is_none() || s.engine == Some(e))
+    }
+
+    pub fn steps(&self) -> &[PlanStep] {
+        &self.steps
+    }
+
+    /// Per-request input element count (latent width, or `h·w·c` of one
+    /// image).
+    pub fn in_elems(&self) -> usize {
+        self.in_elems
+    }
+
+    /// Per-image output element count.
+    pub fn out_elems(&self) -> usize {
+        self.steps.last().unwrap().out_elems
+    }
+
+    /// Output tensor shape for batch `b`.
+    pub fn out_shape(&self, b: usize) -> Vec<usize> {
+        let [h, w, c] = self.steps.last().unwrap().out_shape;
+        vec![b, h, w, c]
+    }
+
+    /// Total bytes of prepacked GEMM panels the plan reuses (paid once
+    /// at model load).
+    pub fn prepacked_bytes(&self) -> usize {
+        self.steps.iter().map(|s| s.prepacked_bytes).sum()
+    }
+
+    /// FNV-1a digest of every resolved engine choice (layer name, op,
+    /// engine, threads, shape). Recorded in replay trace headers so a
+    /// replay proves it runs the *same* selections as the recording —
+    /// the guard that keeps `Engine::Auto` deterministic across
+    /// heuristic changes (DESIGN.md §10).
+    pub fn engine_digest(&self) -> u64 {
+        self.digest
+    }
+
+    /// Workspace high-water mark for batch `b`: the peak pooled
+    /// elements the executor holds live at once (activation slabs plus
+    /// per-step engine scratch), walked over the same schedule
+    /// [`ExecPlan::run_into`] executes. Size classes round each slab up
+    /// to a power of two, so the pool's steady footprint is this
+    /// figure's class-rounded ceiling (DESIGN.md §9/§10).
+    pub fn high_water_elems(&self, b: usize) -> usize {
+        let last_prod = self.last_producer();
+        let mut peak = 0usize;
+        let mut cur = 0usize; // live current-activation elems
+        let mut saved = 0usize; // live ASPP group-input elems
+        for (i, st) in self.steps.iter().enumerate() {
+            let scratch = step_scratch_elems(st, b);
+            match &st.op {
+                PlanOp::Activation(_) => {}
+                PlanOp::DilatedConv { fan: Fan::BranchFirst, .. } => {
+                    saved = cur;
+                    let dst = if i == last_prod { 0 } else {
+                        b * st.out_elems
+                    };
+                    peak = peak.max(saved + dst + scratch);
+                    cur = dst;
+                }
+                PlanOp::DilatedConv { fan: Fan::BranchAdd, .. } => {
+                    let scr = b * st.out_elems;
+                    peak = peak.max(saved + cur + scr + scratch);
+                }
+                _ => {
+                    // sequential producer: old cur + new dst live at once
+                    let dst = if i == last_prod { 0 } else {
+                        b * st.out_elems
+                    };
+                    peak = peak.max(saved + cur + dst + scratch);
+                    cur = dst;
+                    saved = 0;
+                }
+            }
+        }
+        peak
+    }
+
+    fn last_producer(&self) -> usize {
+        self.steps.iter().rposition(|s| s.op.is_producer())
+            .expect("plan has a producer")
+    }
+
+    // ------------------------------------------------------- execute
+
+    /// Tensor-level convenience over [`ExecPlan::run_into`] (the output
+    /// tensor is client-owned — the one allocation a plan run makes).
+    pub fn run(&self, x: &Tensor, hnd: &mut WsHandle) -> Tensor {
+        let b = x.len() / self.in_elems;
+        let mut out = Tensor::zeros(&self.out_shape(b));
+        self.run_into(x.data(), b, out.data_mut(), hnd);
+        out
+    }
+
+    /// Execute the plan: `xd` is the `(b, in_elems)` input, `out` the
+    /// `(b, out_elems)` destination (fully overwritten). Every
+    /// intermediate draws from `hnd` at its precompiled size; after a
+    /// warmup batch of a given size, execution is pure slab reuse
+    /// (`tests/workspace_stack.rs` pins this).
+    ///
+    /// This is **the** forward executor: `Generator::forward*`,
+    /// `SegNet::forward*` and the coordinator workers are all thin
+    /// wrappers over it.
+    pub fn run_into(&self, xd: &[f32], b: usize, out: &mut [f32],
+                    hnd: &mut WsHandle) {
+        assert_eq!(xd.len(), b * self.in_elems, "plan input size");
+        assert_eq!(out.len(), b * self.out_elems(), "plan output size");
+        let last_prod = self.last_producer();
+
+        // Current activation: the caller's input until the first
+        // producer runs, then a pooled slab, then `out` after the last
+        // producer. `saved` holds the pyramid group input while ASPP
+        // branches accumulate.
+        enum Cursor {
+            Input,
+            Buf(WsBuf),
+            Out,
+        }
+        let mut cursor = Cursor::Input;
+        let mut saved: Option<Cursor> = None;
+
+        for (i, st) in self.steps.iter().enumerate() {
+            // a finished pyramid group releases its saved input: any op
+            // other than a later branch (or an in-place activation on
+            // the accumulator) means the group is over
+            let keeps_saved = matches!(
+                &st.op,
+                PlanOp::Activation(_)
+                | PlanOp::DilatedConv { fan: Fan::BranchAdd, .. });
+            if !keeps_saved {
+                if let Some(Cursor::Buf(old)) = saved.take() {
+                    hnd.checkin(old);
+                }
+            }
+            match &st.op {
+                PlanOp::Activation(a) => match &mut cursor {
+                    Cursor::Input => {
+                        unreachable!("activation cannot lead a plan")
+                    }
+                    Cursor::Buf(buf) => a.apply(buf),
+                    Cursor::Out => a.apply(out),
+                },
+                PlanOp::DilatedConv { kernel, taps, params, h, c_in,
+                                      fan: Fan::BranchAdd, .. } => {
+                    let mut scratch = hnd.checkout(b * st.out_elems);
+                    {
+                        let src: &[f32] = match saved.as_ref()
+                            .expect("BranchAdd outside a pyramid group")
+                        {
+                            Cursor::Input => xd,
+                            Cursor::Buf(buf) => buf,
+                            Cursor::Out => unreachable!(),
+                        };
+                        run_dilated_op(src, b, *h, *h, *c_in, kernel, taps,
+                                       params, st.engine.unwrap(),
+                                       st.threads, &mut scratch, hnd);
+                    }
+                    let acc: &mut [f32] = match &mut cursor {
+                        Cursor::Buf(buf) => buf,
+                        Cursor::Out => out,
+                        Cursor::Input => unreachable!(),
+                    };
+                    for (a, y) in acc.iter_mut().zip(scratch.iter()) {
+                        *a += *y;
+                    }
+                    hnd.checkin(scratch);
+                }
+                op => {
+                    // sequential producer (Project / conv / head) or
+                    // the first pyramid branch
+                    let branch_first = matches!(
+                        op, PlanOp::DilatedConv {
+                            fan: Fan::BranchFirst, ..
+                        });
+                    let mut dstbuf = (i != last_prod)
+                        .then(|| hnd.checkout(b * st.out_elems));
+                    {
+                        let dst: &mut [f32] = match &mut dstbuf {
+                            Some(d) => d,
+                            None => out,
+                        };
+                        let src: &[f32] = match &cursor {
+                            Cursor::Input => xd,
+                            Cursor::Buf(buf) => buf,
+                            Cursor::Out => unreachable!(
+                                "producer after the last producer"),
+                        };
+                        match op {
+                            PlanOp::Project { w, in_dim, out_dim } => {
+                                crate::gemm::sgemm_with(
+                                    hnd, b, *out_dim, *in_dim, src,
+                                    w.data(), dst, false);
+                            }
+                            PlanOp::TransposeConv { kernel, patterns, k,
+                                                    params, h, c_in, .. }
+                            => {
+                                run_transpose_op(
+                                    src, b, *h, *h, *c_in, kernel,
+                                    patterns, *k, params,
+                                    st.engine.unwrap(), st.threads, dst,
+                                    hnd);
+                            }
+                            PlanOp::DilatedConv { kernel, taps, params,
+                                                  h, c_in, .. } => {
+                                run_dilated_op(
+                                    src, b, *h, *h, *c_in, kernel, taps,
+                                    params, st.engine.unwrap(),
+                                    st.threads, dst, hnd);
+                            }
+                            PlanOp::Head(Head::ArgmaxMask { classes }) => {
+                                let [h, w, _] = st.out_shape;
+                                crate::seg::argmax_into(
+                                    src, b, h, w, *classes, dst);
+                            }
+                            PlanOp::Activation(_) => unreachable!(),
+                        }
+                    }
+                    // retire the old activation; advance the cursor
+                    let old = std::mem::replace(
+                        &mut cursor,
+                        match dstbuf {
+                            Some(d) => Cursor::Buf(d),
+                            None => Cursor::Out,
+                        });
+                    match old {
+                        Cursor::Buf(buf) if branch_first => {
+                            saved = Some(Cursor::Buf(buf));
+                        }
+                        Cursor::Input if branch_first => {
+                            saved = Some(Cursor::Input);
+                        }
+                        Cursor::Buf(buf) => hnd.checkin(buf),
+                        _ => {}
+                    }
+                }
+            }
+        }
+        if let Some(Cursor::Buf(old)) = saved.take() {
+            hnd.checkin(old);
+        }
+        debug_assert!(matches!(cursor, Cursor::Out));
+    }
+}
+
+fn push_step(steps: &mut Vec<PlanStep>, name: &str, op: PlanOp,
+             engine: Option<Engine>, threads: usize,
+             out_shape: [usize; 3], prepacked_bytes: usize) {
+    steps.push(PlanStep {
+        name: name.to_string(),
+        out_elems: out_shape.iter().product(),
+        op,
+        engine,
+        threads,
+        out_shape,
+        prepacked_bytes,
+    });
+}
+
+fn push_act(steps: &mut Vec<PlanStep>, a: Act) {
+    let prev = steps.last().expect("activation follows a producer");
+    let shape = prev.out_shape;
+    push_step(steps, a.name(), PlanOp::Activation(a), None, 1, shape, 0);
+}
+
+/// Pooled scratch elements one step's engine checks out for batch `b`
+/// (mirrors the checkouts in the engine bodies — the workspace
+/// high-water computation, DESIGN.md §10).
+fn step_scratch_elems(st: &PlanStep, b: usize) -> usize {
+    use crate::gemm::{prepacked_scratch_elems, sgemm_scratch_elems};
+    match &st.op {
+        PlanOp::Project { out_dim, .. } => sgemm_scratch_elems(*out_dim),
+        PlanOp::Activation(_) | PlanOp::Head(_) => 0,
+        PlanOp::TransposeConv { patterns, k, params, h, c_in, c_out, .. }
+        => {
+            let ho = params.out_size(*h, *k);
+            match st.engine {
+                Some(Engine::Baseline) => {
+                    let st_ = params.stride;
+                    let (lo, hi) = params.inflate_pad(*k);
+                    let ih = (*h - 1) * st_ + 1 + lo + hi;
+                    b * ih * ih * c_in
+                        + ho * ho * k * k * c_in
+                        + sgemm_scratch_elems(*c_out)
+                }
+                _ => {
+                    let (ply, phy, plx, phx) = huge2::pad_geometry(
+                        patterns, *h, *h, ho, ho, params.stride);
+                    let sub = ho.div_ceil(params.stride).pow(2);
+                    let padded =
+                        b * (*h + ply + phy) * (*h + plx + phx) * c_in;
+                    if st.threads > 1 {
+                        // the MT engine holds EVERY pattern's sub-output
+                        // (stride² of them) until the serial scatter,
+                        // regardless of thread count; A-assembly buffers
+                        // and GEMM panels are per live thread
+                        let n_patterns = params.stride * params.stride;
+                        padded + n_patterns * sub * c_out
+                            + st.threads
+                                * (sub * c_in + prepacked_scratch_elems())
+                    } else {
+                        // single-threaded: one sub + one A buffer,
+                        // reused across patterns
+                        padded + sub * c_out + sub * c_in
+                            + prepacked_scratch_elems()
+                    }
+                }
+            }
+        }
+        PlanOp::DilatedConv { taps, params, h, c_in, c_out, .. } => {
+            let kk = taps.r;
+            match st.engine {
+                Some(Engine::Baseline) => {
+                    let e = params.eff_kernel(kk);
+                    let ho = params.out_size(*h, kk);
+                    e * e * c_in * c_out
+                        + ho * ho * e * e * c_in
+                        + sgemm_scratch_elems(*c_out)
+                }
+                _ => {
+                    b * (*h + 2 * params.pad).pow(2) * c_in
+                        + st.threads * prepacked_scratch_elems()
+                }
+            }
+        }
+    }
+}
+
+/// FNV-1a64 over the plan's resolved selections.
+fn digest_steps(requested: Option<Engine>, in_elems: usize,
+                steps: &[PlanStep]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut eat = |s: &str| {
+        for byte in s.as_bytes() {
+            h ^= *byte as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        h ^= 0xff;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    };
+    eat(match requested {
+        None => "per-layer",
+        Some(e) => e.name(),
+    });
+    eat(&in_elems.to_string());
+    for st in steps {
+        eat(&st.name);
+        eat(st.op.kind());
+        eat(st.engine.map(|e| e.name()).unwrap_or("-"));
+        eat(&st.threads.to_string());
+        eat(&format!("{:?}", st.out_shape));
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::tiny_segnet;
+    use crate::gan::Generator;
+    use crate::rng::Rng;
+    use crate::seg::SegNet;
+    use crate::workspace::Workspace;
+
+    #[test]
+    fn auto_resolution_is_shape_driven() {
+        // stride 1: nothing to skip -> baseline
+        let p1 = DeconvParams::new(1, 1, 0);
+        assert_eq!(resolve_transpose(Engine::Auto, 8, 8, 4, 4, 3, &p1, 1),
+                   (Engine::Baseline, 1));
+        // stride 2, small -> huge2 single-thread
+        let p2 = DeconvParams::new(2, 2, 1);
+        assert_eq!(resolve_transpose(Engine::Auto, 8, 8, 4, 4, 5, &p2, 1),
+                   (Engine::Huge2, 1));
+        // stride 2, DC1-sized -> huge2 multi-threaded
+        assert_eq!(
+            resolve_transpose(Engine::Auto, 4, 4, 1024, 512, 5, &p2, 1),
+            (Engine::Huge2, AUTO_THREADS));
+        // concrete requests pass through (baseline is single-threaded)
+        assert_eq!(resolve_transpose(Engine::Baseline, 4, 4, 8, 8, 5, &p2,
+                                     7),
+                   (Engine::Baseline, 1));
+        assert_eq!(resolve_transpose(Engine::Huge2, 4, 4, 8, 8, 5, &p2, 7),
+                   (Engine::Huge2, 7));
+
+        // dilated: dilation 1 + tiny -> baseline; dilation > 1 -> huge2
+        let d1 = DilatedParams::new(1, 1, 1);
+        assert_eq!(resolve_dilated(Engine::Auto, 9, 9, 2, 4, 3, &d1, 1),
+                   (Engine::Baseline, 1));
+        let d2 = DilatedParams::new(2, 1, 2);
+        assert_eq!(resolve_dilated(Engine::Auto, 9, 9, 2, 4, 3, &d2, 1).0,
+                   Engine::Huge2);
+        // dilation 1 but heavy -> huge2 (prepacked taps win)
+        assert_eq!(
+            resolve_dilated(Engine::Auto, 33, 33, 64, 64, 3, &d1, 1).0,
+            Engine::Huge2);
+    }
+
+    #[test]
+    fn digest_tracks_engine_selection() {
+        let gen = Generator::tiny_cgan(5);
+        let a = ExecPlan::compile_gan(&gen.proj, &gen.layers, Engine::Auto);
+        let a2 = ExecPlan::compile_gan(&gen.proj, &gen.layers,
+                                       Engine::Auto);
+        let b = ExecPlan::compile_gan(&gen.proj, &gen.layers,
+                                      Engine::Baseline);
+        assert_eq!(a.engine_digest(), a2.engine_digest(),
+                   "digest must be deterministic");
+        assert_ne!(a.engine_digest(), b.engine_digest(),
+                   "digest must see engine changes");
+        let net = SegNet::new(&tiny_segnet(), 5);
+        let s = net.plan();
+        assert_ne!(s.engine_digest(), a.engine_digest());
+        assert_ne!(s.with_argmax_head(3).engine_digest(),
+                   s.engine_digest(), "head changes the digest");
+    }
+
+    #[test]
+    fn plan_shapes_and_high_water() {
+        let gen = Generator::tiny_cgan(5);
+        let plan = gen.plan();
+        assert_eq!(plan.in_elems(), 8);
+        assert_eq!(plan.out_shape(3), vec![3, 32, 32, 3]);
+        assert!(plan.prepacked_bytes() > 0);
+        assert!(plan.high_water_elems(1) > 0);
+        assert!(plan.high_water_elems(4) > plan.high_water_elems(1));
+
+        let net = SegNet::new(&tiny_segnet(), 5);
+        let serve = net.plan().with_argmax_head(net.n_classes());
+        assert_eq!(serve.out_shape(2), vec![2, 9, 9, 1]);
+        assert_eq!(net.plan().out_shape(2), vec![2, 9, 9, 3]);
+    }
+
+    #[test]
+    fn plan_run_matches_model_forward() {
+        let ws = Workspace::new();
+        let gen = Generator::tiny_cgan(5);
+        let z = Tensor::randn(&[2, 8], &mut Rng::new(3));
+        for e in [Engine::Baseline, Engine::Huge2, Engine::Auto] {
+            let plan = ExecPlan::compile_gan(&gen.proj, &gen.layers, e);
+            let got = plan.run(&z, &mut ws.handle());
+            let want = gen.forward(&z, e);
+            assert_eq!(got.checksum(), want.checksum(), "{e:?}");
+        }
+    }
+}

@@ -77,14 +77,15 @@ pub fn encode_header(h: &TraceHeader) -> String {
     format!(
         "{{\"huge2_trace\":{TRACE_VERSION},\"model\":\"{}\",\
          \"backend\":\"{}\",\"seed\":{},\"z_dim\":{},\"cond_dim\":{},\
-         \"task\":\"{}\",\"net\":\"{}\"}}",
+         \"task\":\"{}\",\"net\":\"{}\",\"engine_digest\":\"{}\"}}",
         esc(&h.model),
         esc(&h.backend),
         h.seed,
         h.z_dim,
         h.cond_dim,
         esc(&h.task),
-        esc(&h.net)
+        esc(&h.net),
+        esc(&h.engine_digest)
     )
 }
 
@@ -324,6 +325,15 @@ fn string(m: &[(String, Val)], k: &str) -> Result<String, String> {
     }
 }
 
+/// A string field that later builds added to an existing version:
+/// absence decodes as empty, presence must still be a string.
+fn string_opt(m: &[(String, Val)], k: &str) -> Result<String, String> {
+    if get(m, k).is_err() {
+        return Ok(String::new());
+    }
+    string(m, k)
+}
+
 fn u64_list(m: &[(String, Val)], k: &str) -> Result<Vec<u64>, String> {
     match get(m, k)? {
         Val::List(items) => items
@@ -384,10 +394,13 @@ pub fn decode_header(line: &str) -> Result<TraceHeader, String> {
              1..={TRACE_VERSION})"
         ));
     }
-    let (task, net) = if version >= 2 {
-        (string(&m, "task")?, string(&m, "net")?)
+    let (task, net, engine_digest) = if version >= 2 {
+        // engine_digest is a v2-compatible *extra* field: traces written
+        // before it existed decode with it empty
+        (string(&m, "task")?, string(&m, "net")?,
+         string_opt(&m, "engine_digest")?)
     } else {
-        ("generate".to_string(), String::new())
+        ("generate".to_string(), String::new(), String::new())
     };
     Ok(TraceHeader {
         model: string(&m, "model")?,
@@ -397,6 +410,7 @@ pub fn decode_header(line: &str) -> Result<TraceHeader, String> {
         cond_dim: num(&m, "cond_dim")? as usize,
         task,
         net,
+        engine_digest,
     })
 }
 
@@ -516,6 +530,7 @@ mod tests {
             cond_dim: 0,
             task: "generate".into(),
             net: String::new(),
+            engine_digest: String::new(),
         }
     }
 
@@ -527,9 +542,22 @@ mod tests {
             task: "segment".into(),
             net: "segnet".into(),
             z_dim: 0,
+            engine_digest: "00ff00ff00ff00ff".into(),
             ..header()
         };
         assert_eq!(decode_header(&encode_header(&seg)).unwrap(), seg);
+    }
+
+    #[test]
+    fn v2_header_without_digest_decodes_empty() {
+        // a v2 trace written before the engine_digest field existed
+        let line = "{\"huge2_trace\":2,\"model\":\"seg\",\
+                    \"backend\":\"native\",\"seed\":5,\"z_dim\":0,\
+                    \"cond_dim\":0,\"task\":\"segment\",\
+                    \"net\":\"tiny_segnet\"}";
+        let h = decode_header(line).unwrap();
+        assert_eq!(h.engine_digest, "");
+        assert_eq!(h.net, "tiny_segnet");
     }
 
     #[test]

@@ -119,6 +119,14 @@ pub struct TraceHeader {
     /// Segmentation-net config name (`config::segnet_by_name`) for
     /// `task == "segment"`; empty otherwise (v2 field; v1 decodes empty).
     pub net: String,
+    /// 16-hex engine-selection digest of the serving model's compiled
+    /// plan ([`crate::plan::ExecPlan::engine_digest`]); empty for PJRT
+    /// backends and traces recorded before plans existed. A
+    /// v2-compatible *extra* field: older readers ignore unknown header
+    /// fields, and this build decodes its absence as empty. Replay
+    /// re-checks it so `Engine::Auto` replays the exact recorded
+    /// selections even if the heuristic changed (DESIGN.md §10).
+    pub engine_digest: String,
 }
 
 #[cfg(test)]

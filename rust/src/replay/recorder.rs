@@ -133,6 +133,7 @@ mod tests {
             cond_dim: 0,
             task: "generate".into(),
             net: String::new(),
+            engine_digest: String::new(),
         });
         let sink = rec.sink();
         sink.record(EventBody::Enqueue { id: 0, depth: 1 });

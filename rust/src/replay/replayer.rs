@@ -120,6 +120,32 @@ impl Replayer {
     /// request.
     pub fn run(&self, engine: &Engine, timing: Timing)
                -> Result<ReplayReport> {
+        // Engine-selection digest gate (DESIGN.md §10): a trace recorded
+        // against a compiled plan names the plan's per-layer engine
+        // choices; the replaying engine must have compiled the *same*
+        // ones (`Engine::Auto` heuristics may change between builds, a
+        // tampered header must not silently "replay"). A mismatch makes
+        // every output checksum incomparable, so it is a hard error —
+        // like a failed image reconstruction — not a per-request
+        // divergence. Traces without the field (v1, pre-plan v2, PJRT)
+        // skip the gate.
+        if !self.header.engine_digest.is_empty() {
+            let want = u64::from_str_radix(&self.header.engine_digest, 16)
+                .map_err(|_| anyhow!(
+                    "trace header engine_digest {:?} is not a u64 hex",
+                    self.header.engine_digest))?;
+            if let Some(got) = engine.plan_digest(&self.header.model) {
+                if got != want {
+                    return Err(anyhow!(
+                        "engine-selection digest mismatch for model \
+                         {:?}: trace recorded {want:016x}, this engine \
+                         compiled {got:016x} — the plan's per-layer \
+                         engine choices differ, so recorded checksums \
+                         are not comparable",
+                        self.header.model));
+                }
+            }
+        }
         let t0 = Instant::now();
         // Faithful offsets are rebased to the first arrival: recorded
         // t_us counts from sink creation, which includes the recording
@@ -263,6 +289,7 @@ mod tests {
             cond_dim: 0,
             task: "generate".into(),
             net: String::new(),
+            engine_digest: String::new(),
         };
         let events = vec![
             TraceEvent {

@@ -5,11 +5,13 @@
 //! A [`SegNet`] is assembled from [`SegLayerConfig`]s in [`crate::config`]
 //! (sequential trunk → parallel atrous spatial pyramid, branches summed →
 //! 1×1 classifier head — the DeepLab/ENet shape), with a **per-layer**
-//! choice of baseline vs HUGE² untangled dilated conv and a per-layer
-//! thread count. Like `gan::GenLayer`, every layer pre-decomposes at
-//! load time: the `R·S` tap weight panels are packed into GEMM
-//! micro-kernel layout once ([`dilated::pack_taps`]), so inference never
-//! packs B.
+//! engine choice (the registry configs use [`Engine::Auto`], resolved by
+//! the plan heuristic at load time) and a per-layer thread count. Like
+//! `gan::GenLayer`, every layer pre-decomposes at load time: the `R·S`
+//! tap weight panels are packed into GEMM micro-kernel layout once
+//! ([`dilated::pack_taps`]), shared by `Arc` with every compiled
+//! [`ExecPlan`] — inference never packs B, and the forward internals
+//! live in the one plan executor (DESIGN.md §10).
 //!
 //! Serving contract (DESIGN.md §8): the forward pass is deterministic,
 //! bit-identical across thread counts, and batch-composition-invariant
@@ -17,73 +19,62 @@
 //! requests record/replay under the same checksum discipline as GAN
 //! requests.
 
+use std::sync::Arc;
+
 use crate::config::{SegLayerConfig, SegNetConfig};
 use crate::deconv::dilated::{self, DilatedTaps};
-use crate::deconv::{baseline, parallel, Engine};
+use crate::deconv::Engine;
 use crate::gan::Forward;
+use crate::plan::{resolve_dilated, run_dilated_op, ExecPlan};
 use crate::rng::Rng;
 use crate::tensor::Tensor;
 use crate::workspace::{Workspace, WsHandle};
 
 /// One dilated-conv layer with its weights and pre-packed tap panels
-/// (packed once at model-load time, as a serving engine would do).
+/// (packed once at model-load time, `Arc`-shared with compiled plans).
 pub struct SegLayer {
     pub cfg: SegLayerConfig,
-    pub kernel: Tensor,
-    taps: DilatedTaps,
+    pub kernel: Arc<Tensor>,
+    pub(crate) taps: Arc<DilatedTaps>,
 }
 
 impl SegLayer {
     pub fn new(cfg: SegLayerConfig, kernel: Tensor) -> Self {
         assert_eq!(kernel.shape(), &[cfg.k, cfg.k, cfg.c_in, cfg.c_out]);
-        let taps = dilated::pack_taps(&kernel);
-        SegLayer { cfg, kernel, taps }
+        let taps = Arc::new(dilated::pack_taps(&kernel));
+        SegLayer { cfg, kernel: Arc::new(kernel), taps }
     }
 
-    /// Forward one layer with an explicit engine choice (the per-config
-    /// choice lives in `cfg.engine`; [`SegNet::forward`] applies it).
+    /// Forward one layer with an explicit engine choice (`Auto` resolves
+    /// through the plan heuristic; the per-config choice lives in
+    /// `cfg.engine` and is applied by the compiled net plan).
     pub fn forward(&self, x: &Tensor, engine: Engine) -> Tensor {
+        let ws = Workspace::new();
+        let hnd = &mut ws.handle();
         let p = self.cfg.params;
-        match engine {
-            Engine::Baseline => baseline::conv2d_dilated(x, &self.kernel, &p),
-            Engine::Huge2 if self.cfg.threads > 1 => {
-                parallel::conv2d_dilated_mt(x, &self.taps, &p,
-                                            self.cfg.threads)
-            }
-            Engine::Huge2 => dilated::conv2d_dilated_with(x, &self.taps, &p),
-        }
-    }
-
-    /// Slice-level forward for the pooled net path: `xd` is the
-    /// `(b, h, h, c_in)` activation (dims from `cfg`), `out` the
-    /// `(b, h_out, h_out, c_out)` destination; all scratch from `hnd`
-    /// (the multi-threaded engine hands `hnd.workspace()` to its row
-    /// shards).
-    pub(crate) fn forward_into(&self, xd: &[f32], b: usize, engine: Engine,
-                               out: &mut [f32], hnd: &mut WsHandle) {
-        let p = self.cfg.params;
-        let (ih, c_in) = (self.cfg.h, self.cfg.c_in);
-        match engine {
-            Engine::Baseline => baseline::conv2d_dilated_into(
-                xd, b, ih, ih, c_in, &self.kernel, &p, out, hnd),
-            Engine::Huge2 if self.cfg.threads > 1 => {
-                parallel::dilated_mt_into(xd, b, ih, ih, c_in, &self.taps,
-                                          &p, self.cfg.threads, out,
-                                          hnd.workspace())
-            }
-            Engine::Huge2 => dilated::dilated_into(xd, b, ih, ih, c_in,
-                                                   &self.taps, &p, out,
-                                                   hnd),
-        }
+        let (b, h, w, c) = x.dims4();
+        let (eng, threads) = resolve_dilated(
+            engine, h, w, c, self.cfg.c_out, self.cfg.k, &p,
+            self.cfg.threads);
+        let ho = p.out_size(h, self.cfg.k);
+        let wo = p.out_size(w, self.cfg.k);
+        let mut out = Tensor::zeros(&[b, ho, wo, self.cfg.c_out]);
+        run_dilated_op(x.data(), b, h, w, c, &self.kernel, &self.taps, &p,
+                       eng, threads, out.data_mut(), hnd);
+        out
     }
 }
 
-/// A segmentation network: trunk, atrous pyramid, classifier head.
+/// A segmentation network: trunk, atrous pyramid, classifier head,
+/// compiled to an [`ExecPlan`] at load time.
 pub struct SegNet {
     pub cfg: SegNetConfig,
     pub trunk: Vec<SegLayer>,
     pub aspp: Vec<SegLayer>,
     pub head: SegLayer,
+    /// The load-time-compiled logits plan (per-layer config engines,
+    /// `Auto` resolved); serving appends the argmax head.
+    plan: ExecPlan,
 }
 
 impl SegNet {
@@ -102,11 +93,18 @@ impl SegNet {
         let head = mk(&cfg.head);
         assert!(!trunk.is_empty() && !aspp.is_empty(),
                 "segnet needs a trunk and at least one ASPP branch");
-        SegNet { cfg: cfg.clone(), trunk, aspp, head }
+        let plan = ExecPlan::compile_seg(&trunk, &aspp, &head, None);
+        SegNet { cfg: cfg.clone(), trunk, aspp, head, plan }
     }
 
     pub fn n_classes(&self) -> usize {
         self.cfg.n_classes
+    }
+
+    /// The load-time-compiled execution plan (logits; engine selection
+    /// already resolved, all prepacking shared).
+    pub fn plan(&self) -> &ExecPlan {
+        &self.plan
     }
 
     /// Single-image input shape `(1, H, W, C)` — what request payloads
@@ -119,12 +117,11 @@ impl SegNet {
 
     /// Logit tensor shape for batch `b`: `(b, Ho, Wo, n_classes)`.
     pub fn logits_shape(&self, b: usize) -> Vec<usize> {
-        let h = self.head.cfg.h_out();
-        vec![b, h, h, self.cfg.n_classes]
+        self.plan.out_shape(b)
     }
 
     /// `x`: `(B, H, W, C)` → logits `(B, Ho, Wo, n_classes)`, using each
-    /// layer's configured engine/threads.
+    /// layer's configured engine/threads (the stored plan).
     pub fn forward(&self, x: &Tensor) -> Tensor {
         self.forward_with(x, None)
     }
@@ -151,47 +148,22 @@ impl SegNet {
 
     /// Slice-level forward: `xd` is the `(b, H, W, C)` input, `out` the
     /// `(b, Ho, Wo, n_classes)` logits destination (fully overwritten).
-    /// Activations ping-pong between pooled slabs; the ASPP branches
-    /// accumulate in place in config order (same left-to-right sum as
-    /// the tensor path — replay determinism).
+    /// Thin wrapper over [`ExecPlan::run_into`] — the one place the
+    /// forward internals (ping-pong, pyramid sum order, dispatch) live.
+    /// Overrides the stored plan already resolves to run it directly
+    /// (no per-call compile — the steady state stays allocation-free);
+    /// only a genuinely different selection compiles a transient plan.
     pub fn forward_into(&self, xd: &[f32], b: usize, over: Option<Engine>,
                         out: &mut [f32], hnd: &mut WsHandle) {
-        let pick = |l: &SegLayer| over.unwrap_or(l.cfg.engine);
-        let elems = |c: &SegLayerConfig| b * c.h_out() * c.h_out() * c.c_out;
-        // trunk: sequential ping-pong
-        let mut cur = None;
-        for l in &self.trunk {
-            let mut nxt = hnd.checkout(elems(&l.cfg));
-            match &cur {
-                None => l.forward_into(xd, b, pick(l), &mut nxt, hnd),
-                Some(prev) => l.forward_into(prev, b, pick(l), &mut nxt,
-                                             hnd),
-            }
-            crate::tensor::relu_inplace(&mut nxt);
-            if let Some(prev) = cur.replace(nxt) {
-                hnd.checkin(prev);
-            }
+        let stored = over == self.plan.requested()
+            || matches!(over, Some(e) if self.plan.resolves_to(e));
+        if stored {
+            self.plan.run_into(xd, b, out, hnd);
+        } else {
+            ExecPlan::compile_seg(&self.trunk, &self.aspp, &self.head,
+                                  over)
+                .run_into(xd, b, out, hnd);
         }
-        let trunk_out = cur.expect("segnet needs a trunk");
-        // ASPP: parallel branches over the same input, summed in config
-        // order (fixed order — replay determinism).
-        let ae = elems(&self.aspp[0].cfg);
-        let mut acc = hnd.checkout(ae);
-        self.aspp[0].forward_into(&trunk_out, b, pick(&self.aspp[0]),
-                                  &mut acc, hnd);
-        let mut branch = hnd.checkout(ae);
-        for l in &self.aspp[1..] {
-            assert_eq!(elems(&l.cfg), ae, "ASPP branch shape mismatch");
-            l.forward_into(&trunk_out, b, pick(l), &mut branch, hnd);
-            for (a, y) in acc.iter_mut().zip(branch.iter()) {
-                *a += *y;
-            }
-        }
-        hnd.checkin(branch);
-        hnd.checkin(trunk_out);
-        crate::tensor::relu_inplace(&mut acc);
-        self.head.forward_into(&acc, b, pick(&self.head), out, hnd);
-        hnd.checkin(acc);
     }
 
     /// End-to-end inference: forward + per-pixel class argmax.
@@ -242,15 +214,24 @@ pub fn argmax_mask(logits: &Tensor) -> Tensor {
     argmax_mask_from(logits.data(), b, h, w, k)
 }
 
-/// [`argmax_mask`] over a raw logits slice (the pooled worker path keeps
-/// batch logits in a workspace slab; only the mask — the client-owned
+/// [`argmax_mask`] over a raw logits slice (plan executors keep batch
+/// logits in a workspace slab; only the mask — the client-owned
 /// response — is a fresh tensor).
 pub fn argmax_mask_from(src: &[f32], b: usize, h: usize, w: usize,
                         k: usize) -> Tensor {
+    let mut out = Tensor::zeros(&[b, h, w, 1]);
+    argmax_into(src, b, h, w, k, out.data_mut());
+    out
+}
+
+/// Slice-level argmax core (the plan's `Head::ArgmaxMask` op). `dst`
+/// (length `b·h·w`) is fully overwritten.
+pub(crate) fn argmax_into(src: &[f32], b: usize, h: usize, w: usize,
+                          k: usize, dst: &mut [f32]) {
     assert!(k > 0);
     assert_eq!(src.len(), b * h * w * k, "logits size");
-    let mut out = Tensor::zeros(&[b, h, w, 1]);
-    for (pix, dst) in out.data_mut().iter_mut().enumerate() {
+    assert_eq!(dst.len(), b * h * w, "mask size");
+    for (pix, out) in dst.iter_mut().enumerate() {
         let row = &src[pix * k..(pix + 1) * k];
         let mut best = 0usize;
         for (i, &v) in row.iter().enumerate() {
@@ -258,9 +239,8 @@ pub fn argmax_mask_from(src: &[f32], b: usize, h: usize, w: usize,
                 best = i;
             }
         }
-        *dst = best as f32;
+        *out = best as f32;
     }
-    out
 }
 
 #[cfg(test)]
@@ -294,6 +274,10 @@ mod tests {
         assert!(a.allclose(&b, 1e-4), "diff {}", a.max_abs_diff(&b));
         let a2 = net.forward_with(&x, Some(Engine::Huge2));
         assert_eq!(a.checksum(), a2.checksum());
+        // the stored per-layer-config plan stays within tolerance too
+        let c = net.forward(&x);
+        assert!(c.allclose(&a, 1e-4));
+        assert_eq!(c.checksum(), net.forward(&x).checksum());
     }
 
     #[test]
@@ -303,6 +287,7 @@ mod tests {
         assert_eq!(a.trunk[0].kernel.checksum(),
                    b.trunk[0].kernel.checksum());
         assert_eq!(a.head.kernel.checksum(), b.head.kernel.checksum());
+        assert_eq!(a.plan().engine_digest(), b.plan().engine_digest());
         let c = SegNet::new(&segnet(), 12);
         assert_ne!(a.head.kernel.checksum(), c.head.kernel.checksum());
     }

@@ -8,10 +8,14 @@
 //!  * decomposition partitions the kernel taps exactly
 //!  * MAC accounting: huge2 ≤ naive, equality iff stride == 1
 
+use huge2::config::tiny_segnet;
 use huge2::deconv::{axis_pattern, baseline, col2im_baseline, dilated,
                     huge2 as engine, parallel, polyphase_len, DeconvParams,
-                    DilatedParams};
+                    DilatedParams, Engine};
+use huge2::gan::Generator;
+use huge2::plan::ExecPlan;
 use huge2::rng::Rng;
+use huge2::seg::{SegLayer, SegNet};
 use huge2::tensor::Tensor;
 use huge2::workspace::Workspace;
 
@@ -234,6 +238,89 @@ fn pooled_dilated_grid_bit_identical_to_fresh() {
         }
     }
     assert!(ws.counters().pool_hits > 0);
+}
+
+/// Plan-vs-legacy bit-identity grid (DESIGN.md §10): executing through
+/// the compiled [`ExecPlan`] — NaN-poisoned shared pool, forced thread
+/// counts — must reproduce a manual layer-by-layer composition of the
+/// public per-layer forwards **bit-for-bit**, for both nets ×
+/// {Baseline, Huge2, Auto} × thread counts. This is what licenses
+/// deleting the models' hand-rolled forward cores: the plan executor IS
+/// the forward path, and its engine resolution (incl. Auto and the MT
+/// variants) never perturbs a checksum.
+#[test]
+fn plan_vs_legacy_bit_identity_grid() {
+    let ws = Workspace::new(); // ONE dirty pool across the whole grid
+
+    // --- generator: proj + relu + deconv stack (relu/tanh) ---
+    let gen = Generator::tiny_cgan(5);
+    let z = Tensor::randn(&[2, 8], &mut Rng::new(77));
+    let legacy_gan = |e: Engine| -> Tensor {
+        let (b, zd) = z.dims2();
+        let (_, hid) = gen.proj.dims2();
+        let mut cur = vec![0.0f32; b * hid];
+        huge2::gemm::sgemm(b, hid, zd, z.data(), gen.proj.data(),
+                           &mut cur, false);
+        let f = &gen.layers[0].cfg;
+        let mut t = Tensor::from_vec(&[b, f.h, f.h, f.c_in], cur).relu();
+        let n = gen.layers.len();
+        for (i, l) in gen.layers.iter().enumerate() {
+            let y = l.forward(&t, e);
+            t = if i == n - 1 { y.tanh() } else { y.relu() };
+        }
+        t
+    };
+    for e in [Engine::Baseline, Engine::Huge2, Engine::Auto] {
+        let want = legacy_gan(e);
+        for threads in [1usize, 2, 4] {
+            let plan = ExecPlan::for_generator(&gen, e)
+                .with_threads(threads);
+            ws.poison(f32::NAN);
+            let got = plan.run(&z, &mut ws.handle());
+            assert_eq!(got.checksum(), want.checksum(),
+                       "gan plan {e:?} t={threads} != legacy");
+        }
+    }
+
+    // --- segnet: trunk (relu) + summed pyramid (relu) + head ---
+    let net = SegNet::new(&tiny_segnet(), 6);
+    let mut img_data = Vec::new();
+    for s in [30u64, 31] {
+        img_data.extend(Tensor::randn(&[1, 9, 9, 2], &mut Rng::new(s))
+            .into_vec());
+    }
+    let x = Tensor::from_vec(&[2, 9, 9, 2], img_data);
+    let legacy_seg = |over: Option<Engine>| -> Tensor {
+        let pick = |l: &SegLayer| over.unwrap_or(l.cfg.engine);
+        let mut t = x.clone();
+        for l in &net.trunk {
+            t = l.forward(&t, pick(l)).relu();
+        }
+        let mut acc = net.aspp[0].forward(&t, pick(&net.aspp[0]));
+        for l in &net.aspp[1..] {
+            acc = acc.add(&l.forward(&t, pick(l)));
+        }
+        net.head.forward(&acc.relu(), pick(&net.head))
+    };
+    for over in [None, Some(Engine::Baseline), Some(Engine::Huge2),
+                 Some(Engine::Auto)] {
+        let want = legacy_seg(over);
+        for threads in [1usize, 2, 3] {
+            let plan = ExecPlan::for_segnet(&net, over)
+                .with_threads(threads);
+            ws.poison(f32::NAN);
+            let got = plan.run(&x, &mut ws.handle());
+            assert_eq!(got.checksum(), want.checksum(),
+                       "seg plan {over:?} t={threads} != legacy");
+            // the model forward is the same plan path
+            ws.poison(f32::NAN);
+            let via_model = net.forward_ws(&x, over, &mut ws.handle());
+            assert_eq!(via_model.checksum(), want.checksum(),
+                       "seg forward {over:?} != legacy");
+        }
+    }
+    let c = ws.counters();
+    assert!(c.pool_hits > 0, "grid must exercise dirty slab reuse");
 }
 
 #[test]

@@ -53,6 +53,7 @@ fn header(seed: u64) -> TraceHeader {
         cond_dim: 0,
         task: "generate".into(),
         net: String::new(),
+        engine_digest: String::new(),
     }
 }
 

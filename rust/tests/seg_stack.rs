@@ -39,6 +39,7 @@ fn seg_header(seed: u64) -> TraceHeader {
         cond_dim: 0,
         task: "segment".into(),
         net: "tiny_segnet".into(),
+        engine_digest: String::new(),
     }
 }
 
@@ -152,6 +153,51 @@ fn non_canonical_image_is_rejected_at_record_time() {
     let eng = seg_engine(5, None);
     eng.submit("seg", Payload::image(img, 42)).unwrap().recv().unwrap();
     eng.shutdown();
+}
+
+/// The trace header's engine-selection digest pins the compiled plan's
+/// per-layer engine choices (DESIGN.md §10): a matching digest replays
+/// cleanly, a tampered one is a hard error before any compute — the
+/// guard that keeps `Engine::Auto` deterministic across heuristic
+/// changes.
+#[test]
+fn tampered_engine_digest_fails_replay() {
+    let events = record_seg_run(5, 4);
+    let eng = seg_engine(5, None);
+    let digest = eng.plan_digest("seg")
+        .expect("native seg model has a plan digest");
+
+    // correct digest: the gate passes and the replay is clean
+    let good = TraceHeader {
+        engine_digest: format!("{digest:016x}"),
+        ..seg_header(5)
+    };
+    let rp = Replayer::from_parts(good, events.clone());
+    let report = rp.run(&eng, Timing::Fast).unwrap();
+    eng.shutdown();
+    assert!(report.is_clean(), "diverged: {:?}", report.divergences);
+
+    // tampered digest: hard error naming the mismatch, no requests run
+    let bad = TraceHeader {
+        engine_digest: format!("{:016x}", digest ^ 1),
+        ..seg_header(5)
+    };
+    let rp = Replayer::from_parts(bad, events);
+    let eng = seg_engine(5, None);
+    let err = rp.run(&eng, Timing::Fast).unwrap_err().to_string();
+    eng.shutdown();
+    assert!(err.contains("digest mismatch"), "{err}");
+
+    // malformed digest hex is rejected too
+    let ugly = TraceHeader {
+        engine_digest: "not-hex".into(),
+        ..seg_header(5)
+    };
+    let rp = Replayer::from_parts(ugly, Vec::new());
+    let eng = seg_engine(5, None);
+    let err = rp.run(&eng, Timing::Fast).unwrap_err().to_string();
+    eng.shutdown();
+    assert!(err.contains("not a u64 hex"), "{err}");
 }
 
 #[test]

@@ -54,6 +54,53 @@ fn model_forwards_bit_identical_through_dirty_workspace() {
     assert!(c.pool_hits > 0, "models must actually reuse pooled buffers");
 }
 
+/// [`ExecPlan::run`] steady state is pure slab reuse: after one warmup
+/// batch per plan, repeated runs of the stored GAN plan and the seg
+/// serving plan (argmax head included) through one handle must not
+/// allocate — `bytes_allocated`/`pool_misses` exactly flat, every
+/// steady checkout a pool hit (DESIGN.md §10).
+#[test]
+fn exec_plan_steady_state_zero_alloc() {
+    use huge2::plan::ExecPlan;
+
+    let ws = Workspace::new();
+    let gen = Generator::tiny_cgan(5);
+    let net = SegNet::new(&tiny_segnet(), 5);
+    let serve: ExecPlan = net.plan().with_argmax_head(net.n_classes());
+    let z = Tensor::randn(&[4, 8], &mut Rng::new(9));
+    let mut img_data = Vec::new();
+    for s in [60u64, 61] {
+        img_data.extend(Tensor::randn(&[1, 9, 9, 2], &mut Rng::new(s))
+            .into_vec());
+    }
+    let x = Tensor::from_vec(&[2, 9, 9, 2], img_data);
+
+    let mut hnd = ws.handle();
+    let img0 = gen.plan().run(&z, &mut hnd);
+    let mask0 = serve.run(&x, &mut hnd);
+    assert_eq!(img0.shape(), &[4, 32, 32, 3]);
+    assert_eq!(mask0.shape(), &[2, 9, 9, 1]);
+    let warm = ws.counters();
+    assert!(warm.pool_misses > 0, "warmup must populate the pool");
+
+    for round in 0..8 {
+        let img = gen.plan().run(&z, &mut hnd);
+        let mask = serve.run(&x, &mut hnd);
+        assert_eq!(img.checksum(), img0.checksum(), "round {round}");
+        assert_eq!(mask.checksum(), mask0.checksum(), "round {round}");
+    }
+    let steady = ws.counters();
+    assert_eq!(steady.bytes_allocated, warm.bytes_allocated,
+               "steady ExecPlan::run allocated fresh slabs: \
+                warm={warm:?} steady={steady:?}");
+    assert_eq!(steady.pool_misses, warm.pool_misses,
+               "pool misses after warmup: warm={warm:?} \
+                steady={steady:?}");
+    assert_eq!(steady.pool_hits - warm.pool_hits,
+               steady.checkouts - warm.checkouts,
+               "every steady checkout must be a pool hit");
+}
+
 // ------------------------------------------- steady-state allocation
 
 fn mixed_engine(workers: usize) -> Engine {
@@ -195,6 +242,7 @@ fn concurrent_mixed_soak_replays_divergence_free() {
         cond_dim: 0,
         task: "generate".into(),
         net: "tiny_segnet".into(),
+        engine_digest: String::new(),
     };
     let rp = Replayer::from_parts(header, sink.snapshot());
     for run in 1..=2 {
