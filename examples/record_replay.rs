@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
                                     z, vec![]))?);
     }
     for rx in pending {
-        rx.recv()?;
+        rx.recv()??; // outer: channel; inner: typed ServeError
     }
     println!("recorded in {:.2}s", t0.elapsed().as_secs_f64());
     eng.shutdown(); // workers flush their trace events before join

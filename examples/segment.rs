@@ -78,7 +78,7 @@ fn main() -> anyhow::Result<()> {
         pending.push(eng.submit("segnet", Payload::image(img, 100 + i))?);
     }
     for rx in pending {
-        let r = rx.recv()?;
+        let r = rx.recv()??; // outer: channel; inner: typed ServeError
         let mut hist = vec![0usize; net.n_classes()];
         for &v in r.output.data() {
             hist[v as usize] += 1;

@@ -65,7 +65,7 @@ fn main() -> anyhow::Result<()> {
     let mut checksum = 0u64;
     let mut first_images: Vec<huge2::tensor::Tensor> = Vec::new();
     for rx in pending {
-        let r = rx.recv()?;
+        let r = rx.recv()??; // outer: channel; inner: typed ServeError
         assert_eq!(r.output.shape(), &[1, 64, 64, 3]);
         // tanh range sanity on the actual generated pixels
         assert!(r.output.data().iter().all(|v| v.abs() <= 1.0));

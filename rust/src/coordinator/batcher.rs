@@ -19,13 +19,22 @@ use super::queue::BoundedQueue;
 ///
 /// Blocks for the first request; then keeps admitting until `max_batch`
 /// or `timeout` past the *first* request's arrival in the batch window.
+/// `arrival` extracts that arrival timestamp (the coordinator passes
+/// the request's `enqueued` instant) — anchoring the deadline at
+/// arrival, not pop, is what makes the tail-latency bound hold under
+/// backlog: a request that already waited its full window in the queue
+/// ships immediately with whatever is queued behind it, instead of
+/// paying a *second* window inside the batcher. Items already in the
+/// queue are always admitted without waiting (an expired deadline only
+/// stops the batcher from *sleeping* for stragglers).
 /// Returns `None` when the queue is closed and drained.
 pub fn next_batch<T>(q: &BoundedQueue<T>, max_batch: usize,
-                     timeout: Duration) -> Option<Vec<T>> {
+                     timeout: Duration,
+                     arrival: impl Fn(&T) -> Instant) -> Option<Vec<T>> {
     debug_assert!(max_batch > 0);
     let first = q.pop()?;
+    let deadline = arrival(&first) + timeout;
     let mut batch = vec![first];
-    let deadline = Instant::now() + timeout;
     while batch.len() < max_batch {
         match q.pop_until(deadline) {
             Ok(Some(item)) => batch.push(item),
@@ -38,7 +47,10 @@ pub fn next_batch<T>(q: &BoundedQueue<T>, max_batch: usize,
 
 /// Statistics helper: ideal batch sizes for an arrival trace — used by
 /// the serving bench to sanity-check the batcher against the theoretical
-/// optimum for a given (rate, timeout, max_batch).
+/// optimum for a given (rate, timeout, max_batch). The window boundary
+/// is **exclusive**, matching [`next_batch`]'s deadline semantics
+/// (`pop_until` stops waiting the instant `now >= deadline`, so an
+/// arrival exactly at `first + timeout` opens the next batch).
 pub fn ideal_batches(arrivals_us: &[u64], max_batch: usize,
                      timeout_us: u64) -> Vec<usize> {
     let mut out = Vec::new();
@@ -48,7 +60,7 @@ pub fn ideal_batches(arrivals_us: &[u64], max_batch: usize,
         let mut j = i + 1;
         while j < arrivals_us.len()
             && j - i < max_batch
-            && arrivals_us[j] <= window_end
+            && arrivals_us[j] < window_end
         {
             j += 1;
         }
@@ -63,15 +75,21 @@ mod tests {
     use super::*;
     use std::sync::Arc;
 
+    /// Plain payloads arrive "now" — pop-time and arrival-time deadlines
+    /// coincide, which is exactly the un-backlogged case.
+    fn now<T>(_: &T) -> Instant {
+        Instant::now()
+    }
+
     #[test]
     fn batches_up_to_max() {
         let q = BoundedQueue::new(64);
         for i in 0..10 {
             q.try_push(i).unwrap();
         }
-        let b = next_batch(&q, 4, Duration::from_millis(5)).unwrap();
+        let b = next_batch(&q, 4, Duration::from_millis(5), now).unwrap();
         assert_eq!(b, vec![0, 1, 2, 3]);
-        let b = next_batch(&q, 4, Duration::from_millis(5)).unwrap();
+        let b = next_batch(&q, 4, Duration::from_millis(5), now).unwrap();
         assert_eq!(b, vec![4, 5, 6, 7]);
     }
 
@@ -80,7 +98,7 @@ mod tests {
         let q = BoundedQueue::new(64);
         q.try_push(1).unwrap();
         let t0 = Instant::now();
-        let b = next_batch(&q, 8, Duration::from_millis(20)).unwrap();
+        let b = next_batch(&q, 8, Duration::from_millis(20), now).unwrap();
         assert_eq!(b, vec![1]);
         assert!(t0.elapsed() >= Duration::from_millis(19));
     }
@@ -94,16 +112,51 @@ mod tests {
             std::thread::sleep(Duration::from_millis(5));
             q2.try_push(2).unwrap();
         });
-        let b = next_batch(&q, 8, Duration::from_millis(50)).unwrap();
+        let b = next_batch(&q, 8, Duration::from_millis(50), now).unwrap();
         t.join().unwrap();
         assert_eq!(b, vec![1, 2]);
+    }
+
+    /// The backlog regression (DESIGN.md §11): a request that already
+    /// sat out its window in the queue must not pay a second window
+    /// inside the batcher — with an arrival-anchored deadline in the
+    /// past, the batcher ships immediately instead of sleeping.
+    #[test]
+    fn stale_arrival_ships_without_a_second_window() {
+        let q: BoundedQueue<(Instant, u32)> = BoundedQueue::new(8);
+        let long_ago = Instant::now() - Duration::from_millis(200);
+        q.try_push((long_ago, 1)).unwrap();
+        let t0 = Instant::now();
+        let b = next_batch(&q, 8, Duration::from_millis(100),
+                           |it: &(Instant, u32)| it.0).unwrap();
+        assert_eq!(b.len(), 1);
+        // pop-time anchoring would sleep the full 100ms here
+        assert!(t0.elapsed() < Duration::from_millis(50),
+                "expired window must not be waited out again: {:?}",
+                t0.elapsed());
+    }
+
+    /// Even past its deadline, a batch admits everything already queued
+    /// (no waiting involved) — backlog drains at full batch sizes.
+    #[test]
+    fn expired_window_still_drains_queued_backlog() {
+        let q: BoundedQueue<(Instant, u32)> = BoundedQueue::new(8);
+        let long_ago = Instant::now() - Duration::from_millis(200);
+        for i in 0..5 {
+            q.try_push((long_ago, i)).unwrap();
+        }
+        let b = next_batch(&q, 4, Duration::from_millis(100),
+                           |it: &(Instant, u32)| it.0).unwrap();
+        assert_eq!(b.iter().map(|it| it.1).collect::<Vec<_>>(),
+                   vec![0, 1, 2, 3]);
     }
 
     #[test]
     fn closed_queue_returns_none() {
         let q: BoundedQueue<i32> = BoundedQueue::new(4);
         q.close();
-        assert!(next_batch(&q, 4, Duration::from_millis(1)).is_none());
+        assert!(next_batch(&q, 4, Duration::from_millis(1), now)
+            .is_none());
     }
 
     #[test]
@@ -115,7 +168,7 @@ mod tests {
             std::thread::sleep(Duration::from_millis(5));
             q2.close();
         });
-        let b = next_batch(&q, 8, Duration::from_secs(5)).unwrap();
+        let b = next_batch(&q, 8, Duration::from_secs(5), now).unwrap();
         assert_eq!(b, vec![7]);
     }
 
@@ -125,5 +178,14 @@ mod tests {
         let b = ideal_batches(&arrivals, 2, 10);
         assert_eq!(b, vec![2, 1, 2, 1]);
         assert_eq!(b.iter().sum::<usize>(), arrivals.len());
+    }
+
+    /// The boundary is exclusive, matching `pop_until`'s `now >=
+    /// deadline` cutoff: an arrival exactly at `first + timeout` opens
+    /// the next batch.
+    #[test]
+    fn ideal_batches_boundary_is_exclusive() {
+        assert_eq!(ideal_batches(&[0, 10], 8, 10), vec![1, 1]);
+        assert_eq!(ideal_batches(&[0, 9], 8, 10), vec![2]);
     }
 }

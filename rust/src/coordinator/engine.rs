@@ -13,6 +13,7 @@ use crate::replay::event::EventBody;
 use crate::replay::recorder::TraceSink;
 use crate::workspace::{Workspace, WorkspaceCounters};
 
+use super::error::{ServeError, ServeResult};
 use super::queue::{BoundedQueue, PushError};
 use super::router::{Model, Payload, Request, Response};
 use super::worker::spawn_workers;
@@ -23,36 +24,32 @@ struct ModelRuntime {
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
-/// Marker error for queue-full rejections. Callers that retry (the
-/// replayer's fast mode) downcast to distinguish *transient*
-/// backpressure from deterministic rejects (validation, shutdown):
-/// `err.downcast_ref::<Backpressure>().is_some()`.
-#[derive(Debug, Clone, Copy)]
-pub struct Backpressure;
-
-impl std::fmt::Display for Backpressure {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "queue full (backpressure)")
-    }
-}
-
-impl std::error::Error for Backpressure {}
-
 /// The HUGE² edge serving engine (multi-task: image generation and
 /// semantic segmentation share the queue → batcher → worker pipeline).
 ///
+/// Every accepted request terminates in exactly one observable outcome
+/// on its reply channel — `Ok(Response)` or a typed
+/// [`ServeError`] (DESIGN.md §11); submit-time refusals return the
+/// `ServeError` directly:
+///
 /// ```no_run
 /// use huge2::config::EngineConfig;
-/// use huge2::coordinator::{Engine, Payload};
+/// use huge2::coordinator::{Engine, Payload, ServeError};
 /// # use std::sync::Arc;
 /// # use huge2::runtime::RuntimeHandle;
 /// let rt = Arc::new(RuntimeHandle::spawn("artifacts".into())?);
 /// let mut engine = Engine::new(EngineConfig::default());
 /// engine.register_pjrt("dcgan", "dcgan_gen", rt, 1, 42)?;
-/// let rx = engine.submit("dcgan", Payload::latent(vec![0.0; 100],
-///                                                 vec![]))?;
-/// let resp = rx.recv()?;
-/// println!("image {:?} in {:?}", resp.output.shape(), resp.latency);
+/// match engine.submit("dcgan", Payload::latent(vec![0.0; 100],
+///                                              vec![])) {
+///     Ok(rx) => match rx.recv()? {
+///         Ok(resp) => println!("image {:?} in {:?}",
+///                              resp.output.shape(), resp.latency),
+///         Err(e) => eprintln!("request failed ({}): {e}", e.kind()),
+///     },
+///     Err(ServeError::Backpressure) => { /* shed or retry */ }
+///     Err(e) => return Err(e.into()),
+/// }
 /// # Ok::<(), anyhow::Error>(())
 /// ```
 pub struct Engine {
@@ -153,13 +150,23 @@ impl Engine {
         v
     }
 
-    /// Submit a request (any task). Returns the response channel, or an
-    /// error if the model is unknown, the payload malformed or of the
-    /// wrong task, or the queue full (backpressure — the caller should
-    /// retry later or shed).
+    /// Submit a request (any task). Returns the reply channel — which
+    /// delivers the request's single terminal outcome, `Ok(Response)`
+    /// or a typed [`ServeError`] — or the `ServeError` directly when
+    /// admission itself refuses: [`ServeError::Validation`] (unknown
+    /// model, wrong task, bad geometry, unrecordable payload),
+    /// [`ServeError::Backpressure`] (queue full — retry later or shed)
+    /// or [`ServeError::Shutdown`].
+    ///
+    /// Counter contract (DESIGN.md §11): every call increments
+    /// `submitted`; an `Err` here increments `rejected`; an accepted
+    /// request later increments exactly one of `completed`/`failed` —
+    /// so `submitted == completed + rejected + failed` once drained.
     pub fn submit(&self, model: &str, payload: Payload)
-                  -> Result<mpsc::Receiver<Response>> {
+                  -> std::result::Result<mpsc::Receiver<ServeResult>,
+                                         ServeError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.counters.submitted.fetch_add(1, Ordering::Relaxed);
         if let Some(s) = &self.sink {
             // The workload's non-deterministic input: latents captured
             // bit-exactly, images as (shape, seed, checksum) — trace v2.
@@ -172,15 +179,18 @@ impl Engine {
                     model: model.to_string(),
                     payload: arrival,
                 }),
-                Err(e) => return Err(self.reject(id, e)),
+                Err(e) => {
+                    return Err(self.reject(
+                        id, ServeError::Validation(format!("{e:#}"))));
+                }
             }
         }
         let mr = match self.models.get(model) {
             Some(mr) => mr,
             None => {
-                return Err(self.reject(id, anyhow!(
-                    "unknown model {model:?} (have {:?})",
-                    self.model_names())));
+                return Err(self.reject(id, ServeError::Validation(
+                    format!("unknown model {model:?} (have {:?})",
+                            self.model_names()))));
             }
         };
         if let Err(e) = mr.model.validate(&payload) {
@@ -189,7 +199,6 @@ impl Engine {
         let (tx, rx) = mpsc::channel();
         let req = Request { id, payload, enqueued: Instant::now(),
                             reply: tx };
-        self.counters.submitted.fetch_add(1, Ordering::Relaxed);
         // Enqueue is recorded under the queue lock: the trace can never
         // show a worker's BatchFormed/Response for an id before its
         // Enqueue, and `depth` is exact.
@@ -201,40 +210,67 @@ impl Engine {
         match push {
             Ok(()) => Ok(rx),
             Err(PushError::Full(_)) => {
-                self.counters.rejected.fetch_add(1, Ordering::Relaxed);
-                Err(self.reject(id, anyhow::Error::new(Backpressure)
-                    .context(format!("queue full for {model:?}"))))
+                Err(self.reject(id, ServeError::Backpressure))
             }
             Err(PushError::Closed(_)) => {
-                Err(self.reject(id, anyhow!("engine shutting down")))
+                Err(self.reject(id, ServeError::Shutdown))
             }
         }
     }
 
-    /// Record a `Reject` trace event (when recording) and pass the error
-    /// through unchanged.
-    fn reject(&self, id: u64, err: anyhow::Error) -> anyhow::Error {
+    /// Count the submit-time refusal, record a `Reject` trace event
+    /// (when recording), and pass the typed error through unchanged.
+    fn reject(&self, id: u64, err: ServeError) -> ServeError {
+        self.counters.rejected.fetch_add(1, Ordering::Relaxed);
         if let Some(s) = &self.sink {
-            s.record(EventBody::Reject { id, reason: format!("{err:#}") });
+            s.record(EventBody::Reject { id, reason: err.to_string() });
         }
         err
     }
 
-    /// Blocking convenience: submit a latent + wait for the image.
+    /// Wait out a reply channel, flattening the typed outcome into
+    /// `anyhow` for the blocking conveniences. A closed channel without
+    /// an outcome is an engine bug by contract — supervision always
+    /// delivers one — and is reported as such.
+    fn wait(rx: mpsc::Receiver<ServeResult>) -> Result<Response> {
+        match rx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(e)) => Err(e.into()),
+            Err(_) => Err(anyhow!(
+                "reply channel closed without a terminal outcome \
+                 (engine bug: worker supervision must always reply)")),
+        }
+    }
+
+    /// Blocking convenience: submit a latent + wait for the image. A
+    /// failed request surfaces the typed [`ServeError`] (downcastable
+    /// from the returned `anyhow::Error`).
     pub fn generate(&self, model: &str, z: Vec<f32>, cond: Vec<f32>)
                     -> Result<Response> {
-        let rx = self.submit(model, Payload::latent(z, cond))?;
-        rx.recv().map_err(|_| anyhow!("worker dropped the request \
-                                       (batch execution failed)"))
+        Self::wait(self.submit(model, Payload::latent(z, cond))?)
     }
 
     /// Blocking convenience: submit an image + wait for the mask. `seed`
     /// is the image's synthesis-provenance tag (see [`Payload::Image`]).
+    /// A failed request surfaces the typed [`ServeError`].
     pub fn segment(&self, model: &str, image: crate::tensor::Tensor,
                    seed: u64) -> Result<Response> {
-        let rx = self.submit(model, Payload::image(image, seed))?;
-        rx.recv().map_err(|_| anyhow!("worker dropped the request \
-                                       (batch execution failed)"))
+        Self::wait(self.submit(model, Payload::image(image, seed))?)
+    }
+
+    /// Fault-injection test hook (see
+    /// [`Model::inject_panic_next_batch`]): the next batch a worker
+    /// executes for `model` panics once; supervision catches it, fails
+    /// the batch's requests with [`ServeError::BatchFailed`], and the
+    /// worker keeps draining. Returns `false` for unknown models.
+    pub fn inject_worker_panic(&self, model: &str) -> bool {
+        match self.models.get(model) {
+            Some(mr) => {
+                mr.model.inject_panic_next_batch();
+                true
+            }
+            None => false,
+        }
     }
 
     /// Current depth of a model's queue (observability).
@@ -272,6 +308,7 @@ impl Drop for Engine {
 mod tests {
     use super::*;
     use crate::config::tiny_segnet;
+    use crate::coordinator::ServeError;
     use crate::gan::Generator;
     use crate::rng::Rng;
     use crate::seg::SegNet;
@@ -395,13 +432,17 @@ mod tests {
         for _ in 0..200 {
             match e.submit("m", lat(8)) {
                 Ok(rx) => receivers.push(rx),
-                Err(_) => rejected += 1,
+                Err(err) => {
+                    // queue-full refusals are *typed* now
+                    assert_eq!(err, ServeError::Backpressure);
+                    rejected += 1;
+                }
             }
         }
         assert!(rejected > 0, "expected backpressure rejections");
-        // accepted requests still complete
+        // accepted requests still complete (Ok outcome, not a failure)
         for rx in receivers {
-            rx.recv().unwrap();
+            rx.recv().unwrap().unwrap();
         }
     }
 

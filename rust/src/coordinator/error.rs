@@ -1,0 +1,110 @@
+//! Typed per-request failure outcomes (DESIGN.md §11).
+//!
+//! The engine's fault-containment contract: **every accepted request
+//! terminates in exactly one observable outcome** — an `Ok(Response)` or
+//! an `Err(ServeError)` on its reply channel. Nothing is ever dropped
+//! silently: a failed batch, a malformed row discovered at gather time,
+//! even a panicking worker all reply with a typed error instead of
+//! closing the channel. The outcome conservation invariant
+//! `submitted == completed + rejected + failed` is assertable over
+//! [`crate::metrics::Counters`] once the engine is drained
+//! (`tests/fault_stack.rs` pins it under a concurrent fault-injection
+//! soak).
+
+use std::fmt;
+
+use super::router::Response;
+
+/// Why a request did not produce a [`Response`].
+///
+/// The variant set is the error *taxonomy*, deliberately small and
+/// stable: [`ServeError::kind`] is recorded in `Failed` trace events
+/// (trace format v3) and compared by the replayer's failure-determinism
+/// check, so adding a variant is a wire-format decision, not just an
+/// API one.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The payload was rejected: unknown model, wrong task, bad
+    /// geometry at submit, or a malformed row discovered during batch
+    /// gather (in which case only the offending request fails — the
+    /// rest of its batch still executes).
+    Validation(String),
+    /// The model's queue was full. Transient by construction: the
+    /// caller should retry later or shed load (the replayer's fast mode
+    /// drains one in-flight response and retries).
+    Backpressure,
+    /// The batch containing this request failed to execute — a backend
+    /// error or a caught worker panic. The message names the cause.
+    BatchFailed(String),
+    /// The engine is shutting down; the queue no longer admits.
+    Shutdown,
+}
+
+impl ServeError {
+    /// Stable wire tag of the failure class — the `"kind"` field of a
+    /// `Failed` trace event. Replay verifies failure determinism by
+    /// kind (messages may carry run-specific detail; the class may
+    /// not change between record and replay).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServeError::Validation(_) => "validation",
+            ServeError::Backpressure => "backpressure",
+            ServeError::BatchFailed(_) => "batch_failed",
+            ServeError::Shutdown => "shutdown",
+        }
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Validation(msg) => write!(f, "validation: {msg}"),
+            ServeError::Backpressure => {
+                write!(f, "queue full (backpressure)")
+            }
+            ServeError::BatchFailed(msg) => {
+                write!(f, "batch failed: {msg}")
+            }
+            ServeError::Shutdown => write!(f, "engine shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// What a reply channel carries: the request's single terminal outcome.
+pub type ServeResult = std::result::Result<Response, ServeError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_are_distinct_and_stable() {
+        let all = [
+            ServeError::Validation("x".into()),
+            ServeError::Backpressure,
+            ServeError::BatchFailed("y".into()),
+            ServeError::Shutdown,
+        ];
+        let mut kinds: Vec<&str> = all.iter().map(|e| e.kind()).collect();
+        kinds.sort_unstable();
+        kinds.dedup();
+        assert_eq!(kinds.len(), all.len());
+        // wire tags are frozen: trace v3 `Failed` events store them
+        assert_eq!(ServeError::Backpressure.kind(), "backpressure");
+        assert_eq!(ServeError::Shutdown.kind(), "shutdown");
+        assert_eq!(ServeError::Validation(String::new()).kind(),
+                   "validation");
+        assert_eq!(ServeError::BatchFailed(String::new()).kind(),
+                   "batch_failed");
+    }
+
+    #[test]
+    fn display_carries_the_message() {
+        let e = ServeError::BatchFailed("worker panicked: boom".into());
+        assert!(e.to_string().contains("boom"));
+        let v = ServeError::Validation("z has 7 dims".into());
+        assert!(v.to_string().contains("7 dims"));
+    }
+}

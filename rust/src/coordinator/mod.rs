@@ -12,7 +12,9 @@
 //!                          │
 //!                    [worker threads] ──> PJRT artifact / native
 //!                          │              generator / native seg net
-//!                      responses (+ latency, batch telemetry)
+//!                          │              (each batch under catch_unwind)
+//!               Result<Response, ServeError> — exactly one
+//!               terminal outcome per accepted request
 //! ```
 //!
 //! * [`queue`] — bounded MPMC admission queue.
@@ -21,15 +23,20 @@
 //! * [`router`] — model registry (PJRT artifacts, native generators,
 //!   native segmentation nets) + payload/task validation.
 //! * [`worker`] — batch fusion, bucket padding, per-task execution,
-//!   reply scatter.
+//!   reply scatter under `catch_unwind` supervision.
+//! * [`error`] — the typed failure taxonomy ([`ServeError`]): every
+//!   accepted request terminates in exactly one `Ok(Response)` /
+//!   `Err(ServeError)` outcome (DESIGN.md §11).
 //! * [`engine`] — the public facade.
 
 pub mod batcher;
 pub mod engine;
+pub mod error;
 pub mod queue;
 pub mod router;
 pub mod worker;
 
-pub use engine::{Backpressure, Engine};
+pub use engine::Engine;
+pub use error::{ServeError, ServeResult};
 pub use queue::{BoundedQueue, PushError};
 pub use router::{Backend, Model, Payload, Request, Response, Task};

@@ -11,9 +11,12 @@
 //! ([`Model::validate`]).
 
 use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
+
+use super::error::{ServeError, ServeResult};
 
 use crate::gan::Generator;
 use crate::plan::ExecPlan;
@@ -123,11 +126,16 @@ impl Payload {
 }
 
 /// One inference request: the task payload plus reply plumbing.
+///
+/// The reply channel carries the request's single terminal outcome —
+/// `Ok(Response)` or a typed [`ServeError`] (DESIGN.md §11). A client
+/// that observes a closed channel without either is witnessing an
+/// engine bug, not a failure mode.
 pub struct Request {
     pub id: u64,
     pub payload: Payload,
     pub enqueued: Instant,
-    pub reply: mpsc::Sender<Response>,
+    pub reply: mpsc::Sender<ServeResult>,
 }
 
 /// The task output plus serving telemetry.
@@ -177,6 +185,10 @@ pub struct Model {
     /// ends in the argmax head, so `run_into` yields the client-ready
     /// output for **both** tasks (DESIGN.md §10).
     plan: Option<ExecPlan>,
+    /// Fault-injection test hook (the supervision analogue of
+    /// [`crate::workspace::Workspace::poison`]): when armed, the next
+    /// batch a worker executes for this model panics once.
+    panic_next_batch: AtomicBool,
 }
 
 impl Model {
@@ -226,6 +238,7 @@ impl Model {
             backend: Backend::Pjrt(runtime),
             out_shape,
             plan: None,
+            panic_next_batch: AtomicBool::new(false),
         })
     }
 
@@ -247,6 +260,7 @@ impl Model {
             backend: Backend::Native(gen),
             out_shape: out,
             plan: Some(plan),
+            panic_next_batch: AtomicBool::new(false),
         }
     }
 
@@ -269,6 +283,7 @@ impl Model {
             backend: Backend::NativeSeg(net),
             out_shape,
             plan: Some(plan),
+            panic_next_batch: AtomicBool::new(false),
         }
     }
 
@@ -291,31 +306,51 @@ impl Model {
     }
 
     /// Validate a request payload against the model's task and input
-    /// geometry.
-    pub fn validate(&self, payload: &Payload) -> Result<()> {
+    /// geometry. The typed error feeds straight into the reject path
+    /// (`ServeError::kind() == "validation"`).
+    pub fn validate(&self, payload: &Payload)
+                    -> std::result::Result<(), ServeError> {
+        let fail = |msg: String| Err(ServeError::Validation(msg));
         match (self.task, payload) {
             (Task::Generate, Payload::Latent { z, cond }) => {
                 if z.len() != self.z_dim {
-                    bail!("{}: z has {} dims, model wants {}", self.name,
-                          z.len(), self.z_dim);
+                    return fail(format!(
+                        "{}: z has {} dims, model wants {}", self.name,
+                        z.len(), self.z_dim));
                 }
                 if cond.len() != self.cond_dim {
-                    bail!("{}: cond has {} dims, model wants {}", self.name,
-                          cond.len(), self.cond_dim);
+                    return fail(format!(
+                        "{}: cond has {} dims, model wants {}", self.name,
+                        cond.len(), self.cond_dim));
                 }
                 Ok(())
             }
             (Task::Segment, Payload::Image { tensor, .. }) => {
                 if tensor.shape() != self.in_shape.as_slice() {
-                    bail!("{}: image has shape {:?}, model wants {:?}",
-                          self.name, tensor.shape(), self.in_shape);
+                    return fail(format!(
+                        "{}: image has shape {:?}, model wants {:?}",
+                        self.name, tensor.shape(), self.in_shape));
                 }
                 Ok(())
             }
-            (task, p) => bail!(
-                "{}: task {:?} cannot serve a {} payload", self.name, task,
-                p.kind()),
+            (task, p) => fail(format!(
+                "{}: task {task:?} cannot serve a {} payload", self.name,
+                p.kind())),
         }
+    }
+
+    /// Fault-injection test hook: arm a one-shot panic in whichever
+    /// worker executes this model's next batch. Supervision must catch
+    /// it, fail the batch's requests with
+    /// [`ServeError::BatchFailed`], and keep the worker draining —
+    /// `tests/fault_stack.rs` pins all three (DESIGN.md §11).
+    pub fn inject_panic_next_batch(&self) {
+        self.panic_next_batch.store(true, Ordering::SeqCst);
+    }
+
+    /// Consume an armed injection (worker-side; one panic per arming).
+    pub(crate) fn take_injected_panic(&self) -> bool {
+        self.panic_next_batch.swap(false, Ordering::SeqCst)
     }
 }
 

@@ -1,6 +1,17 @@
 //! Batch execution: fuse a batch of requests into one forward pass (PJRT
 //! artifact call, or a native compiled [`crate::plan::ExecPlan`] — one
 //! uniform path for every native task), then scatter replies.
+//!
+//! Fault containment (DESIGN.md §11): [`execute_batch`] owns the
+//! terminal outcome of every request it is handed — each one receives
+//! exactly one `Ok(Response)` or `Err(ServeError)` on its reply channel.
+//! A malformed row discovered at gather time fails *only that request*
+//! (the rest of the batch still executes); a backend error fails the
+//! batch's requests with [`ServeError::BatchFailed`] instead of
+//! dropping their channels. The worker loop runs each batch under
+//! `catch_unwind`, so even a panicking forward pass fails its requests
+//! and keeps the thread draining — one poisoned request can never
+//! shrink the worker pool.
 
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
@@ -11,76 +22,233 @@ use crate::replay::recorder::TraceSink;
 use crate::tensor::Tensor;
 use crate::workspace::{Workspace, WsHandle};
 
+use super::error::ServeError;
 use super::router::{Backend, Model, Payload, Request, Response};
 
-/// Execute one batch on its model and reply to every requester.
+/// What happened to one executed batch — the worker's counter feed and
+/// telemetry record.
+#[derive(Debug, Default)]
+pub struct BatchOutcome {
+    /// Compiled bucket the good rows ran in (0 if no row was runnable).
+    pub bucket: usize,
+    /// Requests answered with a `Response`.
+    pub completed: usize,
+    /// Requests answered with a typed `ServeError`.
+    pub failed: usize,
+    /// Outcomes whose delivery failed (client dropped its receiver).
+    /// Counted *after* `before_reply` runs — read it from the return
+    /// value, not the callback argument.
+    pub dropped: usize,
+    /// Batch-level backend error, when the forward pass itself failed
+    /// (every runnable row was answered with `BatchFailed`).
+    pub error: Option<String>,
+}
+
+/// Execute one batch on its model and deliver every requester's
+/// terminal outcome.
 ///
 /// Generate batches are padded with zero latents up to the compiled
 /// bucket size (padded outputs are discarded); segment batches run at
-/// their exact size. Reply sends ignore disconnected
-/// receivers (a client that timed out and dropped its channel).
-/// `before_reply` runs after execution but before any reply is sent, so
-/// engine counters are consistent the moment a client observes a result.
-/// With a recording `sink`, each reply's output checksum is recorded as a
-/// `Response` event *before* the send, so the trace is complete even if
-/// the client races the recorder to shutdown.
+/// their exact size. Rows are validated individually during gather:
+/// an incompatible payload fails that request with
+/// [`ServeError::Validation`] while the remaining rows execute
+/// normally. Reply sends ignore disconnected receivers (a client that
+/// timed out and dropped its channel) beyond counting them in
+/// [`BatchOutcome::dropped`].
+///
+/// `before_reply` runs after execution but before any outcome is sent,
+/// so engine counters are consistent the moment a client observes a
+/// result. With a recording `sink`, each outcome is recorded — a
+/// `Response` event with the output checksum, or a `Failed` event with
+/// the error kind (trace format v3) — *before* the send, so the trace
+/// is complete even if the client races the recorder to shutdown.
+///
+/// `batch` is drained as outcomes are delivered: requests still in the
+/// vector after a panic unwinds through this function have received no
+/// outcome yet, which is exactly what the worker's supervision layer
+/// needs to fail them (`spawn_workers`).
+///
 /// `hnd` is the executing worker's workspace handle: native forwards
 /// draw padded-batch latents, batch image gathers, activations and GEMM
-/// scratch from it, so steady-state batches allocate nothing but the
-/// per-request reply tensors (DESIGN.md §9).
-pub fn execute_batch(model: &Model, batch: Vec<Request>,
+/// scratch from it, so the *pool* serves every steady-state checkout
+/// (DESIGN.md §9 — `bytes_allocated` stays flat). What a batch still
+/// heap-allocates, by design: the per-request reply tensors
+/// (client-owned, they leave the engine) and small per-batch outcome
+/// bookkeeping (a few `Vec`s of `n` elements).
+pub fn execute_batch(model: &Model, batch: &mut Vec<Request>,
                      sink: Option<&TraceSink>, hnd: &mut WsHandle,
-                     before_reply: impl FnOnce(usize)) -> Result<usize> {
-    let n = batch.len();
-    let bucket = model.bucket_for(n);
-    let out = run_forward(model, &batch, bucket, hnd)?;
-    before_reply(n);
-    let (_, h, w, c) = out.dims4();
-    let elems = h * w * c;
-    for (i, req) in batch.into_iter().enumerate() {
-        let data = out.data()[i * elems..(i + 1) * elems].to_vec();
-        let output = Tensor::from_vec(&[1, h, w, c], data);
-        let latency = req.enqueued.elapsed();
-        if let Some(s) = sink {
-            s.record(EventBody::Response {
-                id: req.id,
-                batch_size: n,
-                bucket,
-                latency_us: latency.as_micros() as u64,
-                checksum: output.checksum(),
-            });
-        }
-        let _ = req.reply.send(Response {
-            id: req.id,
-            output,
-            latency,
-            batch_size: n,
-            bucket,
+                     before_reply: impl FnOnce(&BatchOutcome))
+                     -> BatchOutcome {
+    if model.take_injected_panic() {
+        panic!("injected worker panic (Model::inject_panic_next_batch \
+                test hook)");
+    }
+    // 1. Per-row gather validation: one malformed payload must fail one
+    //    request, not the whole batch.
+    let row_errs: Vec<Option<ServeError>> =
+        batch.iter().map(|r| validate_row(model, r).err()).collect();
+    let good: Vec<&Request> = batch
+        .iter()
+        .zip(&row_errs)
+        .filter_map(|(r, e)| e.is_none().then_some(r))
+        .collect();
+
+    // 2. One fused forward pass over the good rows only.
+    let bucket = if good.is_empty() {
+        0
+    } else {
+        model.bucket_for(good.len())
+    };
+    let fwd: Option<Result<Tensor>> =
+        (!good.is_empty()).then(|| run_forward(model, &good, bucket, hnd));
+
+    // 3. Assemble every request's outcome *before* counters and sends:
+    //    a panic anywhere up to here leaves `batch` untouched for the
+    //    supervisor, and the reply loop below cannot fail.
+    let mut results: Vec<std::result::Result<Tensor, ServeError>> =
+        Vec::with_capacity(batch.len());
+    let error = match &fwd {
+        Some(Err(e)) => Some(format!("{e:#}")),
+        _ => None,
+    };
+    let mut gi = 0usize; // row index within the good subset
+    for row_err in &row_errs {
+        results.push(match row_err {
+            Some(e) => Err(e.clone()),
+            None => match &fwd {
+                Some(Ok(out)) => {
+                    let (_, h, w, c) = out.dims4();
+                    let elems = h * w * c;
+                    let data =
+                        out.data()[gi * elems..(gi + 1) * elems].to_vec();
+                    gi += 1;
+                    Ok(Tensor::from_vec(&[1, h, w, c], data))
+                }
+                Some(Err(_)) => {
+                    gi += 1;
+                    Err(ServeError::BatchFailed(
+                        error.clone().unwrap_or_default()))
+                }
+                None => unreachable!("good row without a forward pass"),
+            },
         });
     }
-    Ok(bucket)
+    let mut outcome = BatchOutcome {
+        bucket,
+        completed: results.iter().filter(|r| r.is_ok()).count(),
+        failed: results.iter().filter(|r| r.is_err()).count(),
+        dropped: 0,
+        error,
+    };
+    before_reply(&outcome);
+
+    // 4. Deliver: drain lockstep with `results`, record-then-send.
+    let n = results.len();
+    for (req, res) in batch.drain(..).zip(results) {
+        let latency = req.enqueued.elapsed();
+        let delivered = match res {
+            Ok(output) => {
+                if let Some(s) = sink {
+                    s.record(EventBody::Response {
+                        id: req.id,
+                        batch_size: n,
+                        bucket,
+                        latency_us: latency.as_micros() as u64,
+                        checksum: output.checksum(),
+                    });
+                }
+                req.reply
+                    .send(Ok(Response {
+                        id: req.id,
+                        output,
+                        latency,
+                        batch_size: n,
+                        bucket,
+                    }))
+                    .is_ok()
+            }
+            Err(e) => fail_request(req, e, sink),
+        };
+        if !delivered {
+            outcome.dropped += 1;
+        }
+    }
+    outcome
 }
 
-/// Destructure a generate request's latent (+ conditioning) payload
-/// (the PJRT gather path). Kinds were validated at submit; a mismatch
-/// here is an engine bug.
-fn latent_parts<'a>(model: &Model, r: &'a Request)
-                    -> Result<(&'a [f32], &'a [f32])> {
-    match &r.payload {
-        Payload::Latent { z, cond } => Ok((z, cond)),
-        other => Err(anyhow!("{}: generate batch got a {} payload",
-                             model.name, other.kind())),
+/// Deliver a typed failure to one request: record the v3 `Failed` trace
+/// event (when recording), then send. The single definition of the
+/// failure-delivery sequence — the in-batch error path and the panic
+/// supervisor both go through here, so event fields and delivery
+/// semantics cannot drift apart. Returns `false` when the client had
+/// already dropped its receiver (the caller counts it as `dropped`).
+fn fail_request(req: Request, err: ServeError, sink: Option<&TraceSink>)
+                -> bool {
+    if let Some(s) = sink {
+        s.record(EventBody::Failed {
+            id: req.id,
+            kind: err.kind().to_string(),
+            reason: err.to_string(),
+        });
+    }
+    req.reply.send(Err(err)).is_ok()
+}
+
+/// Validate one request's payload against the batch's execution form.
+/// Kinds and geometry were checked at submit; this is the gather-time
+/// backstop that keeps a malformed row — however it got here — from
+/// failing its neighbours.
+fn validate_row(model: &Model, r: &Request)
+                -> std::result::Result<(), ServeError> {
+    match &model.backend {
+        Backend::Pjrt(_) => match &r.payload {
+            Payload::Latent { z, cond }
+                if z.len() == model.z_dim
+                    && cond.len() == model.cond_dim => Ok(()),
+            other => Err(ServeError::Validation(format!(
+                "{}: generate batch got an incompatible {} payload \
+                 (model wants z_dim {} + cond_dim {})",
+                model.name, other.kind(), model.z_dim, model.cond_dim))),
+        },
+        Backend::Native(_) | Backend::NativeSeg(_) => {
+            let ie = match model.plan() {
+                Some(p) => p.in_elems(),
+                None => {
+                    return Err(ServeError::Validation(format!(
+                        "{}: native backend without a compiled plan",
+                        model.name)));
+                }
+            };
+            match &r.payload {
+                Payload::Latent { z, cond }
+                    if z.len() + cond.len() == ie => Ok(()),
+                Payload::Image { tensor, .. }
+                    if tensor.len() == ie => Ok(()),
+                other => Err(ServeError::Validation(format!(
+                    "{}: batch got an incompatible {} payload (plan \
+                     wants {ie} input elements)",
+                    model.name, other.kind()))),
+            }
+        }
     }
 }
 
 /// Pull the latent (+ conditioning) matrices out of a generate batch,
-/// zero-padded to `bucket` rows (the PJRT input form).
-fn gather_latents(model: &Model, batch: &[Request], bucket: usize)
+/// zero-padded to `bucket` rows (the PJRT input form). Rows were
+/// validated by [`validate_row`]; a mismatch here is an engine bug.
+fn gather_latents(model: &Model, batch: &[&Request], bucket: usize)
                   -> Result<(Tensor, Option<Tensor>)> {
     let mut z = vec![0.0f32; bucket * model.z_dim];
     let mut y = vec![0.0f32; bucket * model.cond_dim];
     for (i, r) in batch.iter().enumerate() {
-        let (rz, cond) = latent_parts(model, r)?;
+        let (rz, cond) = match &r.payload {
+            Payload::Latent { z, cond } => (z, cond),
+            other => {
+                return Err(anyhow!(
+                    "{}: validated generate batch got a {} payload \
+                     (engine bug)", model.name, other.kind()));
+            }
+        };
         z[i * model.z_dim..(i + 1) * model.z_dim].copy_from_slice(rz);
         if model.cond_dim > 0 {
             y[i * model.cond_dim..(i + 1) * model.cond_dim]
@@ -93,8 +261,8 @@ fn gather_latents(model: &Model, batch: &[Request], bucket: usize)
     Ok((zt, cond))
 }
 
-/// One fused forward pass at `bucket` batch size.
-fn run_forward(model: &Model, batch: &[Request], bucket: usize,
+/// One fused forward pass at `bucket` batch size over validated rows.
+fn run_forward(model: &Model, batch: &[&Request], bucket: usize,
                hnd: &mut WsHandle) -> Result<Tensor> {
     let n = batch.len();
     debug_assert!(bucket >= n || matches!(model.backend,
@@ -138,39 +306,23 @@ fn run_forward(model: &Model, batch: &[Request], bucket: usize,
             // argmax head, so `run_into` yields the client-ready output
             // for both tasks. Native buckets are exact (bucket == n);
             // per-row compute is independent, so outputs stay
-            // batch-composition-invariant (DESIGN.md §8/§10). On a
-            // gather error the buffer is checked back in, not dropped —
-            // an error path must not shrink the pool.
+            // batch-composition-invariant (DESIGN.md §8/§10). Rows were
+            // validated by `validate_row`, so the copies below always
+            // fit.
             let plan = model.plan().expect("native backend without a plan");
             let ie = plan.in_elems();
             let mut xb = hnd.checkout(n * ie);
-            let mut gather_err = None;
             for (i, r) in batch.iter().enumerate() {
                 let row = &mut xb[i * ie..(i + 1) * ie];
                 match &r.payload {
-                    Payload::Latent { z, cond }
-                        if z.len() + cond.len() == ie =>
-                    {
+                    Payload::Latent { z, cond } => {
                         row[..z.len()].copy_from_slice(z);
                         row[z.len()..].copy_from_slice(cond);
                     }
-                    Payload::Image { tensor, .. }
-                        if tensor.len() == ie =>
-                    {
+                    Payload::Image { tensor, .. } => {
                         row.copy_from_slice(tensor.data());
                     }
-                    other => {
-                        gather_err = Some(anyhow!(
-                            "{}: batch got an incompatible {} payload \
-                             (plan wants {ie} input elements)",
-                            model.name, other.kind()));
-                        break;
-                    }
                 }
-            }
-            if let Some(e) = gather_err {
-                hnd.checkin(xb);
-                return Err(e);
             }
             let mut out = Tensor::zeros(&plan.out_shape(n));
             plan.run_into(&xb, n, out.data_mut(), hnd);
@@ -180,14 +332,33 @@ fn run_forward(model: &Model, batch: &[Request], bucket: usize,
     }
 }
 
+/// Best-effort panic-payload message (panics carry `&str` or `String`
+/// in practice; anything else is named, not lost).
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Spawn `count` worker threads draining `queue` for `model`.
 ///
+/// Supervision (DESIGN.md §11): each batch executes under
+/// `catch_unwind`. A panicking iteration is caught, counted
+/// (`Counters::panics`), and every request that had not yet received
+/// its outcome is failed with [`ServeError::BatchFailed`] — then the
+/// thread goes straight back to draining. An injected panic therefore
+/// never shrinks the live worker pool (`tests/fault_stack.rs`).
+///
 /// A `sink`, when present, observes every batch the workers form and
-/// execute (plus per-reply `Response` events from [`execute_batch`]).
-/// Each worker thread holds a [`WsHandle`] over the engine's shared
-/// `workspace` for its whole lifetime: after the first (warmup) batch of
-/// a given shape, every buffer checkout is a hit on the thread's local
-/// cache and steady-state serving allocates nothing
+/// execute (plus per-reply `Response`/`Failed` events from
+/// [`execute_batch`]). Each worker thread holds a [`WsHandle`] over the
+/// engine's shared `workspace` for its whole lifetime: after the first
+/// (warmup) batch of a given shape, every buffer checkout is a hit on
+/// the thread's local cache and steady-state serving allocates nothing
 /// (`tests/workspace_stack.rs` pins this).
 #[allow(clippy::too_many_arguments)]
 pub fn spawn_workers(
@@ -212,9 +383,10 @@ pub fn spawn_workers(
                 std::time::Duration::from_micros(cfg.batch_timeout_us);
             let max_batch = cfg.max_batch;
             std::thread::spawn(move || {
+                use std::sync::atomic::Ordering::Relaxed;
                 let mut hnd = workspace.handle();
-                while let Some(batch) =
-                    super::batcher::next_batch(&queue, max_batch, timeout)
+                while let Some(mut batch) = super::batcher::next_batch(
+                    &queue, max_batch, timeout, |r: &Request| r.enqueued)
                 {
                     // id collection only when recording — a plain run
                     // pays just the null-checks (recorder.rs cost model)
@@ -227,32 +399,75 @@ pub fn spawn_workers(
                         });
                     }
                     let t0 = Instant::now();
-                    let res = execute_batch(&model, batch,
-                                            sink.as_deref(), &mut hnd,
-                                            |n| {
-                        use std::sync::atomic::Ordering::Relaxed;
-                        counters.batches.fetch_add(1, Relaxed);
-                        counters.batched_requests.fetch_add(n as u64,
-                                                            Relaxed);
-                        counters.completed.fetch_add(n as u64, Relaxed);
-                        hist.record(t0.elapsed());
-                    });
+                    // Whether execute_batch reached its counter update —
+                    // decides who accounts for the requests on panic.
+                    let counted = std::cell::Cell::new(false);
+                    let res = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| {
+                            execute_batch(&model, &mut batch,
+                                          sink.as_deref(), &mut hnd,
+                                          |o| {
+                                counted.set(true);
+                                let n = (o.completed + o.failed) as u64;
+                                counters.batches.fetch_add(1, Relaxed);
+                                counters.batched_requests
+                                    .fetch_add(n, Relaxed);
+                                counters.completed
+                                    .fetch_add(o.completed as u64,
+                                               Relaxed);
+                                counters.failed
+                                    .fetch_add(o.failed as u64, Relaxed);
+                                hist.record(t0.elapsed());
+                            })
+                        }));
                     match res {
-                        Ok(bucket) => {
+                        Ok(outcome) => {
+                            counters.dropped.fetch_add(
+                                outcome.dropped as u64, Relaxed);
+                            if let Some(err) = &outcome.error {
+                                // requests were answered with
+                                // BatchFailed — this is the log line,
+                                // not the failure path
+                                eprintln!("[worker:{}] batch failed: \
+                                           {err}", model.name);
+                            }
                             if let (Some(s), Some(ids)) = (&sink, ids) {
                                 s.record(EventBody::BatchExecuted {
                                     ids,
-                                    bucket,
+                                    bucket: outcome.bucket,
                                     exec_us: t0.elapsed().as_micros()
                                         as u64,
                                 });
                             }
                         }
-                        Err(e) => {
-                            // batch dropped; requesters see a closed
-                            // channel
-                            eprintln!("[worker:{}] batch failed: {e:#}",
-                                      model.name);
+                        Err(p) => {
+                            // Supervision: fail what's left, keep
+                            // serving. Requests already drained by
+                            // execute_batch got their outcome before
+                            // the panic.
+                            counters.panics.fetch_add(1, Relaxed);
+                            let msg = panic_message(p.as_ref());
+                            eprintln!("[worker:{}] panic while executing \
+                                       a batch: {msg}; failing {} \
+                                       request(s), worker keeps serving",
+                                      model.name, batch.len());
+                            if !counted.get() {
+                                counters.batches.fetch_add(1, Relaxed);
+                                counters.batched_requests.fetch_add(
+                                    batch.len() as u64, Relaxed);
+                                counters.failed.fetch_add(
+                                    batch.len() as u64, Relaxed);
+                            }
+                            let err = ServeError::BatchFailed(
+                                format!("worker panicked: {msg}"));
+                            for req in batch.drain(..) {
+                                if !fail_request(req, err.clone(),
+                                                 sink.as_deref())
+                                {
+                                    counters.dropped.fetch_add(1,
+                                                               Relaxed);
+                                }
+                            }
                         }
                     }
                 }

@@ -104,6 +104,43 @@
 //! CLI: `huge2 serve --task segment [--record t.jsonl]` serves the net,
 //! `huge2 segment` runs a one-shot baseline-vs-HUGE² timing table + mask.
 //!
+//! ## Fault containment (typed per-request outcomes)
+//!
+//! Every accepted request terminates in **exactly one** observable
+//! outcome: the reply channel carries
+//! `Result<Response, ServeError>` — a typed taxonomy
+//! (`Validation` / `Backpressure` / `BatchFailed` / `Shutdown`) instead
+//! of a silently closed channel (DESIGN.md §11). A malformed row fails
+//! alone while the rest of its batch executes; a panicking worker is
+//! supervised (`catch_unwind`), fails its batch with `BatchFailed`, and
+//! keeps draining — the pool never shrinks. The counters conserve:
+//! `submitted == completed + rejected + failed` once drained.
+//!
+//! ```no_run
+//! use huge2::config::EngineConfig;
+//! use huge2::coordinator::{Engine, Model, Payload, ServeError};
+//! use huge2::gan::Generator;
+//! # use std::sync::Arc;
+//! let mut eng = Engine::new(EngineConfig::default());
+//! eng.register_native(Model::native(
+//!     "dcgan", Arc::new(Generator::dcgan(7)), 0))?;
+//! match eng.submit("dcgan", Payload::latent(vec![0.0; 100], vec![])) {
+//!     Err(ServeError::Backpressure) => { /* transient: retry or shed */ }
+//!     Err(e) => eprintln!("refused ({}): {e}", e.kind()),
+//!     Ok(rx) => match rx.recv()? {
+//!         Ok(resp) => println!("image {:?}", resp.output.shape()),
+//!         Err(e) => eprintln!("failed ({}): {e}", e.kind()),
+//!     },
+//! }
+//! let c = &eng.counters;
+//! assert_eq!(c.in_flight(), 0); // submitted == completed+rejected+failed
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! Failures are replay outcomes too: trace format v3 records a `Failed`
+//! event per failed request, and `replay` verifies failure determinism
+//! (by `ServeError::kind`) exactly like it verifies output checksums.
+//!
 //! ## Record / replay quickstart
 //!
 //! Serving runs are **recordable and deterministically replayable**

@@ -8,7 +8,7 @@ use std::time::{Duration, Instant};
 use huge2::bench_util::{fmt_dur, measure_budget, Table};
 use huge2::cli::Args;
 use huge2::config::{layer_by_name, segnet_by_name, table1, EngineConfig};
-use huge2::coordinator::{Engine, Payload, Response};
+use huge2::coordinator::{Engine, Payload};
 use huge2::deconv::{baseline, huge2 as engine2, Engine as DeconvEngine};
 use huge2::gan::Generator;
 use huge2::memsim::{trace_layer, EngineKind, GpuModel};
@@ -248,22 +248,42 @@ fn load_workload(args: &Args, rate: f64, n: usize) -> Result<Vec<Arrival>> {
     Ok(arrivals)
 }
 
-/// Drain responses, print throughput/latency/batching, shut down, and —
-/// when recording — save the trace (only after shutdown: workers have
-/// flushed every batch/response event into the sink by then).
-fn finish_serve(eng: Engine, pending: Vec<std::sync::mpsc::Receiver<Response>>,
+/// Drain outcomes (responses *and* typed failures — every accepted
+/// request terminates in exactly one), print throughput/latency/batching
+/// plus the outcome-conservation counters, shut down, and — when
+/// recording — save the trace (only after shutdown: workers have
+/// flushed every batch/response/failure event into the sink by then).
+fn finish_serve(eng: Engine,
+                pending: Vec<std::sync::mpsc::Receiver<
+                    huge2::coordinator::ServeResult>>,
                 t0: Instant, record: Option<(&str, Arc<TraceSink>,
                                              TraceHeader)>) -> Result<()> {
     let mut lat = Vec::new();
+    let mut failed = 0usize;
     for rx in pending {
-        if let Ok(resp) = rx.recv() {
-            lat.push(resp.latency);
+        match rx.recv() {
+            Ok(Ok(resp)) => lat.push(resp.latency),
+            Ok(Err(e)) => {
+                failed += 1;
+                println!("  failed ({}): {e}", e.kind());
+            }
+            Err(_) => bail!("reply channel closed without a terminal \
+                             outcome (engine bug)"),
         }
     }
     let wall = t0.elapsed();
     lat.sort_unstable();
+    {
+        use std::sync::atomic::Ordering::Relaxed;
+        let c = &eng.counters;
+        println!("outcomes: submitted={} completed={} rejected={} \
+                  failed={} (dropped={}, worker panics={})",
+                 c.submitted.load(Relaxed), c.completed.load(Relaxed),
+                 c.rejected.load(Relaxed), c.failed.load(Relaxed),
+                 c.dropped.load(Relaxed), c.panics.load(Relaxed));
+    }
     if lat.is_empty() {
-        bail!("no responses");
+        bail!("no successful responses ({failed} request(s) failed)");
     }
     println!("completed {} in {} → {:.2} req/s", lat.len(), fmt_dur(wall),
              lat.len() as f64 / wall.as_secs_f64());
@@ -496,9 +516,12 @@ fn replay(args: &Args) -> Result<()> {
     let report = rp.run(&eng, timing)?;
     eng.shutdown();
     println!("{}", report.summary());
+    if let Some(hint) = &report.hint {
+        println!("hint: {hint}");
+    }
     match report.first_divergence() {
         None => {
-            println!("replay OK: every recorded checksum reproduced");
+            println!("replay OK: every recorded outcome reproduced");
             Ok(())
         }
         Some(d) => bail!("replay diverged: {d}"),

@@ -112,11 +112,37 @@ impl Histogram {
 }
 
 /// Monotonic event counters for the serving engine.
+///
+/// The **outcome-conservation invariant** (DESIGN.md §11): every call
+/// to `Engine::submit` increments `submitted`, and every submitted
+/// request terminates in exactly one of `rejected` (refused at submit:
+/// validation, backpressure, shutdown), `completed` (a `Response` was
+/// produced) or `failed` (a typed `ServeError` was delivered through
+/// the reply channel). Once the engine is drained,
+/// `submitted == completed + rejected + failed` — assertable, and
+/// asserted by `tests/fault_stack.rs` under a fault-injection soak.
+///
+/// `dropped` and `panics` are telemetry, not outcome classes: a dropped
+/// delivery still counted as completed/failed (the client hung up
+/// before the outcome arrived), and a caught panic surfaces as `failed`
+/// requests.
 #[derive(Debug, Default)]
 pub struct Counters {
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
     pub rejected: AtomicU64,
+    /// Requests that received a typed `ServeError` through their reply
+    /// channel (gather validation, batch execution failure, worker
+    /// panic).
+    pub failed: AtomicU64,
+    /// Terminal outcomes whose delivery failed because the client had
+    /// already dropped its receiver. Subset telemetry: each is *also*
+    /// counted in `completed` or `failed`.
+    pub dropped: AtomicU64,
+    /// Worker panics caught by batch supervision. Each panic fails its
+    /// batch's remaining requests and the worker keeps draining — the
+    /// pool never shrinks.
+    pub panics: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
 }
@@ -133,6 +159,17 @@ impl Counters {
         } else {
             self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
         }
+    }
+
+    /// `submitted - (completed + rejected + failed)`: requests still in
+    /// flight. Zero once the engine is drained — the conservation
+    /// invariant in one number.
+    pub fn in_flight(&self) -> i64 {
+        let s = self.submitted.load(Ordering::Relaxed) as i64;
+        let c = self.completed.load(Ordering::Relaxed) as i64;
+        let r = self.rejected.load(Ordering::Relaxed) as i64;
+        let f = self.failed.load(Ordering::Relaxed) as i64;
+        s - (c + r + f)
     }
 }
 
@@ -191,5 +228,17 @@ mod tests {
         c.batches.fetch_add(2, Ordering::Relaxed);
         c.batched_requests.fetch_add(10, Ordering::Relaxed);
         assert_eq!(c.mean_batch_size(), 5.0);
+    }
+
+    #[test]
+    fn in_flight_tracks_conservation() {
+        let c = Counters::new();
+        c.submitted.fetch_add(10, Ordering::Relaxed);
+        c.completed.fetch_add(6, Ordering::Relaxed);
+        c.rejected.fetch_add(2, Ordering::Relaxed);
+        c.failed.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(c.in_flight(), 1);
+        c.failed.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(c.in_flight(), 0, "drained ⇒ conservation holds");
     }
 }

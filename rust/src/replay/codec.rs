@@ -10,21 +10,27 @@
 //! tools.
 //!
 //! ```text
-//! {"huge2_trace":2,"model":"dcgan","backend":"native","seed":7,"z_dim":100,"cond_dim":0,"task":"generate","net":""}
+//! {"huge2_trace":3,"model":"dcgan","backend":"native","seed":7,"z_dim":100,"cond_dim":0,"task":"generate","net":"","engine_digest":""}
 //! {"t_us":812,"ev":"arrival","id":0,"model":"dcgan","z":["bf1c6a00","3e99f3c2"],"cond":[]}
 //! {"t_us":815,"ev":"enqueue","id":0,"depth":1}
 //! {"t_us":2201,"ev":"batch_formed","ids":[0,1]}
 //! {"t_us":9610,"ev":"batch_executed","ids":[0,1],"bucket":2,"exec_us":7409}
 //! {"t_us":9612,"ev":"response","id":0,"batch_size":2,"bucket":2,"latency_us":8800,"checksum":"9f86d081884c7d65"}
+//! {"t_us":9613,"ev":"failed","id":1,"kind":"batch_failed","reason":"worker panicked: boom"}
 //! ```
 //!
-//! **Versioning** (DESIGN.md §8): writes always stamp [`TRACE_VERSION`]
-//! (2). Reads accept v1 and v2; a v1 header decodes with
+//! **Versioning** (DESIGN.md §8/§11): writes always stamp
+//! [`TRACE_VERSION`] (3). Reads accept v1..=v3; a v1 header decodes with
 //! `task="generate"`, `net=""` — v1 GAN traces replay unchanged, because
-//! latent arrival events are encoded identically in both versions. New
+//! latent arrival events are encoded identically in all versions. New
 //! in v2: `task`/`net` header fields, and image-payload arrivals
 //! (`"shape":[1,33,33,3],"input_seed":9,"input_checksum":"…"` in place of
 //! `z`/`cond` — payload checksums replace raw capture for image inputs).
+//! New in v3: `failed` events
+//! (`{"t_us":…,"ev":"failed","id":…,"kind":"batch_failed","reason":"…"}`)
+//! — a request that was accepted but terminated in a typed `ServeError`;
+//! header fields are unchanged from v2, so v2 traces (which simply
+//! contain no `failed` events) decode as-is.
 
 use anyhow::{anyhow, Context, Result};
 use std::io::{BufRead, BufReader, BufWriter, Write};
@@ -33,7 +39,7 @@ use std::path::Path;
 use super::event::{ArrivalPayload, EventBody, TraceEvent, TraceHeader};
 
 /// Current trace-format version (the header's `huge2_trace` value).
-pub const TRACE_VERSION: u32 = 2;
+pub const TRACE_VERSION: u32 = 3;
 
 // ------------------------------------------------------------------ encode
 
@@ -138,6 +144,12 @@ pub fn encode_event(e: &TraceEvent) -> String {
             "{{\"t_us\":{t},\"ev\":\"response\",\"id\":{id},\
              \"batch_size\":{batch_size},\"bucket\":{bucket},\
              \"latency_us\":{latency_us},\"checksum\":\"{checksum:016x}\"}}"
+        ),
+        EventBody::Failed { id, kind, reason } => format!(
+            "{{\"t_us\":{t},\"ev\":\"failed\",\"id\":{id},\
+             \"kind\":\"{}\",\"reason\":\"{}\"}}",
+            esc(kind),
+            esc(reason)
         ),
     }
 }
@@ -467,6 +479,11 @@ pub fn decode_event(line: &str) -> Result<TraceEvent, String> {
             latency_us: num(&m, "latency_us")?,
             checksum: hex64(&m, "checksum")?,
         },
+        "failed" => EventBody::Failed {
+            id: num(&m, "id")?,
+            kind: string(&m, "kind")?,
+            reason: string(&m, "reason")?,
+        },
         other => return Err(format!("unknown event kind {other:?}")),
     };
     Ok(TraceEvent { t_us, body })
@@ -570,7 +587,7 @@ mod tests {
         assert_eq!(h.task, "generate");
         assert_eq!(h.net, "");
         // future versions are rejected, past versions are not
-        assert!(decode_header("{\"huge2_trace\":3}").is_err());
+        assert!(decode_header("{\"huge2_trace\":4}").is_err());
         assert!(decode_header("{\"huge2_trace\":0}").is_err());
     }
 
@@ -654,6 +671,14 @@ mod tests {
                     bucket: 4,
                     latency_us: 999,
                     checksum: u64::MAX,
+                },
+            },
+            TraceEvent {
+                t_us: 6,
+                body: EventBody::Failed {
+                    id: 3,
+                    kind: "batch_failed".into(),
+                    reason: "worker panicked: \"boom\"\n".into(),
                 },
             },
         ];

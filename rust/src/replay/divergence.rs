@@ -1,13 +1,27 @@
 //! Divergence detection and reporting — the wasm-rr contract: replay
-//! either reproduces every recorded output checksum or fails loudly,
-//! naming the **first** trace event whose outcome the replay could not
-//! reproduce.
+//! either reproduces every recorded *outcome* or fails loudly, naming
+//! the **first** trace event whose outcome the replay could not
+//! reproduce. Outcomes cover both sides of the serving contract:
+//! `Response` events verify by output checksum, `Failed` events (trace
+//! v3) verify by `ServeError::kind()` — failure determinism is checked
+//! the same way output determinism is.
 
 use std::collections::HashMap;
 use std::fmt;
 use std::time::Duration;
 
 use super::event::{EventBody, TraceEvent};
+
+/// What a replay run produced for one request id — the replay-side
+/// value diffed against recorded `Response`/`Failed` events.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ReplayedOutcome {
+    /// A response whose output hashed to this checksum.
+    Response(u64),
+    /// A typed failure with this `ServeError::kind()` tag (delivered
+    /// through the reply channel, or refused at submit).
+    Failed(String),
+}
 
 /// One reproducibility violation, anchored to the recorded trace.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -20,9 +34,27 @@ pub enum Divergence {
         recorded: u64,
         replayed: u64,
     },
-    /// The recording answered `id` but the replay produced no response
-    /// (rejected at submit, or the batch failed).
+    /// The recording answered `id` but the replay produced no outcome
+    /// at all (worker thread died without replying — an engine bug by
+    /// the supervision contract).
     MissingResponse { event_index: usize, id: u64 },
+    /// The recording answered `id` with a response, but the replay
+    /// failed it with this `ServeError::kind()`.
+    ResponseBecameFailure {
+        event_index: usize,
+        id: u64,
+        kind: String,
+    },
+    /// The recording failed `id` (a v3 `Failed` event) but the replay
+    /// did not reproduce that failure: `replayed` is the differing
+    /// failure kind, `"response"` when the replay answered it, or
+    /// `"none"` when the replay produced no outcome.
+    FailureMismatch {
+        event_index: usize,
+        id: u64,
+        recorded_kind: String,
+        replayed: String,
+    },
 }
 
 impl Divergence {
@@ -30,7 +62,9 @@ impl Divergence {
     pub fn event_index(&self) -> usize {
         match self {
             Divergence::ChecksumMismatch { event_index, .. }
-            | Divergence::MissingResponse { event_index, .. } => {
+            | Divergence::MissingResponse { event_index, .. }
+            | Divergence::ResponseBecameFailure { event_index, .. }
+            | Divergence::FailureMismatch { event_index, .. } => {
                 *event_index
             }
         }
@@ -56,6 +90,23 @@ impl fmt::Display for Divergence {
                 "event #{event_index} (response id={id}): recorded a \
                  response but replay produced none"
             ),
+            Divergence::ResponseBecameFailure { event_index, id,
+                                                kind } => write!(
+                f,
+                "event #{event_index} (response id={id}): recorded a \
+                 response but replay failed it ({kind})"
+            ),
+            Divergence::FailureMismatch {
+                event_index,
+                id,
+                recorded_kind,
+                replayed,
+            } => write!(
+                f,
+                "event #{event_index} (failed id={id}): recorded a \
+                 {recorded_kind:?} failure but replay produced \
+                 {replayed:?}"
+            ),
         }
     }
 }
@@ -65,16 +116,26 @@ impl fmt::Display for Divergence {
 pub struct ReplayReport {
     /// Arrivals re-driven through the engine.
     pub requests: usize,
-    /// Replayed responses that had a recorded counterpart to verify.
+    /// Replayed outcomes that had a recorded counterpart to verify
+    /// (`Response` and `Failed` events both count).
     pub compared: usize,
-    /// Of those, how many matched bit-for-bit.
+    /// Of those, how many matched (checksum bit-for-bit, or failure
+    /// kind).
     pub matched: usize,
-    /// Replay responses with no recorded counterpart (the recording
-    /// rejected the request; fast replay may admit it). Informational —
-    /// scheduling is allowed to differ, outputs are not.
+    /// Replay outcomes with no recorded counterpart — e.g. the
+    /// recording rejected the request at submit but fast replay
+    /// admitted and answered it. A replay-side typed refusal of a
+    /// request the recording *also* rejected is agreement and is not
+    /// counted. Informational — scheduling is allowed to differ,
+    /// outcomes are not.
     pub extra_responses: usize,
     /// All violations, ordered by recorded event index.
     pub divergences: Vec<Divergence>,
+    /// A diagnosis for the divergences when the replayer can infer one
+    /// (e.g. checksum mismatches replaying a digest-less pre-plan trace
+    /// under `Engine::Auto` — "re-record or pin the engine"). Printed
+    /// by the CLI alongside the first divergence.
+    pub hint: Option<String>,
     /// Replay wall-clock.
     pub wall: Duration,
 }
@@ -92,7 +153,7 @@ impl ReplayReport {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "{} requests replayed, {}/{} checksums verified, {} \
+            "{} requests replayed, {}/{} outcomes verified, {} \
              divergence(s), {} extra response(s), {:.2}s wall",
             self.requests,
             self.matched,
@@ -104,35 +165,72 @@ impl ReplayReport {
     }
 }
 
-/// Compare replayed output checksums against every recorded `Response`
-/// event, in trace order. `replayed` maps request id → output checksum.
+/// Compare replayed outcomes against every recorded `Response` and
+/// `Failed` event, in trace order. `replayed` maps request id → the
+/// outcome the replay produced for it.
 pub fn diff_responses(events: &[TraceEvent],
-                      replayed: &HashMap<u64, u64>)
+                      replayed: &HashMap<u64, ReplayedOutcome>)
                       -> (Vec<Divergence>, usize, usize) {
     let mut divergences = Vec::new();
     let mut compared = 0;
     let mut matched = 0;
     for (idx, ev) in events.iter().enumerate() {
-        if let EventBody::Response { id, checksum, .. } = &ev.body {
-            match replayed.get(id) {
-                None => divergences.push(Divergence::MissingResponse {
-                    event_index: idx,
-                    id: *id,
-                }),
-                Some(got) => {
-                    compared += 1;
-                    if got == checksum {
-                        matched += 1;
-                    } else {
-                        divergences.push(Divergence::ChecksumMismatch {
-                            event_index: idx,
-                            id: *id,
-                            recorded: *checksum,
-                            replayed: *got,
-                        });
+        match &ev.body {
+            EventBody::Response { id, checksum, .. } => {
+                match replayed.get(id) {
+                    None => divergences.push(Divergence::MissingResponse {
+                        event_index: idx,
+                        id: *id,
+                    }),
+                    Some(ReplayedOutcome::Response(got)) => {
+                        compared += 1;
+                        if got == checksum {
+                            matched += 1;
+                        } else {
+                            divergences.push(
+                                Divergence::ChecksumMismatch {
+                                    event_index: idx,
+                                    id: *id,
+                                    recorded: *checksum,
+                                    replayed: *got,
+                                });
+                        }
+                    }
+                    Some(ReplayedOutcome::Failed(kind)) => {
+                        compared += 1;
+                        divergences.push(
+                            Divergence::ResponseBecameFailure {
+                                event_index: idx,
+                                id: *id,
+                                kind: kind.clone(),
+                            });
                     }
                 }
             }
+            EventBody::Failed { id, kind, .. } => {
+                let got = match replayed.get(id) {
+                    None => "none".to_string(),
+                    Some(ReplayedOutcome::Response(_)) => {
+                        compared += 1;
+                        "response".to_string()
+                    }
+                    Some(ReplayedOutcome::Failed(k)) => {
+                        compared += 1;
+                        k.clone()
+                    }
+                };
+                if &got == kind {
+                    matched += 1;
+                } else {
+                    divergences.push(Divergence::FailureMismatch {
+                        event_index: idx,
+                        id: *id,
+                        recorded_kind: kind.clone(),
+                        replayed: got,
+                    });
+                }
+            }
+            _ => {}
         }
     }
     (divergences, compared, matched)
@@ -155,11 +253,26 @@ mod tests {
         }
     }
 
+    fn failed(t_us: u64, id: u64, kind: &str) -> TraceEvent {
+        TraceEvent {
+            t_us,
+            body: EventBody::Failed {
+                id,
+                kind: kind.into(),
+                reason: "r".into(),
+            },
+        }
+    }
+
+    fn ok(checksum: u64) -> ReplayedOutcome {
+        ReplayedOutcome::Response(checksum)
+    }
+
     #[test]
     fn clean_when_all_match() {
         let events = vec![resp(0, 0, 10), resp(1, 1, 11)];
-        let replayed: HashMap<u64, u64> =
-            [(0, 10), (1, 11)].into_iter().collect();
+        let replayed: HashMap<u64, ReplayedOutcome> =
+            [(0, ok(10)), (1, ok(11))].into_iter().collect();
         let (d, compared, matched) = diff_responses(&events, &replayed);
         assert!(d.is_empty());
         assert_eq!((compared, matched), (2, 2));
@@ -175,8 +288,8 @@ mod tests {
             resp(1, 0, 10),
             resp(2, 1, 11),
         ];
-        let replayed: HashMap<u64, u64> =
-            [(0, 10), (1, 99)].into_iter().collect();
+        let replayed: HashMap<u64, ReplayedOutcome> =
+            [(0, ok(10)), (1, ok(99))].into_iter().collect();
         let (d, compared, matched) = diff_responses(&events, &replayed);
         assert_eq!((compared, matched), (2, 1));
         assert_eq!(
@@ -207,10 +320,82 @@ mod tests {
     }
 
     #[test]
+    fn recorded_failure_matches_by_kind() {
+        let events = vec![failed(0, 7, "validation")];
+        let replayed: HashMap<u64, ReplayedOutcome> =
+            [(7, ReplayedOutcome::Failed("validation".into()))]
+                .into_iter()
+                .collect();
+        let (d, compared, matched) = diff_responses(&events, &replayed);
+        assert!(d.is_empty(), "{d:?}");
+        assert_eq!((compared, matched), (1, 1));
+    }
+
+    #[test]
+    fn failure_mismatches_name_what_replay_did() {
+        // recorded failure vs replay response / different kind / nothing
+        let events = vec![
+            failed(0, 1, "batch_failed"),
+            failed(1, 2, "batch_failed"),
+            failed(2, 3, "batch_failed"),
+            resp(3, 4, 10),
+        ];
+        let replayed: HashMap<u64, ReplayedOutcome> = [
+            (1, ok(5)),
+            (2, ReplayedOutcome::Failed("validation".into())),
+            (4, ReplayedOutcome::Failed("batch_failed".into())),
+        ]
+        .into_iter()
+        .collect();
+        let (d, compared, matched) = diff_responses(&events, &replayed);
+        assert_eq!(matched, 0);
+        assert_eq!(compared, 3); // id 3 produced nothing: not compared
+        assert_eq!(d.len(), 4);
+        assert_eq!(
+            d[0],
+            Divergence::FailureMismatch {
+                event_index: 0,
+                id: 1,
+                recorded_kind: "batch_failed".into(),
+                replayed: "response".into(),
+            }
+        );
+        assert_eq!(
+            d[1],
+            Divergence::FailureMismatch {
+                event_index: 1,
+                id: 2,
+                recorded_kind: "batch_failed".into(),
+                replayed: "validation".into(),
+            }
+        );
+        assert_eq!(
+            d[2],
+            Divergence::FailureMismatch {
+                event_index: 2,
+                id: 3,
+                recorded_kind: "batch_failed".into(),
+                replayed: "none".into(),
+            }
+        );
+        assert_eq!(
+            d[3],
+            Divergence::ResponseBecameFailure {
+                event_index: 3,
+                id: 4,
+                kind: "batch_failed".into(),
+            }
+        );
+        for div in &d {
+            assert!(!div.to_string().is_empty());
+        }
+    }
+
+    #[test]
     fn divergences_come_out_in_trace_order() {
         let events = vec![resp(0, 2, 1), resp(1, 0, 1), resp(2, 1, 1)];
-        let replayed: HashMap<u64, u64> =
-            [(2, 9), (0, 9), (1, 9)].into_iter().collect();
+        let replayed: HashMap<u64, ReplayedOutcome> =
+            [(2, ok(9)), (0, ok(9)), (1, ok(9))].into_iter().collect();
         let (d, _, _) = diff_responses(&events, &replayed);
         let idxs: Vec<usize> =
             d.iter().map(|x| x.event_index()).collect();

@@ -67,6 +67,15 @@ pub enum EventBody {
         latency_us: u64,
         checksum: u64,
     },
+    /// A typed failure was sent to a client (trace format v3): the
+    /// request was *accepted* but terminated in a
+    /// `ServeError` instead of a response — a malformed row isolated at
+    /// gather, a failed batch, a caught worker panic. `kind` is the
+    /// stable `ServeError::kind()` tag; replay verifies failure
+    /// determinism by kind, the same way it verifies response
+    /// checksums. `reason` is human telemetry and deliberately not
+    /// compared (it may carry run-specific detail).
+    Failed { id: u64, kind: String, reason: String },
 }
 
 impl EventBody {
@@ -79,6 +88,7 @@ impl EventBody {
             EventBody::BatchFormed { .. } => "batch_formed",
             EventBody::BatchExecuted { .. } => "batch_executed",
             EventBody::Response { .. } => "response",
+            EventBody::Failed { .. } => "failed",
         }
     }
 
@@ -88,7 +98,8 @@ impl EventBody {
             EventBody::RequestArrival { id, .. }
             | EventBody::Enqueue { id, .. }
             | EventBody::Reject { id, .. }
-            | EventBody::Response { id, .. } => Some(*id),
+            | EventBody::Response { id, .. }
+            | EventBody::Failed { id, .. } => Some(*id),
             EventBody::BatchFormed { .. }
             | EventBody::BatchExecuted { .. } => None,
         }
@@ -151,6 +162,11 @@ mod tests {
                 bucket: 1,
                 latency_us: 3,
                 checksum: 4,
+            },
+            EventBody::Failed {
+                id: 0,
+                kind: "batch_failed".into(),
+                reason: "r".into(),
             },
         ];
         let mut kinds: Vec<&str> = evs.iter().map(|e| e.kind()).collect();

@@ -24,6 +24,13 @@
 //! the trace — and replay regenerates + verifies them before submitting.
 //! v1 traces still load (they decode as `task="generate"`).
 //!
+//! Failures are first-class outcomes (trace format v3, DESIGN.md §11):
+//! a request answered with a typed `ServeError` records a `Failed`
+//! event carrying the error's stable kind, and replay verifies
+//! **failure determinism** — a recorded failure must fail again with
+//! the same kind — exactly as it verifies response checksums. v2
+//! traces (no `Failed` events) load unchanged.
+//!
 //! The canonical library-level quickstart (Recorder → set_trace_sink →
 //! serve → save, then Replayer::load → run → is_clean) lives in the
 //! [crate docs](crate); `examples/record_replay.rs` is the runnable
@@ -36,7 +43,7 @@ pub mod recorder;
 pub mod replayer;
 
 pub use codec::TRACE_VERSION;
-pub use divergence::{Divergence, ReplayReport};
+pub use divergence::{Divergence, ReplayReport, ReplayedOutcome};
 pub use event::{ArrivalPayload, EventBody, TraceEvent, TraceHeader};
 pub use recorder::{Recorder, TraceSink};
 pub use replayer::{Replayer, Timing};

@@ -24,12 +24,13 @@ use std::str::FromStr;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{Backpressure, Engine, Payload, Response};
+use crate::coordinator::{Engine, Payload, ServeError, ServeResult};
 use crate::rng::Rng;
 use crate::tensor::Tensor;
 
 use super::codec;
-use super::divergence::{diff_responses, ReplayReport};
+use super::divergence::{diff_responses, Divergence, ReplayReport,
+                        ReplayedOutcome};
 use super::event::{ArrivalPayload, EventBody, TraceEvent, TraceHeader};
 
 /// How the replayer paces recorded arrivals.
@@ -103,21 +104,27 @@ impl Replayer {
     }
 
     /// Re-drive the recorded workload through `engine` (the trace's model
-    /// must already be registered) and verify output checksums.
+    /// must already be registered) and verify every recorded outcome:
+    /// `Response` events by output checksum, `Failed` events (trace v3)
+    /// by `ServeError` kind — failure determinism is part of the
+    /// contract (DESIGN.md §11).
     ///
     /// Admission may legitimately differ from the recording (fast mode
     /// floods the queue the recording paced): a request the recording
     /// *rejected* but the replay answers is counted as an extra response,
     /// not a divergence. A request the recording *answered* must be
-    /// answered identically — anything else diverges.
+    /// answered identically, and a request the recording *failed* must
+    /// fail with the same kind — anything else diverges.
     ///
     /// Backpressure on replay is NOT a divergence: when `submit` rejects
     /// while our own requests are still in flight, the replayer drains
     /// the oldest in-flight response and retries, so a fast replay of a
     /// trace larger than the queue depth completes instead of
-    /// mis-reporting deterministic requests as missing. Only a reject
-    /// with nothing in flight (validation failure, shutdown) drops the
-    /// request.
+    /// mis-reporting deterministic requests as missing. A reject with
+    /// nothing in flight (validation failure, shutdown) records the
+    /// typed failure as this request's replay outcome — which is
+    /// exactly what makes a deterministically-failing request verify
+    /// against its recorded `Failed` event.
     pub fn run(&self, engine: &Engine, timing: Timing)
                -> Result<ReplayReport> {
         // Engine-selection digest gate (DESIGN.md §10): a trace recorded
@@ -156,10 +163,19 @@ impl Replayer {
             .find(|e| matches!(e.body, EventBody::RequestArrival { .. }))
             .map(|e| e.t_us)
             .unwrap_or(0);
-        let mut pending: VecDeque<(u64, mpsc::Receiver<Response>)> =
+        let mut pending: VecDeque<(u64, mpsc::Receiver<ServeResult>)> =
             VecDeque::new();
-        let mut replayed: HashMap<u64, u64> = HashMap::new();
+        let mut replayed: HashMap<u64, ReplayedOutcome> = HashMap::new();
         let mut requests = 0usize;
+        // One terminal outcome per reply channel: checksum or typed kind.
+        fn outcome_of(res: ServeResult) -> ReplayedOutcome {
+            match res {
+                Ok(resp) => {
+                    ReplayedOutcome::Response(resp.output.checksum())
+                }
+                Err(e) => ReplayedOutcome::Failed(e.kind().to_string()),
+            }
+        }
         for (ev_idx, ev) in self.events.iter().enumerate() {
             let EventBody::RequestArrival { id, model, payload } = &ev.body
             else {
@@ -216,28 +232,36 @@ impl Replayer {
                         pending.push_back((*id, rx));
                         break;
                     }
-                    Err(e) if e.downcast_ref::<Backpressure>().is_some()
-                        && !pending.is_empty() =>
+                    Err(ServeError::Backpressure)
+                        if !pending.is_empty() =>
                     {
                         // transient backpressure from our own in-flight
                         // requests: drain the oldest, then retry
                         let (pid, rx) = pending.pop_front().unwrap();
-                        if let Ok(resp) = rx.recv() {
-                            replayed.insert(pid, resp.output.checksum());
+                        if let Ok(res) = rx.recv() {
+                            replayed.insert(pid, outcome_of(res));
                         }
                     }
                     // Deterministic reject (validation/shutdown) — or
                     // backpressure with nothing of ours in flight, which
-                    // cannot clear by waiting. Surfaces as
-                    // MissingResponse iff the recording answered this id.
-                    Err(_) => break,
+                    // cannot clear by waiting. The typed kind is this
+                    // request's replay outcome: it verifies a recorded
+                    // `Failed` of the same kind, and diverges
+                    // (ResponseBecameFailure) iff the recording
+                    // answered this id.
+                    Err(e) => {
+                        replayed.insert(
+                            *id,
+                            ReplayedOutcome::Failed(e.kind().to_string()));
+                        break;
+                    }
                 }
             }
         }
 
         for (id, rx) in pending {
-            if let Ok(resp) = rx.recv() {
-                replayed.insert(id, resp.output.checksum());
+            if let Ok(res) = rx.recv() {
+                replayed.insert(id, outcome_of(res));
             }
         }
 
@@ -247,20 +271,62 @@ impl Replayer {
             .events
             .iter()
             .filter_map(|e| match &e.body {
-                EventBody::Response { id, .. } => Some(*id),
+                EventBody::Response { id, .. }
+                | EventBody::Failed { id, .. } => Some(*id),
                 _ => None,
             })
             .collect();
+        let rejected_ids: HashSet<u64> = self
+            .events
+            .iter()
+            .filter_map(|e| match &e.body {
+                EventBody::Reject { id, .. } => Some(*id),
+                _ => None,
+            })
+            .collect();
+        // "Extra" = a replay outcome the recording has no terminal
+        // event for. A typed refusal on replay of a request the
+        // recording *also* rejected is agreement, not an extra — don't
+        // report a bit-perfect faithful replay of a reject-heavy trace
+        // as N extras. (A replay *response* for a recorded reject still
+        // counts: fast mode legitimately admits what the recording
+        // shed, and that is worth surfacing.)
         let extra_responses = replayed
-            .keys()
-            .filter(|id| !recorded_ids.contains(id))
+            .iter()
+            .filter(|(id, out)| {
+                !recorded_ids.contains(id)
+                    && !(rejected_ids.contains(id)
+                         && matches!(out, ReplayedOutcome::Failed(_)))
+            })
             .count();
+        // Diagnose the classic digest-less divergence (DESIGN.md §10):
+        // a pre-plan trace carries no engine_digest, so the hard gate
+        // above never ran — if this engine compiled a plan and the
+        // checksums mismatch, the likeliest cause is `Engine::Auto`
+        // resolving different per-layer engines than the recording's
+        // build, not corrupted data. Say so instead of leaving a bare
+        // checksum mismatch.
+        let hint = (divergences.iter().any(|d| {
+            matches!(d, Divergence::ChecksumMismatch { .. })
+        }) && self.header.engine_digest.is_empty()
+            && engine.plan_digest(&self.header.model).is_some())
+        .then(|| {
+            "trace has no engine_digest header field (recorded by a \
+             pre-plan build), so the engine-selection gate could not \
+             run: this engine's compiled plan — Engine::Auto by \
+             default — may resolve different per-layer engines than \
+             the recording executed. Re-record the trace with this \
+             build, or pin the recording's engine selection \
+             (DESIGN.md §10)"
+                .to_string()
+        });
         Ok(ReplayReport {
             requests,
             compared,
             matched,
             extra_responses,
             divergences,
+            hint,
             wall: t0.elapsed(),
         })
     }

@@ -38,6 +38,12 @@ use std::ops::{Deref, DerefMut};
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::Mutex;
 
+/// Process-unique workspace identities (see [`WsBuf`]'s owner tag).
+/// A monotonic id — not the workspace's address — so a buffer that
+/// outlives its dropped workspace can never alias a newer one through
+/// allocator address reuse.
+static WORKSPACE_IDS: AtomicU64 = AtomicU64::new(1);
+
 /// Smallest slab class (elements). 256 f32 = 1 KiB.
 pub const MIN_CLASS: usize = 256;
 
@@ -65,18 +71,34 @@ pub struct WorkspaceCounters {
 /// A size-classed pool of `f32` slabs shared by any number of
 /// [`WsHandle`]s. `Sync`: the shared pool is mutex-guarded, counters are
 /// atomic.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Workspace {
     shared: Mutex<HashMap<usize, Vec<Box<[f32]>>>>,
     bytes_allocated: AtomicU64,
     checkouts: AtomicU64,
     pool_hits: AtomicU64,
     pool_misses: AtomicU64,
+    /// Process-unique identity stamped into every [`WsBuf`] at
+    /// checkout; [`WsHandle::checkin`] rejects mismatches.
+    id: u64,
+}
+
+impl Default for Workspace {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Workspace {
     pub fn new() -> Self {
-        Self::default()
+        Workspace {
+            shared: Mutex::new(HashMap::new()),
+            bytes_allocated: AtomicU64::new(0),
+            checkouts: AtomicU64::new(0),
+            pool_hits: AtomicU64::new(0),
+            pool_misses: AtomicU64::new(0),
+            id: WORKSPACE_IDS.fetch_add(1, Relaxed),
+        }
     }
 
     /// A checkout/checkin handle with a lock-free local cache. Create one
@@ -134,11 +156,18 @@ impl Workspace {
 /// callers must fully overwrite before reading (see module docs).
 /// `Send`: moving a buffer across threads (e.g. a per-pattern sub-output
 /// handed back for scatter) is fine; check it in to any handle of the
-/// same workspace.
+/// **same workspace** — the buffer is tagged with its workspace's
+/// identity at checkout, and [`WsHandle::checkin`] rejects foreign
+/// buffers (debug assert; in release the slab is freed rather than
+/// pooled), so one pool's accounting can never absorb another pool's
+/// slabs.
 #[derive(Debug)]
 pub struct WsBuf {
     slab: Box<[f32]>,
     len: usize,
+    /// Process-unique id of the owning [`Workspace`] (not its address —
+    /// immune to allocator address reuse), set at checkout.
+    owner: u64,
 }
 
 impl Deref for WsBuf {
@@ -193,7 +222,7 @@ impl<'w> WsHandle<'w> {
                 vec![0.0f32; class].into_boxed_slice()
             }
         };
-        WsBuf { slab, len }
+        WsBuf { slab, len, owner: self.owner_id() }
     }
 
     /// Check out `len` elements zeroed (for buffers whose zeros are
@@ -205,8 +234,29 @@ impl<'w> WsHandle<'w> {
     }
 
     /// Return a buffer to this handle's local cache.
+    ///
+    /// The buffer must have been checked out of the **same**
+    /// [`Workspace`] this handle draws from: pooling a foreign slab
+    /// would cross-pollute the two pools and break the
+    /// `bytes_allocated`/`pooled_bytes` accounting the zero-alloc
+    /// invariants are asserted on (DESIGN.md §9). A foreign checkin is
+    /// a caller bug — debug builds panic; release builds refuse the
+    /// slab (it is freed, both pools' accounting stays truthful).
     pub fn checkin(&mut self, buf: WsBuf) {
+        debug_assert_eq!(
+            buf.owner, self.owner_id(),
+            "WsBuf checked into a different Workspace than it was \
+             checked out of (cross-pool pollution; DESIGN.md §9)");
+        if buf.owner != self.owner_id() {
+            return; // foreign slab: drop it, never pool it
+        }
         self.local.entry(buf.slab.len()).or_default().push(buf.slab);
+    }
+
+    /// The owning workspace's identity tag.
+    #[inline]
+    fn owner_id(&self) -> u64 {
+        self.ws.id
     }
 }
 
@@ -302,6 +352,41 @@ mod tests {
         // at most one extra slab: the two threads may or may not overlap
         assert!(c.pool_misses <= 2);
         assert!(c.pool_hits >= 1);
+    }
+
+    /// Foreign checkins are rejected: debug builds assert, release
+    /// builds free the slab without pooling it — either way the two
+    /// pools' accounting stays truthful.
+    #[test]
+    #[cfg_attr(debug_assertions,
+               should_panic(expected = "different Workspace"))]
+    fn foreign_checkin_is_rejected() {
+        let ws_a = Workspace::new();
+        let ws_b = Workspace::new();
+        let mut ha = ws_a.handle();
+        let mut hb = ws_b.handle();
+        let buf = ha.checkout(512);
+        hb.checkin(buf); // debug: panics here
+        drop(hb);
+        // release: the foreign slab must not have entered B's pool
+        assert_eq!(ws_b.pooled_bytes(), 0,
+                   "foreign slab pooled into the wrong workspace");
+        #[cfg(debug_assertions)]
+        unreachable!("debug_assert must reject the foreign checkin");
+    }
+
+    #[test]
+    fn same_workspace_checkin_across_handles_is_fine() {
+        // the sanctioned cross-thread pattern: checked out on one
+        // handle, checked in on another handle of the SAME workspace
+        let ws = Workspace::new();
+        let mut h1 = ws.handle();
+        let buf = h1.checkout(512);
+        let mut h2 = ws.handle();
+        h2.checkin(buf);
+        drop(h1);
+        drop(h2);
+        assert_eq!(ws.pooled_bytes(), 512 * 4);
     }
 
     #[test]

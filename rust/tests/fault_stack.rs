@@ -1,0 +1,432 @@
+//! Fault-containment integration tests (DESIGN.md §11).
+//!
+//! The contract under test: **every accepted request terminates in
+//! exactly one observable outcome** — `Ok(Response)` or a typed
+//! `ServeError` — and the counters satisfy the conservation invariant
+//! `submitted == completed + rejected + failed` once the engine is
+//! drained. Specifically:
+//!
+//! * a malformed row in a batch gather fails *only that request*; the
+//!   rest of the batch executes bit-identically to a clean batch;
+//! * an injected worker panic is caught by supervision, fails its
+//!   batch with `BatchFailed`, and leaves the worker pool serving;
+//! * queue-full submits return the typed `Backpressure` refusal;
+//! * the conservation invariant holds after a concurrent soak mixing
+//!   valid requests, validation rejects, backpressure floods and a
+//!   worker panic;
+//! * failures are trace outcomes (v3 `Failed` events) and replay
+//!   verifies failure determinism like it verifies checksums.
+
+use huge2::config::EngineConfig;
+use huge2::coordinator::worker::execute_batch;
+use huge2::coordinator::{Engine, Model, Payload, Request, ServeError,
+                         ServeResult};
+use huge2::gan::Generator;
+use huge2::replay::{Divergence, EventBody, Replayer, Timing,
+                    TraceHeader, TraceSink};
+use huge2::rng::Rng;
+use huge2::workspace::Workspace;
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+const Z_DIM: usize = 8;
+
+fn tiny_model() -> Model {
+    Model::native("tiny", Arc::new(Generator::tiny_cgan(5)), 0)
+}
+
+fn tiny_engine(workers: usize, queue_depth: usize) -> Engine {
+    let cfg = EngineConfig {
+        workers,
+        queue_depth,
+        max_batch: 4,
+        batch_timeout_us: 500,
+        ..EngineConfig::default()
+    };
+    let mut e = Engine::new(cfg);
+    e.register_native(tiny_model()).unwrap();
+    e
+}
+
+fn req(id: u64, payload: Payload)
+       -> (Request, mpsc::Receiver<ServeResult>) {
+    let (tx, rx) = mpsc::channel();
+    (Request { id, payload, enqueued: Instant::now(), reply: tx }, rx)
+}
+
+fn latent(rng: &mut Rng) -> Payload {
+    Payload::latent((0..Z_DIM).map(|_| rng.next_normal()).collect(),
+                    vec![])
+}
+
+// ------------------------------------------------ gather-row isolation
+
+/// One malformed payload in a native batch gather fails exactly that
+/// request with `Validation`; the good rows still execute and their
+/// outputs are bit-identical to a clean solo run (batch-composition
+/// invariance extends to faulted batches).
+#[test]
+fn mixed_batch_serves_good_rows_bit_identically() {
+    let model = tiny_model();
+    let ws = Workspace::new();
+    let mut hnd = ws.handle();
+    let mut rng = Rng::new(77);
+    let goods: Vec<Payload> = (0..3).map(|_| latent(&mut rng)).collect();
+
+    // solo reference checksums, one clean single-request batch each
+    let mut solo = Vec::new();
+    for (i, p) in goods.iter().enumerate() {
+        let (r, rx) = req(100 + i as u64, p.clone());
+        let mut batch = vec![r];
+        let out = execute_batch(&model, &mut batch, None, &mut hnd,
+                                |_| {});
+        assert_eq!((out.completed, out.failed), (1, 0));
+        solo.push(rx.recv().unwrap().unwrap().output.checksum());
+    }
+
+    // mixed batch: good, BAD (wrong latent width), good, good
+    let (r0, rx0) = req(0, goods[0].clone());
+    let (rb, rxb) = req(1, Payload::latent(vec![0.0; Z_DIM - 3], vec![]));
+    let (r2, rx2) = req(2, goods[1].clone());
+    let (r3, rx3) = req(3, goods[2].clone());
+    let mut batch = vec![r0, rb, r2, r3];
+    let out = execute_batch(&model, &mut batch, None, &mut hnd, |o| {
+        assert_eq!(o.completed, 3);
+        assert_eq!(o.failed, 1);
+    });
+    assert!(batch.is_empty(), "every request must be drained");
+    assert_eq!(out.bucket, 3, "only the good rows execute");
+    assert!(out.error.is_none(), "row fault is not a batch fault");
+
+    let err = rxb.recv().unwrap().unwrap_err();
+    assert_eq!(err.kind(), "validation");
+    assert!(err.to_string().contains("input elements"), "{err}");
+    for (rx, want) in [rx0, rx2, rx3].into_iter().zip(&solo) {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.output.checksum(), *want,
+                   "good rows must be bit-identical to a clean batch");
+        assert_eq!(resp.batch_size, 4);
+    }
+}
+
+/// Worker-level trace capture: the malformed row records a v3 `Failed`
+/// event (kind `validation`), the good rows record `Response` events —
+/// all before any client observes its outcome.
+#[test]
+fn malformed_row_records_a_failed_event() {
+    let model = tiny_model();
+    let ws = Workspace::new();
+    let mut hnd = ws.handle();
+    let mut rng = Rng::new(78);
+    let sink = TraceSink::new();
+    let (r0, _rx0) = req(10, latent(&mut rng));
+    let (rb, _rxb) = req(11, Payload::image(
+        huge2::tensor::Tensor::zeros(&[1, 2, 2, 1]), 0));
+    let mut batch = vec![r0, rb];
+    execute_batch(&model, &mut batch, Some(&sink), &mut hnd, |_| {});
+    let evs = sink.snapshot();
+    assert!(evs.iter().any(|e| matches!(&e.body,
+        EventBody::Response { id: 10, .. })));
+    assert!(evs.iter().any(|e| matches!(&e.body,
+        EventBody::Failed { id: 11, kind, .. } if kind == "validation")));
+}
+
+// ----------------------------------------------------- supervision
+
+/// An injected worker panic must not shrink the pool: the batch's
+/// requests fail with a typed `BatchFailed`, the panic is counted, and
+/// the *same single worker thread* keeps serving afterwards.
+#[test]
+fn injected_worker_panic_leaves_pool_serving() {
+    let e = tiny_engine(1, 16);
+    let mut rng = Rng::new(9);
+    // healthy round first
+    let z: Vec<f32> = (0..Z_DIM).map(|_| rng.next_normal()).collect();
+    e.generate("tiny", z, vec![]).unwrap();
+
+    assert!(!e.inject_worker_panic("no-such-model"));
+    assert!(e.inject_worker_panic("tiny"));
+    let rx = e.submit("tiny", latent(&mut rng)).unwrap();
+    let outcome = rx.recv_timeout(Duration::from_secs(30))
+        .expect("supervision must deliver an outcome, not hang");
+    let err = outcome.unwrap_err();
+    assert_eq!(err.kind(), "batch_failed");
+    assert!(err.to_string().contains("panicked"), "{err}");
+    assert_eq!(e.counters.panics.load(Relaxed), 1);
+
+    // the only worker thread survived the panic and still serves
+    for _ in 0..3 {
+        let z: Vec<f32> = (0..Z_DIM).map(|_| rng.next_normal()).collect();
+        let r = e.generate("tiny", z, vec![]).unwrap();
+        assert_eq!(r.output.shape(), &[1, 32, 32, 3]);
+    }
+    assert_eq!(e.counters.in_flight(), 0);
+    e.shutdown();
+}
+
+// ----------------------------------------------------- backpressure
+
+/// Queue-full submits return the *typed* `Backpressure` refusal, and
+/// every accepted request still completes.
+#[test]
+fn queue_full_submit_returns_typed_backpressure() {
+    let cfg = EngineConfig {
+        workers: 1,
+        queue_depth: 2,
+        max_batch: 1,
+        batch_timeout_us: 1,
+        ..EngineConfig::default()
+    };
+    let mut e = Engine::new(cfg);
+    e.register_native(tiny_model()).unwrap();
+    let mut rng = Rng::new(3);
+    let mut receivers = Vec::new();
+    let mut backpressured = 0u64;
+    for _ in 0..200 {
+        match e.submit("tiny", latent(&mut rng)) {
+            Ok(rx) => receivers.push(rx),
+            Err(err) => {
+                assert_eq!(err, ServeError::Backpressure, "{err}");
+                backpressured += 1;
+            }
+        }
+    }
+    assert!(backpressured > 0, "flood must trigger backpressure");
+    for rx in receivers {
+        rx.recv().unwrap().unwrap();
+    }
+    assert_eq!(e.counters.rejected.load(Relaxed), backpressured);
+    assert_eq!(e.counters.in_flight(), 0);
+}
+
+// ------------------------------------------------------- conservation
+
+/// The outcome-conservation invariant under concurrent fault pressure:
+/// valid requests, validation rejects, a backpressure flood and an
+/// injected panic all running at once — afterwards every submission is
+/// accounted for exactly once and no reply channel closed silently.
+#[test]
+fn conservation_invariant_holds_after_concurrent_fault_soak() {
+    let e = Arc::new(tiny_engine(2, 8));
+    let tally = Arc::new(huge2::metrics::Counters::new()); // client side
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let e = e.clone();
+        let tally = tally.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(1000 + t);
+            let mut pending: Vec<mpsc::Receiver<ServeResult>> =
+                Vec::new();
+            let drain = |pending: &mut Vec<mpsc::Receiver<ServeResult>>| {
+                for rx in pending.drain(..) {
+                    match rx.recv_timeout(Duration::from_secs(30)) {
+                        Ok(Ok(_)) => {
+                            tally.completed.fetch_add(1, Relaxed);
+                        }
+                        Ok(Err(_)) => {
+                            tally.failed.fetch_add(1, Relaxed);
+                        }
+                        Err(_) => panic!("no terminal outcome"),
+                    }
+                }
+            };
+            for i in 0..30u64 {
+                let payload = if i % 7 == 3 {
+                    // deterministic validation reject
+                    Payload::latent(vec![0.0; Z_DIM + 1], vec![])
+                } else {
+                    latent(&mut rng)
+                };
+                tally.submitted.fetch_add(1, Relaxed);
+                match e.submit("tiny", payload) {
+                    Ok(rx) => pending.push(rx),
+                    Err(_) => {
+                        tally.rejected.fetch_add(1, Relaxed);
+                    }
+                }
+                if i == 11 && t == 0 {
+                    assert!(e.inject_worker_panic("tiny"));
+                }
+                // burst without draining to provoke backpressure, then
+                // drain to let the soak make progress
+                if pending.len() >= 6 {
+                    drain(&mut pending);
+                }
+            }
+            drain(&mut pending);
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let c = &e.counters;
+    assert_eq!(c.submitted.load(Relaxed), 120);
+    assert_eq!(c.submitted.load(Relaxed),
+               tally.submitted.load(Relaxed));
+    assert_eq!(c.completed.load(Relaxed), tally.completed.load(Relaxed));
+    assert_eq!(c.failed.load(Relaxed), tally.failed.load(Relaxed));
+    assert_eq!(c.rejected.load(Relaxed), tally.rejected.load(Relaxed));
+    assert!(c.rejected.load(Relaxed) >= 4 * (30 / 7),
+            "validation rejects must be counted");
+    assert_eq!(c.panics.load(Relaxed), 1, "the injected panic was caught");
+    assert!(c.failed.load(Relaxed) >= 1,
+            "the panicked batch must surface as failed requests");
+    // conservation: submitted == completed + rejected + failed
+    assert_eq!(c.in_flight(), 0,
+               "drained engine must conserve outcomes: submitted={} \
+                completed={} rejected={} failed={}",
+               c.submitted.load(Relaxed), c.completed.load(Relaxed),
+               c.rejected.load(Relaxed), c.failed.load(Relaxed));
+    Arc::into_inner(e).expect("soak threads done").shutdown();
+}
+
+// ------------------------------------------------- replay integration
+
+fn gan_header(seed: u64, engine_digest: String) -> TraceHeader {
+    TraceHeader {
+        model: "tiny".into(),
+        backend: "native".into(),
+        seed,
+        z_dim: Z_DIM,
+        cond_dim: 0,
+        task: "generate".into(),
+        net: String::new(),
+        engine_digest,
+    }
+}
+
+/// Record a run whose third batch panics: the trace carries v3 `Failed`
+/// events. A replay (no injection) answers those requests — which the
+/// failure-determinism check must flag as `FailureMismatch`, with the
+/// healthy requests still verifying bit-for-bit.
+#[test]
+fn recorded_panic_failures_are_checked_on_replay() {
+    let sink = Arc::new(TraceSink::new());
+    let cfg = EngineConfig {
+        workers: 1,
+        queue_depth: 16,
+        max_batch: 4,
+        batch_timeout_us: 500,
+        ..EngineConfig::default()
+    };
+    let mut e = Engine::new(cfg);
+    e.set_trace_sink(sink.clone()).unwrap();
+    e.register_native(tiny_model()).unwrap();
+    let mut rng = Rng::new(12);
+    for _ in 0..2 {
+        let z: Vec<f32> = (0..Z_DIM).map(|_| rng.next_normal()).collect();
+        e.generate("tiny", z, vec![]).unwrap();
+    }
+    e.inject_worker_panic("tiny");
+    let rx = e.submit("tiny", latent(&mut rng)).unwrap();
+    let victim_err = rx.recv_timeout(Duration::from_secs(30))
+        .unwrap().unwrap_err();
+    assert_eq!(victim_err.kind(), "batch_failed");
+    e.shutdown();
+
+    let events = sink.snapshot();
+    let failed_ids: Vec<u64> = events.iter().filter_map(|ev| {
+        match &ev.body {
+            EventBody::Failed { id, kind, .. } => {
+                assert_eq!(kind, "batch_failed");
+                Some(*id)
+            }
+            _ => None,
+        }
+    }).collect();
+    assert_eq!(failed_ids.len(), 1, "the panicked request was recorded");
+
+    let rp = Replayer::from_parts(gan_header(5, String::new()), events);
+    let eng = tiny_engine(2, 64);
+    let report = rp.run(&eng, Timing::Fast).unwrap();
+    eng.shutdown();
+    // healthy outcomes reproduce; the recorded failure does not (no
+    // panic on replay) and is named as a failure-determinism divergence
+    assert_eq!(report.divergences.len(), 1, "{:?}", report.divergences);
+    match &report.divergences[0] {
+        Divergence::FailureMismatch { id, recorded_kind, replayed, .. }
+        => {
+            assert_eq!(*id, failed_ids[0]);
+            assert_eq!(recorded_kind, "batch_failed");
+            assert_eq!(replayed, "response");
+        }
+        other => panic!("expected FailureMismatch, got {other:?}"),
+    }
+}
+
+/// Satellite regression: replaying a digest-less (pre-plan) trace that
+/// diverges by checksum names the likely cause — "re-record or pin the
+/// engine" — instead of leaving a bare mismatch; a digest-carrying
+/// trace with the same mismatch gets no such hint.
+#[test]
+fn digest_less_checksum_divergence_carries_re_record_hint() {
+    // record with seed-5 weights, digest-less header (pre-plan style)
+    let sink = Arc::new(TraceSink::new());
+    let cfg = EngineConfig {
+        workers: 2,
+        queue_depth: 64,
+        max_batch: 4,
+        batch_timeout_us: 500,
+        ..EngineConfig::default()
+    };
+    let mut e = Engine::new(cfg);
+    e.set_trace_sink(sink.clone()).unwrap();
+    e.register_native(tiny_model()).unwrap();
+    let mut rng = Rng::new(21);
+    for _ in 0..4 {
+        let z: Vec<f32> = (0..Z_DIM).map(|_| rng.next_normal()).collect();
+        e.generate("tiny", z, vec![]).unwrap();
+    }
+    e.shutdown();
+    let events = sink.snapshot();
+
+    // clean same-weights replay: no divergence, no hint
+    let rp = Replayer::from_parts(gan_header(5, String::new()),
+                                  events.clone());
+    let eng = tiny_engine(2, 64);
+    let report = rp.run(&eng, Timing::Fast).unwrap();
+    eng.shutdown();
+    assert!(report.is_clean(), "{:?}", report.divergences);
+    assert!(report.hint.is_none());
+
+    // wrong-weights replay of the digest-less trace: mismatch + hint
+    let rp = Replayer::from_parts(gan_header(6, String::new()),
+                                  events.clone());
+    let mut eng = Engine::new(EngineConfig {
+        workers: 2,
+        queue_depth: 64,
+        max_batch: 4,
+        batch_timeout_us: 500,
+        ..EngineConfig::default()
+    });
+    eng.register_native(Model::native(
+        "tiny", Arc::new(Generator::tiny_cgan(6)), 0)).unwrap();
+    let report = rp.run(&eng, Timing::Fast).unwrap();
+    let digest = eng.plan_digest("tiny").unwrap();
+    eng.shutdown();
+    assert!(!report.is_clean());
+    let hint = report.hint.as_deref().expect("digest-less divergence \
+                                              must carry a diagnosis");
+    assert!(hint.contains("engine_digest"), "{hint}");
+    assert!(hint.to_lowercase().contains("re-record"), "{hint}");
+
+    // same divergence but the trace DOES pin the digest: no hint (the
+    // selection gate already passed, so the cause is elsewhere)
+    let rp = Replayer::from_parts(
+        gan_header(6, format!("{digest:016x}")), events);
+    let mut eng = Engine::new(EngineConfig {
+        workers: 2,
+        queue_depth: 64,
+        max_batch: 4,
+        batch_timeout_us: 500,
+        ..EngineConfig::default()
+    });
+    eng.register_native(Model::native(
+        "tiny", Arc::new(Generator::tiny_cgan(6)), 0)).unwrap();
+    let report = rp.run(&eng, Timing::Fast).unwrap();
+    eng.shutdown();
+    assert!(!report.is_clean());
+    assert!(report.hint.is_none(),
+            "a digest-verified trace must not blame the digest");
+}

@@ -5,7 +5,7 @@
 //!   close semantics hold under random op sequences)
 //! * batcher: batches partition the request stream, never exceed
 //!   max_batch, preserve order
-//! * accounting: submitted == completed + rejected after drain
+//! * accounting: submitted == completed + rejected + failed after drain
 //! * histogram: quantiles within log-bucket error of exact values
 
 use huge2::coordinator::batcher::{ideal_batches, next_batch};
@@ -14,7 +14,7 @@ use huge2::metrics::Histogram;
 use huge2::rng::Rng;
 use std::collections::VecDeque;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 #[test]
 fn queue_matches_vecdeque_model() {
@@ -76,7 +76,8 @@ fn batches_partition_stream_in_order() {
         q.close();
         let mut seen = Vec::new();
         while let Some(batch) =
-            next_batch(&q, max_batch, Duration::from_micros(100))
+            next_batch(&q, max_batch, Duration::from_micros(100),
+                       |_: &u32| Instant::now())
         {
             assert!(!batch.is_empty() && batch.len() <= max_batch);
             seen.extend(batch);
@@ -155,15 +156,20 @@ fn engine_accounting_invariant_under_flood() {
         }
     }
     let mut completed = 0u64;
+    let mut failed = 0u64;
     for rx in receivers {
-        if rx.recv().is_ok() {
-            completed += 1;
+        match rx.recv() {
+            Ok(Ok(_)) => completed += 1,
+            Ok(Err(_)) => failed += 1,
+            Err(_) => panic!("reply channel closed without an outcome"),
         }
     }
     use std::sync::atomic::Ordering::Relaxed;
     assert_eq!(eng.counters.submitted.load(Relaxed), 120);
     assert_eq!(eng.counters.rejected.load(Relaxed), rejected);
     assert_eq!(eng.counters.completed.load(Relaxed), completed);
+    assert_eq!(eng.counters.failed.load(Relaxed), failed);
     // conservation: every submission is accounted for exactly once
-    assert_eq!(completed + rejected, 120);
+    assert_eq!(completed + rejected + failed, 120);
+    assert_eq!(eng.counters.in_flight(), 0, "drained engine");
 }

@@ -69,7 +69,7 @@ fn record_run(seed: u64, n: usize) -> Vec<TraceEvent> {
             .unwrap());
     }
     for rx in pending {
-        rx.recv().unwrap();
+        rx.recv().unwrap().unwrap();
     }
     eng.shutdown();
     sink.snapshot()
@@ -190,7 +190,7 @@ fn tampered_latent_changes_the_output() {
 }
 
 #[test]
-fn truncated_latent_surfaces_as_missing_response() {
+fn truncated_latent_surfaces_as_typed_validation_divergence() {
     let mut events = record_run(5, 4);
     let mut victim = None;
     for e in &mut events {
@@ -208,11 +208,85 @@ fn truncated_latent_surfaces_as_missing_response() {
     let eng = tiny_engine(5, None);
     let report = rp.run(&eng, Timing::Fast).unwrap();
     eng.shutdown();
+    // the recording answered this id; the replay's typed validation
+    // reject is its outcome — and the divergence names the kind
     assert!(report
         .divergences
         .iter()
-        .any(|d| matches!(d, Divergence::MissingResponse { id, .. }
-                          if *id == victim)));
+        .any(|d| matches!(d, Divergence::ResponseBecameFailure {
+                              id, kind, .. }
+                          if *id == victim && kind == "validation")),
+            "divergences: {:?}", report.divergences);
+}
+
+/// Failure determinism (trace v3): a trace that records a typed
+/// failure replays cleanly iff the replay fails the same request with
+/// the same kind — here a latent that deterministically fails
+/// validation, paired with its recorded `Failed` event.
+#[test]
+fn recorded_failure_kind_verifies_on_replay() {
+    let bad_arrival = |id: u64, t_us: u64| TraceEvent {
+        t_us,
+        body: EventBody::RequestArrival {
+            id,
+            model: "tiny".into(),
+            payload: ArrivalPayload::Latent {
+                z: vec![0.0; Z_DIM - 1], // wrong width: always rejected
+                cond: vec![],
+            },
+        },
+    };
+    let failed = |id: u64, t_us: u64, kind: &str| TraceEvent {
+        t_us,
+        body: EventBody::Failed {
+            id,
+            kind: kind.into(),
+            reason: "recorded failure".into(),
+        },
+    };
+
+    // matching kind → clean, and the failure counts as verified
+    let rp = Replayer::from_parts(
+        header(5), vec![bad_arrival(0, 0), failed(0, 1, "validation")]);
+    let eng = tiny_engine(5, None);
+    let report = rp.run(&eng, Timing::Fast).unwrap();
+    eng.shutdown();
+    assert!(report.is_clean(), "diverged: {:?}", report.divergences);
+    assert_eq!((report.compared, report.matched), (1, 1));
+
+    // different recorded kind → FailureMismatch naming both sides
+    let rp = Replayer::from_parts(
+        header(5), vec![bad_arrival(0, 0), failed(0, 1, "batch_failed")]);
+    let eng = tiny_engine(5, None);
+    let report = rp.run(&eng, Timing::Fast).unwrap();
+    eng.shutdown();
+    assert_eq!(report.divergences.len(), 1);
+    match &report.divergences[0] {
+        Divergence::FailureMismatch { recorded_kind, replayed, .. } => {
+            assert_eq!(recorded_kind, "batch_failed");
+            assert_eq!(replayed, "validation");
+        }
+        other => panic!("expected FailureMismatch, got {other:?}"),
+    }
+
+    // a request the recording *rejected at submit* (Reject event, no
+    // terminal outcome) that the replay also refuses is agreement —
+    // clean, and NOT reported as an extra response
+    let reject = TraceEvent {
+        t_us: 1,
+        body: EventBody::Reject {
+            id: 0,
+            reason: "validation: z has 7 dims".into(),
+        },
+    };
+    let rp = Replayer::from_parts(header(5),
+                                  vec![bad_arrival(0, 0), reject]);
+    let eng = tiny_engine(5, None);
+    let report = rp.run(&eng, Timing::Fast).unwrap();
+    eng.shutdown();
+    assert!(report.is_clean(), "{:?}", report.divergences);
+    assert_eq!(report.extra_responses, 0,
+               "a matching reject on both sides is not an extra");
 }
 
 #[test]
@@ -266,7 +340,7 @@ fn random_ids(rng: &mut Rng) -> Vec<u64> {
 }
 
 fn random_event(rng: &mut Rng, t_us: u64) -> TraceEvent {
-    let body = match rng.next_below(7) {
+    let body = match rng.next_below(8) {
         0 => EventBody::RequestArrival {
             id: rng.next_u64(),
             model: random_string(rng),
@@ -297,6 +371,12 @@ fn random_event(rng: &mut Rng, t_us: u64) -> TraceEvent {
             ids: random_ids(rng),
             bucket: 1 + rng.next_below(64),
             exec_us: rng.next_u64() >> 16,
+        },
+        7 => EventBody::Failed {
+            id: rng.next_u64(),
+            kind: ["validation", "backpressure", "batch_failed",
+                   "shutdown"][rng.next_below(4)].to_string(),
+            reason: random_string(rng),
         },
         _ => EventBody::Response {
             id: rng.next_u64(),

@@ -56,7 +56,7 @@ fn record_seg_run(seed: u64, n: usize) -> Vec<TraceEvent> {
             .unwrap());
     }
     for rx in pending {
-        rx.recv().unwrap();
+        rx.recv().unwrap().unwrap();
     }
     eng.shutdown();
     sink.snapshot()
@@ -147,11 +147,13 @@ fn non_canonical_image_is_rejected_at_record_time() {
     assert!(err.contains("canonical synthesis"), "{err}");
     // the same canonical image IS recordable...
     let ok = Tensor::randn(&[1, 9, 9, 2], &mut Rng::new(42));
-    eng.submit("seg", Payload::image(ok, 42)).unwrap().recv().unwrap();
+    eng.submit("seg", Payload::image(ok, 42)).unwrap().recv().unwrap()
+        .unwrap();
     eng.shutdown();
     // ...and without a sink, non-canonical images serve fine
     let eng = seg_engine(5, None);
-    eng.submit("seg", Payload::image(img, 42)).unwrap().recv().unwrap();
+    eng.submit("seg", Payload::image(img, 42)).unwrap().recv().unwrap()
+        .unwrap();
     eng.shutdown();
 }
 
@@ -266,7 +268,7 @@ fn v1_gan_trace_still_replays_cleanly() {
             .unwrap());
     }
     for rx in pending {
-        rx.recv().unwrap();
+        rx.recv().unwrap().unwrap();
     }
     eng.shutdown();
 

@@ -208,7 +208,7 @@ fn concurrent_mixed_soak_replays_divergence_free() {
                     .unwrap());
             }
             for rx in pending {
-                rx.recv().unwrap();
+                rx.recv().unwrap().unwrap();
             }
         });
         let e = eng.clone();
@@ -222,7 +222,7 @@ fn concurrent_mixed_soak_replays_divergence_free() {
                     .unwrap());
             }
             for rx in pending {
-                rx.recv().unwrap();
+                rx.recv().unwrap().unwrap();
             }
         });
     });
