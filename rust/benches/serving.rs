@@ -246,6 +246,69 @@ fn plan_prepack_phase(quick: bool) {
              4 * plan.high_water_elems(batch));
 }
 
+/// Instrumentation-overhead phase (DESIGN.md §12): the identical
+/// closed-loop tiny-cGAN workload served twice — `instrument = false`
+/// vs the default-armed observability layer (stage spans + flight
+/// recorder) — reporting throughput/latency for both and the relative
+/// cost. Also re-checks the zero-steady-state-allocation invariant with
+/// instrumentation on: span stamping must never touch the workspace.
+fn instrumentation_overhead_phase(quick: bool) {
+    let per_client = if quick { 8 } else { 32 };
+    let clients = 4usize;
+    let run = |instrument: bool| -> (f64, u64, u64, f64) {
+        let cfg = EngineConfig {
+            workers: 2,
+            max_batch: 8,
+            batch_timeout_us: 500,
+            instrument,
+            ..EngineConfig::default()
+        };
+        let mut eng = Engine::new(cfg);
+        eng.register_native(Model::native(
+            "tiny", Arc::new(Generator::tiny_cgan(13)), 0)).unwrap();
+        let eng = Arc::new(eng);
+        // warmup: populate the workspace pool before timing
+        closed_loop(&eng, "tiny", 8, clients, 2);
+        let warm = eng.workspace_counters();
+        let out = closed_loop(&eng, "tiny", 8, clients, per_client);
+        let steady = eng.workspace_counters();
+        assert_eq!(steady.bytes_allocated, warm.bytes_allocated,
+                   "instrument={instrument}: steady-state serving \
+                    allocated fresh slabs");
+        if instrument {
+            assert!(eng.observability().flight.pushed() > 0,
+                    "armed run must record span events");
+        }
+        out
+    };
+
+    println!("\n== observability overhead: instrument off vs on (stage \
+              spans + flight recorder, DESIGN.md §12) ==\n");
+    let mut t = Table::new(&["config", "img/s", "p50", "p95",
+                             "mean batch"]);
+    let off = run(false);
+    let on = run(true);
+    for (label, r) in [("instrument = false", off),
+                       ("instrument = true (default)", on)] {
+        t.row(&[
+            label.into(),
+            format!("{:.2}", r.0),
+            fmt_dur(std::time::Duration::from_micros(r.1)),
+            fmt_dur(std::time::Duration::from_micros(r.2)),
+            format!("{:.2}", r.3),
+        ]);
+    }
+    t.print();
+    let overhead = off.0 / on.0.max(1e-9) - 1.0;
+    println!("instrumentation throughput cost: {:+.1}% (armed hooks are \
+              one bool branch + atomics per stage)", 100.0 * overhead);
+    // lenient: span stamping is tens of ns against a forward pass of
+    // hundreds of µs — double-digit overhead means a hot-path regression
+    assert!(overhead < 0.10,
+            "observability overhead {:.1}% exceeds the 10% budget",
+            100.0 * overhead);
+}
+
 /// Replay-driven regression entry: record one bursty native serve run,
 /// then re-drive the identical workload twice in fast mode against fresh
 /// engines. Divergence aborts the bench — a perf number from an engine
@@ -440,6 +503,7 @@ fn main() {
 
     workspace_reuse_phase(quick);
     plan_prepack_phase(quick);
+    instrumentation_overhead_phase(quick);
     replay_regression(quick);
     seg_replay_regression(quick);
 

@@ -5,7 +5,13 @@
 //! huge2 bench --layer dcgan_dc3       # one layer, both engines
 //! huge2 plan --net segnet             # compiled plan: engines, threads,
 //!                                     # prepacked bytes, ws high-water
+//! huge2 plan --net dcgan --profile    # + observed per-layer costs
+//!                                     # (--profile-runs N, --profile-out f)
 //! huge2 serve --model dcgan --rate 2 --requests 20
+//! huge2 serve --native --stats-every 1 --profile-layers
+//!                                     # periodic [stats] lines + per-layer
+//!                                     # profile at shutdown
+//! huge2 serve --native --dump-metrics # Prometheus-style exposition
 //! huge2 serve --native --record t.jsonl
 //! huge2 serve --task segment --record t.jsonl   # seg-net serving
 //! huge2 segment --net segnet          # one-shot: timing table + mask

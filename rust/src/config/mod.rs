@@ -221,6 +221,14 @@ pub struct EngineConfig {
     pub artifact_dir: String,
     /// Batch-size buckets compiled ahead of time (must match aot.py).
     pub batch_buckets: Vec<usize>,
+    /// Arm the observability layer (stage-span histograms + flight
+    /// recorder, DESIGN.md §12). On by default — the hot-path cost is a
+    /// few `Instant` reads and lock-free counter increments per request
+    /// (the serving bench's instrumentation-overhead phase pins it).
+    pub instrument: bool,
+    /// Flight-recorder ring capacity (recent span events retained for
+    /// the panic-path dump).
+    pub flight_capacity: usize,
 }
 
 impl Default for EngineConfig {
@@ -232,6 +240,8 @@ impl Default for EngineConfig {
             workers: 2,
             artifact_dir: "artifacts".to_string(),
             batch_buckets: vec![1, 4, 8],
+            instrument: true,
+            flight_capacity: 1024,
         }
     }
 }
@@ -246,6 +256,8 @@ impl EngineConfig {
     /// workers = 2
     /// artifact_dir = "artifacts"
     /// batch_buckets = [1, 4, 8]
+    /// instrument = true
+    /// flight_capacity = 1024
     /// ```
     pub fn from_toml(text: &str) -> Result<Self, String> {
         let map = parse_toml(text)?;
@@ -266,6 +278,10 @@ impl EngineConfig {
                 ("batch_buckets", TomlValue::IntList(xs)) => {
                     cfg.batch_buckets =
                         xs.iter().map(|&x| x as usize).collect()
+                }
+                ("instrument", TomlValue::Bool(b)) => cfg.instrument = *b,
+                ("flight_capacity", TomlValue::Int(i)) => {
+                    cfg.flight_capacity = *i as usize
                 }
                 (other, _) => {
                     return Err(format!("unknown or mistyped key: {other}"))

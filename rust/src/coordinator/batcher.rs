@@ -27,17 +27,28 @@ use super::queue::BoundedQueue;
 /// paying a *second* window inside the batcher. Items already in the
 /// queue are always admitted without waiting (an expired deadline only
 /// stops the batcher from *sleeping* for stragglers).
+///
+/// `on_pop` fires once per item, at the instant the item leaves the
+/// queue — the coordinator uses it to stamp `SpanStamps::popped` and
+/// record the flight-recorder `popped` event while the pop time is
+/// exact (stamping after the batch closes would fold batch-formation
+/// wait into queue wait).
 /// Returns `None` when the queue is closed and drained.
 pub fn next_batch<T>(q: &BoundedQueue<T>, max_batch: usize,
                      timeout: Duration,
-                     arrival: impl Fn(&T) -> Instant) -> Option<Vec<T>> {
+                     arrival: impl Fn(&T) -> Instant,
+                     mut on_pop: impl FnMut(&mut T)) -> Option<Vec<T>> {
     debug_assert!(max_batch > 0);
-    let first = q.pop()?;
+    let mut first = q.pop()?;
+    on_pop(&mut first);
     let deadline = arrival(&first) + timeout;
     let mut batch = vec![first];
     while batch.len() < max_batch {
         match q.pop_until(deadline) {
-            Ok(Some(item)) => batch.push(item),
+            Ok(Some(mut item)) => {
+                on_pop(&mut item);
+                batch.push(item);
+            }
             Ok(None) => break,          // window expired
             Err(()) => break,           // closed; ship what we have
         }
@@ -87,9 +98,11 @@ mod tests {
         for i in 0..10 {
             q.try_push(i).unwrap();
         }
-        let b = next_batch(&q, 4, Duration::from_millis(5), now).unwrap();
+        let b = next_batch(&q, 4, Duration::from_millis(5), now, |_| {})
+            .unwrap();
         assert_eq!(b, vec![0, 1, 2, 3]);
-        let b = next_batch(&q, 4, Duration::from_millis(5), now).unwrap();
+        let b = next_batch(&q, 4, Duration::from_millis(5), now, |_| {})
+            .unwrap();
         assert_eq!(b, vec![4, 5, 6, 7]);
     }
 
@@ -98,7 +111,8 @@ mod tests {
         let q = BoundedQueue::new(64);
         q.try_push(1).unwrap();
         let t0 = Instant::now();
-        let b = next_batch(&q, 8, Duration::from_millis(20), now).unwrap();
+        let b = next_batch(&q, 8, Duration::from_millis(20), now, |_| {})
+            .unwrap();
         assert_eq!(b, vec![1]);
         assert!(t0.elapsed() >= Duration::from_millis(19));
     }
@@ -112,7 +126,8 @@ mod tests {
             std::thread::sleep(Duration::from_millis(5));
             q2.try_push(2).unwrap();
         });
-        let b = next_batch(&q, 8, Duration::from_millis(50), now).unwrap();
+        let b = next_batch(&q, 8, Duration::from_millis(50), now, |_| {})
+            .unwrap();
         t.join().unwrap();
         assert_eq!(b, vec![1, 2]);
     }
@@ -128,7 +143,7 @@ mod tests {
         q.try_push((long_ago, 1)).unwrap();
         let t0 = Instant::now();
         let b = next_batch(&q, 8, Duration::from_millis(100),
-                           |it: &(Instant, u32)| it.0).unwrap();
+                           |it: &(Instant, u32)| it.0, |_| {}).unwrap();
         assert_eq!(b.len(), 1);
         // pop-time anchoring would sleep the full 100ms here
         assert!(t0.elapsed() < Duration::from_millis(50),
@@ -146,7 +161,7 @@ mod tests {
             q.try_push((long_ago, i)).unwrap();
         }
         let b = next_batch(&q, 4, Duration::from_millis(100),
-                           |it: &(Instant, u32)| it.0).unwrap();
+                           |it: &(Instant, u32)| it.0, |_| {}).unwrap();
         assert_eq!(b.iter().map(|it| it.1).collect::<Vec<_>>(),
                    vec![0, 1, 2, 3]);
     }
@@ -155,7 +170,7 @@ mod tests {
     fn closed_queue_returns_none() {
         let q: BoundedQueue<i32> = BoundedQueue::new(4);
         q.close();
-        assert!(next_batch(&q, 4, Duration::from_millis(1), now)
+        assert!(next_batch(&q, 4, Duration::from_millis(1), now, |_| {})
             .is_none());
     }
 
@@ -168,7 +183,8 @@ mod tests {
             std::thread::sleep(Duration::from_millis(5));
             q2.close();
         });
-        let b = next_batch(&q, 8, Duration::from_secs(5), now).unwrap();
+        let b = next_batch(&q, 8, Duration::from_secs(5), now, |_| {})
+            .unwrap();
         assert_eq!(b, vec![7]);
     }
 

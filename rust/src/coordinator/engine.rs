@@ -8,7 +8,11 @@ use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 use crate::config::EngineConfig;
+use crate::metrics::flight::{FlightRecorder, Stage, SUBMIT_LANE};
+use crate::metrics::registry::{MetricsRegistry, MetricsSnapshot};
+use crate::metrics::span::{SpanStamps, StageMetrics};
 use crate::metrics::{Counters, Histogram};
+use crate::plan::ExecPlan;
 use crate::replay::event::EventBody;
 use crate::replay::recorder::TraceSink;
 use crate::workspace::{Workspace, WorkspaceCounters};
@@ -22,6 +26,38 @@ struct ModelRuntime {
     model: Arc<Model>,
     queue: Arc<BoundedQueue<Request>>,
     workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// The engine's observability bundle (DESIGN.md §12): the per-stage
+/// latency histogram grid and the flight recorder, behind one armed
+/// flag. Built once per engine from `EngineConfig::instrument` and
+/// shared with every worker by `Arc`; when disarmed, every hot-path
+/// hook is a single branch on a plain `bool` — the same
+/// null-check cost model as the trace sink.
+pub struct Observability {
+    /// Per-stage latency histograms keyed by `(task, outcome)`.
+    pub stages: StageMetrics,
+    /// Lock-free ring of recent span events, dumped on worker panic.
+    pub flight: FlightRecorder,
+    enabled: bool,
+}
+
+impl Observability {
+    /// Build the bundle and register its stage series in `reg`.
+    pub fn new(reg: &MetricsRegistry, flight_capacity: usize,
+               enabled: bool) -> Arc<Self> {
+        Arc::new(Observability {
+            stages: StageMetrics::new(reg),
+            flight: FlightRecorder::new(flight_capacity),
+            enabled,
+        })
+    }
+
+    /// Whether instrumentation is armed (fixed at engine construction).
+    #[inline]
+    pub fn on(&self) -> bool {
+        self.enabled
+    }
 }
 
 /// The HUGE² edge serving engine (multi-task: image generation and
@@ -66,19 +102,136 @@ pub struct Engine {
     /// over it, so steady-state batch execution is allocation-free
     /// (DESIGN.md §9). [`Engine::workspace_counters`] exposes the proof.
     workspace: Arc<Workspace>,
+    /// Metric catalogue: every engine series (outcome counters, stage
+    /// histograms, workspace/flight counters, per-model queue gauges),
+    /// snapshot-able and Prometheus-exposable (DESIGN.md §12).
+    registry: Arc<MetricsRegistry>,
+    /// Stage spans + flight recorder, shared with every worker.
+    obs: Arc<Observability>,
 }
 
 impl Engine {
     pub fn new(cfg: EngineConfig) -> Self {
+        let counters = Arc::new(Counters::new());
+        let exec_hist = Arc::new(Histogram::new());
+        let workspace = Arc::new(Workspace::new());
+        let registry = Arc::new(MetricsRegistry::new());
+        let obs = Observability::new(&registry, cfg.flight_capacity,
+                                     cfg.instrument);
+        Self::register_engine_metrics(&registry, &counters, &exec_hist,
+                                      &workspace, &obs);
         Engine {
             cfg,
             models: HashMap::new(),
             next_id: AtomicU64::new(0),
-            counters: Arc::new(Counters::new()),
-            exec_hist: Arc::new(Histogram::new()),
+            counters,
+            exec_hist,
             sink: None,
-            workspace: Arc::new(Workspace::new()),
+            workspace,
+            registry,
+            obs,
         }
+    }
+
+    /// Adapt the pre-existing atomics (outcome counters, workspace
+    /// counters, flight totals, the batch-execution histogram) into
+    /// registry series — closures over shared `Arc`s, no restructuring.
+    fn register_engine_metrics(reg: &MetricsRegistry,
+                               counters: &Arc<Counters>,
+                               exec_hist: &Arc<Histogram>,
+                               workspace: &Arc<Workspace>,
+                               obs: &Arc<Observability>) {
+        use std::sync::atomic::Ordering::Relaxed;
+        let c = counters.clone();
+        reg.counter_fn("huge2_submitted_total",
+                       move || c.submitted.load(Relaxed));
+        let c = counters.clone();
+        reg.counter_fn("huge2_completed_total",
+                       move || c.completed.load(Relaxed));
+        let c = counters.clone();
+        reg.counter_fn("huge2_rejected_total",
+                       move || c.rejected.load(Relaxed));
+        let c = counters.clone();
+        reg.counter_fn("huge2_failed_total",
+                       move || c.failed.load(Relaxed));
+        let c = counters.clone();
+        reg.counter_fn("huge2_dropped_total",
+                       move || c.dropped.load(Relaxed));
+        let c = counters.clone();
+        reg.counter_fn("huge2_worker_panics_total",
+                       move || c.panics.load(Relaxed));
+        let c = counters.clone();
+        reg.counter_fn("huge2_batches_total",
+                       move || c.batches.load(Relaxed));
+        let c = counters.clone();
+        reg.counter_fn("huge2_batched_requests_total",
+                       move || c.batched_requests.load(Relaxed));
+        let c = counters.clone();
+        reg.gauge_fn("huge2_in_flight", move || c.in_flight());
+        reg.register_histogram("huge2_batch_exec_us", exec_hist.clone());
+        let ws = workspace.clone();
+        reg.counter_fn("huge2_workspace_bytes_allocated",
+                       move || ws.counters().bytes_allocated);
+        let ws = workspace.clone();
+        reg.counter_fn("huge2_workspace_checkouts_total",
+                       move || ws.counters().checkouts);
+        let ws = workspace.clone();
+        reg.counter_fn("huge2_workspace_pool_hits_total",
+                       move || ws.counters().pool_hits);
+        let ws = workspace.clone();
+        reg.counter_fn("huge2_workspace_pool_misses_total",
+                       move || ws.counters().pool_misses);
+        let o = obs.clone();
+        reg.counter_fn("huge2_flight_events_total",
+                       move || o.flight.pushed());
+        let o = obs.clone();
+        reg.counter_fn("huge2_flight_overwrites_total",
+                       move || o.flight.overwrites());
+    }
+
+    /// The engine's metric catalogue (shared handle; see
+    /// [`MetricsRegistry`]).
+    pub fn registry(&self) -> Arc<MetricsRegistry> {
+        self.registry.clone()
+    }
+
+    /// Atomic point-in-time snapshot of every registered series.
+    /// Successive snapshots support windowed rates via
+    /// [`MetricsSnapshot::delta`].
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        self.registry.snapshot()
+    }
+
+    /// Prometheus-style text exposition of the current snapshot — the
+    /// scrape surface.
+    pub fn metrics_text(&self) -> String {
+        self.registry.snapshot().to_prometheus()
+    }
+
+    /// The stage-span + flight-recorder bundle (DESIGN.md §12).
+    pub fn observability(&self) -> &Arc<Observability> {
+        &self.obs
+    }
+
+    /// Arm per-layer plan profiling for a registered native model
+    /// (DESIGN.md §12): every subsequent `run_into` records per-op wall
+    /// time, engine, threads and workspace bytes into the plan's
+    /// [`crate::plan::PlanProfile`]. Returns `false` for unknown models
+    /// and PJRT backends (no compiled plan to profile).
+    pub fn enable_layer_profiling(&self, model: &str) -> bool {
+        match self.models.get(model).and_then(|mr| mr.model.plan()) {
+            Some(p) => {
+                p.profile().set_enabled(true);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// A registered native model's compiled plan (`None` for unknown
+    /// models and PJRT backends) — profile and report access.
+    pub fn model_plan(&self, model: &str) -> Option<&ExecPlan> {
+        self.models.get(model).and_then(|mr| mr.model.plan())
     }
 
     /// Snapshot of the shared workspace's allocation counters. After the
@@ -134,10 +287,15 @@ impl Engine {
         let name = model.name.clone();
         let model = Arc::new(model);
         let queue = Arc::new(BoundedQueue::new(self.cfg.queue_depth));
+        let q = queue.clone();
+        self.registry.gauge_fn(
+            &format!("huge2_queue_depth{{model=\"{name}\"}}"),
+            move || q.len() as i64);
         let workers = spawn_workers(
             model.clone(), queue.clone(), self.cfg.clone(),
             self.counters.clone(), self.exec_hist.clone(),
-            self.sink.clone(), self.workspace.clone(), self.cfg.workers);
+            self.sink.clone(), self.workspace.clone(), self.obs.clone(),
+            self.cfg.workers);
         self.models
             .insert(name, ModelRuntime { model, queue, workers });
         Ok(())
@@ -167,6 +325,10 @@ impl Engine {
                                          ServeError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        let stamps = SpanStamps::now();
+        if self.obs.on() {
+            self.obs.flight.record(id, Stage::Submitted, SUBMIT_LANE);
+        }
         if let Some(s) = &self.sink {
             // The workload's non-deterministic input: latents captured
             // bit-exactly, images as (shape, seed, checksum) — trace v2.
@@ -198,11 +360,14 @@ impl Engine {
         }
         let (tx, rx) = mpsc::channel();
         let req = Request { id, payload, enqueued: Instant::now(),
-                            reply: tx };
+                            stamps, reply: tx };
         // Enqueue is recorded under the queue lock: the trace can never
         // show a worker's BatchFormed/Response for an id before its
         // Enqueue, and `depth` is exact.
         let push = mr.queue.try_push_then(req, |depth| {
+            if self.obs.on() {
+                self.obs.flight.record(id, Stage::Enqueued, SUBMIT_LANE);
+            }
             if let Some(s) = &self.sink {
                 s.record(EventBody::Enqueue { id, depth });
             }
@@ -222,6 +387,9 @@ impl Engine {
     /// (when recording), and pass the typed error through unchanged.
     fn reject(&self, id: u64, err: ServeError) -> ServeError {
         self.counters.rejected.fetch_add(1, Ordering::Relaxed);
+        if self.obs.on() {
+            self.obs.flight.record(id, Stage::Rejected, SUBMIT_LANE);
+        }
         if let Some(s) = &self.sink {
             s.record(EventBody::Reject { id, reason: err.to_string() });
         }
@@ -487,5 +655,82 @@ mod tests {
         for w in evs.windows(2) {
             assert!(w[0].t_us <= w[1].t_us, "monotone timestamps");
         }
+    }
+
+    #[test]
+    fn metrics_surface_exposes_stage_series_and_gauges() {
+        let e = native_engine(1, 16);
+        let mut rng = Rng::new(9);
+        for _ in 0..3 {
+            let z: Vec<f32> = (0..8).map(|_| rng.next_normal()).collect();
+            e.generate("tiny", z, vec![]).unwrap();
+        }
+        let snap = e.metrics_snapshot();
+        assert_eq!(snap.counters["huge2_submitted_total"], 3);
+        assert_eq!(snap.counters["huge2_completed_total"], 3);
+        assert_eq!(snap.gauges["huge2_in_flight"], 0, "drained");
+        assert_eq!(snap.gauges["huge2_queue_depth{model=\"tiny\"}"], 0);
+        // every stage saw every completed request exactly once
+        for stage in crate::metrics::span::STAGES {
+            let m = snap
+                .merged_histogram(&format!("huge2_stage_{stage}_us"));
+            assert_eq!(m.count(), 3, "stage {stage}");
+        }
+        let text = e.metrics_text();
+        assert!(text.contains("huge2_submitted_total 3"), "{text}");
+        assert!(text.contains("huge2_queue_depth{model=\"tiny\"}"),
+                "{text}");
+        assert!(text.contains("huge2_batch_exec_us{quantile=\"0.5\"}"),
+                "{text}");
+        // flight recorder holds the full 8-stage chain per request
+        assert_eq!(e.observability().flight.pushed(), 3 * 8);
+        // windowed delta: one more request shows up alone
+        let z: Vec<f32> = (0..8).map(|_| rng.next_normal()).collect();
+        e.generate("tiny", z, vec![]).unwrap();
+        let d = e.metrics_snapshot().delta(&snap);
+        assert_eq!(d.counters["huge2_completed_total"], 1);
+        assert_eq!(
+            d.merged_histogram("huge2_stage_forward_us").count(), 1);
+    }
+
+    #[test]
+    fn disabled_instrumentation_records_nothing() {
+        let cfg = EngineConfig {
+            workers: 1,
+            queue_depth: 16,
+            max_batch: 4,
+            batch_timeout_us: 500,
+            instrument: false,
+            ..EngineConfig::default()
+        };
+        let mut e = Engine::new(cfg);
+        let gen = Generator::tiny_cgan(5);
+        e.register_native(super::super::router::Model::native(
+            "tiny", Arc::new(gen), 0)).unwrap();
+        let mut rng = Rng::new(11);
+        let z: Vec<f32> = (0..8).map(|_| rng.next_normal()).collect();
+        e.generate("tiny", z, vec![]).unwrap();
+        assert!(!e.observability().on());
+        assert_eq!(e.observability().flight.pushed(), 0);
+        let snap = e.metrics_snapshot();
+        assert_eq!(
+            snap.merged_histogram("huge2_stage_forward_us").count(), 0);
+        // plain outcome counters still work — only spans are gated
+        assert_eq!(snap.counters["huge2_completed_total"], 1);
+    }
+
+    #[test]
+    fn layer_profiling_arms_through_the_engine() {
+        let e = native_engine(1, 16);
+        assert!(!e.enable_layer_profiling("missing"));
+        assert!(e.enable_layer_profiling("tiny"));
+        let mut rng = Rng::new(12);
+        let z: Vec<f32> = (0..8).map(|_| rng.next_normal()).collect();
+        e.generate("tiny", z, vec![]).unwrap();
+        let plan = e.model_plan("tiny").unwrap();
+        assert_eq!(plan.profile().runs(), 1);
+        let report = plan.profile_report();
+        assert!(report.starts_with("# huge2 plan profile v1 digest="),
+                "{report}");
     }
 }

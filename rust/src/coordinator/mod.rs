@@ -36,7 +36,7 @@ pub mod queue;
 pub mod router;
 pub mod worker;
 
-pub use engine::Engine;
+pub use engine::{Engine, Observability};
 pub use error::{ServeError, ServeResult};
 pub use queue::{BoundedQueue, PushError};
 pub use router::{Backend, Model, Payload, Request, Response, Task};

@@ -19,6 +19,7 @@ use std::time::Instant;
 use super::error::{ServeError, ServeResult};
 
 use crate::gan::Generator;
+use crate::metrics::span::SpanStamps;
 use crate::plan::ExecPlan;
 use crate::replay::event::ArrivalPayload;
 use crate::rng::Rng;
@@ -41,6 +42,15 @@ impl Task {
         match self {
             Task::Generate => "generate",
             Task::Segment => "segment",
+        }
+    }
+
+    /// Index into the stage-metrics `task` label axis
+    /// ([`crate::metrics::span::TASKS`]).
+    pub fn index(&self) -> usize {
+        match self {
+            Task::Generate => 0,
+            Task::Segment => 1,
         }
     }
 }
@@ -135,6 +145,9 @@ pub struct Request {
     pub id: u64,
     pub payload: Payload,
     pub enqueued: Instant,
+    /// Lifecycle stamps for stage-span latency attribution
+    /// (DESIGN.md §12). `Copy`, carried in-line — no allocation.
+    pub stamps: SpanStamps,
     pub reply: mpsc::Sender<ServeResult>,
 }
 

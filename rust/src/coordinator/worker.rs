@@ -17,13 +17,55 @@ use anyhow::{anyhow, Result};
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::metrics::flight::Stage;
+use crate::metrics::span::{
+    SpanOutcome, STAGE_BATCH_FORM, STAGE_FORWARD, STAGE_GATHER,
+    STAGE_QUEUE_WAIT, STAGE_REPLY,
+};
 use crate::replay::event::EventBody;
 use crate::replay::recorder::TraceSink;
 use crate::tensor::Tensor;
 use crate::workspace::{Workspace, WsHandle};
 
+use super::engine::Observability;
 use super::error::ServeError;
 use super::router::{Backend, Model, Payload, Request, Response};
+
+/// Per-worker observability context (DESIGN.md §12): the engine's
+/// shared [`Observability`] bundle plus this worker's fixed coordinates.
+/// Built once per worker thread — only when instrumentation is armed —
+/// and borrowed per batch, so the disarmed hot path pays a single
+/// `Option` null check (the trace-sink cost model).
+pub struct ObsCtx<'a> {
+    pub obs: &'a Observability,
+    /// `Task::index()` of the model this worker serves (stage-histogram
+    /// label axis).
+    pub task: usize,
+    /// Worker lane recorded in flight-recorder events.
+    pub worker: u32,
+}
+
+/// Wall-clock span of the fused forward pass inside [`run_forward`]
+/// (the plan/backend call only — batch gather stays in the `gather`
+/// stage). `enter` keeps the *first* start and `exit` the *last* end,
+/// so a bucket-split recursion folds into one contiguous span.
+#[derive(Default)]
+struct FwdSpan {
+    start: Option<Instant>,
+    end: Option<Instant>,
+}
+
+impl FwdSpan {
+    fn enter(&mut self) {
+        if self.start.is_none() {
+            self.start = Some(Instant::now());
+        }
+    }
+
+    fn exit(&mut self) {
+        self.end = Some(Instant::now());
+    }
+}
 
 /// What happened to one executed batch — the worker's counter feed and
 /// telemetry record.
@@ -63,6 +105,11 @@ pub struct BatchOutcome {
 /// the error kind (trace format v3) — *before* the send, so the trace
 /// is complete even if the client races the recorder to shutdown.
 ///
+/// With an `obs` context, every request's `gather`/`forward`/`reply`
+/// stage latencies land in the per-`(task, outcome)` histograms and its
+/// `gather_start`/`forward_*`/terminal events in the flight recorder
+/// (DESIGN.md §12).
+///
 /// `batch` is drained as outcomes are delivered: requests still in the
 /// vector after a panic unwinds through this function have received no
 /// outcome yet, which is exactly what the worker's supervision layer
@@ -77,11 +124,18 @@ pub struct BatchOutcome {
 /// bookkeeping (a few `Vec`s of `n` elements).
 pub fn execute_batch(model: &Model, batch: &mut Vec<Request>,
                      sink: Option<&TraceSink>, hnd: &mut WsHandle,
+                     obs: Option<&ObsCtx>,
                      before_reply: impl FnOnce(&BatchOutcome))
                      -> BatchOutcome {
     if model.take_injected_panic() {
         panic!("injected worker panic (Model::inject_panic_next_batch \
                 test hook)");
+    }
+    let t_gather = Instant::now();
+    if let Some(o) = obs {
+        for r in batch.iter() {
+            o.obs.flight.record(r.id, Stage::GatherStart, o.worker);
+        }
     }
     // 1. Per-row gather validation: one malformed payload must fail one
     //    request, not the whole batch.
@@ -99,8 +153,28 @@ pub fn execute_batch(model: &Model, batch: &mut Vec<Request>,
     } else {
         model.bucket_for(good.len())
     };
-    let fwd: Option<Result<Tensor>> =
-        (!good.is_empty()).then(|| run_forward(model, &good, bucket, hnd));
+    let mut fwd_span = FwdSpan::default();
+    let fwd: Option<Result<Tensor>> = (!good.is_empty()).then(|| {
+        if let Some(o) = obs {
+            for r in &good {
+                o.obs.flight.record(r.id, Stage::ForwardStart, o.worker);
+            }
+        }
+        let res =
+            run_forward(model, &good, bucket, hnd, Some(&mut fwd_span));
+        if let Some(o) = obs {
+            for r in &good {
+                o.obs.flight.record(r.id, Stage::ForwardEnd, o.worker);
+            }
+        }
+        res
+    });
+    // Stage boundaries: `forward` is the span inside the plan/backend
+    // call; batch-close → forward-start is `gather` (validation + row
+    // copies). With no runnable row both collapse to zero-width here.
+    let now = Instant::now();
+    let fwd_start = fwd_span.start.unwrap_or(now);
+    let fwd_end = fwd_span.end.unwrap_or(fwd_start);
 
     // 3. Assemble every request's outcome *before* counters and sends:
     //    a panic anywhere up to here leaves `batch` untouched for the
@@ -146,6 +220,10 @@ pub fn execute_batch(model: &Model, batch: &mut Vec<Request>,
     let n = results.len();
     for (req, res) in batch.drain(..).zip(results) {
         let latency = req.enqueued.elapsed();
+        let id = req.id;
+        let enq = req.enqueued;
+        let stamps = req.stamps;
+        let ok = res.is_ok();
         let delivered = match res {
             Ok(output) => {
                 if let Some(s) = sink {
@@ -171,6 +249,29 @@ pub fn execute_batch(model: &Model, batch: &mut Vec<Request>,
         };
         if !delivered {
             outcome.dropped += 1;
+        }
+        // Stage accounting, after the send so `reply` covers delivery.
+        if let Some(o) = obs {
+            let sent = Instant::now();
+            let (outc, stage) = if ok {
+                (SpanOutcome::Completed, Stage::Completed)
+            } else {
+                (SpanOutcome::Failed, Stage::Failed)
+            };
+            o.obs.flight.record(id, stage, o.worker);
+            let popped = stamps.popped.unwrap_or(enq);
+            let batched = stamps.batched.unwrap_or(popped);
+            let st = &o.obs.stages;
+            st.record(o.task, outc, STAGE_QUEUE_WAIT,
+                      popped.saturating_duration_since(enq));
+            st.record(o.task, outc, STAGE_BATCH_FORM,
+                      batched.saturating_duration_since(popped));
+            st.record(o.task, outc, STAGE_GATHER,
+                      fwd_start.saturating_duration_since(t_gather));
+            st.record(o.task, outc, STAGE_FORWARD,
+                      fwd_end.saturating_duration_since(fwd_start));
+            st.record(o.task, outc, STAGE_REPLY,
+                      sent.saturating_duration_since(fwd_end));
         }
     }
     outcome
@@ -262,8 +363,12 @@ fn gather_latents(model: &Model, batch: &[&Request], bucket: usize)
 }
 
 /// One fused forward pass at `bucket` batch size over validated rows.
+/// `span`, when present, brackets exactly the backend/plan execution —
+/// the `forward` stage boundary (gathers and bucket-split stitching
+/// stay outside it).
 fn run_forward(model: &Model, batch: &[&Request], bucket: usize,
-               hnd: &mut WsHandle) -> Result<Tensor> {
+               hnd: &mut WsHandle, mut span: Option<&mut FwdSpan>)
+               -> Result<Tensor> {
     let n = batch.len();
     debug_assert!(bucket >= n || matches!(model.backend,
                                           Backend::Pjrt(_)));
@@ -271,7 +376,8 @@ fn run_forward(model: &Model, batch: &[&Request], bucket: usize,
     if bucket < n {
         let mut parts: Vec<Tensor> = Vec::new();
         for chunk in batch.chunks(bucket) {
-            parts.push(run_forward(model, chunk, bucket, hnd)?);
+            parts.push(run_forward(model, chunk, bucket, hnd,
+                                   span.as_deref_mut())?);
         }
         // concatenate along batch dim
         let (_, h, w, c) = parts[0].dims4();
@@ -293,7 +399,13 @@ fn run_forward(model: &Model, batch: &[&Request], bucket: usize,
                 inputs.push(c);
             }
             // weights are bound resident in the runtime service
+            if let Some(s) = span.as_deref_mut() {
+                s.enter();
+            }
             let outs = rt.run_bound(&name, inputs, &model.name)?;
+            if let Some(s) = span {
+                s.exit();
+            }
             outs.into_iter()
                 .next()
                 .ok_or_else(|| anyhow!("{name}: no output"))
@@ -325,7 +437,13 @@ fn run_forward(model: &Model, batch: &[&Request], bucket: usize,
                 }
             }
             let mut out = Tensor::zeros(&plan.out_shape(n));
+            if let Some(s) = span.as_deref_mut() {
+                s.enter();
+            }
             plan.run_into(&xb, n, out.data_mut(), hnd);
+            if let Some(s) = span {
+                s.exit();
+            }
             hnd.checkin(xb);
             Ok(out)
         }
@@ -369,25 +487,50 @@ pub fn spawn_workers(
     hist: Arc<crate::metrics::Histogram>,
     sink: Option<Arc<TraceSink>>,
     workspace: Arc<Workspace>,
+    obs: Arc<Observability>,
     count: usize,
 ) -> Vec<std::thread::JoinHandle<()>> {
     (0..count)
-        .map(|_| {
+        .map(|widx| {
             let model = model.clone();
             let queue = queue.clone();
             let counters = counters.clone();
             let hist = hist.clone();
             let sink = sink.clone();
             let workspace = workspace.clone();
+            let obs = obs.clone();
             let timeout =
                 std::time::Duration::from_micros(cfg.batch_timeout_us);
             let max_batch = cfg.max_batch;
             std::thread::spawn(move || {
                 use std::sync::atomic::Ordering::Relaxed;
                 let mut hnd = workspace.handle();
+                let obs_on = obs.on();
+                let task = model.task.index();
+                let worker = widx as u32;
+                let octx =
+                    obs_on.then(|| ObsCtx { obs: &obs, task, worker });
                 while let Some(mut batch) = super::batcher::next_batch(
-                    &queue, max_batch, timeout, |r: &Request| r.enqueued)
+                    &queue, max_batch, timeout,
+                    |r: &Request| r.enqueued,
+                    |r: &mut Request| {
+                        if obs_on {
+                            r.stamps.popped = Some(Instant::now());
+                            obs.flight.record(r.id, Stage::Popped,
+                                              worker);
+                        }
+                    })
                 {
+                    if obs_on {
+                        // one clock read per batch close, shared by all
+                        // members (the batch closes at a single instant)
+                        let closed = Instant::now();
+                        for r in batch.iter_mut() {
+                            r.stamps.batched = Some(closed);
+                            obs.flight.record(r.id, Stage::Batched,
+                                              worker);
+                        }
+                    }
                     // id collection only when recording — a plain run
                     // pays just the null-checks (recorder.rs cost model)
                     let ids: Option<Vec<u64>> = sink.as_ref().map(|_| {
@@ -406,7 +549,7 @@ pub fn spawn_workers(
                         std::panic::AssertUnwindSafe(|| {
                             execute_batch(&model, &mut batch,
                                           sink.as_deref(), &mut hnd,
-                                          |o| {
+                                          octx.as_ref(), |o| {
                                 counted.set(true);
                                 let n = (o.completed + o.failed) as u64;
                                 counters.batches.fetch_add(1, Relaxed);
@@ -461,12 +604,41 @@ pub fn spawn_workers(
                             let err = ServeError::BatchFailed(
                                 format!("worker panicked: {msg}"));
                             for req in batch.drain(..) {
+                                let id = req.id;
+                                let enq = req.enqueued;
+                                let stamps = req.stamps;
                                 if !fail_request(req, err.clone(),
                                                  sink.as_deref())
                                 {
                                     counters.dropped.fetch_add(1,
                                                                Relaxed);
                                 }
+                                if let Some(o) = &octx {
+                                    o.obs.flight.record(
+                                        id, Stage::Failed, o.worker);
+                                    let popped =
+                                        stamps.popped.unwrap_or(enq);
+                                    let st = &o.obs.stages;
+                                    st.record(
+                                        o.task, SpanOutcome::Failed,
+                                        STAGE_QUEUE_WAIT,
+                                        popped.saturating_duration_since(
+                                            enq));
+                                    st.record(
+                                        o.task, SpanOutcome::Failed,
+                                        STAGE_BATCH_FORM,
+                                        stamps
+                                            .batched
+                                            .unwrap_or(popped)
+                                            .saturating_duration_since(
+                                                popped));
+                                }
+                            }
+                            if obs_on {
+                                // the correlating excerpt: recent span
+                                // events around the failing request ids
+                                eprint!("[worker:{}] {}", model.name,
+                                        obs.flight.excerpt(32));
                             }
                         }
                     }

@@ -191,6 +191,49 @@
 //! `huge2 replay t.jsonl --timing fast` (exits non-zero on divergence,
 //! naming the first mismatching event).
 //!
+//! ## Observability quickstart (stage spans, profiler, snapshots)
+//!
+//! The engine instruments itself (DESIGN.md §12): every request is
+//! stamped at its lifecycle boundaries and the spans land in per-stage
+//! latency histograms keyed by `(task, outcome)` — so `queue_wait`,
+//! `batch_form`, `gather`, `forward` and `reply` are separately
+//! quantile-able, and completed requests never pollute failed-request
+//! tails. A lock-free **flight recorder** keeps the last N span events
+//! and is dumped by worker supervision on panic, correlating events by
+//! request id. All series live in one [`metrics::MetricsRegistry`]:
+//! atomic snapshots, windowed deltas between snapshots, and a
+//! Prometheus-style text exposition. Armed by default
+//! (`EngineConfig::instrument`); when off, every hook is one branch on
+//! a `bool`.
+//!
+//! ```no_run
+//! use huge2::config::EngineConfig;
+//! use huge2::coordinator::{Engine, Model};
+//! use huge2::gan::Generator;
+//! # use std::sync::Arc;
+//! let mut eng = Engine::new(EngineConfig::default());
+//! eng.register_native(Model::native(
+//!     "dcgan", Arc::new(Generator::dcgan(7)), 0))?;
+//! eng.enable_layer_profiling("dcgan");      // per-PlanOp wall time
+//! let before = eng.metrics_snapshot();
+//! eng.generate("dcgan", vec![0.0; 100], vec![])?;
+//! let delta = eng.metrics_snapshot().delta(&before);
+//! let fwd = delta.merged_histogram("huge2_stage_forward_us");
+//! println!("forward p95 {}µs over {} request(s)",
+//!          fwd.quantile_us(0.95), fwd.count());
+//! print!("{}", eng.metrics_text());         // scrape surface
+//! // per-layer observed costs, keyed by the engine-selection digest:
+//! print!("{}", eng.model_plan("dcgan").unwrap().profile_report());
+//! // recent span events, correlated by request id:
+//! print!("{}", eng.observability().flight.excerpt(16));
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! CLI: `huge2 serve --native --stats-every 1 --profile-layers` prints
+//! periodic `[stats]` lines and a per-layer profile table at shutdown;
+//! `huge2 plan --net dcgan --profile` profiles a plan offline;
+//! `--dump-metrics` prints the full exposition.
+//!
 //! ## Workspace quickstart (zero-allocation hot path)
 //!
 //! Every hot-path entry point has a pooled twin — `sgemm_with(ws, …)`

@@ -2,7 +2,7 @@
 
 use anyhow::{anyhow, bail, Result};
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use huge2::bench_util::{fmt_dur, measure_budget, Table};
@@ -53,10 +53,48 @@ fn run(argv: &[String]) -> Result<()> {
     }
 }
 
+/// Per-layer observed-cost table from an armed
+/// [`huge2::plan::PlanProfile`] (DESIGN.md §12): one row per plan step
+/// with run count, EWMA/mean/max wall time and peak workspace bytes.
+/// Returns the sum of per-op mean times so callers can cross-check it
+/// against the forward-stage span histogram.
+fn print_profile_table(plan: &huge2::plan::ExecPlan) -> f64 {
+    let prof = plan.profile();
+    let mut t = Table::new(&["step", "op", "engine", "runs", "ewma",
+                             "mean", "max", "ws peak"]);
+    let mut sum_mean_us = 0.0f64;
+    for (i, st) in plan.steps().iter().enumerate() {
+        let p = prof.step(i);
+        sum_mean_us += p.mean_us;
+        t.row(&[
+            st.name.clone(),
+            st.op.kind().into(),
+            st.engine.map(|e| e.name().to_string())
+                .unwrap_or_else(|| "-".into()),
+            p.count.to_string(),
+            format!("{:.1}µs", p.ewma_us),
+            format!("{:.1}µs", p.mean_us),
+            format!("{}µs", p.max_us),
+            if p.ws_bytes > 0 {
+                format!("{:.1}KB", p.ws_bytes as f64 / 1024.0)
+            } else {
+                "-".into()
+            },
+        ]);
+    }
+    t.print();
+    println!("per-op mean total: {sum_mean_us:.1}µs/run \
+              ({} profiled run(s))", prof.runs());
+    sum_mean_us
+}
+
 /// `huge2 plan --net <name>`: print the compiled execution plan — the
 /// per-layer table of resolved engine, threads, prepacked bytes and
 /// intermediate shape, plus the plan's workspace high-water mark and
-/// engine-selection digest (DESIGN.md §10).
+/// engine-selection digest (DESIGN.md §10). With `--profile`, also run
+/// the plan `--profile-runs` times through a pooled workspace and print
+/// the observed per-layer cost table (optionally persisting the
+/// digest-keyed report to `--profile-out`).
 fn plan_cmd(args: &Args) -> Result<()> {
     use huge2::plan::{ExecPlan, PlanOp};
 
@@ -121,6 +159,26 @@ fn plan_cmd(args: &Args) -> Result<()> {
              plan.high_water_elems(batch) as f64 * 4.0 / 1024.0);
     println!("engine-selection digest: {:016x} (recorded in trace \
               headers; replay re-checks it)", plan.engine_digest());
+
+    if args.has("profile") {
+        let runs = args.get_usize("profile-runs", 8)?.max(1);
+        plan.profile().set_enabled(true);
+        let ws = huge2::workspace::Workspace::new();
+        let mut hnd = ws.handle();
+        let x = Tensor::randn(&[batch, plan.in_elems()],
+                              &mut Rng::new(seed ^ 0x9e37_79b9));
+        for _ in 0..runs {
+            std::hint::black_box(plan.run(&x, &mut hnd));
+        }
+        println!("\nobserved per-layer costs ({runs} run(s), \
+                  batch {batch}):");
+        print_profile_table(&plan);
+        if let Some(path) = path_flag(args, "profile-out")? {
+            std::fs::write(path, plan.profile_report())?;
+            println!("profile report ({} steps, digest-keyed) written \
+                      to {path}", plan.steps().len());
+        }
+    }
     Ok(())
 }
 
@@ -248,6 +306,88 @@ fn load_workload(args: &Args, rate: f64, n: usize) -> Result<Vec<Arrival>> {
     Ok(arrivals)
 }
 
+/// Periodic one-line stats reporter (`serve --stats-every <secs>`): a
+/// thread snapshots the engine's metric registry every tick and prints
+/// the windowed delta — throughput, outcome counts, in-flight depth and
+/// stage p50s — without ever touching the serving hot path.
+struct StatsReporter {
+    tx: mpsc::Sender<()>,
+    join: std::thread::JoinHandle<()>,
+}
+
+impl StatsReporter {
+    fn stop(self) {
+        let _ = self.tx.send(());
+        let _ = self.join.join();
+    }
+}
+
+fn spawn_stats(eng: &Engine, every: Duration) -> StatsReporter {
+    let reg = eng.registry();
+    let (tx, rx) = mpsc::channel::<()>();
+    let join = std::thread::spawn(move || {
+        let mut prev = reg.snapshot();
+        let mut t_prev = Instant::now();
+        loop {
+            match rx.recv_timeout(every) {
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    return;
+                }
+            }
+            let cur = reg.snapshot();
+            let dt = t_prev.elapsed().as_secs_f64().max(1e-9);
+            t_prev = Instant::now();
+            let d = cur.delta(&prev);
+            let n = |k: &str| d.counters.get(k).copied().unwrap_or(0);
+            let queue = d.merged_histogram("huge2_stage_queue_wait_us");
+            let fwd = d.merged_histogram("huge2_stage_forward_us");
+            println!(
+                "[stats] {:6.1} req/s | completed={} rejected={} \
+                 failed={} dropped={} | in_flight={} | p50 queue={} \
+                 forward={}",
+                n("huge2_completed_total") as f64 / dt,
+                n("huge2_completed_total"),
+                n("huge2_rejected_total"),
+                n("huge2_failed_total"),
+                n("huge2_dropped_total"),
+                cur.gauges.get("huge2_in_flight").copied().unwrap_or(0),
+                fmt_dur(Duration::from_micros(queue.quantile_us(0.5))),
+                fmt_dur(Duration::from_micros(fwd.quantile_us(0.5))));
+            prev = cur;
+        }
+    });
+    StatsReporter { tx, join }
+}
+
+/// Observability options for a serve run (`--stats-every <secs>`,
+/// `--profile-layers`, `--dump-metrics`), armed right after model
+/// registration and settled by [`finish_serve`].
+struct ServeObs {
+    reporter: Option<StatsReporter>,
+    profiled: Option<String>,
+    dump_metrics: bool,
+}
+
+impl ServeObs {
+    fn arm(args: &Args, eng: &Engine, model: &str) -> Result<Self> {
+        let profiled = if args.has("profile-layers") {
+            if !eng.enable_layer_profiling(model) {
+                bail!("--profile-layers: model {model:?} has no \
+                       compiled plan to profile (PJRT backend?)");
+            }
+            Some(model.to_string())
+        } else {
+            None
+        };
+        let every = args.get_f64("stats-every", 0.0)?;
+        let reporter = (every > 0.0)
+            .then(|| spawn_stats(eng, Duration::from_secs_f64(every)));
+        Ok(ServeObs { reporter, profiled,
+                      dump_metrics: args.has("dump-metrics") })
+    }
+}
+
 /// Drain outcomes (responses *and* typed failures — every accepted
 /// request terminates in exactly one), print throughput/latency/batching
 /// plus the outcome-conservation counters, shut down, and — when
@@ -257,7 +397,8 @@ fn finish_serve(eng: Engine,
                 pending: Vec<std::sync::mpsc::Receiver<
                     huge2::coordinator::ServeResult>>,
                 t0: Instant, record: Option<(&str, Arc<TraceSink>,
-                                             TraceHeader)>) -> Result<()> {
+                                             TraceHeader)>,
+                obs: ServeObs) -> Result<()> {
     let mut lat = Vec::new();
     let mut failed = 0usize;
     for rx in pending {
@@ -272,6 +413,9 @@ fn finish_serve(eng: Engine,
         }
     }
     let wall = t0.elapsed();
+    if let Some(r) = obs.reporter {
+        r.stop();
+    }
     lat.sort_unstable();
     {
         use std::sync::atomic::Ordering::Relaxed;
@@ -281,6 +425,40 @@ fn finish_serve(eng: Engine,
                  c.submitted.load(Relaxed), c.completed.load(Relaxed),
                  c.rejected.load(Relaxed), c.failed.load(Relaxed),
                  c.dropped.load(Relaxed), c.panics.load(Relaxed));
+    }
+    if eng.observability().on() {
+        let snap = eng.metrics_snapshot();
+        println!("stage latency (all tasks, all outcomes):");
+        for stage in huge2::metrics::span::STAGES {
+            let m = snap
+                .merged_histogram(&format!("huge2_stage_{stage}_us"));
+            if m.count() == 0 {
+                continue;
+            }
+            println!("  {stage:<10} p50={} p95={} p99={} max={} (n={})",
+                     fmt_dur(Duration::from_micros(m.quantile_us(0.5))),
+                     fmt_dur(Duration::from_micros(m.quantile_us(0.95))),
+                     fmt_dur(Duration::from_micros(m.quantile_us(0.99))),
+                     fmt_dur(Duration::from_micros(m.max_us())),
+                     m.count());
+        }
+    }
+    if let Some(name) = &obs.profiled {
+        if let Some(plan) = eng.model_plan(name) {
+            println!("per-layer profile ({name}):");
+            let sum_us = print_profile_table(plan);
+            let fwd = eng.metrics_snapshot()
+                .merged_histogram("huge2_stage_forward_us");
+            if fwd.count() > 0 {
+                println!("cross-check: per-op means sum {sum_us:.1}µs \
+                          vs forward-stage mean {:.1}µs per request",
+                         fwd.mean_us());
+            }
+        }
+    }
+    if obs.dump_metrics {
+        println!("# metrics exposition (huge2 serve --dump-metrics)");
+        print!("{}", eng.metrics_text());
     }
     if lat.is_empty() {
         bail!("no successful responses ({failed} request(s) failed)");
@@ -348,6 +526,7 @@ fn serve_generate(args: &Args) -> Result<()> {
                   (JAX/Pallas HUGE2 kernels)");
     }
 
+    let sobs = ServeObs::arm(args, &eng, &model)?;
     let arrivals = load_workload(args, rate, n)?;
     let t0 = Instant::now();
     let mut rng = Rng::new(1);
@@ -380,7 +559,7 @@ fn serve_generate(args: &Args) -> Result<()> {
             engine_digest,
         })
     });
-    finish_serve(eng, pending, t0, record)
+    finish_serve(eng, pending, t0, record, sobs)
 }
 
 /// Resolve a `--net` / trace-header seg-net name against the registry.
@@ -418,6 +597,7 @@ fn serve_segment(args: &Args) -> Result<()> {
     println!("serving {model} natively (HUGE2 untangled dilated convs, \
               input {in_shape:?}, {n_classes} classes)");
 
+    let sobs = ServeObs::arm(args, &eng, &model)?;
     let arrivals = load_workload(args, rate, n)?;
     let t0 = Instant::now();
     let mut pending = Vec::new();
@@ -451,7 +631,7 @@ fn serve_segment(args: &Args) -> Result<()> {
             engine_digest,
         })
     });
-    finish_serve(eng, pending, t0, record)
+    finish_serve(eng, pending, t0, record, sobs)
 }
 
 /// Re-drive a recorded trace through a freshly built engine and verify

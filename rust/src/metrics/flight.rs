@@ -1,0 +1,359 @@
+//! Flight recorder: a fixed-size, lock-free ring of recent span events
+//! (request id, stage, timestamp, worker lane), dumped by the worker
+//! supervision path on a caught panic and on demand (DESIGN.md §12).
+//!
+//! Semantics:
+//!
+//! * **Writers never block and never allocate.** A push is one global
+//!   ticket `fetch_add` plus three slot stores — O(1), wait-free for
+//!   the counter, per-slot seqlock for the payload.
+//! * **Counts are exact.** `pushed()` comes from the ticket counter
+//!   alone, so `overwrites() == pushed().saturating_sub(capacity)`
+//!   holds *exactly* even under arbitrary concurrent wrap — the
+//!   overwrite-accounting property `tests/fault_stack.rs` soaks.
+//! * **Reads are best-effort while writers are active.** A snapshot
+//!   validates each slot's sequence word before and after reading the
+//!   payload and skips slots that are mid-write or already lapped; a
+//!   *quiescent* dump (panic path after `catch_unwind`, drained engine)
+//!   is complete and ordered oldest → newest.
+//!
+//! Each slot is a miniature seqlock built from plain atomics (no
+//! `UnsafeCell`, no `unsafe`): a writer claims ticket `t`, stamps the
+//! slot's `seq` to the odd value `2t+1`, stores the payload words, then
+//! publishes `seq = 2t+2`. A reader requires the even value for the
+//! ticket it expects, reads the payload, and re-checks `seq`.
+
+use std::sync::atomic::Ordering::{Acquire, Relaxed, Release};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Worker lane recorded for events that happen before a worker owns the
+/// request (submit-side stages: `Submitted`, `Enqueued`, `Rejected`).
+pub const SUBMIT_LANE: u32 = 0xFF;
+
+/// Request lifecycle stages, in order. The stage chain of a terminal
+/// outcome is monotone: a completed request passes through every stage
+/// `Submitted → … → Completed`; a rejected one stops at `Rejected`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Stage {
+    /// `Engine::submit` accepted the call and assigned an id.
+    Submitted = 0,
+    /// The request entered its model's bounded queue.
+    Enqueued = 1,
+    /// Refused at submit time (validation, backpressure, shutdown) —
+    /// terminal.
+    Rejected = 2,
+    /// A worker popped the request off the queue.
+    Popped = 3,
+    /// The batch containing the request closed (batching window ended).
+    Batched = 4,
+    /// Gather/validation of the batch's payloads began.
+    GatherStart = 5,
+    /// The plan/backend forward pass began.
+    ForwardStart = 6,
+    /// The forward pass produced outputs.
+    ForwardEnd = 7,
+    /// A `Response` was sent through the reply channel — terminal.
+    Completed = 8,
+    /// A typed `ServeError` was sent through the reply channel —
+    /// terminal.
+    Failed = 9,
+}
+
+impl Stage {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Submitted => "submitted",
+            Stage::Enqueued => "enqueued",
+            Stage::Rejected => "rejected",
+            Stage::Popped => "popped",
+            Stage::Batched => "batched",
+            Stage::GatherStart => "gather_start",
+            Stage::ForwardStart => "forward_start",
+            Stage::ForwardEnd => "forward_end",
+            Stage::Completed => "completed",
+            Stage::Failed => "failed",
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<Stage> {
+        Some(match v {
+            0 => Stage::Submitted,
+            1 => Stage::Enqueued,
+            2 => Stage::Rejected,
+            3 => Stage::Popped,
+            4 => Stage::Batched,
+            5 => Stage::GatherStart,
+            6 => Stage::ForwardStart,
+            7 => Stage::ForwardEnd,
+            8 => Stage::Completed,
+            9 => Stage::Failed,
+            _ => return None,
+        })
+    }
+
+    /// Terminal stages end a request's chain: exactly one of these per
+    /// accepted request (the outcome-conservation invariant, §11).
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, Stage::Rejected | Stage::Completed | Stage::Failed)
+    }
+}
+
+/// A decoded ring entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlightEvent {
+    /// Global push ordinal (0-based); total order across all writers.
+    pub ticket: u64,
+    /// Request id the event belongs to.
+    pub id: u64,
+    pub stage: Stage,
+    /// µs since recorder creation (48-bit, clamped).
+    pub t_us: u64,
+    /// Worker index, or [`SUBMIT_LANE`] for submit-side events.
+    pub worker: u32,
+}
+
+/// One ring slot: a seqlock word plus two payload words, all plain
+/// atomics. `seq == 0` means never written; `2t+1` means ticket `t` is
+/// mid-write; `2t+2` means ticket `t` is published.
+#[derive(Debug)]
+struct Slot {
+    seq: AtomicU64,
+    id: AtomicU64,
+    /// `t_us << 16 | worker << 8 | stage` (t_us clamped to 48 bits).
+    packed: AtomicU64,
+}
+
+/// The ring. See module docs for the write/read protocol.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    t0: Instant,
+    slots: Vec<Slot>,
+    next: AtomicU64,
+}
+
+const T_US_MAX: u64 = (1u64 << 48) - 1; // ~8.9 years of µs
+
+impl FlightRecorder {
+    /// A ring of `capacity` slots (floored at 1).
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        let mut slots = Vec::with_capacity(capacity);
+        slots.resize_with(capacity, || Slot {
+            seq: AtomicU64::new(0),
+            id: AtomicU64::new(0),
+            packed: AtomicU64::new(0),
+        });
+        FlightRecorder { t0: Instant::now(), slots, next: AtomicU64::new(0) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Record one span event. Wait-free ticket claim, then a per-slot
+    /// seqlock write; no allocation, no lock.
+    pub fn record(&self, id: u64, stage: Stage, worker: u32) {
+        let t_us = u64::try_from(self.t0.elapsed().as_micros())
+            .unwrap_or(T_US_MAX)
+            .min(T_US_MAX);
+        let ticket = self.next.fetch_add(1, Relaxed);
+        let slot = &self.slots[(ticket % self.slots.len() as u64) as usize];
+        let packed =
+            (t_us << 16) | (u64::from(worker & 0xFF) << 8) | stage as u64;
+        slot.seq.store(2 * ticket + 1, Release);
+        slot.id.store(id, Relaxed);
+        slot.packed.store(packed, Relaxed);
+        slot.seq.store(2 * ticket + 2, Release);
+    }
+
+    /// Total events ever pushed (exact; from the ticket counter alone).
+    pub fn pushed(&self) -> u64 {
+        self.next.load(Ordering::Relaxed)
+    }
+
+    /// Events lost to ring wrap — exact by construction:
+    /// `pushed() - capacity` once the ring has wrapped, 0 before.
+    pub fn overwrites(&self) -> u64 {
+        self.pushed().saturating_sub(self.slots.len() as u64)
+    }
+
+    /// Attempt to read the slot that ticket `t` published. `None` if
+    /// the slot is mid-write, already lapped, or torn.
+    fn read_ticket(&self, t: u64) -> Option<FlightEvent> {
+        let slot = &self.slots[(t % self.slots.len() as u64) as usize];
+        let want = 2 * t + 2;
+        if slot.seq.load(Acquire) != want {
+            return None;
+        }
+        let id = slot.id.load(Relaxed);
+        let packed = slot.packed.load(Relaxed);
+        if slot.seq.load(Acquire) != want {
+            return None; // torn: a writer lapped us mid-read
+        }
+        Some(FlightEvent {
+            ticket: t,
+            id,
+            stage: Stage::from_u8((packed & 0xFF) as u8)?,
+            t_us: packed >> 16,
+            worker: ((packed >> 8) & 0xFF) as u32,
+        })
+    }
+
+    /// The surviving ring contents, oldest → newest by ticket. Skips
+    /// slots that are mid-write or got lapped during the scan (only
+    /// possible while writers are concurrently active); a quiescent
+    /// snapshot returns exactly `min(pushed, capacity)` events.
+    pub fn snapshot(&self) -> Vec<FlightEvent> {
+        let pushed = self.pushed();
+        let cap = self.slots.len() as u64;
+        let start = pushed.saturating_sub(cap);
+        (start..pushed).filter_map(|t| self.read_ticket(t)).collect()
+    }
+
+    /// All surviving events for one request id, oldest → newest — the
+    /// per-request stage chain, as far as the ring still holds it.
+    pub fn events_for(&self, id: u64) -> Vec<FlightEvent> {
+        let mut evs = self.snapshot();
+        evs.retain(|e| e.id == id);
+        evs
+    }
+
+    /// Human-readable dump of the most recent `limit` surviving events
+    /// (the panic-path excerpt). One line per event:
+    /// `#<ticket> +<t_us>µs req=<id> <stage> worker=<n|submit>`.
+    pub fn excerpt(&self, limit: usize) -> String {
+        use std::fmt::Write as _;
+        let evs = self.snapshot();
+        let skip = evs.len().saturating_sub(limit);
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "flight recorder: {} of {} event(s) retained \
+             ({} overwritten), last {}:",
+            evs.len(),
+            self.pushed(),
+            self.overwrites(),
+            evs.len() - skip
+        );
+        for e in &evs[skip..] {
+            let _ = write!(out, "  #{} +{}µs req={} {}", e.ticket, e.t_us,
+                           e.id, e.stage.name());
+            if e.worker == SUBMIT_LANE {
+                let _ = writeln!(out, " worker=submit");
+            } else {
+                let _ = writeln!(out, " worker={}", e.worker);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_round_trips_through_u8() {
+        for v in 0u8..=9 {
+            let s = Stage::from_u8(v).unwrap();
+            assert_eq!(s as u8, v);
+            assert!(!s.name().is_empty());
+        }
+        assert_eq!(Stage::from_u8(10), None);
+        assert!(Stage::Completed.is_terminal());
+        assert!(Stage::Failed.is_terminal());
+        assert!(Stage::Rejected.is_terminal());
+        assert!(!Stage::ForwardEnd.is_terminal());
+    }
+
+    #[test]
+    fn quiescent_snapshot_is_complete_and_ordered() {
+        let fr = FlightRecorder::new(8);
+        for i in 0..5u64 {
+            fr.record(i, Stage::Submitted, SUBMIT_LANE);
+        }
+        let evs = fr.snapshot();
+        assert_eq!(evs.len(), 5);
+        assert_eq!(fr.pushed(), 5);
+        assert_eq!(fr.overwrites(), 0);
+        for (i, e) in evs.iter().enumerate() {
+            assert_eq!(e.ticket, i as u64);
+            assert_eq!(e.id, i as u64);
+            assert_eq!(e.stage, Stage::Submitted);
+            assert_eq!(e.worker, SUBMIT_LANE);
+        }
+        for w in evs.windows(2) {
+            assert!(w[0].t_us <= w[1].t_us, "per-writer time is monotone");
+        }
+    }
+
+    #[test]
+    fn wrap_keeps_newest_and_counts_overwrites() {
+        let fr = FlightRecorder::new(4);
+        for i in 0..10u64 {
+            fr.record(i, Stage::Popped, 2);
+        }
+        assert_eq!(fr.pushed(), 10);
+        assert_eq!(fr.overwrites(), 6);
+        let evs = fr.snapshot();
+        assert_eq!(evs.len(), 4, "only the newest capacity events survive");
+        let ids: Vec<u64> = evs.iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![6, 7, 8, 9]);
+        assert!(evs.iter().all(|e| e.worker == 2));
+    }
+
+    #[test]
+    fn events_for_filters_one_request() {
+        let fr = FlightRecorder::new(32);
+        fr.record(7, Stage::Submitted, SUBMIT_LANE);
+        fr.record(8, Stage::Submitted, SUBMIT_LANE);
+        fr.record(7, Stage::Enqueued, SUBMIT_LANE);
+        fr.record(7, Stage::Completed, 0);
+        let chain: Vec<Stage> =
+            fr.events_for(7).iter().map(|e| e.stage).collect();
+        assert_eq!(chain,
+                   vec![Stage::Submitted, Stage::Enqueued, Stage::Completed]);
+    }
+
+    #[test]
+    fn excerpt_names_requests_and_lanes() {
+        let fr = FlightRecorder::new(8);
+        fr.record(42, Stage::Submitted, SUBMIT_LANE);
+        fr.record(42, Stage::Failed, 1);
+        let text = fr.excerpt(10);
+        assert!(text.contains("req=42"), "{text}");
+        assert!(text.contains("submitted"), "{text}");
+        assert!(text.contains("failed"), "{text}");
+        assert!(text.contains("worker=submit"), "{text}");
+        assert!(text.contains("worker=1"), "{text}");
+    }
+
+    #[test]
+    fn concurrent_pushes_never_lose_counts() {
+        let fr = std::sync::Arc::new(FlightRecorder::new(16));
+        let threads = 4u64;
+        let per = 1000u64;
+        let mut joins = Vec::new();
+        for t in 0..threads {
+            let fr = fr.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    fr.record(t * per + i, Stage::Enqueued, t as u32);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(fr.pushed(), threads * per);
+        assert_eq!(fr.overwrites(), threads * per - 16);
+        // quiescent post-soak snapshot: full ring, ordered tickets
+        let evs = fr.snapshot();
+        assert_eq!(evs.len(), 16);
+        for w in evs.windows(2) {
+            assert!(w[0].ticket < w[1].ticket);
+        }
+    }
+}

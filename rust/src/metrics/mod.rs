@@ -1,5 +1,23 @@
 //! Engine metrics: log-bucketed latency histograms and throughput
 //! counters (hand-rolled; no external metrics crates in the vendor set).
+//!
+//! Submodules added by the observability layer (DESIGN.md §12):
+//!
+//! * [`span`] — request lifecycle stages and the per-(task, outcome)
+//!   stage histograms (`queue_wait`, `batch_form`, `gather`, `forward`,
+//!   `reply`);
+//! * [`flight`] — the lock-free flight recorder ring of recent span
+//!   events, dumped on worker panic;
+//! * [`registry`] — the [`registry::MetricsRegistry`] snapshot /
+//!   Prometheus-style exposition surface.
+
+pub mod flight;
+pub mod registry;
+pub mod span;
+
+pub use flight::{FlightEvent, FlightRecorder, Stage, SUBMIT_LANE};
+pub use registry::{MetricsRegistry, MetricsSnapshot};
+pub use span::{SpanOutcome, SpanStamps, StageMetrics};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -56,11 +74,62 @@ impl Histogram {
     }
 
     pub fn record(&self, d: Duration) {
-        let us = d.as_micros() as u64;
+        // `as_micros` is u128; saturate rather than silently truncate a
+        // pathological (> ~584 000 year) duration into a small value.
+        self.record_us(u64::try_from(d.as_micros()).unwrap_or(u64::MAX));
+    }
+
+    /// Record a pre-converted µs sample.
+    pub fn record_us(&self, us: u64) {
         self.buckets[Self::index(us)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum_us.fetch_add(us, Ordering::Relaxed);
         self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Add every sample of `other` into `self` (bucket-wise; `max`
+    /// folded, `sum`/`count` added). Used to merge per-label series
+    /// into one distribution for summary printing.
+    pub fn merge(&self, other: &HistogramSnapshot) {
+        for (b, &n) in self.buckets.iter().zip(&other.buckets) {
+            if n > 0 {
+                b.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count, Ordering::Relaxed);
+        self.sum_us.fetch_add(other.sum_us, Ordering::Relaxed);
+        self.max_us.fetch_max(other.max_us, Ordering::Relaxed);
+    }
+
+    /// Reset every bucket and counter to zero. Only meaningful while no
+    /// recorder is concurrently writing (a racing `record_us` may land
+    /// on either side of the clear).
+    pub fn clear(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_us.store(0, Ordering::Relaxed);
+        self.max_us.store(0, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of the distribution. The copy is internally
+    /// consistent: `count` is re-derived from the copied buckets, so a
+    /// `record_us` racing the snapshot can at worst be missed entirely,
+    /// never half-applied.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let buckets: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let count = buckets.iter().sum();
+        HistogramSnapshot {
+            buckets,
+            count,
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            max_us: self.max_us.load(Ordering::Relaxed),
+        }
     }
 
     pub fn count(&self) -> u64 {
@@ -108,6 +177,118 @@ impl Histogram {
             self.mean_us(),
             self.count()
         )
+    }
+}
+
+/// An owned, point-in-time copy of a [`Histogram`] (same buckets, plain
+/// `u64`s). Snapshots support the registry's delta-between-snapshots
+/// operation and offline quantile queries without touching the live
+/// atomics again.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+impl HistogramSnapshot {
+    /// An all-zero snapshot (identity for [`HistogramSnapshot::merge`]).
+    pub fn empty() -> Self {
+        HistogramSnapshot {
+            buckets: vec![0; MAJOR * MINOR],
+            count: 0,
+            sum_us: 0,
+            max_us: 0,
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    /// Quantile in µs (q ∈ [0,1]); bucket lower bound — same walk as
+    /// [`Histogram::quantile_us`].
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target =
+            ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= target {
+                return Histogram::bucket_floor(i);
+            }
+        }
+        self.max_us
+    }
+
+    /// "p50=…µs p95=…µs p99=…µs max=…µs mean=…µs (n=…)"
+    pub fn summary(&self) -> String {
+        format!(
+            "p50={}µs p95={}µs p99={}µs max={}µs mean={:.0}µs (n={})",
+            self.quantile_us(0.50),
+            self.quantile_us(0.95),
+            self.quantile_us(0.99),
+            self.max_us,
+            self.mean_us(),
+            self.count
+        )
+    }
+
+    /// Fold another snapshot into this one (bucket-wise add).
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (b, &n) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += n;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// The samples recorded *since* `earlier` (bucket-wise saturating
+    /// subtraction; `earlier` must be an older snapshot of the same
+    /// histogram). `max_us` is kept from `self` — the true
+    /// window-maximum is not recoverable from two cumulative maxima, so
+    /// the delta's max is an upper bound.
+    pub fn delta_since(&self, earlier: &HistogramSnapshot) -> Self {
+        let buckets: Vec<u64> = self
+            .buckets
+            .iter()
+            .zip(&earlier.buckets)
+            .map(|(&a, &b)| a.saturating_sub(b))
+            .collect();
+        let count = buckets.iter().sum();
+        HistogramSnapshot {
+            buckets,
+            count,
+            sum_us: self.sum_us.saturating_sub(earlier.sum_us),
+            max_us: self.max_us,
+        }
     }
 }
 
@@ -220,6 +401,83 @@ mod tests {
         let h = Histogram::new();
         assert_eq!(h.quantile_us(0.99), 0);
         assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn record_saturates_oversized_durations() {
+        let h = Histogram::new();
+        // > u64::MAX µs — must land in the top bucket, not wrap small
+        h.record(Duration::from_secs(u64::MAX));
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.max_us(), u64::MAX);
+        assert!(h.quantile_us(0.5) > 1u64 << 39,
+                "saturated sample must sit in the top buckets");
+    }
+
+    #[test]
+    fn snapshot_matches_live_histogram() {
+        let h = Histogram::new();
+        for us in [3u64, 40, 500, 6000] {
+            h.record_us(us);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), h.count());
+        assert_eq!(s.max_us(), h.max_us());
+        assert_eq!(s.mean_us(), h.mean_us());
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(s.quantile_us(q), h.quantile_us(q));
+        }
+        assert_eq!(s.summary(), h.summary());
+    }
+
+    #[test]
+    fn merge_folds_distributions() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for us in 1..=100u64 {
+            a.record_us(us);
+        }
+        for us in 901..=1000u64 {
+            b.record_us(us);
+        }
+        a.merge(&b.snapshot());
+        assert_eq!(a.count(), 200);
+        assert_eq!(a.max_us(), 1000);
+        let p50 = a.quantile_us(0.5);
+        assert!(p50 <= 100, "lower half must stay low, p50={p50}");
+        let p99 = a.quantile_us(0.99);
+        assert!(p99 >= 900, "upper tail must come from b, p99={p99}");
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let h = Histogram::new();
+        h.record_us(123);
+        h.clear();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.max_us(), 0);
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.snapshot(), HistogramSnapshot::empty());
+    }
+
+    #[test]
+    fn snapshot_delta_isolates_a_window() {
+        let h = Histogram::new();
+        h.record_us(10);
+        h.record_us(20);
+        let before = h.snapshot();
+        h.record_us(5000);
+        let after = h.snapshot();
+        let d = after.delta_since(&before);
+        assert_eq!(d.count(), 1);
+        assert_eq!(d.sum_us(), 5000);
+        assert!(d.quantile_us(0.5) >= 4096, "window holds only 5000µs");
+        // merging the window back re-creates the cumulative snapshot
+        let mut rebuilt = before.clone();
+        rebuilt.merge(&d);
+        assert_eq!(rebuilt.count(), after.count());
+        assert_eq!(rebuilt.sum_us(), after.sum_us());
     }
 
     #[test]

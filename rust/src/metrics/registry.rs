@@ -1,0 +1,367 @@
+//! Metrics registry: a named catalogue of counters, gauges and
+//! histograms with atomic point-in-time snapshots, snapshot deltas, and
+//! a Prometheus-style text exposition (DESIGN.md §12).
+//!
+//! Names are full series names *including* any label set, e.g.
+//! `huge2_stage_forward_us{task="generate",outcome="completed"}` —
+//! labels are part of the key, not a separate dimension, which keeps
+//! the registry a flat `BTreeMap` (and makes the exposition ordering
+//! deterministic: same-base-name series sort adjacent).
+//!
+//! Hand-rolled, zero dependencies: instruments are the crate's own
+//! atomics; "snapshot" means one pass loading every instrument while
+//! holding the catalogue lock — new registrations can't interleave, and
+//! each histogram copy is internally consistent
+//! ([`super::Histogram::snapshot`]).
+
+use super::{Histogram, HistogramSnapshot};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+
+/// One registered instrument.
+enum Instrument {
+    /// A shared monotonic counter.
+    Counter(Arc<AtomicU64>),
+    /// A counter read through a closure (adapts pre-existing atomics —
+    /// engine `Counters`, workspace counters — without restructuring
+    /// them).
+    CounterFn(Box<dyn Fn() -> u64 + Send + Sync>),
+    /// A point-in-time signed gauge read through a closure (queue
+    /// depth, in-flight).
+    GaugeFn(Box<dyn Fn() -> i64 + Send + Sync>),
+    /// A shared latency histogram.
+    Hist(Arc<Histogram>),
+}
+
+impl std::fmt::Debug for Instrument {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = match self {
+            Instrument::Counter(_) => "Counter",
+            Instrument::CounterFn(_) => "CounterFn",
+            Instrument::GaugeFn(_) => "GaugeFn",
+            Instrument::Hist(_) => "Hist",
+        };
+        f.write_str(kind)
+    }
+}
+
+/// The catalogue. Registration replaces any previous instrument under
+/// the same name (latest wins — re-registering a model's gauge after a
+/// re-register is not an error).
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    items: Mutex<BTreeMap<String, Instrument>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or fetch) a plain counter under `name`.
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        let mut g = self.items.lock().unwrap();
+        if let Some(Instrument::Counter(c)) = g.get(name) {
+            return c.clone();
+        }
+        let c = Arc::new(AtomicU64::new(0));
+        g.insert(name.to_string(), Instrument::Counter(c.clone()));
+        c
+    }
+
+    /// Register a counter backed by a closure over an existing atomic.
+    pub fn counter_fn(
+        &self,
+        name: &str,
+        f: impl Fn() -> u64 + Send + Sync + 'static,
+    ) {
+        self.items
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Instrument::CounterFn(Box::new(f)));
+    }
+
+    /// Register a gauge backed by a closure.
+    pub fn gauge_fn(
+        &self,
+        name: &str,
+        f: impl Fn() -> i64 + Send + Sync + 'static,
+    ) {
+        self.items
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Instrument::GaugeFn(Box::new(f)));
+    }
+
+    /// Register (or fetch) a histogram under `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut g = self.items.lock().unwrap();
+        if let Some(Instrument::Hist(h)) = g.get(name) {
+            return h.clone();
+        }
+        let h = Arc::new(Histogram::new());
+        g.insert(name.to_string(), Instrument::Hist(h.clone()));
+        h
+    }
+
+    /// Register an *existing* histogram (e.g. the engine's batch
+    /// execution histogram) under `name`.
+    pub fn register_histogram(&self, name: &str, h: Arc<Histogram>) {
+        self.items
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Instrument::Hist(h));
+    }
+
+    /// Atomically snapshot every instrument: the catalogue lock is held
+    /// for the whole pass, so the set of series is a consistent cut
+    /// (individual atomics are read `Relaxed`; each histogram copy is
+    /// internally consistent).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.items.lock().unwrap();
+        let mut counters = BTreeMap::new();
+        let mut gauges = BTreeMap::new();
+        let mut histograms = BTreeMap::new();
+        for (name, inst) in g.iter() {
+            match inst {
+                Instrument::Counter(c) => {
+                    counters.insert(name.clone(), c.load(Relaxed));
+                }
+                Instrument::CounterFn(f) => {
+                    counters.insert(name.clone(), f());
+                }
+                Instrument::GaugeFn(f) => {
+                    gauges.insert(name.clone(), f());
+                }
+                Instrument::Hist(h) => {
+                    histograms.insert(name.clone(), h.snapshot());
+                }
+            }
+        }
+        MetricsSnapshot { counters, gauges, histograms }
+    }
+}
+
+/// A point-in-time copy of every registered instrument.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, i64>,
+    pub histograms: BTreeMap<String, HistogramSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// What happened *between* `earlier` and `self`: counters subtract
+    /// (saturating), histograms subtract bucket-wise
+    /// ([`HistogramSnapshot::delta_since`]), gauges keep their current
+    /// value (a gauge has no meaningful delta). Series absent from
+    /// `earlier` count from zero.
+    pub fn delta(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+        let counters = self
+            .counters
+            .iter()
+            .map(|(k, &v)| {
+                let old = earlier.counters.get(k).copied().unwrap_or(0);
+                (k.clone(), v.saturating_sub(old))
+            })
+            .collect();
+        let histograms = self
+            .histograms
+            .iter()
+            .map(|(k, h)| {
+                let d = match earlier.histograms.get(k) {
+                    Some(old) => h.delta_since(old),
+                    None => h.clone(),
+                };
+                (k.clone(), d)
+            })
+            .collect();
+        MetricsSnapshot {
+            counters,
+            gauges: self.gauges.clone(),
+            histograms,
+        }
+    }
+
+    /// Sum of `counters` whose series name starts with `prefix`
+    /// (convenience for label-blind totals, e.g. all
+    /// `huge2_stage_forward_us` cells).
+    pub fn counter_sum(&self, prefix: &str) -> u64 {
+        self.counters
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(_, &v)| v)
+            .sum()
+    }
+
+    /// Merge every histogram series whose name starts with `prefix`
+    /// into one distribution.
+    pub fn merged_histogram(&self, prefix: &str) -> HistogramSnapshot {
+        let mut out = HistogramSnapshot::empty();
+        for (k, h) in &self.histograms {
+            if k.starts_with(prefix) {
+                out.merge(h);
+            }
+        }
+        out
+    }
+
+    /// Prometheus-style text exposition. Counters render as
+    /// `name value`; gauges likewise; histograms render as quantile
+    /// series (`{quantile="0.5"}` etc.) plus `_sum` and `_count`.
+    /// `# TYPE` comment lines appear once per base name (the part
+    /// before any `{`) — `BTreeMap` ordering keeps same-base series
+    /// adjacent, so one pass suffices.
+    pub fn to_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let mut last_base = String::new();
+        let mut type_line =
+            |out: &mut String, name: &str, kind: &str| {
+                let base = name.split('{').next().unwrap_or(name);
+                if base != last_base {
+                    let _ = writeln!(out, "# TYPE {base} {kind}");
+                    last_base = base.to_string();
+                }
+            };
+        for (name, v) in &self.counters {
+            type_line(&mut out, name, "counter");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        for (name, v) in &self.gauges {
+            type_line(&mut out, name, "gauge");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        for (name, h) in &self.histograms {
+            type_line(&mut out, name, "summary");
+            for q in ["0.5", "0.95", "0.99"] {
+                let series = inject_label(
+                    name,
+                    &format!("quantile=\"{q}\""),
+                );
+                let qv = h.quantile_us(match q {
+                    "0.5" => 0.5,
+                    "0.95" => 0.95,
+                    _ => 0.99,
+                });
+                let _ = writeln!(out, "{series} {qv}");
+            }
+            let _ = writeln!(out, "{} {}", suffix_name(name, "_sum"),
+                             h.sum_us());
+            let _ = writeln!(out, "{} {}", suffix_name(name, "_count"),
+                             h.count());
+        }
+        out
+    }
+}
+
+/// Insert `label` into `name`'s label set:
+/// `m{a="b"}` → `m{a="b",quantile="0.5"}`, `m` → `m{quantile="0.5"}`.
+fn inject_label(name: &str, label: &str) -> String {
+    match name.strip_suffix('}') {
+        Some(head) => format!("{head},{label}}}"),
+        None => format!("{name}{{{label}}}"),
+    }
+}
+
+/// Append `suffix` to the base name, preserving any label set:
+/// `m{a="b"}` → `m_sum{a="b"}`, `m` → `m_sum`.
+fn suffix_name(name: &str, suffix: &str) -> String {
+    match name.find('{') {
+        Some(i) => format!("{}{}{}", &name[..i], suffix, &name[i..]),
+        None => format!("{name}{suffix}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn counters_and_gauges_snapshot() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("huge2_test_total");
+        c.fetch_add(3, Relaxed);
+        let shared = Arc::new(AtomicU64::new(7));
+        let rd = shared.clone();
+        reg.counter_fn("huge2_adapted_total",
+                       move || rd.load(Relaxed));
+        reg.gauge_fn("huge2_depth", || -2);
+        let s = reg.snapshot();
+        assert_eq!(s.counters["huge2_test_total"], 3);
+        assert_eq!(s.counters["huge2_adapted_total"], 7);
+        assert_eq!(s.gauges["huge2_depth"], -2);
+        // the same counter name returns the same atomic
+        let c2 = reg.counter("huge2_test_total");
+        c2.fetch_add(1, Relaxed);
+        assert_eq!(c.load(Relaxed), 4);
+    }
+
+    #[test]
+    fn snapshot_delta_subtracts_counters_and_histograms() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("huge2_done_total");
+        let h = reg.histogram("huge2_lat_us");
+        c.fetch_add(5, Relaxed);
+        h.record(Duration::from_micros(50));
+        let a = reg.snapshot();
+        c.fetch_add(2, Relaxed);
+        h.record(Duration::from_micros(7000));
+        let b = reg.snapshot();
+        let d = b.delta(&a);
+        assert_eq!(d.counters["huge2_done_total"], 2);
+        assert_eq!(d.histograms["huge2_lat_us"].count(), 1);
+        assert!(d.histograms["huge2_lat_us"].quantile_us(0.5) >= 4096,
+                "the window holds only the 7000µs sample");
+    }
+
+    #[test]
+    fn merged_histogram_folds_label_series() {
+        let reg = MetricsRegistry::new();
+        reg.histogram("huge2_stage_reply_us{task=\"generate\"}")
+            .record_us(10);
+        reg.histogram("huge2_stage_reply_us{task=\"segment\"}")
+            .record_us(30);
+        reg.histogram("huge2_other_us").record_us(999);
+        let s = reg.snapshot();
+        let m = s.merged_histogram("huge2_stage_reply_us");
+        assert_eq!(m.count(), 2);
+        assert_eq!(m.max_us(), 30);
+    }
+
+    #[test]
+    fn prometheus_text_shape() {
+        let reg = MetricsRegistry::new();
+        reg.counter("huge2_req_total").fetch_add(9, Relaxed);
+        reg.gauge_fn("huge2_in_flight", || 1);
+        reg.histogram("huge2_lat_us{task=\"generate\"}")
+            .record_us(100);
+        reg.histogram("huge2_lat_us{task=\"segment\"}").record_us(200);
+        let text = reg.snapshot().to_prometheus();
+        assert!(text.contains("# TYPE huge2_req_total counter"), "{text}");
+        assert!(text.contains("huge2_req_total 9"), "{text}");
+        assert!(text.contains("# TYPE huge2_in_flight gauge"), "{text}");
+        assert!(text.contains(
+            "huge2_lat_us{task=\"generate\",quantile=\"0.5\"}"), "{text}");
+        assert!(text.contains("huge2_lat_us_sum{task=\"generate\"} 100"),
+                "{text}");
+        assert!(text.contains("huge2_lat_us_count{task=\"segment\"} 1"),
+                "{text}");
+        // TYPE line appears once per base name even with two label sets
+        let type_lines = text.matches("# TYPE huge2_lat_us summary")
+            .count();
+        assert_eq!(type_lines, 1, "{text}");
+    }
+
+    #[test]
+    fn label_injection_and_suffixing() {
+        assert_eq!(inject_label("m", "q=\"1\""), "m{q=\"1\"}");
+        assert_eq!(inject_label("m{a=\"b\"}", "q=\"1\""),
+                   "m{a=\"b\",q=\"1\"}");
+        assert_eq!(suffix_name("m", "_sum"), "m_sum");
+        assert_eq!(suffix_name("m{a=\"b\"}", "_count"),
+                   "m_count{a=\"b\"}");
+    }
+}

@@ -1,0 +1,196 @@
+//! Stage spans: per-request lifecycle stamps and the named per-stage
+//! latency histograms they aggregate into (DESIGN.md §12).
+//!
+//! A request's wall time decomposes into five consecutive stages:
+//!
+//! | stage        | from → to                                   |
+//! |--------------|---------------------------------------------|
+//! | `queue_wait` | enqueued → popped by a worker               |
+//! | `batch_form` | popped → batch closed                       |
+//! | `gather`     | batch closed → forward starts (validation + |
+//! |              | latent/image gather)                        |
+//! | `forward`    | forward start → forward end (plan/backend)  |
+//! | `reply`      | forward end → outcome sent                  |
+//!
+//! Each stage is a [`Histogram`] keyed by `(task, outcome)`, registered
+//! as `huge2_stage_<stage>_us{task="…",outcome="…"}` — so a failed
+//! segment request's queue wait is quantile-able separately from a
+//! completed generate request's.
+//!
+//! Cost model: stamps are `Copy` [`Instant`]s carried inside the
+//! request struct (no allocation); recording is one saturating
+//! subtraction plus a lock-free histogram increment per stage, only
+//! when instrumentation is enabled.
+
+use super::registry::MetricsRegistry;
+use super::{Histogram, HistogramSnapshot};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Stage names, chain order. Indexes match the `STAGE_*` constants.
+pub const STAGES: [&str; 5] =
+    ["queue_wait", "batch_form", "gather", "forward", "reply"];
+pub const STAGE_QUEUE_WAIT: usize = 0;
+pub const STAGE_BATCH_FORM: usize = 1;
+pub const STAGE_GATHER: usize = 2;
+pub const STAGE_FORWARD: usize = 3;
+pub const STAGE_REPLY: usize = 4;
+
+/// Task label values, indexed by `Task::index()`.
+pub const TASKS: [&str; 2] = ["generate", "segment"];
+
+/// Outcome label values, indexed by `SpanOutcome as usize`.
+pub const OUTCOMES: [&str; 2] = ["completed", "failed"];
+
+/// Terminal outcome of a *worker-delivered* request (submit-side
+/// rejects never reach the staged pipeline, so they are not a span
+/// outcome).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanOutcome {
+    Completed = 0,
+    Failed = 1,
+}
+
+/// Per-request lifecycle stamps, threaded through the coordinator
+/// inside the request itself. `Copy`, two optional `Instant`s — no
+/// heap, no atomics; the submit-side stamp is always present, the
+/// worker-side stamps are filled in as the request advances.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanStamps {
+    /// `Engine::submit` entry (the request's birth).
+    pub submitted: Instant,
+    /// A worker popped the request off the queue.
+    pub popped: Option<Instant>,
+    /// The batch containing the request closed.
+    pub batched: Option<Instant>,
+}
+
+impl SpanStamps {
+    pub fn now() -> Self {
+        SpanStamps { submitted: Instant::now(), popped: None, batched: None }
+    }
+}
+
+/// One stage's histograms across the `(task, outcome)` label grid.
+#[derive(Debug)]
+struct StageSet {
+    /// `[task][outcome]`, indexed by `Task::index()` / `SpanOutcome`.
+    cells: [[Arc<Histogram>; 2]; 2],
+}
+
+/// The five per-stage histogram grids, registered in a
+/// [`MetricsRegistry`] under `huge2_stage_<stage>_us{task,outcome}`.
+#[derive(Debug)]
+pub struct StageMetrics {
+    stages: [StageSet; 5],
+}
+
+impl StageMetrics {
+    /// Build the full stage × task × outcome grid and register every
+    /// series in `reg`.
+    pub fn new(reg: &MetricsRegistry) -> Self {
+        let stages = std::array::from_fn(|s| {
+            let cells = std::array::from_fn(|t| {
+                std::array::from_fn(|o| {
+                    reg.histogram(&format!(
+                        "huge2_stage_{}_us{{task=\"{}\",outcome=\"{}\"}}",
+                        STAGES[s], TASKS[t], OUTCOMES[o]
+                    ))
+                })
+            });
+            StageSet { cells }
+        });
+        StageMetrics { stages }
+    }
+
+    /// Record one stage sample for a `(task, outcome)` cell. `task` is
+    /// `Task::index()`; out-of-range indices are clamped (defensive —
+    /// the coordinator only passes 0/1).
+    #[inline]
+    pub fn record(
+        &self,
+        task: usize,
+        outcome: SpanOutcome,
+        stage: usize,
+        d: Duration,
+    ) {
+        self.stages[stage.min(4)].cells[task.min(1)][outcome as usize]
+            .record(d);
+    }
+
+    /// Direct access to one cell's histogram.
+    pub fn cell(
+        &self,
+        task: usize,
+        outcome: SpanOutcome,
+        stage: usize,
+    ) -> &Histogram {
+        &self.stages[stage.min(4)].cells[task.min(1)][outcome as usize]
+    }
+
+    /// One stage's distribution merged across every `(task, outcome)`
+    /// cell — the "where does time go overall" view the shutdown
+    /// summary prints.
+    pub fn merged(&self, stage: usize) -> HistogramSnapshot {
+        let mut out = HistogramSnapshot::empty();
+        for t in 0..2 {
+            for o in 0..2 {
+                out.merge(&self.stages[stage.min(4)].cells[t][o].snapshot());
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stamps_are_copy_and_start_unfilled() {
+        let s = SpanStamps::now();
+        let s2 = s; // Copy
+        assert!(s2.popped.is_none());
+        assert!(s2.batched.is_none());
+        assert!(s.submitted.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn record_lands_in_the_right_cell() {
+        let reg = MetricsRegistry::new();
+        let sm = StageMetrics::new(&reg);
+        sm.record(0, SpanOutcome::Completed, STAGE_FORWARD,
+                  Duration::from_micros(100));
+        sm.record(1, SpanOutcome::Failed, STAGE_FORWARD,
+                  Duration::from_micros(900));
+        assert_eq!(sm.cell(0, SpanOutcome::Completed, STAGE_FORWARD)
+                       .count(), 1);
+        assert_eq!(sm.cell(1, SpanOutcome::Failed, STAGE_FORWARD).count(),
+                   1);
+        assert_eq!(sm.cell(0, SpanOutcome::Failed, STAGE_FORWARD).count(),
+                   0);
+        let merged = sm.merged(STAGE_FORWARD);
+        assert_eq!(merged.count(), 2);
+        assert!(merged.max_us() >= 900);
+        assert_eq!(sm.merged(STAGE_REPLY).count(), 0);
+    }
+
+    #[test]
+    fn registry_sees_every_labeled_series() {
+        let reg = MetricsRegistry::new();
+        let _sm = StageMetrics::new(&reg);
+        let snap = reg.snapshot();
+        let text = snap.to_prometheus();
+        for stage in STAGES {
+            for task in TASKS {
+                for outcome in OUTCOMES {
+                    let needle = format!(
+                        "huge2_stage_{stage}_us{{task=\"{task}\",\
+                         outcome=\"{outcome}\""
+                    );
+                    assert!(text.contains(&needle), "missing {needle}");
+                }
+            }
+        }
+    }
+}

@@ -25,7 +25,10 @@
 //! so `Engine::Auto` replays deterministically even if the heuristic
 //! changes between builds.
 
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64};
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::deconv::dilated::DilatedTaps;
 use crate::deconv::huge2::Pattern;
@@ -271,6 +274,142 @@ pub struct PlanStep {
     pub prepacked_bytes: usize,
 }
 
+// ------------------------------------------------------------ profiler
+
+/// EWMA smoothing factor for per-step wall times (see
+/// [`StepProfile`]). 0.2 ≈ a ~5-sample horizon: reactive enough for
+/// the serving profile table, smooth enough to rank layers stably.
+const PROFILE_EWMA_ALPHA: f32 = 0.2;
+
+/// Lock-free accumulator for one plan step's observed cost. All fields
+/// are atomics so concurrent workers executing the same (cloned,
+/// profile-sharing) plan fold into one profile without coordination.
+#[derive(Debug)]
+struct StepProfile {
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+    /// EWMA of the step's wall µs, stored as `f32` bits (CAS loop —
+    /// last-writer-wins under contention, which is fine for telemetry).
+    ewma_us: AtomicU32,
+    /// Peak workspace class bytes checked out during one execution of
+    /// this step (through the executing handle; MT shard-internal
+    /// checkouts route through the shared pool and are not attributed).
+    ws_bytes: AtomicU64,
+}
+
+impl StepProfile {
+    fn new() -> Self {
+        StepProfile {
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+            ewma_us: AtomicU32::new(0f32.to_bits()),
+            ws_bytes: AtomicU64::new(0),
+        }
+    }
+
+    fn record(&self, us: u64, ws_bytes: u64) {
+        let n = self.count.fetch_add(1, Relaxed);
+        self.sum_us.fetch_add(us, Relaxed);
+        self.max_us.fetch_max(us, Relaxed);
+        self.ws_bytes.fetch_max(ws_bytes, Relaxed);
+        let sample = us as f32;
+        let mut cur = self.ewma_us.load(Relaxed);
+        loop {
+            let prev = f32::from_bits(cur);
+            let next = if n == 0 {
+                sample // first sample seeds the average
+            } else {
+                prev + PROFILE_EWMA_ALPHA * (sample - prev)
+            };
+            match self.ewma_us.compare_exchange_weak(
+                cur, next.to_bits(), Relaxed, Relaxed) {
+                Ok(_) => break,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+/// Point-in-time copy of one step's profile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepProfileSnapshot {
+    pub count: u64,
+    pub mean_us: f64,
+    pub ewma_us: f32,
+    pub max_us: u64,
+    /// Peak workspace class bytes one execution of the step checked
+    /// out through the executing handle.
+    pub ws_bytes: u64,
+}
+
+/// Per-plan, per-step observed-cost profile (DESIGN.md §12). Off by
+/// default; [`PlanProfile::set_enabled`] arms the `run_into` hooks.
+/// Shared by `Arc` across plan clones, so enabling profiling on a
+/// model's stored plan also profiles the serving workers executing
+/// clones of it.
+#[derive(Debug)]
+pub struct PlanProfile {
+    enabled: AtomicBool,
+    steps: Vec<StepProfile>,
+}
+
+impl PlanProfile {
+    fn new(n_steps: usize) -> Self {
+        let mut steps = Vec::with_capacity(n_steps);
+        steps.resize_with(n_steps, StepProfile::new);
+        PlanProfile { enabled: AtomicBool::new(false), steps }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Relaxed);
+    }
+
+    fn record(&self, step: usize, us: u64, ws_bytes: u64) {
+        self.steps[step].record(us, ws_bytes);
+    }
+
+    /// Snapshot of step `i`'s accumulated profile.
+    pub fn step(&self, i: usize) -> StepProfileSnapshot {
+        let s = &self.steps[i];
+        let count = s.count.load(Relaxed);
+        let sum = s.sum_us.load(Relaxed);
+        StepProfileSnapshot {
+            count,
+            mean_us: if count == 0 { 0.0 } else {
+                sum as f64 / count as f64
+            },
+            ewma_us: f32::from_bits(s.ewma_us.load(Relaxed)),
+            max_us: s.max_us.load(Relaxed),
+            ws_bytes: s.ws_bytes.load(Relaxed),
+        }
+    }
+
+    /// Samples recorded so far (any step — steps record in lockstep,
+    /// so step 0's count is the number of profiled plan executions).
+    pub fn runs(&self) -> u64 {
+        self.steps.first().map_or(0, |s| s.count.load(Relaxed))
+    }
+
+    /// Zero every step's accumulators (profiling stays armed/disarmed
+    /// as it was). Only meaningful while no worker is mid-run.
+    pub fn reset(&self) {
+        for s in &self.steps {
+            s.count.store(0, Relaxed);
+            s.sum_us.store(0, Relaxed);
+            s.max_us.store(0, Relaxed);
+            s.ewma_us.store(0f32.to_bits(), Relaxed);
+            s.ws_bytes.store(0, Relaxed);
+        }
+    }
+}
+
 /// A compiled forward plan: the unified executable form of a
 /// [`crate::gan::Generator`] or [`crate::seg::SegNet`] (plus, for
 /// serving, an output head). See the module docs and DESIGN.md §10.
@@ -287,6 +426,9 @@ pub struct ExecPlan {
     /// FNV-1a over every resolved (name, op, engine, threads, shape) —
     /// precomputed; recorded in replay trace headers.
     digest: u64,
+    /// Observed per-step costs, shared across plan clones (a model's
+    /// stored plan and the worker-side clones fold into one profile).
+    profile: Arc<PlanProfile>,
 }
 
 impl ExecPlan {
@@ -439,7 +581,8 @@ impl ExecPlan {
         assert!(steps.iter().any(|s| s.op.is_producer()),
                 "a plan needs at least one producing op");
         let digest = digest_steps(requested, in_elems, &steps);
-        ExecPlan { requested, steps, in_elems, digest }
+        let profile = Arc::new(PlanProfile::new(steps.len()));
+        ExecPlan { requested, steps, in_elems, digest, profile }
     }
 
     // ----------------------------------------------------- introspect
@@ -495,6 +638,52 @@ impl ExecPlan {
     /// heuristic changes (DESIGN.md §10).
     pub fn engine_digest(&self) -> u64 {
         self.digest
+    }
+
+    /// The plan's observed-cost profile (shared across clones; see
+    /// [`PlanProfile`]).
+    pub fn profile(&self) -> &PlanProfile {
+        &self.profile
+    }
+
+    /// Persisted form of the profile, keyed by the engine-selection
+    /// digest so a future autotuner can match observed costs back to
+    /// the exact selections that produced them (ROADMAP item 4). One
+    /// header line, then one whitespace-separated line per step:
+    ///
+    /// ```text
+    /// # huge2 plan profile v1 digest=<016x> steps=<n> in_elems=<n>
+    /// <idx> <name> <kind> <engine|-> <threads> <count> <ewma_us> \
+    ///     <mean_us> <max_us> <ws_bytes>
+    /// ```
+    pub fn profile_report(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "# huge2 plan profile v1 digest={:016x} steps={} in_elems={}",
+            self.digest,
+            self.steps.len(),
+            self.in_elems
+        );
+        for (i, st) in self.steps.iter().enumerate() {
+            let p = self.profile.step(i);
+            let _ = writeln!(
+                out,
+                "{} {} {} {} {} {} {:.1} {:.1} {} {}",
+                i,
+                st.name,
+                st.op.kind(),
+                st.engine.map(|e| e.name()).unwrap_or("-"),
+                st.threads,
+                p.count,
+                p.ewma_us,
+                p.mean_us,
+                p.max_us,
+                p.ws_bytes
+            );
+        }
+        out
     }
 
     /// Workspace high-water mark for batch `b`: the peak pooled
@@ -580,8 +769,13 @@ impl ExecPlan {
         }
         let mut cursor = Cursor::Input;
         let mut saved: Option<Cursor> = None;
+        // one branch per run when profiling is off; when on, each step
+        // pays one Instant read + one handle-local byte read per side
+        let profiling = self.profile.enabled();
 
         for (i, st) in self.steps.iter().enumerate() {
+            let prof_t0 = profiling
+                .then(|| (Instant::now(), hnd.checked_out_bytes()));
             // a finished pyramid group releases its saved input: any op
             // other than a later branch (or an in-place activation on
             // the accumulator) means the group is over
@@ -695,6 +889,12 @@ impl ExecPlan {
                         _ => {}
                     }
                 }
+            }
+            if let Some((t0, b0)) = prof_t0 {
+                let us = u64::try_from(t0.elapsed().as_micros())
+                    .unwrap_or(u64::MAX);
+                self.profile
+                    .record(i, us, hnd.checked_out_bytes() - b0);
             }
         }
         if let Some(Cursor::Buf(old)) = saved.take() {
@@ -890,6 +1090,79 @@ mod tests {
         let serve = net.plan().with_argmax_head(net.n_classes());
         assert_eq!(serve.out_shape(2), vec![2, 9, 9, 1]);
         assert_eq!(net.plan().out_shape(2), vec![2, 9, 9, 3]);
+    }
+
+    #[test]
+    fn profiler_records_only_when_enabled() {
+        let ws = Workspace::new();
+        let gen = Generator::tiny_cgan(5);
+        let plan = gen.plan();
+        let z = Tensor::randn(&[2, 8], &mut Rng::new(4));
+
+        // off by default: no samples
+        let baseline = plan.run(&z, &mut ws.handle());
+        assert_eq!(plan.profile().runs(), 0);
+
+        plan.profile().set_enabled(true);
+        for _ in 0..3 {
+            let got = plan.run(&z, &mut ws.handle());
+            assert_eq!(got.checksum(), baseline.checksum(),
+                       "profiling must not perturb outputs");
+        }
+        assert_eq!(plan.profile().runs(), 3);
+        for i in 0..plan.steps().len() {
+            let p = plan.profile().step(i);
+            assert_eq!(p.count, 3, "step {i} records once per run");
+            assert!(p.max_us >= p.ewma_us as u64 || p.max_us == 0);
+            assert!(p.mean_us >= 0.0);
+        }
+        // conv steps check out activation slabs; byte attribution > 0
+        let conv_idx = plan.steps().iter()
+            .position(|s| s.op.kind() == "transpose-conv")
+            .unwrap();
+        assert!(plan.profile().step(conv_idx).ws_bytes > 0,
+                "conv steps must attribute workspace bytes");
+
+        plan.profile().reset();
+        assert_eq!(plan.profile().runs(), 0);
+
+        // the profile is shared across clones
+        let clone = plan.clone();
+        clone.run(&z, &mut ws.handle());
+        assert_eq!(plan.profile().runs(), 1,
+                   "clones must fold into one profile");
+        plan.profile().set_enabled(false);
+    }
+
+    #[test]
+    fn profile_report_is_digest_keyed_and_complete() {
+        let ws = Workspace::new();
+        let gen = Generator::tiny_cgan(5);
+        let plan = ExecPlan::compile_gan(&gen.proj, &gen.layers,
+                                         Engine::Auto);
+        plan.profile().set_enabled(true);
+        let z = Tensor::randn(&[1, 8], &mut Rng::new(5));
+        plan.run(&z, &mut ws.handle());
+        let report = plan.profile_report();
+        let mut lines = report.lines();
+        let header = lines.next().unwrap();
+        assert!(header.starts_with("# huge2 plan profile v1 digest="),
+                "{header}");
+        assert!(header.contains(
+            &format!("digest={:016x}", plan.engine_digest())), "{header}");
+        assert!(header.contains(&format!("steps={}", plan.steps().len())));
+        let body: Vec<&str> = lines.collect();
+        assert_eq!(body.len(), plan.steps().len());
+        for (i, (line, st)) in
+            body.iter().zip(plan.steps()).enumerate()
+        {
+            let cols: Vec<&str> = line.split_whitespace().collect();
+            assert_eq!(cols.len(), 10, "line {i}: {line}");
+            assert_eq!(cols[0], i.to_string());
+            assert_eq!(cols[1], st.name);
+            assert_eq!(cols[2], st.op.kind());
+            assert_eq!(cols[5], "1", "one profiled run");
+        }
     }
 
     #[test]

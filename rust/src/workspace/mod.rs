@@ -104,7 +104,7 @@ impl Workspace {
     /// A checkout/checkin handle with a lock-free local cache. Create one
     /// per thread; drop returns its cached slabs to the shared pool.
     pub fn handle(&self) -> WsHandle<'_> {
-        WsHandle { ws: self, local: HashMap::new() }
+        WsHandle { ws: self, local: HashMap::new(), checked_out_bytes: 0 }
     }
 
     /// Counter snapshot (atomics, `Relaxed` — exact once the engine is
@@ -191,6 +191,11 @@ impl DerefMut for WsBuf {
 pub struct WsHandle<'w> {
     ws: &'w Workspace,
     local: HashMap<usize, Vec<Box<[f32]>>>,
+    /// Cumulative class bytes checked out through this handle (hits and
+    /// misses alike). A plain field, not an atomic: the handle is
+    /// per-thread, so the plan profiler can diff it around a step to
+    /// attribute workspace traffic without hot-path synchronisation.
+    checked_out_bytes: u64,
 }
 
 impl<'w> WsHandle<'w> {
@@ -200,9 +205,18 @@ impl<'w> WsHandle<'w> {
         self.ws
     }
 
+    /// Cumulative class bytes checked out through this handle. Diff two
+    /// readings to attribute workspace traffic to a region of code
+    /// (used by the per-layer plan profiler).
+    #[inline]
+    pub fn checked_out_bytes(&self) -> u64 {
+        self.checked_out_bytes
+    }
+
     /// Check out `len` elements of **dirty** scratch.
     pub fn checkout(&mut self, len: usize) -> WsBuf {
         let class = class_of(len);
+        self.checked_out_bytes += (class * 4) as u64;
         self.ws.checkouts.fetch_add(1, Relaxed);
         let mut reused = self.local.get_mut(&class).and_then(|v| v.pop());
         if reused.is_none() {
@@ -387,6 +401,23 @@ mod tests {
         drop(h1);
         drop(h2);
         assert_eq!(ws.pooled_bytes(), 512 * 4);
+    }
+
+    #[test]
+    fn checked_out_bytes_counts_class_bytes_per_handle() {
+        let ws = Workspace::new();
+        let mut h = ws.handle();
+        assert_eq!(h.checked_out_bytes(), 0);
+        let a = h.checkout(300); // class 512
+        assert_eq!(h.checked_out_bytes(), 512 * 4);
+        h.checkin(a);
+        let _b = h.checkout(400); // same class, pool hit — still counted
+        assert_eq!(h.checked_out_bytes(), 2 * 512 * 4);
+        // a second handle's tally is independent
+        let mut h2 = ws.handle();
+        let _c = h2.checkout(10); // class MIN_CLASS
+        assert_eq!(h2.checked_out_bytes(), (MIN_CLASS * 4) as u64);
+        assert_eq!(h.checked_out_bytes(), 2 * 512 * 4);
     }
 
     #[test]

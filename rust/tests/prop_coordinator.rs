@@ -77,7 +77,7 @@ fn batches_partition_stream_in_order() {
         let mut seen = Vec::new();
         while let Some(batch) =
             next_batch(&q, max_batch, Duration::from_micros(100),
-                       |_: &u32| Instant::now())
+                       |_: &u32| Instant::now(), |_| {})
         {
             assert!(!batch.is_empty() && batch.len() <= max_batch);
             seen.extend(batch);

@@ -173,6 +173,7 @@ fn steady_state_serving_is_allocation_free() {
 /// divergence — workspace reuse under real worker interleaving must not
 /// perturb a single output bit.
 #[test]
+#[ignore = "long concurrent soak; CI release job runs it via -- --ignored"]
 fn concurrent_mixed_soak_replays_divergence_free() {
     let per_model = 24usize;
     let build = |sink: Option<Arc<TraceSink>>| {
