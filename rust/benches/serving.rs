@@ -309,6 +309,151 @@ fn instrumentation_overhead_phase(quick: bool) {
             100.0 * overhead);
 }
 
+/// Recording-overhead phase (DESIGN.md §13): encode one synthetic
+/// serving trace (tiny z=8 mix — arrivals, enqueues, batches,
+/// responses, checkpoints every 256 events) through both codecs and
+/// report bytes/event and ns/event for JSONL vs binary. Asserts the
+/// binary trace is ≥4× smaller and that the binary writer's reused
+/// scratch buffer stops growing after warmup (zero steady-state
+/// allocations in the recording sink).
+fn recording_overhead_phase(quick: bool) {
+    use huge2::replay::{binary, codec, window};
+    use huge2::replay::{ArrivalPayload, EventBody, TraceEvent,
+                        TraceHeader};
+
+    let target = if quick { 2_000 } else { 20_000 };
+    let mut rng = Rng::new(17);
+    let mut events: Vec<TraceEvent> = Vec::with_capacity(target + 64);
+    let mut t_us = 0u64;
+    let mut id = 1u64;
+    while events.len() < target {
+        // one dynamic batch: 4 arrivals+enqueues, the batch pair, then
+        // the per-request responses — the shape a real serve run records
+        let mut ids = Vec::with_capacity(4);
+        for _ in 0..4 {
+            let z: Vec<f32> = (0..8).map(|_| rng.next_normal()).collect();
+            t_us += 120;
+            events.push(TraceEvent {
+                t_us,
+                body: EventBody::RequestArrival {
+                    id,
+                    model: "tiny".into(),
+                    payload: ArrivalPayload::Latent { z, cond: vec![] },
+                },
+            });
+            t_us += 3;
+            events.push(TraceEvent {
+                t_us,
+                body: EventBody::Enqueue { id, depth: ids.len() + 1 },
+            });
+            ids.push(id);
+            id += 1;
+        }
+        t_us += 40;
+        events.push(TraceEvent {
+            t_us,
+            body: EventBody::BatchFormed { ids: ids.clone() },
+        });
+        t_us += 900;
+        events.push(TraceEvent {
+            t_us,
+            body: EventBody::BatchExecuted {
+                ids: ids.clone(),
+                bucket: 4,
+                exec_us: 900,
+            },
+        });
+        for (k, &rid) in ids.iter().enumerate() {
+            t_us += 5;
+            events.push(TraceEvent {
+                t_us,
+                body: EventBody::Response {
+                    id: rid,
+                    batch_size: 4,
+                    bucket: 4,
+                    latency_us: 1_000 + k as u64,
+                    checksum: rng.next_u64(),
+                },
+            });
+        }
+    }
+    let events = window::insert_checkpoints(&events, 256);
+    let n = events.len();
+    let header = TraceHeader {
+        model: "tiny".into(),
+        backend: "native".into(),
+        seed: 17,
+        z_dim: 8,
+        cond_dim: 0,
+        task: "generate".into(),
+        net: String::new(),
+        engine_digest: String::new(),
+    };
+
+    // JSONL: one heap String per event, UTF-8 decimal floats
+    let t0 = Instant::now();
+    let mut jsonl_bytes = 0u64;
+    for e in &events {
+        jsonl_bytes +=
+            std::hint::black_box(codec::encode_event(e)).len() as u64 + 1;
+    }
+    let t_jsonl = t0.elapsed();
+
+    // binary: one reused scratch buffer through the streaming writer.
+    // Byte counts come from a counting sink; the warmup pass populates
+    // the scratch, the timed pass must not grow it.
+    struct CountWriter(u64);
+    impl std::io::Write for CountWriter {
+        fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+            self.0 += b.len() as u64;
+            Ok(b.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+    let mut hdr_buf = Vec::new();
+    binary::encode_header_into(&mut hdr_buf, &header);
+    let mut w = binary::BinaryWriter::new(CountWriter(0), &header)
+        .unwrap();
+    for e in &events {
+        w.event(e).unwrap(); // warmup: grows scratch to the high-water
+    }
+    let warm_cap = w.scratch_capacity();
+    let t0 = Instant::now();
+    for e in &events {
+        w.event(e).unwrap();
+    }
+    let t_bin = t0.elapsed();
+    assert_eq!(w.scratch_capacity(), warm_cap,
+               "binary sink scratch grew after warmup — the recording \
+                path allocated in steady state");
+    let total = w.finish().unwrap().0;
+    let bin_bytes = (total - hdr_buf.len() as u64) / 2; // two passes
+
+    println!("\n== recording overhead: JSONL vs binary codec ({n} \
+              events, checkpoints every 256, DESIGN.md §13) ==\n");
+    let mut t = Table::new(&["codec", "bytes/event", "ns/event",
+                             "total"]);
+    for (label, bytes, dur) in [("jsonl", jsonl_bytes, t_jsonl),
+                                ("binary", bin_bytes, t_bin)] {
+        t.row(&[
+            label.into(),
+            format!("{:.1}", bytes as f64 / n as f64),
+            format!("{}", dur.as_nanos() as u64 / n as u64),
+            format!("{:.1} KiB", bytes as f64 / 1024.0),
+        ]);
+    }
+    t.print();
+    let ratio = jsonl_bytes as f64 / bin_bytes.max(1) as f64;
+    println!("binary is {ratio:.1}x smaller (budget: >=4x); steady-state \
+              sink allocations: 0 (scratch capacity pinned at {warm_cap} \
+              B)");
+    assert!(jsonl_bytes >= 4 * bin_bytes,
+            "binary codec misses the 4x size budget: {jsonl_bytes} \
+             jsonl vs {bin_bytes} binary bytes");
+}
+
 /// Replay-driven regression entry: record one bursty native serve run,
 /// then re-drive the identical workload twice in fast mode against fresh
 /// engines. Divergence aborts the bench — a perf number from an engine
@@ -504,6 +649,7 @@ fn main() {
     workspace_reuse_phase(quick);
     plan_prepack_phase(quick);
     instrumentation_overhead_phase(quick);
+    recording_overhead_phase(quick);
     replay_regression(quick);
     seg_replay_regression(quick);
 

@@ -13,9 +13,18 @@
 //!                                     # profile at shutdown
 //! huge2 serve --native --dump-metrics # Prometheus-style exposition
 //! huge2 serve --native --record t.jsonl
+//! huge2 serve --native --record t.bin # .bin → compact binary codec
 //! huge2 serve --task segment --record t.jsonl   # seg-net serving
+//! huge2 serve --native --record t.bin --checkpoint-every 128
+//!                                     # checkpoint cadence (0 = off)
 //! huge2 segment --net segnet          # one-shot: timing table + mask
 //! huge2 replay t.jsonl --timing fast  # verify recorded checksums
+//! huge2 replay t.bin --window 2..5 --progress
+//!                                     # replay a checkpoint-window slice
+//! huge2 trace info t.bin              # format, header, windows, fps
+//! huge2 trace convert t.jsonl t.bin   # lossless re-encode (either way)
+//! huge2 trace fingerprints t.bin      # per-window fingerprint table
+//! huge2 trace bisect t.bin            # first divergent window, O(log W)
 //! huge2 reproduce                     # all paper tables (text form)
 //! ```
 //!
@@ -41,7 +50,8 @@ impl Args {
         let subcommand = it
             .next()
             .ok_or_else(|| anyhow!("usage: huge2 <inspect|bench|plan|\
-                                    serve|segment|replay|reproduce> \
+                                    serve|segment|replay|trace|\
+                                    reproduce> \
                                     [positional] [--key value]"))?
             .clone();
         let mut positionals = Vec::new();

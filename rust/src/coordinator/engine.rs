@@ -5,7 +5,7 @@ use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::config::EngineConfig;
 use crate::metrics::flight::{FlightRecorder, Stage, SUBMIT_LANE};
@@ -98,6 +98,12 @@ pub struct Engine {
     /// Record/replay hook: when set, every arrival/enqueue/reject (here)
     /// and batch/response (workers) is appended to the trace.
     sink: Option<Arc<TraceSink>>,
+    /// Checkpoint-metrics pump: a helper thread that fills registry
+    /// snapshots into checkpoint events a beat after the sink appends
+    /// them. The indirection is a lock-order requirement — see
+    /// [`TraceSink::backfill_metrics`]. Present only when the installed
+    /// sink checkpoints.
+    ckpt_pump: Option<(mpsc::Sender<()>, std::thread::JoinHandle<()>)>,
     /// Shared buffer pool; every worker thread holds a per-thread handle
     /// over it, so steady-state batch execution is allocation-free
     /// (DESIGN.md §9). [`Engine::workspace_counters`] exposes the proof.
@@ -127,6 +133,7 @@ impl Engine {
             counters,
             exec_hist,
             sink: None,
+            ckpt_pump: None,
             workspace,
             registry,
             obs,
@@ -260,6 +267,32 @@ impl Engine {
     pub fn set_trace_sink(&mut self, sink: Arc<TraceSink>) -> Result<()> {
         if !self.models.is_empty() {
             bail!("set_trace_sink must be called before any register()");
+        }
+        if sink.checkpoint_every() > 0 {
+            // A checkpointing sink appends checkpoints with *empty*
+            // metrics (record() runs inside a queue lock; taking a
+            // registry snapshot there would cycle the lock order, since
+            // gauge closures read queue depths). This pump fills them in
+            // from outside any lock: snapshot first, then the sink lock
+            // — strictly sequential acquisitions.
+            let (tx, rx) = mpsc::channel::<()>();
+            let s = sink.clone();
+            let reg = self.registry.clone();
+            let handle = std::thread::spawn(move || loop {
+                let stop = !matches!(
+                    rx.recv_timeout(Duration::from_millis(20)),
+                    Err(mpsc::RecvTimeoutError::Timeout));
+                if s.wants_metrics() {
+                    let snap = reg.snapshot();
+                    s.backfill_metrics(&snap);
+                }
+                if stop {
+                    // sender dropped: one final sweep just happened
+                    // above, with all workers already joined
+                    break;
+                }
+            });
+            self.ckpt_pump = Some((tx, handle));
         }
         self.sink = Some(sink);
         Ok(())
@@ -446,7 +479,9 @@ impl Engine {
         self.models.get(model).map(|m| m.queue.len())
     }
 
-    /// Drain queues and join workers.
+    /// Drain queues and join workers, then the checkpoint pump (its
+    /// exit path does a final metrics sweep, so every checkpoint the
+    /// workers appended ends up filled).
     pub fn shutdown(mut self) {
         for (_, mr) in self.models.iter() {
             mr.queue.close();
@@ -455,6 +490,10 @@ impl Engine {
             for w in mr.workers {
                 let _ = w.join();
             }
+        }
+        if let Some((tx, h)) = self.ckpt_pump.take() {
+            drop(tx);
+            let _ = h.join();
         }
     }
 }
@@ -468,6 +507,10 @@ impl Drop for Engine {
             for w in mr.workers.drain(..) {
                 let _ = w.join();
             }
+        }
+        if let Some((tx, h)) = self.ckpt_pump.take() {
+            drop(tx);
+            let _ = h.join();
         }
     }
 }
@@ -655,6 +698,52 @@ mod tests {
         for w in evs.windows(2) {
             assert!(w[0].t_us <= w[1].t_us, "monotone timestamps");
         }
+    }
+
+    #[test]
+    fn checkpoint_pump_backfills_metrics_by_shutdown() {
+        use crate::replay::recorder::TraceSink;
+        use crate::replay::{window, EventBody as EB};
+
+        let cfg = EngineConfig {
+            workers: 1,
+            queue_depth: 16,
+            max_batch: 4,
+            batch_timeout_us: 500,
+            ..EngineConfig::default()
+        };
+        let mut e = Engine::new(cfg);
+        // tiny cadence so a short run crosses several windows
+        let sink = Arc::new(TraceSink::with_checkpoints(4));
+        e.set_trace_sink(sink.clone()).unwrap();
+        let gen = Generator::tiny_cgan(5);
+        e.register_native(super::super::router::Model::native(
+            "tiny", Arc::new(gen), 0)).unwrap();
+        let mut rng = Rng::new(6);
+        for _ in 0..6 {
+            let z: Vec<f32> = (0..8).map(|_| rng.next_normal()).collect();
+            e.generate("tiny", z, vec![]).unwrap();
+        }
+        e.shutdown();
+        // shutdown joined the pump, whose exit path sweeps: no
+        // checkpoint may be left with empty metrics
+        assert!(!sink.wants_metrics());
+        let evs = sink.snapshot();
+        let ckpts: Vec<_> = evs
+            .iter()
+            .filter_map(|ev| match &ev.body {
+                EB::Checkpoint(c) => Some(c),
+                _ => None,
+            })
+            .collect();
+        assert!(!ckpts.is_empty(), "run long enough to checkpoint");
+        for c in &ckpts {
+            assert!(c.metrics.counters.contains_key(
+                        "huge2_submitted_total"),
+                    "checkpoint seq {} has empty metrics", c.seq);
+        }
+        // checkpoints verify: metrics are outside the fingerprint
+        window::verify_fingerprints(&evs).unwrap();
     }
 
     #[test]

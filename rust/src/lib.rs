@@ -191,6 +191,55 @@
 //! `huge2 replay t.jsonl --timing fast` (exits non-zero on divergence,
 //! naming the first mismatching event).
 //!
+//! ## Trace tooling quickstart (binary codec, windows, bisection)
+//!
+//! Traces scale past "one short run" with trace format v4
+//! (DESIGN.md §13). Saving to a `.bin` path writes a compact **binary
+//! codec** (magic `HG2TRACE`, varint fields, raw f32 bits — several
+//! times smaller than JSONL); loading always sniffs the magic, so both
+//! formats replay interchangeably and `huge2 trace convert` re-encodes
+//! losslessly in either direction. A sink built with
+//! [`replay::TraceSink::with_checkpoints`] appends periodic
+//! **checkpoint** events — a verifiable fold of the stream so far
+//! (pending request ids, outcome counters, a per-window FNV-1a
+//! fingerprint over deterministic payload/outcome bits, and a chained
+//! fingerprint across windows) plus a metrics snapshot backfilled by
+//! the engine. Checkpoints split a trace into **windows** that replay
+//! independently:
+//!
+//! ```no_run
+//! use std::path::Path;
+//! use huge2::replay::{ReplayOptions, Replayer, Timing};
+//! # use huge2::config::EngineConfig;
+//! # use huge2::coordinator::{Engine, Model};
+//! # use huge2::gan::Generator;
+//! # use std::sync::Arc;
+//!
+//! let rp = Replayer::load(Path::new("t.bin"))?; // verifies fingerprints
+//! # let mut eng = Engine::new(EngineConfig::default());
+//! # eng.register_native(Model::native(
+//! #     "dcgan", Arc::new(Generator::dcgan(rp.header().seed)), 0))?;
+//! println!("{} windows", rp.windows().count());
+//! // replay just windows 2..5 (state rebuilt from checkpoint 2):
+//! let report = rp.run_with(&eng, Timing::Fast, &ReplayOptions {
+//!     window: Some(2..5),
+//!     progress: true,
+//! })?;
+//! assert!(report.is_clean());
+//! // or localize the first divergent window in O(log W) replays:
+//! let bi = rp.bisect(&eng, Timing::Fast)?;
+//! println!("divergent window: {:?} ({} replays)",
+//!          bi.divergent, bi.replays);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! CLI: `huge2 serve --native --record t.bin --checkpoint-every 256`,
+//! then `huge2 trace info t.bin`, `huge2 trace convert t.bin t.jsonl`,
+//! `huge2 trace fingerprints t.bin`,
+//! `huge2 replay t.bin --window 2..5 --progress`, and
+//! `huge2 trace bisect t.bin` (synthesizes checkpoints in memory for
+//! pre-v4 traces).
+//!
 //! ## Observability quickstart (stage spans, profiler, snapshots)
 //!
 //! The engine instruments itself (DESIGN.md §12): every request is

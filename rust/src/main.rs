@@ -12,7 +12,9 @@ use huge2::coordinator::{Engine, Payload};
 use huge2::deconv::{baseline, huge2 as engine2, Engine as DeconvEngine};
 use huge2::gan::Generator;
 use huge2::memsim::{trace_layer, EngineKind, GpuModel};
-use huge2::replay::{Recorder, Replayer, Timing, TraceHeader, TraceSink};
+use huge2::replay::{Recorder, ReplayOptions, Replayer, Timing,
+                    TraceHeader, TraceSink, WindowMap,
+                    DEFAULT_CHECKPOINT_EVERY};
 use huge2::rng::Rng;
 use huge2::runtime::RuntimeHandle;
 use huge2::seg::SegNet;
@@ -33,9 +35,11 @@ fn main() {
 
 fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
-    // central stray-positional rejection: only `replay` takes one
+    // central stray-positional rejection: `replay` takes one file,
+    // `trace` an action plus up to two files
     let max_positionals = match args.subcommand.as_str() {
         "replay" => 1,
+        "trace" => 3,
         _ => 0,
     };
     args.expect_positionals_at_most(max_positionals)?;
@@ -46,10 +50,11 @@ fn run(argv: &[String]) -> Result<()> {
         "serve" => serve(&args),
         "segment" => segment(&args),
         "replay" => replay(&args),
+        "trace" => trace_cmd(&args),
         "reproduce" => reproduce(&args),
         other => bail!("unknown subcommand {other:?} \
                         (inspect|bench|plan|serve|segment|replay|\
-                         reproduce)"),
+                         trace|reproduce)"),
     }
 }
 
@@ -480,9 +485,29 @@ fn finish_serve(eng: Engine,
     Ok(())
 }
 
+/// Install the recording sink for a serve run (when `--record` was
+/// given): checkpointing every `--checkpoint-every` events (default
+/// 256; 0 disables checkpoints — trace v4, DESIGN.md §13). Must run
+/// before any model registers, so workers capture the sink.
+fn record_sink(args: &Args, eng: &mut Engine,
+               record_path: Option<&str>)
+               -> Result<Option<Arc<TraceSink>>> {
+    if record_path.is_none() {
+        return Ok(None);
+    }
+    let every = args.get_usize("checkpoint-every",
+                               DEFAULT_CHECKPOINT_EVERY)?;
+    let s = Arc::new(TraceSink::with_checkpoints(every));
+    eng.set_trace_sink(s.clone())?;
+    Ok(Some(s))
+}
+
 /// Run the serving engine on a synthetic workload, optionally recording
 /// a replayable trace. `--task generate` (default) serves latent→image;
 /// `--task segment` serves image→mask through the same pipeline.
+/// `--record <path>` picks the on-disk trace format by extension —
+/// `.bin` writes the compact binary codec, anything else JSONL; readers
+/// always detect the format from the magic bytes, never the extension.
 fn serve(args: &Args) -> Result<()> {
     match args.get_or("task", "generate").as_str() {
         "generate" => serve_generate(args),
@@ -502,14 +527,7 @@ fn serve_generate(args: &Args) -> Result<()> {
     let record_path = path_flag(args, "record")?;
 
     let mut eng = Engine::new(cfg.clone());
-    // --record out.jsonl: the sink must be installed before workers spawn
-    let sink = if record_path.is_some() {
-        let s = Arc::new(TraceSink::new());
-        eng.set_trace_sink(s.clone())?;
-        Some(s)
-    } else {
-        None
-    };
+    let sink = record_sink(args, &mut eng, record_path)?;
     let z_dim;
     if native {
         let gen = Arc::new(Generator::dcgan(seed));
@@ -582,13 +600,7 @@ fn serve_segment(args: &Args) -> Result<()> {
 
     let net_cfg = seg_net_cfg(&net_name)?;
     let mut eng = Engine::new(cfg);
-    let sink = if record_path.is_some() {
-        let s = Arc::new(TraceSink::new());
-        eng.set_trace_sink(s.clone())?;
-        Some(s)
-    } else {
-        None
-    };
+    let sink = record_sink(args, &mut eng, record_path)?;
     let net = Arc::new(SegNet::new(&net_cfg, seed));
     let in_shape = net.in_shape();
     let n_classes = net.n_classes();
@@ -634,24 +646,10 @@ fn serve_segment(args: &Args) -> Result<()> {
     finish_serve(eng, pending, t0, record, sobs)
 }
 
-/// Re-drive a recorded trace through a freshly built engine and verify
-/// every recorded output checksum (exit non-zero on divergence, naming
-/// the first mismatching event).
-fn replay(args: &Args) -> Result<()> {
-    let path = args
-        .positional(0)
-        .or(path_flag(args, "trace")?)
-        .ok_or_else(|| anyhow!("usage: huge2 replay <trace.jsonl> \
-                                [--timing faithful|fast]"))?
-        .to_string();
-    let timing: Timing = args.get_or("timing", "fast").parse()?;
-    let rp = Replayer::load(Path::new(&path))?;
-    let h = rp.header().clone();
-    println!("trace {path}: model {:?} on {} backend (seed {}), \
-              {} events, {} arrivals",
-             h.model, h.backend, h.seed, rp.events().len(),
-             rp.arrival_count());
-
+/// Rebuild a serving engine matching a trace header — the same task,
+/// backend, net and weight seed the recording served. Shared by
+/// `replay` and `trace bisect`.
+fn engine_for_header(h: &TraceHeader, args: &Args) -> Result<Engine> {
     let base = EngineConfig::default();
     let cfg = EngineConfig {
         workers: args.get_usize("workers", base.workers)?,
@@ -692,8 +690,68 @@ fn replay(args: &Args) -> Result<()> {
         (task, backend) => bail!(
             "trace has unsupported task/backend {task:?}/{backend:?}"),
     }
-    println!("replaying with --timing {}...", timing.as_str());
-    let report = rp.run(&eng, timing)?;
+    Ok(eng)
+}
+
+/// Parse `--window A..B` (end-exclusive window range; a bare `W` means
+/// `W..W+1`). Bounds are validated against the trace by the replayer.
+fn parse_window(args: &Args)
+                -> Result<Option<std::ops::Range<usize>>> {
+    let Some(spec) = args.get("window") else {
+        return Ok(None);
+    };
+    let bad = || anyhow!(
+        "--window expects A..B or a single window index, got {spec:?}");
+    let r = match spec.split_once("..") {
+        Some((a, b)) => {
+            let a: usize = a.trim().parse().map_err(|_| bad())?;
+            let b: usize = b.trim().parse().map_err(|_| bad())?;
+            a..b
+        }
+        None => {
+            let w: usize = spec.trim().parse().map_err(|_| bad())?;
+            w..w + 1
+        }
+    };
+    Ok(Some(r))
+}
+
+/// Re-drive a recorded trace through a freshly built engine and verify
+/// every recorded output checksum (exit non-zero on divergence, naming
+/// the first mismatching event). `--window A..B` replays just that
+/// checkpoint-window slice; `--progress` prints a line per window
+/// crossed; on divergence the divergent window's last events are
+/// excerpted flight-recorder style.
+fn replay(args: &Args) -> Result<()> {
+    let path = args
+        .positional(0)
+        .or(path_flag(args, "trace")?)
+        .ok_or_else(|| anyhow!("usage: huge2 replay <trace> \
+                                [--timing faithful|fast] \
+                                [--window A..B] [--progress]"))?
+        .to_string();
+    let timing: Timing = args.get_or("timing", "fast").parse()?;
+    let rp = Replayer::load(Path::new(&path))?;
+    let h = rp.header().clone();
+    let wm = rp.windows();
+    println!("trace {path}: model {:?} on {} backend (seed {}), \
+              {} events, {} arrivals, {} window(s)",
+             h.model, h.backend, h.seed, rp.events().len(),
+             rp.arrival_count(), wm.count());
+
+    let eng = engine_for_header(&h, args)?;
+    let opts = ReplayOptions {
+        window: parse_window(args)?,
+        progress: args.has("progress"),
+    };
+    match &opts.window {
+        Some(w) => println!("replaying windows {}..{} of {} with \
+                             --timing {}...",
+                            w.start, w.end, wm.count(), timing.as_str()),
+        None => println!("replaying with --timing {}...",
+                         timing.as_str()),
+    }
+    let report = rp.run_with(&eng, timing, &opts)?;
     eng.shutdown();
     println!("{}", report.summary());
     if let Some(hint) = &report.hint {
@@ -704,7 +762,180 @@ fn replay(args: &Args) -> Result<()> {
             println!("replay OK: every recorded outcome reproduced");
             Ok(())
         }
-        Some(d) => bail!("replay diverged: {d}"),
+        Some(d) => {
+            let w = wm.window_of_event(d.event_index());
+            println!("{}", huge2::replay::window::excerpt(
+                rp.events(), wm.window_events(w), 8));
+            bail!("replay diverged: {d}")
+        }
+    }
+}
+
+/// `huge2 trace <info|convert|fingerprints|bisect>` — trace-file
+/// tooling over both on-disk formats (always detected by magic).
+fn trace_cmd(args: &Args) -> Result<()> {
+    let action = args
+        .positional(0)
+        .ok_or_else(|| anyhow!(
+            "usage: huge2 trace <info|convert|fingerprints|bisect> \
+             <file> [...]"))?
+        .to_string();
+    match action.as_str() {
+        "info" => trace_info(args),
+        "convert" => trace_convert(args),
+        "fingerprints" => trace_fingerprints(args),
+        "bisect" => trace_bisect(args),
+        other => bail!("unknown trace action {other:?} \
+                        (info|convert|fingerprints|bisect)"),
+    }
+}
+
+/// The `<file>` positional shared by every `trace` action.
+fn trace_file_arg(args: &Args, usage: &str) -> Result<String> {
+    Ok(args
+        .positional(1)
+        .ok_or_else(|| anyhow!("usage: huge2 trace {usage}"))?
+        .to_string())
+}
+
+/// `huge2 trace info <file>`: format, header, event counts by kind,
+/// window structure and fingerprint status.
+fn trace_info(args: &Args) -> Result<()> {
+    let path = trace_file_arg(args, "info <file>")?;
+    let p = Path::new(&path);
+    let fmt = if huge2::replay::binary::sniff_is_binary(p)? {
+        "binary"
+    } else {
+        "jsonl"
+    };
+    let bytes = std::fs::metadata(p)?.len();
+    let (h, events) = huge2::replay::binary::read_trace_auto(p)?;
+    println!("{path}: {fmt} trace, {bytes} bytes, {} events",
+             events.len());
+    println!("header: model {:?} task {} backend {} seed {} z_dim {} \
+              net {:?} engine_digest {:?}",
+             h.model, h.task, h.backend, h.seed, h.z_dim, h.net,
+             h.engine_digest);
+    let mut kinds: std::collections::BTreeMap<&str, usize> =
+        Default::default();
+    for e in &events {
+        *kinds.entry(e.body.kind()).or_default() += 1;
+    }
+    for (k, n) in kinds {
+        println!("  {k:<16} {n}");
+    }
+    let wm = WindowMap::of(&events);
+    println!("{} checkpoint(s) → {} replay window(s)",
+             wm.checkpoint_count(), wm.count());
+    match huge2::replay::window::verify_fingerprints(&events) {
+        Ok(()) => {
+            println!("fingerprints: OK");
+            Ok(())
+        }
+        Err(e) => bail!("fingerprints: {e}"),
+    }
+}
+
+/// `huge2 trace convert <in> <out>`: losslessly re-encode a trace; the
+/// output format is picked by the output extension (`.bin` → binary,
+/// anything else → JSONL).
+fn trace_convert(args: &Args) -> Result<()> {
+    let src = trace_file_arg(args, "convert <in> <out>")?;
+    let dst = args
+        .positional(2)
+        .ok_or_else(|| anyhow!("usage: huge2 trace convert <in> <out>"))?
+        .to_string();
+    let (h, events) = huge2::replay::binary::read_trace_auto(
+        Path::new(&src))?;
+    let out = Path::new(&dst);
+    if out.extension().is_some_and(|e| e == "bin") {
+        huge2::replay::binary::write_trace(out, &h, &events)?;
+    } else {
+        huge2::replay::codec::write_trace(out, &h, &events)?;
+    }
+    let in_bytes = std::fs::metadata(&src)?.len();
+    let out_bytes = std::fs::metadata(out)?.len();
+    println!("{src} ({in_bytes} B) → {dst} ({out_bytes} B), \
+              {} events, {:.2}x",
+             events.len(), in_bytes as f64 / out_bytes as f64);
+    Ok(())
+}
+
+/// `huge2 trace fingerprints <file>`: the per-window fingerprint/chain
+/// table (what `bisect` binary-searches over).
+fn trace_fingerprints(args: &Args) -> Result<()> {
+    let path = trace_file_arg(args, "fingerprints <file>")?;
+    let (_, events) = huge2::replay::binary::read_trace_auto(
+        Path::new(&path))?;
+    huge2::replay::window::verify_fingerprints(&events)
+        .map_err(|e| anyhow!("{path}: {e}"))?;
+    let wm = WindowMap::of(&events);
+    if wm.checkpoint_count() == 0 {
+        println!("{path}: no checkpoints (recorded without \
+                  --checkpoint-every, or pre-v4) — one implicit window \
+                  over all {} events", events.len());
+        return Ok(());
+    }
+    let mut t = Table::new(&["window", "events", "fingerprint", "chain"]);
+    for w in 0..wm.count() {
+        let r = wm.window_events(w);
+        let (fp, chain) = match &events[r.end - 1].body {
+            huge2::replay::EventBody::Checkpoint(c) => {
+                (format!("{:016x}", c.fingerprint),
+                 format!("{:016x}", c.chain))
+            }
+            // the trailing window is still open: no closing checkpoint
+            _ => ("-".into(), "-".into()),
+        };
+        t.row(&[w.to_string(), format!("{}..{}", r.start, r.end),
+                fp, chain]);
+    }
+    t.print();
+    println!("{} window(s), fingerprints OK", wm.count());
+    Ok(())
+}
+
+/// `huge2 trace bisect <file>`: localize the first divergent window in
+/// O(log W) window replays. Checkpoint-less (v1–v3) traces get
+/// checkpoints synthesized in memory first (`--checkpoint-every`).
+fn trace_bisect(args: &Args) -> Result<()> {
+    let path = trace_file_arg(args, "bisect <file>")?;
+    let timing: Timing = args.get_or("timing", "fast").parse()?;
+    let loaded = Replayer::load(Path::new(&path))?;
+    let h = loaded.header().clone();
+    let rp = if loaded.windows().checkpoint_count() == 0 {
+        let every = args.get_usize("checkpoint-every",
+                                   DEFAULT_CHECKPOINT_EVERY)?.max(1);
+        println!("trace has no checkpoints; synthesizing one every \
+                  {every} events for bisection");
+        Replayer::from_parts(
+            h.clone(),
+            huge2::replay::window::insert_checkpoints(
+                loaded.events(), every))
+    } else {
+        loaded
+    };
+    let wm = rp.windows();
+    println!("bisecting {} window(s) ({} events) with --timing {}...",
+             wm.count(), rp.events().len(), timing.as_str());
+    let eng = engine_for_header(&h, args)?;
+    let br = rp.bisect(&eng, timing)?;
+    eng.shutdown();
+    match br.divergent {
+        None => {
+            println!("bisect clean: all {} window(s) reproduce \
+                      ({} replay(s))", br.windows, br.replays);
+            Ok(())
+        }
+        Some(w) => {
+            println!("{}", br.report.summary());
+            let r = wm.window_events(w);
+            println!("{}", huge2::replay::window::excerpt(
+                rp.events(), r.clone(), 8));
+            bail!("first divergent window: {w} of {} (events \
+                   {}..{}), localized in {} window replay(s)",
+                  br.windows, r.start, r.end, br.replays)
+        }
     }
 }
 

@@ -270,6 +270,43 @@ impl HistogramSnapshot {
         self.max_us = self.max_us.max(other.max_us);
     }
 
+    /// Decompose into the explicit wire form trace checkpoints embed
+    /// (DESIGN.md §13): the non-zero `(bucket_index, count)` pairs in
+    /// index order, plus `sum_us` and `max_us`. `count` is not part of
+    /// the wire form — it is re-derived on decode, the same way
+    /// [`Histogram::snapshot`] re-derives it, so a checkpoint can never
+    /// carry an internally inconsistent distribution.
+    pub fn to_sparse(&self) -> (Vec<(usize, u64)>, u64, u64) {
+        let pairs: Vec<(usize, u64)> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &n)| n > 0)
+            .map(|(i, &n)| (i, n))
+            .collect();
+        (pairs, self.sum_us, self.max_us)
+    }
+
+    /// Rebuild a snapshot from its sparse wire form. Rejects
+    /// out-of-range bucket indices (a corrupt checkpoint must error,
+    /// not panic or silently mis-bucket).
+    pub fn from_sparse(pairs: &[(usize, u64)], sum_us: u64, max_us: u64)
+                       -> Result<Self, String> {
+        let mut buckets = vec![0u64; MAJOR * MINOR];
+        for &(idx, n) in pairs {
+            if idx >= MAJOR * MINOR {
+                return Err(format!(
+                    "histogram bucket index {idx} out of range \
+                     (max {})",
+                    MAJOR * MINOR - 1
+                ));
+            }
+            buckets[idx] += n;
+        }
+        let count = buckets.iter().sum();
+        Ok(HistogramSnapshot { buckets, count, sum_us, max_us })
+    }
+
     /// The samples recorded *since* `earlier` (bucket-wise saturating
     /// subtraction; `earlier` must be an older snapshot of the same
     /// histogram). `max_us` is kept from `self` — the true
@@ -478,6 +515,34 @@ mod tests {
         rebuilt.merge(&d);
         assert_eq!(rebuilt.count(), after.count());
         assert_eq!(rebuilt.sum_us(), after.sum_us());
+    }
+
+    #[test]
+    fn sparse_form_round_trips_exactly() {
+        let h = Histogram::new();
+        for us in [0u64, 3, 40, 500, 6000, 6001, u64::MAX] {
+            h.record_us(us);
+        }
+        let s = h.snapshot();
+        let (pairs, sum_us, max_us) = s.to_sparse();
+        assert!(pairs.len() <= 7, "sparse form stores only hit buckets");
+        assert!(pairs.windows(2).all(|w| w[0].0 < w[1].0));
+        let back =
+            HistogramSnapshot::from_sparse(&pairs, sum_us, max_us)
+                .unwrap();
+        assert_eq!(back, s);
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(back.quantile_us(q), s.quantile_us(q));
+        }
+        // empty snapshot ⇒ empty sparse form
+        let (pairs, sum, max) = HistogramSnapshot::empty().to_sparse();
+        assert!(pairs.is_empty());
+        let empty =
+            HistogramSnapshot::from_sparse(&pairs, sum, max).unwrap();
+        assert_eq!(empty, HistogramSnapshot::empty());
+        // out-of-range bucket index is a decode error, not a panic
+        assert!(HistogramSnapshot::from_sparse(
+            &[(MAJOR * MINOR, 1)], 0, 0).is_err());
     }
 
     #[test]

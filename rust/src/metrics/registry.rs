@@ -144,7 +144,7 @@ impl MetricsRegistry {
 }
 
 /// A point-in-time copy of every registered instrument.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct MetricsSnapshot {
     pub counters: BTreeMap<String, u64>,
     pub gauges: BTreeMap<String, i64>,

@@ -1,0 +1,855 @@
+//! Compact binary trace codec (format v4) — the JSONL format's exact
+//! twin, auto-detected on read by magic (DESIGN.md §13).
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic    8 bytes  "HG2TRACE"
+//! version  varint   == TRACE_VERSION (4)
+//! header   model, backend (str) · seed, z_dim, cond_dim (varint) ·
+//!          task, net, engine_digest (str)
+//! events*  tag (1 byte) · Δt_us (zigzag varint vs previous event) ·
+//!          per-kind fields
+//! ```
+//!
+//! Field encodings: `varint` is LEB128; `str` is varint length +
+//! UTF-8 bytes; lists are varint count + items; **f32s are raw
+//! IEEE-754 bit patterns** (4 bytes — bit-exact by construction, NaN
+//! payloads included); u64 checksums/fingerprints are raw 8 bytes
+//! (high-entropy values gain nothing from varint). Timestamps are
+//! delta-encoded against the previous event — monotone in recorded
+//! traces, so almost always 1–2 bytes — with zigzag so hand-built
+//! non-monotone streams still encode.
+//!
+//! The result is ~4–6× smaller than the same events in JSONL (the
+//! recording-overhead phase of `benches/serving.rs` measures it, CI
+//! enforces ≥4× on a soak). There is no compression pass: every byte
+//! is directly seekable/parseable, and a truncated or bit-flipped file
+//! fails decode with a byte offset instead of silently skipping.
+//!
+//! Encoding appends to a caller-owned scratch buffer
+//! ([`encode_event_into`]) so a steady-state recording sink performs
+//! zero allocations once the scratch has warmed up.
+
+use anyhow::{anyhow, Context, Result};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::metrics::{HistogramSnapshot, MetricsSnapshot};
+
+use super::codec::{self, TRACE_VERSION};
+use super::event::{ArrivalPayload, CheckpointState, EventBody,
+                   TraceEvent, TraceHeader};
+
+/// First 8 bytes of every binary trace. 'H' ≠ '{', so JSONL and binary
+/// traces are distinguishable from their first byte alone.
+pub const MAGIC: [u8; 8] = *b"HG2TRACE";
+
+const TAG_ARRIVAL_LATENT: u8 = 1;
+const TAG_ARRIVAL_IMAGE: u8 = 2;
+const TAG_ENQUEUE: u8 = 3;
+const TAG_REJECT: u8 = 4;
+const TAG_BATCH_FORMED: u8 = 5;
+const TAG_BATCH_EXECUTED: u8 = 6;
+const TAG_RESPONSE: u8 = 7;
+const TAG_FAILED: u8 = 8;
+const TAG_CHECKPOINT: u8 = 9;
+
+/// Decode-side sanity caps: a corrupt length prefix must produce a
+/// clean error, not a multi-gigabyte allocation.
+const MAX_STR: u64 = 1 << 20;
+const MAX_LIST: u64 = 1 << 24;
+
+// ----------------------------------------------------------------- encode
+
+fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(byte);
+            return;
+        }
+        buf.push(byte | 0x80);
+    }
+}
+
+fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_varint(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, vs: &[f32]) {
+    put_varint(buf, vs.len() as u64);
+    for v in vs {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+fn put_u64_list(buf: &mut Vec<u8>, vs: &[u64]) {
+    put_varint(buf, vs.len() as u64);
+    for &v in vs {
+        put_varint(buf, v);
+    }
+}
+
+fn put_metrics(buf: &mut Vec<u8>, m: &MetricsSnapshot) {
+    put_varint(buf, m.counters.len() as u64);
+    for (k, &v) in &m.counters {
+        put_str(buf, k);
+        put_varint(buf, v);
+    }
+    put_varint(buf, m.gauges.len() as u64);
+    for (k, &v) in &m.gauges {
+        put_str(buf, k);
+        put_varint(buf, zigzag(v));
+    }
+    put_varint(buf, m.histograms.len() as u64);
+    for (k, h) in &m.histograms {
+        put_str(buf, k);
+        let (pairs, sum_us, max_us) = h.to_sparse();
+        put_varint(buf, sum_us);
+        put_varint(buf, max_us);
+        put_varint(buf, pairs.len() as u64);
+        for (idx, n) in pairs {
+            put_varint(buf, idx as u64);
+            put_varint(buf, n);
+        }
+    }
+}
+
+/// Append the magic + version + header to `buf`.
+pub fn encode_header_into(buf: &mut Vec<u8>, h: &TraceHeader) {
+    buf.extend_from_slice(&MAGIC);
+    put_varint(buf, TRACE_VERSION as u64);
+    put_str(buf, &h.model);
+    put_str(buf, &h.backend);
+    put_varint(buf, h.seed);
+    put_varint(buf, h.z_dim as u64);
+    put_varint(buf, h.cond_dim as u64);
+    put_str(buf, &h.task);
+    put_str(buf, &h.net);
+    put_str(buf, &h.engine_digest);
+}
+
+/// Append one event to `buf`. `prev_t_us` is the previous event's
+/// timestamp (0 for the first) — timestamps are delta-encoded. Appends
+/// only; callers that reuse one scratch buffer allocate nothing in
+/// steady state.
+pub fn encode_event_into(buf: &mut Vec<u8>, prev_t_us: u64,
+                         e: &TraceEvent) {
+    match &e.body {
+        EventBody::RequestArrival {
+            id,
+            model,
+            payload: ArrivalPayload::Latent { z, cond },
+        } => {
+            buf.push(TAG_ARRIVAL_LATENT);
+            put_varint(buf, zigzag(e.t_us as i64 - prev_t_us as i64));
+            put_varint(buf, *id);
+            put_str(buf, model);
+            put_f32s(buf, z);
+            put_f32s(buf, cond);
+        }
+        EventBody::RequestArrival {
+            id,
+            model,
+            payload: ArrivalPayload::Image { shape, seed, checksum },
+        } => {
+            buf.push(TAG_ARRIVAL_IMAGE);
+            put_varint(buf, zigzag(e.t_us as i64 - prev_t_us as i64));
+            put_varint(buf, *id);
+            put_str(buf, model);
+            put_varint(buf, shape.len() as u64);
+            for &d in shape {
+                put_varint(buf, d as u64);
+            }
+            put_varint(buf, *seed);
+            buf.extend_from_slice(&checksum.to_le_bytes());
+        }
+        EventBody::Enqueue { id, depth } => {
+            buf.push(TAG_ENQUEUE);
+            put_varint(buf, zigzag(e.t_us as i64 - prev_t_us as i64));
+            put_varint(buf, *id);
+            put_varint(buf, *depth as u64);
+        }
+        EventBody::Reject { id, reason } => {
+            buf.push(TAG_REJECT);
+            put_varint(buf, zigzag(e.t_us as i64 - prev_t_us as i64));
+            put_varint(buf, *id);
+            put_str(buf, reason);
+        }
+        EventBody::BatchFormed { ids } => {
+            buf.push(TAG_BATCH_FORMED);
+            put_varint(buf, zigzag(e.t_us as i64 - prev_t_us as i64));
+            put_u64_list(buf, ids);
+        }
+        EventBody::BatchExecuted { ids, bucket, exec_us } => {
+            buf.push(TAG_BATCH_EXECUTED);
+            put_varint(buf, zigzag(e.t_us as i64 - prev_t_us as i64));
+            put_u64_list(buf, ids);
+            put_varint(buf, *bucket as u64);
+            put_varint(buf, *exec_us);
+        }
+        EventBody::Response { id, batch_size, bucket, latency_us,
+                              checksum } => {
+            buf.push(TAG_RESPONSE);
+            put_varint(buf, zigzag(e.t_us as i64 - prev_t_us as i64));
+            put_varint(buf, *id);
+            put_varint(buf, *batch_size as u64);
+            put_varint(buf, *bucket as u64);
+            put_varint(buf, *latency_us);
+            buf.extend_from_slice(&checksum.to_le_bytes());
+        }
+        EventBody::Failed { id, kind, reason } => {
+            buf.push(TAG_FAILED);
+            put_varint(buf, zigzag(e.t_us as i64 - prev_t_us as i64));
+            put_varint(buf, *id);
+            put_str(buf, kind);
+            put_str(buf, reason);
+        }
+        EventBody::Checkpoint(c) => {
+            buf.push(TAG_CHECKPOINT);
+            put_varint(buf, zigzag(e.t_us as i64 - prev_t_us as i64));
+            put_varint(buf, c.seq);
+            put_varint(buf, c.events);
+            put_u64_list(buf, &c.pending);
+            put_varint(buf, c.next_id);
+            put_varint(buf, c.submitted);
+            put_varint(buf, c.completed);
+            put_varint(buf, c.rejected);
+            put_varint(buf, c.failed);
+            buf.extend_from_slice(&c.fingerprint.to_le_bytes());
+            buf.extend_from_slice(&c.chain.to_le_bytes());
+            put_metrics(buf, &c.metrics);
+        }
+    }
+}
+
+/// Streaming binary-trace writer: one reused scratch buffer, flushed to
+/// the inner writer per event — the zero-steady-state-allocation sink
+/// the recording path and the serving bench use.
+pub struct BinaryWriter<W: Write> {
+    w: W,
+    prev_t_us: u64,
+    scratch: Vec<u8>,
+}
+
+impl<W: Write> BinaryWriter<W> {
+    /// Write magic + version + header, ready for events.
+    pub fn new(w: W, header: &TraceHeader) -> Result<Self> {
+        let mut bw =
+            BinaryWriter { w, prev_t_us: 0, scratch: Vec::new() };
+        encode_header_into(&mut bw.scratch, header);
+        bw.flush_scratch()?;
+        Ok(bw)
+    }
+
+    fn flush_scratch(&mut self) -> Result<()> {
+        self.w.write_all(&self.scratch)?;
+        self.scratch.clear();
+        Ok(())
+    }
+
+    pub fn event(&mut self, e: &TraceEvent) -> Result<()> {
+        encode_event_into(&mut self.scratch, self.prev_t_us, e);
+        self.prev_t_us = e.t_us;
+        self.flush_scratch()
+    }
+
+    /// Current capacity of the reused scratch buffer — stable once
+    /// warmed up (asserted by the serving bench's recording-overhead
+    /// phase).
+    pub fn scratch_capacity(&self) -> usize {
+        self.scratch.capacity()
+    }
+
+    pub fn finish(mut self) -> Result<W> {
+        self.w.flush()?;
+        Ok(self.w)
+    }
+}
+
+/// Write a complete trace in the binary format.
+pub fn write_trace(path: &Path, header: &TraceHeader,
+                   events: &[TraceEvent]) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating trace {}", path.display()))?;
+    let mut w = BinaryWriter::new(BufWriter::new(file), header)?;
+    for e in events {
+        w.event(e)?;
+    }
+    w.finish()?;
+    Ok(())
+}
+
+// ----------------------------------------------------------------- decode
+
+/// Cursor over the raw bytes; every error names the byte offset, so a
+/// truncated or bit-flipped trace is rejected with a location instead
+/// of silently skipped.
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn err(&self, what: &str) -> String {
+        format!("{what} at byte {}", self.pos)
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.bytes.len() {
+            return Err(format!(
+                "unexpected end of file at byte {} (wanted {n} more \
+                 byte(s) — truncated trace?)",
+                self.bytes.len()
+            ));
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn byte(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn varint(&mut self) -> Result<u64, String> {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let b = self.byte()?;
+            if shift == 63 && b > 1 {
+                return Err(self.err("varint overflows u64"));
+            }
+            v |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+            if shift > 63 {
+                return Err(self.err("varint too long"));
+            }
+        }
+    }
+
+    fn len(&mut self, cap: u64, what: &str) -> Result<usize, String> {
+        let n = self.varint()?;
+        if n > cap {
+            return Err(self.err(&format!(
+                "implausible {what} length {n} (cap {cap})"
+            )));
+        }
+        Ok(n as usize)
+    }
+
+    fn str(&mut self) -> Result<String, String> {
+        let n = self.len(MAX_STR, "string")?;
+        let at = self.pos;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| format!("invalid UTF-8 string at byte {at}"))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>, String> {
+        let n = self.len(MAX_LIST, "f32 list")?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let b = self.take(4)?;
+            out.push(f32::from_bits(u32::from_le_bytes(
+                b.try_into().unwrap(),
+            )));
+        }
+        Ok(out)
+    }
+
+    fn u64_list(&mut self) -> Result<Vec<u64>, String> {
+        let n = self.len(MAX_LIST, "u64 list")?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.varint()?);
+        }
+        Ok(out)
+    }
+
+    fn raw_u64(&mut self) -> Result<u64, String> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn t_us(&mut self, prev: u64) -> Result<u64, String> {
+        let at = self.pos;
+        let delta = unzigzag(self.varint()?);
+        (prev as i64)
+            .checked_add(delta)
+            .filter(|&t| t >= 0)
+            .map(|t| t as u64)
+            .ok_or_else(|| {
+                format!("timestamp delta underflows at byte {at}")
+            })
+    }
+
+    fn metrics(&mut self) -> Result<MetricsSnapshot, String> {
+        let mut out = MetricsSnapshot::default();
+        for _ in 0..self.len(MAX_LIST, "metrics counter")? {
+            let k = self.str()?;
+            let v = self.varint()?;
+            out.counters.insert(k, v);
+        }
+        for _ in 0..self.len(MAX_LIST, "metrics gauge")? {
+            let k = self.str()?;
+            let v = unzigzag(self.varint()?);
+            out.gauges.insert(k, v);
+        }
+        for _ in 0..self.len(MAX_LIST, "metrics histogram")? {
+            let k = self.str()?;
+            let sum_us = self.varint()?;
+            let max_us = self.varint()?;
+            let npairs = self.len(MAX_LIST, "sparse bucket")?;
+            let mut pairs = Vec::with_capacity(npairs);
+            for _ in 0..npairs {
+                let idx = self.varint()? as usize;
+                let n = self.varint()?;
+                pairs.push((idx, n));
+            }
+            let h = HistogramSnapshot::from_sparse(&pairs, sum_us,
+                                                   max_us)
+                .map_err(|e| format!("histogram {k:?}: {e}"))?;
+            out.histograms.insert(k, h);
+        }
+        Ok(out)
+    }
+
+    fn event(&mut self, prev_t_us: u64) -> Result<TraceEvent, String> {
+        let at = self.pos;
+        let tag = self.byte()?;
+        let t_us = self.t_us(prev_t_us)?;
+        let body = match tag {
+            TAG_ARRIVAL_LATENT => EventBody::RequestArrival {
+                id: self.varint()?,
+                model: self.str()?,
+                payload: ArrivalPayload::Latent {
+                    z: self.f32s()?,
+                    cond: self.f32s()?,
+                },
+            },
+            TAG_ARRIVAL_IMAGE => {
+                let id = self.varint()?;
+                let model = self.str()?;
+                let ndims = self.len(16, "shape")?;
+                let mut shape = Vec::with_capacity(ndims);
+                for _ in 0..ndims {
+                    shape.push(self.varint()? as usize);
+                }
+                EventBody::RequestArrival {
+                    id,
+                    model,
+                    payload: ArrivalPayload::Image {
+                        shape,
+                        seed: self.varint()?,
+                        checksum: self.raw_u64()?,
+                    },
+                }
+            }
+            TAG_ENQUEUE => EventBody::Enqueue {
+                id: self.varint()?,
+                depth: self.varint()? as usize,
+            },
+            TAG_REJECT => EventBody::Reject {
+                id: self.varint()?,
+                reason: self.str()?,
+            },
+            TAG_BATCH_FORMED => EventBody::BatchFormed {
+                ids: self.u64_list()?,
+            },
+            TAG_BATCH_EXECUTED => EventBody::BatchExecuted {
+                ids: self.u64_list()?,
+                bucket: self.varint()? as usize,
+                exec_us: self.varint()?,
+            },
+            TAG_RESPONSE => EventBody::Response {
+                id: self.varint()?,
+                batch_size: self.varint()? as usize,
+                bucket: self.varint()? as usize,
+                latency_us: self.varint()?,
+                checksum: self.raw_u64()?,
+            },
+            TAG_FAILED => EventBody::Failed {
+                id: self.varint()?,
+                kind: self.str()?,
+                reason: self.str()?,
+            },
+            TAG_CHECKPOINT => {
+                EventBody::Checkpoint(Box::new(CheckpointState {
+                    seq: self.varint()?,
+                    events: self.varint()?,
+                    pending: self.u64_list()?,
+                    next_id: self.varint()?,
+                    submitted: self.varint()?,
+                    completed: self.varint()?,
+                    rejected: self.varint()?,
+                    failed: self.varint()?,
+                    fingerprint: self.raw_u64()?,
+                    chain: self.raw_u64()?,
+                    metrics: self.metrics()?,
+                }))
+            }
+            other => {
+                return Err(format!(
+                    "unknown event tag {other} at byte {at}"
+                ));
+            }
+        };
+        Ok(TraceEvent { t_us, body })
+    }
+}
+
+/// Decode a complete binary trace from raw bytes.
+pub fn decode_trace(bytes: &[u8])
+                    -> Result<(TraceHeader, Vec<TraceEvent>), String> {
+    let mut r = Reader { bytes, pos: 0 };
+    let magic = r.take(MAGIC.len())?;
+    if magic != MAGIC {
+        return Err("not a huge2 binary trace (bad magic)".into());
+    }
+    let version = r.varint()?;
+    // The binary format was born at v4: there are no older binary
+    // traces to accept, and newer ones are rejected like JSONL does.
+    if version != TRACE_VERSION as u64 {
+        return Err(format!(
+            "unsupported binary trace version {version} (this build \
+             reads {TRACE_VERSION})"
+        ));
+    }
+    let header = TraceHeader {
+        model: r.str()?,
+        backend: r.str()?,
+        seed: r.varint()?,
+        z_dim: r.varint()? as usize,
+        cond_dim: r.varint()? as usize,
+        task: r.str()?,
+        net: r.str()?,
+        engine_digest: r.str()?,
+    };
+    let mut events = Vec::new();
+    let mut prev_t_us = 0u64;
+    while r.pos < r.bytes.len() {
+        let e = r.event(prev_t_us)?;
+        prev_t_us = e.t_us;
+        events.push(e);
+    }
+    Ok((header, events))
+}
+
+/// Read a complete binary trace file.
+pub fn read_trace(path: &Path)
+                  -> Result<(TraceHeader, Vec<TraceEvent>)> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("opening trace {}", path.display()))?;
+    decode_trace(&bytes)
+        .map_err(|e| anyhow!("{}: {e}", path.display()))
+}
+
+/// Does `path` start with the binary-trace magic? (Extension is
+/// irrelevant on the read side — only the first bytes decide.)
+pub fn sniff_is_binary(path: &Path) -> Result<bool> {
+    use std::io::Read;
+    let mut file = std::fs::File::open(path)
+        .with_context(|| format!("opening trace {}", path.display()))?;
+    let mut head = [0u8; 8];
+    let mut n = 0;
+    while n < head.len() {
+        let read = file.read(&mut head[n..])
+            .with_context(|| format!("reading {}", path.display()))?;
+        if read == 0 {
+            break;
+        }
+        n += read;
+    }
+    Ok(n == head.len() && head == MAGIC)
+}
+
+/// Load a trace in either format: binary when the magic matches, JSONL
+/// otherwise. This is the read path every consumer (`replay`, `trace
+/// info/convert/fingerprints/bisect`) goes through — the file
+/// extension never matters on read.
+pub fn read_trace_auto(path: &Path)
+                       -> Result<(TraceHeader, Vec<TraceEvent>)> {
+    if sniff_is_binary(path)? {
+        read_trace(path)
+    } else {
+        codec::read_trace(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn header() -> TraceHeader {
+        TraceHeader {
+            model: "dcgan".into(),
+            backend: "native".into(),
+            seed: 7,
+            z_dim: 100,
+            cond_dim: 0,
+            task: "generate".into(),
+            net: String::new(),
+            engine_digest: "00ff00ff00ff00ff".into(),
+        }
+    }
+
+    fn sample_events() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent {
+                t_us: 10,
+                body: EventBody::RequestArrival {
+                    id: 0,
+                    model: "dcgan µ\"\\".into(),
+                    payload: ArrivalPayload::Latent {
+                        z: vec![1.5, -0.0, f32::NAN,
+                                f32::MIN_POSITIVE],
+                        cond: vec![],
+                    },
+                },
+            },
+            TraceEvent {
+                t_us: 11,
+                body: EventBody::Enqueue { id: 0, depth: 1 },
+            },
+            TraceEvent {
+                t_us: 12,
+                body: EventBody::RequestArrival {
+                    id: 1,
+                    model: "seg".into(),
+                    payload: ArrivalPayload::Image {
+                        shape: vec![1, 33, 33, 3],
+                        seed: 0xfeed_beef,
+                        checksum: u64::MAX,
+                    },
+                },
+            },
+            TraceEvent {
+                t_us: 12,
+                body: EventBody::Reject { id: 2, reason: "full".into() },
+            },
+            TraceEvent {
+                t_us: 40,
+                body: EventBody::BatchFormed { ids: vec![0, 1] },
+            },
+            TraceEvent {
+                t_us: 90,
+                body: EventBody::BatchExecuted {
+                    ids: vec![0, 1],
+                    bucket: 2,
+                    exec_us: 50,
+                },
+            },
+            TraceEvent {
+                t_us: 95,
+                body: EventBody::Response {
+                    id: 0,
+                    batch_size: 2,
+                    bucket: 2,
+                    latency_us: 85,
+                    checksum: 0x9f86_d081_884c_7d65,
+                },
+            },
+            TraceEvent {
+                t_us: 96,
+                body: EventBody::Failed {
+                    id: 1,
+                    kind: "batch_failed".into(),
+                    reason: "boom\n".into(),
+                },
+            },
+            TraceEvent {
+                t_us: 97,
+                body: EventBody::Checkpoint(Box::new(CheckpointState {
+                    seq: 1,
+                    events: 8,
+                    pending: vec![],
+                    next_id: 3,
+                    submitted: 3,
+                    completed: 1,
+                    rejected: 1,
+                    failed: 1,
+                    fingerprint: 0x0123_4567_89ab_cdef,
+                    chain: u64::MAX,
+                    metrics: MetricsSnapshot::default(),
+                })),
+            },
+        ]
+    }
+
+    fn encode(h: &TraceHeader, evs: &[TraceEvent]) -> Vec<u8> {
+        let mut buf = Vec::new();
+        encode_header_into(&mut buf, h);
+        let mut prev = 0;
+        for e in evs {
+            encode_event_into(&mut buf, prev, e);
+            prev = e.t_us;
+        }
+        buf
+    }
+
+    #[test]
+    fn varint_round_trips() {
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            let mut r = Reader { bytes: &buf, pos: 0 };
+            assert_eq!(r.varint().unwrap(), v);
+            assert_eq!(r.pos, buf.len());
+        }
+        for v in [0i64, 1, -1, 63, -64, i64::MAX, i64::MIN] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+    }
+
+    #[test]
+    fn every_event_kind_round_trips() {
+        let h = header();
+        let evs = sample_events();
+        let bytes = encode(&h, &evs);
+        let (h2, evs2) = decode_trace(&bytes).unwrap();
+        assert_eq!(h2, h);
+        // NaN != NaN under PartialEq: compare via re-encoding, which is
+        // bit-pattern-faithful (same trick as the JSONL codec tests).
+        assert_eq!(encode(&h2, &evs2), bytes);
+        assert_eq!(evs2.len(), evs.len());
+    }
+
+    #[test]
+    fn truncation_anywhere_is_rejected() {
+        let bytes = encode(&header(), &sample_events());
+        // every strict prefix must fail (clean EOF only at event
+        // boundaries — and the header alone IS a valid empty trace, so
+        // skip exact boundary positions)
+        let boundaries: Vec<usize> = {
+            let mut ends = Vec::new();
+            let mut buf = Vec::new();
+            encode_header_into(&mut buf, &header());
+            ends.push(buf.len());
+            let mut prev = 0;
+            for e in sample_events() {
+                encode_event_into(&mut buf, prev, &e);
+                prev = e.t_us;
+                ends.push(buf.len());
+            }
+            ends
+        };
+        for cut in 0..bytes.len() {
+            if boundaries.contains(&cut) {
+                assert!(decode_trace(&bytes[..cut]).is_ok(),
+                        "cut at boundary {cut} must decode");
+            } else {
+                assert!(decode_trace(&bytes[..cut]).is_err(),
+                        "mid-event cut at byte {cut} must be rejected");
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_magic_and_version_are_rejected() {
+        let mut bytes = encode(&header(), &[]);
+        bytes[0] ^= 0xff;
+        let err = decode_trace(&bytes).unwrap_err();
+        assert!(err.contains("magic"), "{err}");
+        let mut bytes = encode(&header(), &[]);
+        bytes[8] = 99; // version varint
+        let err = decode_trace(&bytes).unwrap_err();
+        assert!(err.contains("version 99"), "{err}");
+    }
+
+    #[test]
+    fn unknown_tag_and_bogus_length_are_rejected() {
+        let mut bytes = encode(&header(), &[]);
+        bytes.push(0xfe); // no such tag
+        bytes.push(0x00);
+        let err = decode_trace(&bytes).unwrap_err();
+        assert!(err.contains("unknown event tag 254"), "{err}");
+        // an arrival whose z-length claims 2^30 floats: clean error,
+        // no allocation
+        let mut bytes = encode(&header(), &[]);
+        bytes.push(TAG_ARRIVAL_LATENT);
+        bytes.push(0); // Δt
+        bytes.push(0); // id
+        bytes.push(1); // model len 1
+        bytes.push(b'm');
+        put_varint(&mut bytes, 1 << 30); // z count
+        let err = decode_trace(&bytes).unwrap_err();
+        assert!(err.contains("implausible"), "{err}");
+    }
+
+    #[test]
+    fn file_round_trip_and_sniffing() {
+        let dir = std::env::temp_dir();
+        let bin = dir.join(format!("huge2_bin_codec_{}.bin",
+                                   std::process::id()));
+        let jsonl = dir.join(format!("huge2_bin_codec_{}.jsonl",
+                                     std::process::id()));
+        let evs: Vec<TraceEvent> = sample_events()
+            .into_iter()
+            .filter(|e| {
+                // keep the comparison PartialEq-friendly here: drop the
+                // NaN-bearing arrival (bit-exactness is covered above)
+                !matches!(&e.body,
+                          EventBody::RequestArrival {
+                              payload: ArrivalPayload::Latent { z, .. },
+                              ..
+                          } if z.iter().any(|v| v.is_nan()))
+            })
+            .collect();
+        write_trace(&bin, &header(), &evs).unwrap();
+        codec::write_trace(&jsonl, &header(), &evs).unwrap();
+        assert!(sniff_is_binary(&bin).unwrap());
+        assert!(!sniff_is_binary(&jsonl).unwrap());
+        // auto-detection reads both, extension notwithstanding
+        let (hb, eb) = read_trace_auto(&bin).unwrap();
+        let (hj, ej) = read_trace_auto(&jsonl).unwrap();
+        assert_eq!(hb, hj);
+        assert_eq!(eb, ej);
+        assert_eq!(eb, evs);
+        // binary is materially smaller even on this tiny mixed sample
+        let bin_len = std::fs::metadata(&bin).unwrap().len();
+        let jsonl_len = std::fs::metadata(&jsonl).unwrap().len();
+        assert!(bin_len * 2 < jsonl_len,
+                "binary {bin_len} B vs jsonl {jsonl_len} B");
+        std::fs::remove_file(&bin).ok();
+        std::fs::remove_file(&jsonl).ok();
+    }
+
+    #[test]
+    fn writer_scratch_stops_growing() {
+        let mut w =
+            BinaryWriter::new(Vec::new(), &header()).unwrap();
+        let evs = sample_events();
+        for e in &evs {
+            w.event(e).unwrap();
+        }
+        let warmed = w.scratch_capacity();
+        for _ in 0..100 {
+            for e in &evs {
+                w.event(e).unwrap();
+            }
+        }
+        assert_eq!(w.scratch_capacity(), warmed,
+                   "steady-state encoding must not reallocate");
+        let bytes = w.finish().unwrap();
+        // repeated event blocks rewind t_us — zigzag deltas encode the
+        // non-monotone stream and decode reproduces it exactly
+        let (_, evs2) = decode_trace(&bytes).unwrap();
+        assert_eq!(evs2.len(), evs.len() * 101);
+        assert_eq!(evs2[evs.len()].t_us, evs[0].t_us);
+    }
+}

@@ -19,8 +19,8 @@
 //! {"t_us":9613,"ev":"failed","id":1,"kind":"batch_failed","reason":"worker panicked: boom"}
 //! ```
 //!
-//! **Versioning** (DESIGN.md §8/§11): writes always stamp
-//! [`TRACE_VERSION`] (3). Reads accept v1..=v3; a v1 header decodes with
+//! **Versioning** (DESIGN.md §8/§11/§13): writes always stamp
+//! [`TRACE_VERSION`] (4). Reads accept v1..=v4; a v1 header decodes with
 //! `task="generate"`, `net=""` — v1 GAN traces replay unchanged, because
 //! latent arrival events are encoded identically in all versions. New
 //! in v2: `task`/`net` header fields, and image-payload arrivals
@@ -30,16 +30,25 @@
 //! (`{"t_us":…,"ev":"failed","id":…,"kind":"batch_failed","reason":"…"}`)
 //! — a request that was accepted but terminated in a typed `ServeError`;
 //! header fields are unchanged from v2, so v2 traces (which simply
-//! contain no `failed` events) decode as-is.
+//! contain no `failed` events) decode as-is. New in v4: `checkpoint`
+//! events (window boundaries carrying pending ids, folded counters,
+//! fingerprints, and an embedded metrics snapshot — DESIGN.md §13), and
+//! a binary twin of this whole format ([`super::binary`], auto-detected
+//! by magic). v1–v3 traces simply contain no checkpoints and decode
+//! as-is.
 
 use anyhow::{anyhow, Context, Result};
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
 
-use super::event::{ArrivalPayload, EventBody, TraceEvent, TraceHeader};
+use crate::metrics::{HistogramSnapshot, MetricsSnapshot};
 
-/// Current trace-format version (the header's `huge2_trace` value).
-pub const TRACE_VERSION: u32 = 3;
+use super::event::{ArrivalPayload, CheckpointState, EventBody,
+                   TraceEvent, TraceHeader};
+
+/// Current trace-format version (the header's `huge2_trace` value, and
+/// the binary codec's version field).
+pub const TRACE_VERSION: u32 = 4;
 
 // ------------------------------------------------------------------ encode
 
@@ -151,7 +160,64 @@ pub fn encode_event(e: &TraceEvent) -> String {
             esc(kind),
             esc(reason)
         ),
+        EventBody::Checkpoint(c) => format!(
+            "{{\"t_us\":{t},\"ev\":\"checkpoint\",\"seq\":{},\
+             \"events\":{},\"pending\":{},\"next_id\":{},\
+             \"submitted\":{},\"completed\":{},\"rejected\":{},\
+             \"failed\":{},\"fingerprint\":\"{:016x}\",\
+             \"chain\":\"{:016x}\",{}}}",
+            c.seq,
+            c.events,
+            nums_json(&c.pending),
+            c.next_id,
+            c.submitted,
+            c.completed,
+            c.rejected,
+            c.failed,
+            c.fingerprint,
+            c.chain,
+            metrics_json(&c.metrics)
+        ),
     }
+}
+
+/// The checkpoint's embedded metrics snapshot, flattened into the
+/// codec's value model (numbers, strings, nested lists — no nested
+/// objects): counters as an alternating `[name, value, …]` list,
+/// gauges likewise but with the i64 as a decimal *string* (JSON-number
+/// fields here are u64-only, and gauges may be negative), histograms
+/// as `[name, sum_us, max_us, [idx, count, …]]` entries in the sparse
+/// form of [`HistogramSnapshot::to_sparse`].
+fn metrics_json(m: &MetricsSnapshot) -> String {
+    let counters: Vec<String> = m
+        .counters
+        .iter()
+        .map(|(k, v)| format!("\"{}\",{v}", esc(k)))
+        .collect();
+    let gauges: Vec<String> = m
+        .gauges
+        .iter()
+        .map(|(k, v)| format!("\"{}\",\"{v}\"", esc(k)))
+        .collect();
+    let hists: Vec<String> = m
+        .histograms
+        .iter()
+        .map(|(k, h)| {
+            let (pairs, sum_us, max_us) = h.to_sparse();
+            let flat: Vec<String> = pairs
+                .iter()
+                .flat_map(|&(i, n)| [i.to_string(), n.to_string()])
+                .collect();
+            format!("[\"{}\",{sum_us},{max_us},[{}]]", esc(k),
+                    flat.join(","))
+        })
+        .collect();
+    format!(
+        "\"m_counters\":[{}],\"m_gauges\":[{}],\"m_hists\":[{}]",
+        counters.join(","),
+        gauges.join(","),
+        hists.join(",")
+    )
 }
 
 // ------------------------------------------------------------------ decode
@@ -393,6 +459,87 @@ fn hex64(m: &[(String, Val)], k: &str) -> Result<u64, String> {
         .map_err(|_| format!("field {k:?}: bad u64 hex {s:?}"))
 }
 
+/// Inverse of [`metrics_json`].
+fn metrics_from(m: &[(String, Val)]) -> Result<MetricsSnapshot, String> {
+    let mut out = MetricsSnapshot::default();
+    let Val::List(items) = get(m, "m_counters")? else {
+        return Err("field \"m_counters\": expected list".into());
+    };
+    for pair in items.chunks(2) {
+        match pair {
+            [Val::Str(k), Val::Num(v)] => {
+                out.counters.insert(k.clone(), *v);
+            }
+            other => {
+                return Err(format!(
+                    "m_counters: expected [name, value] pairs, got \
+                     {other:?}"
+                ));
+            }
+        }
+    }
+    let Val::List(items) = get(m, "m_gauges")? else {
+        return Err("field \"m_gauges\": expected list".into());
+    };
+    for pair in items.chunks(2) {
+        match pair {
+            [Val::Str(k), Val::Str(v)] => {
+                let v = v.parse::<i64>().map_err(|_| {
+                    format!("m_gauges: bad i64 {v:?} for {k:?}")
+                })?;
+                out.gauges.insert(k.clone(), v);
+            }
+            other => {
+                return Err(format!(
+                    "m_gauges: expected [name, \"value\"] pairs, got \
+                     {other:?}"
+                ));
+            }
+        }
+    }
+    let Val::List(items) = get(m, "m_hists")? else {
+        return Err("field \"m_hists\": expected list".into());
+    };
+    for item in items {
+        let Val::List(entry) = item else {
+            return Err(format!("m_hists: expected list entry, got \
+                                {item:?}"));
+        };
+        let [Val::Str(k), Val::Num(sum_us), Val::Num(max_us),
+             Val::List(flat)] = entry.as_slice()
+        else {
+            return Err(format!(
+                "m_hists: expected [name, sum_us, max_us, buckets], \
+                 got {entry:?}"
+            ));
+        };
+        if flat.len() % 2 != 0 {
+            return Err(format!(
+                "m_hists {k:?}: odd sparse-bucket list length {}",
+                flat.len()
+            ));
+        }
+        let mut pairs = Vec::with_capacity(flat.len() / 2);
+        for pair in flat.chunks(2) {
+            match pair {
+                [Val::Num(i), Val::Num(n)] => {
+                    pairs.push((*i as usize, *n));
+                }
+                other => {
+                    return Err(format!(
+                        "m_hists {k:?}: expected numeric [idx, count] \
+                         pairs, got {other:?}"
+                    ));
+                }
+            }
+        }
+        let h = HistogramSnapshot::from_sparse(&pairs, *sum_us, *max_us)
+            .map_err(|e| format!("m_hists {k:?}: {e}"))?;
+        out.histograms.insert(k.clone(), h);
+    }
+    Ok(out)
+}
+
 /// Parse the header line. Accepts format versions `1..=TRACE_VERSION`;
 /// v1 headers decode with `task="generate"`, `net=""`.
 pub fn decode_header(line: &str) -> Result<TraceHeader, String> {
@@ -484,6 +631,19 @@ pub fn decode_event(line: &str) -> Result<TraceEvent, String> {
             kind: string(&m, "kind")?,
             reason: string(&m, "reason")?,
         },
+        "checkpoint" => EventBody::Checkpoint(Box::new(CheckpointState {
+            seq: num(&m, "seq")?,
+            events: num(&m, "events")?,
+            pending: u64_list(&m, "pending")?,
+            next_id: num(&m, "next_id")?,
+            submitted: num(&m, "submitted")?,
+            completed: num(&m, "completed")?,
+            rejected: num(&m, "rejected")?,
+            failed: num(&m, "failed")?,
+            fingerprint: hex64(&m, "fingerprint")?,
+            chain: hex64(&m, "chain")?,
+            metrics: metrics_from(&m)?,
+        })),
         other => return Err(format!("unknown event kind {other:?}")),
     };
     Ok(TraceEvent { t_us, body })
@@ -587,7 +747,7 @@ mod tests {
         assert_eq!(h.task, "generate");
         assert_eq!(h.net, "");
         // future versions are rejected, past versions are not
-        assert!(decode_header("{\"huge2_trace\":4}").is_err());
+        assert!(decode_header("{\"huge2_trace\":5}").is_err());
         assert!(decode_header("{\"huge2_trace\":0}").is_err());
     }
 
@@ -689,6 +849,69 @@ mod tests {
             // is bit-pattern-faithful.
             assert_eq!(encode_event(&back), line, "line {line}");
         }
+    }
+
+    #[test]
+    fn checkpoint_round_trips_with_metrics() {
+        let mut metrics = MetricsSnapshot::default();
+        metrics.counters.insert(
+            "huge2_requests_total{model=\"tiny\"}".into(), 42);
+        metrics.gauges.insert("huge2_queue_depth".into(), -3);
+        let hist = crate::metrics::Histogram::new();
+        hist.record_us(7);
+        hist.record_us(70_000);
+        metrics
+            .histograms
+            .insert("huge2_latency_us".into(), hist.snapshot());
+        let e = TraceEvent {
+            t_us: 99,
+            body: EventBody::Checkpoint(Box::new(CheckpointState {
+                seq: 2,
+                events: 512,
+                pending: vec![17, 19],
+                next_id: 20,
+                submitted: 20,
+                completed: 17,
+                rejected: 1,
+                failed: 0,
+                fingerprint: u64::MAX,
+                chain: 0x0123_4567_89ab_cdef,
+                metrics,
+            })),
+        };
+        let line = encode_event(&e);
+        assert_eq!(decode_event(&line).unwrap(), e);
+        // quantiles survive the sparse histogram round trip
+        let EventBody::Checkpoint(back) =
+            decode_event(&line).unwrap().body
+        else {
+            unreachable!()
+        };
+        let h = &back.metrics.histograms["huge2_latency_us"];
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile_us(0.99) >= 65536);
+        // a corrupt fingerprint field is rejected
+        let bad = line.replace("\"fingerprint\":\"ffff",
+                               "\"fingerprint\":\"zzzz");
+        assert!(decode_event(&bad).is_err());
+        // an empty-metrics checkpoint round-trips too
+        let e2 = TraceEvent {
+            t_us: 1,
+            body: EventBody::Checkpoint(Box::new(CheckpointState {
+                seq: 1,
+                events: 0,
+                pending: vec![],
+                next_id: 0,
+                submitted: 0,
+                completed: 0,
+                rejected: 0,
+                failed: 0,
+                fingerprint: super::super::fingerprint::FNV_OFFSET,
+                chain: 1,
+                metrics: MetricsSnapshot::default(),
+            })),
+        };
+        assert_eq!(decode_event(&encode_event(&e2)).unwrap(), e2);
     }
 
     #[test]

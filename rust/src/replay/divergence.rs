@@ -171,10 +171,21 @@ impl ReplayReport {
 pub fn diff_responses(events: &[TraceEvent],
                       replayed: &HashMap<u64, ReplayedOutcome>)
                       -> (Vec<Divergence>, usize, usize) {
+    diff_responses_at(events, replayed, 0)
+}
+
+/// [`diff_responses`] over a window slice: `base_index` is the slice's
+/// offset into the full trace, so divergence `event_index` values stay
+/// absolute trace positions whichever window was replayed.
+pub fn diff_responses_at(events: &[TraceEvent],
+                         replayed: &HashMap<u64, ReplayedOutcome>,
+                         base_index: usize)
+                         -> (Vec<Divergence>, usize, usize) {
     let mut divergences = Vec::new();
     let mut compared = 0;
     let mut matched = 0;
     for (idx, ev) in events.iter().enumerate() {
+        let idx = base_index + idx;
         match &ev.body {
             EventBody::Response { id, checksum, .. } => {
                 match replayed.get(id) {
@@ -389,6 +400,26 @@ mod tests {
         for div in &d {
             assert!(!div.to_string().is_empty());
         }
+    }
+
+    #[test]
+    fn window_diff_reports_absolute_indices() {
+        let events = vec![resp(0, 0, 10), resp(1, 1, 11)];
+        let replayed: HashMap<u64, ReplayedOutcome> =
+            [(1, ok(99))].into_iter().collect();
+        // diff only the second event, as window replay does, offset 1
+        let (d, compared, matched) =
+            diff_responses_at(&events[1..], &replayed, 1);
+        assert_eq!((compared, matched), (1, 0));
+        assert_eq!(
+            d,
+            vec![Divergence::ChecksumMismatch {
+                event_index: 1,
+                id: 1,
+                recorded: 11,
+                replayed: 99,
+            }]
+        );
     }
 
     #[test]

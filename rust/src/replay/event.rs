@@ -76,6 +76,60 @@ pub enum EventBody {
     /// checksums. `reason` is human telemetry and deliberately not
     /// compared (it may carry run-specific detail).
     Failed { id: u64, kind: String, reason: String },
+    /// A periodic state snapshot (trace format v4): closes a replay
+    /// *window* and records everything needed to reconstruct engine
+    /// state at that boundary — in-flight request ids, outcome
+    /// counters, the id allocator, the closing window's content
+    /// fingerprint, and a metrics-registry snapshot. Emitted by the
+    /// sink every `checkpoint_every` events; `huge2 replay --window`
+    /// and `huge2 trace bisect` slice the trace at these boundaries.
+    Checkpoint(Box<CheckpointState>),
+}
+
+/// The state a [`EventBody::Checkpoint`] carries (DESIGN.md §13).
+///
+/// Every field except `metrics` is a pure fold over the event stream
+/// preceding the checkpoint, so a reader can *verify* a checkpoint
+/// against the events it summarizes — and
+/// [`window::verify_fingerprints`](super::window::verify_fingerprints)
+/// does, incrementally, at load. The engine's only live counter/RNG-like
+/// state is the request-id allocator (`next_id`): model weights rebuild
+/// deterministically from the header seed and the workload RNG is
+/// externalized by bit-exact payload capture, so nothing else needs
+/// snapshotting to resume a window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointState {
+    /// 1-based checkpoint ordinal; this checkpoint closes window
+    /// `seq - 1` (0-based).
+    pub seq: u64,
+    /// Non-checkpoint events preceding this checkpoint in the stream.
+    pub events: u64,
+    /// Request ids submitted but not yet terminal (no response, typed
+    /// failure, or reject recorded) at this boundary, ascending. A
+    /// window replay starting here re-drives exactly these arrivals
+    /// before the window's own.
+    pub pending: Vec<u64>,
+    /// One past the highest request id seen — the id allocator's state.
+    pub next_id: u64,
+    /// Outcome counters folded from the stream (the conservation
+    /// invariant holds: `submitted - completed - rejected - failed ==
+    /// pending.len()`).
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub failed: u64,
+    /// FNV-1a fingerprint of the closing window's deterministic content
+    /// ([`fingerprint`](super::fingerprint)).
+    pub fingerprint: u64,
+    /// Fingerprint chain over all windows so far — commits to the whole
+    /// prefix, so a verified checkpoint transitively verifies every
+    /// earlier window.
+    pub chain: u64,
+    /// Point-in-time [`MetricsRegistry`](crate::metrics::MetricsRegistry)
+    /// snapshot (PR-6 observability surface). Telemetry, not replay
+    /// state: it is *not* covered by the fingerprint and may be empty
+    /// for checkpoints synthesized offline.
+    pub metrics: crate::metrics::MetricsSnapshot,
 }
 
 impl EventBody {
@@ -89,6 +143,7 @@ impl EventBody {
             EventBody::BatchExecuted { .. } => "batch_executed",
             EventBody::Response { .. } => "response",
             EventBody::Failed { .. } => "failed",
+            EventBody::Checkpoint(_) => "checkpoint",
         }
     }
 
@@ -101,7 +156,8 @@ impl EventBody {
             | EventBody::Response { id, .. }
             | EventBody::Failed { id, .. } => Some(*id),
             EventBody::BatchFormed { .. }
-            | EventBody::BatchExecuted { .. } => None,
+            | EventBody::BatchExecuted { .. }
+            | EventBody::Checkpoint(_) => None,
         }
     }
 }
@@ -168,6 +224,19 @@ mod tests {
                 kind: "batch_failed".into(),
                 reason: "r".into(),
             },
+            EventBody::Checkpoint(Box::new(CheckpointState {
+                seq: 1,
+                events: 7,
+                pending: vec![0],
+                next_id: 1,
+                submitted: 1,
+                completed: 0,
+                rejected: 0,
+                failed: 0,
+                fingerprint: 0xfeed,
+                chain: 0xbeef,
+                metrics: Default::default(),
+            })),
         ];
         let mut kinds: Vec<&str> = evs.iter().map(|e| e.kind()).collect();
         kinds.sort_unstable();

@@ -1,0 +1,190 @@
+//! Rolling FNV-1a fingerprints over the *deterministic* content of a
+//! trace window (DESIGN.md §13).
+//!
+//! A fingerprint covers exactly what replay pins: arrival payloads
+//! (latent bits, image shape/seed/checksum) and recorded outcomes
+//! (response checksums, failure kinds, reject ids). Scheduling telemetry
+//! — enqueue depths, batch composition, execution times, timestamps — is
+//! deliberately **excluded**: a valid replay is allowed to batch
+//! differently (DESIGN.md §7), so hashing scheduling detail would make
+//! every fingerprint unreproducible by construction. What remains is a
+//! per-window tamper-evidence seal: flip one latent bit or one recorded
+//! checksum and the window's fingerprint (verified incrementally at
+//! load) breaks, naming the window.
+//!
+//! The hash is FNV-1a 64 — the same primitive the engine-selection and
+//! plan digests use — over a canonical byte encoding (tag byte, then
+//! little-endian fixed-width fields). Checkpoint events are boundaries,
+//! not content, and are never hashed.
+
+use super::event::{ArrivalPayload, EventBody};
+
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a 64 hasher.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fnv(u64);
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv {
+    pub fn new() -> Self {
+        Fnv(FNV_OFFSET)
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Fold one event into a window fingerprint. Events that carry no
+/// deterministic content (scheduling telemetry, checkpoints) are
+/// no-ops, so the fingerprint of a window is invariant under the
+/// scheduling jitter a legitimate re-recording would show.
+pub fn fold_event(h: &mut Fnv, body: &EventBody) {
+    match body {
+        EventBody::RequestArrival {
+            id,
+            model,
+            payload: ArrivalPayload::Latent { z, cond },
+        } => {
+            h.write(&[0x01]);
+            h.write_u64(*id);
+            h.write(model.as_bytes());
+            h.write_u64(z.len() as u64);
+            for v in z {
+                h.write(&v.to_bits().to_le_bytes());
+            }
+            h.write_u64(cond.len() as u64);
+            for v in cond {
+                h.write(&v.to_bits().to_le_bytes());
+            }
+        }
+        EventBody::RequestArrival {
+            id,
+            model,
+            payload: ArrivalPayload::Image { shape, seed, checksum },
+        } => {
+            h.write(&[0x02]);
+            h.write_u64(*id);
+            h.write(model.as_bytes());
+            h.write_u64(shape.len() as u64);
+            for d in shape {
+                h.write_u64(*d as u64);
+            }
+            h.write_u64(*seed);
+            h.write_u64(*checksum);
+        }
+        // A reject is an admission outcome: hash the id but not the
+        // reason text (human telemetry, may carry run-specific detail).
+        EventBody::Reject { id, .. } => {
+            h.write(&[0x03]);
+            h.write_u64(*id);
+        }
+        EventBody::Response { id, checksum, .. } => {
+            h.write(&[0x07]);
+            h.write_u64(*id);
+            h.write_u64(*checksum);
+        }
+        EventBody::Failed { id, kind, .. } => {
+            h.write(&[0x08]);
+            h.write_u64(*id);
+            h.write(kind.as_bytes());
+        }
+        EventBody::Enqueue { .. }
+        | EventBody::BatchFormed { .. }
+        | EventBody::BatchExecuted { .. }
+        | EventBody::Checkpoint(_) => {}
+    }
+}
+
+/// Chain a finished window fingerprint onto the running chain value, so
+/// checkpoint `k`'s chain commits to every window before it. Window 0
+/// chains onto [`FNV_OFFSET`].
+pub fn chain(prev: u64, window_fp: u64) -> u64 {
+    let mut h = Fnv(prev);
+    h.write_u64(window_fp);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arrival(id: u64, z: Vec<f32>) -> EventBody {
+        EventBody::RequestArrival {
+            id,
+            model: "m".into(),
+            payload: ArrivalPayload::Latent { z, cond: vec![] },
+        }
+    }
+
+    #[test]
+    fn scheduling_events_do_not_perturb_fingerprints() {
+        let mut a = Fnv::new();
+        fold_event(&mut a, &arrival(0, vec![1.0]));
+        let mut b = Fnv::new();
+        fold_event(&mut b, &EventBody::Enqueue { id: 0, depth: 3 });
+        fold_event(&mut b, &arrival(0, vec![1.0]));
+        fold_event(&mut b, &EventBody::BatchFormed { ids: vec![0] });
+        assert_eq!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn payload_bits_do_perturb_fingerprints() {
+        let mut a = Fnv::new();
+        fold_event(&mut a, &arrival(0, vec![1.0]));
+        let mut b = Fnv::new();
+        fold_event(&mut b, &arrival(0, vec![1.0 + f32::EPSILON]));
+        assert_ne!(a.finish(), b.finish());
+        // NaN payloads hash by bit pattern, not by float compare
+        let mut c = Fnv::new();
+        fold_event(&mut c, &arrival(0, vec![f32::NAN]));
+        let mut d = Fnv::new();
+        fold_event(&mut d, &arrival(0, vec![f32::NAN]));
+        assert_eq!(c.finish(), d.finish());
+    }
+
+    #[test]
+    fn outcome_checksums_perturb_fingerprints() {
+        let resp = |latency_us, checksum| EventBody::Response {
+            id: 4,
+            batch_size: 1,
+            bucket: 1,
+            latency_us,
+            checksum,
+        };
+        let mut a = Fnv::new();
+        fold_event(&mut a, &resp(9, 10));
+        let mut b = Fnv::new();
+        fold_event(&mut b, &resp(9, 11));
+        assert_ne!(a.finish(), b.finish());
+        // latency is scheduling telemetry: not hashed
+        let mut c = Fnv::new();
+        fold_event(&mut c, &resp(99_999, 10));
+        assert_eq!(a.finish(), c.finish());
+    }
+
+    #[test]
+    fn chain_is_order_sensitive() {
+        let a = chain(chain(FNV_OFFSET, 1), 2);
+        let b = chain(chain(FNV_OFFSET, 2), 1);
+        assert_ne!(a, b);
+    }
+}

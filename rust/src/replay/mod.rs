@@ -13,10 +13,16 @@
 //!
 //! * [`event`] — the structured trace-event model + trace header.
 //! * [`codec`] — dependency-free JSONL encode/decode (bit-exact floats).
+//! * [`binary`] — the compact binary twin format (`HG2TRACE` magic,
+//!   varint fields, raw f32 bits) + magic-sniffing auto-detection.
 //! * [`recorder`] — the `Arc<TraceSink>` hook the coordinator feeds, and
 //!   the `Recorder` that saves a session.
-//! * [`replayer`] — re-drives a trace, `--timing faithful|fast`.
+//! * [`replayer`] — re-drives a trace (full, or a checkpoint-window
+//!   slice), `--timing faithful|fast`, plus fingerprint bisection.
 //! * [`divergence`] — checksum comparison + first-mismatch reporting.
+//! * [`fingerprint`] — FNV-1a folding of deterministic event content.
+//! * [`window`] — checkpoint building/verification and the
+//!   window-boundary map over a trace.
 //!
 //! Recording is **multi-task** (trace format v2): latent payloads are
 //! captured bit-exactly; image payloads (segmentation requests) are
@@ -31,19 +37,39 @@
 //! the same kind — exactly as it verifies response checksums. v2
 //! traces (no `Failed` events) load unchanged.
 //!
+//! Trace-scale tooling (trace format v4, DESIGN.md §13): a recording
+//! sink built with a checkpoint cadence appends periodic `Checkpoint`
+//! events — a verifiable fold of the preceding stream (pending ids,
+//! counters, per-window FNV fingerprint + chain) plus a metrics
+//! snapshot backfilled by the engine's checkpoint pump. Checkpoints
+//! enable `huge2 replay --window A..B` (reconstruct state at a window
+//! boundary, replay just that slice) and `huge2 trace bisect`
+//! (localize the first divergent window in O(log W) window replays).
+//! Traces can be saved in either of two on-disk formats — JSONL or the
+//! compact binary format — converted losslessly between them with
+//! `huge2 trace convert`, and are always read back by sniffing the
+//! magic bytes, never the file extension. v1–v3 JSONL traces load and
+//! replay unchanged (checkpoints can be synthesized offline for
+//! bisection via [`window::insert_checkpoints`]).
+//!
 //! The canonical library-level quickstart (Recorder → set_trace_sink →
 //! serve → save, then Replayer::load → run → is_clean) lives in the
 //! [crate docs](crate); `examples/record_replay.rs` is the runnable
 //! version, and DESIGN.md §7/§8 specify the semantics.
 
+pub mod binary;
 pub mod codec;
 pub mod divergence;
 pub mod event;
+pub mod fingerprint;
 pub mod recorder;
 pub mod replayer;
+pub mod window;
 
 pub use codec::TRACE_VERSION;
 pub use divergence::{Divergence, ReplayReport, ReplayedOutcome};
-pub use event::{ArrivalPayload, EventBody, TraceEvent, TraceHeader};
+pub use event::{ArrivalPayload, CheckpointState, EventBody, TraceEvent,
+                TraceHeader};
 pub use recorder::{Recorder, TraceSink};
-pub use replayer::{Replayer, Timing};
+pub use replayer::{BisectReport, ReplayOptions, Replayer, Timing};
+pub use window::{WindowMap, DEFAULT_CHECKPOINT_EVERY};

@@ -1,25 +1,54 @@
 //! The recording side: a cheap, thread-safe event sink the coordinator
-//! feeds, plus the `Recorder` that owns the header and saves JSONL.
+//! feeds, plus the `Recorder` that owns the header and saves the trace.
 //!
 //! Cost model: the engine holds an `Option<Arc<TraceSink>>` — a run
 //! without `--record` pays one pointer null-check per hook site and
 //! nothing else. A recording run pays one short mutex section per event
 //! (the lock also serialises timestamping, which is what makes `t_us`
 //! monotone non-decreasing in file order).
+//!
+//! Checkpointing (trace v4, DESIGN.md §13): a sink built with
+//! [`TraceSink::with_checkpoints`] folds every event it records into a
+//! [`CheckpointBuilder`] and appends a `Checkpoint` event each time the
+//! cadence is reached — under the same lock, so the checkpoint sits at
+//! its exact stream position and its state is exactly the fold of the
+//! prefix. The checkpoint's *metrics* snapshot is deliberately NOT
+//! taken under that lock (the registry's gauge closures read queue
+//! depths, and `record` is called from inside a queue lock — snapshot
+//! here and the lock order would cycle). Instead checkpoints are
+//! appended with empty metrics and remembered; the engine's checkpoint
+//! pump thread periodically calls [`TraceSink::backfill_metrics`] with
+//! a registry snapshot taken lock-independently, filling them in a
+//! beat later. Deterministic state is exact; telemetry is
+//! near-boundary — the right trade, since replay never consumes the
+//! metrics.
 
 use anyhow::Result;
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::metrics::MetricsSnapshot;
+
+use super::binary;
 use super::codec;
 use super::event::{EventBody, TraceEvent, TraceHeader};
+use super::window::CheckpointBuilder;
+
+#[derive(Debug)]
+struct SinkInner {
+    events: Vec<TraceEvent>,
+    /// Present when checkpointing is on.
+    builder: Option<CheckpointBuilder>,
+    /// Indices of checkpoint events still carrying empty metrics.
+    unfilled: Vec<usize>,
+}
 
 /// Append-only, timestamping event sink shared by the engine's threads.
 #[derive(Debug)]
 pub struct TraceSink {
     t0: Instant,
-    events: Mutex<Vec<TraceEvent>>,
+    inner: Mutex<SinkInner>,
 }
 
 impl Default for TraceSink {
@@ -29,21 +58,76 @@ impl Default for TraceSink {
 }
 
 impl TraceSink {
+    /// A plain sink: no checkpoints (the pre-v4 behavior, and the
+    /// right default for unit tests that count exact event kinds).
     pub fn new() -> Self {
-        TraceSink { t0: Instant::now(), events: Mutex::new(Vec::new()) }
+        Self::with_checkpoints(0)
+    }
+
+    /// A sink that appends a `Checkpoint` event every `every` recorded
+    /// events (0 disables).
+    pub fn with_checkpoints(every: usize) -> Self {
+        TraceSink {
+            t0: Instant::now(),
+            inner: Mutex::new(SinkInner {
+                events: Vec::new(),
+                builder: (every > 0)
+                    .then(|| CheckpointBuilder::new(every)),
+                unfilled: Vec::new(),
+            }),
+        }
+    }
+
+    /// Checkpoint cadence (0 when checkpointing is off).
+    pub fn checkpoint_every(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .builder
+            .as_ref()
+            .map(|b| b.cadence())
+            .unwrap_or(0)
     }
 
     /// Append `body`, stamped with the µs offset since sink creation.
     /// Stamping happens *inside* the lock so event order and timestamp
-    /// order never disagree.
+    /// order never disagree — and so does checkpoint emission, so a
+    /// checkpoint's state is exactly the fold of the events before it.
     pub fn record(&self, body: EventBody) {
-        let mut g = self.events.lock().unwrap();
+        let mut g = self.inner.lock().unwrap();
         let t_us = self.t0.elapsed().as_micros() as u64;
-        g.push(TraceEvent { t_us, body });
+        let ckpt = g.builder.as_mut().and_then(|b| b.observe(&body));
+        g.events.push(TraceEvent { t_us, body });
+        if let Some(c) = ckpt {
+            let idx = g.events.len();
+            g.unfilled.push(idx);
+            g.events.push(TraceEvent {
+                t_us,
+                body: EventBody::Checkpoint(c),
+            });
+        }
+    }
+
+    /// Are there checkpoints still waiting for a metrics snapshot?
+    pub fn wants_metrics(&self) -> bool {
+        !self.inner.lock().unwrap().unfilled.is_empty()
+    }
+
+    /// Fill every metrics-less checkpoint with `snap`. Called by the
+    /// engine's checkpoint pump (never from inside `record` — see the
+    /// module docs for the lock-order reasoning).
+    pub fn backfill_metrics(&self, snap: &MetricsSnapshot) {
+        let mut g = self.inner.lock().unwrap();
+        let unfilled = std::mem::take(&mut g.unfilled);
+        for idx in unfilled {
+            if let EventBody::Checkpoint(c) = &mut g.events[idx].body {
+                c.metrics = snap.clone();
+            }
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.events.lock().unwrap().len()
+        self.inner.lock().unwrap().events.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -52,7 +136,7 @@ impl TraceSink {
 
     /// Copy out the events recorded so far.
     pub fn snapshot(&self) -> Vec<TraceEvent> {
-        self.events.lock().unwrap().clone()
+        self.inner.lock().unwrap().events.clone()
     }
 }
 
@@ -85,10 +169,17 @@ impl Recorder {
         &self.header
     }
 
-    /// Write header + all events recorded so far; returns the event count.
+    /// Write header + all events recorded so far; returns the event
+    /// count. The write codec is picked by extension — `.bin` writes
+    /// the binary format, anything else JSONL (DESIGN.md §13). Readers
+    /// never look at the extension: they sniff the magic.
     pub fn save(&self, path: &Path) -> Result<usize> {
         let events = self.sink.snapshot();
-        codec::write_trace(path, &self.header, &events)?;
+        if path.extension().is_some_and(|e| e == "bin") {
+            binary::write_trace(path, &self.header, &events)?;
+        } else {
+            codec::write_trace(path, &self.header, &events)?;
+        }
         Ok(events.len())
     }
 }
@@ -96,6 +187,7 @@ impl Recorder {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::super::window;
 
     #[test]
     fn timestamps_monotone_under_contention() {
@@ -121,6 +213,34 @@ mod tests {
             assert!(w[0].t_us <= w[1].t_us,
                     "timestamps must be monotone in file order");
         }
+    }
+
+    #[test]
+    fn checkpointing_sink_emits_verifiable_checkpoints() {
+        let sink = TraceSink::with_checkpoints(5);
+        assert_eq!(sink.checkpoint_every(), 5);
+        for i in 0..12u64 {
+            sink.record(EventBody::Enqueue { id: i, depth: 0 });
+        }
+        let evs = sink.snapshot();
+        // 12 events + 2 checkpoints (after the 5th and 10th)
+        assert_eq!(evs.len(), 14);
+        assert!(matches!(evs[5].body, EventBody::Checkpoint(_)));
+        assert!(matches!(evs[11].body, EventBody::Checkpoint(_)));
+        window::verify_fingerprints(&evs).unwrap();
+        // unfilled metrics are backfilled in place
+        assert!(sink.wants_metrics());
+        let mut snap = MetricsSnapshot::default();
+        snap.counters.insert("c".into(), 9);
+        sink.backfill_metrics(&snap);
+        assert!(!sink.wants_metrics());
+        let evs = sink.snapshot();
+        let EventBody::Checkpoint(c) = &evs[5].body else {
+            unreachable!()
+        };
+        assert_eq!(c.metrics.counters["c"], 9);
+        // still verifiable: metrics are outside the fingerprint
+        window::verify_fingerprints(&evs).unwrap();
     }
 
     #[test]
@@ -154,5 +274,36 @@ mod tests {
         std::fs::remove_file(&path).ok();
         assert_eq!(&h, rec.header());
         assert_eq!(evs, sink.snapshot());
+    }
+
+    #[test]
+    fn save_picks_codec_by_extension() {
+        let rec = Recorder::new(TraceHeader {
+            model: "tiny".into(),
+            backend: "native".into(),
+            seed: 5,
+            z_dim: 8,
+            cond_dim: 0,
+            task: "generate".into(),
+            net: String::new(),
+            engine_digest: String::new(),
+        });
+        rec.sink().record(EventBody::Enqueue { id: 0, depth: 1 });
+        let dir = std::env::temp_dir();
+        let bin = dir.join(format!("huge2_rec_ext_{}.bin",
+                                   std::process::id()));
+        let jsonl = dir.join(format!("huge2_rec_ext_{}.trace",
+                                     std::process::id()));
+        rec.save(&bin).unwrap();
+        rec.save(&jsonl).unwrap();
+        assert!(binary::sniff_is_binary(&bin).unwrap());
+        assert!(!binary::sniff_is_binary(&jsonl).unwrap());
+        // both load through auto-detection, identically
+        let (hb, eb) = binary::read_trace_auto(&bin).unwrap();
+        let (hj, ej) = binary::read_trace_auto(&jsonl).unwrap();
+        std::fs::remove_file(&bin).ok();
+        std::fs::remove_file(&jsonl).ok();
+        assert_eq!(hb, hj);
+        assert_eq!(eb, ej);
     }
 }

@@ -19,6 +19,7 @@
 
 use anyhow::{anyhow, Result};
 use std::collections::{HashMap, HashSet, VecDeque};
+use std::ops::Range;
 use std::path::Path;
 use std::str::FromStr;
 use std::sync::mpsc;
@@ -28,10 +29,11 @@ use crate::coordinator::{Engine, Payload, ServeError, ServeResult};
 use crate::rng::Rng;
 use crate::tensor::Tensor;
 
-use super::codec;
-use super::divergence::{diff_responses, Divergence, ReplayReport,
+use super::binary;
+use super::divergence::{diff_responses_at, Divergence, ReplayReport,
                         ReplayedOutcome};
 use super::event::{ArrivalPayload, EventBody, TraceEvent, TraceHeader};
+use super::window::{self, WindowMap};
 
 /// How the replayer paces recorded arrivals.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -65,6 +67,35 @@ impl FromStr for Timing {
     }
 }
 
+/// Knobs for [`Replayer::run_with`].
+#[derive(Debug, Clone, Default)]
+pub struct ReplayOptions {
+    /// Replay only this checkpoint-window range (0-based, end
+    /// exclusive — the `--window A..B` flag). `None` replays the whole
+    /// trace.
+    pub window: Option<Range<usize>>,
+    /// Print a periodic progress line (to stderr) at each checkpoint
+    /// boundary crossed while re-driving.
+    pub progress: bool,
+}
+
+/// Result of [`Replayer::bisect`]: which window the first divergence
+/// lives in, and how many window replays it took to find it.
+#[derive(Debug)]
+pub struct BisectReport {
+    /// Total checkpoint windows in the trace.
+    pub windows: usize,
+    /// Window replays performed (1 + ~log2(windows) when divergent).
+    pub replays: usize,
+    /// 0-based index of the first divergent window, `None` when the
+    /// full replay came back clean.
+    pub divergent: Option<usize>,
+    /// The report of the last probe: the full-trace replay when clean,
+    /// the single divergent window's replay otherwise (its divergences
+    /// carry absolute trace event indices).
+    pub report: ReplayReport,
+}
+
 /// A loaded trace, ready to re-drive.
 pub struct Replayer {
     header: TraceHeader,
@@ -72,10 +103,15 @@ pub struct Replayer {
 }
 
 impl Replayer {
-    /// Load and fully validate a JSONL trace file (a tampered line is an
-    /// error here, before any compute is spent).
+    /// Load and fully validate a trace file in either format (binary
+    /// by magic, JSONL otherwise — the extension never matters). A
+    /// tampered line, truncated byte, or checkpoint that disagrees
+    /// with the events it summarizes (fingerprint verification,
+    /// DESIGN.md §13) is an error here, before any compute is spent.
     pub fn load(path: &Path) -> Result<Self> {
-        let (header, events) = codec::read_trace(path)?;
+        let (header, events) = binary::read_trace_auto(path)?;
+        window::verify_fingerprints(&events)
+            .map_err(|e| anyhow!("{}: {e}", path.display()))?;
         Ok(Replayer { header, events })
     }
 
@@ -127,6 +163,24 @@ impl Replayer {
     /// against its recorded `Failed` event.
     pub fn run(&self, engine: &Engine, timing: Timing)
                -> Result<ReplayReport> {
+        self.run_with(engine, timing, &ReplayOptions::default())
+    }
+
+    /// [`Replayer::run`] with options: window-sliced replay and/or
+    /// progress reporting.
+    ///
+    /// **Window replay** (DESIGN.md §13): `window: Some(a..b)` replays
+    /// only checkpoint windows `a..b`. State at the window boundary is
+    /// reconstructed from checkpoint `a`'s pending set — those
+    /// requests' arrival events are fetched from the earlier part of
+    /// the trace and re-driven first, then the range's own arrivals —
+    /// and only outcomes *recorded inside the range* are verified.
+    /// This is sound because per-request outputs are
+    /// batch-composition-invariant (§7) and models rebuild from the
+    /// header seed: a window replay verifies exactly the same
+    /// checksums for those events as a full replay would.
+    pub fn run_with(&self, engine: &Engine, timing: Timing,
+                    opts: &ReplayOptions) -> Result<ReplayReport> {
         // Engine-selection digest gate (DESIGN.md §10): a trace recorded
         // against a compiled plan names the plan's per-layer engine
         // choices; the replaying engine must have compiled the *same*
@@ -153,15 +207,56 @@ impl Replayer {
                 }
             }
         }
+        // Resolve the event range to drive/verify, and — for a window
+        // replay — the indices of *earlier* arrivals whose outcome was
+        // still pending at the window-opening checkpoint. Those must be
+        // re-driven first: their responses may land inside the range.
+        let wm = WindowMap::of(&self.events);
+        let (range, preload) = match &opts.window {
+            None => (0..self.events.len(), Vec::new()),
+            Some(w) => {
+                if w.start >= w.end || w.end > wm.count() {
+                    return Err(anyhow!(
+                        "--window {}..{} is out of range: trace has {} \
+                         window(s)",
+                        w.start, w.end, wm.count()));
+                }
+                let range = wm.span_events(w);
+                let carried: HashSet<u64> = wm
+                    .opening_checkpoint(&self.events, w.start)
+                    .map(|c| c.pending.iter().copied().collect())
+                    .unwrap_or_default();
+                let preload: Vec<usize> = self.events[..range.start]
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, e)| matches!(&e.body,
+                        EventBody::RequestArrival { id, .. }
+                            if carried.contains(id)))
+                    .map(|(i, _)| i)
+                    .collect();
+                (range, preload)
+            }
+        };
+        let total_windows = opts.window.as_ref()
+            .map(|w| w.len())
+            .unwrap_or_else(|| wm.count());
         let t0 = Instant::now();
-        // Faithful offsets are rebased to the first arrival: recorded
-        // t_us counts from sink creation, which includes the recording
-        // run's model-load time — dead idle that pacing must not replay.
-        let base_us = self
-            .events
-            .iter()
-            .find(|e| matches!(e.body, EventBody::RequestArrival { .. }))
-            .map(|e| e.t_us)
+        // Faithful offsets are rebased to the first driven arrival:
+        // recorded t_us counts from sink creation, which includes the
+        // recording run's model-load time — dead idle that pacing must
+        // not replay. (For a window replay this also skips the whole
+        // pre-window span in one jump.)
+        let base_us = preload
+            .first()
+            .copied()
+            .or_else(|| {
+                self.events[range.clone()]
+                    .iter()
+                    .position(|e| matches!(
+                        e.body, EventBody::RequestArrival { .. }))
+                    .map(|p| range.start + p)
+            })
+            .map(|i| self.events[i].t_us)
             .unwrap_or(0);
         let mut pending: VecDeque<(u64, mpsc::Receiver<ServeResult>)> =
             VecDeque::new();
@@ -176,7 +271,24 @@ impl Replayer {
                 Err(e) => ReplayedOutcome::Failed(e.kind().to_string()),
             }
         }
-        for (ev_idx, ev) in self.events.iter().enumerate() {
+        let mut windows_closed = 0usize;
+        let mut events_seen = 0usize;
+        for ev_idx in preload.iter().copied().chain(range.clone()) {
+            let ev = &self.events[ev_idx];
+            events_seen += 1;
+            if let EventBody::Checkpoint(_) = &ev.body {
+                // checkpoints only occur in the in-range part (preload
+                // holds arrival indices only), each closing one window
+                windows_closed += 1;
+                if opts.progress {
+                    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+                    eprintln!(
+                        "replay: window {windows_closed}/{total_windows} \
+                         verified · {requests} arrivals driven · \
+                         {:.0} ev/s",
+                        events_seen as f64 / secs);
+                }
+            }
             let EventBody::RequestArrival { id, model, payload } = &ev.body
             else {
                 continue;
@@ -265,10 +377,13 @@ impl Replayer {
             }
         }
 
+        // Verification is scoped to the replayed slice: only outcomes
+        // the recording placed inside `range` are compared (divergence
+        // indices come back absolute via the slice base).
+        let slice = &self.events[range.clone()];
         let (divergences, compared, matched) =
-            diff_responses(&self.events, &replayed);
-        let recorded_ids: HashSet<u64> = self
-            .events
+            diff_responses_at(slice, &replayed, range.start);
+        let recorded_ids: HashSet<u64> = slice
             .iter()
             .filter_map(|e| match &e.body {
                 EventBody::Response { id, .. }
@@ -276,14 +391,24 @@ impl Replayer {
                 _ => None,
             })
             .collect();
-        let rejected_ids: HashSet<u64> = self
-            .events
+        let rejected_ids: HashSet<u64> = slice
             .iter()
             .filter_map(|e| match &e.body {
                 EventBody::Reject { id, .. } => Some(*id),
                 _ => None,
             })
             .collect();
+        // Requests still pending at the range's *end* boundary resolved
+        // after the window in the recording — the replay answered them,
+        // the slice has no terminal event for them. That's the window
+        // semantics working as designed, not an extra.
+        let end_pending: HashSet<u64> = match &opts.window {
+            Some(w) if w.end < wm.count() => wm
+                .opening_checkpoint(&self.events, w.end)
+                .map(|c| c.pending.iter().copied().collect())
+                .unwrap_or_default(),
+            _ => HashSet::new(),
+        };
         // "Extra" = a replay outcome the recording has no terminal
         // event for. A typed refusal on replay of a request the
         // recording *also* rejected is agreement, not an extra — don't
@@ -295,6 +420,7 @@ impl Replayer {
             .iter()
             .filter(|(id, out)| {
                 !recorded_ids.contains(id)
+                    && !end_pending.contains(id)
                     && !(rejected_ids.contains(id)
                          && matches!(out, ReplayedOutcome::Failed(_)))
             })
@@ -328,6 +454,90 @@ impl Replayer {
             divergences,
             hint,
             wall: t0.elapsed(),
+        })
+    }
+
+    /// The trace's checkpoint-window structure.
+    pub fn windows(&self) -> WindowMap {
+        WindowMap::of(&self.events)
+    }
+
+    /// Localize the first divergent checkpoint window in O(log W)
+    /// window replays (DESIGN.md §13).
+    ///
+    /// One full replay establishes whether the trace diverges at all;
+    /// if it does, a dirty-interval search follows: the invariant is
+    /// "every window before `lo` is clean, and `lo..hi` contains a
+    /// divergent window" — probe the left half, shrink toward whichever
+    /// side the first dirty window must be on. This is NOT a plain
+    /// binary search on a monotone predicate (later windows can be
+    /// clean again after a divergent one); the invariant form finds the
+    /// *first* dirty window regardless. Window probes are sound
+    /// independently of each other because each re-drives the pending
+    /// set carried into its range (see [`Replayer::run_with`]).
+    pub fn bisect(&self, engine: &Engine, timing: Timing)
+                  -> Result<BisectReport> {
+        let total = WindowMap::of(&self.events).count();
+        let mut replays = 0usize;
+        replays += 1;
+        let full = self.probe(engine, timing, 0..total)?;
+        if full.is_clean() {
+            return Ok(BisectReport {
+                windows: total,
+                replays,
+                divergent: None,
+                report: full,
+            });
+        }
+        let (mut lo, mut hi) = (0usize, total);
+        let mut narrowed: Option<(Range<usize>, ReplayReport)> = None;
+        while hi - lo > 1 {
+            let mid = lo + (hi - lo) / 2;
+            replays += 1;
+            let left = self.probe(engine, timing, lo..mid)?;
+            if left.is_clean() {
+                // every window in lo..mid is clean — the first dirty
+                // one is in mid..hi
+                lo = mid;
+            } else {
+                hi = mid;
+                narrowed = Some((lo..mid, left));
+            }
+        }
+        // Confirm on the single window unless the last dirty probe
+        // already was exactly that range.
+        let report = match narrowed {
+            Some((r, rep)) if r == (lo..lo + 1) => rep,
+            _ => {
+                replays += 1;
+                self.probe(engine, timing, lo..lo + 1)?
+            }
+        };
+        if report.is_clean() {
+            // The divergence did not reproduce in isolation (should not
+            // happen for deterministic traces) — report the full-trace
+            // evidence rather than claiming a clean bisect.
+            return Ok(BisectReport {
+                windows: total,
+                replays,
+                divergent: None,
+                report: full,
+            });
+        }
+        Ok(BisectReport {
+            windows: total,
+            replays,
+            divergent: Some(lo),
+            report,
+        })
+    }
+
+    /// One bisection probe: a windowed, progress-less replay.
+    fn probe(&self, engine: &Engine, timing: Timing, w: Range<usize>)
+             -> Result<ReplayReport> {
+        self.run_with(engine, timing, &ReplayOptions {
+            window: Some(w),
+            progress: false,
         })
     }
 }

@@ -1,0 +1,489 @@
+//! Checkpoint windows: the trace-slicing layer (DESIGN.md §13).
+//!
+//! A v4 trace is punctuated by [`EventBody::Checkpoint`] events every
+//! `checkpoint_every` events. Checkpoint `k` (1-based `seq`) closes
+//! **window** `k-1` (0-based); the tail after the last checkpoint is
+//! the final window, so a trace with `C` checkpoints has `C + 1`
+//! windows. Every checkpoint field except the metrics snapshot is a
+//! pure fold over the preceding events ([`CheckpointBuilder`]), which
+//! is what makes checkpoints *verifiable*: [`verify_fingerprints`]
+//! re-folds the stream and errors on the first checkpoint whose
+//! pending set, counters, fingerprint, or chain disagrees with the
+//! events it claims to summarize — run at load, so a tampered trace
+//! is rejected before any compute is spent, naming the window.
+//!
+//! [`WindowMap`] turns checkpoint positions into event ranges for
+//! `huge2 replay --window A..B`, and [`insert_checkpoints`] synthesizes
+//! a consistent checkpoint stream offline — how `trace bisect` windows
+//! a v1–v3 trace that never had checkpoints.
+
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+
+use crate::metrics::MetricsSnapshot;
+
+use super::event::{CheckpointState, EventBody, TraceEvent};
+use super::fingerprint::{self, Fnv, FNV_OFFSET};
+
+/// Default checkpoint cadence (events between checkpoints) for
+/// recording and offline synthesis.
+pub const DEFAULT_CHECKPOINT_EVERY: usize = 256;
+
+/// Incremental fold of the event stream into checkpoint state. The
+/// recording sink drives one live (every `every` events); offline
+/// tools drive one over a finished stream.
+#[derive(Debug)]
+pub struct CheckpointBuilder {
+    every: usize,
+    since: usize,
+    seq: u64,
+    events_seen: u64,
+    pending: BTreeSet<u64>,
+    next_id: u64,
+    submitted: u64,
+    completed: u64,
+    rejected: u64,
+    failed: u64,
+    window_fp: Fnv,
+    chain: u64,
+}
+
+impl CheckpointBuilder {
+    /// `every` == 0 disables cadence (observe never yields; use
+    /// [`CheckpointBuilder::force`]).
+    pub fn new(every: usize) -> Self {
+        CheckpointBuilder {
+            every,
+            since: 0,
+            seq: 0,
+            events_seen: 0,
+            pending: BTreeSet::new(),
+            next_id: 0,
+            submitted: 0,
+            completed: 0,
+            rejected: 0,
+            failed: 0,
+            window_fp: Fnv::new(),
+            chain: FNV_OFFSET,
+        }
+    }
+
+    pub fn cadence(&self) -> usize {
+        self.every
+    }
+
+    /// Fold one (non-checkpoint) event; yields the checkpoint that
+    /// should be appended *after* it when the cadence is reached. The
+    /// returned state carries empty metrics — telemetry is the
+    /// caller's to fill (the engine's pump, for live recording).
+    pub fn observe(&mut self, body: &EventBody)
+                   -> Option<Box<CheckpointState>> {
+        debug_assert!(
+            !matches!(body, EventBody::Checkpoint(_)),
+            "checkpoints are boundaries, not foldable content"
+        );
+        match body {
+            EventBody::RequestArrival { id, .. } => {
+                self.submitted += 1;
+                self.pending.insert(*id);
+                self.next_id = self.next_id.max(id + 1);
+            }
+            EventBody::Reject { id, .. } => {
+                self.rejected += 1;
+                self.pending.remove(id);
+                self.next_id = self.next_id.max(id + 1);
+            }
+            EventBody::Response { id, .. } => {
+                self.completed += 1;
+                self.pending.remove(id);
+                self.next_id = self.next_id.max(id + 1);
+            }
+            EventBody::Failed { id, .. } => {
+                self.failed += 1;
+                self.pending.remove(id);
+                self.next_id = self.next_id.max(id + 1);
+            }
+            EventBody::Enqueue { .. }
+            | EventBody::BatchFormed { .. }
+            | EventBody::BatchExecuted { .. }
+            | EventBody::Checkpoint(_) => {}
+        }
+        fingerprint::fold_event(&mut self.window_fp, body);
+        self.events_seen += 1;
+        self.since += 1;
+        if self.every > 0 && self.since >= self.every {
+            Some(self.force())
+        } else {
+            None
+        }
+    }
+
+    /// Close the current window now, regardless of cadence.
+    pub fn force(&mut self) -> Box<CheckpointState> {
+        self.seq += 1;
+        self.since = 0;
+        let fp = self.window_fp.finish();
+        self.chain = fingerprint::chain(self.chain, fp);
+        self.window_fp = Fnv::new();
+        Box::new(CheckpointState {
+            seq: self.seq,
+            events: self.events_seen,
+            pending: self.pending.iter().copied().collect(),
+            next_id: self.next_id,
+            submitted: self.submitted,
+            completed: self.completed,
+            rejected: self.rejected,
+            failed: self.failed,
+            fingerprint: fp,
+            chain: self.chain,
+            metrics: MetricsSnapshot::default(),
+        })
+    }
+}
+
+/// Synthesize a consistent checkpoint stream over a finished trace:
+/// the input events (which must not already contain checkpoints) with
+/// a verifiable checkpoint inserted every `every` events. Metrics are
+/// empty — offline synthesis has no registry to snapshot. This is how
+/// checkpoint-less v1–v3 traces get windowed for bisection, and how
+/// tests build traces with surgically placed divergences.
+pub fn insert_checkpoints(events: &[TraceEvent], every: usize)
+                          -> Vec<TraceEvent> {
+    assert!(every > 0, "cadence must be positive");
+    let mut b = CheckpointBuilder::new(every);
+    let mut out = Vec::with_capacity(events.len() + events.len() / every);
+    for e in events {
+        debug_assert!(!matches!(e.body, EventBody::Checkpoint(_)),
+                      "insert_checkpoints input already has checkpoints");
+        let ckpt = b.observe(&e.body);
+        let t_us = e.t_us;
+        out.push(e.clone());
+        if let Some(c) = ckpt {
+            out.push(TraceEvent { t_us, body: EventBody::Checkpoint(c) });
+        }
+    }
+    out
+}
+
+/// Re-fold the whole stream and verify every checkpoint against the
+/// events it summarizes: pending set, counters, id allocator, window
+/// fingerprint, and chain. Errors name the first bad checkpoint (and
+/// thus its window). Metrics are telemetry and not verified. A trace
+/// without checkpoints passes vacuously.
+pub fn verify_fingerprints(events: &[TraceEvent]) -> Result<(), String> {
+    let mut b = CheckpointBuilder::new(0);
+    for (idx, e) in events.iter().enumerate() {
+        let EventBody::Checkpoint(rec) = &e.body else {
+            b.observe(&e.body);
+            continue;
+        };
+        let got = b.force();
+        if got.fingerprint != rec.fingerprint {
+            return Err(format!(
+                "checkpoint #{} (event #{idx}): window {} fingerprint \
+                 mismatch — recorded {:016x}, recomputed {:016x} (the \
+                 window's payloads or outcomes were altered)",
+                rec.seq,
+                rec.seq.saturating_sub(1),
+                rec.fingerprint,
+                got.fingerprint
+            ));
+        }
+        if got.chain != rec.chain {
+            return Err(format!(
+                "checkpoint #{} (event #{idx}): fingerprint chain \
+                 mismatch — recorded {:016x}, recomputed {:016x}",
+                rec.seq, rec.chain, got.chain
+            ));
+        }
+        if (got.seq, &got.pending, got.next_id) !=
+           (rec.seq, &rec.pending, rec.next_id)
+            || (got.events, got.submitted, got.completed) !=
+               (rec.events, rec.submitted, rec.completed)
+            || (got.rejected, got.failed) != (rec.rejected, rec.failed)
+        {
+            return Err(format!(
+                "checkpoint #{} (event #{idx}): state disagrees with \
+                 the events it summarizes (recorded pending={:?} \
+                 submitted={} completed={} rejected={} failed={}, \
+                 recomputed pending={:?} submitted={} completed={} \
+                 rejected={} failed={})",
+                rec.seq, rec.pending, rec.submitted, rec.completed,
+                rec.rejected, rec.failed, got.pending, got.submitted,
+                got.completed, got.rejected, got.failed
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Event-range view of a trace's checkpoint windows.
+pub struct WindowMap {
+    /// Event index of each checkpoint event, ascending.
+    boundaries: Vec<usize>,
+    total_events: usize,
+}
+
+impl WindowMap {
+    pub fn of(events: &[TraceEvent]) -> Self {
+        let boundaries = events
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| {
+                matches!(e.body, EventBody::Checkpoint(_))
+            })
+            .map(|(i, _)| i)
+            .collect();
+        WindowMap { boundaries, total_events: events.len() }
+    }
+
+    /// Number of windows (`checkpoints + 1`; a checkpoint-less trace
+    /// is one window).
+    pub fn count(&self) -> usize {
+        self.boundaries.len() + 1
+    }
+
+    pub fn checkpoint_count(&self) -> usize {
+        self.boundaries.len()
+    }
+
+    /// Event range of window `w` (0-based). Window `w` ends just past
+    /// the checkpoint event that closes it, so the closing checkpoint
+    /// belongs to its window; the last window runs to the end of the
+    /// trace.
+    pub fn window_events(&self, w: usize)
+                         -> std::ops::Range<usize> {
+        let start = if w == 0 {
+            0
+        } else {
+            self.boundaries[w - 1] + 1
+        };
+        let end = self
+            .boundaries
+            .get(w)
+            .map(|&b| b + 1)
+            .unwrap_or(self.total_events);
+        start..end
+    }
+
+    /// Event range covering windows `ws.start..ws.end`.
+    pub fn span_events(&self, ws: &std::ops::Range<usize>)
+                       -> std::ops::Range<usize> {
+        self.window_events(ws.start).start
+            ..self.window_events(ws.end - 1).end
+    }
+
+    /// The checkpoint that *opens* window `w` — i.e. the one closing
+    /// window `w-1` — with the pending set a window replay must
+    /// re-drive. `None` for window 0 (the trace start is the state).
+    pub fn opening_checkpoint<'a>(&self, events: &'a [TraceEvent],
+                                  w: usize)
+                                  -> Option<&'a CheckpointState> {
+        let idx = *self.boundaries.get(w.checked_sub(1)?)?;
+        match &events[idx].body {
+            EventBody::Checkpoint(c) => Some(c),
+            _ => unreachable!("boundary indexes a checkpoint"),
+        }
+    }
+
+    /// Which window event index `idx` falls in.
+    pub fn window_of_event(&self, idx: usize) -> usize {
+        self.boundaries.partition_point(|&b| b < idx)
+    }
+}
+
+/// Flight-recorder-style excerpt of the last `limit` events of an
+/// event range — what the CLI prints under a divergence so the
+/// operator sees the window's tail without opening the trace.
+pub fn excerpt(events: &[TraceEvent], range: std::ops::Range<usize>,
+               limit: usize) -> String {
+    let slice = &events[range.clone()];
+    let skip = slice.len().saturating_sub(limit);
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "window excerpt: events #{}..#{} ({} event(s)), last {}:",
+        range.start,
+        range.end,
+        slice.len(),
+        slice.len() - skip
+    );
+    for (off, e) in slice.iter().enumerate().skip(skip) {
+        let idx = range.start + off;
+        let _ = write!(out, "  #{idx} +{}µs {}", e.t_us, e.body.kind());
+        match &e.body {
+            EventBody::RequestArrival { id, model, .. } => {
+                let _ = writeln!(out, " id={id} model={model}");
+            }
+            EventBody::Enqueue { id, depth } => {
+                let _ = writeln!(out, " id={id} depth={depth}");
+            }
+            EventBody::Reject { id, reason } => {
+                let _ = writeln!(out, " id={id} reason={reason:?}");
+            }
+            EventBody::BatchFormed { ids }
+            | EventBody::BatchExecuted { ids, .. } => {
+                let _ = writeln!(out, " n={}", ids.len());
+            }
+            EventBody::Response { id, checksum, .. } => {
+                let _ = writeln!(out, " id={id} checksum={checksum:016x}");
+            }
+            EventBody::Failed { id, kind, .. } => {
+                let _ = writeln!(out, " id={id} kind={kind}");
+            }
+            EventBody::Checkpoint(c) => {
+                let _ = writeln!(
+                    out,
+                    " seq={} pending={} fp={:016x}",
+                    c.seq,
+                    c.pending.len(),
+                    c.fingerprint
+                );
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::replay::event::ArrivalPayload;
+
+    fn arrival(t_us: u64, id: u64) -> TraceEvent {
+        TraceEvent {
+            t_us,
+            body: EventBody::RequestArrival {
+                id,
+                model: "m".into(),
+                payload: ArrivalPayload::Latent {
+                    z: vec![id as f32],
+                    cond: vec![],
+                },
+            },
+        }
+    }
+
+    fn response(t_us: u64, id: u64) -> TraceEvent {
+        TraceEvent {
+            t_us,
+            body: EventBody::Response {
+                id,
+                batch_size: 1,
+                bucket: 1,
+                latency_us: 1,
+                checksum: 0x1000 + id,
+            },
+        }
+    }
+
+    fn stream(n: u64) -> Vec<TraceEvent> {
+        // arrival(i), response(i), arrival(i+1), response(i+1), …
+        (0..n)
+            .flat_map(|i| [arrival(2 * i, i), response(2 * i + 1, i)])
+            .collect()
+    }
+
+    #[test]
+    fn inserted_checkpoints_verify_and_window() {
+        let evs = insert_checkpoints(&stream(8), 4);
+        // 16 events / 4 = 4 checkpoints
+        let wm = WindowMap::of(&evs);
+        assert_eq!(wm.checkpoint_count(), 4);
+        assert_eq!(wm.count(), 5);
+        verify_fingerprints(&evs).unwrap();
+        // ranges tile the trace exactly
+        let mut covered = 0;
+        for w in 0..wm.count() {
+            let r = wm.window_events(w);
+            assert_eq!(r.start, covered);
+            covered = r.end;
+        }
+        assert_eq!(covered, evs.len());
+        assert_eq!(wm.span_events(&(0..wm.count())), 0..evs.len());
+        // each event maps back into its window
+        for w in 0..wm.count() {
+            for i in wm.window_events(w) {
+                assert_eq!(wm.window_of_event(i), w,
+                           "event {i} in window {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoint_state_folds_pending_and_counters() {
+        // arrival 0, arrival 1, response 0 → checkpoint: pending {1}
+        let evs = vec![arrival(0, 0), arrival(1, 1), response(2, 0)];
+        let evs = insert_checkpoints(&evs, 3);
+        let EventBody::Checkpoint(c) = &evs[3].body else {
+            panic!("expected checkpoint at index 3, got {evs:?}");
+        };
+        assert_eq!(c.seq, 1);
+        assert_eq!(c.events, 3);
+        assert_eq!(c.pending, vec![1]);
+        assert_eq!(c.next_id, 2);
+        assert_eq!((c.submitted, c.completed, c.rejected, c.failed),
+                   (2, 1, 0, 0));
+        // conservation: submitted - terminals == pending
+        assert_eq!(c.submitted - c.completed - c.rejected - c.failed,
+                   c.pending.len() as u64);
+    }
+
+    #[test]
+    fn tampering_breaks_exactly_its_window() {
+        let mut evs = insert_checkpoints(&stream(8), 4);
+        verify_fingerprints(&evs).unwrap();
+        // flip a checksum inside window 2 (events 10..15)
+        let wm = WindowMap::of(&evs);
+        let r = wm.window_events(2);
+        let victim = evs[r.clone()]
+            .iter()
+            .position(|e| matches!(e.body, EventBody::Response { .. }))
+            .map(|off| r.start + off)
+            .unwrap();
+        if let EventBody::Response { checksum, .. } =
+            &mut evs[victim].body
+        {
+            *checksum ^= 1;
+        }
+        let err = verify_fingerprints(&evs).unwrap_err();
+        assert!(err.contains("window 2"), "{err}");
+        assert!(err.contains("fingerprint mismatch"), "{err}");
+    }
+
+    #[test]
+    fn scheduling_jitter_does_not_break_fingerprints() {
+        // extra enqueue/batch events change nothing the seal covers
+        let base = stream(4);
+        let mut noisy = Vec::new();
+        for (i, e) in base.iter().enumerate() {
+            noisy.push(e.clone());
+            noisy.push(TraceEvent {
+                t_us: e.t_us,
+                body: EventBody::Enqueue { id: i as u64, depth: i },
+            });
+        }
+        let a = insert_checkpoints(&base, base.len());
+        let b = insert_checkpoints(&noisy, noisy.len());
+        let (EventBody::Checkpoint(ca), EventBody::Checkpoint(cb)) =
+            (&a.last().unwrap().body, &b.last().unwrap().body)
+        else {
+            panic!("last event must be the checkpoint");
+        };
+        assert_eq!(ca.fingerprint, cb.fingerprint);
+        assert_ne!(ca.events, cb.events);
+    }
+
+    #[test]
+    fn excerpt_names_events_and_truncates() {
+        let evs = insert_checkpoints(&stream(8), 4);
+        let text = excerpt(&evs, 0..evs.len(), 3);
+        assert!(text.contains("last 3"), "{text}");
+        assert!(text.lines().count() == 4, "{text}");
+        let full = excerpt(&evs, 0..5, 100);
+        assert!(full.contains("#0"), "{full}");
+        assert!(full.contains("arrival id=0"), "{full}");
+        assert!(full.contains("checksum="), "{full}");
+        assert!(full.contains("seq=1"), "{full}");
+    }
+}

@@ -1,0 +1,427 @@
+//! Trace format v4 integration tests: cross-codec round-trips
+//! (JSONL ↔ binary, bit-exact), corrupt/truncated binary files,
+//! v1–v3 compatibility, window-sliced replay identity, and
+//! fingerprint bisection of an injected divergence.
+
+use huge2::config::EngineConfig;
+use huge2::coordinator::{Engine, Model, Payload};
+use huge2::gan::Generator;
+use huge2::metrics::{HistogramSnapshot, MetricsSnapshot};
+use huge2::replay::{binary, codec, window, ArrivalPayload,
+                    CheckpointState, Divergence, EventBody,
+                    ReplayOptions, Replayer, Timing, TraceEvent,
+                    TraceHeader, TraceSink};
+use huge2::rng::Rng;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const Z_DIM: usize = 8;
+
+fn tiny_engine(seed: u64, sink: Option<Arc<TraceSink>>) -> Engine {
+    let cfg = EngineConfig {
+        workers: 2,
+        queue_depth: 64,
+        max_batch: 4,
+        batch_timeout_us: 500,
+        ..EngineConfig::default()
+    };
+    let mut e = Engine::new(cfg);
+    if let Some(s) = sink {
+        e.set_trace_sink(s).unwrap();
+    }
+    let gen = Generator::tiny_cgan(seed);
+    assert_eq!(gen.z_dim, Z_DIM);
+    e.register_native(Model::native("tiny", Arc::new(gen), 0)).unwrap();
+    e
+}
+
+fn header(seed: u64) -> TraceHeader {
+    TraceHeader {
+        model: "tiny".into(),
+        backend: "native".into(),
+        seed,
+        z_dim: Z_DIM,
+        cond_dim: 0,
+        task: "generate".into(),
+        net: String::new(),
+        engine_digest: String::new(),
+    }
+}
+
+/// Record a serve run of `n` requests through a sink checkpointing
+/// every `every` events (0 = no checkpoints).
+fn record_run(seed: u64, n: usize, every: usize) -> Vec<TraceEvent> {
+    let sink = Arc::new(TraceSink::with_checkpoints(every));
+    let eng = tiny_engine(seed, Some(sink.clone()));
+    let mut rng = Rng::new(1234);
+    let mut pending = Vec::new();
+    for _ in 0..n {
+        let z: Vec<f32> = (0..Z_DIM).map(|_| rng.next_normal()).collect();
+        pending.push(eng.submit("tiny", Payload::latent(z, vec![]))
+            .unwrap());
+    }
+    for rx in pending {
+        rx.recv().unwrap().unwrap();
+    }
+    eng.shutdown();
+    sink.snapshot()
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("huge2_tf_{}_{}", name,
+                                      std::process::id()))
+}
+
+// ------------------------------------------------- random event streams
+
+const STRING_PALETTE: &[char] = &[
+    'a', 'b', 'Z', '"', '\\', '\n', '\t', '{', '}', '[', ']', ':', ',',
+    ' ', 'µ', '☃',
+];
+
+fn random_string(rng: &mut Rng) -> String {
+    let len = rng.next_below(12);
+    (0..len)
+        .map(|_| STRING_PALETTE[rng.next_below(STRING_PALETTE.len())])
+        .collect()
+}
+
+/// Raw-bit floats: hits NaNs, infinities, subnormals, -0.0.
+fn random_floats(rng: &mut Rng) -> Vec<f32> {
+    let len = rng.next_below(6);
+    (0..len).map(|_| f32::from_bits(rng.next_u64() as u32)).collect()
+}
+
+fn random_ids(rng: &mut Rng) -> Vec<u64> {
+    let len = 1 + rng.next_below(8);
+    (0..len).map(|_| rng.next_u64()).collect()
+}
+
+fn random_metrics(rng: &mut Rng) -> MetricsSnapshot {
+    let mut m = MetricsSnapshot::default();
+    for _ in 0..rng.next_below(3) {
+        m.counters.insert(random_string(rng), rng.next_u64());
+    }
+    for _ in 0..rng.next_below(3) {
+        // cast wraps: exercises negative gauges
+        m.gauges.insert(random_string(rng), rng.next_u64() as i64);
+    }
+    for _ in 0..rng.next_below(2) {
+        // strictly ascending sparse buckets (stride 7 > offset range 5)
+        let pairs: Vec<(usize, u64)> = (0..1 + rng.next_below(4))
+            .map(|i| (i * 7 + rng.next_below(5),
+                      1 + rng.next_u64() % 100))
+            .collect();
+        let h = HistogramSnapshot::from_sparse(
+            &pairs, rng.next_u64() >> 16, rng.next_u64() >> 16).unwrap();
+        m.histograms.insert(random_string(rng), h);
+    }
+    m
+}
+
+fn random_checkpoint(rng: &mut Rng) -> EventBody {
+    EventBody::Checkpoint(Box::new(CheckpointState {
+        seq: rng.next_u64() >> 32,
+        events: rng.next_u64() >> 32,
+        pending: random_ids(rng),
+        next_id: rng.next_u64(),
+        submitted: rng.next_u64() >> 32,
+        completed: rng.next_u64() >> 32,
+        rejected: rng.next_u64() >> 32,
+        failed: rng.next_u64() >> 32,
+        fingerprint: rng.next_u64(),
+        chain: rng.next_u64(),
+        metrics: random_metrics(rng),
+    }))
+}
+
+fn random_event(rng: &mut Rng, t_us: u64) -> TraceEvent {
+    let body = match rng.next_below(9) {
+        0 => EventBody::RequestArrival {
+            id: rng.next_u64(),
+            model: random_string(rng),
+            payload: ArrivalPayload::Latent {
+                z: random_floats(rng),
+                cond: random_floats(rng),
+            },
+        },
+        6 => EventBody::RequestArrival {
+            id: rng.next_u64(),
+            model: random_string(rng),
+            payload: ArrivalPayload::Image {
+                shape: (0..4).map(|_| 1 + rng.next_below(64)).collect(),
+                seed: rng.next_u64(),
+                checksum: rng.next_u64(),
+            },
+        },
+        1 => EventBody::Enqueue {
+            id: rng.next_u64(),
+            depth: rng.next_below(1 << 16),
+        },
+        2 => EventBody::Reject {
+            id: rng.next_u64(),
+            reason: random_string(rng),
+        },
+        3 => EventBody::BatchFormed { ids: random_ids(rng) },
+        4 => EventBody::BatchExecuted {
+            ids: random_ids(rng),
+            bucket: 1 + rng.next_below(64),
+            exec_us: rng.next_u64() >> 16,
+        },
+        7 => EventBody::Failed {
+            id: rng.next_u64(),
+            kind: ["validation", "backpressure", "batch_failed",
+                   "shutdown"][rng.next_below(4)].to_string(),
+            reason: random_string(rng),
+        },
+        8 => random_checkpoint(rng),
+        _ => EventBody::Response {
+            id: rng.next_u64(),
+            batch_size: 1 + rng.next_below(64),
+            bucket: 1 + rng.next_below(64),
+            latency_us: rng.next_u64() >> 16,
+            checksum: rng.next_u64(),
+        },
+    };
+    TraceEvent { t_us, body }
+}
+
+/// jsonl → binary → jsonl over a seeded random stream (every event
+/// kind, NaN-bit floats, checkpoints with metrics) must reproduce the
+/// original JSONL file byte-for-byte — the JSONL encoder is canonical,
+/// so byte-identity proves both codecs are lossless.
+#[test]
+fn cross_codec_round_trip_is_byte_identical() {
+    let mut rng = Rng::new(4242);
+    let mut t = 0u64;
+    let events: Vec<TraceEvent> = (0..200)
+        .map(|_| {
+            t += rng.next_below(100_000) as u64;
+            random_event(&mut rng, t)
+        })
+        .collect();
+    let j1 = tmp("cross_a.jsonl");
+    let b = tmp("cross_b.bin");
+    let j2 = tmp("cross_c.jsonl");
+    codec::write_trace(&j1, &header(1), &events).unwrap();
+    let (h1, e1) = binary::read_trace_auto(&j1).unwrap();
+    binary::write_trace(&b, &h1, &e1).unwrap();
+    assert!(binary::sniff_is_binary(&b).unwrap());
+    assert!(!binary::sniff_is_binary(&j1).unwrap());
+    let (h2, e2) = binary::read_trace_auto(&b).unwrap();
+    codec::write_trace(&j2, &h2, &e2).unwrap();
+    let t1 = std::fs::read(&j1).unwrap();
+    let t2 = std::fs::read(&j2).unwrap();
+    let bin_len = std::fs::metadata(&b).unwrap().len();
+    std::fs::remove_file(&j1).ok();
+    std::fs::remove_file(&b).ok();
+    std::fs::remove_file(&j2).ok();
+    assert_eq!(t1, t2, "jsonl → bin → jsonl must be byte-identical");
+    assert!(bin_len < t1.len() as u64,
+            "binary ({bin_len} B) must be smaller than JSONL ({} B)",
+            t1.len());
+}
+
+/// Corrupt magic, flipped version and mid-event truncation are all
+/// load-time errors — file-level twins of the byte-level negatives in
+/// `replay/binary.rs`.
+#[test]
+fn corrupt_and_truncated_binary_files_are_rejected_at_load() {
+    let mut events = record_run(5, 6, 0);
+    // guarantee the file ends in a raw 8-byte checksum, so a short cut
+    // is unambiguously mid-event
+    let last_t = events.last().unwrap().t_us;
+    events.push(TraceEvent {
+        t_us: last_t + 1,
+        body: EventBody::Response {
+            id: 9999,
+            batch_size: 1,
+            bucket: 1,
+            latency_us: 7,
+            checksum: 0xdead_beef_dead_beef,
+        },
+    });
+    let path = tmp("corrupt.bin");
+    binary::write_trace(&path, &header(5), &events).unwrap();
+    assert!(Replayer::load(&path).is_ok(), "pristine file loads");
+    let bytes = std::fs::read(&path).unwrap();
+
+    // corrupt magic: no longer binary, and not valid JSONL either
+    let mut bad = bytes.clone();
+    bad[0] ^= 0x40;
+    std::fs::write(&path, &bad).unwrap();
+    assert!(Replayer::load(&path).is_err());
+
+    // mid-event EOF: cut into the trailing response's checksum
+    std::fs::write(&path, &bytes[..bytes.len() - 4]).unwrap();
+    let err = Replayer::load(&path).unwrap_err().to_string();
+    assert!(err.contains("offset") || err.contains("truncated"),
+            "error should locate the cut: {err}");
+    std::fs::remove_file(&path).ok();
+}
+
+/// v1–v3 JSONL traces (older version numbers, no checkpoints) still
+/// load and replay cleanly — the reader accepts 1..=4.
+#[test]
+fn v1_v2_v3_jsonl_traces_still_load_and_replay() {
+    let events = record_run(5, 6, 0);
+    let path = tmp("compat.jsonl");
+    codec::write_trace(&path, &header(5), &events).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    for v in [3u32, 2, 1] {
+        let rewritten = text.replacen(
+            "\"huge2_trace\":4", &format!("\"huge2_trace\":{v}"), 1);
+        assert_ne!(rewritten, text, "header version must be rewritable");
+        std::fs::write(&path, &rewritten).unwrap();
+        let rp = Replayer::load(&path).unwrap();
+        let eng = tiny_engine(5, None);
+        let report = rp.run(&eng, Timing::Fast).unwrap();
+        eng.shutdown();
+        assert!(report.is_clean(), "v{v}: {:?}", report.divergences);
+        assert_eq!(report.matched, 6, "v{v}");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// A checkpointed recording saved in the binary format loads by magic,
+/// fingerprint-verifies, and replays end-to-end with zero divergence.
+#[test]
+fn checkpointed_binary_trace_replays_end_to_end() {
+    let events = record_run(7, 12, 8);
+    assert!(events.iter().any(|e| {
+        matches!(e.body, EventBody::Checkpoint(_))
+    }), "cadence 8 over 12 requests must checkpoint");
+    let path = tmp("ck.bin");
+    binary::write_trace(&path, &header(7), &events).unwrap();
+    let rp = Replayer::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let eng = tiny_engine(7, None);
+    let report = rp.run(&eng, Timing::Fast).unwrap();
+    eng.shutdown();
+    assert!(report.is_clean(), "diverged: {:?}", report.divergences);
+    assert_eq!(report.matched, 12);
+}
+
+/// Replaying every window individually must (a) verify cleanly, (b)
+/// drive fewer arrivals than the full trace for interior windows, and
+/// (c) tile the full replay — summed matched outcomes equal the full
+/// run's.
+#[test]
+fn window_replays_compose_to_the_full_replay() {
+    let events = record_run(5, 24, 8);
+    window::verify_fingerprints(&events).unwrap();
+    let rp = Replayer::from_parts(header(5), events);
+    let wm = rp.windows();
+    assert!(wm.count() >= 3, "expected several windows, got {}",
+            wm.count());
+    let eng = tiny_engine(5, None);
+    let full = rp.run(&eng, Timing::Fast).unwrap();
+    assert!(full.is_clean(), "full: {:?}", full.divergences);
+    assert_eq!(full.matched, 24);
+    let mut matched = 0usize;
+    let mut min_requests = usize::MAX;
+    for w in 0..wm.count() {
+        let r = rp.run_with(&eng, Timing::Fast, &ReplayOptions {
+            window: Some(w..w + 1),
+            progress: false,
+        }).unwrap();
+        assert!(r.is_clean(), "window {w}: {:?}", r.divergences);
+        assert_eq!(r.extra_responses, 0,
+                   "window {w}: boundary-pending ids are not extras");
+        matched += r.matched;
+        min_requests = min_requests.min(r.requests);
+    }
+    eng.shutdown();
+    assert_eq!(matched, full.matched, "windows tile the trace");
+    assert!(min_requests < full.requests,
+            "a single window must re-drive fewer arrivals than the \
+             full trace ({min_requests} vs {})", full.requests);
+}
+
+/// An out-of-range window is an error, not a panic.
+#[test]
+fn out_of_range_window_is_a_clean_error() {
+    let events = record_run(5, 8, 8);
+    let rp = Replayer::from_parts(header(5), events);
+    let wm = rp.windows();
+    let eng = tiny_engine(5, None);
+    let err = rp.run_with(&eng, Timing::Fast, &ReplayOptions {
+        window: Some(0..wm.count() + 1),
+        progress: false,
+    }).unwrap_err().to_string();
+    eng.shutdown();
+    assert!(err.contains("out of range"), "{err}");
+}
+
+/// Inject a single-bit checksum tamper, synthesize checkpoints *after*
+/// the tamper (so fingerprints are self-consistent — the live-engine
+/// divergence case, which only replay can catch), and bisect: the
+/// search must land on exactly the tampered window in at most
+/// 2 + ⌈log₂ W⌉ window replays.
+#[test]
+fn bisect_localizes_an_injected_divergence() {
+    let mut events = record_run(5, 24, 0);
+    let resp_indices: Vec<usize> = events
+        .iter()
+        .enumerate()
+        .filter_map(|(i, e)| {
+            matches!(e.body, EventBody::Response { .. }).then_some(i)
+        })
+        .collect();
+    let victim = resp_indices[resp_indices.len() / 2];
+    let victim_id = match &mut events[victim].body {
+        EventBody::Response { id, checksum, .. } => {
+            *checksum ^= 1;
+            *id
+        }
+        _ => unreachable!(),
+    };
+    let events = window::insert_checkpoints(&events, 8);
+    // tamper happened before synthesis: the trace is self-consistent
+    window::verify_fingerprints(&events).unwrap();
+    let idx = events
+        .iter()
+        .position(|e| matches!(&e.body,
+            EventBody::Response { id, .. } if *id == victim_id))
+        .unwrap();
+    let rp = Replayer::from_parts(header(5), events);
+    let wm = rp.windows();
+    assert!(wm.count() >= 4, "want several windows, got {}", wm.count());
+    let expected = wm.window_of_event(idx);
+    let eng = tiny_engine(5, None);
+    let br = rp.bisect(&eng, Timing::Fast).unwrap();
+    eng.shutdown();
+    assert_eq!(br.divergent, Some(expected),
+               "bisect must land on the tampered window");
+    let budget = 2 + (usize::BITS
+                      - (wm.count() - 1).leading_zeros()) as usize;
+    assert!(br.replays <= budget,
+            "{} replays for {} windows (budget {budget})",
+            br.replays, wm.count());
+    match br.report.first_divergence() {
+        Some(Divergence::ChecksumMismatch { event_index, id, .. }) => {
+            assert_eq!(*event_index, idx, "absolute trace index");
+            assert_eq!(*id, victim_id);
+        }
+        other => panic!("expected ChecksumMismatch, got {other:?}"),
+    }
+}
+
+/// Fingerprint verification catches a post-recording tamper at load —
+/// before any replay compute is spent.
+#[test]
+fn tampered_checkpointed_trace_fails_fingerprint_verification_at_load() {
+    let mut events = record_run(5, 16, 8);
+    let victim = events
+        .iter()
+        .position(|e| matches!(e.body, EventBody::Response { .. }))
+        .unwrap();
+    if let EventBody::Response { checksum, .. } = &mut events[victim].body {
+        *checksum ^= 1;
+    }
+    let path = tmp("tampered.bin");
+    binary::write_trace(&path, &header(5), &events).unwrap();
+    let err = Replayer::load(&path).unwrap_err().to_string();
+    std::fs::remove_file(&path).ok();
+    assert!(err.contains("fingerprint"), "{err}");
+}
