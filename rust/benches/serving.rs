@@ -642,10 +642,62 @@ fn seg_replay_regression(quick: bool) {
     std::fs::remove_file(&path).ok();
 }
 
+/// Microkernel phase (DESIGN.md §14): single-threaded GEMM throughput
+/// per available ISA tier, over a square compute-bound shape and a
+/// skinny deconv-tap shape. The scalar row is the baseline every other
+/// row is compared against — the "x scalar" column IS the
+/// SIMD-vs-scalar speedup the dispatcher buys. Checksums double as an
+/// equivalence spot-check: scalar and avx2 must match bit-for-bit
+/// (avx2+fma is ulp-bounded, so its checksum may differ).
+fn microkernel_phase(quick: bool) {
+    use huge2::gemm::{self, Isa};
+
+    let reps = if quick { 2 } else { 8 };
+    println!("\n== GEMM microkernel: ISA dispatch (active: {}) ==\n",
+             gemm::active_isa().name());
+    let mut t = Table::new(&["shape", "isa", "time/rep", "GFLOP/s",
+                             "x scalar", "checksum"]);
+    for &(m, n, k) in &[(256usize, 256usize, 256usize), (1024, 64, 128)] {
+        let mut rng = Rng::new(0x6e3);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.next_normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.next_normal()).collect();
+        let flops = 2.0 * (m * n * k) as f64;
+        let mut scalar_ns = 0.0f64;
+        for isa in gemm::available_isas() {
+            let mut c = vec![0.0f32; m * n];
+            // warm up once so page faults and detection are off-clock
+            gemm::sgemm_isa(isa, m, n, k, &a, &b, &mut c, false);
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                gemm::sgemm_isa(isa, m, n, k, &a, &b, &mut c, false);
+                std::hint::black_box(&c);
+            }
+            let ns = t0.elapsed().as_nanos() as f64 / reps as f64;
+            if isa == Isa::Scalar {
+                scalar_ns = ns;
+            }
+            let sum = c.iter().fold(0u64, |h, v| {
+                h.wrapping_mul(0x100000001b3).wrapping_add(
+                    v.to_bits() as u64)
+            });
+            t.row(&[
+                format!("{m}x{n}x{k}"),
+                isa.name().into(),
+                fmt_dur(std::time::Duration::from_nanos(ns as u64)),
+                format!("{:.2}", flops / ns),
+                format!("{:.2}x", scalar_ns / ns),
+                format!("{sum:016x}"),
+            ]);
+        }
+    }
+    t.print();
+}
+
 fn main() {
     let quick = std::env::var("BENCH_QUICK").is_ok();
     let per_client = if quick { 2 } else { 6 };
 
+    microkernel_phase(quick);
     workspace_reuse_phase(quick);
     plan_prepack_phase(quick);
     instrumentation_overhead_phase(quick);

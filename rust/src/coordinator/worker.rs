@@ -490,6 +490,11 @@ pub fn spawn_workers(
     obs: Arc<Observability>,
     count: usize,
 ) -> Vec<std::thread::JoinHandle<()>> {
+    // Pin the GEMM microkernel tier before any worker drains a batch:
+    // the first `active_isa()` call reads env overrides and runs CPU
+    // feature detection behind a `OnceLock`, and that one-time cost must
+    // not land inside a latency-measured request.
+    let _isa = crate::gemm::active_isa();
     (0..count)
         .map(|widx| {
             let model = model.clone();

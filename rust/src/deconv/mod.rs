@@ -6,6 +6,10 @@
 //! * [`huge2`] — the paper's engine: kernel decomposition (§3.1) into
 //!   stride-parity patterns + untangling (§3.2) into 1×1-conv GEMMs +
 //!   polyphase scatter, never touching an inserted zero.
+//! * [`segregated`] — kernel-segregated transposed convolution (Tida et
+//!   al., arXiv 2209.03704 / 2502.20493): the same parity decomposition
+//!   as HUGE², but each pattern stays **fused** — one per-pattern im2col
+//!   + one GEMM per pattern instead of one GEMM per tap.
 //! * [`dilated`] — both variants of dilated (atrous) convolution (§2.1.2).
 //! * [`grad`] — GAN-training gradients (§3.2.3): weight gradient as a
 //!   dilated convolution, input gradient as a transposed convolution.
@@ -19,6 +23,7 @@ pub mod dilated;
 pub mod grad;
 pub mod huge2;
 pub mod parallel;
+pub mod segregated;
 
 /// Which deconvolution engine a forward pass uses. Shared by every
 /// consumer of the two kernel families — the GAN generator stack
@@ -32,11 +37,19 @@ pub enum Engine {
     Baseline,
     /// Kernel decomposition + untangling (the paper).
     Huge2,
+    /// Kernel-segregated fused form ([`segregated`]): parity
+    /// decomposition like HUGE², then one per-pattern im2col + GEMM
+    /// instead of per-tap GEMMs. Explicit-only: the `Auto` heuristic
+    /// never selects it, so existing plan digests (and the traces that
+    /// embed them) stay valid. Dilated convs have no inserted zeros to
+    /// segregate, so on the dilated path it resolves to the HUGE²
+    /// untangled engine.
+    Segregated,
     /// Resolve per layer at plan-compile time from the shape/thread
     /// heuristic in [`crate::plan`] (Baseline vs HUGE² vs the
     /// multi-threaded HUGE² engines). Never reaches an engine kernel:
     /// [`crate::plan::resolve_transpose`]/[`crate::plan::resolve_dilated`]
-    /// turn it into one of the two concrete variants.
+    /// turn it into one of the concrete variants.
     Auto,
 }
 
@@ -46,6 +59,7 @@ impl Engine {
         match self {
             Engine::Baseline => "baseline",
             Engine::Huge2 => "huge2",
+            Engine::Segregated => "segregated",
             Engine::Auto => "auto",
         }
     }

@@ -113,7 +113,10 @@ pub(crate) fn transpose_mt_into(xd: &[f32], b: usize, h: usize, w: usize,
                                     pad_hi_y, pad_lo_x, pad_hi_x,
                                     &mut xp);
 
-    let threads = threads.max(1);
+    // Patterns are the shard unit — clamp like the dilated engine
+    // clamps to output rows, so `threads > patterns.len()` never spawns
+    // idle workers and the chunking algebra below sees a sane count.
+    let threads = threads.max(1).min(patterns.len().max(1));
 
     for bi in 0..b {
         let img = &xp[bi * hp * wp * c..(bi + 1) * hp * wp * c];

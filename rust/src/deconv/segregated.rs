@@ -1,0 +1,387 @@
+//! Kernel-segregated transposed convolution (Tida et al., arXiv
+//! 2209.03704; unified form in 2502.20493) — the third engine beside the
+//! naive baseline and HUGE².
+//!
+//! It shares HUGE²'s first move: segregate (decompose) the `R×S` kernel
+//! into `stride²` parity patterns so no inserted zero is ever touched,
+//! each pattern producing one disjoint output polyphase. It differs in
+//! the second move. HUGE² *untangles* a pattern into `taps_y·taps_x`
+//! separate 1×1-conv GEMMs that run directly on strided views of the
+//! input (no im2col at all, but `R·S` small GEMMs per image). The
+//! segregated formulation instead keeps each pattern **fused**: a tiny
+//! per-pattern im2col gathers the pattern's full receptive field into a
+//! `(Qy·Qx, taps_y·taps_x·C)` column matrix, and ONE GEMM against the
+//! pattern's dense sub-kernel — flattened to `(taps_y·taps_x·C, N)`,
+//! exactly the layout [`Pattern::sub`] already stores — produces the
+//! whole polyphase. `stride²` GEMMs per image instead of `R·S`, at the
+//! cost of a col copy the size of the pattern's receptive field.
+//!
+//! The col gather is cheap by construction: tap-adjacent x positions are
+//! adjacent in the padded image, so each `(q_y, q_x, t_y)` triple copies
+//! `taps_x·C` **contiguous** floats. Accumulation order inside a fused
+//! GEMM differs from HUGE²'s tap-by-tap order, so the two engines agree
+//! to GEMM tolerance (`allclose`), not bitwise — but within this engine,
+//! single- vs multi-threaded and pooled vs fresh runs are bit-identical
+//! (same per-pattern code path; MT shards whole patterns).
+//!
+//! Packing ([`SegPack`]) happens once at model load, parallel to the
+//! HUGE² pattern list, so plans can offer both engines over one shared
+//! decomposition.
+
+use crate::gemm::{sgemm_prepacked_with, PackedB};
+use crate::tensor::Tensor;
+use crate::workspace::{Workspace, WsHandle};
+
+use super::huge2::{decompose, pad_geometry, Pattern};
+use super::{pad_spatial_into, polyphase_len, DeconvParams};
+
+/// Per-pattern fused `(taps_y·taps_x·C, N)` weight panels in GEMM
+/// micro-kernel layout, parallel to the [`Pattern`] list they were built
+/// from. Packed once at model load; inference never packs B.
+#[derive(Debug, Clone)]
+pub struct SegPack {
+    packed: Vec<PackedB>,
+}
+
+impl SegPack {
+    /// Fuse each pattern's dense sub-kernel into one packed B panel.
+    /// `Pattern::sub` is `(taps_y, taps_x, C, N)` row-major, which
+    /// flattened **is** the `(taps_y·taps_x·C, N)` GEMM operand — no
+    /// reshuffle, just packing.
+    pub fn from_patterns(patterns: &[Pattern]) -> Self {
+        let packed = patterns
+            .iter()
+            .map(|pt| {
+                let sh = pt.sub.shape();
+                let (ty, tx, c, n) = (sh[0], sh[1], sh[2], sh[3]);
+                PackedB::pack(ty * tx * c, n, pt.sub.data())
+            })
+            .collect();
+        SegPack { packed }
+    }
+
+    /// Bytes held by the fused panels (plan "prepacked bytes" column).
+    pub fn bytes(&self) -> usize {
+        self.packed.iter().map(|p| p.bytes()).sum()
+    }
+}
+
+/// Kernel-segregated transposed convolution.
+///
+/// `x`: NHWC `(B,H,W,C)`; `k`: HWIO `(R,S,C,N)`; output `(B,Ho,Wo,N)`.
+/// Agrees with [`super::baseline::conv2d_transpose`] to GEMM tolerance.
+pub fn conv2d_transpose(x: &Tensor, k: &Tensor, p: &DeconvParams)
+                        -> Tensor {
+    let patterns = decompose(k, p);
+    let pack = SegPack::from_patterns(&patterns);
+    conv2d_transpose_with(x, &patterns, &pack, k.shape()[0], k.shape()[1],
+                          p)
+}
+
+/// Same, with the decomposition and fused packing done once at model
+/// load.
+pub fn conv2d_transpose_with(x: &Tensor, patterns: &[Pattern],
+                             pack: &SegPack, r: usize, s: usize,
+                             p: &DeconvParams) -> Tensor {
+    let ws = Workspace::new();
+    conv2d_transpose_ws(x, patterns, pack, r, s, p, &mut ws.handle())
+}
+
+/// [`conv2d_transpose_with`] drawing the padded input, per-pattern col
+/// matrix, sub-output and GEMM panels from a workspace handle
+/// (bit-identical; DESIGN.md §9).
+pub fn conv2d_transpose_ws(x: &Tensor, patterns: &[Pattern],
+                           pack: &SegPack, r: usize, s: usize,
+                           p: &DeconvParams, hnd: &mut WsHandle)
+                           -> Tensor {
+    let (b, h, w, c) = x.dims4();
+    let n = patterns[0].sub.shape()[3];
+    let ho = p.out_size(h, r);
+    let wo = p.out_size(w, s);
+    let mut out = Tensor::zeros(&[b, ho, wo, n]);
+    transpose_into(x.data(), b, h, w, c, patterns, pack, r, s, p,
+                   out.data_mut(), hnd);
+    out
+}
+
+/// Multi-threaded segregated transpose: whole patterns are sharded over
+/// `threads` (disjoint polyphases — no synchronisation), exactly like
+/// the MT HUGE² engine. Bit-identical to the single-threaded engine for
+/// every thread count.
+pub fn conv2d_transpose_mt(x: &Tensor, patterns: &[Pattern],
+                           pack: &SegPack, r: usize, s: usize,
+                           p: &DeconvParams, threads: usize) -> Tensor {
+    let ws = Workspace::new();
+    conv2d_transpose_mt_ws(x, patterns, pack, r, s, p, threads, &ws)
+}
+
+/// [`conv2d_transpose_mt`] over a shared workspace: each pattern thread
+/// draws its col matrix, sub-output and GEMM panels through its own
+/// per-thread handle.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_transpose_mt_ws(x: &Tensor, patterns: &[Pattern],
+                              pack: &SegPack, r: usize, s: usize,
+                              p: &DeconvParams, threads: usize,
+                              ws: &Workspace) -> Tensor {
+    let (b, h, w, c) = x.dims4();
+    let n = patterns[0].sub.shape()[3];
+    let ho = p.out_size(h, r);
+    let wo = p.out_size(w, s);
+    let mut out = Tensor::zeros(&[b, ho, wo, n]);
+    transpose_mt_into(x.data(), b, h, w, c, patterns, pack, r, s, p,
+                      threads, out.data_mut(), ws);
+    out
+}
+
+/// Gather one pattern's receptive field into its `(qy·qx, taps_y·
+/// taps_x·C)` column matrix. Each `(q_y, q_x, t_y)` copies `taps_x·C`
+/// contiguous floats — tap-adjacent x positions are adjacent in the
+/// padded image. Fully overwrites `col[..qy·qx·kk]`, so dirty pooled
+/// buffers are safe.
+#[allow(clippy::too_many_arguments)]
+fn assemble_col(col: &mut [f32], img: &[f32], wp: usize, c: usize,
+                pt: &Pattern, qy: usize, qx: usize, pad_lo_y: usize,
+                pad_lo_x: usize) {
+    let row_tx = pt.ax.taps * c;
+    let kk = pt.ay.taps * row_tx;
+    let ix0 = (pt.ax.delta + pad_lo_x as isize) as usize;
+    for q_y in 0..qy {
+        for t_y in 0..pt.ay.taps {
+            let iy = (q_y as isize + t_y as isize + pt.ay.delta
+                + pad_lo_y as isize) as usize;
+            let src0 = (iy * wp + ix0) * c;
+            for q_x in 0..qx {
+                let dst = (q_y * qx + q_x) * kk + t_y * row_tx;
+                let src = src0 + q_x * c;
+                col[dst..dst + row_tx]
+                    .copy_from_slice(&img[src..src + row_tx]);
+            }
+        }
+    }
+}
+
+/// Slice-level core of the segregated transposed conv: `out` (length
+/// `b·ho·wo·n`) is fully overwritten (zeroed, then polyphase-scattered);
+/// all scratch comes from `hnd`. One fused GEMM per pattern.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn transpose_into(xd: &[f32], b: usize, h: usize, w: usize,
+                             c: usize, patterns: &[Pattern],
+                             pack: &SegPack, r: usize, s: usize,
+                             p: &DeconvParams, out: &mut [f32],
+                             hnd: &mut WsHandle) {
+    let n = patterns[0].sub.shape()[3];
+    let st = p.stride;
+    let ho = p.out_size(h, r);
+    let wo = p.out_size(w, s);
+    assert_eq!(out.len(), b * ho * wo * n, "output size");
+    assert_eq!(pack.packed.len(), patterns.len(), "pack/pattern mismatch");
+    out.fill(0.0);
+
+    let (pad_lo_y, pad_hi_y, pad_lo_x, pad_hi_x) =
+        pad_geometry(patterns, h, w, ho, wo, st);
+    let mut xp = hnd.checkout(b * (h + pad_lo_y + pad_hi_y)
+        * (w + pad_lo_x + pad_hi_x) * c);
+    let (hp, wp) = pad_spatial_into(xd, b, h, w, c, pad_lo_y, pad_hi_y,
+                                    pad_lo_x, pad_hi_x, &mut xp);
+
+    let max_qy = (0..st).map(|phi| polyphase_len(ho, st, phi)).max().unwrap();
+    let max_qx = (0..st).map(|phi| polyphase_len(wo, st, phi)).max().unwrap();
+    let col_cap = patterns
+        .iter()
+        .map(|pt| {
+            polyphase_len(ho, st, pt.phi_y) * polyphase_len(wo, st, pt.phi_x)
+                * pt.ay.taps * pt.ax.taps * c
+        })
+        .max()
+        .unwrap_or(0);
+    let mut sub_out = hnd.checkout(max_qy * max_qx * n);
+    let mut col = hnd.checkout(col_cap.max(1));
+
+    for bi in 0..b {
+        let img = &xp[bi * hp * wp * c..(bi + 1) * hp * wp * c];
+        for (pt, pb) in patterns.iter().zip(&pack.packed) {
+            let qy = polyphase_len(ho, st, pt.phi_y);
+            let qx = polyphase_len(wo, st, pt.phi_x);
+            if qy == 0 || qx == 0 || pt.ay.taps == 0 || pt.ax.taps == 0 {
+                continue;
+            }
+            let kk = pt.ay.taps * pt.ax.taps * c;
+            assemble_col(&mut col, img, wp, c, pt, qy, qx, pad_lo_y,
+                         pad_lo_x);
+            let sub = &mut sub_out[..qy * qx * n];
+            // accumulate=false: the fused GEMM is the whole pattern.
+            sgemm_prepacked_with(hnd, qy * qx, &col[..qy * qx * kk], kk,
+                                 pb, sub, false);
+            for q_y in 0..qy {
+                let oy = pt.phi_y + q_y * st;
+                for q_x in 0..qx {
+                    let ox = pt.phi_x + q_x * st;
+                    let src = (q_y * qx + q_x) * n;
+                    let dst = ((bi * ho + oy) * wo + ox) * n;
+                    out[dst..dst + n].copy_from_slice(&sub[src..src + n]);
+                }
+            }
+        }
+    }
+    hnd.checkin(xp);
+    hnd.checkin(sub_out);
+    hnd.checkin(col);
+}
+
+/// Slice-level core of the multi-threaded segregated transpose (the
+/// plan executor's MT path). `out` is fully overwritten; bit-identical
+/// to [`transpose_into`] for every thread count (each pattern's col
+/// assembly and fused GEMM are the same code path).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn transpose_mt_into(xd: &[f32], b: usize, h: usize, w: usize,
+                                c: usize, patterns: &[Pattern],
+                                pack: &SegPack, r: usize, s: usize,
+                                p: &DeconvParams, threads: usize,
+                                out: &mut [f32], ws: &Workspace) {
+    let mut hnd = ws.handle();
+    let n = patterns[0].sub.shape()[3];
+    let st = p.stride;
+    let ho = p.out_size(h, r);
+    let wo = p.out_size(w, s);
+    assert_eq!(out.len(), b * ho * wo * n, "output size");
+    assert_eq!(pack.packed.len(), patterns.len(), "pack/pattern mismatch");
+    out.fill(0.0);
+
+    let (pad_lo_y, pad_hi_y, pad_lo_x, pad_hi_x) =
+        pad_geometry(patterns, h, w, ho, wo, st);
+    let mut xp = hnd.checkout(b * (h + pad_lo_y + pad_hi_y)
+        * (w + pad_lo_x + pad_hi_x) * c);
+    let (hp, wp) = pad_spatial_into(xd, b, h, w, c, pad_lo_y, pad_hi_y,
+                                    pad_lo_x, pad_hi_x, &mut xp);
+
+    // patterns are the shard unit: more threads than patterns would
+    // only spawn idle workers (DESIGN.md §14 shard-clamp convention).
+    let threads = threads.max(1).min(patterns.len().max(1));
+    let chunk = patterns.len().div_ceil(threads);
+
+    for bi in 0..b {
+        let img = &xp[bi * hp * wp * c..(bi + 1) * hp * wp * c];
+        let mut results: Vec<(usize, crate::workspace::WsBuf, usize,
+                              usize)> =
+            std::thread::scope(|sc| {
+                let mut handles = Vec::new();
+                for (pi, (pchunk, bchunk)) in patterns
+                    .chunks(chunk)
+                    .zip(pack.packed.chunks(chunk))
+                    .enumerate()
+                {
+                    handles.push(sc.spawn(move || {
+                        let mut th = ws.handle();
+                        let mut local = Vec::new();
+                        for (ci, (pt, pb)) in
+                            pchunk.iter().zip(bchunk).enumerate()
+                        {
+                            let qy = polyphase_len(ho, st, pt.phi_y);
+                            let qx = polyphase_len(wo, st, pt.phi_x);
+                            if qy == 0 || qx == 0 || pt.ay.taps == 0
+                                || pt.ax.taps == 0
+                            {
+                                continue;
+                            }
+                            let kk = pt.ay.taps * pt.ax.taps * c;
+                            let mut col = th.checkout(qy * qx * kk);
+                            assemble_col(&mut col, img, wp, c, pt, qy,
+                                         qx, pad_lo_y, pad_lo_x);
+                            let mut sub = th.checkout(qy * qx * n);
+                            sgemm_prepacked_with(&mut th, qy * qx,
+                                                 &col[..qy * qx * kk],
+                                                 kk, pb, &mut sub,
+                                                 false);
+                            th.checkin(col);
+                            local.push((pi * chunk + ci, sub, qy, qx));
+                        }
+                        local
+                    }));
+                }
+                handles.into_iter()
+                    .flat_map(|h| h.join().unwrap())
+                    .collect()
+            });
+        results.sort_by_key(|(i, ..)| *i);
+        for (idx, sub, qy, qx) in results {
+            let pt = &patterns[idx];
+            for q_y in 0..qy {
+                let oy = pt.phi_y + q_y * st;
+                for q_x in 0..qx {
+                    let ox = pt.phi_x + q_x * st;
+                    let src = (q_y * qx + q_x) * n;
+                    let dst = ((bi * ho + oy) * wo + ox) * n;
+                    out[dst..dst + n].copy_from_slice(&sub[src..src + n]);
+                }
+            }
+            hnd.checkin(sub);
+        }
+    }
+    hnd.checkin(xp);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::deconv::baseline;
+    use crate::rng::Rng;
+
+    fn roundtrip(h: usize, c: usize, n: usize, r: usize, p: DeconvParams,
+                 seed: u64) {
+        let mut rng = Rng::new(seed);
+        let x = Tensor::randn(&[1, h, h, c], &mut rng);
+        let k = Tensor::randn(&[r, r, c, n], &mut rng);
+        let want = baseline::conv2d_transpose(&x, &k, &p);
+        let got = conv2d_transpose(&x, &k, &p);
+        assert_eq!(got.shape(), want.shape());
+        let d = got.max_abs_diff(&want);
+        assert!(d < 1e-4 * (c as f32).sqrt(),
+                "diff {d} h={h} c={c} n={n} r={r} {p:?}");
+    }
+
+    #[test]
+    fn dcgan_config() {
+        roundtrip(4, 16, 8, 5, DeconvParams::new(2, 2, 1), 1);
+        roundtrip(8, 8, 4, 5, DeconvParams::new(2, 2, 1), 2);
+    }
+
+    #[test]
+    fn cgan_config() {
+        roundtrip(8, 8, 4, 4, DeconvParams::new(2, 1, 0), 3);
+    }
+
+    #[test]
+    fn stride3_4_stride1_and_no_padding() {
+        roundtrip(5, 3, 2, 5, DeconvParams::new(3, 2, 1), 4);
+        roundtrip(4, 2, 3, 5, DeconvParams::new(4, 1, 2), 5);
+        roundtrip(6, 3, 2, 3, DeconvParams::new(1, 1, 0), 6);
+        roundtrip(3, 2, 2, 3, DeconvParams::new(2, 0, 0), 7);
+    }
+
+    #[test]
+    fn mt_bit_identical_to_st_for_every_thread_count() {
+        let mut rng = Rng::new(31);
+        let p = DeconvParams::new(2, 2, 1);
+        let x = Tensor::randn(&[2, 6, 6, 8], &mut rng);
+        let k = Tensor::randn(&[5, 5, 8, 4], &mut rng);
+        let patterns = decompose(&k, &p);
+        let pack = SegPack::from_patterns(&patterns);
+        let want = conv2d_transpose_with(&x, &patterns, &pack, 5, 5, &p);
+        for threads in [1, 2, 4, 7, 64] {
+            let got = conv2d_transpose_mt(&x, &patterns, &pack, 5, 5, &p,
+                                          threads);
+            assert_eq!(got.checksum(), want.checksum(),
+                       "threads={threads} must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn pack_accounts_bytes() {
+        let mut rng = Rng::new(32);
+        let k = Tensor::randn(&[5, 5, 3, 2], &mut rng);
+        let patterns = decompose(&k, &DeconvParams::new(2, 2, 1));
+        let pack = SegPack::from_patterns(&patterns);
+        assert_eq!(pack.packed.len(), 4);
+        assert!(pack.bytes() > 0);
+    }
+}

@@ -74,9 +74,11 @@ impl GenLayer {
         let ho = p.out_size(h, self.cfg.k);
         let wo = p.out_size(w, self.cfg.k);
         let mut out = Tensor::zeros(&[b, ho, wo, self.cfg.c_out]);
+        // legacy per-call path: no precompiled fused panels — a
+        // Segregated resolution packs transiently inside the dispatch
         run_transpose_op(x.data(), b, h, w, c, &self.kernel,
                          &self.patterns, self.cfg.k, &p, eng, threads,
-                         out.data_mut(), hnd);
+                         None, out.data_mut(), hnd);
         out
     }
 }

@@ -9,8 +9,21 @@
 //! Structure: classic Goto-style three-level blocking
 //!   * `KC × NC` panel of B packed row-major by NR-wide slivers,
 //!   * `MC × KC` panel of A packed column-major by MR-tall slivers,
-//!   * an `MR × NR` register micro-kernel (4 × 16 f32 — fits AVX2's
-//!     16 ymm registers) with an unrolled FMA loop.
+//!   * an `MR × NR` register micro-kernel (4 × 16 f32 — two ymm vectors
+//!     wide, eight ymm accumulators tall on AVX2).
+//!
+//! The full-tile micro-kernel is ISA-dispatched ([`Isa`], resolved once
+//! per process by [`active_isa`]): a portable scalar kernel, an AVX2
+//! kernel (`mul` + `add` intrinsics — **bit-identical** to scalar, same
+//! per-element rounding in the same k-order), and an opt-in AVX2+FMA
+//! kernel (`HUGE2_GEMM_FMA=1`; one rounding per multiply-add, so results
+//! are ulp-bounded rather than bit-equal — the relaxation is folded into
+//! the plan digest; DESIGN.md §14). `HUGE2_FORCE_SCALAR=1` pins the
+//! scalar kernel everywhere (the CI fallback job). Edge tiles (partial
+//! rows/cols) always run the scalar kernel — they touch only tile
+//! boundaries and keep every tier bit-exact there. The NR-sliver packing
+//! already lays B out as contiguous 16-float rows, i.e. two aligned-free
+//! `loadu` vectors per k step.
 //!
 //! `sgemm_parallel` shards the M dimension over `std::thread::scope`
 //! (the vendored crate set has no rayon).
@@ -22,6 +35,7 @@
 //! are thin wrappers over a fresh workspace and stay bit-identical.
 
 use crate::workspace::{Workspace, WsHandle};
+use std::sync::OnceLock;
 
 /// Micro-tile rows.
 const MR: usize = 4;
@@ -33,6 +47,82 @@ const KC: usize = 256;
 const MC: usize = 128;
 /// Panel width of N.
 const NC: usize = 1024;
+
+/// Instruction-set tier the full-tile micro-kernel dispatches to.
+///
+/// `Scalar` and `Avx2` are bit-identical (same per-element rounding in
+/// the same k-order); `Avx2Fma` contracts each multiply-add to one
+/// rounding and is therefore only ulp-bounded against the other two —
+/// it is opt-in and digest-gated (DESIGN.md §14).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar kernel — the fallback on every architecture and
+    /// the `HUGE2_FORCE_SCALAR=1` override.
+    Scalar,
+    /// AVX2 `mul`+`add` intrinsics. Bit-identical to [`Isa::Scalar`].
+    Avx2,
+    /// AVX2 with fused multiply-add (`vfmadd231ps`). Opt-in via
+    /// `HUGE2_GEMM_FMA=1`; relaxes bit-identity to an ulp bound.
+    Avx2Fma,
+}
+
+impl Isa {
+    /// Stable lowercase name (CLI plan table, bench labels, digest tag).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Avx2Fma => "avx2+fma",
+        }
+    }
+
+    /// True when this tier's results may differ bitwise from the scalar
+    /// kernel (FMA contraction). Plans fold this into their digest so a
+    /// trace recorded under one numerics regime never silently replays
+    /// under another.
+    pub fn relaxed_numerics(self) -> bool {
+        matches!(self, Isa::Avx2Fma)
+    }
+}
+
+/// Every tier usable on this host, scalar first (always present).
+/// On non-x86_64 targets this is `[Scalar]`.
+pub fn available_isas() -> Vec<Isa> {
+    let mut v = vec![Isa::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            v.push(Isa::Avx2);
+            if is_x86_feature_detected!("fma") {
+                v.push(Isa::Avx2Fma);
+            }
+        }
+    }
+    v
+}
+
+/// The tier every GEMM in the process dispatches to, resolved once:
+/// `HUGE2_FORCE_SCALAR=1` pins [`Isa::Scalar`]; otherwise the best
+/// detected tier, where [`Isa::Avx2Fma`] additionally requires the
+/// `HUGE2_GEMM_FMA=1` opt-in (it relaxes bit-identity). Cached in a
+/// `OnceLock` — per-call tier selection goes through [`sgemm_isa`].
+pub fn active_isa() -> Isa {
+    static ISA: OnceLock<Isa> = OnceLock::new();
+    *ISA.get_or_init(|| {
+        let on = |key: &str| std::env::var(key).as_deref() == Ok("1");
+        if on("HUGE2_FORCE_SCALAR") {
+            return Isa::Scalar;
+        }
+        let avail = available_isas();
+        if on("HUGE2_GEMM_FMA") && avail.contains(&Isa::Avx2Fma) {
+            Isa::Avx2Fma
+        } else if avail.contains(&Isa::Avx2) {
+            Isa::Avx2
+        } else {
+            Isa::Scalar
+        }
+    })
+}
 
 /// C[m×n] (+)= A[m×k] · B[k×n], all row-major contiguous.
 ///
@@ -72,6 +162,29 @@ pub fn sgemm_strided(m: usize, n: usize, k: usize, a: &[f32], lda: usize,
 pub fn sgemm_strided_with(ws: &mut WsHandle, m: usize, n: usize, k: usize,
                           a: &[f32], lda: usize, b: &[f32], c: &mut [f32],
                           accumulate: bool) {
+    sgemm_strided_core(ws, active_isa(), m, n, k, a, lda, b, c, accumulate);
+}
+
+/// [`sgemm`] forced onto a specific ISA tier — the test/bench seam.
+/// The process-wide [`active_isa`] is cached in a `OnceLock`, so the
+/// SIMD-vs-scalar equivalence grids and the microkernel bench phase pick
+/// tiers per call through this instead. Panics if `isa` is not in
+/// [`available_isas`] on this host.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_isa(isa: Isa, m: usize, n: usize, k: usize, a: &[f32],
+                 b: &[f32], c: &mut [f32], accumulate: bool) {
+    assert!(available_isas().contains(&isa),
+            "isa {} unavailable on this host", isa.name());
+    assert_eq!(a.len(), m * k, "A size");
+    let ws = Workspace::new();
+    sgemm_strided_core(&mut ws.handle(), isa, m, n, k, a, k, b, c,
+                       accumulate);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn sgemm_strided_core(ws: &mut WsHandle, isa: Isa, m: usize, n: usize,
+                      k: usize, a: &[f32], lda: usize, b: &[f32],
+                      c: &mut [f32], accumulate: bool) {
     assert!(lda >= k, "lda {lda} < k {k}");
     assert!(m == 0 || a.len() >= (m - 1) * lda + k, "A size");
     assert_eq!(b.len(), k * n, "B size");
@@ -94,7 +207,8 @@ pub fn sgemm_strided_with(ws: &mut WsHandle, m: usize, n: usize, k: usize,
             for ic in (0..m).step_by(MC) {
                 let mc = MC.min(m - ic);
                 pack_a(&mut packed_a, a, lda, ic, pc, mc, kc);
-                macro_kernel(&packed_a, &packed_b, c, n, ic, jc, mc, nc, kc);
+                macro_kernel(isa, &packed_a, &packed_b, c, n, ic, jc, mc,
+                             nc, kc);
             }
         }
     }
@@ -178,6 +292,7 @@ pub fn sgemm_prepacked_with(ws: &mut WsHandle, m: usize, a: &[f32],
     if m == 0 || n == 0 || k == 0 {
         return;
     }
+    let isa = active_isa();
     let mut packed_a = ws.checkout(MC * KC);
     for jc in (0..n).step_by(NC) {
         let nc = NC.min(n - jc);
@@ -187,7 +302,7 @@ pub fn sgemm_prepacked_with(ws: &mut WsHandle, m: usize, a: &[f32],
             for ic in (0..m).step_by(MC) {
                 let mc = MC.min(m - ic);
                 pack_a(&mut packed_a, a, lda, ic, pc, mc, kc);
-                macro_kernel(&packed_a, pb, c, n, ic, jc, mc, nc, kc);
+                macro_kernel(isa, &packed_a, pb, c, n, ic, jc, mc, nc, kc);
             }
         }
     }
@@ -316,10 +431,13 @@ fn pack_b(dst: &mut [f32], b: &[f32], _ldb_rows: usize, ldb: usize,
     }
 }
 
-/// Drive the micro-kernel over one (mc × nc) block.
+/// Drive the micro-kernel over one (mc × nc) block. Full MR×NR tiles
+/// dispatch on `isa`; edge tiles (partial rows/cols) always run the
+/// scalar kernel, so every tier is bit-exact at tile boundaries.
 #[allow(clippy::too_many_arguments)]
-fn macro_kernel(pa: &[f32], pb: &[f32], c: &mut [f32], ldc: usize,
-                ic: usize, jc: usize, mc: usize, nc: usize, kc: usize) {
+fn macro_kernel(isa: Isa, pa: &[f32], pb: &[f32], c: &mut [f32],
+                ldc: usize, ic: usize, jc: usize, mc: usize, nc: usize,
+                kc: usize) {
     for (jt, j0) in (0..nc).step_by(NR).enumerate() {
         let cols = NR.min(nc - j0);
         let bp = &pb[jt * kc * NR..(jt + 1) * kc * NR];
@@ -327,7 +445,28 @@ fn macro_kernel(pa: &[f32], pb: &[f32], c: &mut [f32], ldc: usize,
             let rows = MR.min(mc - i0);
             let ap = &pa[it * kc * MR..(it + 1) * kc * MR];
             if rows == MR && cols == NR {
-                micro_kernel_full(ap, bp, c, ldc, ic + i0, jc + j0, kc);
+                match isa {
+                    Isa::Scalar => micro_kernel_full(
+                        ap, bp, c, ldc, ic + i0, jc + j0, kc),
+                    #[cfg(target_arch = "x86_64")]
+                    // SAFETY: `isa` comes from `available_isas` /
+                    // `active_isa`, which only offer these tiers after
+                    // `is_x86_feature_detected!` confirmed the features.
+                    Isa::Avx2 => unsafe {
+                        micro_kernel_avx2(ap, bp, c, ldc, ic + i0,
+                                          jc + j0, kc)
+                    },
+                    #[cfg(target_arch = "x86_64")]
+                    // SAFETY: as above — Avx2Fma is only offered when
+                    // both "avx2" and "fma" were detected at runtime.
+                    Isa::Avx2Fma => unsafe {
+                        micro_kernel_avx2_fma(ap, bp, c, ldc, ic + i0,
+                                              jc + j0, kc)
+                    },
+                    #[cfg(not(target_arch = "x86_64"))]
+                    _ => micro_kernel_full(ap, bp, c, ldc, ic + i0,
+                                           jc + j0, kc),
+                }
             } else {
                 micro_kernel_edge(ap, bp, c, ldc, ic + i0, jc + j0, kc,
                                   rows, cols);
@@ -336,7 +475,10 @@ fn macro_kernel(pa: &[f32], pb: &[f32], c: &mut [f32], ldc: usize,
     }
 }
 
-/// Full MR×NR register tile; the inner loop LLVM auto-vectorises to FMAs.
+/// Full MR×NR register tile, portable scalar form. Rust does not
+/// contract `a*b + c` to FMA, so this is exact IEEE mul-then-add per
+/// element in a fixed k-order — the bit-identity reference every other
+/// tier is measured against.
 #[inline]
 fn micro_kernel_full(ap: &[f32], bp: &[f32], c: &mut [f32], ldc: usize,
                      row: usize, col: usize, kc: usize) {
@@ -364,6 +506,82 @@ fn micro_kernel_full(ap: &[f32], bp: &[f32], c: &mut [f32], ldc: usize,
         for j in 0..NR {
             dst[j] += acc[i][j];
         }
+    }
+}
+
+/// AVX2 full tile: NR=16 is two ymm vectors, MR=4 broadcasts → eight
+/// ymm accumulators (+ two B loads + one broadcast = 11 of 16 ymm).
+/// Separate `mul` and `add` keep one rounding per operation in the same
+/// k-order as the scalar kernel, so the result is **bit-identical** to
+/// [`micro_kernel_full`].
+///
+/// # Safety
+/// Caller must have verified `is_x86_feature_detected!("avx2")`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn micro_kernel_avx2(ap: &[f32], bp: &[f32], c: &mut [f32],
+                            ldc: usize, row: usize, col: usize, kc: usize) {
+    use std::arch::x86_64::*;
+    debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+    let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+    let mut a = ap.as_ptr();
+    let mut b = bp.as_ptr();
+    for _ in 0..kc {
+        let b0 = _mm256_loadu_ps(b);
+        let b1 = _mm256_loadu_ps(b.add(8));
+        for (i, lane) in acc.iter_mut().enumerate() {
+            let ai = _mm256_set1_ps(*a.add(i));
+            lane[0] = _mm256_add_ps(lane[0], _mm256_mul_ps(ai, b0));
+            lane[1] = _mm256_add_ps(lane[1], _mm256_mul_ps(ai, b1));
+        }
+        a = a.add(MR);
+        b = b.add(NR);
+    }
+    for (i, lane) in acc.iter().enumerate() {
+        let dst = c[(row + i) * ldc + col..].as_mut_ptr();
+        _mm256_storeu_ps(dst,
+                         _mm256_add_ps(_mm256_loadu_ps(dst), lane[0]));
+        let hi = dst.add(8);
+        _mm256_storeu_ps(hi, _mm256_add_ps(_mm256_loadu_ps(hi), lane[1]));
+    }
+}
+
+/// AVX2+FMA full tile: identical structure to [`micro_kernel_avx2`] but
+/// each multiply-add contracts to `vfmadd231ps` — one rounding instead
+/// of two, so results are ulp-bounded against scalar rather than
+/// bit-equal. Only reachable via the `HUGE2_GEMM_FMA=1` opt-in, which
+/// also tags the plan digest (DESIGN.md §14).
+///
+/// # Safety
+/// Caller must have verified `is_x86_feature_detected!("avx2")` and
+/// `is_x86_feature_detected!("fma")`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn micro_kernel_avx2_fma(ap: &[f32], bp: &[f32], c: &mut [f32],
+                                ldc: usize, row: usize, col: usize,
+                                kc: usize) {
+    use std::arch::x86_64::*;
+    debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+    let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+    let mut a = ap.as_ptr();
+    let mut b = bp.as_ptr();
+    for _ in 0..kc {
+        let b0 = _mm256_loadu_ps(b);
+        let b1 = _mm256_loadu_ps(b.add(8));
+        for (i, lane) in acc.iter_mut().enumerate() {
+            let ai = _mm256_set1_ps(*a.add(i));
+            lane[0] = _mm256_fmadd_ps(ai, b0, lane[0]);
+            lane[1] = _mm256_fmadd_ps(ai, b1, lane[1]);
+        }
+        a = a.add(MR);
+        b = b.add(NR);
+    }
+    for (i, lane) in acc.iter().enumerate() {
+        let dst = c[(row + i) * ldc + col..].as_mut_ptr();
+        _mm256_storeu_ps(dst,
+                         _mm256_add_ps(_mm256_loadu_ps(dst), lane[0]));
+        let hi = dst.add(8);
+        _mm256_storeu_ps(hi, _mm256_add_ps(_mm256_loadu_ps(hi), lane[1]));
     }
 }
 
@@ -499,6 +717,58 @@ mod tests {
         sgemm_prepacked(m, &a[..(m - 1) * lda + k], lda, &pb, &mut got,
                         false);
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn isa_tiers_match_naive() {
+        for isa in available_isas() {
+            for &(m, n, k) in &[(1, 1, 1), (4, 16, 8), (5, 17, 9),
+                                 (130, 40, 70), (64, 64, 300)] {
+                let mut rng = Rng::new((m * 131 + n * 17 + k) as u64);
+                let a: Vec<f32> =
+                    (0..m * k).map(|_| rng.next_normal()).collect();
+                let b: Vec<f32> =
+                    (0..k * n).map(|_| rng.next_normal()).collect();
+                let mut want = vec![0.0; m * n];
+                sgemm_naive(m, n, k, &a, &b, &mut want, false);
+                let mut got = vec![0.0; m * n];
+                sgemm_isa(isa, m, n, k, &a, &b, &mut got, false);
+                let err = got.iter().zip(&want)
+                    .map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+                assert!(err < 1e-3 * (k as f32).sqrt(),
+                        "isa={} err={err} m={m} n={n} k={k}",
+                        isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn avx2_bit_identical_to_scalar() {
+        if !available_isas().contains(&Isa::Avx2) {
+            return; // host without AVX2: nothing to compare
+        }
+        let mut rng = Rng::new(42);
+        for &(m, n, k) in &[(4, 16, 8), (MR, NR, KC), (MC + 3, 2 * NR + 5,
+                             KC + 7), (200, 130, 300)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.next_normal()).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.next_normal()).collect();
+            let mut scalar = vec![0.0; m * n];
+            sgemm_isa(Isa::Scalar, m, n, k, &a, &b, &mut scalar, false);
+            let mut avx2 = vec![0.0; m * n];
+            sgemm_isa(Isa::Avx2, m, n, k, &a, &b, &mut avx2, false);
+            assert_eq!(scalar, avx2, "m={m} n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn scalar_always_available_and_first() {
+        let isas = available_isas();
+        assert_eq!(isas[0], Isa::Scalar);
+        assert!(isas.contains(&active_isa())
+                || active_isa() == Isa::Scalar);
+        assert!(!Isa::Scalar.relaxed_numerics());
+        assert!(!Isa::Avx2.relaxed_numerics());
+        assert!(Isa::Avx2Fma.relaxed_numerics());
     }
 
     #[test]

@@ -37,6 +37,16 @@
 //! assert!(slow.allclose(&fast, 1e-4));
 //! ```
 //!
+//! A third engine, [`deconv::segregated`] (kernel-segregated transposed
+//! convolution — same parity decomposition, but one fused im2col + GEMM
+//! per pattern instead of per-tap GEMMs), is selectable explicitly via
+//! [`deconv::Engine::Segregated`] / `--engine segregated`. All GEMM-backed
+//! paths dispatch their micro-kernel per ISA at runtime
+//! ([`gemm::active_isa`]): portable scalar everywhere, AVX2
+//! (bit-identical to scalar) where detected, and an opt-in AVX2+FMA tier
+//! (`HUGE2_GEMM_FMA=1`, ulp-bounded, digest-gated); `HUGE2_FORCE_SCALAR=1`
+//! pins the scalar kernel (DESIGN.md §14).
+//!
 //! ## Compiled plans (load-time engine selection)
 //!
 //! Every natively served model compiles to a [`plan::ExecPlan`] at

@@ -110,7 +110,8 @@ fn plan_cmd(args: &Args) -> Result<()> {
         "auto" => DeconvEngine::Auto,
         "huge2" => DeconvEngine::Huge2,
         "baseline" => DeconvEngine::Baseline,
-        other => bail!("--engine expects auto|huge2|baseline, \
+        "segregated" => DeconvEngine::Segregated,
+        other => bail!("--engine expects auto|huge2|baseline|segregated, \
                         got {other:?}"),
     };
     let plan: ExecPlan = match net.as_str() {
@@ -135,7 +136,9 @@ fn plan_cmd(args: &Args) -> Result<()> {
 
     println!("{net} (seed {seed}): compiled execution plan, \
               {} steps\n", plan.steps().len());
-    let mut t = Table::new(&["step", "op", "engine", "threads",
+    // every GEMM-backed step shares the process-wide microkernel tier
+    let isa = huge2::gemm::active_isa().name();
+    let mut t = Table::new(&["step", "op", "engine", "isa", "threads",
                              "out shape", "prepacked"]);
     for st in plan.steps() {
         let is_compute = !matches!(st.op, PlanOp::Activation(_)
@@ -145,6 +148,7 @@ fn plan_cmd(args: &Args) -> Result<()> {
             st.op.kind().into(),
             st.engine.map(|e| e.name().to_string())
                 .unwrap_or_else(|| "-".into()),
+            if is_compute { isa.into() } else { "-".into() },
             if is_compute { st.threads.to_string() } else { "-".into() },
             format!("{}x{}x{}", st.out_shape[0], st.out_shape[1],
                     st.out_shape[2]),
@@ -534,7 +538,8 @@ fn serve_generate(args: &Args) -> Result<()> {
         z_dim = gen.z_dim;
         eng.register_native(huge2::coordinator::Model::native(
             &model, gen, 0))?;
-        println!("serving {model} natively (pure-rust HUGE2 engine)");
+        println!("serving {model} natively (pure-rust HUGE2 engine, \
+                  gemm isa: {})", huge2::gemm::active_isa().name());
     } else {
         let rt = Arc::new(RuntimeHandle::spawn(
             cfg.artifact_dir.clone().into())?);
@@ -607,7 +612,8 @@ fn serve_segment(args: &Args) -> Result<()> {
     eng.register_native(huge2::coordinator::Model::native_seg(
         &model, net))?;
     println!("serving {model} natively (HUGE2 untangled dilated convs, \
-              input {in_shape:?}, {n_classes} classes)");
+              gemm isa: {}, input {in_shape:?}, {n_classes} classes)",
+             huge2::gemm::active_isa().name());
 
     let sobs = ServeObs::arm(args, &eng, &model)?;
     let arrivals = load_workload(args, rate, n)?;

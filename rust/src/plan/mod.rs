@@ -27,13 +27,14 @@
 
 use std::sync::atomic::Ordering::Relaxed;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
 use crate::deconv::dilated::DilatedTaps;
 use crate::deconv::huge2::Pattern;
-use crate::deconv::{baseline, dilated, huge2, parallel, DeconvParams,
-                    DilatedParams, Engine};
+use crate::deconv::segregated::{self, SegPack};
+use crate::deconv::{baseline, dilated, huge2, parallel, polyphase_len,
+                    DeconvParams, DilatedParams, Engine};
 use crate::gan::GenLayer;
 use crate::seg::SegLayer;
 use crate::tensor::Tensor;
@@ -43,7 +44,34 @@ use crate::workspace::{WsBuf, WsHandle};
 
 /// Threads the Auto heuristic assigns to layers heavy enough to shard —
 /// the paper's testbed core count (4-core Cortex-A57, DESIGN.md §2).
+/// This is the heuristic's *cap*: the resolved count is additionally
+/// clamped to the host's [`std::thread::available_parallelism`] (see
+/// [`resolve_auto_threads`]) so 2-core edge targets never oversubscribe.
 pub const AUTO_THREADS: usize = 4;
+
+/// Host parallelism cap for the Auto heuristic, resolved once per
+/// process (`available_parallelism` can syscall on some platforms).
+fn host_threads() -> usize {
+    static CAP: OnceLock<usize> = OnceLock::new();
+    *CAP.get_or_init(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
+
+/// Threads the Auto heuristic resolves for a layer with `eff_macs`
+/// effective MACs on a host with `cap` available cores: 1 below the MT
+/// cutoff, else [`AUTO_THREADS`] clamped to the host — never above the
+/// heuristic's own cap, never above `cap`. Pure (explicit `cap`) so
+/// tests can pin both clamp directions without faking the host.
+pub fn resolve_auto_threads(eff_macs: u64, cap: usize) -> usize {
+    if eff_macs >= AUTO_MT_MIN_MACS {
+        AUTO_THREADS.min(cap.max(1))
+    } else {
+        1
+    }
+}
 
 /// Per-image effective MACs above which the multi-threaded HUGE²
 /// engines pay for their shard spawn/join (calibrated on the
@@ -71,12 +99,15 @@ pub fn resolve_transpose(requested: Engine, h: usize, w: usize,
     match requested {
         Engine::Baseline => (Engine::Baseline, 1),
         Engine::Huge2 => (Engine::Huge2, threads_hint.max(1)),
+        // explicit-only: Auto never picks Segregated, so existing plan
+        // digests (and the traces that embed them) stay valid
+        Engine::Segregated => (Engine::Segregated, threads_hint.max(1)),
         Engine::Auto => {
             if p.stride == 1 {
                 return (Engine::Baseline, 1);
             }
             let (_, eff) = huge2::mac_counts(h, w, c_in, c_out, k, k, p);
-            let auto = if eff >= AUTO_MT_MIN_MACS { AUTO_THREADS } else { 1 };
+            let auto = resolve_auto_threads(eff, host_threads());
             (Engine::Huge2, threads_hint.max(1).max(auto))
         }
     }
@@ -93,12 +124,15 @@ pub fn resolve_dilated(requested: Engine, h: usize, w: usize, c_in: usize,
     match requested {
         Engine::Baseline => (Engine::Baseline, 1),
         Engine::Huge2 => (Engine::Huge2, threads_hint.max(1)),
+        // dilated convs have no inserted zeros to segregate — the
+        // request falls through to the untangled engine
+        Engine::Segregated => (Engine::Huge2, threads_hint.max(1)),
         Engine::Auto => {
             let (_, eff) = dilated::mac_counts(h, w, c_in, c_out, k, k, p);
             if p.dilation == 1 && eff < AUTO_FUSED_MAX_MACS {
                 return (Engine::Baseline, 1);
             }
-            let auto = if eff >= AUTO_MT_MIN_MACS { AUTO_THREADS } else { 1 };
+            let auto = resolve_auto_threads(eff, host_threads());
             (Engine::Huge2, threads_hint.max(1).max(auto))
         }
     }
@@ -115,8 +149,20 @@ pub(crate) fn run_transpose_op(xd: &[f32], b: usize, h: usize, w: usize,
                                c_in: usize, kernel: &Tensor,
                                patterns: &[Pattern], k: usize,
                                p: &DeconvParams, engine: Engine,
-                               threads: usize, out: &mut [f32],
-                               hnd: &mut WsHandle) {
+                               threads: usize, seg: Option<&SegPack>,
+                               out: &mut [f32], hnd: &mut WsHandle) {
+    // The fused per-pattern panels: compiled plans carry them
+    // (`PlanOp::TransposeConv::seg`, packed at compile); the legacy
+    // per-call path passes `None` and packs transiently here.
+    let seg_transient;
+    let seg = match (engine, seg) {
+        (Engine::Segregated, Some(sp)) => Some(sp),
+        (Engine::Segregated, None) => {
+            seg_transient = SegPack::from_patterns(patterns);
+            Some(&seg_transient)
+        }
+        _ => None,
+    };
     match engine {
         Engine::Baseline => baseline::transpose_into(
             xd, b, h, w, c_in, kernel, p, out, hnd),
@@ -125,6 +171,11 @@ pub(crate) fn run_transpose_op(xd: &[f32], b: usize, h: usize, w: usize,
             hnd.workspace()),
         Engine::Huge2 => huge2::transpose_into(
             xd, b, h, w, c_in, patterns, k, k, p, out, hnd),
+        Engine::Segregated if threads > 1 => segregated::transpose_mt_into(
+            xd, b, h, w, c_in, patterns, seg.unwrap(), k, k, p, threads,
+            out, hnd.workspace()),
+        Engine::Segregated => segregated::transpose_into(
+            xd, b, h, w, c_in, patterns, seg.unwrap(), k, k, p, out, hnd),
         Engine::Auto => unreachable!("Auto must be resolved before dispatch"),
     }
 }
@@ -144,6 +195,8 @@ pub(crate) fn run_dilated_op(xd: &[f32], b: usize, h: usize, w: usize,
             xd, b, h, w, c_in, taps, p, threads, out, hnd.workspace()),
         Engine::Huge2 => dilated::dilated_into(
             xd, b, h, w, c_in, taps, p, out, hnd),
+        Engine::Segregated => unreachable!(
+            "resolve_dilated maps Segregated to Huge2"),
         Engine::Auto => unreachable!("Auto must be resolved before dispatch"),
     }
 }
@@ -210,6 +263,10 @@ pub enum PlanOp {
     TransposeConv {
         kernel: Arc<Tensor>,
         patterns: Arc<Vec<Pattern>>,
+        /// Fused per-pattern panels for the kernel-segregated engine —
+        /// packed at plan compile (only when the step resolved to
+        /// [`Engine::Segregated`]), `Arc`-shared with plan clones.
+        seg: Option<Arc<SegPack>>,
         k: usize,
         params: DeconvParams,
         h: usize,
@@ -472,14 +529,22 @@ impl ExecPlan {
             let p = cfg.deconv_params();
             let (eng, threads) = resolve_transpose(
                 engine, cfg.h, cfg.h, cfg.c_in, cfg.c_out, cfg.k, &p, 1);
-            let prepacked = l.patterns.iter()
-                .flat_map(|pt| pt.packed.iter())
-                .map(|pb| pb.bytes())
-                .sum();
+            // fused panels exist only when the step runs segregated —
+            // every other resolution keeps the per-tap panels
+            let seg = (eng == Engine::Segregated)
+                .then(|| Arc::new(SegPack::from_patterns(&l.patterns)));
+            let prepacked = match &seg {
+                Some(sp) => sp.bytes(),
+                None => l.patterns.iter()
+                    .flat_map(|pt| pt.packed.iter())
+                    .map(|pb| pb.bytes())
+                    .sum(),
+            };
             push_step(&mut steps, cfg.name,
                       PlanOp::TransposeConv {
                           kernel: l.kernel.clone(),
                           patterns: l.patterns.clone(),
+                          seg,
                           k: cfg.k,
                           params: p,
                           h: cfg.h,
@@ -546,16 +611,17 @@ impl ExecPlan {
         ExecPlan::new(over, in_elems, steps)
     }
 
-    /// This plan with every HUGE² conv step's thread count forced to
-    /// `threads` (Baseline steps stay single-threaded). The MT engines
-    /// are bit-identical across thread counts (DESIGN.md §8), so this
-    /// is a pure throughput knob for deployments with a different core
-    /// budget — and the lever the plan-vs-legacy bit-identity grid
-    /// sweeps.
+    /// This plan with every HUGE²/segregated conv step's thread count
+    /// forced to `threads` (Baseline steps stay single-threaded). The
+    /// MT engines are bit-identical across thread counts (DESIGN.md
+    /// §8), so this is a pure throughput knob for deployments with a
+    /// different core budget — and the lever the plan-vs-legacy
+    /// bit-identity grid sweeps.
     pub fn with_threads(&self, threads: usize) -> ExecPlan {
         let mut steps = self.steps.clone();
         for st in &mut steps {
-            if st.engine == Some(Engine::Huge2) {
+            if matches!(st.engine,
+                        Some(Engine::Huge2) | Some(Engine::Segregated)) {
                 st.threads = threads.max(1);
             }
         }
@@ -847,14 +913,15 @@ impl ExecPlan {
                                     hnd, b, *out_dim, *in_dim, src,
                                     w.data(), dst, false);
                             }
-                            PlanOp::TransposeConv { kernel, patterns, k,
-                                                    params, h, c_in, .. }
+                            PlanOp::TransposeConv { kernel, patterns,
+                                                    seg, k, params, h,
+                                                    c_in, .. }
                             => {
                                 run_transpose_op(
                                     src, b, *h, *h, *c_in, kernel,
                                     patterns, *k, params,
-                                    st.engine.unwrap(), st.threads, dst,
-                                    hnd);
+                                    st.engine.unwrap(), st.threads,
+                                    seg.as_deref(), dst, hnd);
                             }
                             PlanOp::DilatedConv { kernel, taps, params,
                                                   h, c_in, .. } => {
@@ -944,6 +1011,36 @@ fn step_scratch_elems(st: &PlanStep, b: usize) -> usize {
                         + ho * ho * k * k * c_in
                         + sgemm_scratch_elems(*c_out)
                 }
+                Some(Engine::Segregated) => {
+                    let (ply, phy, plx, phx) = huge2::pad_geometry(
+                        patterns, *h, *h, ho, ho, params.stride);
+                    let sub = ho.div_ceil(params.stride).pow(2);
+                    let padded =
+                        b * (*h + ply + phy) * (*h + plx + phx) * c_in;
+                    // widest per-pattern col matrix (qy·qx ×
+                    // taps_y·taps_x·C)
+                    let col = patterns.iter()
+                        .map(|pt| polyphase_len(ho, params.stride,
+                                                pt.phi_y)
+                            * polyphase_len(ho, params.stride, pt.phi_x)
+                            * pt.ay.taps * pt.ax.taps * c_in)
+                        .max()
+                        .unwrap_or(0)
+                        .max(1);
+                    if st.threads > 1 {
+                        // like MT HUGE²: every pattern's sub-output is
+                        // live until the serial scatter; col matrices
+                        // and GEMM panels are per live thread (the
+                        // engine clamps shards to the pattern count)
+                        let shards = st.threads.min(patterns.len().max(1));
+                        padded
+                            + params.stride * params.stride * sub * c_out
+                            + shards * (col + prepacked_scratch_elems())
+                    } else {
+                        padded + sub * c_out + col
+                            + prepacked_scratch_elems()
+                    }
+                }
                 _ => {
                     let (ply, phy, plx, phx) = huge2::pad_geometry(
                         patterns, *h, *h, ho, ho, params.stride);
@@ -1004,6 +1101,16 @@ fn digest_steps(requested: Option<Engine>, in_elems: usize,
         Some(e) => e.name(),
     });
     eat(&in_elems.to_string());
+    // Relaxed-numerics GEMM tiers (the opt-in FMA kernel) change step
+    // outputs bitwise, so they must change the digest: a trace recorded
+    // under default numerics then replayed under FMA (or vice versa)
+    // fails loudly at the header digest gate instead of silently
+    // diverging on checksums. Default tiers (scalar / AVX2 mul+add) are
+    // bit-identical and eat nothing — pre-existing traces still verify.
+    let isa = crate::gemm::active_isa();
+    if isa.relaxed_numerics() {
+        eat(&format!("numerics:{}", isa.name()));
+    }
     for st in steps {
         eat(&st.name);
         eat(st.op.kind());
@@ -1033,16 +1140,26 @@ mod tests {
         let p2 = DeconvParams::new(2, 2, 1);
         assert_eq!(resolve_transpose(Engine::Auto, 8, 8, 4, 4, 5, &p2, 1),
                    (Engine::Huge2, 1));
-        // stride 2, DC1-sized -> huge2 multi-threaded
+        // stride 2, DC1-sized -> huge2 multi-threaded (AUTO_THREADS
+        // clamped to whatever this host actually has)
         assert_eq!(
             resolve_transpose(Engine::Auto, 4, 4, 1024, 512, 5, &p2, 1),
-            (Engine::Huge2, AUTO_THREADS));
+            (Engine::Huge2, AUTO_THREADS.min(host_threads())));
         // concrete requests pass through (baseline is single-threaded)
         assert_eq!(resolve_transpose(Engine::Baseline, 4, 4, 8, 8, 5, &p2,
                                      7),
                    (Engine::Baseline, 1));
         assert_eq!(resolve_transpose(Engine::Huge2, 4, 4, 8, 8, 5, &p2, 7),
                    (Engine::Huge2, 7));
+        assert_eq!(resolve_transpose(Engine::Segregated, 4, 4, 8, 8, 5,
+                                     &p2, 3),
+                   (Engine::Segregated, 3));
+        // segregation targets transposed-conv zero-insertion; on the
+        // dilated path the request falls through to the untangled engine
+        let d0 = DilatedParams::new(2, 1, 2);
+        assert_eq!(resolve_dilated(Engine::Segregated, 9, 9, 2, 4, 3, &d0,
+                                   2),
+                   (Engine::Huge2, 2));
 
         // dilated: dilation 1 + tiny -> baseline; dilation > 1 -> huge2
         let d1 = DilatedParams::new(1, 1, 1);
@@ -1055,6 +1172,33 @@ mod tests {
         assert_eq!(
             resolve_dilated(Engine::Auto, 33, 33, 64, 64, 3, &d1, 1).0,
             Engine::Huge2);
+    }
+
+    #[test]
+    fn auto_threads_clamp_both_directions() {
+        let heavy = AUTO_MT_MIN_MACS; // at the MT cutoff
+        let light = AUTO_MT_MIN_MACS - 1;
+        // host below the heuristic cap: clamped DOWN to the host
+        assert_eq!(resolve_auto_threads(heavy, 2), 2);
+        assert_eq!(resolve_auto_threads(heavy, 1), 1);
+        // host above the cap: never above AUTO_THREADS
+        assert_eq!(resolve_auto_threads(heavy, 64), AUTO_THREADS);
+        assert_eq!(resolve_auto_threads(heavy, AUTO_THREADS),
+                   AUTO_THREADS);
+        // below the MT cutoff: single-threaded regardless of cores
+        assert_eq!(resolve_auto_threads(light, 64), 1);
+        // degenerate cap never resolves to zero threads
+        assert_eq!(resolve_auto_threads(heavy, 0), 1);
+        // the public resolvers honor the host clamp end to end
+        let p2 = DeconvParams::new(2, 2, 1);
+        let (_, t) = resolve_transpose(Engine::Auto, 4, 4, 1024, 512, 5,
+                                       &p2, 1);
+        assert!(t <= AUTO_THREADS && t <= host_threads(),
+                "resolved {t} threads on a {}-core host", host_threads());
+        let d1 = DilatedParams::new(1, 1, 1);
+        let (_, td) = resolve_dilated(Engine::Auto, 65, 65, 64, 64, 3,
+                                      &d1, 1);
+        assert!(td <= AUTO_THREADS && td <= host_threads());
     }
 
     #[test]
@@ -1170,11 +1314,47 @@ mod tests {
         let ws = Workspace::new();
         let gen = Generator::tiny_cgan(5);
         let z = Tensor::randn(&[2, 8], &mut Rng::new(3));
-        for e in [Engine::Baseline, Engine::Huge2, Engine::Auto] {
+        for e in [Engine::Baseline, Engine::Huge2, Engine::Segregated,
+                  Engine::Auto] {
             let plan = ExecPlan::compile_gan(&gen.proj, &gen.layers, e);
             let got = plan.run(&z, &mut ws.handle());
             let want = gen.forward(&z, e);
             assert_eq!(got.checksum(), want.checksum(), "{e:?}");
+        }
+    }
+
+    #[test]
+    fn segregated_plan_compiles_with_fused_panels() {
+        let gen = Generator::tiny_cgan(5);
+        let plan = ExecPlan::compile_gan(&gen.proj, &gen.layers,
+                                         Engine::Segregated);
+        assert!(plan.resolves_to(Engine::Segregated));
+        assert!(plan.prepacked_bytes() > 0);
+        assert!(plan.high_water_elems(1) > 0);
+        for st in plan.steps() {
+            if let PlanOp::TransposeConv { seg, .. } = &st.op {
+                assert!(seg.is_some(),
+                        "segregated step must carry fused panels");
+            }
+        }
+        let auto = ExecPlan::compile_gan(&gen.proj, &gen.layers,
+                                         Engine::Auto);
+        assert_ne!(plan.engine_digest(), auto.engine_digest(),
+                   "digest must see the third engine");
+        // Auto never picks Segregated: existing digests stay valid
+        for st in auto.steps() {
+            assert_ne!(st.engine, Some(Engine::Segregated));
+            if let PlanOp::TransposeConv { seg, .. } = &st.op {
+                assert!(seg.is_none(),
+                        "non-segregated steps pack no fused panels");
+            }
+        }
+        // with_threads forces segregated steps too (the grid's lever)
+        let mt = plan.with_threads(3);
+        for st in mt.steps() {
+            if st.engine == Some(Engine::Segregated) {
+                assert_eq!(st.threads, 3);
+            }
         }
     }
 }

@@ -343,7 +343,19 @@ impl<'a> Reader<'a> {
     }
 
     fn len(&mut self, cap: u64, what: &str) -> Result<usize, String> {
+        let at = self.pos;
         let n = self.varint()?;
+        // Reject lengths above u32::MAX before the `usize` cast: on a
+        // 32-bit target (the ARM edge builds) the cast would silently
+        // truncate, turning a corrupt length into a wrong-but-plausible
+        // one. Checked first so the error names the real failure even
+        // if a cap is ever raised past 32 bits.
+        if n > u32::MAX as u64 {
+            return Err(format!(
+                "{what} length {n} at byte {at} exceeds u32::MAX \
+                 (corrupt length prefix?)"
+            ));
+        }
         if n > cap {
             return Err(self.err(&format!(
                 "implausible {what} length {n} (cap {cap})"

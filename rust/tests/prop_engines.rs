@@ -10,8 +10,8 @@
 
 use huge2::config::tiny_segnet;
 use huge2::deconv::{axis_pattern, baseline, col2im_baseline, dilated,
-                    huge2 as engine, parallel, polyphase_len, DeconvParams,
-                    DilatedParams, Engine};
+                    huge2 as engine, parallel, polyphase_len, segregated,
+                    DeconvParams, DilatedParams, Engine};
 use huge2::gan::Generator;
 use huge2::plan::ExecPlan;
 use huge2::rng::Rng;
@@ -52,6 +52,10 @@ fn transpose_engines_agree_on_random_configs() {
         assert!(got.allclose(&want, 1e-3),
                 "seed {seed:#x}: h={h} c={c} n={n} r={r} {p:?} \
                  diff={}", got.max_abs_diff(&want));
+        let seg = segregated::conv2d_transpose(&x, &k, &p);
+        assert!(seg.allclose(&want, 1e-3),
+                "segregated seed {seed:#x}: h={h} c={c} n={n} r={r} \
+                 {p:?} diff={}", seg.max_abs_diff(&want));
         tested += 1;
     }
 }
@@ -172,6 +176,16 @@ fn pooled_transpose_grid_bit_identical_to_fresh() {
             col2im_baseline::conv2d_transpose(&x, &k, &p).checksum(),
             "col2im pooled != fresh: {ctx}");
 
+        let pack = segregated::SegPack::from_patterns(&patterns);
+        ws.poison(f32::NAN);
+        assert_eq!(
+            segregated::conv2d_transpose_ws(&x, &patterns, &pack, r, r,
+                                            &p, &mut ws.handle())
+                .checksum(),
+            segregated::conv2d_transpose_with(&x, &patterns, &pack, r, r,
+                                              &p).checksum(),
+            "segregated st pooled != fresh: {ctx}");
+
         for threads in [1usize, 2, 4, 7] {
             ws.poison(f32::NAN);
             assert_eq!(
@@ -187,6 +201,14 @@ fn pooled_transpose_grid_bit_identical_to_fresh() {
                 parallel::baseline_conv2d_transpose_mt(
                     &x, &k, &p, threads).checksum(),
                 "baseline mt{threads} pooled != fresh: {ctx}");
+            ws.poison(f32::NAN);
+            assert_eq!(
+                segregated::conv2d_transpose_mt_ws(
+                    &x, &patterns, &pack, r, r, &p, threads, &ws)
+                    .checksum(),
+                segregated::conv2d_transpose_mt(
+                    &x, &patterns, &pack, r, r, &p, threads).checksum(),
+                "segregated mt{threads} pooled != fresh: {ctx}");
         }
     }
     let c = ws.counters();
@@ -244,8 +266,9 @@ fn pooled_dilated_grid_bit_identical_to_fresh() {
 /// the compiled [`ExecPlan`] — NaN-poisoned shared pool, forced thread
 /// counts — must reproduce a manual layer-by-layer composition of the
 /// public per-layer forwards **bit-for-bit**, for both nets ×
-/// {Baseline, Huge2, Auto} × thread counts. This is what licenses
-/// deleting the models' hand-rolled forward cores: the plan executor IS
+/// {Baseline, Huge2, Segregated, Auto} × thread counts. This is what
+/// licenses deleting the models' hand-rolled forward cores: the plan
+/// executor IS
 /// the forward path, and its engine resolution (incl. Auto and the MT
 /// variants) never perturbs a checksum.
 #[test]
@@ -270,7 +293,8 @@ fn plan_vs_legacy_bit_identity_grid() {
         }
         t
     };
-    for e in [Engine::Baseline, Engine::Huge2, Engine::Auto] {
+    for e in [Engine::Baseline, Engine::Huge2, Engine::Segregated,
+              Engine::Auto] {
         let want = legacy_gan(e);
         for threads in [1usize, 2, 4] {
             let plan = ExecPlan::for_generator(&gen, e)
@@ -303,7 +327,7 @@ fn plan_vs_legacy_bit_identity_grid() {
         net.head.forward(&acc.relu(), pick(&net.head))
     };
     for over in [None, Some(Engine::Baseline), Some(Engine::Huge2),
-                 Some(Engine::Auto)] {
+                 Some(Engine::Segregated), Some(Engine::Auto)] {
         let want = legacy_seg(over);
         for threads in [1usize, 2, 3] {
             let plan = ExecPlan::for_segnet(&net, over)
@@ -321,6 +345,66 @@ fn plan_vs_legacy_bit_identity_grid() {
     }
     let c = ws.counters();
     assert!(c.pool_hits > 0, "grid must exercise dirty slab reuse");
+}
+
+/// Degenerate shard geometries (DESIGN.md §14 shard-clamp convention):
+/// every MT engine must clamp its thread count to its shard unit —
+/// patterns for the transposed engines, output rows for the dilated
+/// one — so `threads` far above the available work, 1×1 spatial
+/// inputs, and single-pattern (stride-1) decompositions all produce
+/// results bit-identical to the single-threaded engine instead of
+/// panicking on empty shards.
+#[test]
+fn mt_engines_survive_degenerate_shard_geometries() {
+    let mut rng = Rng::new(0x51a2d);
+    let cases = [
+        // 1x1 spatial input, 1x1 output (threads >> ho and patterns)
+        (1usize, 3usize, 2usize, 3usize, DeconvParams::new(2, 1, 0)),
+        // stride 1: single pattern, threads >> patterns.len()
+        (4, 2, 3, 3, DeconvParams::new(1, 1, 0)),
+        // stride > r: some patterns have zero taps
+        (2, 2, 2, 2, DeconvParams::new(3, 0, 0)),
+        // tall stride with out_pad, tiny input
+        (2, 1, 1, 4, DeconvParams::new(4, 1, 2)),
+    ];
+    for &(h, c, n, r, p) in &cases {
+        let x = Tensor::randn(&[1, h, h, c], &mut rng);
+        let k = Tensor::randn(&[r, r, c, n], &mut rng);
+        let want = baseline::conv2d_transpose(&x, &k, &p);
+        let patterns = engine::decompose(&k, &p);
+        let pack = segregated::SegPack::from_patterns(&patterns);
+        let st = engine::conv2d_transpose_with(&x, &patterns, r, r, &p);
+        let seg_st = segregated::conv2d_transpose_with(
+            &x, &patterns, &pack, r, r, &p);
+        let ctx = format!("h={h} c={c} n={n} r={r} {p:?}");
+        assert!(st.allclose(&want, 1e-3), "huge2 st: {ctx}");
+        assert!(seg_st.allclose(&want, 1e-3), "segregated st: {ctx}");
+        for threads in [1usize, 5, 64] {
+            let mt = parallel::huge2_conv2d_transpose_mt(
+                &x, &patterns, r, r, &p, threads);
+            assert_eq!(mt.checksum(), st.checksum(),
+                       "huge2 mt{threads} != st: {ctx}");
+            let seg_mt = segregated::conv2d_transpose_mt(
+                &x, &patterns, &pack, r, r, &p, threads);
+            assert_eq!(seg_mt.checksum(), seg_st.checksum(),
+                       "segregated mt{threads} != st: {ctx}");
+            let base_mt = parallel::baseline_conv2d_transpose_mt(
+                &x, &k, &p, threads);
+            assert!(base_mt.allclose(&want, 1e-3),
+                    "baseline mt{threads}: {ctx}");
+        }
+    }
+    // dilated: threads far above the row shard unit (ho == 1)
+    let x = Tensor::randn(&[1, 3, 3, 2], &mut rng);
+    let k = Tensor::randn(&[3, 3, 2, 2], &mut rng);
+    let p = DilatedParams::new(1, 1, 0); // ho = wo = 1
+    let taps = dilated::pack_taps(&k);
+    let st = dilated::conv2d_dilated_with(&x, &taps, &p);
+    assert!(st.allclose(&baseline::conv2d_dilated(&x, &k, &p), 1e-3));
+    for threads in [1usize, 5, 64] {
+        let mt = parallel::conv2d_dilated_mt(&x, &taps, &p, threads);
+        assert_eq!(mt.checksum(), st.checksum(), "dilated mt{threads}");
+    }
 }
 
 #[test]

@@ -1,0 +1,158 @@
+//! SIMD-vs-scalar GEMM equivalence grid (DESIGN.md §14).
+//!
+//! The micro-kernel dispatches per ISA tier at runtime, so every tier
+//! must agree with the portable scalar kernel on the same shape sweep
+//! the deconv engines exercise:
+//!
+//! * `Avx2` (mul+add) is **bit-identical** to `Scalar` — same
+//!   per-element rounding in the same k-order, checked with `assert_eq`
+//!   on the raw f32 bits.
+//! * `Avx2Fma` contracts each multiply-add to a single rounding, so it
+//!   is only **ulp-bounded** against scalar; checked against a naive
+//!   triple loop with the house `tol * sqrt(k)` error model.
+//!
+//! On hosts without AVX2 the vector cases skip (scalar is always
+//! available and is trivially identical to itself).
+
+use huge2::gemm::{self, Isa};
+use huge2::rng::Rng;
+
+/// Shape sweep: micro-tile boundaries (MR=4, NR=16), macro-tile
+/// boundaries (MC=128, NC=1024 is too big to sweep — KC=256 captures
+/// the k-blocking), plus engine-style skinny/ragged shapes from the
+/// DCGAN/CGAN tap GEMMs.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),       // degenerate
+    (4, 16, 8),      // exactly one full micro-tile
+    (3, 15, 8),      // pure edge tile
+    (5, 17, 9),      // full tile + 1-wide edges on both axes
+    (8, 32, 256),    // KC boundary, all full tiles
+    (131, 37, 259),  // MC/KC boundaries + ragged edges
+    (64, 128, 100),  // dcgan-ish tap GEMM (ho*wo x c_out, k=c_in)
+    (256, 3, 128),   // skinny-N (few output channels)
+    (2, 200, 33),    // skinny-M (tiny spatial, wide channels)
+];
+
+fn fill(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_normal()).collect()
+}
+
+/// Naive ijk triple loop — the rounding-order-free reference for the
+/// tolerance-bounded comparisons.
+fn naive(m: usize, n: usize, k: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            for j in 0..n {
+                c[i * n + j] += av * b[p * n + j];
+            }
+        }
+    }
+    c
+}
+
+fn run(isa: Isa, m: usize, n: usize, k: usize, a: &[f32], b: &[f32],
+       accumulate: bool, seed_c: &[f32]) -> Vec<f32> {
+    let mut c = seed_c.to_vec();
+    gemm::sgemm_isa(isa, m, n, k, a, b, &mut c, accumulate);
+    c
+}
+
+#[test]
+fn avx2_bit_identical_to_scalar_across_grid() {
+    if !gemm::available_isas().contains(&Isa::Avx2) {
+        eprintln!("skip: no AVX2 on this host");
+        return;
+    }
+    let mut rng = Rng::new(0x513d);
+    for &(m, n, k) in SHAPES {
+        let a = fill(&mut rng, m * k);
+        let b = fill(&mut rng, k * n);
+        for accumulate in [false, true] {
+            let seed: Vec<f32> = fill(&mut rng, m * n);
+            let cs = run(Isa::Scalar, m, n, k, &a, &b, accumulate, &seed);
+            let cv = run(Isa::Avx2, m, n, k, &a, &b, accumulate, &seed);
+            // bit-exact: compare raw bits, not within-epsilon
+            for (i, (s, v)) in cs.iter().zip(&cv).enumerate() {
+                assert_eq!(s.to_bits(), v.to_bits(),
+                           "{m}x{n}x{k} acc={accumulate} elem {i}: \
+                            scalar {s} vs avx2 {v}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fma_tier_is_ulp_bounded_against_naive() {
+    if !gemm::available_isas().contains(&Isa::Avx2Fma) {
+        eprintln!("skip: no AVX2+FMA on this host");
+        return;
+    }
+    let mut rng = Rng::new(0xf31a);
+    for &(m, n, k) in SHAPES {
+        let a = fill(&mut rng, m * k);
+        let b = fill(&mut rng, k * n);
+        let reference = naive(m, n, k, &a, &b);
+        let zeros = vec![0.0f32; m * n];
+        let cf = run(Isa::Avx2Fma, m, n, k, &a, &b, false, &zeros);
+        let cs = run(Isa::Scalar, m, n, k, &a, &b, false, &zeros);
+        let tol = 1e-5 * (k as f32).sqrt();
+        for i in 0..m * n {
+            assert!((cf[i] - reference[i]).abs() < tol,
+                    "{m}x{n}x{k} fma elem {i}: {} vs naive {}",
+                    cf[i], reference[i]);
+            // FMA drops one rounding per multiply-add, so it must sit
+            // at least as close to scalar as the blanket tolerance
+            assert!((cf[i] - cs[i]).abs() < tol,
+                    "{m}x{n}x{k} fma-vs-scalar elem {i}");
+        }
+    }
+}
+
+#[test]
+fn every_available_tier_matches_naive() {
+    let mut rng = Rng::new(0xa55a);
+    for isa in gemm::available_isas() {
+        for &(m, n, k) in SHAPES {
+            let a = fill(&mut rng, m * k);
+            let b = fill(&mut rng, k * n);
+            let zeros = vec![0.0f32; m * n];
+            let c = run(isa, m, n, k, &a, &b, false, &zeros);
+            let reference = naive(m, n, k, &a, &b);
+            let tol = 1e-4 * (k as f32).sqrt().max(1.0);
+            for i in 0..m * n {
+                assert!((c[i] - reference[i]).abs() < tol,
+                        "{} {m}x{n}x{k} elem {i}: {} vs {}",
+                        isa.name(), c[i], reference[i]);
+            }
+        }
+    }
+}
+
+/// The thread-sweep the deconv engines use runs ISA dispatch through
+/// the pooled prepacked path — pin that every tier agrees there too,
+/// bit-exactly for the non-FMA tiers (the engines rely on this for the
+/// plan-vs-legacy bit-identity grid).
+#[test]
+fn prepacked_path_matches_flat_path_per_tier() {
+    let mut rng = Rng::new(0x9ac4);
+    for &(m, n, k) in &[(5, 17, 9), (64, 128, 100), (131, 37, 259)] {
+        let a = fill(&mut rng, m * k);
+        let b = fill(&mut rng, k * n);
+        let pb = gemm::PackedB::pack(k, n, &b);
+        let ws = huge2::workspace::Workspace::new();
+        let mut hnd = ws.handle();
+        let mut c_pre = vec![0.0f32; m * n];
+        gemm::sgemm_prepacked_with(&mut hnd, m, &a, k, &pb,
+                                   &mut c_pre, false);
+        let mut c_flat = vec![0.0f32; m * n];
+        gemm::sgemm_isa(gemm::active_isa(), m, n, k, &a, &b,
+                        &mut c_flat, false);
+        for i in 0..m * n {
+            assert_eq!(c_pre[i].to_bits(), c_flat[i].to_bits(),
+                       "{m}x{n}x{k} elem {i}: prepacked {} vs flat {}",
+                       c_pre[i], c_flat[i]);
+        }
+    }
+}

@@ -260,6 +260,38 @@ fn corrupt_and_truncated_binary_files_are_rejected_at_load() {
     std::fs::remove_file(&path).ok();
 }
 
+/// A length prefix above `u32::MAX` is rejected with an explicit
+/// byte-located decode error *before* the `u64 → usize` cast — on a
+/// 32-bit edge target that cast would silently truncate a corrupt
+/// length into a wrong-but-plausible one. The crafted event is a
+/// latent arrival whose model-string length claims 2³², which no
+/// plausibility cap below it should mask.
+#[test]
+fn oversize_length_prefix_is_rejected_with_byte_offset() {
+    let mut bytes = Vec::new();
+    binary::encode_header_into(&mut bytes, &header(1));
+    bytes.push(1); // TAG_ARRIVAL_LATENT
+    bytes.push(0); // Δt (zigzag 0)
+    bytes.push(1); // id
+    let len_at = bytes.len();
+    // varint encoding of u32::MAX + 1 as the model-string length
+    let mut v = u32::MAX as u64 + 1;
+    while v >= 0x80 {
+        bytes.push((v & 0x7f) as u8 | 0x80);
+        v >>= 7;
+    }
+    bytes.push(v as u8);
+    let path = tmp("oversize_len.bin");
+    std::fs::write(&path, &bytes).unwrap();
+    let err = Replayer::load(&path).unwrap_err().to_string();
+    std::fs::remove_file(&path).ok();
+    assert!(err.contains("exceeds u32::MAX"),
+            "error should name the overflow, got: {err}");
+    assert!(err.contains(&format!("byte {len_at}")),
+            "error should locate the length prefix at byte {len_at}: \
+             {err}");
+}
+
 /// v1–v3 JSONL traces (older version numbers, no checkpoints) still
 /// load and replay cleanly — the reader accepts 1..=4.
 #[test]
