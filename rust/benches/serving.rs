@@ -17,8 +17,53 @@ use huge2::coordinator::{Engine, Model};
 use huge2::gan::Generator;
 use huge2::rng::Rng;
 use huge2::runtime::RuntimeHandle;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+/// Machine-readable results collector: every phase that measures a
+/// per-batch cost records `(phase, ns/batch, GFLOP/s, alloc B/batch)`
+/// here, and `main` writes them to `BENCH_9.json` alongside the human
+/// tables (0.0 = metric not applicable to that phase).
+static BENCH_JSON: Mutex<Vec<(String, f64, f64, f64)>> =
+    Mutex::new(Vec::new());
+
+fn bench_record(phase: &str, ns_per_batch: f64, gflops: f64,
+                alloc_b_per_batch: f64) {
+    BENCH_JSON.lock().unwrap().push(
+        (phase.to_string(), ns_per_batch, gflops, alloc_b_per_batch));
+}
+
+fn write_bench_json() {
+    let rows = BENCH_JSON.lock().unwrap();
+    let mut s = String::from("{\n");
+    for (i, (phase, ns, gf, ab)) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "  \"{phase}\": {{\"ns_per_batch\": {ns:.0}, \
+             \"gflops\": {gf:.3}, \"alloc_bytes_per_batch\": {ab:.0}}}{}\n",
+            if i + 1 == rows.len() { "" } else { "," }));
+    }
+    s.push_str("}\n");
+    match std::fs::write("BENCH_9.json", &s) {
+        Ok(()) => println!("\nmachine-readable results: BENCH_9.json \
+                            ({} phase(s))", rows.len()),
+        Err(e) => eprintln!("\nBENCH_9.json not written: {e}"),
+    }
+}
+
+/// Effective FLOPs of one generator forward (2 × HUGE² MACs: the
+/// projection GEMM plus every transpose layer's pattern GEMMs).
+fn gan_flops_per_image(gen: &Generator) -> f64 {
+    use huge2::deconv::huge2 as engine2;
+    let (zt, hid) = gen.proj.dims2();
+    let mut macs = (zt * hid) as f64;
+    for l in &gen.layers {
+        let (_, eff) = engine2::mac_counts(
+            l.cfg.h, l.cfg.h, l.cfg.c_in, l.cfg.c_out, l.cfg.k, l.cfg.k,
+            &l.cfg.deconv_params());
+        macs += eff as f64;
+    }
+    2.0 * macs
+}
 
 /// Closed-loop: `clients` threads each fire `per_client` back-to-back
 /// requests; returns (throughput img/s, p50 µs, p95 µs, mean batch).
@@ -137,6 +182,16 @@ fn workspace_reuse_phase(quick: bool) {
         format!("{reused_sum:016x}"),
     ]);
     t.print();
+    let gflops = gan_flops_per_image(&gen) * batch as f64;
+    bench_record("workspace_fresh",
+                 t_fresh.as_nanos() as f64 / batches as f64,
+                 gflops * batches as f64 / t_fresh.as_nanos() as f64,
+                 fresh_bytes as f64 / batches as f64);
+    bench_record("workspace_reused",
+                 t_reused.as_nanos() as f64 / batches as f64,
+                 gflops * batches as f64 / t_reused.as_nanos() as f64,
+                 (steady.bytes_allocated - warm.bytes_allocated) as f64
+                     / steady_batches as f64);
     assert_eq!(fresh_sum, reused_sum,
                "pooled batches must be bit-identical to fresh");
     assert_eq!(steady.bytes_allocated, warm.bytes_allocated,
@@ -235,6 +290,16 @@ fn plan_prepack_phase(quick: bool) {
         format!("{plan_sum:016x}"),
     ]);
     t.print();
+    let gflops = gan_flops_per_image(&gen) * batch as f64;
+    bench_record("plan_legacy_pack",
+                 t_legacy.as_nanos() as f64 / batches as f64,
+                 gflops * batches as f64 / t_legacy.as_nanos() as f64,
+                 0.0);
+    bench_record("plan_prepacked",
+                 t_plan.as_nanos() as f64 / batches as f64,
+                 gflops * batches as f64 / t_plan.as_nanos() as f64,
+                 (steady.bytes_allocated - warm.bytes_allocated) as f64
+                     / steady_batches as f64);
     assert_eq!(legacy_sum, plan_sum,
                "prepack-once plan must be bit-identical to per-forward \
                 packing");
@@ -693,6 +758,93 @@ fn microkernel_phase(quick: bool) {
     t.print();
 }
 
+/// Autotuned-plan phase (DESIGN.md §15): the same batch workload run
+/// under the heuristic `Auto` plan vs the memsim-scored tuned plan
+/// (reference calibration, so the phase is deterministic). Reports
+/// ns/batch for both — the measured heuristic-vs-tuned column of
+/// BENCH_9.json — and asserts the two plans' outputs agree (allclose:
+/// tuned selections may legally change FP summation order).
+fn tuned_plan_phase(quick: bool) {
+    use huge2::tune::{tune_plan, Calibration};
+    use huge2::workspace::Workspace;
+
+    let (gen, name) = if quick {
+        (Generator::tiny_cgan(19), "tiny_cgan")
+    } else {
+        (Generator::dcgan(19), "dcgan")
+    };
+    let batches = if quick { 4 } else { 8 };
+    let batch = 4usize;
+    let auto = gen.plan();
+    let cal = Calibration::reference();
+    let art = tune_plan(auto, name, &cal);
+    let tuned = art.apply(auto).expect("freshly tuned plan must apply");
+
+    println!("\n== autotuned plan vs Auto heuristic ({name}, reference \
+              calibration, DESIGN.md §15) ==\n");
+    let mut rng = Rng::new(23);
+    let zs: Vec<huge2::tensor::Tensor> = (0..batches)
+        .map(|_| {
+            let data: Vec<f32> = (0..batch * auto.in_elems())
+                .map(|_| rng.next_normal())
+                .collect();
+            huge2::tensor::Tensor::from_vec(&[batch, auto.in_elems()],
+                                            data)
+        })
+        .collect();
+    let run = |plan: &huge2::plan::ExecPlan| {
+        let ws = Workspace::new();
+        let mut hnd = ws.handle();
+        let mut last = plan.run(&zs[0], &mut hnd); // warmup
+        let warm = ws.counters();
+        let t0 = Instant::now();
+        for z in &zs {
+            last = plan.run(z, &mut hnd);
+        }
+        let wall = t0.elapsed();
+        let steady = ws.counters();
+        (wall, last,
+         (steady.bytes_allocated - warm.bytes_allocated) as f64
+             / batches as f64)
+    };
+
+    let (t_auto, out_auto, alloc_auto) = run(auto);
+    let (t_tuned, out_tuned, alloc_tuned) = run(&tuned);
+    let gflops = gan_flops_per_image(&gen) * batch as f64;
+    let mut t = Table::new(&["plan", "ns/batch", "GFLOP/s",
+                             "alloc B/batch", "digest"]);
+    for (label, wall, alloc, digest) in [
+        ("auto heuristic", t_auto, alloc_auto, auto.engine_digest()),
+        ("tuned (memsim argmin)", t_tuned, alloc_tuned,
+         tuned.engine_digest()),
+    ] {
+        t.row(&[
+            label.into(),
+            format!("{}", wall.as_nanos() as u64 / batches as u64),
+            format!("{:.2}",
+                    gflops * batches as f64 / wall.as_nanos() as f64),
+            format!("{alloc:.0}"),
+            format!("{digest:016x}"),
+        ]);
+    }
+    t.print();
+    bench_record("serve_auto",
+                 t_auto.as_nanos() as f64 / batches as f64,
+                 gflops * batches as f64 / t_auto.as_nanos() as f64,
+                 alloc_auto);
+    bench_record("serve_tuned",
+                 t_tuned.as_nanos() as f64 / batches as f64,
+                 gflops * batches as f64 / t_tuned.as_nanos() as f64,
+                 alloc_tuned);
+    println!("{} of {} step(s) re-tuned; speedup {:.2}x (ties keep the \
+              heuristic, so a tuned plan is never *selected* to be \
+              slower under the model)",
+             art.n_differs(), art.steps.len(),
+             t_auto.as_secs_f64() / t_tuned.as_secs_f64().max(1e-12));
+    assert!(out_tuned.allclose(&out_auto, 1e-4),
+            "tuned plan diverged from the heuristic plan's outputs");
+}
+
 fn main() {
     let quick = std::env::var("BENCH_QUICK").is_ok();
     let per_client = if quick { 2 } else { 6 };
@@ -700,10 +852,12 @@ fn main() {
     microkernel_phase(quick);
     workspace_reuse_phase(quick);
     plan_prepack_phase(quick);
+    tuned_plan_phase(quick);
     instrumentation_overhead_phase(quick);
     recording_overhead_phase(quick);
     replay_regression(quick);
     seg_replay_regression(quick);
+    write_bench_json();
 
     let dir = std::path::PathBuf::from("artifacts");
     if !dir.join("manifest.txt").exists() {

@@ -7,6 +7,17 @@
 //!                                     # prepacked bytes, ws high-water
 //! huge2 plan --net dcgan --profile    # + observed per-layer costs
 //!                                     # (--profile-runs N, --profile-out f)
+//! huge2 tune --net dcgan --out tuned.bin
+//!                                     # memsim-scored autotune: argmin
+//!                                     # engine×threads×tile per layer,
+//!                                     # persisted (--reference pins the
+//!                                     # deterministic cost constants)
+//! huge2 plan --net dcgan --tuned tuned.bin
+//!                                     # heuristic-vs-tuned per layer +
+//!                                     # predicted DRAM bytes column
+//! huge2 serve --native --tuned tuned.bin
+//!                                     # serve under the tuned plan
+//!                                     # (--autotune tunes at load)
 //! huge2 serve --model dcgan --rate 2 --requests 20
 //! huge2 serve --native --stats-every 1 --profile-layers
 //!                                     # periodic [stats] lines + per-layer
@@ -50,7 +61,7 @@ impl Args {
         let subcommand = it
             .next()
             .ok_or_else(|| anyhow!("usage: huge2 <inspect|bench|plan|\
-                                    serve|segment|replay|trace|\
+                                    tune|serve|segment|replay|trace|\
                                     reproduce> \
                                     [positional] [--key value]"))?
             .clone();

@@ -277,13 +277,35 @@ impl Model {
         }
     }
 
+    /// [`Model::native`] but serving under an explicitly provided plan
+    /// instead of the generator's heuristic-compiled one — the tuned
+    /// serving path (`huge2 serve --tuned`): the caller applies a
+    /// [`crate::tune::TunedPlan`] to `gen.plan()` and registers the
+    /// result. The plan must compute the same network (same steps/
+    /// shapes); only engine/thread/tile selections may differ.
+    pub fn native_with_plan(name: &str, gen: Arc<Generator>,
+                            cond_dim: usize, plan: ExecPlan) -> Self {
+        let mut m = Model::native(name, gen, cond_dim);
+        m.plan = Some(plan);
+        m
+    }
+
     /// Build a natively-served segmentation model: image requests in,
     /// class-argmax masks out. The serving plan is the net's compiled
     /// logits plan plus the argmax head — registration is load time,
     /// not inference time.
     pub fn native_seg(name: &str, net: Arc<SegNet>) -> Self {
-        let in_shape = net.in_shape();
         let plan = net.plan().with_argmax_head(net.n_classes());
+        Model::native_seg_with_plan(name, net, plan)
+    }
+
+    /// [`Model::native_seg`] but serving under an explicitly provided
+    /// plan (argmax head already appended) instead of the heuristic-
+    /// compiled one — the tuned serving path, mirroring
+    /// [`Model::native_with_plan`].
+    pub fn native_seg_with_plan(name: &str, net: Arc<SegNet>,
+                                plan: ExecPlan) -> Self {
+        let in_shape = net.in_shape();
         let out_shape = plan.out_shape(1);
         Model {
             name: name.to_string(),

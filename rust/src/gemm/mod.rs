@@ -48,6 +48,43 @@ const MC: usize = 128;
 /// Panel width of N.
 const NC: usize = 1024;
 
+/// Runtime cache-blocking override — the autotuner's GEMM knob.
+///
+/// `kc`/`nc` replace the compile-time `KC`/`NC` panel factors for one
+/// call. Only the plan's Project step takes a runtime tile: the deconv
+/// engines run against [`PackedB`], whose panel offsets were baked at
+/// pack time under the default blocking. Values are clamped (via
+/// [`Tile::clamped`]) to at most the defaults so the workspace
+/// high-water accounting (`sgemm_scratch_elems`) stays an upper bound.
+///
+/// A non-default `kc` regroups the K-panel partial sums — a different
+/// FP accumulation order — so tuned tiles fold into the plan digest
+/// exactly like the FMA numerics term (DESIGN.md §15).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tile {
+    /// K-panel depth (default 256).
+    pub kc: usize,
+    /// N-panel width (default 1024).
+    pub nc: usize,
+}
+
+impl Tile {
+    /// The compile-time blocking every untiled entry point uses.
+    pub const DEFAULT: Tile = Tile { kc: KC, nc: NC };
+
+    /// True when this tile is exactly the default blocking (no digest
+    /// term, no behavioural difference from `sgemm_with`).
+    pub fn is_default(&self) -> bool {
+        *self == Self::DEFAULT
+    }
+
+    /// Clamp into `[NR, default]` on both axes — the range the
+    /// workspace accounting covers.
+    pub fn clamped(self) -> Tile {
+        Tile { kc: self.kc.clamp(NR, KC), nc: self.nc.clamp(NR, NC) }
+    }
+}
+
 /// Instruction-set tier the full-tile micro-kernel dispatches to.
 ///
 /// `Scalar` and `Avx2` are bit-identical (same per-element rounding in
@@ -185,6 +222,26 @@ pub fn sgemm_isa(isa: Isa, m: usize, n: usize, k: usize, a: &[f32],
 fn sgemm_strided_core(ws: &mut WsHandle, isa: Isa, m: usize, n: usize,
                       k: usize, a: &[f32], lda: usize, b: &[f32],
                       c: &mut [f32], accumulate: bool) {
+    sgemm_strided_tiled_core(ws, isa, m, n, k, a, lda, b, c, accumulate,
+                             Tile::DEFAULT);
+}
+
+/// [`sgemm_with`] under an explicit cache-blocking [`Tile`] — the tuned
+/// Project-step path. `Tile::DEFAULT` is bit-identical to `sgemm_with`.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_tiled_with(ws: &mut WsHandle, m: usize, n: usize, k: usize,
+                        a: &[f32], b: &[f32], c: &mut [f32],
+                        accumulate: bool, tile: Tile) {
+    assert_eq!(a.len(), m * k, "A size");
+    sgemm_strided_tiled_core(ws, active_isa(), m, n, k, a, k, b, c,
+                             accumulate, tile);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn sgemm_strided_tiled_core(ws: &mut WsHandle, isa: Isa, m: usize,
+                            n: usize, k: usize, a: &[f32], lda: usize,
+                            b: &[f32], c: &mut [f32], accumulate: bool,
+                            tile: Tile) {
     assert!(lda >= k, "lda {lda} < k {k}");
     assert!(m == 0 || a.len() >= (m - 1) * lda + k, "A size");
     assert_eq!(b.len(), k * n, "B size");
@@ -195,14 +252,15 @@ fn sgemm_strided_core(ws: &mut WsHandle, isa: Isa, m: usize, n: usize,
     if m == 0 || n == 0 || k == 0 {
         return;
     }
+    let Tile { kc: kc_blk, nc: nc_blk } = tile.clamped();
 
-    let mut packed_a = ws.checkout(MC * KC);
-    let mut packed_b = ws.checkout(KC * NC.min(round_up(n, NR)));
+    let mut packed_a = ws.checkout(MC * kc_blk);
+    let mut packed_b = ws.checkout(kc_blk * nc_blk.min(round_up(n, NR)));
 
-    for jc in (0..n).step_by(NC) {
-        let nc = NC.min(n - jc);
-        for pc in (0..k).step_by(KC) {
-            let kc = KC.min(k - pc);
+    for jc in (0..n).step_by(nc_blk) {
+        let nc = nc_blk.min(n - jc);
+        for pc in (0..k).step_by(kc_blk) {
+            let kc = kc_blk.min(k - pc);
             pack_b(&mut packed_b, b, k, n, pc, jc, kc, nc);
             for ic in (0..m).step_by(MC) {
                 let mc = MC.min(m - ic);
@@ -769,6 +827,39 @@ mod tests {
         assert!(!Isa::Scalar.relaxed_numerics());
         assert!(!Isa::Avx2.relaxed_numerics());
         assert!(Isa::Avx2Fma.relaxed_numerics());
+    }
+
+    #[test]
+    fn tiled_matches_naive_and_default_is_bit_identical() {
+        let mut rng = Rng::new(77);
+        let (m, n, k) = (130, 1100, 300);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.next_normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.next_normal()).collect();
+        let mut want = vec![0.0; m * n];
+        sgemm(m, n, k, &a, &b, &mut want, false);
+        let ws = Workspace::new();
+        // default tile: bit-identical to the untiled entry point
+        let mut got = vec![0.0; m * n];
+        sgemm_tiled_with(&mut ws.handle(), m, n, k, &a, &b, &mut got,
+                         false, Tile::DEFAULT);
+        assert_eq!(got, want);
+        // non-default tiles: numerically equivalent (different K-panel
+        // partial-sum grouping, hence only an ulp-style bound)
+        for tile in [Tile { kc: 128, nc: 512 }, Tile { kc: 64, nc: 1024 },
+                     Tile { kc: 256, nc: 256 }] {
+            let mut t = vec![0.0; m * n];
+            sgemm_tiled_with(&mut ws.handle(), m, n, k, &a, &b, &mut t,
+                             false, tile);
+            let err = t.iter().zip(&want)
+                .map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+            assert!(err < 1e-3 * (k as f32).sqrt(),
+                    "err={err} tile={tile:?}");
+        }
+        // clamping pins out-of-range tiles into the accounted range
+        let c = Tile { kc: 1, nc: 1 << 20 }.clamped();
+        assert_eq!(c, Tile { kc: NR, nc: NC });
+        assert!(Tile::DEFAULT.is_default());
+        assert!(!Tile { kc: 128, nc: 1024 }.is_default());
     }
 
     #[test]

@@ -83,7 +83,55 @@
 //!
 //! CLI: `huge2 plan --net <dcgan|cgan|tiny_cgan|segnet|tiny_segnet>`
 //! prints the per-layer table (engine, threads, prepacked bytes,
-//! shapes) plus the plan's workspace high-water mark and digest.
+//! predicted DRAM bytes, shapes) plus the plan's workspace high-water
+//! mark and digest.
+//!
+//! ## Tuning quickstart (measured cost-model autotuner)
+//!
+//! `Auto` is a fixed heuristic; the [`tune`] module replaces it with a
+//! measured argmin (DESIGN.md §15). Every compute step's candidates —
+//! engine (Baseline / HUGE² / Segregated) × threads × GEMM tile — are
+//! scored by replaying their exact access streams through the
+//! [`memsim`] cache model, converted to nanoseconds with a
+//! [`tune::Calibration`] (fixed reference constants, or fitted once
+//! against timed microbenchmarks of the real engines), and the
+//! cheapest strictly-better candidate wins. The result persists as a
+//! [`tune::TunedPlan`] keyed by plan digest + ISA tier, and applying
+//! it folds the selections into the digest — so replay gates stale
+//! tunings loudly:
+//!
+//! ```no_run
+//! use huge2::gan::Generator;
+//! use huge2::tune::{Calibration, LoadedTuned, TunedPlan, tune_plan};
+//!
+//! let gen = Generator::dcgan(7);
+//! let cal = Calibration::reference();     // or Calibration::measured()
+//! let tuned = tune_plan(gen.plan(), "dcgan", &cal);
+//! println!("{} of {} steps re-tuned", tuned.n_differs(),
+//!          tuned.steps.len());
+//! std::fs::write("tuned.bin", tuned.encode())?;
+//!
+//! // at serve start: load, key-check, apply
+//! match TunedPlan::decode(&std::fs::read("tuned.bin")?)
+//!     .map_err(anyhow::Error::msg)?
+//! {
+//!     LoadedTuned::Tuned(t) => {
+//!         let plan = t.apply(gen.plan()).map_err(anyhow::Error::msg)?;
+//!         println!("serving under digest {:016x}", plan.engine_digest());
+//!     }
+//!     LoadedTuned::VersionMismatch { found } => {
+//!         eprintln!("tuned-plan v{found} unsupported; using heuristic");
+//!     }
+//! }
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! CLI: `huge2 tune --net dcgan --out tuned.bin [--reference]` writes
+//! the artifact (`--reference` is byte-deterministic across hosts);
+//! `huge2 plan --net dcgan --tuned tuned.bin` prints heuristic-vs-tuned
+//! per layer; `huge2 serve --tuned tuned.bin` (or `--autotune`) serves
+//! under it, and `huge2 replay` verifies traces against whichever plan
+//! is active.
 //!
 //! ## Segmentation quickstart
 //!
@@ -339,5 +387,6 @@ pub mod runtime;
 pub mod seg;
 pub mod tensor;
 pub mod trace;
+pub mod tune;
 pub mod bench_util;
 pub mod workspace;

@@ -47,14 +47,150 @@ fn run(argv: &[String]) -> Result<()> {
         "inspect" => inspect(&args),
         "bench" => bench(&args),
         "plan" => plan_cmd(&args),
+        "tune" => tune_cmd(&args),
         "serve" => serve(&args),
         "segment" => segment(&args),
         "replay" => replay(&args),
         "trace" => trace_cmd(&args),
         "reproduce" => reproduce(&args),
         other => bail!("unknown subcommand {other:?} \
-                        (inspect|bench|plan|serve|segment|replay|\
+                        (inspect|bench|plan|tune|serve|segment|replay|\
                          trace|reproduce)"),
+    }
+}
+
+/// The serving plan the autotuner scores and serves under: for GAN nets
+/// the generator's compiled plan, for seg nets the logits plan plus the
+/// argmax head (the exact plan workers execute). `gan` aliases `dcgan`.
+fn tuning_base_plan(net: &str, seed: u64)
+                    -> Result<(huge2::plan::ExecPlan, String)> {
+    let name = match net {
+        "gan" => "dcgan",
+        other => other,
+    };
+    let plan = match name {
+        "dcgan" => Generator::dcgan(seed).plan().clone(),
+        "cgan" => Generator::cgan(seed).plan().clone(),
+        "tiny_cgan" => Generator::tiny_cgan(seed).plan().clone(),
+        other => {
+            let cfg = seg_net_cfg(other).map_err(|_| anyhow!(
+                "unknown net {other:?} (dcgan|cgan|tiny_cgan|segnet|\
+                 tiny_segnet)"))?;
+            let n = SegNet::new(&cfg, seed);
+            n.plan().with_argmax_head(n.n_classes())
+        }
+    };
+    Ok((plan, name.to_string()))
+}
+
+/// Load a `--tuned <file>` artifact. Corrupt/truncated bytes are hard
+/// errors (with the decode byte offset); an unsupported format version
+/// warns and falls back to the heuristic plan (`None`).
+fn load_tuned(args: &Args) -> Result<Option<huge2::tune::TunedPlan>> {
+    let Some(path) = path_flag(args, "tuned")? else {
+        return Ok(None);
+    };
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow!("--tuned {path}: {e}"))?;
+    match huge2::tune::TunedPlan::decode(&bytes)
+        .map_err(|e| anyhow!("--tuned {path}: {e}"))?
+    {
+        huge2::tune::LoadedTuned::Tuned(t) => Ok(Some(t)),
+        huge2::tune::LoadedTuned::VersionMismatch { found } => {
+            eprintln!("warning: {path} is tuned-plan format v{found}; \
+                       this build reads v{} — falling back to the \
+                       heuristic plan", huge2::tune::TUNED_VERSION);
+            Ok(None)
+        }
+    }
+}
+
+/// The calibration a command asked for: `--reference` pins the
+/// deterministic constants (byte-identical artifacts across hosts);
+/// otherwise fit against this host's timed microbenchmarks.
+fn calibration_for(args: &Args) -> huge2::tune::Calibration {
+    if args.has("reference") {
+        huge2::tune::Calibration::reference()
+    } else {
+        println!("calibrating cost model against timed microbenchmarks \
+                  (use --reference for deterministic constants)...");
+        huge2::tune::Calibration::measured()
+    }
+}
+
+/// `huge2 tune --net <name> --out <file> [--reference]`: score every
+/// compute step's candidate configurations (engine × threads × GEMM
+/// tile) with the memsim cost model, pick the argmin per step, and
+/// persist the [`huge2::tune::TunedPlan`] artifact (DESIGN.md §15).
+fn tune_cmd(args: &Args) -> Result<()> {
+    let net = args.get_or("net", "dcgan");
+    let seed = args.get_usize("seed", 7)? as u64;
+    let out = path_flag(args, "out")?.unwrap_or("tuned.bin");
+    let (plan, net_name) = tuning_base_plan(&net, seed)?;
+    let cal = calibration_for(args);
+    println!("cost model: {:.3} ns/MAC, {:.4} ns/L2-byte, \
+              {:.3} ns/DRAM-byte, {:.1} µs/thread-spawn ({})",
+             cal.ns_per_mac, cal.ns_per_l2_byte, cal.ns_per_dram_byte,
+             cal.thread_spawn_ns / 1e3,
+             if cal.measured { "measured" } else { "reference" });
+    let tuned = huge2::tune::tune_plan(&plan, &net_name, &cal);
+
+    let mut t = Table::new(&["step", "op", "heuristic", "tuned",
+                             "pred heur", "pred tuned"]);
+    for (st, ts) in plan.steps().iter().zip(&tuned.steps) {
+        t.row(&[
+            st.name.clone(),
+            st.op.kind().into(),
+            selection_cell(ts.heuristic_engine, ts.heuristic_threads,
+                           None),
+            if ts.differs() {
+                selection_cell(ts.engine, ts.threads, ts.tile)
+            } else {
+                "=".into()
+            },
+            pred_cell(ts.heuristic_ns),
+            pred_cell(ts.predicted_ns),
+        ]);
+    }
+    t.print();
+    println!("tuned {} of {} step(s) away from the heuristic",
+             tuned.n_differs(), tuned.steps.len());
+    println!("digests: heuristic {:016x} → tuned {:016x} \
+              (isa {})", tuned.base_digest, tuned.tuned_digest,
+             tuned.isa);
+    std::fs::write(out, tuned.encode())
+        .map_err(|e| anyhow!("--out {out}: {e}"))?;
+    println!("tuned plan written to {out} (serve: huge2 serve --tuned \
+              {out}; inspect: huge2 plan --net {net_name} --tuned {out})");
+    Ok(())
+}
+
+/// `engine xT [kcxnc]` cell for the tune/plan tables.
+fn selection_cell(engine: Option<DeconvEngine>, threads: usize,
+                  tile: Option<huge2::gemm::Tile>) -> String {
+    let mut s = match engine {
+        Some(e) => format!("{} x{threads}", e.name()),
+        None => "-".into(),
+    };
+    if let Some(t) = tile {
+        let cell = format!("tile {}x{}", t.kc, t.nc);
+        if engine.is_some() {
+            s.push(' ');
+            s.push_str(&cell);
+        } else {
+            s = cell;
+        }
+    }
+    s
+}
+
+/// Activations/heads have no modeled stream — their prediction is the
+/// `-` fallback, not a number.
+fn pred_cell(ns: f64) -> String {
+    if ns > 0.0 {
+        format!("{:.1}µs", ns / 1e3)
+    } else {
+        "-".into()
     }
 }
 
@@ -134,16 +270,32 @@ fn plan_cmd(args: &Args) -> Result<()> {
         }
     };
 
+    // `--tuned <file>`: show the persisted autotuned selection next to
+    // the heuristic per layer (the artifact's keys are enforced —
+    // a stale or wrong-ISA file is a hard error, DESIGN.md §15)
+    let tuned = load_tuned(args)?;
+    let tuned = match &tuned {
+        Some(t) => {
+            t.apply(&plan).map_err(anyhow::Error::msg)?;
+            Some(t)
+        }
+        None => None,
+    };
+
     println!("{net} (seed {seed}): compiled execution plan, \
               {} steps\n", plan.steps().len());
     // every GEMM-backed step shares the process-wide microkernel tier
     let isa = huge2::gemm::active_isa().name();
-    let mut t = Table::new(&["step", "op", "engine", "isa", "threads",
-                             "out shape", "prepacked"]);
-    for st in plan.steps() {
+    let mut cols = vec!["step", "op", "engine", "isa", "threads",
+                        "out shape", "prepacked", "dram/req"];
+    if tuned.is_some() {
+        cols.push("tuned");
+    }
+    let mut t = Table::new(&cols);
+    for (i, st) in plan.steps().iter().enumerate() {
         let is_compute = !matches!(st.op, PlanOp::Activation(_)
                                           | PlanOp::Head(_));
-        t.row(&[
+        let mut row = vec![
             st.name.clone(),
             st.op.kind().into(),
             st.engine.map(|e| e.name().to_string())
@@ -157,9 +309,33 @@ fn plan_cmd(args: &Args) -> Result<()> {
             } else {
                 "-".into()
             },
-        ]);
+            // memsim-predicted DRAM bytes (batch 1); `-` where the op
+            // has no modeled stream
+            match huge2::tune::step_bytes_moved(st) {
+                Some(b) => format!("{:.1}KB", b as f64 / 1024.0),
+                None => "-".into(),
+            },
+        ];
+        if let Some(tp) = tuned {
+            row.push(match tp.steps.get(i) {
+                Some(ts) if ts.differs() => {
+                    selection_cell(ts.engine, ts.threads, ts.tile)
+                }
+                Some(_) => "=".into(),
+                None => "-".into(),
+            });
+        }
+        t.row(&row);
     }
     t.print();
+    if let Some(tp) = tuned {
+        println!("\ntuned plan: {} of {} step(s) differ from the \
+                  heuristic; serving digest {:016x} (heuristic \
+                  {:016x}, cal: {})",
+                 tp.n_differs(), tp.steps.len(), tp.tuned_digest,
+                 tp.base_digest,
+                 if tp.cal.measured { "measured" } else { "reference" });
+    }
     println!("\ninput: {} elems/request; output (batch {batch}): {:?}",
              plan.in_elems(), plan.out_shape(batch));
     println!("prepacked at load: {:.1}KB total (zero packing per \
@@ -536,11 +712,20 @@ fn serve_generate(args: &Args) -> Result<()> {
     if native {
         let gen = Arc::new(Generator::dcgan(seed));
         z_dim = gen.z_dim;
-        eng.register_native(huge2::coordinator::Model::native(
-            &model, gen, 0))?;
+        match tuned_serving_plan(args, gen.plan(), "dcgan")? {
+            Some(plan) => eng.register_native(
+                huge2::coordinator::Model::native_with_plan(
+                    &model, gen, 0, plan))?,
+            None => eng.register_native(
+                huge2::coordinator::Model::native(&model, gen, 0))?,
+        }
         println!("serving {model} natively (pure-rust HUGE2 engine, \
                   gemm isa: {})", huge2::gemm::active_isa().name());
     } else {
+        if args.get("tuned").is_some() || args.has("autotune") {
+            bail!("--tuned/--autotune apply to compiled native plans; \
+                   the PJRT backend has none (add --native)");
+        }
         let rt = Arc::new(RuntimeHandle::spawn(
             cfg.artifact_dir.clone().into())?);
         eng.register_pjrt(&model, &format!("{model}_gen"), rt, 1, seed)?;
@@ -585,6 +770,31 @@ fn serve_generate(args: &Args) -> Result<()> {
     finish_serve(eng, pending, t0, record, sobs)
 }
 
+/// Resolve the plan a native serve should run under: `--tuned <file>`
+/// applies a persisted [`huge2::tune::TunedPlan`] (key-checked: ISA +
+/// digest, hard error when stale); `--autotune` tunes in-process at
+/// load (calibrating per [`calibration_for`]); neither → `None`, the
+/// model's heuristic-compiled plan.
+fn tuned_serving_plan(args: &Args, base: &huge2::plan::ExecPlan,
+                      net: &str)
+                      -> Result<Option<huge2::plan::ExecPlan>> {
+    let tuned = match load_tuned(args)? {
+        Some(t) => Some(t),
+        None if args.has("autotune") => {
+            let cal = calibration_for(args);
+            Some(huge2::tune::tune_plan(base, net, &cal))
+        }
+        None => return Ok(None),
+    };
+    let Some(t) = tuned else { return Ok(None) };
+    let plan = t.apply(base).map_err(anyhow::Error::msg)?;
+    println!("tuned plan: {} of {} step(s) differ from the heuristic \
+              (digest {:016x} → {:016x})",
+             t.n_differs(), t.steps.len(), t.base_digest,
+             t.tuned_digest);
+    Ok(Some(plan))
+}
+
 /// Resolve a `--net` / trace-header seg-net name against the registry.
 fn seg_net_cfg(name: &str) -> Result<huge2::config::SegNetConfig> {
     segnet_by_name(name).ok_or_else(|| anyhow!(
@@ -609,8 +819,16 @@ fn serve_segment(args: &Args) -> Result<()> {
     let net = Arc::new(SegNet::new(&net_cfg, seed));
     let in_shape = net.in_shape();
     let n_classes = net.n_classes();
-    eng.register_native(huge2::coordinator::Model::native_seg(
-        &model, net))?;
+    // the tuned artifact keys against the full serving plan (argmax
+    // head included) — the exact plan the workers execute
+    let base = net.plan().with_argmax_head(n_classes);
+    match tuned_serving_plan(args, &base, &net_name)? {
+        Some(plan) => eng.register_native(
+            huge2::coordinator::Model::native_seg_with_plan(
+                &model, net, plan))?,
+        None => eng.register_native(
+            huge2::coordinator::Model::native_seg(&model, net))?,
+    }
     println!("serving {model} natively (HUGE2 untangled dilated convs, \
               gemm isa: {}, input {in_shape:?}, {n_classes} classes)",
              huge2::gemm::active_isa().name());
@@ -676,8 +894,17 @@ fn engine_for_header(h: &TraceHeader, args: &Args) -> Result<Engine> {
                        generator has z_dim {}",
                       h.z_dim, h.cond_dim, gen.z_dim);
             }
-            eng.register_native(huge2::coordinator::Model::native(
-                &h.model, gen, h.cond_dim))?;
+            // `--tuned <file>` replays under the tuned plan — the
+            // digest gate then enforces that the trace was *recorded*
+            // under the same selections (stale tunings fail loudly)
+            match tuned_serving_plan(args, gen.plan(), "dcgan")? {
+                Some(plan) => eng.register_native(
+                    huge2::coordinator::Model::native_with_plan(
+                        &h.model, gen, h.cond_dim, plan))?,
+                None => eng.register_native(
+                    huge2::coordinator::Model::native(
+                        &h.model, gen, h.cond_dim))?,
+            }
         }
         ("generate", "pjrt") => {
             let rt = Arc::new(RuntimeHandle::spawn(
@@ -690,8 +917,16 @@ fn engine_for_header(h: &TraceHeader, args: &Args) -> Result<Engine> {
             // the header names the seg-net config + weight seed — the
             // exact net rebuilds from the trace file alone
             let net_cfg = seg_net_cfg(&h.net)?;
-            eng.register_native(huge2::coordinator::Model::native_seg(
-                &h.model, Arc::new(SegNet::new(&net_cfg, h.seed))))?;
+            let net = Arc::new(SegNet::new(&net_cfg, h.seed));
+            let base = net.plan().with_argmax_head(net.n_classes());
+            match tuned_serving_plan(args, &base, &h.net)? {
+                Some(plan) => eng.register_native(
+                    huge2::coordinator::Model::native_seg_with_plan(
+                        &h.model, net, plan))?,
+                None => eng.register_native(
+                    huge2::coordinator::Model::native_seg(
+                        &h.model, net))?,
+            }
         }
         (task, backend) => bail!(
             "trace has unsupported task/backend {task:?}/{backend:?}"),

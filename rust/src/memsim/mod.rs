@@ -18,5 +18,8 @@ pub mod counter;
 pub mod gpu_model;
 
 pub use cache::{Cache, CacheConfig, Hierarchy, HierarchyStats};
-pub use counter::{trace_layer, AccessStats, EngineKind};
+pub use counter::{
+    trace_dilated, trace_dilated_threads, trace_gemm_shape, trace_layer,
+    trace_transpose, AccessStats, EngineKind, LayerTrace,
+};
 pub use gpu_model::{GpuModel, GpuEstimate};

@@ -36,6 +36,7 @@ use crate::deconv::segregated::{self, SegPack};
 use crate::deconv::{baseline, dilated, huge2, parallel, polyphase_len,
                     DeconvParams, DilatedParams, Engine};
 use crate::gan::GenLayer;
+use crate::gemm::Tile;
 use crate::seg::SegLayer;
 use crate::tensor::Tensor;
 use crate::workspace::{WsBuf, WsHandle};
@@ -51,7 +52,7 @@ pub const AUTO_THREADS: usize = 4;
 
 /// Host parallelism cap for the Auto heuristic, resolved once per
 /// process (`available_parallelism` can syscall on some platforms).
-fn host_threads() -> usize {
+pub(crate) fn host_threads() -> usize {
     static CAP: OnceLock<usize> = OnceLock::new();
     *CAP.get_or_init(|| {
         std::thread::available_parallelism()
@@ -322,6 +323,12 @@ pub struct PlanStep {
     /// Resolved concrete engine (`None` for activations/heads).
     pub engine: Option<Engine>,
     pub threads: usize,
+    /// Tuned GEMM cache-blocking override for the Project step
+    /// (`None` = compile-time default). Only ever set by
+    /// [`ExecPlan::with_tuning`]; a non-default tile regroups K-panel
+    /// partial sums, so it folds into the digest like the FMA
+    /// numerics term (DESIGN.md §15).
+    pub tile: Option<Tile>,
     /// Per-image output shape `[h, w, c]`.
     pub out_shape: [usize; 3],
     /// Per-image output element count (`h·w·c`).
@@ -465,6 +472,30 @@ impl PlanProfile {
             s.ws_bytes.store(0, Relaxed);
         }
     }
+}
+
+// ------------------------------------------------------------- tuning
+
+/// One tuned per-step choice the autotuner measured as the argmin
+/// (see [`crate::tune`]). Applied by [`ExecPlan::with_tuning`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepSelection {
+    /// Step index in the compiled plan this selection targets.
+    pub step: usize,
+    /// Concrete engine for a conv step (`None` = leave as compiled;
+    /// `Auto` is not a valid tuned choice and is ignored).
+    pub engine: Option<Engine>,
+    /// Thread count for a conv step (Baseline forces 1).
+    pub threads: usize,
+    /// GEMM cache-blocking for a Project step (`None`/default = leave
+    /// the compile-time blocking).
+    pub tile: Option<Tile>,
+}
+
+/// The autotuner's full selection set for one plan.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PlanTuning {
+    pub selections: Vec<StepSelection>,
 }
 
 /// A compiled forward plan: the unified executable form of a
@@ -623,6 +654,77 @@ impl ExecPlan {
             if matches!(st.engine,
                         Some(Engine::Huge2) | Some(Engine::Segregated)) {
                 st.threads = threads.max(1);
+            }
+        }
+        ExecPlan::new(self.requested, self.in_elems, steps)
+    }
+
+    /// This plan with the autotuner's per-step selections applied —
+    /// the measured-argmin twin of [`ExecPlan::with_threads`]
+    /// (DESIGN.md §15). Engine flips re-pack exactly the state the new
+    /// engine needs (fused [`SegPack`] panels appear when a step turns
+    /// segregated, drop when it turns away); thread counts follow the
+    /// engine's rules (Baseline is always single-threaded); Project
+    /// steps take the tuned GEMM tile (`None`/default = untouched).
+    /// The rebuilt plan recomputes its digest, so a tuned plan whose
+    /// selections differ from the heuristic's diverges loudly at the
+    /// replay digest gate — and one whose selections all match is
+    /// digest-identical to the heuristic plan.
+    pub fn with_tuning(&self, tuning: &PlanTuning) -> ExecPlan {
+        let mut steps = self.steps.clone();
+        for sel in &tuning.selections {
+            let st = match steps.get_mut(sel.step) {
+                Some(st) => st,
+                None => continue, // stale selection index: ignore
+            };
+            match &mut st.op {
+                PlanOp::TransposeConv { patterns, seg, .. } => {
+                    let eng = match sel.engine {
+                        Some(Engine::Auto) | None => continue,
+                        Some(e) => e,
+                    };
+                    st.engine = Some(eng);
+                    st.threads = if eng == Engine::Baseline {
+                        1
+                    } else {
+                        sel.threads.max(1)
+                    };
+                    if eng == Engine::Segregated {
+                        if seg.is_none() {
+                            *seg = Some(Arc::new(
+                                SegPack::from_patterns(patterns)));
+                        }
+                    } else {
+                        *seg = None;
+                    }
+                    st.prepacked_bytes = match seg {
+                        Some(sp) => sp.bytes(),
+                        None => patterns.iter()
+                            .flat_map(|pt| pt.packed.iter())
+                            .map(|pb| pb.bytes())
+                            .sum(),
+                    };
+                }
+                PlanOp::DilatedConv { .. } => {
+                    let eng = match sel.engine {
+                        Some(Engine::Auto) | None => continue,
+                        // no zeros to segregate on the dilated path
+                        // (mirrors `resolve_dilated`)
+                        Some(Engine::Segregated) => Engine::Huge2,
+                        Some(e) => e,
+                    };
+                    st.engine = Some(eng);
+                    st.threads = if eng == Engine::Baseline {
+                        1
+                    } else {
+                        sel.threads.max(1)
+                    };
+                }
+                PlanOp::Project { .. } => {
+                    st.tile = sel.tile.map(Tile::clamped)
+                        .filter(|t| !t.is_default());
+                }
+                PlanOp::Activation(_) | PlanOp::Head(_) => {}
             }
         }
         ExecPlan::new(self.requested, self.in_elems, steps)
@@ -909,9 +1011,17 @@ impl ExecPlan {
                         };
                         match op {
                             PlanOp::Project { w, in_dim, out_dim } => {
-                                crate::gemm::sgemm_with(
-                                    hnd, b, *out_dim, *in_dim, src,
-                                    w.data(), dst, false);
+                                match st.tile {
+                                    Some(tile) => {
+                                        crate::gemm::sgemm_tiled_with(
+                                            hnd, b, *out_dim, *in_dim,
+                                            src, w.data(), dst, false,
+                                            tile);
+                                    }
+                                    None => crate::gemm::sgemm_with(
+                                        hnd, b, *out_dim, *in_dim, src,
+                                        w.data(), dst, false),
+                                }
                             }
                             PlanOp::TransposeConv { kernel, patterns,
                                                     seg, k, params, h,
@@ -980,6 +1090,7 @@ fn push_step(steps: &mut Vec<PlanStep>, name: &str, op: PlanOp,
         op,
         engine,
         threads,
+        tile: None,
         out_shape,
         prepacked_bytes,
     });
@@ -1117,6 +1228,16 @@ fn digest_steps(requested: Option<Engine>, in_elems: usize,
         eat(st.engine.map(|e| e.name()).unwrap_or("-"));
         eat(&st.threads.to_string());
         eat(&format!("{:?}", st.out_shape));
+        // Tuned non-default GEMM tiles regroup K-panel partial sums
+        // (different FP accumulation order), so — like the FMA term —
+        // they must change the digest. Untuned steps (tile = None, the
+        // only state reachable without `with_tuning`) eat nothing, so
+        // every pre-existing digest and trace stays valid.
+        if let Some(t) = st.tile {
+            if !t.is_default() {
+                eat(&format!("tile:{}x{}", t.kc, t.nc));
+            }
+        }
     }
     h
 }
@@ -1356,5 +1477,86 @@ mod tests {
                 assert_eq!(st.threads, 3);
             }
         }
+    }
+
+    #[test]
+    fn with_tuning_applies_selections_and_tracks_digest() {
+        let ws = Workspace::new();
+        let gen = Generator::tiny_cgan(5);
+        let plan = ExecPlan::compile_gan(&gen.proj, &gen.layers,
+                                         Engine::Auto);
+        let z = Tensor::randn(&[2, 8], &mut Rng::new(6));
+        let want = plan.run(&z, &mut ws.handle());
+
+        // identity tuning (selections match the compiled plan exactly):
+        // digest-identical, bit-identical
+        let same = PlanTuning {
+            selections: plan.steps().iter().enumerate()
+                .map(|(i, st)| StepSelection {
+                    step: i,
+                    engine: st.engine,
+                    threads: st.threads,
+                    tile: None,
+                })
+                .collect(),
+        };
+        let tuned_same = plan.with_tuning(&same);
+        assert_eq!(tuned_same.engine_digest(), plan.engine_digest(),
+                   "matching selections must not move the digest");
+        assert_eq!(tuned_same.run(&z, &mut ws.handle()).checksum(),
+                   want.checksum());
+
+        // engine flips: segregated step gains fused panels, digest
+        // moves, outputs stay numerically identical (bit-identical
+        // engines, DESIGN.md §14)
+        let mut flips = Vec::new();
+        for (i, st) in plan.steps().iter().enumerate() {
+            if matches!(st.op, PlanOp::TransposeConv { .. }) {
+                flips.push(StepSelection {
+                    step: i,
+                    engine: Some(Engine::Segregated),
+                    threads: 2,
+                    tile: None,
+                });
+            }
+        }
+        assert!(!flips.is_empty());
+        let tuned = plan.with_tuning(&PlanTuning { selections: flips });
+        assert_ne!(tuned.engine_digest(), plan.engine_digest(),
+                   "differing selections must move the digest");
+        for st in tuned.steps() {
+            if let PlanOp::TransposeConv { seg, .. } = &st.op {
+                assert_eq!(st.engine, Some(Engine::Segregated));
+                assert_eq!(st.threads, 2);
+                assert!(seg.is_some(), "flip must pack fused panels");
+            }
+        }
+        assert_eq!(tuned.run(&z, &mut ws.handle()).checksum(),
+                   want.checksum(),
+                   "tuned plans stay bit-identical across engines");
+
+        // a non-default Project tile moves the digest (numerics term)
+        let proj = plan.steps().iter()
+            .position(|s| matches!(s.op, PlanOp::Project { .. }))
+            .unwrap();
+        let tiled = plan.with_tuning(&PlanTuning {
+            selections: vec![StepSelection {
+                step: proj,
+                engine: None,
+                threads: 1,
+                tile: Some(Tile { kc: 128, nc: 512 }),
+            }],
+        });
+        assert_ne!(tiled.engine_digest(), plan.engine_digest());
+        // default tile is a no-op: digest unchanged
+        let default_tile = plan.with_tuning(&PlanTuning {
+            selections: vec![StepSelection {
+                step: proj,
+                engine: None,
+                threads: 1,
+                tile: Some(Tile::DEFAULT),
+            }],
+        });
+        assert_eq!(default_tile.engine_digest(), plan.engine_digest());
     }
 }

@@ -1,0 +1,971 @@
+//! Measured cost-model autotuner — memsim-scored plan selection
+//! (DESIGN.md §15, ROADMAP item 4).
+//!
+//! `Engine::Auto` is two hard-coded shape thresholds. This module turns
+//! engine choice into a measured argmin: every compute step's candidate
+//! configurations — engine (Baseline / HUGE² / Segregated where
+//! applicable) × thread count × GEMM tile — are scored by replaying
+//! their exact access streams through the [`crate::memsim`] cache
+//! hierarchy, converting the resulting MAC / L2-byte / DRAM-byte counts
+//! to nanoseconds with a [`Calibration`] fitted once against real
+//! microbenchmarks, and the cheapest candidate wins. Ties (and
+//! anything not *strictly* cheaper) keep the heuristic's choice, so an
+//! uninformative calibration degrades to exactly today's behaviour.
+//!
+//! The result is a [`TunedPlan`]: a small binary artifact (`HG2TUNED`)
+//! persisted by `huge2 tune`, keyed by the heuristic plan's
+//! engine-selection digest + ISA/numerics tier, and applied at serve
+//! start via [`crate::plan::ExecPlan::with_tuning`] — so serving
+//! start-up stays instant and the tuned selections fold into the plan
+//! digest exactly like the FMA numerics term: a trace recorded under
+//! one selection set fails loudly (never silently diverges) when
+//! replayed under another.
+
+use std::sync::Arc;
+
+use crate::bench_util::measure;
+use crate::config::LayerConfig;
+use crate::deconv::{huge2, DeconvParams, DilatedParams, Engine};
+use crate::gemm::{active_isa, Tile};
+use crate::memsim::{
+    trace_dilated_threads, trace_gemm_shape, trace_transpose, AccessStats,
+    EngineKind, LayerTrace,
+};
+use crate::plan::{
+    host_threads, run_transpose_op, ExecPlan, PlanOp, PlanStep,
+    PlanTuning, StepSelection, AUTO_THREADS,
+};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+use crate::workspace::Workspace;
+
+/// First 8 bytes of every persisted tuned plan.
+pub const MAGIC: [u8; 8] = *b"HG2TUNED";
+
+/// Artifact format version. Bump on any layout change; loaders fall
+/// back to the heuristic (with a warning) on mismatch instead of
+/// guessing at bytes.
+pub const TUNED_VERSION: u32 = 1;
+
+/// Nominal batch rows the Project step is scored at (the serving
+/// coordinator's typical formed-batch size; the step is a dense GEMM
+/// whose blocking preference is insensitive to small-m changes).
+const TUNE_BATCH_ROWS: usize = 8;
+
+/// Cache line size the memsim hierarchy models (bytes).
+const LINE: u64 = 64;
+
+/// Decode-side cap on step-name strings.
+const MAX_STR: u64 = 1 << 12;
+
+/// Decode-side cap on the step count.
+const MAX_STEPS: u64 = 1 << 12;
+
+// ------------------------------------------------------- calibration
+
+/// Cost coefficients mapping memsim counts to nanoseconds:
+///
+/// ```text
+/// ns(stream) = macs·ns_per_mac + l2_bytes·ns_per_l2_byte
+///            + dram_bytes·ns_per_dram_byte
+/// ns(layer)  = ns(serial) + ns(heaviest shard)
+///            + shards·thread_spawn_ns   (when shards > 1)
+/// ```
+///
+/// where `l2_bytes` is the bytes served from L2 (L1-miss lines that hit
+/// L2 × 64) and `dram_bytes` the L2-miss lines × 64. [`reference`]
+/// ships fixed, deterministic edge-CPU-plausible constants (the CI /
+/// reproducibility mode); [`measured`] fits the three stream
+/// coefficients to timed single-thread microbenchmarks of the real
+/// engines by least squares and times the scoped-thread spawn overhead
+/// directly.
+///
+/// [`reference`]: Calibration::reference
+/// [`measured`]: Calibration::measured
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Calibration {
+    pub ns_per_mac: f64,
+    pub ns_per_l2_byte: f64,
+    pub ns_per_dram_byte: f64,
+    /// Per-shard spawn/join overhead of a scoped worker thread.
+    pub thread_spawn_ns: f64,
+    /// True when fitted from this host's microbenchmarks (vs the
+    /// deterministic reference constants).
+    pub measured: bool,
+}
+
+impl Calibration {
+    /// Deterministic reference constants: ~4 GMAC/s scalar core,
+    /// ~16 GB/s L2, ~4 GB/s DRAM, 15 µs per scoped thread spawn —
+    /// the paper's Cortex-A57-class testbed, rounded. Same bytes on
+    /// every host, so `huge2 tune --reference` is byte-deterministic.
+    pub fn reference() -> Calibration {
+        Calibration {
+            ns_per_mac: 0.25,
+            ns_per_l2_byte: 0.0625,
+            ns_per_dram_byte: 0.25,
+            thread_spawn_ns: 15_000.0,
+            measured: false,
+        }
+    }
+
+    /// Fit the three stream coefficients against timed single-thread
+    /// runs of all three transpose engines on a handful of shapes
+    /// (9 samples, 3 unknowns, least squares via normal equations),
+    /// and time the scoped-spawn overhead directly. Falls back to the
+    /// reference constants per-coefficient if the fit degenerates
+    /// (non-finite or non-positive).
+    pub fn measured() -> Calibration {
+        // (h, c_in, c_out, k) at stride 2 / pad 1 — small enough to
+        // keep `huge2 tune` in the seconds, large enough that the
+        // GEMM/cache terms dominate the timer floor.
+        const SHAPES: [(usize, usize, usize, usize); 3] =
+            [(8, 64, 32, 4), (16, 32, 16, 4), (4, 128, 64, 4)];
+        let ws = Workspace::new();
+        let mut rows: Vec<[f64; 3]> = Vec::new();
+        let mut ys: Vec<f64> = Vec::new();
+        for (si, &(h, c_in, c_out, k)) in SHAPES.iter().enumerate() {
+            let p = DeconvParams::new(2, 1, 0);
+            let cfg = cal_layer(h, c_in, c_out, k, &p);
+            let mut rng = Rng::new(90 + si as u64);
+            let x = Tensor::randn(&[1, h, h, c_in], &mut rng);
+            let kernel =
+                Arc::new(Tensor::randn(&[k, k, c_in, c_out], &mut rng));
+            let patterns = huge2::decompose(&kernel, &p);
+            let ho = p.out_size(h, k);
+            let mut out = vec![0.0f32; ho * ho * c_out];
+            for eng in
+                [Engine::Baseline, Engine::Huge2, Engine::Segregated]
+            {
+                let m = measure(1, 5, || {
+                    run_transpose_op(x.data(), 1, h, h, c_in, &kernel,
+                                     &patterns, k, &p, eng, 1, None,
+                                     &mut out, &mut ws.handle());
+                });
+                let t = trace_layer_for(&cfg, eng);
+                rows.push(stream_row(&t));
+                ys.push(m.median_s() * 1e9);
+            }
+        }
+        let reference = Calibration::reference();
+        let fit = lstsq3(&rows, &ys);
+        let pick = |v: f64, fallback: f64| {
+            if v.is_finite() && v > 0.0 { v } else { fallback }
+        };
+        // scoped spawn/join of 4 no-op threads, per thread
+        let spawn = measure(1, 5, || {
+            std::thread::scope(|s| {
+                for _ in 0..4 {
+                    s.spawn(|| {});
+                }
+            });
+        });
+        Calibration {
+            ns_per_mac: pick(fit[0], reference.ns_per_mac),
+            ns_per_l2_byte: pick(fit[1], reference.ns_per_l2_byte),
+            ns_per_dram_byte: pick(fit[2], reference.ns_per_dram_byte),
+            thread_spawn_ns: pick(spawn.median_s() * 1e9 / 4.0,
+                                  reference.thread_spawn_ns),
+            measured: true,
+        }
+    }
+
+    /// Predicted nanoseconds for one access stream.
+    pub fn predict_stats(&self, s: &AccessStats) -> f64 {
+        let l2_bytes = s.hierarchy.l2_hits * LINE;
+        s.macs as f64 * self.ns_per_mac
+            + l2_bytes as f64 * self.ns_per_l2_byte
+            + s.dram_bytes as f64 * self.ns_per_dram_byte
+    }
+
+    /// Predicted nanoseconds for one layer: the serial stream plus the
+    /// critical-path shard, plus spawn overhead when sharded.
+    pub fn predict(&self, t: &LayerTrace) -> f64 {
+        let mut ns =
+            self.predict_stats(&t.serial) + self.predict_stats(&t.shard_max);
+        if t.shards > 1 {
+            ns += self.thread_spawn_ns * t.shards as f64;
+        }
+        ns
+    }
+}
+
+/// `[macs, l2_bytes, dram_bytes]` regressor row of one layer trace —
+/// the serial + critical-shard stream the predictor charges for.
+fn stream_row(t: &LayerTrace) -> [f64; 3] {
+    let s = t.serial.merge(&t.shard_max);
+    [s.macs as f64, (s.hierarchy.l2_hits * LINE) as f64,
+     s.dram_bytes as f64]
+}
+
+/// Solve `argmin_θ ‖Xθ − y‖²` for 3 coefficients via the normal
+/// equations and Gaussian elimination with partial pivoting. Returns
+/// NaNs when the system is singular (caller falls back per
+/// coefficient).
+fn lstsq3(rows: &[[f64; 3]], ys: &[f64]) -> [f64; 3] {
+    let mut ata = [[0.0f64; 3]; 3];
+    let mut aty = [0.0f64; 3];
+    for (r, &y) in rows.iter().zip(ys) {
+        for i in 0..3 {
+            for j in 0..3 {
+                ata[i][j] += r[i] * r[j];
+            }
+            aty[i] += r[i] * y;
+        }
+    }
+    let mut m = [[0.0f64; 4]; 3];
+    for i in 0..3 {
+        m[i][..3].copy_from_slice(&ata[i]);
+        m[i][3] = aty[i];
+    }
+    for col in 0..3 {
+        let piv = (col..3)
+            .max_by(|&a, &b| {
+                m[a][col].abs().partial_cmp(&m[b][col].abs()).unwrap()
+            })
+            .unwrap();
+        m.swap(col, piv);
+        if m[col][col].abs() < 1e-30 {
+            return [f64::NAN; 3];
+        }
+        for row in 0..3 {
+            if row == col {
+                continue;
+            }
+            let f = m[row][col] / m[col][col];
+            for j in col..4 {
+                m[row][j] -= f * m[col][j];
+            }
+        }
+    }
+    [m[0][3] / m[0][0], m[1][3] / m[1][1], m[2][3] / m[2][2]]
+}
+
+// ------------------------------------------------------- scoring
+
+fn engine_kind(e: Engine) -> EngineKind {
+    match e {
+        Engine::Baseline => EngineKind::Baseline,
+        Engine::Huge2 => EngineKind::Huge2,
+        Engine::Segregated => EngineKind::Segregated,
+        Engine::Auto => unreachable!("Auto is never a scored candidate"),
+    }
+}
+
+/// Synthetic [`LayerConfig`] for a plan step's geometry (the memsim
+/// counters are `LayerConfig`-driven; plan steps carry the same
+/// fields).
+fn cal_layer(h: usize, c_in: usize, c_out: usize, k: usize,
+             p: &DeconvParams) -> LayerConfig {
+    LayerConfig {
+        name: "tuned",
+        gan: "tuned",
+        h,
+        c_in,
+        c_out,
+        k,
+        stride: p.stride,
+        pad: p.pad,
+        out_pad: p.out_pad,
+    }
+}
+
+fn trace_layer_for(cfg: &LayerConfig, eng: Engine) -> LayerTrace {
+    trace_transpose(cfg, engine_kind(eng), 1)
+}
+
+/// Candidate (engine, threads) set for a transposed-conv step. This is
+/// where `Segregated` finally competes: the `Auto` heuristic never
+/// selects it (to keep untuned digests stable), but the tuner's
+/// candidate space always includes it.
+pub fn transpose_candidates(host: usize) -> Vec<(Engine, usize)> {
+    let mut cands = vec![(Engine::Baseline, 1)];
+    for eng in [Engine::Huge2, Engine::Segregated] {
+        for t in thread_set(host) {
+            cands.push((eng, t));
+        }
+    }
+    cands
+}
+
+/// Candidate (engine, threads) set for a dilated-conv step (no zeros
+/// to segregate: Baseline vs HUGE² only).
+pub fn dilated_candidates(host: usize) -> Vec<(Engine, usize)> {
+    let mut cands = vec![(Engine::Baseline, 1)];
+    for t in thread_set(host) {
+        cands.push((Engine::Huge2, t));
+    }
+    cands
+}
+
+/// Candidate GEMM tiles for the Project step (default first — the
+/// heuristic's choice).
+pub fn project_tiles() -> Vec<Tile> {
+    vec![
+        Tile::DEFAULT,
+        Tile { kc: 128, nc: 1024 },
+        Tile { kc: 256, nc: 512 },
+        Tile { kc: 128, nc: 512 },
+        Tile { kc: 64, nc: 256 },
+    ]
+}
+
+fn thread_set(host: usize) -> Vec<usize> {
+    let mut set = vec![1usize];
+    for t in [2, AUTO_THREADS.min(host.max(1))] {
+        if t > 1 && !set.contains(&t) {
+            set.push(t);
+        }
+    }
+    set
+}
+
+/// Memsim-predicted DRAM bytes moved by one compiled step at batch 1
+/// (`None` for ops without a modeled stream) — the `huge2 plan`
+/// bytes-moved column. Needs no calibration: bytes are a pure
+/// cache-model output.
+pub fn step_bytes_moved(st: &PlanStep) -> Option<u64> {
+    match &st.op {
+        PlanOp::Project { in_dim, out_dim, .. } => {
+            let tile = st.tile.unwrap_or(Tile::DEFAULT);
+            Some(trace_gemm_shape(TUNE_BATCH_ROWS, *in_dim, *out_dim,
+                                  tile.kc, tile.nc)
+                .dram_bytes)
+        }
+        PlanOp::TransposeConv { k, params, h, c_in, c_out, .. } => {
+            let cfg = cal_layer(*h, *c_in, *c_out, *k, params);
+            let eng = st.engine?;
+            Some(trace_transpose(&cfg, engine_kind(eng), st.threads)
+                .total
+                .dram_bytes)
+        }
+        PlanOp::DilatedConv { taps, params, h, c_in, c_out, .. } => {
+            let eng = st.engine?;
+            let kind = match eng {
+                Engine::Baseline => EngineKind::Baseline,
+                _ => EngineKind::Huge2,
+            };
+            Some(trace_dilated_threads(*h, *c_in, *c_out, taps.r, params,
+                                       kind, st.threads)
+                .total
+                .dram_bytes)
+        }
+        PlanOp::Activation(_) | PlanOp::Head(_) => None,
+    }
+}
+
+// ------------------------------------------------------- tuned plan
+
+/// One step's tuned outcome (plus the heuristic's choice and score, so
+/// `huge2 plan --tuned` can print heuristic-vs-tuned per layer).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunedStep {
+    pub name: String,
+    /// Tuned selection (`None` engine = non-compute step, untouched).
+    pub engine: Option<Engine>,
+    pub threads: usize,
+    pub tile: Option<Tile>,
+    pub predicted_ns: f64,
+    /// Memsim DRAM bytes of the tuned selection (batch 1).
+    pub predicted_dram: u64,
+    /// What the compiled plan (the heuristic) had chosen.
+    pub heuristic_engine: Option<Engine>,
+    pub heuristic_threads: usize,
+    pub heuristic_ns: f64,
+}
+
+impl TunedStep {
+    /// Did the tuner pick something other than the heuristic?
+    pub fn differs(&self) -> bool {
+        self.engine != self.heuristic_engine
+            || (self.engine.is_some()
+                && self.threads != self.heuristic_threads)
+            || self.tile.is_some()
+    }
+}
+
+/// The persisted autotuning artifact: per-step argmin selections for
+/// one compiled plan, keyed by that plan's digest + the ISA/numerics
+/// tier it was scored under.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunedPlan {
+    /// Net name the plan was compiled for (CLI bookkeeping only).
+    pub net: String,
+    /// `active_isa().name()` at tune time — tile and engine preferences
+    /// are ISA-dependent, and `avx2+fma` additionally implies the
+    /// relaxed-numerics digest term.
+    pub isa: String,
+    /// Digest of the heuristic plan the tuning was computed against.
+    pub base_digest: u64,
+    /// Digest of the plan after applying the selections (what replay
+    /// headers record when serving under this tuning).
+    pub tuned_digest: u64,
+    pub cal: Calibration,
+    pub steps: Vec<TunedStep>,
+}
+
+/// Outcome of decoding a tuned-plan file.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LoadedTuned {
+    Tuned(TunedPlan),
+    /// Recognised magic, unsupported version — the caller warns and
+    /// falls back to the heuristic plan.
+    VersionMismatch { found: u64 },
+}
+
+/// Score every step of `plan` over the full candidate space and return
+/// the argmin selections. The heuristic's own (engine, threads) is
+/// always scored first and only a *strictly* cheaper candidate
+/// replaces it, so ties keep today's behaviour.
+pub fn tune_plan(plan: &ExecPlan, net: &str, cal: &Calibration)
+                 -> TunedPlan {
+    let host = host_threads();
+    let mut steps = Vec::with_capacity(plan.steps().len());
+    for st in plan.steps() {
+        steps.push(tune_step(st, cal, host));
+    }
+    let tuned_digest = plan
+        .with_tuning(&tuning_of(&steps))
+        .engine_digest();
+    TunedPlan {
+        net: net.to_string(),
+        isa: active_isa().name().to_string(),
+        base_digest: plan.engine_digest(),
+        tuned_digest,
+        cal: *cal,
+        steps,
+    }
+}
+
+fn tune_step(st: &PlanStep, cal: &Calibration, host: usize) -> TunedStep {
+    let untouched = || TunedStep {
+        name: st.name.clone(),
+        engine: None,
+        threads: 1,
+        tile: None,
+        predicted_ns: 0.0,
+        predicted_dram: 0,
+        heuristic_engine: None,
+        heuristic_threads: 1,
+        heuristic_ns: 0.0,
+    };
+    match &st.op {
+        PlanOp::Activation(_) | PlanOp::Head(_) => untouched(),
+        PlanOp::Project { in_dim, out_dim, .. } => {
+            let score = |tile: Tile| {
+                let s = trace_gemm_shape(TUNE_BATCH_ROWS, *in_dim,
+                                         *out_dim, tile.kc, tile.nc);
+                (cal.predict_stats(&s), s.dram_bytes)
+            };
+            let (h_ns, h_dram) = score(Tile::DEFAULT);
+            let mut best = (Tile::DEFAULT, h_ns, h_dram);
+            for tile in project_tiles() {
+                let (ns, dram) = score(tile);
+                if ns < best.1 {
+                    best = (tile, ns, dram);
+                }
+            }
+            TunedStep {
+                name: st.name.clone(),
+                engine: None,
+                threads: 1,
+                tile: (!best.0.is_default()).then_some(best.0),
+                predicted_ns: best.1,
+                predicted_dram: best.2,
+                heuristic_engine: None,
+                heuristic_threads: 1,
+                heuristic_ns: h_ns,
+            }
+        }
+        PlanOp::TransposeConv { k, params, h, c_in, c_out, .. } => {
+            let cfg = cal_layer(*h, *c_in, *c_out, *k, params);
+            let heuristic =
+                (st.engine.expect("conv step has an engine"), st.threads);
+            let score = |(eng, t): (Engine, usize)| {
+                let tr = trace_transpose(&cfg, engine_kind(eng), t);
+                (cal.predict(&tr), tr.total.dram_bytes)
+            };
+            let (h_ns, _) = score(heuristic);
+            let mut best = (heuristic, h_ns);
+            for cand in transpose_candidates(host) {
+                if cand == heuristic {
+                    continue;
+                }
+                let (ns, _) = score(cand);
+                if ns < best.1 {
+                    best = (cand, ns);
+                }
+            }
+            let (_, dram) = score(best.0);
+            TunedStep {
+                name: st.name.clone(),
+                engine: Some(best.0 .0),
+                threads: best.0 .1,
+                tile: None,
+                predicted_ns: best.1,
+                predicted_dram: dram,
+                heuristic_engine: Some(heuristic.0),
+                heuristic_threads: heuristic.1,
+                heuristic_ns: h_ns,
+            }
+        }
+        PlanOp::DilatedConv { taps, params, h, c_in, c_out, .. } => {
+            let heuristic =
+                (st.engine.expect("conv step has an engine"), st.threads);
+            let score = |(eng, t): (Engine, usize)| {
+                let kind = match eng {
+                    Engine::Baseline => EngineKind::Baseline,
+                    _ => EngineKind::Huge2,
+                };
+                let tr = trace_dilated_threads(*h, *c_in, *c_out, taps.r,
+                                               params, kind, t);
+                (cal.predict(&tr), tr.total.dram_bytes)
+            };
+            let (h_ns, _) = score(heuristic);
+            let mut best = (heuristic, h_ns);
+            for cand in dilated_candidates(host) {
+                if cand == heuristic {
+                    continue;
+                }
+                let (ns, _) = score(cand);
+                if ns < best.1 {
+                    best = (cand, ns);
+                }
+            }
+            let (_, dram) = score(best.0);
+            TunedStep {
+                name: st.name.clone(),
+                engine: Some(best.0 .0),
+                threads: best.0 .1,
+                tile: None,
+                predicted_ns: best.1,
+                predicted_dram: dram,
+                heuristic_engine: Some(heuristic.0),
+                heuristic_threads: heuristic.1,
+                heuristic_ns: h_ns,
+            }
+        }
+    }
+}
+
+fn tuning_of(steps: &[TunedStep]) -> PlanTuning {
+    PlanTuning {
+        selections: steps
+            .iter()
+            .enumerate()
+            .filter(|(_, ts)| ts.engine.is_some() || ts.tile.is_some())
+            .map(|(i, ts)| StepSelection {
+                step: i,
+                engine: ts.engine,
+                threads: ts.threads,
+                tile: ts.tile,
+            })
+            .collect(),
+    }
+}
+
+impl TunedPlan {
+    /// The per-step selections as a [`PlanTuning`] for
+    /// [`ExecPlan::with_tuning`].
+    pub fn tuning(&self) -> PlanTuning {
+        tuning_of(&self.steps)
+    }
+
+    /// Number of steps whose tuned choice differs from the heuristic.
+    pub fn n_differs(&self) -> usize {
+        self.steps.iter().filter(|s| s.differs()).count()
+    }
+
+    /// Apply this tuning to the plan it was computed for, enforcing the
+    /// artifact's keys: the ISA/numerics tier must match this process,
+    /// the stored base digest must match `plan`'s digest (a stale
+    /// artifact after a heuristic or model change fails loudly here),
+    /// and the rebuilt plan's digest must match the stored tuned
+    /// digest.
+    pub fn apply(&self, plan: &ExecPlan) -> Result<ExecPlan, String> {
+        let isa = active_isa().name();
+        if self.isa != isa {
+            return Err(format!(
+                "tuned plan was tuned for ISA/numerics tier '{}' but \
+                 this process runs '{}' — re-run `huge2 tune`",
+                self.isa, isa
+            ));
+        }
+        if self.base_digest != plan.engine_digest() {
+            return Err(format!(
+                "stale tuned plan: tuned against engine digest {:016x} \
+                 but this build compiles {:016x} — re-run `huge2 tune`",
+                self.base_digest,
+                plan.engine_digest()
+            ));
+        }
+        let tuned = plan.with_tuning(&self.tuning());
+        if tuned.engine_digest() != self.tuned_digest {
+            return Err(format!(
+                "tuned plan digest mismatch: artifact says {:016x}, \
+                 applying its selections compiles {:016x} — re-run \
+                 `huge2 tune`",
+                self.tuned_digest,
+                tuned.engine_digest()
+            ));
+        }
+        Ok(tuned)
+    }
+
+    // ------------------------------------------------------- codec
+
+    /// Serialise (deterministic: same tuning → same bytes).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(128 + 64 * self.steps.len());
+        buf.extend_from_slice(&MAGIC);
+        put_varint(&mut buf, TUNED_VERSION as u64);
+        put_str(&mut buf, &self.net);
+        put_str(&mut buf, &self.isa);
+        buf.extend_from_slice(&self.base_digest.to_le_bytes());
+        buf.extend_from_slice(&self.tuned_digest.to_le_bytes());
+        buf.push(self.cal.measured as u8);
+        for v in [self.cal.ns_per_mac, self.cal.ns_per_l2_byte,
+                  self.cal.ns_per_dram_byte, self.cal.thread_spawn_ns]
+        {
+            buf.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        put_varint(&mut buf, self.steps.len() as u64);
+        for st in &self.steps {
+            put_str(&mut buf, &st.name);
+            buf.push(engine_byte(st.engine));
+            put_varint(&mut buf, st.threads as u64);
+            match st.tile {
+                Some(t) => {
+                    buf.push(1);
+                    put_varint(&mut buf, t.kc as u64);
+                    put_varint(&mut buf, t.nc as u64);
+                }
+                None => buf.push(0),
+            }
+            buf.extend_from_slice(
+                &st.predicted_ns.to_bits().to_le_bytes());
+            put_varint(&mut buf, st.predicted_dram);
+            buf.push(engine_byte(st.heuristic_engine));
+            put_varint(&mut buf, st.heuristic_threads as u64);
+            buf.extend_from_slice(
+                &st.heuristic_ns.to_bits().to_le_bytes());
+        }
+        buf
+    }
+
+    /// Decode a tuned-plan file. Corrupt or truncated input fails with
+    /// a byte offset; a recognised-but-unsupported version returns
+    /// [`LoadedTuned::VersionMismatch`] so callers can warn and fall
+    /// back to the heuristic.
+    pub fn decode(bytes: &[u8]) -> Result<LoadedTuned, String> {
+        let mut r = Reader { bytes, pos: 0 };
+        let magic = r.take(8)?;
+        if magic != MAGIC {
+            return Err(
+                "bad magic at byte 0 (not a tuned-plan file)".into());
+        }
+        let version = r.varint()?;
+        if version != TUNED_VERSION as u64 {
+            return Ok(LoadedTuned::VersionMismatch { found: version });
+        }
+        let net = r.str()?;
+        let isa = r.str()?;
+        let base_digest = r.raw_u64()?;
+        let tuned_digest = r.raw_u64()?;
+        let measured = r.byte()? != 0;
+        let mut cal_vals = [0.0f64; 4];
+        for v in &mut cal_vals {
+            *v = r.raw_f64()?;
+        }
+        let cal = Calibration {
+            ns_per_mac: cal_vals[0],
+            ns_per_l2_byte: cal_vals[1],
+            ns_per_dram_byte: cal_vals[2],
+            thread_spawn_ns: cal_vals[3],
+            measured,
+        };
+        let n = r.len(MAX_STEPS, "step count")?;
+        let mut steps = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = r.str()?;
+            let engine = r.engine()?;
+            let threads = r.varint()? as usize;
+            let tile = match r.byte()? {
+                0 => None,
+                1 => Some(Tile {
+                    kc: r.varint()? as usize,
+                    nc: r.varint()? as usize,
+                }),
+                b => {
+                    return Err(r.err(&format!(
+                        "invalid tile flag {b}")));
+                }
+            };
+            let predicted_ns = r.raw_f64()?;
+            let predicted_dram = r.varint()?;
+            let heuristic_engine = r.engine()?;
+            let heuristic_threads = r.varint()? as usize;
+            let heuristic_ns = r.raw_f64()?;
+            steps.push(TunedStep {
+                name,
+                engine,
+                threads,
+                tile,
+                predicted_ns,
+                predicted_dram,
+                heuristic_engine,
+                heuristic_threads,
+                heuristic_ns,
+            });
+        }
+        if r.pos != bytes.len() {
+            return Err(format!(
+                "{} trailing byte(s) at byte {}",
+                bytes.len() - r.pos,
+                r.pos
+            ));
+        }
+        Ok(LoadedTuned::Tuned(TunedPlan {
+            net,
+            isa,
+            base_digest,
+            tuned_digest,
+            cal,
+            steps,
+        }))
+    }
+}
+
+fn engine_byte(e: Option<Engine>) -> u8 {
+    match e {
+        None => 0,
+        Some(Engine::Baseline) => 1,
+        Some(Engine::Huge2) => 2,
+        Some(Engine::Segregated) => 3,
+        Some(Engine::Auto) => 0, // never persisted; defensive
+    }
+}
+
+fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(byte);
+            return;
+        }
+        buf.push(byte | 0x80);
+    }
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_varint(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Positioned byte reader with offset-carrying errors (the
+/// `replay::binary` decode idiom).
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn err(&self, what: &str) -> String {
+        format!("{what} at byte {}", self.pos)
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.bytes.len() {
+            return Err(format!(
+                "unexpected end of file at byte {} (wanted {n} more \
+                 byte(s) — truncated tuned plan?)",
+                self.bytes.len()
+            ));
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn byte(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn varint(&mut self) -> Result<u64, String> {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let b = self.byte()?;
+            if shift == 63 && b > 1 {
+                return Err(self.err("varint overflows u64"));
+            }
+            v |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+            if shift > 63 {
+                return Err(self.err("varint too long"));
+            }
+        }
+    }
+
+    fn len(&mut self, cap: u64, what: &str) -> Result<usize, String> {
+        let at = self.pos;
+        let n = self.varint()?;
+        if n > cap {
+            return Err(format!(
+                "implausible {what} length {n} at byte {at} (cap {cap})"
+            ));
+        }
+        Ok(n as usize)
+    }
+
+    fn str(&mut self) -> Result<String, String> {
+        let n = self.len(MAX_STR, "string")?;
+        let at = self.pos;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| format!("invalid UTF-8 string at byte {at}"))
+    }
+
+    fn raw_u64(&mut self) -> Result<u64, String> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn raw_f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.raw_u64()?))
+    }
+
+    fn engine(&mut self) -> Result<Option<Engine>, String> {
+        match self.byte()? {
+            0 => Ok(None),
+            1 => Ok(Some(Engine::Baseline)),
+            2 => Ok(Some(Engine::Huge2)),
+            3 => Ok(Some(Engine::Segregated)),
+            b => Err(self.err(&format!("invalid engine byte {b}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gan::Generator;
+
+    #[test]
+    fn lstsq_recovers_exact_coefficients() {
+        // y = 2·a + 3·b + 5·c, noiseless → exact recovery
+        let rows = vec![[1.0, 0.0, 0.0], [0.0, 1.0, 0.0],
+                        [0.0, 0.0, 1.0], [1.0, 1.0, 1.0],
+                        [2.0, 1.0, 4.0]];
+        let ys: Vec<f64> = rows
+            .iter()
+            .map(|r| 2.0 * r[0] + 3.0 * r[1] + 5.0 * r[2])
+            .collect();
+        let fit = lstsq3(&rows, &ys);
+        assert!((fit[0] - 2.0).abs() < 1e-9, "{fit:?}");
+        assert!((fit[1] - 3.0).abs() < 1e-9, "{fit:?}");
+        assert!((fit[2] - 5.0).abs() < 1e-9, "{fit:?}");
+        // singular system → NaNs (caller falls back)
+        let bad = lstsq3(&[[1.0, 1.0, 1.0]; 3], &[1.0, 1.0, 1.0]);
+        assert!(bad[0].is_nan());
+    }
+
+    #[test]
+    fn candidate_space_includes_segregated() {
+        let cands = transpose_candidates(4);
+        assert!(cands.iter().any(|&(e, _)| e == Engine::Segregated),
+                "Segregated must compete under tuning");
+        assert!(cands.iter().any(|&(e, _)| e == Engine::Baseline));
+        assert!(cands.iter().any(|&(e, t)| e == Engine::Huge2 && t > 1));
+        assert_eq!(cands[0], (Engine::Baseline, 1));
+        // dilated never offers Segregated (nothing to segregate)
+        assert!(dilated_candidates(4)
+            .iter()
+            .all(|&(e, _)| e != Engine::Segregated));
+    }
+
+    #[test]
+    fn tuned_plan_round_trips_and_is_deterministic() {
+        let gen = Generator::tiny_cgan(5);
+        let plan = gen.plan();
+        let cal = Calibration::reference();
+        let a = tune_plan(plan, "tiny_cgan", &cal);
+        let b = tune_plan(plan, "tiny_cgan", &cal);
+        assert_eq!(a, b, "reference tuning must be deterministic");
+        let bytes = a.encode();
+        assert_eq!(bytes, b.encode(), "byte-deterministic");
+        match TunedPlan::decode(&bytes).unwrap() {
+            LoadedTuned::Tuned(back) => assert_eq!(back, a),
+            other => panic!("{other:?}"),
+        }
+        // applying to the plan it was tuned for honours the keys
+        let tuned = a.apply(plan).unwrap();
+        assert_eq!(tuned.engine_digest(), a.tuned_digest);
+    }
+
+    #[test]
+    fn decode_rejects_corrupt_and_falls_back_on_version() {
+        let gen = Generator::tiny_cgan(5);
+        let a = tune_plan(gen.plan(), "tiny_cgan",
+                          &Calibration::reference());
+        let bytes = a.encode();
+        // truncation → byte-offset error
+        let err = TunedPlan::decode(&bytes[..bytes.len() - 3])
+            .unwrap_err();
+        assert!(err.contains("at byte"), "{err}");
+        // corrupt magic → error
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xff;
+        let err = TunedPlan::decode(&bad).unwrap_err();
+        assert!(err.contains("bad magic"), "{err}");
+        // version bump → clean fallback signal
+        let mut v2 = bytes.clone();
+        assert_eq!(v2[8], TUNED_VERSION as u8); // one-byte varint today
+        v2[8] = 99;
+        match TunedPlan::decode(&v2).unwrap() {
+            LoadedTuned::VersionMismatch { found } => {
+                assert_eq!(found, 99);
+            }
+            other => panic!("{other:?}"),
+        }
+        // trailing garbage → error
+        let mut long = bytes.clone();
+        long.push(0);
+        let err = TunedPlan::decode(&long).unwrap_err();
+        assert!(err.contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn stale_digest_and_isa_fail_loudly() {
+        let gen = Generator::tiny_cgan(5);
+        let plan = gen.plan();
+        let mut a = tune_plan(plan, "tiny_cgan",
+                              &Calibration::reference());
+        let good_isa = a.isa.clone();
+        a.isa = "other-isa".to_string();
+        let err = a.apply(plan).unwrap_err();
+        assert!(err.contains("ISA"), "{err}");
+        a.isa = good_isa;
+        a.base_digest ^= 1;
+        let err = a.apply(plan).unwrap_err();
+        assert!(err.contains("stale"), "{err}");
+    }
+
+    #[test]
+    fn bytes_moved_column_covers_compute_steps() {
+        let gen = Generator::tiny_cgan(5);
+        for st in gen.plan().steps() {
+            let bytes = step_bytes_moved(st);
+            match st.op.kind() {
+                "project" | "transpose-conv" => {
+                    assert!(bytes.is_some_and(|b| b > 0), "{}", st.name);
+                }
+                _ => assert!(bytes.is_none(), "{}", st.name),
+            }
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! Autotuner stack tests (DESIGN.md §15): the tuned-plan artifact and
+//! its interaction with the record/replay digest gate.
+//!
+//! * a trace recorded under the heuristic plan hard-errors when replayed
+//!   against an engine serving a *differing* tuned plan — the
+//!   engine-selection digest gate treats tuned selections exactly like a
+//!   changed `Auto` heuristic — and round-trips divergence-free when the
+//!   serving plan matches the recording.
+//! * `huge2 tune` determinism: tuning the same net twice under the
+//!   pinned reference calibration encodes to identical bytes.
+//! * artifact robustness: corrupt/truncated files fail with byte-offset
+//!   errors; a version bump decodes to a clean typed fallback, not an
+//!   error.
+
+use huge2::config::EngineConfig;
+use huge2::coordinator::{Engine, Model, Payload};
+use huge2::deconv::Engine as DeconvEngine;
+use huge2::gan::Generator;
+use huge2::plan::{ExecPlan, PlanOp, PlanTuning, StepSelection};
+use huge2::replay::{Replayer, Timing, TraceEvent, TraceHeader, TraceSink};
+use huge2::rng::Rng;
+use huge2::tune::{tune_plan, Calibration, LoadedTuned, TunedPlan};
+use std::sync::Arc;
+
+const Z_DIM: usize = 8;
+
+/// Native engine over `tiny_cgan(seed)`, optionally recording, serving
+/// either the heuristic plan or an explicitly provided (tuned) one.
+fn engine_with(seed: u64, sink: Option<Arc<TraceSink>>,
+               plan: Option<ExecPlan>) -> Engine {
+    let cfg = EngineConfig {
+        workers: 2,
+        queue_depth: 64,
+        max_batch: 4,
+        batch_timeout_us: 500,
+        ..EngineConfig::default()
+    };
+    let mut e = Engine::new(cfg);
+    if let Some(s) = sink {
+        e.set_trace_sink(s).unwrap();
+    }
+    let gen = Arc::new(Generator::tiny_cgan(seed));
+    assert_eq!(gen.z_dim, Z_DIM);
+    let model = match plan {
+        Some(p) => Model::native_with_plan("tiny", gen, 0, p),
+        None => Model::native("tiny", gen, 0),
+    };
+    e.register_native(model).unwrap();
+    e
+}
+
+/// A tuning that provably differs from the heuristic plan: every
+/// transpose step flipped to `Segregated x2` (bit-identical outputs,
+/// different digest — see plan::with_tuning tests).
+fn differing_tuning(plan: &ExecPlan) -> PlanTuning {
+    let selections: Vec<StepSelection> = plan
+        .steps()
+        .iter()
+        .enumerate()
+        .filter(|(_, st)| matches!(st.op, PlanOp::TransposeConv { .. }))
+        .map(|(i, st)| {
+            assert_ne!(st.engine, Some(DeconvEngine::Segregated),
+                       "heuristic never picks Segregated");
+            StepSelection {
+                step: i,
+                engine: Some(DeconvEngine::Segregated),
+                threads: 2,
+                tile: None,
+            }
+        })
+        .collect();
+    assert!(!selections.is_empty());
+    PlanTuning { selections }
+}
+
+/// Record `n` requests against `eng`; header carries the engine's own
+/// compiled-plan digest (exactly what `serve --record` writes).
+fn record_run(eng: Engine, sink: Arc<TraceSink>, n: usize)
+              -> (TraceHeader, Vec<TraceEvent>) {
+    let digest = eng.plan_digest("tiny").expect("native model has a plan");
+    let mut rng = Rng::new(1234);
+    let mut pending = Vec::new();
+    for _ in 0..n {
+        let z: Vec<f32> = (0..Z_DIM).map(|_| rng.next_normal()).collect();
+        pending.push(eng.submit("tiny", Payload::latent(z, vec![]))
+            .unwrap());
+    }
+    for rx in pending {
+        rx.recv().unwrap().unwrap();
+    }
+    eng.shutdown();
+    let header = TraceHeader {
+        model: "tiny".into(),
+        backend: "native".into(),
+        seed: 5,
+        z_dim: Z_DIM,
+        cond_dim: 0,
+        task: "generate".into(),
+        net: String::new(),
+        engine_digest: format!("{:016x}", digest),
+    };
+    (header, sink.snapshot())
+}
+
+#[test]
+fn heuristic_trace_hard_errors_against_a_differing_tuned_plan() {
+    // record under the heuristic Auto plan
+    let sink = Arc::new(TraceSink::new());
+    let eng = engine_with(5, Some(sink.clone()), None);
+    let (header, events) = record_run(eng, sink, 8);
+
+    // replay against an engine serving a digest-moving tuned plan:
+    // the gate must refuse up front, not report per-request divergences
+    let base = Generator::tiny_cgan(5).plan().clone();
+    let tuned = base.with_tuning(&differing_tuning(&base));
+    assert_ne!(tuned.engine_digest(), base.engine_digest());
+    let eng = engine_with(5, None, Some(tuned));
+    let err = Replayer::from_parts(header.clone(), events.clone())
+        .run(&eng, Timing::Fast)
+        .unwrap_err()
+        .to_string();
+    eng.shutdown();
+    assert!(err.contains("digest mismatch"), "{err}");
+    assert!(err.contains(&header.engine_digest),
+            "error must name the recorded digest: {err}");
+
+    // same trace against the matching heuristic plan: divergence-free
+    let eng = engine_with(5, None, None);
+    let report = Replayer::from_parts(header, events)
+        .run(&eng, Timing::Fast)
+        .unwrap();
+    eng.shutdown();
+    assert!(report.is_clean(), "diverged: {:?}", report.divergences);
+    assert_eq!(report.matched, 8);
+}
+
+#[test]
+fn tuned_trace_round_trips_under_the_same_tuned_plan() {
+    // record *under* the tuned plan — header carries the tuned digest
+    let base = Generator::tiny_cgan(5).plan().clone();
+    let tuning = differing_tuning(&base);
+    let sink = Arc::new(TraceSink::new());
+    let eng = engine_with(5, Some(sink.clone()),
+                          Some(base.with_tuning(&tuning)));
+    let (header, events) = record_run(eng, sink, 8);
+    assert_eq!(header.engine_digest,
+               format!("{:016x}",
+                       base.with_tuning(&tuning).engine_digest()));
+
+    // replay against a freshly compiled engine under the same tuning
+    let eng = engine_with(5, None, Some(base.with_tuning(&tuning)));
+    let report = Replayer::from_parts(header.clone(), events.clone())
+        .run(&eng, Timing::Fast)
+        .unwrap();
+    eng.shutdown();
+    assert!(report.is_clean(), "diverged: {:?}", report.divergences);
+    assert_eq!(report.matched, 8);
+
+    // and the heuristic plan refuses the tuned trace symmetrically
+    let eng = engine_with(5, None, None);
+    let err = Replayer::from_parts(header, events)
+        .run(&eng, Timing::Fast)
+        .unwrap_err()
+        .to_string();
+    eng.shutdown();
+    assert!(err.contains("digest mismatch"), "{err}");
+}
+
+#[test]
+fn tuning_twice_under_reference_calibration_is_byte_identical() {
+    let cal = Calibration::reference();
+    let plan = Generator::tiny_cgan(7).plan().clone();
+    let a = tune_plan(&plan, "tiny_cgan", &cal).encode();
+    let b = tune_plan(&plan, "tiny_cgan", &cal).encode();
+    assert_eq!(a, b, "tune must be deterministic under the pinned \
+                      reference calibration");
+    // ... and the artifact applies to an independently compiled plan of
+    // the same net+seed (what `serve --tuned` does after a fresh start)
+    let fresh = Generator::tiny_cgan(7).plan().clone();
+    match TunedPlan::decode(&a).unwrap() {
+        LoadedTuned::Tuned(t) => {
+            let served = t.apply(&fresh).unwrap();
+            assert_eq!(served.engine_digest(), t.tuned_digest);
+        }
+        LoadedTuned::VersionMismatch { found } => {
+            panic!("fresh artifact reported version {found}");
+        }
+    }
+}
+
+#[test]
+fn corrupt_artifacts_fail_with_byte_offsets() {
+    let plan = Generator::tiny_cgan(7).plan().clone();
+    let bytes = tune_plan(&plan, "tiny_cgan",
+                          &Calibration::reference()).encode();
+
+    // truncation: error names the offset where the file ran out
+    let err = TunedPlan::decode(&bytes[..bytes.len() - 3]).unwrap_err();
+    assert!(err.contains("at byte"), "{err}");
+    assert!(err.contains("truncated"), "{err}");
+
+    // bad magic: rejected before any field parsing
+    let mut bad = bytes.clone();
+    bad[0] ^= 0xff;
+    let err = TunedPlan::decode(&bad).unwrap_err();
+    assert!(err.contains("bad magic"), "{err}");
+
+    // trailing garbage: a valid plan followed by junk is corrupt, not
+    // silently accepted
+    let mut long = bytes.clone();
+    long.push(0);
+    let err = TunedPlan::decode(&long).unwrap_err();
+    assert!(err.contains("trailing"), "{err}");
+    assert!(err.contains("at byte"), "{err}");
+}
+
+#[test]
+fn version_bump_decodes_to_a_typed_fallback() {
+    let plan = Generator::tiny_cgan(7).plan().clone();
+    let mut bytes = tune_plan(&plan, "tiny_cgan",
+                              &Calibration::reference()).encode();
+    // version is the LEB128 varint right after the 8-byte magic; the
+    // current version (1) is a single byte there
+    bytes[8] = 7;
+    match TunedPlan::decode(&bytes).unwrap() {
+        LoadedTuned::VersionMismatch { found } => assert_eq!(found, 7),
+        LoadedTuned::Tuned(_) => {
+            panic!("future version must not parse as v1")
+        }
+    }
+}
+
+#[test]
+fn stale_artifact_refuses_a_moved_base_plan() {
+    // tune against seed-7 weights, apply to a *different architecture's*
+    // plan (dcgan geometry digests differently) — loud failure
+    let plan = Generator::tiny_cgan(7).plan().clone();
+    let art = tune_plan(&plan, "tiny_cgan", &Calibration::reference());
+    let other = Generator::tiny_cgan(7).plan()
+        .with_tuning(&differing_tuning(&plan));
+    let err = art.apply(&other).unwrap_err();
+    assert!(err.contains("stale"), "{err}");
+}
