@@ -72,6 +72,7 @@ fn main() -> anyhow::Result<()> {
             task: "generate".into(),
             net: String::new(),
             engine_digest: String::new(),
+            fleet: Vec::new(),
         },
         sink,
     );

@@ -13,7 +13,7 @@
 
 use huge2::bench_util::{fmt_dur, Table};
 use huge2::config::EngineConfig;
-use huge2::coordinator::{Engine, Model};
+use huge2::coordinator::{Engine, Model, Payload};
 use huge2::gan::Generator;
 use huge2::rng::Rng;
 use huge2::runtime::RuntimeHandle;
@@ -22,7 +22,7 @@ use std::time::Instant;
 
 /// Machine-readable results collector: every phase that measures a
 /// per-batch cost records `(phase, ns/batch, GFLOP/s, alloc B/batch)`
-/// here, and `main` writes them to `BENCH_9.json` alongside the human
+/// here, and `main` writes them to `BENCH_10.json` alongside the human
 /// tables (0.0 = metric not applicable to that phase).
 static BENCH_JSON: Mutex<Vec<(String, f64, f64, f64)>> =
     Mutex::new(Vec::new());
@@ -43,10 +43,10 @@ fn write_bench_json() {
             if i + 1 == rows.len() { "" } else { "," }));
     }
     s.push_str("}\n");
-    match std::fs::write("BENCH_9.json", &s) {
-        Ok(()) => println!("\nmachine-readable results: BENCH_9.json \
+    match std::fs::write("BENCH_10.json", &s) {
+        Ok(()) => println!("\nmachine-readable results: BENCH_10.json \
                             ({} phase(s))", rows.len()),
-        Err(e) => eprintln!("\nBENCH_9.json not written: {e}"),
+        Err(e) => eprintln!("\nBENCH_10.json not written: {e}"),
     }
 }
 
@@ -404,6 +404,7 @@ fn recording_overhead_phase(quick: bool) {
                     id,
                     model: "tiny".into(),
                     payload: ArrivalPayload::Latent { z, cond: vec![] },
+                    priority: Default::default(),
                 },
             });
             t_us += 3;
@@ -453,6 +454,7 @@ fn recording_overhead_phase(quick: bool) {
         task: "generate".into(),
         net: String::new(),
         engine_digest: String::new(),
+        fleet: Vec::new(),
     };
 
     // JSONL: one heap String per event, UTF-8 decimal floats
@@ -580,6 +582,7 @@ fn replay_regression(quick: bool) {
             task: "generate".into(),
             net: String::new(),
             engine_digest: String::new(),
+            fleet: Vec::new(),
         },
         sink,
     );
@@ -682,6 +685,7 @@ fn seg_replay_regression(quick: bool) {
             task: "segment".into(),
             net: "tiny_segnet".into(),
             engine_digest: String::new(),
+            fleet: Vec::new(),
         },
         sink,
     );
@@ -845,6 +849,94 @@ fn tuned_plan_phase(quick: bool) {
             "tuned plan diverged from the heuristic plan's outputs");
 }
 
+
+/// Continuous-batching phase (DESIGN.md §16): the identical bursty
+/// open-loop workload served with the windowed batcher (`continuous =
+/// false`: a formed batch closes its window, later arrivals wait for
+/// the next one) vs continuous batching (`continuous = true`: freed
+/// batch slots are refilled from the queue immediately; carried-over
+/// rows keep their original arrival anchor for EDF ordering). Outputs
+/// must be bit-identical per request — batch composition is a latency
+/// decision, never a numerics decision.
+fn continuous_batching_phase(quick: bool) {
+    use huge2::trace::bursty;
+
+    let n = if quick { 16 } else { 64 };
+    let seed = 31u64;
+    let run = |continuous: bool| -> (f64, u64, u64, f64, Vec<u64>) {
+        let mut eng = Engine::new(EngineConfig {
+            workers: 2,
+            max_batch: 8,
+            batch_timeout_us: 2_000,
+            continuous,
+            ..EngineConfig::default()
+        });
+        eng.register_native(Model::native(
+            "tiny", Arc::new(Generator::tiny_cgan(seed)), 0)).unwrap();
+        let eng = Arc::new(eng);
+        let arrivals = bursty(8, 50.0, n, 7);
+        let t0 = Instant::now();
+        let mut rng = Rng::new(1);
+        let mut pending = Vec::new();
+        for a in &arrivals {
+            let wait = a.at.saturating_sub(t0.elapsed());
+            if !wait.is_zero() {
+                std::thread::sleep(wait);
+            }
+            let z: Vec<f32> = (0..8).map(|_| rng.next_normal()).collect();
+            if let Ok(rx) = eng.submit("tiny", Payload::latent(z, vec![]))
+            {
+                pending.push(rx);
+            }
+        }
+        let mut lats = Vec::new();
+        let mut sums = Vec::new();
+        for rx in pending {
+            if let Ok(Ok(r)) = rx.recv() {
+                lats.push(r.latency.as_micros() as u64);
+                sums.push(r.output.checksum());
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let mb = eng.counters.mean_batch_size();
+        lats.sort_unstable();
+        let len = lats.len().max(1);
+        (lats.len() as f64 / wall,
+         lats.get(len / 2).copied().unwrap_or(0),
+         lats.get((len * 95 / 100).min(len - 1)).copied().unwrap_or(0),
+         mb, sums)
+    };
+
+    println!("\n== continuous vs windowed batching (bursty open loop, \
+              DESIGN.md §16) ==\n");
+    let mut t = Table::new(&["batcher", "img/s", "p50", "p95",
+                             "mean batch"]);
+    let (w_thr, w_p50, w_p95, w_mb, w_sums) = run(false);
+    let (c_thr, c_p50, c_p95, c_mb, c_sums) = run(true);
+    for (label, thr, p50, p95, mb) in [
+        ("windowed (continuous = false)", w_thr, w_p50, w_p95, w_mb),
+        ("continuous (default)", c_thr, c_p50, c_p95, c_mb),
+    ] {
+        t.row(&[
+            label.into(),
+            format!("{thr:.2}"),
+            fmt_dur(std::time::Duration::from_micros(p50)),
+            fmt_dur(std::time::Duration::from_micros(p95)),
+            format!("{mb:.2}"),
+        ]);
+    }
+    t.print();
+    bench_record("batch_windowed", 1e9 / w_thr.max(1e-9), 0.0, 0.0);
+    bench_record("batch_continuous", 1e9 / c_thr.max(1e-9), 0.0, 0.0);
+    // same submit order + same weights: the k-th request must produce
+    // the same image regardless of how batches were composed
+    assert_eq!(w_sums, c_sums,
+               "continuous batching changed request outputs — batch \
+                composition must be numerics-invariant");
+    println!("(ns/request recorded to BENCH_10.json; continuous refill \
+              should close the gap bursty windows leave open)");
+}
+
 fn main() {
     let quick = std::env::var("BENCH_QUICK").is_ok();
     let per_client = if quick { 2 } else { 6 };
@@ -855,6 +947,7 @@ fn main() {
     tuned_plan_phase(quick);
     instrumentation_overhead_phase(quick);
     recording_overhead_phase(quick);
+    continuous_batching_phase(quick);
     replay_regression(quick);
     seg_replay_regression(quick);
     write_bench_json();

@@ -229,6 +229,12 @@ pub struct EngineConfig {
     /// Flight-recorder ring capacity (recent span events retained for
     /// the panic-path dump).
     pub flight_capacity: usize,
+    /// Continuous batching (DESIGN.md §16): workers admit newly queued
+    /// rows into the *next* forming batch while the current one
+    /// executes, seating by (priority, arrival) and carrying spill
+    /// forward with its original arrival anchor. `false` falls back to
+    /// the windowed batcher (one batch window at a time).
+    pub continuous: bool,
 }
 
 impl Default for EngineConfig {
@@ -242,6 +248,7 @@ impl Default for EngineConfig {
             batch_buckets: vec![1, 4, 8],
             instrument: true,
             flight_capacity: 1024,
+            continuous: true,
         }
     }
 }
@@ -258,6 +265,7 @@ impl EngineConfig {
     /// batch_buckets = [1, 4, 8]
     /// instrument = true
     /// flight_capacity = 1024
+    /// continuous = true
     /// ```
     pub fn from_toml(text: &str) -> Result<Self, String> {
         let map = parse_toml(text)?;
@@ -283,6 +291,7 @@ impl EngineConfig {
                 ("flight_capacity", TomlValue::Int(i)) => {
                     cfg.flight_capacity = *i as usize
                 }
+                ("continuous", TomlValue::Bool(b)) => cfg.continuous = *b,
                 (other, _) => {
                     return Err(format!("unknown or mistyped key: {other}"))
                 }

@@ -56,6 +56,69 @@ pub fn next_batch<T>(q: &BoundedQueue<T>, max_batch: usize,
     Some(batch)
 }
 
+/// Continuous, priority-aware batch formation (DESIGN.md §16) — the
+/// fleet coordinator's replacement for the strict window-then-execute
+/// loop of [`next_batch`].
+///
+/// `carry` is the worker-local spillover from the previous call: rows
+/// that were popped but not seated because a higher class filled the
+/// batch. Each call drains `carry` first, then admits queued rows —
+/// probing up to `2 × max_batch` so a burst arriving *while the
+/// previous batch executed* seeds the next batch immediately instead
+/// of waiting out a fresh window. When more rows are ready than fit,
+/// the `max_batch` best by `(class rank, arrival)` ship now and the
+/// rest go back into `carry` for the very next call.
+///
+/// The deadline anchors at the **earliest arrival among all
+/// candidates** — critically, a carried-over row keeps its *original*
+/// arrival anchor rather than re-anchoring per batch, so no request
+/// ever waits two windows: a row that spilled with an expired window
+/// makes the next batch ship without sleeping at all.
+///
+/// Returns `None` only when the queue is closed and drained **and**
+/// `carry` is empty — a worker that spilled rows always gets one more
+/// batch to deliver them, which is what keeps the conservation
+/// invariant exact at shutdown.
+pub fn form_batch<T>(q: &BoundedQueue<T>, carry: &mut Vec<T>,
+                     max_batch: usize, timeout: Duration,
+                     arrival: impl Fn(&T) -> Instant,
+                     rank: impl Fn(&T) -> u8,
+                     mut on_pop: impl FnMut(&mut T)) -> Option<Vec<T>> {
+    debug_assert!(max_batch > 0);
+    let probe = max_batch.saturating_mul(2);
+    let mut cand: Vec<T> = std::mem::take(carry);
+    if cand.is_empty() {
+        let mut first = q.pop()?;
+        on_pop(&mut first);
+        cand.push(first);
+    }
+    // earliest-arrival anchor across carry and the fresh head: the
+    // satellite fix — re-anchoring at the carried row's *pop* (or at
+    // the new head's arrival) would make a spilled request wait a
+    // second full window.
+    let anchor = cand.iter().map(&arrival).min().expect("cand nonempty");
+    let deadline = anchor + timeout;
+    while cand.len() < probe {
+        match q.pop_until(deadline) {
+            Ok(Some(mut item)) => {
+                on_pop(&mut item);
+                cand.push(item);
+            }
+            Ok(None) => break,          // window expired
+            Err(()) => break,           // closed; ship what we have
+        }
+    }
+    if cand.len() > max_batch {
+        // seat by (class rank, arrival): higher classes first, FIFO
+        // within a class; the stable sort keeps pop order on ties
+        cand.sort_by(|a, b| {
+            (rank(a), arrival(a)).cmp(&(rank(b), arrival(b)))
+        });
+        carry.extend(cand.drain(max_batch..));
+    }
+    Some(cand)
+}
+
 /// Statistics helper: ideal batch sizes for an arrival trace — used by
 /// the serving bench to sanity-check the batcher against the theoretical
 /// optimum for a given (rate, timeout, max_batch). The window boundary
@@ -186,6 +249,69 @@ mod tests {
         let b = next_batch(&q, 8, Duration::from_secs(5), now, |_| {})
             .unwrap();
         assert_eq!(b, vec![7]);
+    }
+
+    /// Satellite regression (ISSUE 10): a carried-over row keeps its
+    /// *original* arrival anchor. Re-anchoring per batch would make a
+    /// spilled request wait two windows; with the original anchor long
+    /// expired, the next batch ships immediately.
+    #[test]
+    fn carried_row_keeps_its_original_anchor() {
+        let q: BoundedQueue<(Instant, u8, u32)> = BoundedQueue::new(16);
+        let long_ago = Instant::now() - Duration::from_millis(200);
+        let mut carry = vec![(long_ago, 0u8, 7u32)];
+        let t0 = Instant::now();
+        let b = form_batch(&q, &mut carry, 4, Duration::from_millis(100),
+                           |it| it.0, |it| it.1, |_| {}).unwrap();
+        assert_eq!(b.iter().map(|it| it.2).collect::<Vec<_>>(), vec![7]);
+        assert!(carry.is_empty());
+        // a fresh (re-anchored) window would sleep ~100ms here
+        assert!(t0.elapsed() < Duration::from_millis(50),
+                "carried row waited a second window: {:?}", t0.elapsed());
+    }
+
+    /// Over-probe spills the lowest classes into carry; the spill ships
+    /// in the immediately following batch, still anchored at its own
+    /// arrival.
+    #[test]
+    fn priority_seats_first_and_spill_carries_over() {
+        let q: BoundedQueue<(Instant, u8, u32)> = BoundedQueue::new(16);
+        let t = Instant::now() - Duration::from_millis(50);
+        // 3 background rows queued first, then 2 interactive
+        for (i, rank) in [(0u32, 2u8), (1, 2), (2, 2), (3, 0), (4, 0)] {
+            q.try_push((t + Duration::from_micros(i as u64), rank, i))
+                .unwrap();
+        }
+        let mut carry = Vec::new();
+        let b = form_batch(&q, &mut carry, 3, Duration::from_millis(10),
+                           |it| it.0, |it| it.1, |_| {}).unwrap();
+        // interactive rows seated first despite arriving later
+        assert_eq!(b.iter().map(|it| it.2).collect::<Vec<_>>(),
+                   vec![3, 4, 0]);
+        assert_eq!(carry.iter().map(|it| it.2).collect::<Vec<_>>(),
+                   vec![1, 2]);
+        // spill ships next, without a fresh window sleep
+        let t0 = Instant::now();
+        let b = form_batch(&q, &mut carry, 3, Duration::from_millis(100),
+                           |it| it.0, |it| it.1, |_| {}).unwrap();
+        assert_eq!(b.iter().map(|it| it.2).collect::<Vec<_>>(),
+                   vec![1, 2]);
+        assert!(carry.is_empty());
+        assert!(t0.elapsed() < Duration::from_millis(50));
+    }
+
+    /// `None` only once the queue is closed *and* the carry is
+    /// delivered — spilled rows are never lost at shutdown.
+    #[test]
+    fn closed_queue_still_ships_the_carry() {
+        let q: BoundedQueue<(Instant, u8, u32)> = BoundedQueue::new(4);
+        q.close();
+        let mut carry = vec![(Instant::now(), 1u8, 9u32)];
+        let b = form_batch(&q, &mut carry, 4, Duration::from_millis(5),
+                           |it| it.0, |it| it.1, |_| {}).unwrap();
+        assert_eq!(b.iter().map(|it| it.2).collect::<Vec<_>>(), vec![9]);
+        assert!(form_batch(&q, &mut carry, 4, Duration::from_millis(5),
+                           |it| it.0, |it| it.1, |_| {}).is_none());
     }
 
     #[test]

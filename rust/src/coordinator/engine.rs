@@ -19,13 +19,18 @@ use crate::workspace::{Workspace, WorkspaceCounters};
 
 use super::error::{ServeError, ServeResult};
 use super::queue::{BoundedQueue, PushError};
-use super::router::{Model, Payload, Request, Response};
+use super::residency::Residency;
+use super::router::{Model, Payload, Priority, Request, Response};
 use super::worker::spawn_workers;
 
 struct ModelRuntime {
     model: Arc<Model>,
     queue: Arc<BoundedQueue<Request>>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    /// Per-model outcome counters (DESIGN.md §16): the conservation
+    /// invariant holds for each model independently, over the requests
+    /// that resolved to it (unknown-model rejects are fleet-only).
+    counters: Arc<Counters>,
 }
 
 /// The engine's observability bundle (DESIGN.md §12): the per-stage
@@ -114,6 +119,10 @@ pub struct Engine {
     registry: Arc<MetricsRegistry>,
     /// Stage spans + flight recorder, shared with every worker.
     obs: Arc<Observability>,
+    /// LRU weight-residency manager (DESIGN.md §16): present once
+    /// [`Engine::set_resident_budget`] arms it; workers call
+    /// `ensure` before every batch.
+    residency: Option<Arc<Residency>>,
 }
 
 impl Engine {
@@ -137,6 +146,7 @@ impl Engine {
             workspace,
             registry,
             obs,
+            residency: None,
         }
     }
 
@@ -173,6 +183,9 @@ impl Engine {
         let c = counters.clone();
         reg.counter_fn("huge2_batched_requests_total",
                        move || c.batched_requests.load(Relaxed));
+        let c = counters.clone();
+        reg.counter_fn("huge2_shed_total",
+                       move || c.shed.load(Relaxed));
         let c = counters.clone();
         reg.gauge_fn("huge2_in_flight", move || c.in_flight());
         reg.register_histogram("huge2_batch_exec_us", exec_hist.clone());
@@ -226,7 +239,8 @@ impl Engine {
     /// [`crate::plan::PlanProfile`]. Returns `false` for unknown models
     /// and PJRT backends (no compiled plan to profile).
     pub fn enable_layer_profiling(&self, model: &str) -> bool {
-        match self.models.get(model).and_then(|mr| mr.model.plan()) {
+        match self.models.get(model)
+                  .and_then(|mr| mr.model.plan_handle()) {
             Some(p) => {
                 p.profile().set_enabled(true);
                 true
@@ -236,9 +250,11 @@ impl Engine {
     }
 
     /// A registered native model's compiled plan (`None` for unknown
-    /// models and PJRT backends) — profile and report access.
-    pub fn model_plan(&self, model: &str) -> Option<&ExecPlan> {
-        self.models.get(model).and_then(|mr| mr.model.plan())
+    /// models, PJRT backends, and currently-evicted models) — profile
+    /// and report access. The handle is a shared `Arc`: it stays valid
+    /// even if the residency manager evicts the model afterwards.
+    pub fn model_plan(&self, model: &str) -> Option<Arc<ExecPlan>> {
+        self.models.get(model).and_then(|mr| mr.model.plan_handle())
     }
 
     /// Snapshot of the shared workspace's allocation counters. After the
@@ -255,10 +271,7 @@ impl Engine {
     /// so `Engine::Auto` replays deterministically even if the
     /// heuristic changed between builds (DESIGN.md §10).
     pub fn plan_digest(&self, model: &str) -> Option<u64> {
-        self.models
-            .get(model)
-            .and_then(|mr| mr.model.plan())
-            .map(|p| p.engine_digest())
+        self.models.get(model).and_then(|mr| mr.model.pinned_digest())
     }
 
     /// Install a recording sink (see [`crate::replay`]). Must be called
@@ -294,8 +307,42 @@ impl Engine {
             });
             self.ckpt_pump = Some((tx, handle));
         }
+        if let Some(res) = &self.residency {
+            res.set_sink(Some(sink.clone()));
+        }
         self.sink = Some(sink);
         Ok(())
+    }
+
+    /// Arm LRU weight residency (DESIGN.md §16): native models' prepacked
+    /// plans share `bytes` of budget; before each batch the worker makes
+    /// its model resident, evicting least-recently-used peers first.
+    /// `0` means unlimited (nothing evicted) — but still tracks usage.
+    /// Must be called before any model is registered, for the same
+    /// reason as [`Engine::set_trace_sink`]: workers capture the manager
+    /// when spawned.
+    pub fn set_resident_budget(&mut self, bytes: usize) -> Result<()> {
+        if !self.models.is_empty() {
+            bail!("set_resident_budget must be called before register()");
+        }
+        let res = Arc::new(Residency::new(bytes));
+        res.set_sink(self.sink.clone());
+        let r = res.clone();
+        self.registry.gauge_fn("huge2_resident_bytes",
+                               move || r.resident_bytes() as i64);
+        let r = res.clone();
+        self.registry.counter_fn("huge2_evictions_total",
+                                 move || r.evictions());
+        let r = res.clone();
+        self.registry.counter_fn("huge2_reloads_total",
+                                 move || r.reloads());
+        self.residency = Some(res);
+        Ok(())
+    }
+
+    /// The residency manager, when armed (eviction/reload observability).
+    pub fn residency(&self) -> Option<&Arc<Residency>> {
+        self.residency.as_ref()
     }
 
     /// Register a PJRT-served model (see [`Model::from_artifacts`]).
@@ -324,14 +371,50 @@ impl Engine {
         self.registry.gauge_fn(
             &format!("huge2_queue_depth{{model=\"{name}\"}}"),
             move || q.len() as i64);
+        let counters = Arc::new(Counters::new());
+        Self::register_model_metrics(&self.registry, &name, &counters);
+        if let Some(res) = &self.residency {
+            res.register(model.clone());
+        }
         let workers = spawn_workers(
             model.clone(), queue.clone(), self.cfg.clone(),
-            self.counters.clone(), self.exec_hist.clone(),
-            self.sink.clone(), self.workspace.clone(), self.obs.clone(),
-            self.cfg.workers);
-        self.models
-            .insert(name, ModelRuntime { model, queue, workers });
+            self.counters.clone(), counters.clone(),
+            self.exec_hist.clone(), self.sink.clone(),
+            self.workspace.clone(), self.obs.clone(),
+            self.residency.clone(), self.cfg.workers);
+        self.models.insert(
+            name, ModelRuntime { model, queue, workers, counters });
         Ok(())
+    }
+
+    /// Labeled per-model outcome series (DESIGN.md §16): one set per
+    /// registered model, same conservation algebra as the fleet-wide
+    /// counters.
+    fn register_model_metrics(reg: &MetricsRegistry, name: &str,
+                              counters: &Arc<Counters>) {
+        use std::sync::atomic::Ordering::Relaxed;
+        let series: [(&str, fn(&Counters) -> u64); 5] = [
+            ("submitted", |c| c.submitted.load(Relaxed)),
+            ("completed", |c| c.completed.load(Relaxed)),
+            ("rejected", |c| c.rejected.load(Relaxed)),
+            ("failed", |c| c.failed.load(Relaxed)),
+            ("shed", |c| c.shed.load(Relaxed)),
+        ];
+        for (what, get) in series {
+            let c = counters.clone();
+            reg.counter_fn(
+                &format!("huge2_model_{what}_total{{model=\"{name}\"}}"),
+                move || get(&c));
+        }
+        let c = counters.clone();
+        reg.gauge_fn(&format!("huge2_model_in_flight{{model=\"{name}\"}}"),
+                     move || c.in_flight());
+    }
+
+    /// A registered model's outcome counters (per-model conservation
+    /// surface; `None` for unknown models).
+    pub fn model_counters(&self, model: &str) -> Option<Arc<Counters>> {
+        self.models.get(model).map(|mr| mr.counters.clone())
     }
 
     pub fn model_names(&self) -> Vec<&str> {
@@ -356,6 +439,23 @@ impl Engine {
     pub fn submit(&self, model: &str, payload: Payload)
                   -> std::result::Result<mpsc::Receiver<ServeResult>,
                                          ServeError> {
+        self.submit_with(model, payload, Priority::default())
+    }
+
+    /// [`Engine::submit`] with an explicit priority class (DESIGN.md
+    /// §16). Admission is priority-aware: when `model`'s queue is full,
+    /// a higher-class arrival *displaces* the youngest queued request of
+    /// a strictly lower class — the victim's terminal outcome is
+    /// [`ServeError::Shed`] through its reply channel — while a
+    /// lower-class arrival into a full queue is shed directly
+    /// (`Err(Shed)` here). Only an `Interactive` arrival that finds the
+    /// queue full of equal-or-higher work still sees the classic
+    /// [`ServeError::Backpressure`]. Every shed is also counted in
+    /// `rejected`, so conservation is unchanged.
+    pub fn submit_with(&self, model: &str, payload: Payload,
+                       priority: Priority)
+                       -> std::result::Result<mpsc::Receiver<ServeResult>,
+                                              ServeError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.counters.submitted.fetch_add(1, Ordering::Relaxed);
         let stamps = SpanStamps::now();
@@ -373,53 +473,82 @@ impl Engine {
                     id,
                     model: model.to_string(),
                     payload: arrival,
+                    priority,
                 }),
                 Err(e) => {
                     return Err(self.reject(
-                        id, ServeError::Validation(format!("{e:#}"))));
+                        None, id,
+                        ServeError::Validation(format!("{e:#}"))));
                 }
             }
         }
         let mr = match self.models.get(model) {
             Some(mr) => mr,
             None => {
-                return Err(self.reject(id, ServeError::Validation(
+                return Err(self.reject(None, id, ServeError::Validation(
                     format!("unknown model {model:?} (have {:?})",
                             self.model_names()))));
             }
         };
+        mr.counters.submitted.fetch_add(1, Ordering::Relaxed);
         if let Err(e) = mr.model.validate(&payload) {
-            return Err(self.reject(id, e));
+            return Err(self.reject(Some(&mr.counters), id, e));
         }
         let (tx, rx) = mpsc::channel();
-        let req = Request { id, payload, enqueued: Instant::now(),
-                            stamps, reply: tx };
+        let req = Request { id, payload, priority,
+                            enqueued: Instant::now(), stamps, reply: tx };
         // Enqueue is recorded under the queue lock: the trace can never
         // show a worker's BatchFormed/Response for an id before its
         // Enqueue, and `depth` is exact.
-        let push = mr.queue.try_push_then(req, |depth| {
-            if self.obs.on() {
-                self.obs.flight.record(id, Stage::Enqueued, SUBMIT_LANE);
-            }
-            if let Some(s) = &self.sink {
-                s.record(EventBody::Enqueue { id, depth });
-            }
-        });
+        let push = mr.queue.try_push_displace(
+            req,
+            |queued, inc| queued.priority.rank() > inc.priority.rank(),
+            |depth| {
+                if self.obs.on() {
+                    self.obs.flight.record(id, Stage::Enqueued,
+                                           SUBMIT_LANE);
+                }
+                if let Some(s) = &self.sink {
+                    s.record(EventBody::Enqueue { id, depth });
+                }
+            });
         match push {
-            Ok(()) => Ok(rx),
+            Ok(None) => Ok(rx),
+            Ok(Some(victim)) => {
+                // Admission displaced a queued lower-class request: the
+                // incoming row is enqueued, the victim is shed.
+                let err = self.shed(&mr.counters, victim.id,
+                                    victim.priority);
+                if victim.reply.send(Err(err)).is_err() {
+                    self.counters.dropped.fetch_add(1, Ordering::Relaxed);
+                    mr.counters.dropped.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(rx)
+            }
             Err(PushError::Full(_)) => {
-                Err(self.reject(id, ServeError::Backpressure))
+                if priority == Priority::Interactive {
+                    Err(self.reject(Some(&mr.counters), id,
+                                    ServeError::Backpressure))
+                } else {
+                    Err(self.shed(&mr.counters, id, priority))
+                }
             }
             Err(PushError::Closed(_)) => {
-                Err(self.reject(id, ServeError::Shutdown))
+                Err(self.reject(Some(&mr.counters), id,
+                                ServeError::Shutdown))
             }
         }
     }
 
-    /// Count the submit-time refusal, record a `Reject` trace event
+    /// Count the submit-time refusal (fleet-wide and, when the request
+    /// resolved to a model, per-model), record a `Reject` trace event
     /// (when recording), and pass the typed error through unchanged.
-    fn reject(&self, id: u64, err: ServeError) -> ServeError {
+    fn reject(&self, model_counters: Option<&Counters>, id: u64,
+              err: ServeError) -> ServeError {
         self.counters.rejected.fetch_add(1, Ordering::Relaxed);
+        if let Some(mc) = model_counters {
+            mc.rejected.fetch_add(1, Ordering::Relaxed);
+        }
         if self.obs.on() {
             self.obs.flight.record(id, Stage::Rejected, SUBMIT_LANE);
         }
@@ -427,6 +556,23 @@ impl Engine {
             s.record(EventBody::Reject { id, reason: err.to_string() });
         }
         err
+    }
+
+    /// Count a priority shed — a `rejected` outcome plus the `shed`
+    /// telemetry subset — and record the folded `Shed` trace event.
+    fn shed(&self, model_counters: &Counters, id: u64, class: Priority)
+            -> ServeError {
+        for c in [&*self.counters, model_counters] {
+            c.rejected.fetch_add(1, Ordering::Relaxed);
+            c.shed.fetch_add(1, Ordering::Relaxed);
+        }
+        if self.obs.on() {
+            self.obs.flight.record(id, Stage::Rejected, SUBMIT_LANE);
+        }
+        if let Some(s) = &self.sink {
+            s.record(EventBody::Shed { id, class });
+        }
+        ServeError::Shed { class }
     }
 
     /// Wait out a reply channel, flattening the typed outcome into
@@ -655,6 +801,111 @@ mod tests {
         for rx in receivers {
             rx.recv().unwrap().unwrap();
         }
+    }
+
+    #[test]
+    fn priority_admission_sheds_background_not_interactive() {
+        use crate::coordinator::Priority;
+        let cfg = EngineConfig {
+            workers: 1,
+            queue_depth: 2,
+            max_batch: 1,
+            batch_timeout_us: 1,
+            ..EngineConfig::default()
+        };
+        let mut e = Engine::new(cfg);
+        let gen = Generator::tiny_cgan(7);
+        e.register_native(super::super::router::Model::native(
+            "m", Arc::new(gen), 0)).unwrap();
+        let mut shed_at_submit = 0;
+        let mut receivers = Vec::new();
+        for i in 0..200 {
+            let pri = if i % 2 == 0 {
+                Priority::Background
+            } else {
+                Priority::Interactive
+            };
+            match e.submit_with("m", lat(8), pri) {
+                Ok(rx) => receivers.push(rx),
+                Err(ServeError::Shed { class }) => {
+                    // only the lower class is ever shed at submit
+                    assert_eq!(class, Priority::Background);
+                    shed_at_submit += 1;
+                }
+                Err(ServeError::Backpressure) => {}
+                Err(other) => panic!("unexpected refusal: {other}"),
+            }
+        }
+        assert!(shed_at_submit > 0, "expected direct sheds under flood");
+        // every accepted request still terminates — either Ok, or a
+        // Shed delivered through the channel when it was displaced by
+        // an interactive arrival (never the other way around)
+        let mut shed_displaced = 0;
+        for rx in receivers {
+            match rx.recv().unwrap() {
+                Ok(_) => {}
+                Err(ServeError::Shed { class }) => {
+                    assert_eq!(class, Priority::Background);
+                    shed_displaced += 1;
+                }
+                Err(other) => panic!("unexpected outcome: {other}"),
+            }
+        }
+        let _ = shed_displaced; // displacement is load-dependent
+        use std::sync::atomic::Ordering::Relaxed;
+        assert!(e.counters.shed.load(Relaxed) > 0);
+        // conservation: fleet-wide and per-model (single model: equal)
+        assert_eq!(e.counters.in_flight(), 0);
+        let mc = e.model_counters("m").unwrap();
+        assert_eq!(mc.in_flight(), 0);
+        assert_eq!(mc.submitted.load(Relaxed),
+                   e.counters.submitted.load(Relaxed));
+        assert_eq!(mc.shed.load(Relaxed),
+                   e.counters.shed.load(Relaxed));
+    }
+
+    #[test]
+    fn fleet_residency_evicts_and_still_serves() {
+        let cfg = EngineConfig {
+            workers: 1,
+            queue_depth: 16,
+            max_batch: 2,
+            batch_timeout_us: 200,
+            ..EngineConfig::default()
+        };
+        let mut e = Engine::new(cfg);
+        let gen = Arc::new(Generator::tiny_cgan(5));
+        let net = Arc::new(SegNet::new(&tiny_segnet(), 3));
+        let in_shape = net.in_shape();
+        let m_gen = super::super::router::Model::native(
+            "gen", gen, 0);
+        let m_seg = super::super::router::Model::native_seg(
+            "seg", net);
+        // budget fits exactly one of the two plans at a time
+        let budget = m_gen.plan_bytes().max(m_seg.plan_bytes());
+        e.set_resident_budget(budget).unwrap();
+        e.register_native(m_gen).unwrap();
+        e.register_native(m_seg).unwrap();
+        let mut rng = Rng::new(21);
+        for _ in 0..4 {
+            let z: Vec<f32> = (0..8).map(|_| rng.next_normal()).collect();
+            e.generate("gen", z, vec![]).unwrap();
+            let img = Tensor::randn(&in_shape, &mut Rng::new(4));
+            e.segment("seg", img, 4).unwrap();
+        }
+        let res = e.residency().unwrap();
+        assert!(res.evictions() >= 1, "alternating under a one-plan \
+                 budget must evict");
+        assert!(res.reloads() >= 1);
+        assert!(res.resident_bytes() <= budget);
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(e.counters.completed.load(Relaxed), 8);
+        for m in ["gen", "seg"] {
+            let mc = e.model_counters(m).unwrap();
+            assert_eq!(mc.completed.load(Relaxed), 4, "{m}");
+            assert_eq!(mc.in_flight(), 0, "{m}");
+        }
+        e.shutdown();
     }
 
     #[test]

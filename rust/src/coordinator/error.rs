@@ -13,7 +13,7 @@
 
 use std::fmt;
 
-use super::router::Response;
+use super::router::{Priority, Response};
 
 /// Why a request did not produce a [`Response`].
 ///
@@ -38,6 +38,14 @@ pub enum ServeError {
     BatchFailed(String),
     /// The engine is shutting down; the queue no longer admits.
     Shutdown,
+    /// Shed by the admission controller under backpressure: either this
+    /// request's priority class lost to a full queue of higher-priority
+    /// work, or it was displaced from the queue by a later,
+    /// higher-priority arrival. `class` is the shed request's own
+    /// priority. Like `Backpressure`, transient by construction — but
+    /// priority-aware: an `Interactive` request is never shed while a
+    /// lower class occupies its queue.
+    Shed { class: Priority },
 }
 
 impl ServeError {
@@ -51,6 +59,7 @@ impl ServeError {
             ServeError::Backpressure => "backpressure",
             ServeError::BatchFailed(_) => "batch_failed",
             ServeError::Shutdown => "shutdown",
+            ServeError::Shed { .. } => "shed",
         }
     }
 }
@@ -66,6 +75,9 @@ impl fmt::Display for ServeError {
                 write!(f, "batch failed: {msg}")
             }
             ServeError::Shutdown => write!(f, "engine shutting down"),
+            ServeError::Shed { class } => {
+                write!(f, "shed under load (class={})", class.as_str())
+            }
         }
     }
 }
@@ -86,6 +98,7 @@ mod tests {
             ServeError::Backpressure,
             ServeError::BatchFailed("y".into()),
             ServeError::Shutdown,
+            ServeError::Shed { class: Priority::Background },
         ];
         let mut kinds: Vec<&str> = all.iter().map(|e| e.kind()).collect();
         kinds.sort_unstable();
@@ -98,6 +111,8 @@ mod tests {
                    "validation");
         assert_eq!(ServeError::BatchFailed(String::new()).kind(),
                    "batch_failed");
+        assert_eq!(ServeError::Shed { class: Priority::Batch }.kind(),
+                   "shed");
     }
 
     #[test]

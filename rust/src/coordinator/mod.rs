@@ -33,10 +33,13 @@ pub mod batcher;
 pub mod engine;
 pub mod error;
 pub mod queue;
+pub mod residency;
 pub mod router;
 pub mod worker;
 
 pub use engine::{Engine, Observability};
 pub use error::{ServeError, ServeResult};
 pub use queue::{BoundedQueue, PushError};
-pub use router::{Backend, Model, Payload, Request, Response, Task};
+pub use residency::Residency;
+pub use router::{Backend, Model, Payload, Priority, Request, Response,
+                 Task};

@@ -68,6 +68,46 @@ impl<T> BoundedQueue<T> {
         Ok(())
     }
 
+    /// Priority-aware admission (DESIGN.md §16): like
+    /// [`BoundedQueue::try_push_then`], but when the queue is full, a
+    /// queued item for which `lower(queued, &item)` holds — i.e. one of
+    /// strictly lower priority than the incoming item — may be
+    /// *displaced* to make room. The **youngest** such item is chosen
+    /// (scanning from the back), so FIFO fairness within a class is
+    /// preserved and the displaced item is the one that has invested
+    /// the least wait.
+    ///
+    /// Returns `Ok(Some(victim))` when admission displaced a queued
+    /// item (the caller owes the victim a shed outcome), `Ok(None)` on
+    /// a plain push, and `Err(Full)` when the queue is full of
+    /// equal-or-higher-priority work.
+    pub fn try_push_displace(
+        &self,
+        item: T,
+        lower: impl Fn(&T, &T) -> bool,
+        on_push: impl FnOnce(usize),
+    ) -> Result<Option<T>, PushError<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed(item));
+        }
+        let mut victim = None;
+        if g.items.len() >= self.capacity {
+            let Some(idx) = g.items
+                .iter()
+                .rposition(|queued| lower(queued, &item))
+            else {
+                return Err(PushError::Full(item));
+            };
+            victim = g.items.remove(idx);
+        }
+        g.items.push_back(item);
+        on_push(g.items.len());
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(victim)
+    }
+
     /// Blocking pop; `None` when the queue is closed *and* drained.
     pub fn pop(&self) -> Option<T> {
         let mut g = self.inner.lock().unwrap();
@@ -159,6 +199,44 @@ mod tests {
         assert_eq!(q.try_push(3), Err(PushError::Full(3)));
         q.try_pop();
         q.try_push(3).unwrap();
+    }
+
+    #[test]
+    fn displacement_sheds_the_youngest_lower_class() {
+        // items are (rank, id); lower priority == greater rank
+        let lower = |q: &(u8, u32), inc: &(u8, u32)| q.0 > inc.0;
+        let q: BoundedQueue<(u8, u32)> = BoundedQueue::new(3);
+        q.try_push((0, 1)).unwrap();
+        q.try_push((2, 2)).unwrap();
+        q.try_push((2, 3)).unwrap();
+        // full of equal-or-higher work for an incoming background row
+        assert!(matches!(
+            q.try_push_displace((2, 4), lower, |_| {}),
+            Err(PushError::Full((2, 4)))));
+        // an interactive arrival displaces the *youngest* background row
+        let victim =
+            q.try_push_displace((0, 5), lower, |_| {}).unwrap();
+        assert_eq!(victim, Some((2, 3)));
+        assert_eq!(q.len(), 3);
+        // full of interactive: even interactive can no longer displace
+        let v = q.try_push_displace((0, 6), lower, |_| {}).unwrap();
+        assert_eq!(v, Some((2, 2)));
+        assert!(matches!(
+            q.try_push_displace((0, 7), lower, |_| {}),
+            Err(PushError::Full((0, 7)))));
+        // drain order: displacement preserved FIFO among survivors
+        assert_eq!(q.pop(), Some((0, 1)));
+        assert_eq!(q.pop(), Some((0, 5)));
+        assert_eq!(q.pop(), Some((0, 6)));
+    }
+
+    #[test]
+    fn displacement_respects_close() {
+        let q: BoundedQueue<(u8, u32)> = BoundedQueue::new(1);
+        q.close();
+        assert!(matches!(
+            q.try_push_displace((0, 1), |a, b| a.0 > b.0, |_| {}),
+            Err(PushError::Closed((0, 1)))));
     }
 
     #[test]

@@ -1,0 +1,293 @@
+//! LRU prepacked-weight residency under a shared byte budget
+//! (DESIGN.md §16).
+//!
+//! A fleet of N native models rarely fits its prepacked weights in an
+//! edge device's memory at once. The residency manager keeps every
+//! model *registered* but only some *resident*: before a worker
+//! executes a batch, [`Residency::ensure`] makes that model's plan
+//! resident — evicting the least-recently-used peers until the fleet's
+//! resident prepacked bytes (plus the incoming plan) fit the budget —
+//! and returns the plan handle the batch executes against. Handles are
+//! `Arc`s, so evicting a model mid-batch never invalidates an executing
+//! forward pass; the bytes are released when the last in-flight batch
+//! finishes.
+//!
+//! Determinism contract: a reloaded plan must reproduce the
+//! engine-selection digest pinned at registration
+//! ([`Model::ensure_plan`] refuses the reload otherwise), so eviction
+//! and reload can never change a single output byte — which is what
+//! lets evict/reload be recorded as *telemetry* trace events
+//! (DESIGN.md §7: scheduling detail is recorded, not pinned; a replay
+//! is free to evict differently, and its outputs still verify).
+//!
+//! PJRT models hold weights in the runtime service, outside the
+//! workspace budget: they are never evicted and `ensure` is a no-op
+//! for them. Models registered via an explicit tuned plan keep a
+//! rebuild closure that re-clones the plan (prepacked state is
+//! Arc-shared), so their eviction is accounting-only — the budget
+//! ledger stays exact either way.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::plan::ExecPlan;
+use crate::replay::event::EventBody;
+use crate::replay::recorder::TraceSink;
+
+use super::router::Model;
+
+#[derive(Debug)]
+struct Slot {
+    model: Arc<Model>,
+    /// LRU tick of the last `ensure` for this model (0 = never used).
+    last_use: u64,
+}
+
+/// The fleet's residency manager: one per engine, shared by every
+/// worker thread.
+pub struct Residency {
+    /// Prepacked-weight byte budget across all resident native models
+    /// (0 = unlimited; nothing is ever evicted).
+    budget: usize,
+    tick: AtomicU64,
+    slots: Mutex<HashMap<String, Slot>>,
+    sink: Mutex<Option<Arc<TraceSink>>>,
+    evictions: AtomicU64,
+    reloads: AtomicU64,
+}
+
+impl Residency {
+    pub fn new(budget_bytes: usize) -> Self {
+        Residency {
+            budget: budget_bytes,
+            tick: AtomicU64::new(0),
+            slots: Mutex::new(HashMap::new()),
+            sink: Mutex::new(None),
+            evictions: AtomicU64::new(0),
+            reloads: AtomicU64::new(0),
+        }
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
+    /// Install (or clear) the trace sink evict/reload events go to.
+    pub fn set_sink(&self, sink: Option<Arc<TraceSink>>) {
+        *self.sink.lock().unwrap() = sink;
+    }
+
+    /// Track a registered model. Registration does not enforce the
+    /// budget — the first batch's `ensure` does, so eviction order is
+    /// driven by use, not registration order.
+    pub fn register(&self, model: Arc<Model>) {
+        self.slots
+            .lock()
+            .unwrap()
+            .insert(model.name.clone(), Slot { model, last_use: 0 });
+    }
+
+    /// Total prepacked bytes of currently-resident evictable models.
+    pub fn resident_bytes(&self) -> usize {
+        self.slots
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|s| s.model.is_evictable() && s.model.is_resident())
+            .map(|s| s.model.plan_bytes())
+            .sum()
+    }
+
+    /// Evictions performed so far (monotonic).
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Reloads performed so far (monotonic).
+    pub fn reloads(&self) -> u64 {
+        self.reloads.load(Ordering::Relaxed)
+    }
+
+    /// Make `model`'s plan resident and return the handle the batch
+    /// should execute against (`None` for PJRT models — their weights
+    /// are not budget-managed). Touches the LRU clock, evicts
+    /// least-recently-used peers while the budget is exceeded, and
+    /// records `Evict`/`Reload` trace events. Errs only when a rebuilt
+    /// plan fails the pinned-digest check — the caller must fail the
+    /// batch, not serve a drifted plan.
+    pub fn ensure(&self, model: &Model)
+                  -> Result<Option<Arc<ExecPlan>>, String> {
+        if !model.is_evictable() {
+            return Ok(None);
+        }
+        let mut slots = self.slots.lock().unwrap();
+        let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        if let Some(s) = slots.get_mut(model.name.as_str()) {
+            s.last_use = tick;
+        }
+        if let Some(p) = model.plan_handle() {
+            // already resident: still enforce (registration may have
+            // left the fleet over budget)
+            self.evict_to_budget(&mut slots, model, 0);
+            return Ok(Some(p));
+        }
+        self.evict_to_budget(&mut slots, model, model.plan_bytes());
+        let (plan, reloaded) = model.ensure_plan()?;
+        if reloaded {
+            self.reloads.fetch_add(1, Ordering::Relaxed);
+            if let Some(sink) = self.sink.lock().unwrap().as_ref() {
+                sink.record(EventBody::Reload {
+                    model: model.name.clone(),
+                    bytes: model.plan_bytes() as u64,
+                    digest: plan.engine_digest(),
+                });
+            }
+        }
+        Ok(Some(plan))
+    }
+
+    /// Evict LRU peers of `keep` until resident bytes + `incoming` fit
+    /// the budget. Stops (overcommitting) when no evictable peer
+    /// remains — a single over-budget model must still serve.
+    fn evict_to_budget(&self, slots: &mut HashMap<String, Slot>,
+                       keep: &Model, incoming: usize) {
+        if self.budget == 0 {
+            return;
+        }
+        loop {
+            let used: usize = slots
+                .values()
+                .filter(|s| {
+                    s.model.is_evictable() && s.model.is_resident()
+                })
+                .map(|s| s.model.plan_bytes())
+                .sum();
+            if used + incoming <= self.budget {
+                return;
+            }
+            let victim = slots
+                .values()
+                .filter(|s| {
+                    s.model.name != keep.name
+                        && s.model.is_evictable()
+                        && s.model.is_resident()
+                })
+                .min_by_key(|s| s.last_use)
+                .map(|s| s.model.clone());
+            let Some(v) = victim else { return };
+            if let Some(bytes) = v.evict_plan() {
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+                if let Some(sink) = self.sink.lock().unwrap().as_ref() {
+                    sink.record(EventBody::Evict {
+                        model: v.name.clone(),
+                        bytes: bytes as u64,
+                    });
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Residency {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Residency")
+            .field("budget", &self.budget)
+            .field("evictions", &self.evictions())
+            .field("reloads", &self.reloads())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{cgan_layers, tiny_segnet};
+    use crate::gan::Generator;
+    use crate::rng::Rng;
+    use crate::seg::SegNet;
+
+    fn gen_model(name: &str) -> Arc<Model> {
+        let mut rng = Rng::new(1);
+        let gen = Generator::new(cgan_layers(), 8, 2, &mut rng);
+        Arc::new(Model::native(name, Arc::new(gen), 2))
+    }
+
+    fn seg_model(name: &str) -> Arc<Model> {
+        let net = Arc::new(SegNet::new(&tiny_segnet(), 3));
+        Arc::new(Model::native_seg(name, net))
+    }
+
+    #[test]
+    fn unlimited_budget_never_evicts() {
+        let res = Residency::new(0);
+        let a = gen_model("a");
+        let b = seg_model("b");
+        res.register(a.clone());
+        res.register(b.clone());
+        assert!(res.ensure(&a).unwrap().is_some());
+        assert!(res.ensure(&b).unwrap().is_some());
+        assert_eq!(res.evictions(), 0);
+        assert!(a.is_resident() && b.is_resident());
+    }
+
+    #[test]
+    fn tight_budget_evicts_lru_and_reloads_with_digest() {
+        let a = gen_model("a");
+        let b = seg_model("b");
+        // budget fits exactly one of the two plans at a time
+        let budget = a.plan_bytes().max(b.plan_bytes());
+        let res = Residency::new(budget);
+        res.register(a.clone());
+        res.register(b.clone());
+        let da = a.pinned_digest().unwrap();
+        let db = b.pinned_digest().unwrap();
+        // a serves first: b (LRU, never used) is evicted
+        assert!(res.ensure(&a).unwrap().is_some());
+        assert!(a.is_resident());
+        assert!(!b.is_resident());
+        assert_eq!(res.evictions(), 1);
+        // b serves next: a is evicted, b reloads, digest must hold
+        let pb = res.ensure(&b).unwrap().unwrap();
+        assert_eq!(pb.engine_digest(), db);
+        assert!(!a.is_resident());
+        assert!(b.is_resident());
+        assert_eq!(res.evictions(), 2);
+        assert_eq!(res.reloads(), 1);
+        // and back: a reloads with its own digest intact
+        let pa = res.ensure(&a).unwrap().unwrap();
+        assert_eq!(pa.engine_digest(), da);
+        assert_eq!(res.reloads(), 2);
+        assert!(res.resident_bytes() <= budget);
+    }
+
+    #[test]
+    fn evict_and_reload_are_trace_events() {
+        let a = gen_model("a");
+        let b = seg_model("b");
+        let res = Residency::new(a.plan_bytes().max(b.plan_bytes()));
+        let sink = Arc::new(TraceSink::new());
+        res.set_sink(Some(sink.clone()));
+        res.register(a.clone());
+        res.register(b.clone());
+        res.ensure(&a).unwrap();
+        res.ensure(&b).unwrap();
+        let evs = sink.snapshot();
+        let evicts = evs
+            .iter()
+            .filter(|e| matches!(e.body, EventBody::Evict { .. }))
+            .count();
+        let reloads: Vec<_> = evs
+            .iter()
+            .filter_map(|e| match &e.body {
+                EventBody::Reload { model, digest, .. } => {
+                    Some((model.clone(), *digest))
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(evicts, 2, "{evs:?}");
+        assert_eq!(reloads,
+                   vec![("b".to_string(), b.pinned_digest().unwrap())]);
+    }
+}

@@ -13,7 +13,7 @@
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
 use super::error::{ServeError, ServeResult};
@@ -64,6 +64,76 @@ impl std::str::FromStr for Task {
             "segment" => Ok(Task::Segment),
             other => Err(anyhow::anyhow!(
                 "task must be 'generate' or 'segment', got {other:?}")),
+        }
+    }
+}
+
+/// Priority class of a request — the admission controller's and
+/// batcher's scheduling axis (DESIGN.md §16). Ordering is by
+/// [`Priority::rank`]: `Interactive` outranks `Batch` outranks
+/// `Background`. Under backpressure the controller sheds strictly by
+/// class (a higher-priority arrival may displace the youngest
+/// lower-class request from a full queue), and the continuous batcher
+/// seats higher classes first when more rows are ready than fit in one
+/// batch.
+///
+/// The class is carried on trace arrivals (trace format v5; v1–v4
+/// arrivals decode as the default `Interactive`), so a replay re-drives
+/// the exact recorded priority mix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    /// Latency-sensitive foreground work (the default class).
+    #[default]
+    Interactive,
+    /// Throughput work: shed before `Interactive` under load.
+    Batch,
+    /// Best-effort work: first to shed, last to batch.
+    Background,
+}
+
+impl Priority {
+    /// Scheduling rank: 0 is the highest priority. Lower rank wins batch
+    /// seats; higher rank sheds first.
+    pub fn rank(&self) -> u8 {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Batch => 1,
+            Priority::Background => 2,
+        }
+    }
+
+    /// Wire name (trace arrivals, `--priority-default` flag).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+            Priority::Background => "background",
+        }
+    }
+
+    /// Inverse of [`Priority::rank`] (trace decode of the binary codec's
+    /// class byte).
+    pub fn from_rank(rank: u8) -> Option<Self> {
+        match rank {
+            0 => Some(Priority::Interactive),
+            1 => Some(Priority::Batch),
+            2 => Some(Priority::Background),
+            _ => None,
+        }
+    }
+}
+
+impl std::str::FromStr for Priority {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "interactive" => Ok(Priority::Interactive),
+            "batch" => Ok(Priority::Batch),
+            "background" => Ok(Priority::Background),
+            other => Err(anyhow::anyhow!(
+                "priority must be 'interactive', 'batch' or \
+                 'background', got {other:?}")),
         }
     }
 }
@@ -144,6 +214,10 @@ impl Payload {
 pub struct Request {
     pub id: u64,
     pub payload: Payload,
+    /// Priority class: the admission controller sheds lower classes
+    /// first under backpressure, the batcher seats higher classes first
+    /// (DESIGN.md §16).
+    pub priority: Priority,
     pub enqueued: Instant,
     /// Lifecycle stamps for stage-span latency attribution
     /// (DESIGN.md §12). `Copy`, carried in-line — no allocation.
@@ -197,7 +271,24 @@ pub struct Model {
     /// Workers execute this uniformly — for the seg model it already
     /// ends in the argmax head, so `run_into` yields the client-ready
     /// output for **both** tasks (DESIGN.md §10).
-    plan: Option<ExecPlan>,
+    ///
+    /// Behind a `RwLock` for weight residency (DESIGN.md §16): the LRU
+    /// residency manager may *evict* the plan under byte-budget
+    /// pressure and rebuild it on the next batch; workers take a cheap
+    /// `Arc` handle per batch, so an eviction never invalidates an
+    /// executing forward pass.
+    plan: RwLock<Option<Arc<ExecPlan>>>,
+    /// Rebuilds the serving plan after an eviction (native backends;
+    /// `None` pins the model resident — PJRT weights live in the
+    /// runtime service, not the workspace budget).
+    rebuild: Option<Box<dyn Fn() -> ExecPlan + Send + Sync>>,
+    /// Engine-selection digest pinned at registration: a rebuilt plan
+    /// must reproduce it exactly, or the reload is refused (a silent
+    /// engine-selection drift would invalidate every recorded trace).
+    pinned_digest: Option<u64>,
+    /// Prepacked-weight footprint of the serving plan (bytes) — the
+    /// unit of the residency manager's byte-budget accounting.
+    plan_bytes: usize,
     /// Fault-injection test hook (the supervision analogue of
     /// [`crate::workspace::Workspace::poison`]): when armed, the next
     /// batch a worker executes for this model panics once.
@@ -250,7 +341,10 @@ impl Model {
             buckets: buckets.to_vec(),
             backend: Backend::Pjrt(runtime),
             out_shape,
-            plan: None,
+            plan: RwLock::new(None),
+            rebuild: None,
+            pinned_digest: None,
+            plan_bytes: 0,
             panic_next_batch: AtomicBool::new(false),
         })
     }
@@ -262,6 +356,7 @@ impl Model {
         let out = gen.out_shape(1);
         let z_total = gen.proj.shape()[0];
         let plan = gen.plan().clone();
+        let rebuild_gen = gen.clone();
         Model {
             name: name.to_string(),
             task: Task::Generate,
@@ -272,7 +367,10 @@ impl Model {
             buckets: vec![usize::MAX], // native path takes any batch size
             backend: Backend::Native(gen),
             out_shape: out,
-            plan: Some(plan),
+            pinned_digest: Some(plan.engine_digest()),
+            plan_bytes: plan.prepacked_bytes(),
+            plan: RwLock::new(Some(Arc::new(plan))),
+            rebuild: Some(Box::new(move || rebuild_gen.plan().clone())),
             panic_next_batch: AtomicBool::new(false),
         }
     }
@@ -286,7 +384,15 @@ impl Model {
     pub fn native_with_plan(name: &str, gen: Arc<Generator>,
                             cond_dim: usize, plan: ExecPlan) -> Self {
         let mut m = Model::native(name, gen, cond_dim);
-        m.plan = Some(plan);
+        m.pinned_digest = Some(plan.engine_digest());
+        m.plan_bytes = plan.prepacked_bytes();
+        // An explicitly supplied (tuned) plan has no source net to
+        // re-derive it from; the rebuild closure re-clones it (cheap —
+        // prepacked state is Arc-shared), so eviction for this model is
+        // accounting-only.
+        let keep = plan.clone();
+        m.rebuild = Some(Box::new(move || keep.clone()));
+        m.plan = RwLock::new(Some(Arc::new(plan)));
         m
     }
 
@@ -296,7 +402,13 @@ impl Model {
     /// not inference time.
     pub fn native_seg(name: &str, net: Arc<SegNet>) -> Self {
         let plan = net.plan().with_argmax_head(net.n_classes());
-        Model::native_seg_with_plan(name, net, plan)
+        let mut m = Model::native_seg_with_plan(name, net.clone(), plan);
+        // the seg plan re-derives from its net, so eviction really
+        // drops this model's argmax-headed serving plan
+        m.rebuild = Some(Box::new(move || {
+            net.plan().with_argmax_head(net.n_classes())
+        }));
+        m
     }
 
     /// [`Model::native_seg`] but serving under an explicitly provided
@@ -307,6 +419,7 @@ impl Model {
                                 plan: ExecPlan) -> Self {
         let in_shape = net.in_shape();
         let out_shape = plan.out_shape(1);
+        let keep = plan.clone();
         Model {
             name: name.to_string(),
             task: Task::Segment,
@@ -317,14 +430,94 @@ impl Model {
             buckets: vec![usize::MAX],
             backend: Backend::NativeSeg(net),
             out_shape,
-            plan: Some(plan),
+            pinned_digest: Some(plan.engine_digest()),
+            plan_bytes: plan.prepacked_bytes(),
+            plan: RwLock::new(Some(Arc::new(plan))),
+            rebuild: Some(Box::new(move || keep.clone())),
             panic_next_batch: AtomicBool::new(false),
         }
     }
 
-    /// The compiled serving plan (native backends).
-    pub fn plan(&self) -> Option<&ExecPlan> {
-        self.plan.as_ref()
+    /// A shared handle on the compiled serving plan (native backends;
+    /// `None` for PJRT **or while evicted**). Workers take one handle
+    /// per batch — the handle keeps an executing forward pass valid
+    /// across a concurrent eviction.
+    pub fn plan_handle(&self) -> Option<Arc<ExecPlan>> {
+        self.plan.read().unwrap().clone()
+    }
+
+    /// Is the serving plan currently resident? PJRT models report
+    /// `false` (their weights live in the runtime service, outside the
+    /// residency budget — see [`Model::is_evictable`]).
+    pub fn is_resident(&self) -> bool {
+        self.plan.read().unwrap().is_some()
+    }
+
+    /// Can the residency manager evict this model? True only for native
+    /// backends with a rebuild path.
+    pub fn is_evictable(&self) -> bool {
+        self.rebuild.is_some()
+    }
+
+    /// Prepacked-weight footprint of the serving plan (bytes); the
+    /// residency manager's accounting unit. 0 for PJRT.
+    pub fn plan_bytes(&self) -> usize {
+        self.plan_bytes
+    }
+
+    /// Engine-selection digest pinned at registration (native backends).
+    pub fn pinned_digest(&self) -> Option<u64> {
+        self.pinned_digest
+    }
+
+    /// Drop the resident plan (residency manager only). Returns the
+    /// bytes released, or `None` when the model was not resident or has
+    /// no rebuild path (PJRT models are never evicted).
+    pub(crate) fn evict_plan(&self) -> Option<usize> {
+        if self.rebuild.is_none() {
+            return None;
+        }
+        self.plan
+            .write()
+            .unwrap()
+            .take()
+            .map(|_| self.plan_bytes)
+    }
+
+    /// Make the plan resident, rebuilding after an eviction. The
+    /// rebuilt plan must reproduce the digest pinned at registration —
+    /// a mismatch means engine selection drifted between build and
+    /// reload, and the reload is refused rather than silently serving a
+    /// different plan. Returns the handle plus whether a rebuild
+    /// happened (the residency manager records a `Reload` trace event
+    /// when it did).
+    pub(crate) fn ensure_plan(&self)
+                              -> std::result::Result<(Arc<ExecPlan>, bool),
+                                                     String> {
+        if let Some(p) = self.plan_handle() {
+            return Ok((p, false));
+        }
+        let rebuild = self.rebuild.as_ref().ok_or_else(|| {
+            format!("{}: no serving plan and no rebuild path", self.name)
+        })?;
+        let mut g = self.plan.write().unwrap();
+        // a racing worker may have reloaded while we waited on the lock
+        if let Some(p) = g.as_ref() {
+            return Ok((p.clone(), false));
+        }
+        let plan = rebuild();
+        if let Some(want) = self.pinned_digest {
+            let got = plan.engine_digest();
+            if got != want {
+                return Err(format!(
+                    "{}: reloaded plan digest {got:016x} != pinned \
+                     {want:016x} — engine selection drifted across \
+                     eviction; refusing to serve it", self.name));
+            }
+        }
+        let p = Arc::new(plan);
+        *g = Some(p.clone());
+        Ok((p, true))
     }
 
     /// Smallest compiled bucket that fits `n` (native: exactly `n`).
@@ -445,6 +638,53 @@ mod tests {
             assert_eq!(t.as_str().parse::<Task>().unwrap(), t);
         }
         assert!("nope".parse::<Task>().is_err());
+    }
+
+    #[test]
+    fn priority_ranks_and_wire_names() {
+        let all = [Priority::Interactive, Priority::Batch,
+                   Priority::Background];
+        for (i, p) in all.iter().enumerate() {
+            assert_eq!(p.rank() as usize, i);
+            assert_eq!(Priority::from_rank(p.rank()), Some(*p));
+            assert_eq!(p.as_str().parse::<Priority>().unwrap(), *p);
+        }
+        assert_eq!(Priority::default(), Priority::Interactive);
+        assert_eq!(Priority::from_rank(9), None);
+        assert!("urgent".parse::<Priority>().is_err());
+    }
+
+    #[test]
+    fn eviction_and_reload_reproduce_the_digest() {
+        let m = tiny_native();
+        assert!(m.is_resident());
+        assert!(m.is_evictable());
+        assert!(m.plan_bytes() > 0);
+        let digest = m.pinned_digest().unwrap();
+        let freed = m.evict_plan().unwrap();
+        assert_eq!(freed, m.plan_bytes());
+        assert!(!m.is_resident());
+        assert!(m.plan_handle().is_none());
+        // second eviction is a no-op
+        assert_eq!(m.evict_plan(), None);
+        let (plan, reloaded) = m.ensure_plan().unwrap();
+        assert!(reloaded);
+        assert_eq!(plan.engine_digest(), digest);
+        assert!(m.is_resident());
+        // already-resident ensure is a cheap handle clone
+        let (_, reloaded) = m.ensure_plan().unwrap();
+        assert!(!reloaded);
+    }
+
+    #[test]
+    fn seg_model_reload_reproduces_the_digest() {
+        let net = Arc::new(SegNet::new(&tiny_segnet(), 3));
+        let m = Model::native_seg("seg", net);
+        let digest = m.pinned_digest().unwrap();
+        m.evict_plan().unwrap();
+        let (plan, reloaded) = m.ensure_plan().unwrap();
+        assert!(reloaded);
+        assert_eq!(plan.engine_digest(), digest);
     }
 
     #[test]

@@ -29,7 +29,9 @@ use crate::workspace::{Workspace, WsHandle};
 
 use super::engine::Observability;
 use super::error::ServeError;
+use super::residency::Residency;
 use super::router::{Backend, Model, Payload, Request, Response};
+use crate::plan::ExecPlan;
 
 /// Per-worker observability context (DESIGN.md §12): the engine's
 /// shared [`Observability`] bundle plus this worker's fixed coordinates.
@@ -127,10 +129,30 @@ pub fn execute_batch(model: &Model, batch: &mut Vec<Request>,
                      obs: Option<&ObsCtx>,
                      before_reply: impl FnOnce(&BatchOutcome))
                      -> BatchOutcome {
+    execute_batch_with(model, None, batch, sink, hnd, obs, before_reply)
+}
+
+/// [`execute_batch`] with an explicit resident-plan handle from the
+/// residency manager's `ensure` — passing the *ensured* handle (rather
+/// than re-reading the model's slot) closes the race where a peer
+/// model's reload evicts this model between `ensure` and execution.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_batch_with(model: &Model, resident: Option<Arc<ExecPlan>>,
+                          batch: &mut Vec<Request>,
+                          sink: Option<&TraceSink>, hnd: &mut WsHandle,
+                          obs: Option<&ObsCtx>,
+                          before_reply: impl FnOnce(&BatchOutcome))
+                          -> BatchOutcome {
     if model.take_injected_panic() {
         panic!("injected worker panic (Model::inject_panic_next_batch \
                 test hook)");
     }
+    // One plan handle for the whole batch: an eviction racing this
+    // batch cannot pull the plan out from under the forward pass
+    // (DESIGN.md §16). `None` for PJRT — and for a native model whose
+    // plan is evicted with no residency manager to reload it, in which
+    // case every row fails validation with a typed error.
+    let plan = resident.or_else(|| model.plan_handle());
     let t_gather = Instant::now();
     if let Some(o) = obs {
         for r in batch.iter() {
@@ -139,8 +161,10 @@ pub fn execute_batch(model: &Model, batch: &mut Vec<Request>,
     }
     // 1. Per-row gather validation: one malformed payload must fail one
     //    request, not the whole batch.
-    let row_errs: Vec<Option<ServeError>> =
-        batch.iter().map(|r| validate_row(model, r).err()).collect();
+    let row_errs: Vec<Option<ServeError>> = batch
+        .iter()
+        .map(|r| validate_row(model, plan.as_deref(), r).err())
+        .collect();
     let good: Vec<&Request> = batch
         .iter()
         .zip(&row_errs)
@@ -160,8 +184,8 @@ pub fn execute_batch(model: &Model, batch: &mut Vec<Request>,
                 o.obs.flight.record(r.id, Stage::ForwardStart, o.worker);
             }
         }
-        let res =
-            run_forward(model, &good, bucket, hnd, Some(&mut fwd_span));
+        let res = run_forward(model, plan.as_deref(), &good, bucket, hnd,
+                              Some(&mut fwd_span));
         if let Some(o) = obs {
             for r in &good {
                 o.obs.flight.record(r.id, Stage::ForwardEnd, o.worker);
@@ -299,7 +323,7 @@ fn fail_request(req: Request, err: ServeError, sink: Option<&TraceSink>)
 /// Kinds and geometry were checked at submit; this is the gather-time
 /// backstop that keeps a malformed row — however it got here — from
 /// failing its neighbours.
-fn validate_row(model: &Model, r: &Request)
+fn validate_row(model: &Model, plan: Option<&ExecPlan>, r: &Request)
                 -> std::result::Result<(), ServeError> {
     match &model.backend {
         Backend::Pjrt(_) => match &r.payload {
@@ -312,11 +336,11 @@ fn validate_row(model: &Model, r: &Request)
                 model.name, other.kind(), model.z_dim, model.cond_dim))),
         },
         Backend::Native(_) | Backend::NativeSeg(_) => {
-            let ie = match model.plan() {
+            let ie = match plan {
                 Some(p) => p.in_elems(),
                 None => {
                     return Err(ServeError::Validation(format!(
-                        "{}: native backend without a compiled plan",
+                        "{}: native backend without a resident plan",
                         model.name)));
                 }
             };
@@ -366,7 +390,8 @@ fn gather_latents(model: &Model, batch: &[&Request], bucket: usize)
 /// `span`, when present, brackets exactly the backend/plan execution —
 /// the `forward` stage boundary (gathers and bucket-split stitching
 /// stay outside it).
-fn run_forward(model: &Model, batch: &[&Request], bucket: usize,
+fn run_forward(model: &Model, plan: Option<&ExecPlan>,
+               batch: &[&Request], bucket: usize,
                hnd: &mut WsHandle, mut span: Option<&mut FwdSpan>)
                -> Result<Tensor> {
     let n = batch.len();
@@ -376,7 +401,7 @@ fn run_forward(model: &Model, batch: &[&Request], bucket: usize,
     if bucket < n {
         let mut parts: Vec<Tensor> = Vec::new();
         for chunk in batch.chunks(bucket) {
-            parts.push(run_forward(model, chunk, bucket, hnd,
+            parts.push(run_forward(model, plan, chunk, bucket, hnd,
                                    span.as_deref_mut())?);
         }
         // concatenate along batch dim
@@ -421,7 +446,7 @@ fn run_forward(model: &Model, batch: &[&Request], bucket: usize,
             // batch-composition-invariant (DESIGN.md §8/§10). Rows were
             // validated by `validate_row`, so the copies below always
             // fit.
-            let plan = model.plan().expect("native backend without a plan");
+            let plan = plan.expect("native batch without a resident plan");
             let ie = plan.in_elems();
             let mut xb = hnd.checkout(n * ie);
             for (i, r) in batch.iter().enumerate() {
@@ -484,10 +509,12 @@ pub fn spawn_workers(
     queue: Arc<super::queue::BoundedQueue<Request>>,
     cfg: crate::config::EngineConfig,
     counters: Arc<crate::metrics::Counters>,
+    model_counters: Arc<crate::metrics::Counters>,
     hist: Arc<crate::metrics::Histogram>,
     sink: Option<Arc<TraceSink>>,
     workspace: Arc<Workspace>,
     obs: Arc<Observability>,
+    residency: Option<Arc<Residency>>,
     count: usize,
 ) -> Vec<std::thread::JoinHandle<()>> {
     // Pin the GEMM microkernel tier before any worker drains a batch:
@@ -500,13 +527,16 @@ pub fn spawn_workers(
             let model = model.clone();
             let queue = queue.clone();
             let counters = counters.clone();
+            let model_counters = model_counters.clone();
             let hist = hist.clone();
             let sink = sink.clone();
             let workspace = workspace.clone();
             let obs = obs.clone();
+            let residency = residency.clone();
             let timeout =
                 std::time::Duration::from_micros(cfg.batch_timeout_us);
             let max_batch = cfg.max_batch;
+            let continuous = cfg.continuous;
             std::thread::spawn(move || {
                 use std::sync::atomic::Ordering::Relaxed;
                 let mut hnd = workspace.handle();
@@ -515,17 +545,68 @@ pub fn spawn_workers(
                 let worker = widx as u32;
                 let octx =
                     obs_on.then(|| ObsCtx { obs: &obs, task, worker });
-                while let Some(mut batch) = super::batcher::next_batch(
-                    &queue, max_batch, timeout,
-                    |r: &Request| r.enqueued,
-                    |r: &mut Request| {
+                // continuous-batching spillover (worker-local): rows
+                // popped but not seated last batch; always delivered
+                // before this worker exits (conservation at shutdown)
+                let mut carry: Vec<Request> = Vec::new();
+                loop {
+                    let on_pop = |r: &mut Request| {
                         if obs_on {
                             r.stamps.popped = Some(Instant::now());
                             obs.flight.record(r.id, Stage::Popped,
                                               worker);
                         }
-                    })
-                {
+                    };
+                    let batch = if continuous {
+                        super::batcher::form_batch(
+                            &queue, &mut carry, max_batch, timeout,
+                            |r: &Request| r.enqueued,
+                            |r: &Request| r.priority.rank(),
+                            on_pop)
+                    } else {
+                        super::batcher::next_batch(
+                            &queue, max_batch, timeout,
+                            |r: &Request| r.enqueued, on_pop)
+                    };
+                    let Some(mut batch) = batch else { break };
+                    // Weight residency: make this model's plan resident
+                    // (evicting LRU peers under the byte budget) before
+                    // the batch executes. A refused reload — digest
+                    // drift — typed-fails the batch; the worker keeps
+                    // draining.
+                    let resident = match &residency {
+                        Some(res) => match res.ensure(&model) {
+                            Ok(h) => h,
+                            Err(msg) => {
+                                let n = batch.len() as u64;
+                                for c in [&counters, &model_counters] {
+                                    c.batches.fetch_add(1, Relaxed);
+                                    c.batched_requests
+                                        .fetch_add(n, Relaxed);
+                                    c.failed.fetch_add(n, Relaxed);
+                                }
+                                eprintln!(
+                                    "[worker:{}] residency reload \
+                                     failed: {msg}; failing {} \
+                                     request(s)", model.name, n);
+                                let err = ServeError::BatchFailed(
+                                    format!("weight residency: {msg}"));
+                                for req in batch.drain(..) {
+                                    if !fail_request(req, err.clone(),
+                                                     sink.as_deref())
+                                    {
+                                        for c in [&counters,
+                                                  &model_counters] {
+                                            c.dropped
+                                                .fetch_add(1, Relaxed);
+                                        }
+                                    }
+                                }
+                                continue;
+                            }
+                        },
+                        None => None,
+                    };
                     if obs_on {
                         // one clock read per batch close, shared by all
                         // members (the batch closes at a single instant)
@@ -552,26 +633,32 @@ pub fn spawn_workers(
                     let counted = std::cell::Cell::new(false);
                     let res = std::panic::catch_unwind(
                         std::panic::AssertUnwindSafe(|| {
-                            execute_batch(&model, &mut batch,
+                            execute_batch_with(&model, resident,
+                                          &mut batch,
                                           sink.as_deref(), &mut hnd,
                                           octx.as_ref(), |o| {
                                 counted.set(true);
                                 let n = (o.completed + o.failed) as u64;
-                                counters.batches.fetch_add(1, Relaxed);
-                                counters.batched_requests
-                                    .fetch_add(n, Relaxed);
-                                counters.completed
-                                    .fetch_add(o.completed as u64,
-                                               Relaxed);
-                                counters.failed
-                                    .fetch_add(o.failed as u64, Relaxed);
+                                for c in [&counters, &model_counters] {
+                                    c.batches.fetch_add(1, Relaxed);
+                                    c.batched_requests
+                                        .fetch_add(n, Relaxed);
+                                    c.completed
+                                        .fetch_add(o.completed as u64,
+                                                   Relaxed);
+                                    c.failed
+                                        .fetch_add(o.failed as u64,
+                                                   Relaxed);
+                                }
                                 hist.record(t0.elapsed());
                             })
                         }));
                     match res {
                         Ok(outcome) => {
-                            counters.dropped.fetch_add(
-                                outcome.dropped as u64, Relaxed);
+                            for c in [&counters, &model_counters] {
+                                c.dropped.fetch_add(
+                                    outcome.dropped as u64, Relaxed);
+                            }
                             if let Some(err) = &outcome.error {
                                 // requests were answered with
                                 // BatchFailed — this is the log line,
@@ -594,17 +681,20 @@ pub fn spawn_workers(
                             // execute_batch got their outcome before
                             // the panic.
                             counters.panics.fetch_add(1, Relaxed);
+                            model_counters.panics.fetch_add(1, Relaxed);
                             let msg = panic_message(p.as_ref());
                             eprintln!("[worker:{}] panic while executing \
                                        a batch: {msg}; failing {} \
                                        request(s), worker keeps serving",
                                       model.name, batch.len());
                             if !counted.get() {
-                                counters.batches.fetch_add(1, Relaxed);
-                                counters.batched_requests.fetch_add(
-                                    batch.len() as u64, Relaxed);
-                                counters.failed.fetch_add(
-                                    batch.len() as u64, Relaxed);
+                                for c in [&counters, &model_counters] {
+                                    c.batches.fetch_add(1, Relaxed);
+                                    c.batched_requests.fetch_add(
+                                        batch.len() as u64, Relaxed);
+                                    c.failed.fetch_add(
+                                        batch.len() as u64, Relaxed);
+                                }
                             }
                             let err = ServeError::BatchFailed(
                                 format!("worker panicked: {msg}"));
@@ -615,8 +705,10 @@ pub fn spawn_workers(
                                 if !fail_request(req, err.clone(),
                                                  sink.as_deref())
                                 {
-                                    counters.dropped.fetch_add(1,
-                                                               Relaxed);
+                                    for c in [&counters,
+                                              &model_counters] {
+                                        c.dropped.fetch_add(1, Relaxed);
+                                    }
                                 }
                                 if let Some(o) = &octx {
                                     o.obs.flight.record(

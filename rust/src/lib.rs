@@ -226,6 +226,8 @@
 //!     net: String::new(),
 //!     // pins the plan's per-layer engine choices; replay re-checks it
 //!     engine_digest: format!("{:016x}", gen.plan().engine_digest()),
+//!     // single-model run; `huge2 serve --models ...` fills the roster
+//!     fleet: Vec::new(),
 //! });
 //! let mut eng = Engine::new(EngineConfig::default());
 //! eng.set_trace_sink(rec.sink())?;
@@ -296,7 +298,65 @@
 //! `huge2 trace fingerprints t.bin`,
 //! `huge2 replay t.bin --window 2..5 --progress`, and
 //! `huge2 trace bisect t.bin` (synthesizes checkpoints in memory for
-//! pre-v4 traces).
+//! pre-v4 traces). Long soaks shrink with
+//! `huge2 trace compact big.bin small.bin --keep-every 4` — checkpoint
+//! pruning that re-folds the fingerprint chain so the survivors still
+//! verify.
+//!
+//! ## Fleet serving quickstart (priorities, admission, residency)
+//!
+//! One engine serves **N models at once** (DESIGN.md §16): each model
+//! gets its own bounded queue and worker pool behind a shared
+//! admission controller. Requests carry a
+//! [`coordinator::Priority`] class — `Interactive` (default), `Batch`,
+//! or `Background` — that the batcher orders by (class first, then the
+//! EDF deadline anchored at *original* arrival, so carried-over rows
+//! under continuous batching never lose their place). Under
+//! backpressure a full queue **sheds** its lowest class first to admit
+//! a higher one: the victim's receiver gets
+//! `ServeError::Shed { class }`, a typed refusal distinct from
+//! `Backpressure` (queue full, nothing shed-worthy below you) and the
+//! other [`coordinator::ServeError`] kinds — `Validation`,
+//! `UnknownModel`, `BatchFailed`, `WorkerPanic`, `Shutdown`. With
+//! [`coordinator::Engine::set_resident_budget`], prepacked weights
+//! share an LRU byte budget: before each batch the worker makes its
+//! model resident, evicting least-recently-used peers; a reloaded plan
+//! must reproduce its pinned engine digest, so eviction is pure
+//! telemetry (`Evict`/`Reload` trace events), never a numerics event.
+//! Whatever happens, conservation holds per model and fleet-wide:
+//! `submitted == completed + rejected + failed` (`shed` ⊆ rejected).
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use huge2::config::EngineConfig;
+//! use huge2::coordinator::{Engine, Model, Payload, Priority};
+//! use huge2::gan::Generator;
+//! use huge2::seg::SegNet;
+//!
+//! let mut eng = Engine::new(EngineConfig::default());
+//! eng.set_resident_budget(8 << 20)?;        // before register()
+//! eng.register_native(Model::native(
+//!     "tiny_cgan", Arc::new(Generator::tiny_cgan(7)), 0))?;
+//! eng.register_native(Model::native_seg(
+//!     "tiny_segnet",
+//!     Arc::new(SegNet::new(&huge2::config::tiny_segnet(), 7))))?;
+//! let rx = eng.submit_with("tiny_cgan",
+//!                          Payload::latent(vec![0.0; 8], vec![]),
+//!                          Priority::Background)?;
+//! let _ = rx.recv();                        // may be Err(Shed{..})
+//! if let Some(res) = eng.residency() {
+//!     println!("{} evictions, {} reloads, {}B resident",
+//!              res.evictions(), res.reloads(), res.resident_bytes());
+//! }
+//! eng.shutdown();
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! CLI: `huge2 serve --models tiny_cgan,tiny_segnet --resident-budget 4
+//! --priority-default interactive --record fleet.bin` — the trace
+//! (format v5) carries each arrival's class, every shed/evict/reload
+//! decision, and a fleet roster of `(model, digest)` pairs that replay
+//! re-gates before re-driving the workload.
 //!
 //! ## Observability quickstart (stage spans, profiler, snapshots)
 //!

@@ -8,7 +8,7 @@ use std::time::{Duration, Instant};
 use huge2::bench_util::{fmt_dur, measure_budget, Table};
 use huge2::cli::Args;
 use huge2::config::{layer_by_name, segnet_by_name, table1, EngineConfig};
-use huge2::coordinator::{Engine, Payload};
+use huge2::coordinator::{Engine, Payload, Priority, ServeError};
 use huge2::deconv::{baseline, huge2 as engine2, Engine as DeconvEngine};
 use huge2::gan::Generator;
 use huge2::memsim::{trace_layer, EngineKind, GpuModel};
@@ -107,15 +107,31 @@ fn load_tuned(args: &Args) -> Result<Option<huge2::tune::TunedPlan>> {
 
 /// The calibration a command asked for: `--reference` pins the
 /// deterministic constants (byte-identical artifacts across hosts);
-/// otherwise fit against this host's timed microbenchmarks.
+/// otherwise fit against this host's timed microbenchmarks, memoized
+/// on disk keyed by the host fingerprint (ISA tier + core count) so a
+/// warm host skips the measurement entirely (`--recalibrate` forces a
+/// fresh fit).
 fn calibration_for(args: &Args) -> huge2::tune::Calibration {
     if args.has("reference") {
-        huge2::tune::Calibration::reference()
-    } else {
-        println!("calibrating cost model against timed microbenchmarks \
-                  (use --reference for deterministic constants)...");
-        huge2::tune::Calibration::measured()
+        return huge2::tune::Calibration::reference();
     }
+    let cache = Path::new(args.get("artifacts").unwrap_or("artifacts"))
+        .join("calibration.bin");
+    if args.has("recalibrate") {
+        let _ = std::fs::remove_file(&cache);
+    }
+    let (cal, warm) = huge2::tune::Calibration::measured_cached(&cache);
+    if warm {
+        println!("calibration cache hit ({}, host {}) — use \
+                  --recalibrate to re-measure",
+                 cache.display(), huge2::tune::host_fingerprint());
+    } else {
+        println!("calibrated cost model against timed microbenchmarks \
+                  (cached to {} for host {}; --reference pins \
+                  deterministic constants)",
+                 cache.display(), huge2::tune::host_fingerprint());
+    }
+    cal
 }
 
 /// `huge2 tune --net <name> --out <file> [--reference]`: score every
@@ -458,6 +474,7 @@ fn load_engine_cfg(args: &Args) -> Result<EngineConfig> {
     };
     Ok(EngineConfig {
         workers: args.get_usize("workers", base.workers)?,
+        queue_depth: args.get_usize("queue-depth", base.queue_depth)?,
         max_batch: args.get_usize("max-batch", base.max_batch)?,
         batch_timeout_us: args.get_usize(
             "batch-timeout-us", base.batch_timeout_us as usize)? as u64,
@@ -529,16 +546,45 @@ fn spawn_stats(eng: &Engine, every: Duration) -> StatsReporter {
             let fwd = d.merged_histogram("huge2_stage_forward_us");
             println!(
                 "[stats] {:6.1} req/s | completed={} rejected={} \
-                 failed={} dropped={} | in_flight={} | p50 queue={} \
-                 forward={}",
+                 failed={} shed={} dropped={} | in_flight={} | \
+                 p50 queue={} forward={}",
                 n("huge2_completed_total") as f64 / dt,
                 n("huge2_completed_total"),
                 n("huge2_rejected_total"),
                 n("huge2_failed_total"),
+                n("huge2_shed_total"),
                 n("huge2_dropped_total"),
                 cur.gauges.get("huge2_in_flight").copied().unwrap_or(0),
                 fmt_dur(Duration::from_micros(queue.quantile_us(0.5))),
                 fmt_dur(Duration::from_micros(fwd.quantile_us(0.5))));
+            // fleet serving: one sub-line per model that saw activity
+            // this tick, from the labeled per-model counter series
+            let mut models: Vec<&str> = d.counters.keys()
+                .filter_map(|k| k
+                    .strip_prefix("huge2_model_submitted_total{model=\"")
+                    .and_then(|r| r.strip_suffix("\"}")))
+                .collect();
+            models.sort_unstable();
+            // a single-model serve keeps the classic one-line output
+            if models.len() < 2 {
+                models.clear();
+            }
+            for m in models {
+                let g = |what: &str| d.counters
+                    .get(&format!(
+                        "huge2_model_{what}_total{{model=\"{m}\"}}"))
+                    .copied()
+                    .unwrap_or(0);
+                let total = g("submitted") + g("completed")
+                    + g("rejected") + g("failed");
+                if total == 0 {
+                    continue;
+                }
+                println!("[stats]   {m}: submitted={} completed={} \
+                          rejected={} failed={} shed={}",
+                         g("submitted"), g("completed"), g("rejected"),
+                         g("failed"), g("shed"));
+            }
             prev = cur;
         }
     });
@@ -586,9 +632,15 @@ fn finish_serve(eng: Engine,
                 obs: ServeObs) -> Result<()> {
     let mut lat = Vec::new();
     let mut failed = 0usize;
+    let mut shed = 0usize;
     for rx in pending {
         match rx.recv() {
             Ok(Ok(resp)) => lat.push(resp.latency),
+            Ok(Err(ServeError::Shed { .. })) => {
+                // displaced by a higher class after admission — counted
+                // quietly (the summary line reports the total)
+                shed += 1;
+            }
             Ok(Err(e)) => {
                 failed += 1;
                 println!("  failed ({}): {e}", e.kind());
@@ -596,6 +648,9 @@ fn finish_serve(eng: Engine,
             Err(_) => bail!("reply channel closed without a terminal \
                              outcome (engine bug)"),
         }
+    }
+    if shed > 0 {
+        println!("  {shed} request(s) shed by priority admission");
     }
     let wall = t0.elapsed();
     if let Some(r) = obs.reporter {
@@ -606,10 +661,31 @@ fn finish_serve(eng: Engine,
         use std::sync::atomic::Ordering::Relaxed;
         let c = &eng.counters;
         println!("outcomes: submitted={} completed={} rejected={} \
-                  failed={} (dropped={}, worker panics={})",
+                  failed={} (shed={}, dropped={}, worker panics={})",
                  c.submitted.load(Relaxed), c.completed.load(Relaxed),
                  c.rejected.load(Relaxed), c.failed.load(Relaxed),
-                 c.dropped.load(Relaxed), c.panics.load(Relaxed));
+                 c.shed.load(Relaxed), c.dropped.load(Relaxed),
+                 c.panics.load(Relaxed));
+        let names = eng.model_names();
+        if names.len() > 1 {
+            for name in names {
+                let Some(c) = eng.model_counters(name) else { continue };
+                println!("  [{name}] submitted={} completed={} \
+                          rejected={} failed={} shed={}",
+                         c.submitted.load(Relaxed),
+                         c.completed.load(Relaxed),
+                         c.rejected.load(Relaxed),
+                         c.failed.load(Relaxed), c.shed.load(Relaxed));
+            }
+        }
+    }
+    if let Some(res) = eng.residency() {
+        println!("residency: {} KiB resident of {} budget, \
+                  {} eviction(s), {} reload(s)",
+                 res.resident_bytes() >> 10,
+                 if res.budget_bytes() == 0 { "unlimited".to_string() }
+                 else { format!("{} KiB", res.budget_bytes() >> 10) },
+                 res.evictions(), res.reloads());
     }
     if eng.observability().on() {
         let snap = eng.metrics_snapshot();
@@ -631,7 +707,7 @@ fn finish_serve(eng: Engine,
     if let Some(name) = &obs.profiled {
         if let Some(plan) = eng.model_plan(name) {
             println!("per-layer profile ({name}):");
-            let sum_us = print_profile_table(plan);
+            let sum_us = print_profile_table(&plan);
             let fwd = eng.metrics_snapshot()
                 .merged_histogram("huge2_stage_forward_us");
             if fwd.count() > 0 {
@@ -655,12 +731,44 @@ fn finish_serve(eng: Engine,
              fmt_dur(lat[(lat.len() * 95 / 100).min(lat.len() - 1)]),
              fmt_dur(*lat.last().unwrap()));
     println!("mean batch size {:.2}", eng.counters.mean_batch_size());
+    // counter handles survive shutdown (it consumes the engine); the
+    // Arcs read their final values once the workers have joined
+    let fleet_counters = eng.counters.clone();
+    let per_model: Vec<(String, Arc<huge2::metrics::Counters>)> = eng
+        .model_names()
+        .iter()
+        .filter_map(|n| eng.model_counters(n)
+            .map(|c| (n.to_string(), c)))
+        .collect();
     eng.shutdown();
     if let Some((path, sink, header)) = record {
         let rec = Recorder::from_parts(header, sink);
         let n_events = rec.save(Path::new(path))?;
         println!("recorded {n_events} trace events to {path} \
                   (replay: huge2 replay {path} --timing fast)");
+    }
+    // outcome conservation (DESIGN.md §16): after shutdown every
+    // submitted request has exactly one terminal outcome, per model
+    // and fleet-wide — a violation is an engine bug, so fail loudly
+    {
+        use std::sync::atomic::Ordering::Relaxed;
+        let check = |who: &str,
+                     c: &huge2::metrics::Counters| -> Result<()> {
+            let (s, co, r, f) = (c.submitted.load(Relaxed),
+                                 c.completed.load(Relaxed),
+                                 c.rejected.load(Relaxed),
+                                 c.failed.load(Relaxed));
+            if s != co + r + f {
+                bail!("outcome conservation violated for {who}: \
+                       submitted={s} != completed={co} + rejected={r} \
+                       + failed={f}");
+            }
+            Ok(())
+        };
+        check("fleet", &fleet_counters)?;
+        for (name, c) in &per_model {
+            check(name, c)?;
+        }
     }
     Ok(())
 }
@@ -684,16 +792,31 @@ fn record_sink(args: &Args, eng: &mut Engine,
 
 /// Run the serving engine on a synthetic workload, optionally recording
 /// a replayable trace. `--task generate` (default) serves latent→image;
-/// `--task segment` serves image→mask through the same pipeline.
-/// `--record <path>` picks the on-disk trace format by extension —
-/// `.bin` writes the compact binary codec, anything else JSONL; readers
-/// always detect the format from the magic bytes, never the extension.
+/// `--task segment` serves image→mask through the same pipeline;
+/// `--models a,b,...` serves a whole fleet of native nets at once
+/// (DESIGN.md §16). `--record <path>` picks the on-disk trace format by
+/// extension — `.bin` writes the compact binary codec, anything else
+/// JSONL; readers always detect the format from the magic bytes, never
+/// the extension.
 fn serve(args: &Args) -> Result<()> {
+    if args.get("models").is_some() {
+        return serve_fleet(args);
+    }
     match args.get_or("task", "generate").as_str() {
         "generate" => serve_generate(args),
         "segment" => serve_segment(args),
         other => bail!("--task expects 'generate' or 'segment', \
                         got {other:?}"),
+    }
+}
+
+/// `--priority-default <class>`: the admission class single-model
+/// serves submit under (fleet serves cycle classes; this sets the
+/// first slot of the cycle).
+fn priority_default(args: &Args) -> Result<Priority> {
+    match args.get("priority-default") {
+        None | Some("true") => Ok(Priority::default()),
+        Some(v) => v.parse(),
     }
 }
 
@@ -735,6 +858,7 @@ fn serve_generate(args: &Args) -> Result<()> {
     }
 
     let sobs = ServeObs::arm(args, &eng, &model)?;
+    let priority = priority_default(args)?;
     let arrivals = load_workload(args, rate, n)?;
     let t0 = Instant::now();
     let mut rng = Rng::new(1);
@@ -745,7 +869,8 @@ fn serve_generate(args: &Args) -> Result<()> {
             std::thread::sleep(wait);
         }
         let z: Vec<f32> = (0..z_dim).map(|_| rng.next_normal()).collect();
-        match eng.submit(&model, Payload::latent(z, vec![])) {
+        match eng.submit_with(&model, Payload::latent(z, vec![]),
+                              priority) {
             Ok(rx) => pending.push(rx),
             Err(e) => println!("  rejected: {e}"),
         }
@@ -765,6 +890,7 @@ fn serve_generate(args: &Args) -> Result<()> {
             task: "generate".into(),
             net: String::new(),
             engine_digest,
+            fleet: Vec::new(),
         })
     });
     finish_serve(eng, pending, t0, record, sobs)
@@ -834,6 +960,7 @@ fn serve_segment(args: &Args) -> Result<()> {
              huge2::gemm::active_isa().name());
 
     let sobs = ServeObs::arm(args, &eng, &model)?;
+    let priority = priority_default(args)?;
     let arrivals = load_workload(args, rate, n)?;
     let t0 = Instant::now();
     let mut pending = Vec::new();
@@ -847,7 +974,8 @@ fn serve_segment(args: &Args) -> Result<()> {
         let img_seed = seed ^ (i as u64 + 1)
             .wrapping_mul(0x9e37_79b9_7f4a_7c15);
         let img = Tensor::randn(&in_shape, &mut Rng::new(img_seed));
-        match eng.submit(&model, Payload::image(img, img_seed)) {
+        match eng.submit_with(&model, Payload::image(img, img_seed),
+                              priority) {
             Ok(rx) => pending.push(rx),
             Err(e) => println!("  rejected: {e}"),
         }
@@ -865,6 +993,160 @@ fn serve_segment(args: &Args) -> Result<()> {
             task: "segment".into(),
             net: net_name.clone(),
             engine_digest,
+            fleet: Vec::new(),
+        })
+    });
+    finish_serve(eng, pending, t0, record, sobs)
+}
+
+/// What a fleet member's synthetic requests look like: GAN nets take
+/// latent (+ optional condition) vectors, seg nets take images.
+enum FleetInput {
+    Latent { z_dim: usize, cond_dim: usize },
+    Image { shape: Vec<usize> },
+}
+
+/// Register one fleet member by net-registry name — on the fleet path
+/// the model name IS the net name, so a trace header's roster rebuilds
+/// the exact same fleet from the names alone — and return its input
+/// synthesis. Fleet members serve their heuristic-compiled plans
+/// (`--tuned`/`--autotune` are single-model affordances).
+fn register_fleet_model(eng: &mut Engine, name: &str, seed: u64)
+                        -> Result<FleetInput> {
+    match name {
+        "dcgan" | "cgan" | "tiny_cgan" => {
+            let (gen, cond_dim) = match name {
+                "dcgan" => (Generator::dcgan(seed), 0),
+                "cgan" => (Generator::cgan(seed), 10),
+                _ => (Generator::tiny_cgan(seed), 0),
+            };
+            let z_dim = gen.z_dim;
+            eng.register_native(huge2::coordinator::Model::native(
+                name, Arc::new(gen), cond_dim))?;
+            Ok(FleetInput::Latent { z_dim, cond_dim })
+        }
+        other => {
+            let cfg = seg_net_cfg(other).map_err(|_| anyhow!(
+                "unknown net {other:?} in --models \
+                 (dcgan|cgan|tiny_cgan|segnet|tiny_segnet)"))?;
+            let net = Arc::new(SegNet::new(&cfg, seed));
+            let shape = net.in_shape();
+            eng.register_native(huge2::coordinator::Model::native_seg(
+                other, net))?;
+            Ok(FleetInput::Image { shape })
+        }
+    }
+}
+
+/// `huge2 serve --models a,b,...`: the fleet coordinator path
+/// (DESIGN.md §16). N native nets resident at once — under
+/// `--resident-budget <MiB>` their prepacked weights share an LRU
+/// byte budget, evicting/reloading as the workload touches them —
+/// with arrivals cycled round-robin across models and across the
+/// three priority classes (`--priority-default` sets the first slot
+/// of the class cycle). Records trace v5: the header carries the
+/// fleet roster with per-model engine digests, arrivals carry their
+/// class, and shed/evict/reload decisions are first-class events.
+fn serve_fleet(args: &Args) -> Result<()> {
+    let spec = args.get("models").unwrap_or_default();
+    let mut names: Vec<String> = spec
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    names.sort_unstable();
+    names.dedup();
+    if names.len() < 2 {
+        bail!("--models expects at least two distinct net names \
+               (e.g. --models tiny_cgan,tiny_segnet), got {spec:?}");
+    }
+    let rate = args.get_f64("rate", 4.0)?;
+    let n = args.get_usize("requests", 40)?;
+    let seed = args.get_usize("seed", 7)? as u64;
+    let budget_mb = args.get_usize("resident-budget", 0)?;
+    let cfg = load_engine_cfg(args)?;
+    let record_path = path_flag(args, "record")?;
+
+    let mut eng = Engine::new(cfg);
+    let sink = record_sink(args, &mut eng, record_path)?;
+    // budget before registration: workers capture the LRU manager
+    eng.set_resident_budget(budget_mb << 20)?;
+    let mut inputs = Vec::with_capacity(names.len());
+    for name in &names {
+        inputs.push(register_fleet_model(&mut eng, name, seed)?);
+    }
+    println!("serving fleet [{}] natively (gemm isa: {}; resident \
+              budget: {})",
+             names.join(", "), huge2::gemm::active_isa().name(),
+             if budget_mb > 0 { format!("{budget_mb} MiB, LRU") }
+             else { "unlimited".into() });
+
+    let sobs = ServeObs::arm(args, &eng, &names[0])?;
+    let classes = [priority_default(args)?, Priority::Batch,
+                   Priority::Background];
+    let arrivals = load_workload(args, rate, n)?;
+    let t0 = Instant::now();
+    let mut rng = Rng::new(1);
+    let mut pending = Vec::new();
+    let mut refused = 0usize;
+    for (i, a) in arrivals.iter().enumerate() {
+        let wait = a.at.saturating_sub(t0.elapsed());
+        if !wait.is_zero() {
+            std::thread::sleep(wait);
+        }
+        let m = i % names.len();
+        let payload = match &inputs[m] {
+            FleetInput::Latent { z_dim, cond_dim } => {
+                let z = (0..*z_dim).map(|_| rng.next_normal()).collect();
+                let cond =
+                    (0..*cond_dim).map(|_| rng.next_normal()).collect();
+                Payload::latent(z, cond)
+            }
+            FleetInput::Image { shape } => {
+                let img_seed = seed ^ (i as u64 + 1)
+                    .wrapping_mul(0x9e37_79b9_7f4a_7c15);
+                Payload::image(Tensor::randn(shape,
+                                             &mut Rng::new(img_seed)),
+                               img_seed)
+            }
+        };
+        match eng.submit_with(&names[m], payload,
+                              classes[i % classes.len()]) {
+            Ok(rx) => pending.push(rx),
+            Err(ServeError::Shed { .. }) => refused += 1,
+            Err(e) => println!("  rejected: {e}"),
+        }
+    }
+    if refused > 0 {
+        println!("  {refused} request(s) shed at admission");
+    }
+    // header: the lexicographically first member is the primary (its
+    // digest sits in engine_digest, as in single-model traces); the
+    // rest ride in the fleet roster with their own digests
+    let digest_of = |name: &str| eng
+        .plan_digest(name)
+        .map(|d| format!("{d:016x}"))
+        .unwrap_or_default();
+    let (z_dim, cond_dim, task, net) = match &inputs[0] {
+        FleetInput::Latent { z_dim, cond_dim } =>
+            (*z_dim, *cond_dim, "generate", String::new()),
+        FleetInput::Image { .. } =>
+            (0, 0, "segment", names[0].clone()),
+    };
+    let record = sink.map(|s| {
+        (record_path.unwrap(), s, TraceHeader {
+            model: names[0].clone(),
+            backend: "native".into(),
+            seed,
+            z_dim,
+            cond_dim,
+            task: task.into(),
+            net,
+            engine_digest: digest_of(&names[0]),
+            fleet: names[1..]
+                .iter()
+                .map(|n| (n.clone(), digest_of(n)))
+                .collect(),
         })
     });
     finish_serve(eng, pending, t0, record, sobs)
@@ -886,6 +1168,23 @@ fn engine_for_header(h: &TraceHeader, args: &Args) -> Result<Engine> {
         ..base
     };
     let mut eng = Engine::new(cfg.clone());
+    // replay honors --resident-budget so recorded eviction pressure can
+    // be reproduced (residency is a load decision, not part of the
+    // deterministic contract — outputs replay identically either way)
+    if args.get("resident-budget").is_some() || !h.fleet.is_empty() {
+        eng.set_resident_budget(
+            args.get_usize("resident-budget", 0)? << 20)?;
+    }
+    if !h.fleet.is_empty() {
+        // fleet trace (v5): on the fleet path model names ARE net
+        // names, so the roster rebuilds from the header alone; the
+        // replayer then gates every member's digest
+        register_fleet_model(&mut eng, &h.model, h.seed)?;
+        for (name, _) in &h.fleet {
+            register_fleet_model(&mut eng, name, h.seed)?;
+        }
+        return Ok(eng);
+    }
     match (h.task.as_str(), h.backend.as_str()) {
         ("generate", "native") => {
             let gen = Arc::new(Generator::dcgan(h.seed));
@@ -1018,16 +1317,17 @@ fn trace_cmd(args: &Args) -> Result<()> {
     let action = args
         .positional(0)
         .ok_or_else(|| anyhow!(
-            "usage: huge2 trace <info|convert|fingerprints|bisect> \
-             <file> [...]"))?
+            "usage: huge2 trace <info|convert|compact|fingerprints|\
+             bisect> <file> [...]"))?
         .to_string();
     match action.as_str() {
         "info" => trace_info(args),
         "convert" => trace_convert(args),
+        "compact" => trace_compact(args),
         "fingerprints" => trace_fingerprints(args),
         "bisect" => trace_bisect(args),
         other => bail!("unknown trace action {other:?} \
-                        (info|convert|fingerprints|bisect)"),
+                        (info|convert|compact|fingerprints|bisect)"),
     }
 }
 
@@ -1057,6 +1357,14 @@ fn trace_info(args: &Args) -> Result<()> {
               net {:?} engine_digest {:?}",
              h.model, h.task, h.backend, h.seed, h.z_dim, h.net,
              h.engine_digest);
+    if !h.fleet.is_empty() {
+        println!("fleet roster (+primary): {}",
+                 h.fleet
+                     .iter()
+                     .map(|(n, d)| format!("{n} ({d})"))
+                     .collect::<Vec<_>>()
+                     .join(", "));
+    }
     let mut kinds: std::collections::BTreeMap<&str, usize> =
         Default::default();
     for e in &events {
@@ -1099,6 +1407,45 @@ fn trace_convert(args: &Args) -> Result<()> {
     println!("{src} ({in_bytes} B) → {dst} ({out_bytes} B), \
               {} events, {:.2}x",
              events.len(), in_bytes as f64 / out_bytes as f64);
+    Ok(())
+}
+
+/// `huge2 trace compact <in> <out> [--keep-every K]`: prune a trace's
+/// checkpoints, keeping every K-th (merging the windows between) and
+/// re-folding the fingerprint chain so the survivors still verify —
+/// long soak traces shrink without losing replayability (coarser
+/// `--window` granularity is the only cost).
+fn trace_compact(args: &Args) -> Result<()> {
+    let src = trace_file_arg(
+        args, "compact <in> <out> [--keep-every K]")?;
+    let dst = args
+        .positional(2)
+        .ok_or_else(|| anyhow!(
+            "usage: huge2 trace compact <in> <out> [--keep-every K]"))?
+        .to_string();
+    let keep = args.get_usize("keep-every", 4)?;
+    let (h, events) = huge2::replay::binary::read_trace_auto(
+        Path::new(&src))?;
+    huge2::replay::window::verify_fingerprints(&events)
+        .map_err(|e| anyhow!("{src}: {e}"))?;
+    let before = WindowMap::of(&events).checkpoint_count();
+    let compacted =
+        huge2::replay::window::compact_checkpoints(&events, keep)
+            .map_err(anyhow::Error::msg)?;
+    // the rebuilt chain must verify before we write anything
+    huge2::replay::window::verify_fingerprints(&compacted)
+        .map_err(|e| anyhow!("compacted chain broken (bug): {e}"))?;
+    let after = WindowMap::of(&compacted).checkpoint_count();
+    let out = Path::new(&dst);
+    if out.extension().is_some_and(|e| e == "bin") {
+        huge2::replay::binary::write_trace(out, &h, &compacted)?;
+    } else {
+        huge2::replay::codec::write_trace(out, &h, &compacted)?;
+    }
+    println!("{src}: {} events, {before} checkpoint(s) → {dst}: \
+              {} events, {after} checkpoint(s) (kept every {keep}; \
+              fingerprint chain re-verified)",
+             events.len(), compacted.len());
     Ok(())
 }
 

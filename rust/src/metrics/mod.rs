@@ -363,6 +363,11 @@ pub struct Counters {
     pub panics: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
+    /// Requests refused (or displaced from the queue) by the
+    /// priority-aware admission controller under load (DESIGN.md §16).
+    /// Subset telemetry: every shed is *also* counted in `rejected` —
+    /// conservation is unchanged.
+    pub shed: AtomicU64,
 }
 
 impl Counters {

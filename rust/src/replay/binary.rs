@@ -1,16 +1,25 @@
-//! Compact binary trace codec (format v4) — the JSONL format's exact
-//! twin, auto-detected on read by magic (DESIGN.md §13).
+//! Compact binary trace codec (format v4/v5) — the JSONL format's
+//! exact twin, auto-detected on read by magic (DESIGN.md §13).
 //!
 //! Layout (all integers little-endian):
 //!
 //! ```text
 //! magic    8 bytes  "HG2TRACE"
-//! version  varint   == TRACE_VERSION (4)
+//! version  varint   == TRACE_VERSION (5); v4 still decodes
 //! header   model, backend (str) · seed, z_dim, cond_dim (varint) ·
-//!          task, net, engine_digest (str)
+//!          task, net, engine_digest (str) ·
+//!          fleet (varint count + (str, str) pairs — v5 only)
 //! events*  tag (1 byte) · Δt_us (zigzag varint vs previous event) ·
 //!          per-kind fields
 //! ```
+//!
+//! v5 (fleet serving, DESIGN.md §16) adds priority-tagged arrival
+//! variants (tags 10/11 — one trailing class byte; default-class
+//! arrivals still write the v4 tags 1/2, so a single-model
+//! default-priority recording is byte-identical to what a v4 writer
+//! produced), shed/evict/reload events (tags 12–14), and the header's
+//! fleet roster. A v4 reader never sees the new tags unless the
+//! recording actually used fleet features.
 //!
 //! Field encodings: `varint` is LEB128; `str` is varint length +
 //! UTF-8 bytes; lists are varint count + items; **f32s are raw
@@ -35,6 +44,7 @@ use anyhow::{anyhow, Context, Result};
 use std::io::{BufWriter, Write};
 use std::path::Path;
 
+use crate::coordinator::Priority;
 use crate::metrics::{HistogramSnapshot, MetricsSnapshot};
 
 use super::codec::{self, TRACE_VERSION};
@@ -54,6 +64,18 @@ const TAG_BATCH_EXECUTED: u8 = 6;
 const TAG_RESPONSE: u8 = 7;
 const TAG_FAILED: u8 = 8;
 const TAG_CHECKPOINT: u8 = 9;
+// v5 (fleet serving): arrivals with a non-default priority class carry
+// one extra trailing byte (the class rank); default-class arrivals
+// keep the v4 tags above for byte-stable output.
+const TAG_ARRIVAL_LATENT_PRI: u8 = 10;
+const TAG_ARRIVAL_IMAGE_PRI: u8 = 11;
+const TAG_SHED: u8 = 12;
+const TAG_EVICT: u8 = 13;
+const TAG_RELOAD: u8 = 14;
+
+/// Oldest binary version this build still reads (the binary format was
+/// born at v4).
+const MIN_BINARY_VERSION: u64 = 4;
 
 /// Decode-side sanity caps: a corrupt length prefix must produce a
 /// clean error, not a multi-gigabyte allocation.
@@ -138,6 +160,12 @@ pub fn encode_header_into(buf: &mut Vec<u8>, h: &TraceHeader) {
     put_str(buf, &h.task);
     put_str(buf, &h.net);
     put_str(buf, &h.engine_digest);
+    // v5: fleet roster — (name, digest) pairs; empty for single-model
+    put_varint(buf, h.fleet.len() as u64);
+    for (name, digest) in &h.fleet {
+        put_str(buf, name);
+        put_str(buf, digest);
+    }
 }
 
 /// Append one event to `buf`. `prev_t_us` is the previous event's
@@ -151,20 +179,30 @@ pub fn encode_event_into(buf: &mut Vec<u8>, prev_t_us: u64,
             id,
             model,
             payload: ArrivalPayload::Latent { z, cond },
+            priority,
         } => {
-            buf.push(TAG_ARRIVAL_LATENT);
+            // default class keeps the v4 tag — byte-stable old traces
+            let tagged = *priority != Priority::default();
+            buf.push(if tagged { TAG_ARRIVAL_LATENT_PRI }
+                     else { TAG_ARRIVAL_LATENT });
             put_varint(buf, zigzag(e.t_us as i64 - prev_t_us as i64));
             put_varint(buf, *id);
             put_str(buf, model);
             put_f32s(buf, z);
             put_f32s(buf, cond);
+            if tagged {
+                buf.push(priority.rank());
+            }
         }
         EventBody::RequestArrival {
             id,
             model,
             payload: ArrivalPayload::Image { shape, seed, checksum },
+            priority,
         } => {
-            buf.push(TAG_ARRIVAL_IMAGE);
+            let tagged = *priority != Priority::default();
+            buf.push(if tagged { TAG_ARRIVAL_IMAGE_PRI }
+                     else { TAG_ARRIVAL_IMAGE });
             put_varint(buf, zigzag(e.t_us as i64 - prev_t_us as i64));
             put_varint(buf, *id);
             put_str(buf, model);
@@ -174,6 +212,9 @@ pub fn encode_event_into(buf: &mut Vec<u8>, prev_t_us: u64,
             }
             put_varint(buf, *seed);
             buf.extend_from_slice(&checksum.to_le_bytes());
+            if tagged {
+                buf.push(priority.rank());
+            }
         }
         EventBody::Enqueue { id, depth } => {
             buf.push(TAG_ENQUEUE);
@@ -215,6 +256,25 @@ pub fn encode_event_into(buf: &mut Vec<u8>, prev_t_us: u64,
             put_varint(buf, *id);
             put_str(buf, kind);
             put_str(buf, reason);
+        }
+        EventBody::Shed { id, class } => {
+            buf.push(TAG_SHED);
+            put_varint(buf, zigzag(e.t_us as i64 - prev_t_us as i64));
+            put_varint(buf, *id);
+            buf.push(class.rank());
+        }
+        EventBody::Evict { model, bytes } => {
+            buf.push(TAG_EVICT);
+            put_varint(buf, zigzag(e.t_us as i64 - prev_t_us as i64));
+            put_str(buf, model);
+            put_varint(buf, *bytes);
+        }
+        EventBody::Reload { model, bytes, digest } => {
+            buf.push(TAG_RELOAD);
+            put_varint(buf, zigzag(e.t_us as i64 - prev_t_us as i64));
+            put_str(buf, model);
+            put_varint(buf, *bytes);
+            buf.extend_from_slice(&digest.to_le_bytes());
         }
         EventBody::Checkpoint(c) => {
             buf.push(TAG_CHECKPOINT);
@@ -398,6 +458,14 @@ impl<'a> Reader<'a> {
         Ok(u64::from_le_bytes(b.try_into().unwrap()))
     }
 
+    fn priority(&mut self) -> Result<Priority, String> {
+        let at = self.pos;
+        let rank = self.byte()?;
+        Priority::from_rank(rank).ok_or_else(|| {
+            format!("unknown priority class rank {rank} at byte {at}")
+        })
+    }
+
     fn t_us(&mut self, prev: u64) -> Result<u64, String> {
         let at = self.pos;
         let delta = unzigzag(self.varint()?);
@@ -446,15 +514,24 @@ impl<'a> Reader<'a> {
         let tag = self.byte()?;
         let t_us = self.t_us(prev_t_us)?;
         let body = match tag {
-            TAG_ARRIVAL_LATENT => EventBody::RequestArrival {
-                id: self.varint()?,
-                model: self.str()?,
-                payload: ArrivalPayload::Latent {
-                    z: self.f32s()?,
-                    cond: self.f32s()?,
-                },
-            },
-            TAG_ARRIVAL_IMAGE => {
+            TAG_ARRIVAL_LATENT | TAG_ARRIVAL_LATENT_PRI => {
+                let id = self.varint()?;
+                let model = self.str()?;
+                let z = self.f32s()?;
+                let cond = self.f32s()?;
+                let priority = if tag == TAG_ARRIVAL_LATENT_PRI {
+                    self.priority()?
+                } else {
+                    Priority::default()
+                };
+                EventBody::RequestArrival {
+                    id,
+                    model,
+                    payload: ArrivalPayload::Latent { z, cond },
+                    priority,
+                }
+            }
+            TAG_ARRIVAL_IMAGE | TAG_ARRIVAL_IMAGE_PRI => {
                 let id = self.varint()?;
                 let model = self.str()?;
                 let ndims = self.len(16, "shape")?;
@@ -462,14 +539,22 @@ impl<'a> Reader<'a> {
                 for _ in 0..ndims {
                     shape.push(self.varint()? as usize);
                 }
+                let seed = self.varint()?;
+                let checksum = self.raw_u64()?;
+                let priority = if tag == TAG_ARRIVAL_IMAGE_PRI {
+                    self.priority()?
+                } else {
+                    Priority::default()
+                };
                 EventBody::RequestArrival {
                     id,
                     model,
                     payload: ArrivalPayload::Image {
                         shape,
-                        seed: self.varint()?,
-                        checksum: self.raw_u64()?,
+                        seed,
+                        checksum,
                     },
+                    priority,
                 }
             }
             TAG_ENQUEUE => EventBody::Enqueue {
@@ -499,6 +584,19 @@ impl<'a> Reader<'a> {
                 id: self.varint()?,
                 kind: self.str()?,
                 reason: self.str()?,
+            },
+            TAG_SHED => EventBody::Shed {
+                id: self.varint()?,
+                class: self.priority()?,
+            },
+            TAG_EVICT => EventBody::Evict {
+                model: self.str()?,
+                bytes: self.varint()?,
+            },
+            TAG_RELOAD => EventBody::Reload {
+                model: self.str()?,
+                bytes: self.varint()?,
+                digest: self.raw_u64()?,
             },
             TAG_CHECKPOINT => {
                 EventBody::Checkpoint(Box::new(CheckpointState {
@@ -534,15 +632,16 @@ pub fn decode_trace(bytes: &[u8])
         return Err("not a huge2 binary trace (bad magic)".into());
     }
     let version = r.varint()?;
-    // The binary format was born at v4: there are no older binary
-    // traces to accept, and newer ones are rejected like JSONL does.
-    if version != TRACE_VERSION as u64 {
+    // The binary format was born at v4 — v4 and v5 both decode (a v4
+    // header simply has no fleet roster); newer versions are rejected
+    // like JSONL does.
+    if !(MIN_BINARY_VERSION..=TRACE_VERSION as u64).contains(&version) {
         return Err(format!(
             "unsupported binary trace version {version} (this build \
-             reads {TRACE_VERSION})"
+             reads {MIN_BINARY_VERSION}..={TRACE_VERSION})"
         ));
     }
-    let header = TraceHeader {
+    let mut header = TraceHeader {
         model: r.str()?,
         backend: r.str()?,
         seed: r.varint()?,
@@ -551,7 +650,15 @@ pub fn decode_trace(bytes: &[u8])
         task: r.str()?,
         net: r.str()?,
         engine_digest: r.str()?,
+        fleet: Vec::new(),
     };
+    if version >= 5 {
+        for _ in 0..r.len(MAX_LIST, "fleet roster")? {
+            let name = r.str()?;
+            let digest = r.str()?;
+            header.fleet.push((name, digest));
+        }
+    }
     let mut events = Vec::new();
     let mut prev_t_us = 0u64;
     while r.pos < r.bytes.len() {
@@ -617,6 +724,7 @@ mod tests {
             task: "generate".into(),
             net: String::new(),
             engine_digest: "00ff00ff00ff00ff".into(),
+            fleet: vec![("seg".into(), "123456789abcdef0".into())],
         }
     }
 
@@ -632,6 +740,7 @@ mod tests {
                                 f32::MIN_POSITIVE],
                         cond: vec![],
                     },
+                    priority: Priority::default(),
                 },
             },
             TraceEvent {
@@ -648,11 +757,48 @@ mod tests {
                         seed: 0xfeed_beef,
                         checksum: u64::MAX,
                     },
+                    // non-default: exercises TAG_ARRIVAL_IMAGE_PRI
+                    priority: Priority::Batch,
                 },
             },
             TraceEvent {
                 t_us: 12,
                 body: EventBody::Reject { id: 2, reason: "full".into() },
+            },
+            TraceEvent {
+                t_us: 13,
+                body: EventBody::RequestArrival {
+                    id: 3,
+                    model: "dcgan".into(),
+                    payload: ArrivalPayload::Latent {
+                        z: vec![0.25],
+                        cond: vec![1.0],
+                    },
+                    // non-default: exercises TAG_ARRIVAL_LATENT_PRI
+                    priority: Priority::Background,
+                },
+            },
+            TraceEvent {
+                t_us: 14,
+                body: EventBody::Shed {
+                    id: 3,
+                    class: Priority::Background,
+                },
+            },
+            TraceEvent {
+                t_us: 15,
+                body: EventBody::Evict {
+                    model: "seg".into(),
+                    bytes: 1 << 20,
+                },
+            },
+            TraceEvent {
+                t_us: 16,
+                body: EventBody::Reload {
+                    model: "seg".into(),
+                    bytes: 1 << 20,
+                    digest: 0xdead_beef_dead_beef,
+                },
             },
             TraceEvent {
                 t_us: 40,
@@ -781,6 +927,48 @@ mod tests {
         bytes[8] = 99; // version varint
         let err = decode_trace(&bytes).unwrap_err();
         assert!(err.contains("version 99"), "{err}");
+    }
+
+    #[test]
+    fn v4_binary_stream_still_decodes() {
+        // hand-build a v4 stream: version byte 4, and no fleet-count
+        // varint at the end of the header (v4 headers predate fleets)
+        let mut h = header();
+        h.fleet.clear();
+        let arrival = TraceEvent {
+            t_us: 5,
+            body: EventBody::RequestArrival {
+                id: 0,
+                model: "dcgan".into(),
+                payload: ArrivalPayload::Latent {
+                    z: vec![0.5],
+                    cond: vec![],
+                },
+                priority: Priority::default(),
+            },
+        };
+        let mut v5 = Vec::new();
+        encode_header_into(&mut v5, &h);
+        let mut v4 = v5.clone();
+        v4[8] = 4; // version varint (single byte)
+        let trailing = v4.pop(); // fleet count 0 — absent in v4
+        assert_eq!(trailing, Some(0));
+        encode_event_into(&mut v4, 0, &arrival);
+        let (h2, evs) = decode_trace(&v4).unwrap();
+        assert_eq!(h2, h, "v4 header decodes with an empty fleet");
+        assert!(matches!(
+            &evs[0].body,
+            EventBody::RequestArrival {
+                priority: Priority::Interactive, ..
+            }
+        ));
+        // and a default-priority arrival encodes to the same bytes a
+        // v4 writer produced (tag 1, no priority byte): the event
+        // stream is byte-stable, only the header grew
+        let mut event_only = Vec::new();
+        encode_event_into(&mut event_only, 0, &arrival);
+        assert_eq!(event_only[0], TAG_ARRIVAL_LATENT);
+        assert!(v4.ends_with(&event_only));
     }
 
     #[test]

@@ -19,8 +19,8 @@
 //! {"t_us":9613,"ev":"failed","id":1,"kind":"batch_failed","reason":"worker panicked: boom"}
 //! ```
 //!
-//! **Versioning** (DESIGN.md §8/§11/§13): writes always stamp
-//! [`TRACE_VERSION`] (4). Reads accept v1..=v4; a v1 header decodes with
+//! **Versioning** (DESIGN.md §8/§11/§13/§16): writes always stamp
+//! [`TRACE_VERSION`] (5). Reads accept v1..=v5; a v1 header decodes with
 //! `task="generate"`, `net=""` — v1 GAN traces replay unchanged, because
 //! latent arrival events are encoded identically in all versions. New
 //! in v2: `task`/`net` header fields, and image-payload arrivals
@@ -35,12 +35,17 @@
 //! fingerprints, and an embedded metrics snapshot — DESIGN.md §13), and
 //! a binary twin of this whole format ([`super::binary`], auto-detected
 //! by magic). v1–v3 traces simply contain no checkpoints and decode
-//! as-is.
+//! as-is. New in v5 (fleet serving, DESIGN.md §16): a `"priority"`
+//! field on arrivals (absent decodes as the default class,
+//! `interactive`), `shed`/`evict`/`reload` events, and a `"fleet"`
+//! header list naming additional resident models with their engine
+//! digests. v1–v4 traces carry none of these and decode as-is.
 
 use anyhow::{anyhow, Context, Result};
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
 
+use crate::coordinator::Priority;
 use crate::metrics::{HistogramSnapshot, MetricsSnapshot};
 
 use super::event::{ArrivalPayload, CheckpointState, EventBody,
@@ -48,7 +53,7 @@ use super::event::{ArrivalPayload, CheckpointState, EventBody,
 
 /// Current trace-format version (the header's `huge2_trace` value, and
 /// the binary codec's version field).
-pub const TRACE_VERSION: u32 = 4;
+pub const TRACE_VERSION: u32 = 5;
 
 // ------------------------------------------------------------------ encode
 
@@ -89,10 +94,21 @@ fn nums_json<T: std::fmt::Display>(vs: &[T]) -> String {
 /// Serialize the header to its (single) JSONL line, stamped with
 /// [`TRACE_VERSION`].
 pub fn encode_header(h: &TraceHeader) -> String {
+    // fleet roster as a flat alternating [name, digest, …] list (the
+    // codec's value model has no nested objects)
+    let fleet: Vec<String> = h
+        .fleet
+        .iter()
+        .flat_map(|(name, digest)| {
+            [format!("\"{}\"", esc(name)),
+             format!("\"{}\"", esc(digest))]
+        })
+        .collect();
     format!(
         "{{\"huge2_trace\":{TRACE_VERSION},\"model\":\"{}\",\
          \"backend\":\"{}\",\"seed\":{},\"z_dim\":{},\"cond_dim\":{},\
-         \"task\":\"{}\",\"net\":\"{}\",\"engine_digest\":\"{}\"}}",
+         \"task\":\"{}\",\"net\":\"{}\",\"engine_digest\":\"{}\",\
+         \"fleet\":[{}]}}",
         esc(&h.model),
         esc(&h.backend),
         h.seed,
@@ -100,7 +116,8 @@ pub fn encode_header(h: &TraceHeader) -> String {
         h.cond_dim,
         esc(&h.task),
         esc(&h.net),
-        esc(&h.engine_digest)
+        esc(&h.engine_digest),
+        fleet.join(",")
     )
 }
 
@@ -112,23 +129,29 @@ pub fn encode_event(e: &TraceEvent) -> String {
             id,
             model,
             payload: ArrivalPayload::Latent { z, cond },
+            priority,
         } => format!(
             "{{\"t_us\":{t},\"ev\":\"arrival\",\"id\":{id},\
-             \"model\":\"{}\",\"z\":{},\"cond\":{}}}",
+             \"model\":\"{}\",\"z\":{},\"cond\":{},\
+             \"priority\":\"{}\"}}",
             esc(model),
             f32s_json(z),
-            f32s_json(cond)
+            f32s_json(cond),
+            priority.as_str()
         ),
         EventBody::RequestArrival {
             id,
             model,
             payload: ArrivalPayload::Image { shape, seed, checksum },
+            priority,
         } => format!(
             "{{\"t_us\":{t},\"ev\":\"arrival\",\"id\":{id},\
              \"model\":\"{}\",\"shape\":{},\"input_seed\":{seed},\
-             \"input_checksum\":\"{checksum:016x}\"}}",
+             \"input_checksum\":\"{checksum:016x}\",\
+             \"priority\":\"{}\"}}",
             esc(model),
-            nums_json(shape)
+            nums_json(shape),
+            priority.as_str()
         ),
         EventBody::Enqueue { id, depth } => format!(
             "{{\"t_us\":{t},\"ev\":\"enqueue\",\"id\":{id},\
@@ -159,6 +182,21 @@ pub fn encode_event(e: &TraceEvent) -> String {
              \"kind\":\"{}\",\"reason\":\"{}\"}}",
             esc(kind),
             esc(reason)
+        ),
+        EventBody::Shed { id, class } => format!(
+            "{{\"t_us\":{t},\"ev\":\"shed\",\"id\":{id},\
+             \"class\":\"{}\"}}",
+            class.as_str()
+        ),
+        EventBody::Evict { model, bytes } => format!(
+            "{{\"t_us\":{t},\"ev\":\"evict\",\"model\":\"{}\",\
+             \"bytes\":{bytes}}}",
+            esc(model)
+        ),
+        EventBody::Reload { model, bytes, digest } => format!(
+            "{{\"t_us\":{t},\"ev\":\"reload\",\"model\":\"{}\",\
+             \"bytes\":{bytes},\"digest\":\"{digest:016x}\"}}",
+            esc(model)
         ),
         EventBody::Checkpoint(c) => format!(
             "{{\"t_us\":{t},\"ev\":\"checkpoint\",\"seq\":{},\
@@ -561,6 +599,36 @@ pub fn decode_header(line: &str) -> Result<TraceHeader, String> {
     } else {
         ("generate".to_string(), String::new(), String::new())
     };
+    // fleet roster (v5): flat [name, digest, …] list; absent (v1–v4,
+    // and single-model v5 writers' empty list) decodes empty
+    let fleet = match get(&m, "fleet") {
+        Err(_) => Vec::new(),
+        Ok(Val::List(items)) => {
+            if items.len() % 2 != 0 {
+                return Err(format!(
+                    "field \"fleet\": odd [name, digest] list length {}",
+                    items.len()
+                ));
+            }
+            items
+                .chunks(2)
+                .map(|pair| match pair {
+                    [Val::Str(name), Val::Str(digest)] => {
+                        Ok((name.clone(), digest.clone()))
+                    }
+                    other => Err(format!(
+                        "field \"fleet\": expected string [name, \
+                         digest] pairs, got {other:?}"
+                    )),
+                })
+                .collect::<Result<Vec<_>, String>>()?
+        }
+        Ok(other) => {
+            return Err(format!(
+                "field \"fleet\": expected list, got {other:?}"
+            ));
+        }
+    };
     Ok(TraceHeader {
         model: string(&m, "model")?,
         backend: string(&m, "backend")?,
@@ -570,7 +638,19 @@ pub fn decode_header(line: &str) -> Result<TraceHeader, String> {
         task,
         net,
         engine_digest,
+        fleet,
     })
+}
+
+/// The arrival's priority class (v5 field): absent decodes as the
+/// default class, so v1–v4 arrivals come back `Interactive`.
+fn priority_opt(m: &[(String, Val)]) -> Result<Priority, String> {
+    let s = string_opt(m, "priority")?;
+    if s.is_empty() {
+        return Ok(Priority::default());
+    }
+    s.parse::<Priority>()
+        .map_err(|e| format!("field \"priority\": {e}"))
 }
 
 /// Parse one event line.
@@ -601,6 +681,7 @@ pub fn decode_event(line: &str) -> Result<TraceEvent, String> {
                 id: num(&m, "id")?,
                 model: string(&m, "model")?,
                 payload,
+                priority: priority_opt(&m)?,
             }
         }
         "enqueue" => EventBody::Enqueue {
@@ -630,6 +711,21 @@ pub fn decode_event(line: &str) -> Result<TraceEvent, String> {
             id: num(&m, "id")?,
             kind: string(&m, "kind")?,
             reason: string(&m, "reason")?,
+        },
+        "shed" => EventBody::Shed {
+            id: num(&m, "id")?,
+            class: string(&m, "class")?
+                .parse::<Priority>()
+                .map_err(|e| format!("field \"class\": {e}"))?,
+        },
+        "evict" => EventBody::Evict {
+            model: string(&m, "model")?,
+            bytes: num(&m, "bytes")?,
+        },
+        "reload" => EventBody::Reload {
+            model: string(&m, "model")?,
+            bytes: num(&m, "bytes")?,
+            digest: hex64(&m, "digest")?,
         },
         "checkpoint" => EventBody::Checkpoint(Box::new(CheckpointState {
             seq: num(&m, "seq")?,
@@ -708,6 +804,7 @@ mod tests {
             task: "generate".into(),
             net: String::new(),
             engine_digest: String::new(),
+            fleet: Vec::new(),
         }
     }
 
@@ -723,6 +820,13 @@ mod tests {
             ..header()
         };
         assert_eq!(decode_header(&encode_header(&seg)).unwrap(), seg);
+        // fleet roster (v5) round-trips
+        let fleet = TraceHeader {
+            fleet: vec![("seg".into(), "00ff00ff00ff00ff".into()),
+                        ("tiny".into(), "0123456789abcdef".into())],
+            ..header()
+        };
+        assert_eq!(decode_header(&encode_header(&fleet)).unwrap(), fleet);
     }
 
     #[test]
@@ -747,8 +851,37 @@ mod tests {
         assert_eq!(h.task, "generate");
         assert_eq!(h.net, "");
         // future versions are rejected, past versions are not
-        assert!(decode_header("{\"huge2_trace\":5}").is_err());
+        assert!(decode_header("{\"huge2_trace\":6}").is_err());
         assert!(decode_header("{\"huge2_trace\":0}").is_err());
+    }
+
+    #[test]
+    fn v4_arrival_without_priority_decodes_interactive() {
+        // a v4 line: no "priority" field at all
+        let line = "{\"t_us\":1,\"ev\":\"arrival\",\"id\":0,\
+                    \"model\":\"m\",\"z\":[\"3f800000\"],\"cond\":[]}";
+        match decode_event(line).unwrap().body {
+            EventBody::RequestArrival { priority, .. } => {
+                assert_eq!(priority, Priority::Interactive);
+            }
+            other => panic!("expected arrival, got {other:?}"),
+        }
+        // an explicit class round-trips; a bogus one is rejected
+        let e = TraceEvent {
+            t_us: 2,
+            body: EventBody::RequestArrival {
+                id: 1,
+                model: "m".into(),
+                payload: ArrivalPayload::Latent { z: vec![1.0],
+                                                  cond: vec![] },
+                priority: Priority::Background,
+            },
+        };
+        let enc = encode_event(&e);
+        assert!(enc.contains("\"priority\":\"background\""), "{enc}");
+        assert_eq!(decode_event(&enc).unwrap(), e);
+        let bad = enc.replace("background", "bogus");
+        assert!(decode_event(&bad).is_err());
     }
 
     #[test]
@@ -763,6 +896,7 @@ mod tests {
                     seed: 0xfeed_beef,
                     checksum: u64::MAX,
                 },
+                priority: Priority::default(),
             },
         };
         let line = encode_event(&e);
@@ -786,6 +920,7 @@ mod tests {
                         z: vec![1.5, -0.0, f32::NAN, f32::MIN_POSITIVE],
                         cond: vec![],
                     },
+                    priority: Priority::default(),
                 },
             },
             TraceEvent {
@@ -798,6 +933,7 @@ mod tests {
                         seed: 3,
                         checksum: 0xabcd,
                     },
+                    priority: Priority::Batch,
                 },
             },
             TraceEvent {
@@ -839,6 +975,28 @@ mod tests {
                     id: 3,
                     kind: "batch_failed".into(),
                     reason: "worker panicked: \"boom\"\n".into(),
+                },
+            },
+            TraceEvent {
+                t_us: 7,
+                body: EventBody::Shed {
+                    id: 4,
+                    class: Priority::Batch,
+                },
+            },
+            TraceEvent {
+                t_us: 8,
+                body: EventBody::Evict {
+                    model: "seg".into(),
+                    bytes: 1 << 20,
+                },
+            },
+            TraceEvent {
+                t_us: 9,
+                body: EventBody::Reload {
+                    model: "seg".into(),
+                    bytes: 1 << 20,
+                    digest: u64::MAX,
                 },
             },
         ];
@@ -927,6 +1085,7 @@ mod tests {
                         z: vec![v],
                         cond: vec![],
                     },
+                    priority: Priority::default(),
                 },
             };
             match decode_event(&encode_event(&e)).unwrap().body {

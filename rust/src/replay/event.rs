@@ -39,11 +39,15 @@ pub enum ArrivalPayload {
 #[derive(Debug, Clone, PartialEq)]
 pub enum EventBody {
     /// A request reached `Engine::submit` — the workload's
-    /// non-deterministic input.
+    /// non-deterministic input. `priority` is the admission class
+    /// (trace format v5; v1–v4 arrivals decode as the default,
+    /// `Interactive`, and the fingerprint folds priority only when it
+    /// differs from that default, so old traces re-fold identically).
     RequestArrival {
         id: u64,
         model: String,
         payload: ArrivalPayload,
+        priority: crate::coordinator::Priority,
     },
     /// Admission succeeded; `depth` is the queue depth just after the push.
     Enqueue { id: u64, depth: usize },
@@ -76,6 +80,25 @@ pub enum EventBody {
     /// checksums. `reason` is human telemetry and deliberately not
     /// compared (it may carry run-specific detail).
     Failed { id: u64, kind: String, reason: String },
+    /// The admission controller shed a request under load (trace format
+    /// v5, DESIGN.md §16): either refused at submit (queue full, class
+    /// below `Interactive`) or displaced from the queue by a
+    /// higher-class arrival. A terminal outcome — folded into the
+    /// window fingerprint like `Reject`, and counted in `rejected` by
+    /// the checkpoint fold.
+    Shed { id: u64, class: crate::coordinator::Priority },
+    /// LRU weight residency evicted a model's prepacked plan to fit the
+    /// resident-budget (trace format v5). Telemetry, NOT folded:
+    /// eviction is a load-dependent scheduling decision — a replay may
+    /// evict differently and its outputs still verify, because a
+    /// reloaded plan must reproduce its pinned engine digest.
+    Evict { model: String, bytes: u64 },
+    /// A previously evicted model's plan was rebuilt on demand (trace
+    /// format v5). `digest` is the rebuilt plan's engine-selection
+    /// digest — recorded so a trace reader can audit that every reload
+    /// reproduced the registration-time digest. Telemetry, NOT folded
+    /// (same reasoning as [`EventBody::Evict`]).
+    Reload { model: String, bytes: u64, digest: u64 },
     /// A periodic state snapshot (trace format v4): closes a replay
     /// *window* and records everything needed to reconstruct engine
     /// state at that boundary — in-flight request ids, outcome
@@ -143,6 +166,9 @@ impl EventBody {
             EventBody::BatchExecuted { .. } => "batch_executed",
             EventBody::Response { .. } => "response",
             EventBody::Failed { .. } => "failed",
+            EventBody::Shed { .. } => "shed",
+            EventBody::Evict { .. } => "evict",
+            EventBody::Reload { .. } => "reload",
             EventBody::Checkpoint(_) => "checkpoint",
         }
     }
@@ -154,9 +180,12 @@ impl EventBody {
             | EventBody::Enqueue { id, .. }
             | EventBody::Reject { id, .. }
             | EventBody::Response { id, .. }
-            | EventBody::Failed { id, .. } => Some(*id),
+            | EventBody::Failed { id, .. }
+            | EventBody::Shed { id, .. } => Some(*id),
             EventBody::BatchFormed { .. }
             | EventBody::BatchExecuted { .. }
+            | EventBody::Evict { .. }
+            | EventBody::Reload { .. }
             | EventBody::Checkpoint(_) => None,
         }
     }
@@ -194,6 +223,13 @@ pub struct TraceHeader {
     /// re-checks it so `Engine::Auto` replays the exact recorded
     /// selections even if the heuristic changed (DESIGN.md §10).
     pub engine_digest: String,
+    /// Fleet roster (trace format v5): `(model name, 16-hex engine
+    /// digest)` for every *additional* model registered beside the
+    /// primary one, ascending by name. Empty for single-model traces
+    /// and all v1–v4 recordings. Replay registers the full roster and
+    /// re-checks each digest, so a fleet recording replays against the
+    /// exact same engine selections model-by-model.
+    pub fleet: Vec<(String, String)>,
 }
 
 #[cfg(test)]
@@ -207,6 +243,7 @@ mod tests {
                 id: 0,
                 model: "m".into(),
                 payload: ArrivalPayload::Latent { z: vec![], cond: vec![] },
+                priority: Default::default(),
             },
             EventBody::Enqueue { id: 0, depth: 1 },
             EventBody::Reject { id: 0, reason: "r".into() },
@@ -224,6 +261,12 @@ mod tests {
                 kind: "batch_failed".into(),
                 reason: "r".into(),
             },
+            EventBody::Shed {
+                id: 0,
+                class: crate::coordinator::Priority::Background,
+            },
+            EventBody::Evict { model: "m".into(), bytes: 64 },
+            EventBody::Reload { model: "m".into(), bytes: 64, digest: 9 },
             EventBody::Checkpoint(Box::new(CheckpointState {
                 seq: 1,
                 events: 7,

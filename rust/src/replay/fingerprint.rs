@@ -18,6 +18,7 @@
 //! not content, and are never hashed.
 
 use super::event::{ArrivalPayload, EventBody};
+use crate::coordinator::Priority;
 
 pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
@@ -63,6 +64,7 @@ pub fn fold_event(h: &mut Fnv, body: &EventBody) {
             id,
             model,
             payload: ArrivalPayload::Latent { z, cond },
+            priority,
         } => {
             h.write(&[0x01]);
             h.write_u64(*id);
@@ -75,11 +77,13 @@ pub fn fold_event(h: &mut Fnv, body: &EventBody) {
             for v in cond {
                 h.write(&v.to_bits().to_le_bytes());
             }
+            fold_priority(h, *priority);
         }
         EventBody::RequestArrival {
             id,
             model,
             payload: ArrivalPayload::Image { shape, seed, checksum },
+            priority,
         } => {
             h.write(&[0x02]);
             h.write_u64(*id);
@@ -90,6 +94,7 @@ pub fn fold_event(h: &mut Fnv, body: &EventBody) {
             }
             h.write_u64(*seed);
             h.write_u64(*checksum);
+            fold_priority(h, *priority);
         }
         // A reject is an admission outcome: hash the id but not the
         // reason text (human telemetry, may carry run-specific detail).
@@ -107,10 +112,33 @@ pub fn fold_event(h: &mut Fnv, body: &EventBody) {
             h.write_u64(*id);
             h.write(kind.as_bytes());
         }
+        // A shed is an admission outcome (trace v5), folded like a
+        // reject: the id and the shed class are deterministic content.
+        // Safe for back-compat — v1–v4 streams contain no sheds.
+        EventBody::Shed { id, class } => {
+            h.write(&[0x09]);
+            h.write_u64(*id);
+            h.write(&[class.rank()]);
+        }
+        // Eviction/reload are load-dependent residency decisions
+        // (scheduling telemetry, like batch composition): a legitimate
+        // re-recording may evict differently, so they are not hashed.
         EventBody::Enqueue { .. }
         | EventBody::BatchFormed { .. }
         | EventBody::BatchExecuted { .. }
+        | EventBody::Evict { .. }
+        | EventBody::Reload { .. }
         | EventBody::Checkpoint(_) => {}
+    }
+}
+
+/// Priority is folded only when it differs from the default class:
+/// every v1–v4 arrival (which decodes as `Interactive`) re-folds to the
+/// exact fingerprint its recording computed, while a v5 trace with
+/// explicit lower classes pins them tamper-evidently.
+fn fold_priority(h: &mut Fnv, priority: Priority) {
+    if priority != Priority::default() {
+        h.write(&[0xf0, priority.rank()]);
     }
 }
 
@@ -132,6 +160,7 @@ mod tests {
             id,
             model: "m".into(),
             payload: ArrivalPayload::Latent { z, cond: vec![] },
+            priority: Priority::default(),
         }
     }
 
@@ -179,6 +208,50 @@ mod tests {
         let mut c = Fnv::new();
         fold_event(&mut c, &resp(99_999, 10));
         assert_eq!(a.finish(), c.finish());
+    }
+
+    #[test]
+    fn default_priority_folds_like_a_v4_arrival() {
+        // the v1–v4 back-compat contract: an Interactive (default)
+        // arrival hashes exactly as arrivals did before priorities
+        let mut a = Fnv::new();
+        fold_event(&mut a, &arrival(0, vec![1.0]));
+        let mut manual = Fnv::new();
+        manual.write(&[0x01]);
+        manual.write_u64(0);
+        manual.write("m".as_bytes());
+        manual.write_u64(1);
+        manual.write(&1.0f32.to_bits().to_le_bytes());
+        manual.write_u64(0);
+        assert_eq!(a.finish(), manual.finish());
+        // a non-default class perturbs the fingerprint
+        let mut b = Fnv::new();
+        fold_event(&mut b, &EventBody::RequestArrival {
+            id: 0,
+            model: "m".into(),
+            payload: ArrivalPayload::Latent { z: vec![1.0],
+                                              cond: vec![] },
+            priority: Priority::Background,
+        });
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn shed_is_folded_but_residency_events_are_not() {
+        let mut a = Fnv::new();
+        fold_event(&mut a, &EventBody::Shed {
+            id: 3, class: Priority::Batch });
+        let mut b = Fnv::new();
+        fold_event(&mut b, &EventBody::Shed {
+            id: 3, class: Priority::Background });
+        assert_ne!(a.finish(), b.finish(), "class is pinned");
+        let mut c = Fnv::new();
+        fold_event(&mut c, &EventBody::Evict {
+            model: "m".into(), bytes: 1024 });
+        fold_event(&mut c, &EventBody::Reload {
+            model: "m".into(), bytes: 1024, digest: 7 });
+        assert_eq!(c.finish(), Fnv::new().finish(),
+                   "residency churn is scheduling telemetry");
     }
 
     #[test]

@@ -254,6 +254,7 @@ mod tests {
             task: "generate".into(),
             net: String::new(),
             engine_digest: String::new(),
+            fleet: Vec::new(),
         });
         let sink = rec.sink();
         sink.record(EventBody::Enqueue { id: 0, depth: 1 });
@@ -287,6 +288,7 @@ mod tests {
             task: "generate".into(),
             net: String::new(),
             engine_digest: String::new(),
+            fleet: Vec::new(),
         });
         rec.sink().record(EventBody::Enqueue { id: 0, depth: 1 });
         let dir = std::env::temp_dir();

@@ -207,6 +207,28 @@ impl Replayer {
                 }
             }
         }
+        // Fleet roster gate (trace v5, DESIGN.md §16): every additional
+        // resident model in the recording must reproduce its recorded
+        // digest too — an LRU-evicted-and-reloaded plan re-verifies
+        // against the same pinned digest, so one gate per model at
+        // replay start covers every reload the replay will do.
+        for (name, digest_hex) in &self.header.fleet {
+            if digest_hex.is_empty() {
+                continue;
+            }
+            let want = u64::from_str_radix(digest_hex, 16)
+                .map_err(|_| anyhow!(
+                    "trace header fleet digest {digest_hex:?} for model \
+                     {name:?} is not a u64 hex"))?;
+            if let Some(got) = engine.plan_digest(name) {
+                if got != want {
+                    return Err(anyhow!(
+                        "engine-selection digest mismatch for fleet \
+                         model {name:?}: trace recorded {want:016x}, \
+                         this engine compiled {got:016x}"));
+                }
+            }
+        }
         // Resolve the event range to drive/verify, and — for a window
         // replay — the indices of *earlier* arrivals whose outcome was
         // still pending at the window-opening checkpoint. Those must be
@@ -289,7 +311,8 @@ impl Replayer {
                         events_seen as f64 / secs);
                 }
             }
-            let EventBody::RequestArrival { id, model, payload } = &ev.body
+            let EventBody::RequestArrival { id, model, payload,
+                                            priority } = &ev.body
             else {
                 continue;
             };
@@ -338,8 +361,11 @@ impl Replayer {
                     std::thread::sleep(at - elapsed);
                 }
             }
+            // Re-drive with the recorded priority class: admission and
+            // batch ordering see the same classes the recording did.
             loop {
-                match engine.submit(model, payload.clone()) {
+                match engine.submit_with(model, payload.clone(),
+                                         *priority) {
                     Ok(rx) => {
                         pending.push_back((*id, rx));
                         break;
@@ -391,10 +417,15 @@ impl Replayer {
                 _ => None,
             })
             .collect();
+        // A recorded shed is an admission refusal like a reject: load
+        // on replay may legitimately admit what the recording shed (and
+        // vice versa for typed refusals), so both feed the same
+        // agreement set below.
         let rejected_ids: HashSet<u64> = slice
             .iter()
             .filter_map(|e| match &e.body {
-                EventBody::Reject { id, .. } => Some(*id),
+                EventBody::Reject { id, .. }
+                | EventBody::Shed { id, .. } => Some(*id),
                 _ => None,
             })
             .collect();
@@ -566,6 +597,7 @@ mod tests {
             task: "generate".into(),
             net: String::new(),
             engine_digest: String::new(),
+            fleet: Vec::new(),
         };
         let events = vec![
             TraceEvent {
@@ -577,6 +609,7 @@ mod tests {
                         z: vec![0.0],
                         cond: vec![],
                     },
+                    priority: Default::default(),
                 },
             },
             TraceEvent {

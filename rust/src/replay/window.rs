@@ -103,9 +103,18 @@ impl CheckpointBuilder {
                 self.pending.remove(id);
                 self.next_id = self.next_id.max(id + 1);
             }
+            // A shed (trace v5) is an admission-refusal terminal: it
+            // counts as rejected, exactly like a Reject event.
+            EventBody::Shed { id, .. } => {
+                self.rejected += 1;
+                self.pending.remove(id);
+                self.next_id = self.next_id.max(id + 1);
+            }
             EventBody::Enqueue { .. }
             | EventBody::BatchFormed { .. }
             | EventBody::BatchExecuted { .. }
+            | EventBody::Evict { .. }
+            | EventBody::Reload { .. }
             | EventBody::Checkpoint(_) => {}
         }
         fingerprint::fold_event(&mut self.window_fp, body);
@@ -163,6 +172,47 @@ pub fn insert_checkpoints(events: &[TraceEvent], every: usize)
         }
     }
     out
+}
+
+/// Checkpoint pruning (`huge2 trace compact`): keep every `keep_every`-th
+/// checkpoint and drop the rest, shrinking long recordings whose
+/// checkpoint cadence was tighter than the operator needs for windowed
+/// replay. Because fingerprints are *per-window*, a kept checkpoint's
+/// state cannot simply be copied — dropping its predecessors merges
+/// windows, changing the window fingerprint and the chain. So the
+/// stream is re-folded from scratch ([`CheckpointBuilder`]) and a fresh,
+/// consistent checkpoint is forced at each kept position; the kept
+/// checkpoint's metrics snapshot (telemetry, outside the fingerprint)
+/// is carried over. The result is re-verified before it is returned —
+/// a compacted trace that would not pass [`verify_fingerprints`] is a
+/// bug, not an output.
+pub fn compact_checkpoints(events: &[TraceEvent], keep_every: usize)
+                           -> Result<Vec<TraceEvent>, String> {
+    if keep_every == 0 {
+        return Err("keep_every must be positive".into());
+    }
+    let mut b = CheckpointBuilder::new(0);
+    let mut out = Vec::with_capacity(events.len());
+    let mut seen = 0u64; // original checkpoint ordinal
+    for e in events {
+        let EventBody::Checkpoint(rec) = &e.body else {
+            b.observe(&e.body);
+            out.push(e.clone());
+            continue;
+        };
+        seen += 1;
+        if seen % keep_every as u64 != 0 {
+            continue; // pruned
+        }
+        let mut c = b.force();
+        c.metrics = rec.metrics.clone();
+        out.push(TraceEvent { t_us: e.t_us,
+                              body: EventBody::Checkpoint(c) });
+    }
+    verify_fingerprints(&out)
+        .map_err(|e| format!("compaction produced an inconsistent \
+                              trace (bug): {e}"))?;
+    Ok(out)
 }
 
 /// Re-fold the whole stream and verify every checkpoint against the
@@ -331,6 +381,18 @@ pub fn excerpt(events: &[TraceEvent], range: std::ops::Range<usize>,
             EventBody::Failed { id, kind, .. } => {
                 let _ = writeln!(out, " id={id} kind={kind}");
             }
+            EventBody::Shed { id, class } => {
+                let _ = writeln!(out, " id={id} class={}",
+                                 class.as_str());
+            }
+            EventBody::Evict { model, bytes } => {
+                let _ = writeln!(out, " model={model} bytes={bytes}");
+            }
+            EventBody::Reload { model, bytes, digest } => {
+                let _ = writeln!(
+                    out, " model={model} bytes={bytes} \
+                          digest={digest:016x}");
+            }
             EventBody::Checkpoint(c) => {
                 let _ = writeln!(
                     out,
@@ -360,6 +422,7 @@ mod tests {
                     z: vec![id as f32],
                     cond: vec![],
                 },
+                priority: Default::default(),
             },
         }
     }
@@ -472,6 +535,42 @@ mod tests {
         };
         assert_eq!(ca.fingerprint, cb.fingerprint);
         assert_ne!(ca.events, cb.events);
+    }
+
+    #[test]
+    fn compaction_keeps_every_kth_checkpoint_and_reverifies() {
+        let evs = insert_checkpoints(&stream(16), 4); // 8 checkpoints
+        let compact = compact_checkpoints(&evs, 2).unwrap();
+        let wm = WindowMap::of(&compact);
+        assert_eq!(wm.checkpoint_count(), 4, "8 / keep-every-2");
+        verify_fingerprints(&compact).unwrap();
+        // non-checkpoint events survive untouched, in order
+        let strip = |evs: &[TraceEvent]| -> Vec<TraceEvent> {
+            evs.iter()
+                .filter(|e| {
+                    !matches!(e.body, EventBody::Checkpoint(_))
+                })
+                .cloned()
+                .collect()
+        };
+        assert_eq!(strip(&compact), strip(&evs));
+        // kept checkpoints are renumbered 1..=4 with cumulative state
+        let ckpts: Vec<_> = compact
+            .iter()
+            .filter_map(|e| match &e.body {
+                EventBody::Checkpoint(c) => Some(c),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(ckpts.iter().map(|c| c.seq).collect::<Vec<_>>(),
+                   vec![1, 2, 3, 4]);
+        assert_eq!(ckpts.last().unwrap().completed, 16);
+        // a merged window's fingerprint differs from either original
+        // (it seals 2× the events), but the final chain still commits
+        // to the same deterministic content
+        assert!(compact_checkpoints(&evs, 0).is_err());
+        // keep-every-1 is the identity on a consistent trace
+        assert_eq!(compact_checkpoints(&evs, 1).unwrap(), evs);
     }
 
     #[test]

@@ -21,6 +21,7 @@
 //! one selection set fails loudly (never silently diverges) when
 //! replayed under another.
 
+use std::path::Path;
 use std::sync::Arc;
 
 use crate::bench_util::measure;
@@ -46,6 +47,12 @@ pub const MAGIC: [u8; 8] = *b"HG2TUNED";
 /// back to the heuristic (with a warning) on mismatch instead of
 /// guessing at bytes.
 pub const TUNED_VERSION: u32 = 1;
+
+/// First 8 bytes of a measured-calibration cache file.
+pub const CAL_MAGIC: [u8; 8] = *b"HG2CALIB";
+
+/// Calibration-cache format version.
+pub const CAL_VERSION: u32 = 1;
 
 /// Nominal batch rows the Project step is scored at (the serving
 /// coordinator's typical formed-batch size; the step is a dense GEMM
@@ -170,6 +177,86 @@ impl Calibration {
         }
     }
 
+    /// [`Calibration::measured`] with a warm-host cache: if `path`
+    /// holds a calibration fitted on a host with the same
+    /// [`host_fingerprint`] (ISA/numerics tier + core count), reuse it
+    /// — `serve --autotune` start-up skips the microbenchmarks
+    /// entirely. Otherwise fit fresh and refresh the file. Returns the
+    /// calibration and whether the cache hit. Cache I/O problems are
+    /// never fatal: a missing, corrupt, or foreign-host file simply
+    /// re-measures (and a failed write leaves the next start-up cold).
+    pub fn measured_cached(path: &Path) -> (Calibration, bool) {
+        let fp = host_fingerprint();
+        if let Ok(bytes) = std::fs::read(path) {
+            if let Ok((cached_fp, cal)) = Self::decode_cache(&bytes) {
+                if cached_fp == fp && cal.measured {
+                    return (cal, true);
+                }
+            }
+        }
+        let cal = Calibration::measured();
+        if let Some(dir) = path.parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        let _ = std::fs::write(path, cal.encode_cache(&fp));
+        (cal, false)
+    }
+
+    /// Serialise for the calibration cache (deterministic bytes).
+    pub fn encode_cache(&self, fingerprint: &str) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(64);
+        buf.extend_from_slice(&CAL_MAGIC);
+        put_varint(&mut buf, CAL_VERSION as u64);
+        put_str(&mut buf, fingerprint);
+        buf.push(self.measured as u8);
+        for v in [self.ns_per_mac, self.ns_per_l2_byte,
+                  self.ns_per_dram_byte, self.thread_spawn_ns]
+        {
+            buf.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        buf
+    }
+
+    /// Decode a calibration-cache file into (host fingerprint,
+    /// calibration). Corrupt input errors with a byte offset; callers
+    /// treat any error as a cache miss.
+    pub fn decode_cache(bytes: &[u8])
+                        -> Result<(String, Calibration), String> {
+        let mut r = Reader { bytes, pos: 0 };
+        let magic = r.take(8)?;
+        if magic != CAL_MAGIC {
+            return Err(
+                "bad magic at byte 0 (not a calibration cache)".into());
+        }
+        let version = r.varint()?;
+        if version != CAL_VERSION as u64 {
+            return Err(format!(
+                "unsupported calibration cache version {version} (this \
+                 build writes {CAL_VERSION})"
+            ));
+        }
+        let fingerprint = r.str()?;
+        let measured = r.byte()? != 0;
+        let mut vals = [0.0f64; 4];
+        for v in &mut vals {
+            *v = r.raw_f64()?;
+        }
+        if r.pos != bytes.len() {
+            return Err(format!(
+                "{} trailing byte(s) at byte {}",
+                bytes.len() - r.pos,
+                r.pos
+            ));
+        }
+        Ok((fingerprint, Calibration {
+            ns_per_mac: vals[0],
+            ns_per_l2_byte: vals[1],
+            ns_per_dram_byte: vals[2],
+            thread_spawn_ns: vals[3],
+            measured,
+        }))
+    }
+
     /// Predicted nanoseconds for one access stream.
     pub fn predict_stats(&self, s: &AccessStats) -> f64 {
         let l2_bytes = s.hierarchy.l2_hits * LINE;
@@ -188,6 +275,17 @@ impl Calibration {
         }
         ns
     }
+}
+
+/// Host fingerprint the measured-calibration cache is keyed by:
+/// ISA/numerics tier + core count. Fitted coefficients are only
+/// portable to a host with the same SIMD tier (the microbenchmarks
+/// time tier-specific kernels) and the same parallelism (the spawn
+/// overhead and candidate thread set depend on it); anything finer
+/// (exact CPU model) would under-share, anything coarser would apply
+/// one host's memory constants to another's.
+pub fn host_fingerprint() -> String {
+    format!("{}/c{}", active_isa().name(), host_threads())
 }
 
 /// `[macs, l2_bytes, dram_bytes]` regressor row of one layer trace —
@@ -953,6 +1051,63 @@ mod tests {
         a.base_digest ^= 1;
         let err = a.apply(plan).unwrap_err();
         assert!(err.contains("stale"), "{err}");
+    }
+
+    #[test]
+    fn calibration_cache_round_trips_and_keys_by_host() {
+        let fp = host_fingerprint();
+        assert!(fp.contains("/c"), "{fp}");
+        // a distinctive fabricated calibration: if measured_cached
+        // returns these exact values, it hit the cache (a real fit
+        // could never reproduce them)
+        let fake = Calibration {
+            ns_per_mac: 123.5,
+            ns_per_l2_byte: 17.25,
+            ns_per_dram_byte: 99.75,
+            thread_spawn_ns: 4242.0,
+            measured: true,
+        };
+        let bytes = fake.encode_cache(&fp);
+        let (fp2, back) = Calibration::decode_cache(&bytes).unwrap();
+        assert_eq!(fp2, fp);
+        assert_eq!(back, fake);
+        // corrupt inputs are clean errors, not panics
+        assert!(Calibration::decode_cache(&bytes[..5]).is_err());
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xff;
+        assert!(Calibration::decode_cache(&bad)
+            .unwrap_err()
+            .contains("magic"));
+        let mut long = bytes.clone();
+        long.push(7);
+        assert!(Calibration::decode_cache(&long)
+            .unwrap_err()
+            .contains("trailing"));
+
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("huge2_cal_cache_{}.bin",
+                                    std::process::id()));
+        // warm cache with a matching fingerprint: instant hit
+        std::fs::write(&path, &bytes).unwrap();
+        let (cal, hit) = Calibration::measured_cached(&path);
+        assert!(hit, "matching fingerprint must hit");
+        assert_eq!(cal, fake);
+        // a foreign-host cache misses, re-measures, and refreshes the
+        // file under this host's fingerprint
+        std::fs::write(&path, fake.encode_cache("other-isa/c1"))
+            .unwrap();
+        let (cal, hit) = Calibration::measured_cached(&path);
+        assert!(!hit, "foreign fingerprint must re-measure");
+        assert!(cal.measured);
+        let (fp3, cal3) = Calibration::decode_cache(
+            &std::fs::read(&path).unwrap()).unwrap();
+        assert_eq!(fp3, fp, "refreshed under this host's key");
+        assert_eq!(cal3, cal);
+        // and the very next call hits
+        let (cal4, hit) = Calibration::measured_cached(&path);
+        assert!(hit);
+        assert_eq!(cal4, cal);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

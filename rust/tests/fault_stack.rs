@@ -55,7 +55,8 @@ fn tiny_engine(workers: usize, queue_depth: usize) -> Engine {
 fn req(id: u64, payload: Payload)
        -> (Request, mpsc::Receiver<ServeResult>) {
     let (tx, rx) = mpsc::channel();
-    (Request { id, payload, enqueued: Instant::now(),
+    (Request { id, payload, priority: Default::default(),
+               enqueued: Instant::now(),
                stamps: SpanStamps::now(), reply: tx }, rx)
 }
 
@@ -441,6 +442,7 @@ fn gan_header(seed: u64, engine_digest: String) -> TraceHeader {
         task: "generate".into(),
         net: String::new(),
         engine_digest,
+        fleet: Vec::new(),
     }
 }
 

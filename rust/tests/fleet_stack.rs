@@ -1,0 +1,345 @@
+//! Fleet serving stack integration tests (DESIGN.md §16): per-model
+//! admission with priority classes, load shedding, LRU weight
+//! residency under a shared byte budget, the two-level outcome
+//! conservation invariant, and the fleet trace round trip (format v5).
+//!
+//! * a two-model, three-priority recording with at least one LRU
+//!   eviction and at least one shed replays divergence-free through
+//!   the engine-digest, fleet-roster and fingerprint gates;
+//! * a tampered fleet-roster digest is a hard error before compute;
+//! * `submitted == completed + rejected + failed` holds fleet-wide AND
+//!   per model after a randomized priority soak with displacement
+//!   shedding and continuous mid-soak eviction, with `shed ⊆ rejected`
+//!   at both levels and `Interactive` never shed.
+
+use huge2::config::{tiny_segnet, EngineConfig};
+use huge2::coordinator::{Engine, Model, Payload, Priority, ServeError,
+                         ServeResult};
+use huge2::gan::Generator;
+use huge2::replay::{binary, window, EventBody, Replayer, Timing,
+                    TraceHeader, TraceSink};
+use huge2::rng::Rng;
+use huge2::seg::SegNet;
+use huge2::tensor::Tensor;
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::{mpsc, Arc};
+
+const Z_DIM: usize = 8;
+const SEED: u64 = 11;
+const SEG_SHAPE: [usize; 4] = [1, 9, 9, 2];
+
+/// Two-model fleet on one engine: "gen" (tiny cGAN) beside "seg"
+/// (tiny SegNet). A 1-byte residency budget keeps at most one model's
+/// prepacked plan resident at a time (a single over-budget model still
+/// serves, by overcommit), so every gen↔seg switch is an LRU eviction
+/// plus a digest-checked reload.
+fn fleet_engine(queue_depth: usize, budget: usize,
+                sink: Option<Arc<TraceSink>>) -> Engine {
+    let cfg = EngineConfig {
+        workers: 1,
+        queue_depth,
+        max_batch: 2,
+        batch_timeout_us: 200,
+        ..EngineConfig::default()
+    };
+    let mut e = Engine::new(cfg);
+    if let Some(s) = sink {
+        e.set_trace_sink(s).unwrap();
+    }
+    e.set_resident_budget(budget).unwrap();
+    e.register_native(Model::native(
+        "gen", Arc::new(Generator::tiny_cgan(SEED)), 0)).unwrap();
+    e.register_native(Model::native_seg(
+        "seg", Arc::new(SegNet::new(&tiny_segnet(), SEED)))).unwrap();
+    e
+}
+
+fn latent(rng: &mut Rng) -> Payload {
+    Payload::latent((0..Z_DIM).map(|_| rng.next_normal()).collect(),
+                    vec![])
+}
+
+fn image(seed: u64) -> Payload {
+    Payload::image(Tensor::randn(&SEG_SHAPE, &mut Rng::new(seed)), seed)
+}
+
+/// Trace v5 fleet header: "gen" is the primary model, "seg" rides in
+/// the roster — both digests pinned from the recording engine.
+fn fleet_header(eng: &Engine) -> TraceHeader {
+    TraceHeader {
+        model: "gen".into(),
+        backend: "native".into(),
+        seed: SEED,
+        z_dim: Z_DIM,
+        cond_dim: 0,
+        task: "generate".into(),
+        net: "tiny_cgan".into(),
+        engine_digest: format!("{:016x}",
+                               eng.plan_digest("gen").unwrap()),
+        fleet: vec![("seg".into(),
+                     format!("{:016x}",
+                             eng.plan_digest("seg").unwrap()))],
+    }
+}
+
+// ------------------------------------------------ fleet round trip
+
+/// The fleet acceptance round trip: serve two models across all three
+/// priority classes while a 1-byte residency budget forces evictions,
+/// flood one queue until admission sheds, then record → save (binary
+/// v5) → load → replay. The replay engine gets a deep queue, so every
+/// *completed* recording outcome completes again (sheds are
+/// load-dependent admission refusals: the replay legitimately admits
+/// what the recording shed, surfaced as extras, never divergence).
+#[test]
+fn fleet_record_replay_round_trip_with_eviction_and_shed() {
+    let sink = Arc::new(TraceSink::with_checkpoints(8));
+    let eng = fleet_engine(2, 1, Some(sink.clone()));
+    let header = fleet_header(&eng);
+    let mut rng = Rng::new(99);
+
+    // steady phase: interleave the two models one request at a time —
+    // every switch evicts the peer's plan and reloads under the digest
+    let mut completed = 0usize;
+    for i in 0..10u64 {
+        let class = [Priority::Interactive, Priority::Batch,
+                     Priority::Background][(i % 3) as usize];
+        let (model, payload) = if i % 2 == 0 {
+            ("gen", latent(&mut rng))
+        } else {
+            ("seg", image(1000 + i))
+        };
+        let rx = eng.submit_with(model, payload, class).unwrap();
+        rx.recv().unwrap().unwrap();
+        completed += 1;
+    }
+
+    // shed phase: background flood against one depth-2 queue — the
+    // submit loop outpaces the single worker within a few iterations
+    let mut accepted = Vec::new();
+    let mut shed_direct = 0usize;
+    for _ in 0..10_000 {
+        match eng.submit_with("gen", latent(&mut rng),
+                              Priority::Background) {
+            Ok(rx) => accepted.push(rx),
+            Err(ServeError::Shed { class }) => {
+                assert_eq!(class, Priority::Background);
+                shed_direct += 1;
+                break;
+            }
+            Err(e) => panic!("unexpected refusal: {e}"),
+        }
+    }
+    assert_eq!(shed_direct, 1, "flood must shed");
+    for rx in accepted {
+        // same-class flood: no displacement, every accepted row serves
+        rx.recv().unwrap().unwrap();
+        completed += 1;
+    }
+
+    let counters = eng.counters.clone();
+    let gen_c = eng.model_counters("gen").unwrap();
+    let seg_c = eng.model_counters("seg").unwrap();
+    let res = eng.residency().unwrap().clone();
+    eng.shutdown();
+
+    // ≥1 eviction + ≥1 digest-checked reload under the 1-byte budget
+    assert!(res.evictions() >= 1, "{res:?}");
+    assert!(res.reloads() >= 1, "{res:?}");
+    // conservation at shutdown, fleet-wide and per model
+    for (who, c) in [("fleet", &counters), ("gen", &gen_c),
+                     ("seg", &seg_c)] {
+        assert_eq!(c.in_flight(), 0, "conservation violated for {who}");
+        assert!(c.shed.load(Relaxed) <= c.rejected.load(Relaxed),
+                "shed must be a subset of rejected for {who}");
+    }
+    assert_eq!(counters.shed.load(Relaxed) as usize, shed_direct);
+    assert_eq!(gen_c.shed.load(Relaxed) as usize, shed_direct);
+    assert_eq!(seg_c.shed.load(Relaxed), 0);
+
+    // the trace carries the new v5 events and an intact chain
+    let events = sink.snapshot();
+    assert!(events.iter()
+        .any(|e| matches!(e.body, EventBody::Shed { .. })));
+    assert!(events.iter()
+        .any(|e| matches!(e.body, EventBody::Evict { .. })));
+    assert!(events.iter()
+        .any(|e| matches!(e.body, EventBody::Reload { .. })));
+    window::verify_fingerprints(&events).unwrap();
+
+    // binary v5 round trip through disk, then replay through the
+    // primary-digest + fleet-roster gates
+    let path = std::env::temp_dir().join(format!(
+        "huge2_fleet_trace_{}.bin",
+        std::process::id()
+    ));
+    binary::write_trace(&path, &header, &events).unwrap();
+    let rp = Replayer::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(rp.header(), &header);
+
+    let replay_eng = fleet_engine(256, 1, None);
+    let replay_res = replay_eng.residency().unwrap().clone();
+    let report = rp.run(&replay_eng, Timing::Fast).unwrap();
+    replay_eng.shutdown();
+    assert!(report.is_clean(), "diverged: {:?}", report.divergences);
+    assert_eq!(report.matched, completed);
+    // the deep-queue replay admitted what the recording shed
+    assert_eq!(report.extra_responses, shed_direct);
+    // replay re-evicted under its own budget; reloads re-verified the
+    // same pinned digests the roster gate checked up front
+    assert!(replay_res.reloads() >= 1, "{replay_res:?}");
+}
+
+/// A tampered fleet-roster digest must fail replay *before* any
+/// compute, naming the roster model — same contract as the primary
+/// engine-digest gate.
+#[test]
+fn tampered_fleet_roster_digest_fails_replay() {
+    let sink = Arc::new(TraceSink::new());
+    let eng = fleet_engine(8, 0, Some(sink.clone()));
+    let good = fleet_header(&eng);
+    let mut rng = Rng::new(5);
+    eng.submit("gen", latent(&mut rng)).unwrap().recv().unwrap()
+        .unwrap();
+    eng.submit("seg", image(42)).unwrap().recv().unwrap().unwrap();
+    eng.shutdown();
+    let events = sink.snapshot();
+
+    // intact roster digests: clean
+    let rp = Replayer::from_parts(good.clone(), events.clone());
+    let eng = fleet_engine(8, 0, None);
+    let report = rp.run(&eng, Timing::Fast).unwrap();
+    eng.shutdown();
+    assert!(report.is_clean(), "diverged: {:?}", report.divergences);
+
+    // flipped roster digest: hard error naming the fleet model
+    let mut bad = good;
+    let seg_digest = u64::from_str_radix(&bad.fleet[0].1, 16).unwrap();
+    bad.fleet[0].1 = format!("{:016x}", seg_digest ^ 1);
+    let rp = Replayer::from_parts(bad, events);
+    let eng = fleet_engine(8, 0, None);
+    let err = rp.run(&eng, Timing::Fast).unwrap_err().to_string();
+    eng.shutdown();
+    assert!(err.contains("fleet") && err.contains("seg"), "{err}");
+}
+
+// -------------------------------------------------- conservation soak
+
+/// The two-level conservation invariant under a randomized priority
+/// soak: four client threads flood two depth-3 queues with a random
+/// model/class mix plus deterministic validation faults and
+/// unknown-model submits, while the 1-byte residency budget evicts
+/// and reloads continuously. Afterwards every submission is accounted
+/// for exactly once — fleet-wide and per model — `shed ⊆ rejected` at
+/// both levels, and no `Interactive` request was ever shed.
+#[test]
+fn conservation_holds_per_model_and_fleet_under_priority_soak() {
+    let eng = Arc::new(fleet_engine(3, 1, None));
+    let client = Arc::new(huge2::metrics::Counters::new());
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let eng = eng.clone();
+        let client = client.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(4000 + t);
+            let mut pending: Vec<(Priority,
+                                  mpsc::Receiver<ServeResult>)> =
+                Vec::new();
+            let drain =
+                |pending: &mut Vec<(Priority,
+                                    mpsc::Receiver<ServeResult>)>| {
+                    for (class, rx) in pending.drain(..) {
+                        match rx.recv().expect("terminal outcome") {
+                            Ok(_) => {
+                                client.completed.fetch_add(1, Relaxed);
+                            }
+                            Err(ServeError::Shed { class: c }) => {
+                                // displacement victims are always a
+                                // strictly lower class than the
+                                // arrival that displaced them
+                                assert_eq!(c, class);
+                                assert_ne!(c, Priority::Interactive);
+                                client.rejected.fetch_add(1, Relaxed);
+                            }
+                            Err(_) => {
+                                client.failed.fetch_add(1, Relaxed);
+                            }
+                        }
+                    }
+                };
+            for i in 0..60u64 {
+                let class = [Priority::Interactive, Priority::Batch,
+                             Priority::Background][rng.next_below(3)];
+                let (model, payload) = match rng.next_below(8) {
+                    // deterministic validation fault: bad latent width
+                    0 => ("gen",
+                          Payload::latent(vec![0.0; Z_DIM + 1],
+                                          vec![])),
+                    // unknown model: a fleet-only reject
+                    1 => ("nope", latent(&mut rng)),
+                    n if n % 2 == 0 => ("gen", latent(&mut rng)),
+                    _ => ("seg", image(7000 + t * 1000 + i)),
+                };
+                client.submitted.fetch_add(1, Relaxed);
+                match eng.submit_with(model, payload, class) {
+                    Ok(rx) => pending.push((class, rx)),
+                    Err(e) => {
+                        if let ServeError::Shed { class: c } = e {
+                            assert_eq!(c, class);
+                            assert_ne!(c, Priority::Interactive);
+                        }
+                        client.rejected.fetch_add(1, Relaxed);
+                    }
+                }
+                // burst without draining to provoke displacement and
+                // direct sheds, then drain so the soak makes progress
+                if pending.len() >= 16 {
+                    drain(&mut pending);
+                }
+            }
+            drain(&mut pending);
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    // every client-side submission got exactly one terminal outcome
+    let total = client.submitted.load(Relaxed);
+    assert_eq!(total, 240);
+    assert_eq!(client.completed.load(Relaxed)
+                   + client.rejected.load(Relaxed)
+                   + client.failed.load(Relaxed),
+               total);
+
+    // engine-side conservation: fleet-wide and per model
+    let gen_c = eng.model_counters("gen").unwrap();
+    let seg_c = eng.model_counters("seg").unwrap();
+    assert_eq!(eng.counters.submitted.load(Relaxed), total);
+    for (who, c) in [("fleet", &eng.counters), ("gen", &gen_c),
+                     ("seg", &seg_c)] {
+        assert_eq!(c.in_flight(), 0,
+                   "conservation violated for {who}: submitted={} \
+                    completed={} rejected={} failed={}",
+                   c.submitted.load(Relaxed),
+                   c.completed.load(Relaxed),
+                   c.rejected.load(Relaxed), c.failed.load(Relaxed));
+        assert!(c.shed.load(Relaxed) <= c.rejected.load(Relaxed),
+                "shed must be a subset of rejected for {who}");
+    }
+    // unknown-model rejects counted fleet-wide only: the per-model
+    // ledgers cover exactly the submissions that resolved to a model
+    assert!(gen_c.submitted.load(Relaxed)
+                + seg_c.submitted.load(Relaxed) <= total);
+    // the depth-3 queues under a 4-thread flood must actually shed,
+    // and both models completed work despite continuous eviction
+    assert!(eng.counters.shed.load(Relaxed) > 0,
+            "soak produced no sheds — queues never saturated");
+    assert!(gen_c.completed.load(Relaxed) > 0);
+    assert!(seg_c.completed.load(Relaxed) > 0);
+    let res = eng.residency().unwrap().clone();
+    assert!(res.evictions() >= 1, "no mid-soak eviction: {res:?}");
+    assert!(res.reloads() >= 1, "{res:?}");
+    Arc::into_inner(eng).expect("soak threads done").shutdown();
+}

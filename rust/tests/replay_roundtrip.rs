@@ -10,7 +10,7 @@
 //!   mismatching event.
 
 use huge2::config::EngineConfig;
-use huge2::coordinator::{Engine, Model, Payload};
+use huge2::coordinator::{Engine, Model, Payload, Priority};
 use huge2::gan::Generator;
 use huge2::replay::{codec, ArrivalPayload, Divergence, EventBody,
                     Replayer, Timing, TraceEvent, TraceHeader, TraceSink};
@@ -54,6 +54,7 @@ fn header(seed: u64) -> TraceHeader {
         task: "generate".into(),
         net: String::new(),
         engine_digest: String::new(),
+        fleet: Vec::new(),
     }
 }
 
@@ -234,6 +235,7 @@ fn recorded_failure_kind_verifies_on_replay() {
                 z: vec![0.0; Z_DIM - 1], // wrong width: always rejected
                 cond: vec![],
             },
+            priority: Priority::default(),
         },
     };
     let failed = |id: u64, t_us: u64, kind: &str| TraceEvent {
@@ -339,8 +341,12 @@ fn random_ids(rng: &mut Rng) -> Vec<u64> {
     (0..len).map(|_| rng.next_u64()).collect()
 }
 
+fn random_priority(rng: &mut Rng) -> Priority {
+    Priority::from_rank(rng.next_below(3) as u8).unwrap()
+}
+
 fn random_event(rng: &mut Rng, t_us: u64) -> TraceEvent {
-    let body = match rng.next_below(8) {
+    let body = match rng.next_below(11) {
         0 => EventBody::RequestArrival {
             id: rng.next_u64(),
             model: random_string(rng),
@@ -348,6 +354,7 @@ fn random_event(rng: &mut Rng, t_us: u64) -> TraceEvent {
                 z: random_floats(rng),
                 cond: random_floats(rng),
             },
+            priority: random_priority(rng),
         },
         6 => EventBody::RequestArrival {
             id: rng.next_u64(),
@@ -357,6 +364,7 @@ fn random_event(rng: &mut Rng, t_us: u64) -> TraceEvent {
                 seed: rng.next_u64(),
                 checksum: rng.next_u64(),
             },
+            priority: random_priority(rng),
         },
         1 => EventBody::Enqueue {
             id: rng.next_u64(),
@@ -377,6 +385,19 @@ fn random_event(rng: &mut Rng, t_us: u64) -> TraceEvent {
             kind: ["validation", "backpressure", "batch_failed",
                    "shutdown"][rng.next_below(4)].to_string(),
             reason: random_string(rng),
+        },
+        8 => EventBody::Shed {
+            id: rng.next_u64(),
+            class: random_priority(rng),
+        },
+        9 => EventBody::Evict {
+            model: random_string(rng),
+            bytes: rng.next_u64() >> 16,
+        },
+        10 => EventBody::Reload {
+            model: random_string(rng),
+            bytes: rng.next_u64() >> 16,
+            digest: rng.next_u64(),
         },
         _ => EventBody::Response {
             id: rng.next_u64(),

@@ -40,6 +40,7 @@ fn seg_header(seed: u64) -> TraceHeader {
         task: "segment".into(),
         net: "tiny_segnet".into(),
         engine_digest: String::new(),
+        fleet: Vec::new(),
     }
 }
 

@@ -4,7 +4,7 @@
 //! fingerprint bisection of an injected divergence.
 
 use huge2::config::EngineConfig;
-use huge2::coordinator::{Engine, Model, Payload};
+use huge2::coordinator::{Engine, Model, Payload, Priority};
 use huge2::gan::Generator;
 use huge2::metrics::{HistogramSnapshot, MetricsSnapshot};
 use huge2::replay::{binary, codec, window, ArrivalPayload,
@@ -45,6 +45,7 @@ fn header(seed: u64) -> TraceHeader {
         task: "generate".into(),
         net: String::new(),
         engine_digest: String::new(),
+        fleet: Vec::new(),
     }
 }
 
@@ -135,8 +136,12 @@ fn random_checkpoint(rng: &mut Rng) -> EventBody {
     }))
 }
 
+fn random_priority(rng: &mut Rng) -> Priority {
+    Priority::from_rank(rng.next_below(3) as u8).unwrap()
+}
+
 fn random_event(rng: &mut Rng, t_us: u64) -> TraceEvent {
-    let body = match rng.next_below(9) {
+    let body = match rng.next_below(12) {
         0 => EventBody::RequestArrival {
             id: rng.next_u64(),
             model: random_string(rng),
@@ -144,6 +149,7 @@ fn random_event(rng: &mut Rng, t_us: u64) -> TraceEvent {
                 z: random_floats(rng),
                 cond: random_floats(rng),
             },
+            priority: random_priority(rng),
         },
         6 => EventBody::RequestArrival {
             id: rng.next_u64(),
@@ -153,6 +159,7 @@ fn random_event(rng: &mut Rng, t_us: u64) -> TraceEvent {
                 seed: rng.next_u64(),
                 checksum: rng.next_u64(),
             },
+            priority: random_priority(rng),
         },
         1 => EventBody::Enqueue {
             id: rng.next_u64(),
@@ -175,6 +182,19 @@ fn random_event(rng: &mut Rng, t_us: u64) -> TraceEvent {
             reason: random_string(rng),
         },
         8 => random_checkpoint(rng),
+        9 => EventBody::Shed {
+            id: rng.next_u64(),
+            class: random_priority(rng),
+        },
+        10 => EventBody::Evict {
+            model: random_string(rng),
+            bytes: rng.next_u64() >> 16,
+        },
+        11 => EventBody::Reload {
+            model: random_string(rng),
+            bytes: rng.next_u64() >> 16,
+            digest: rng.next_u64(),
+        },
         _ => EventBody::Response {
             id: rng.next_u64(),
             batch_size: 1 + rng.next_below(64),
@@ -292,20 +312,40 @@ fn oversize_length_prefix_is_rejected_with_byte_offset() {
              {err}");
 }
 
-/// v1–v3 JSONL traces (older version numbers, no checkpoints) still
-/// load and replay cleanly — the reader accepts 1..=4.
+/// v1–v4 JSONL traces (older version numbers, no checkpoints, no
+/// priority/fleet fields) still load and replay cleanly against the
+/// v5 reader — it accepts 1..=5, reading absent priorities as the
+/// default class and an absent fleet roster as empty. The old-format
+/// file is produced faithfully: version rewritten AND the v5-only
+/// fields stripped from every line.
 #[test]
-fn v1_v2_v3_jsonl_traces_still_load_and_replay() {
+fn v1_to_v4_jsonl_traces_still_load_and_replay() {
     let events = record_run(5, 6, 0);
     let path = tmp("compat.jsonl");
     codec::write_trace(&path, &header(5), &events).unwrap();
     let text = std::fs::read_to_string(&path).unwrap();
-    for v in [3u32, 2, 1] {
-        let rewritten = text.replacen(
-            "\"huge2_trace\":4", &format!("\"huge2_trace\":{v}"), 1);
+    for v in [4u32, 3, 2, 1] {
+        let rewritten = text
+            .replacen("\"huge2_trace\":5",
+                      &format!("\"huge2_trace\":{v}"), 1)
+            .replace(",\"priority\":\"interactive\"", "")
+            .replace(",\"fleet\":[]", "");
         assert_ne!(rewritten, text, "header version must be rewritable");
+        assert!(!rewritten.contains("priority"),
+                "v{v} fixture must carry no v5 fields");
         std::fs::write(&path, &rewritten).unwrap();
         let rp = Replayer::load(&path).unwrap();
+        assert!(rp
+            .events()
+            .iter()
+            .filter_map(|e| match &e.body {
+                EventBody::RequestArrival { priority, .. } =>
+                    Some(*priority),
+                _ => None,
+            })
+            .all(|p| p == Priority::default()),
+            "v{v}: priority-less arrivals must read as the default \
+             class");
         let eng = tiny_engine(5, None);
         let report = rp.run(&eng, Timing::Fast).unwrap();
         eng.shutdown();

@@ -98,6 +98,7 @@ fn record_run(eng: Engine, sink: Arc<TraceSink>, n: usize)
         task: "generate".into(),
         net: String::new(),
         engine_digest: format!("{:016x}", digest),
+        fleet: Vec::new(),
     };
     (header, sink.snapshot())
 }

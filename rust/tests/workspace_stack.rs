@@ -244,6 +244,7 @@ fn concurrent_mixed_soak_replays_divergence_free() {
         task: "generate".into(),
         net: "tiny_segnet".into(),
         engine_digest: String::new(),
+        fleet: Vec::new(),
     };
     let rp = Replayer::from_parts(header, sink.snapshot());
     for run in 1..=2 {
